@@ -1,0 +1,55 @@
+//! Figure 1 reproduction: visualize the input-binarization schemes.
+//!
+//! Writes, for a few dataset samples, the original image plus its RGB-
+//! thresholded and LBP-binarized versions (channels as grayscale maps)
+//! to `out/fig1/*.ppm|pgm` — the panels of the paper's Figure 1.
+//!
+//!     cargo run --release --example binarize_demo
+
+use bcnn::dataset::synth;
+use bcnn::input::binarize;
+use bcnn::input::image::{pm1_to_unit, write_pgm, write_ppm};
+
+fn main() -> anyhow::Result<()> {
+    let out = "out/fig1";
+    std::fs::create_dir_all(out)?;
+    let (h, w) = (96usize, 96usize);
+    // learned threshold if artifacts exist, else the init value
+    let t = match bcnn::util::tensorio::TensorFile::load("artifacts/weights_bcnn_rgb.bcnt") {
+        Ok(tf) => {
+            let v = tf.f32("input_t")?;
+            [v[0], v[1], v[2]]
+        }
+        Err(_) => [-0.5, -0.5, -0.5],
+    };
+    println!("RGB threshold T = {t:?}");
+
+    for idx in [0usize, 1, 2, 3] {
+        let s = synth::render_vehicle(idx, synth::DEFAULT_SEED);
+        let cls = synth::CLASSES[s.label];
+
+        // row 0: the original sample
+        write_ppm(format!("{out}/{idx}_{cls}_orig.ppm"), &s.image, h, w)?;
+
+        // row 1 (Figure 1 top): RGB thresholding — binarized RGB recombined
+        let rgb = binarize::threshold_rgb(&s.image, &t);
+        write_ppm(format!("{out}/{idx}_{cls}_thresh_rgb.ppm"), &pm1_to_unit(&rgb), h, w)?;
+
+        // row 2 (Figure 1 bottom): LBP — 3 artificial channels
+        let lbp = binarize::lbp(&s.image, h, w);
+        let lbp_unit = pm1_to_unit(&lbp);
+        write_ppm(format!("{out}/{idx}_{cls}_lbp_rgb.ppm"), &lbp_unit, h, w)?;
+        for ch in 0..3 {
+            let chan: Vec<f32> = lbp_unit.chunks_exact(3).map(|p| p[ch]).collect();
+            write_pgm(format!("{out}/{idx}_{cls}_lbp_c{ch}.pgm"), &chan, h, w)?;
+        }
+
+        // extra: grayscale threshold panel
+        let gray = binarize::threshold_gray(&s.image, t[0]);
+        write_pgm(format!("{out}/{idx}_{cls}_thresh_gray.pgm"), &pm1_to_unit(&gray), h, w)?;
+
+        println!("sample {idx} ({cls}): orig / thresh_rgb / lbp panels written");
+    }
+    println!("\nFigure-1 panels in {out}/ (PPM/PGM, any image viewer opens them)");
+    Ok(())
+}

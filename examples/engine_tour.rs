@@ -1,0 +1,108 @@
+//! Engine tour: walk one image through every binarized layer, printing
+//! the intermediate representations and sizes — a didactic companion to
+//! Section 3 of the paper (and a handy debugging harness).
+//!
+//!     cargo run --release --example engine_tour
+
+use bcnn::bnn::{bgemm, fc, im2col, maxpool, packing};
+use bcnn::dataset::synth;
+use bcnn::input::binarize;
+use bcnn::util::rng::Xoshiro256;
+
+fn main() {
+    let s = synth::render_vehicle(7, synth::DEFAULT_SEED);
+    println!("input image: 96x96x3 f32 ({} bytes)\n", s.image.len() * 4);
+
+    // --- Section 2.3: input binarization ---------------------------------
+    let xb = binarize::threshold_rgb(&s.image, &[-0.5, -0.5, -0.5]);
+    let plus = xb.iter().filter(|&&v| v > 0.0).count();
+    println!(
+        "1. threshold_rgb -> ±1 image, {plus}/{} bits set (+1)",
+        xb.len()
+    );
+
+    // --- Algorithm 1: fused im2col + pack ---------------------------------
+    let cols = im2col::im2col_pack(&xb, 96, 96, 3, 5, 32);
+    println!(
+        "2. im2col_pack (K=5, B=32): 9216 patches x {} words = {} bytes \
+         (float im2col would be {} bytes — {}x compression)",
+        cols.len() / 9216,
+        cols.len() * 4,
+        9216 * 75 * 4,
+        9216 * 75 * 4 / (cols.len() * 4)
+    );
+
+    // --- Eq. 4: xnor-popcount GEMM ----------------------------------------
+    let mut rng = Xoshiro256::new(1);
+    let w1: Vec<f32> = (0..32 * 75).map(|_| rng.next_pm1()).collect();
+    let mut w1p = Vec::new();
+    for o in 0..32 {
+        w1p.extend(packing::pack_pm1(&w1[o * 75..(o + 1) * 75], 32));
+    }
+    let counts = bgemm::bgemm(&cols, &w1p, 9216, 32, 3, 75);
+    let (lo, hi) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+    println!(
+        "3. bgemm: (9216x3words) x (32x3words) -> 9216x32 i32 counts in [-75, 75], \
+         observed [{lo}, {hi}]"
+    );
+
+    // --- threshold + channel pack -----------------------------------------
+    let theta = vec![0.0f32; 32];
+    let flip = vec![0u32; 32];
+    let mut words = vec![0u32; 9216];
+    for px in 0..9216 {
+        let mut w = 0u32;
+        for ch in 0..32 {
+            w |= packing::threshold_bit(counts[px * 32 + ch] as f32, theta[ch], flip[ch])
+                << (31 - ch);
+        }
+        words[px] = w;
+    }
+    println!("4. threshold+pack: 9216x32 i32 -> 9216 u32 words (32 channels/word)");
+
+    // --- OR-pool ------------------------------------------------------------
+    let pooled = maxpool::orpool2x2(&words, 96, 96, 1);
+    println!(
+        "5. orpool2x2: 96x96 words -> 48x48 words ({} bytes; float pool moves {} bytes)",
+        pooled.len() * 4,
+        96 * 96 * 32 * 4
+    );
+
+    // --- conv2 in the packed domain ------------------------------------------
+    let cols2 = im2col::im2col_words(&pooled, 48, 48, 1, 5);
+    let w2: Vec<u32> = (0..32 * 25).map(|_| rng.next_u32()).collect();
+    let counts2 = bgemm::bgemm(&cols2, &w2, 2304, 32, 25, 800);
+    println!(
+        "6. im2col_words + bgemm: patch = 25 pre-packed words, D = 800 bits, \
+         counts2 range [{}, {}]",
+        counts2.iter().min().unwrap(),
+        counts2.iter().max().unwrap()
+    );
+
+    // --- packed FC --------------------------------------------------------------
+    let mut words2 = vec![0u32; 2304];
+    for px in 0..2304 {
+        let mut w = 0u32;
+        for ch in 0..32 {
+            w |= packing::threshold_bit(counts2[px * 32 + ch] as f32, 0.0, 0) << (31 - ch);
+        }
+        words2[px] = w;
+    }
+    let pooled2 = maxpool::orpool2x2(&words2, 48, 48, 1); // 576 words
+    let wfc: Vec<u32> = (0..100 * 576).map(|_| rng.next_u32()).collect();
+    let fc_out = fc::fc_packed(&pooled2, &wfc, 100, 576, 18432);
+    println!(
+        "7. fc_packed: 576 words (= 18432 bits) x 100 neurons -> counts in [{}, {}]",
+        fc_out.iter().min().unwrap(),
+        fc_out.iter().max().unwrap()
+    );
+    println!(
+        "\nweights footprint: conv1 {}B + conv2 {}B + fc1 {}B = {} bytes total \
+         (float: {} bytes — 32x)",
+        32 * 3 * 4,
+        32 * 25 * 4,
+        100 * 576 * 4,
+        32 * 3 * 4 + 32 * 25 * 4 + 100 * 576 * 4,
+        (32 * 75 + 32 * 800 + 100 * 18432) * 4
+    );
+}

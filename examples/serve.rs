@@ -1,0 +1,159 @@
+//! End-to-end serving driver — the paper's measurement protocol (Section
+//! 2.2) run through the full coordinator stack:
+//!
+//!   1000 synthetic images, one request at a time, through
+//!   admission → dynamic batcher → backend → response,
+//!   for both the full-precision and binarized models.
+//!
+//! Reports per-variant accuracy (vs the synthetic ground truth), mean /
+//! p50 / p95 / p99 latency, throughput, and the binarized speedup —
+//! the e2e row of Table 1 on this testbed.  Also exercises the TCP front
+//! end with a burst of client connections.
+//!
+//!     cargo run --release --example serve -- [--requests 1000] [--pjrt]
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Instant;
+
+use bcnn::bnn::network::{BcnnNetwork, FloatNetwork, CLASSES};
+use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router, RuntimeBackend};
+use bcnn::dataset::synth;
+use bcnn::input::binarize::Scheme;
+use bcnn::runtime::Artifacts;
+use bcnn::server::Server;
+use bcnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::new("serve example", "end-to-end serving driver (paper protocol)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("requests", "1000", "requests per variant")
+        .opt("max-batch", "1", "batcher max batch size")
+        .flag("pjrt", "serve HLO artifacts through PJRT instead of the engine")
+        .parse(&raw)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    let dir = a.get("artifacts");
+    let n = a.get_usize("requests")?;
+    let max_batch = a.get_usize("max-batch")?;
+    let artifacts = Arc::new(Artifacts::load(&dir)?);
+    let use_pjrt = a.get_flag("pjrt");
+
+    // --- build the router with float + binarized lanes -------------------
+    let float_be: Arc<dyn InferBackend> = if use_pjrt {
+        let names = artifacts
+            .models
+            .iter()
+            .filter(|m| m.kind == "float")
+            .map(|m| (m.batch, m.name.clone()))
+            .collect();
+        Arc::new(RuntimeBackend::spawn(Arc::clone(&artifacts), names, "pjrt/float")?)
+    } else {
+        Arc::new(EngineBackend::float(
+            FloatNetwork::load(format!("{dir}/weights_float.bcnt"))?,
+            1,
+        ))
+    };
+    let bcnn_be: Arc<dyn InferBackend> = if use_pjrt {
+        let names = artifacts
+            .models
+            .iter()
+            .filter(|m| m.scheme == "rgb" && m.kind == "bcnn_ref")
+            .map(|m| (m.batch, m.name.clone()))
+            .collect();
+        Arc::new(RuntimeBackend::spawn(Arc::clone(&artifacts), names, "pjrt/rgb")?)
+    } else {
+        Arc::new(EngineBackend::bcnn(
+            BcnnNetwork::load(format!("{dir}/weights_bcnn_rgb.bcnt"), Scheme::Rgb)?,
+            1,
+        ))
+    };
+
+    let router = Arc::new(
+        Router::builder()
+            .policy(BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_micros(200),
+            })
+            .queue_capacity(4096)
+            .variant("float", float_be)
+            .variant("bcnn_rgb", bcnn_be)
+            .build(),
+    );
+
+    // --- the paper's protocol: n single-sample requests per variant ------
+    println!(
+        "paper protocol: {n} single-sample requests per variant (backend = {})",
+        if use_pjrt { "pjrt" } else { "engine" }
+    );
+    let mut mean_us = Vec::new();
+    for variant in ["float", "bcnn_rgb"] {
+        let started = Instant::now();
+        let mut correct = 0usize;
+        for i in 0..n {
+            let s = synth::render_vehicle(i, synth::DEFAULT_SEED);
+            let resp = router
+                .infer_blocking(variant, s.image)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            anyhow::ensure!(resp.error.is_none(), "backend error: {:?}", resp.error);
+            correct += usize::from(resp.class == s.label);
+        }
+        let wall = started.elapsed();
+        let snap = router.metrics(variant).map_err(|e| anyhow::anyhow!("{e}"))?.snapshot();
+        let e2e = snap.get("e2e_us").unwrap();
+        let mean = e2e.get("mean").unwrap().as_f64().unwrap();
+        mean_us.push(mean);
+        println!(
+            "\n[{variant}] accuracy {:.2}% | mean {:.1} µs  p50 {:.1}  p95 {:.1}  p99 {:.1} | {:.0} req/s",
+            100.0 * correct as f64 / n as f64,
+            mean,
+            e2e.get("p50").unwrap().as_f64().unwrap(),
+            e2e.get("p95").unwrap().as_f64().unwrap(),
+            e2e.get("p99").unwrap().as_f64().unwrap(),
+            n as f64 / wall.as_secs_f64(),
+        );
+    }
+    println!(
+        "\nbinarized speedup (e2e mean): {:.2}x  (paper GTX1080: 7.2x, Tegra X2: 5.5x, Mali: 1.7x)",
+        mean_us[0] / mean_us[1]
+    );
+
+    // --- burst through the TCP front end ---------------------------------
+    let server = Arc::new(Server::new(
+        Arc::clone(&router),
+        CLASSES.iter().map(|s| s.to_string()).collect(),
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 4, Arc::clone(&stop))?;
+    println!("\nTCP burst: 4 clients x 25 requests against {addr}");
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            use std::io::{BufRead, BufReader, Write};
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut ok = 0;
+            for i in 0..25 {
+                let req = format!(
+                    "{{\"op\":\"classify_synth\",\"model\":\"bcnn_rgb\",\"index\":{}}}\n",
+                    c * 25 + i
+                );
+                conn.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                ok += usize::from(line.contains("\"ok\":true"));
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    println!(
+        "TCP burst done: {total}/100 ok in {:.1} ms",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    router.shutdown();
+    Ok(())
+}

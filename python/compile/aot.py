@@ -1,0 +1,355 @@
+"""AOT export: lower every model variant and per-layer function to HLO
+**text** artifacts that the Rust runtime loads via PJRT.
+
+Why text: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids,
+which xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Everything an executable needs at run time (weights included) is passed
+as arguments — the Rust side uploads weight buffers once per model and
+reuses them across requests (``execute_b``), so no multi-MB constants are
+baked into the HLO text.
+
+Outputs (``--out`` dir, default ../artifacts):
+  manifest.json               index of everything below (Rust reads this)
+  model_*.hlo.txt             end-to-end model variants
+  layer_*.hlo.txt             per-layer functions (Table 2 benches)
+  weights_float.bcnt          float network tensors
+  weights_bcnn_<scheme>.bcnt  folded+packed BCNN tensors per scheme
+  testset.bcnt                SynthVehicles test split (images + labels)
+  expected_logits.bcnt        reference logits for cross-validation
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import binarize_input
+from . import data as data_mod
+from . import model as model_mod
+from . import tensorio, train as train_mod
+from .kernels import ref
+
+SCHEMES = ("none", "rgb", "gray", "lbp")
+
+#: canonical weight-argument order for BCNN artifacts (subset per scheme)
+BCNN_ARGS = (
+    "input_t",
+    "w1_pm1",
+    "w1_packed",
+    "theta1",
+    "flip1",
+    "w2_packed",
+    "theta2",
+    "flip2",
+    "wfc1_packed",
+    "theta3",
+    "flip3",
+    "wfc2",
+    "bfc2",
+    "wfc3",
+    "bfc3",
+)
+FLOAT_ARGS = ("w1", "b1", "w2", "b2", "wfc1", "bfc1", "wfc2", "bfc2", "wfc3", "bfc3")
+
+_DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32", np.dtype(np.uint32): "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constant payloads as ``{...}``, which xla_extension
+    0.5.1's text parser silently accepts as garbage — every downstream
+    executable computes wrong numbers (caught by the Rust integration
+    tests cross-checking against expected_logits.bcnt).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # modern metadata attributes (source_end_line etc.) are unknown to the
+    # 0.5.1 parser — strip them
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _spec(a):
+    return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+
+def _arg_meta(name, a):
+    return {"name": name, "dtype": _DTYPE_NAMES[np.dtype(a.dtype)], "shape": list(a.shape)}
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# weights: trained if available, deterministic random otherwise
+# ---------------------------------------------------------------------------
+
+
+def _get_float_params(out_dir, log):
+    path = os.path.join(out_dir, "trained_float.bcnt")
+    if os.path.exists(path):
+        log(f"using trained float weights: {path}")
+        params, _ = train_mod.load_params(path)
+        return params, True
+    log("no trained float weights — using seeded random init (perf-only)")
+    return model_mod.init_float_params(jax.random.PRNGKey(7)), False
+
+
+def _get_bcnn_params(out_dir, scheme, log):
+    path = os.path.join(out_dir, f"trained_bcnn_{scheme}.bcnt")
+    if os.path.exists(path):
+        log(f"using trained bcnn/{scheme} weights: {path}")
+        params, state = train_mod.load_params(path)
+        return params, state, True
+    log(f"no trained bcnn/{scheme} weights — using seeded random init (perf-only)")
+    params = model_mod.init_bcnn_params(jax.random.PRNGKey(11), scheme)
+    state = model_mod.init_bn_state()
+    return params, state, False
+
+
+# ---------------------------------------------------------------------------
+# model artifacts
+# ---------------------------------------------------------------------------
+
+
+def export_float_models(out_dir, params, batches, manifest, log):
+    weights = {k: np.asarray(params[k]) for k in FLOAT_ARGS}
+    tensorio.save_tensors(os.path.join(out_dir, "weights_float.bcnt"), weights)
+    for bs in batches:
+        name = f"model_float_b{bs}"
+
+        def fn(x, *ws):
+            p = dict(zip(FLOAT_ARGS, ws))
+            return (model_mod.float_forward(p, x),)
+
+        x_spec = jax.ShapeDtypeStruct((bs, 96, 96, 3), jnp.float32)
+        lowered = jax.jit(fn, keep_unused=True).lower(x_spec, *[_spec(weights[k]) for k in FLOAT_ARGS])
+        _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        manifest["models"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "float",
+                "scheme": "float",
+                "batch": bs,
+                "weights_file": "weights_float.bcnt",
+                "input": {"name": "x", "dtype": "f32", "shape": [bs, 96, 96, 3]},
+                "weight_args": [_arg_meta(k, weights[k]) for k in FLOAT_ARGS],
+                "output": {"dtype": "f32", "shape": [bs, 4]},
+            }
+        )
+        log(f"  wrote {name}")
+
+
+def export_bcnn_models(out_dir, scheme, iw, batches, manifest, log):
+    args = [k for k in BCNN_ARGS if k in iw]
+    wfile = f"weights_bcnn_{scheme}.bcnt"
+    tensorio.save_tensors(os.path.join(out_dir, wfile), iw)
+
+    # Pallas-kernel pipeline, single image (the served artifact)
+    name = f"model_bcnn_{scheme}_b1"
+
+    def fn_pallas(x, *ws):
+        d = dict(zip(args, ws))
+        return (model_mod.bcnn_infer_pallas(d, x, scheme),)
+
+    x_spec = jax.ShapeDtypeStruct((96, 96, 3), jnp.float32)
+    lowered = jax.jit(fn_pallas, keep_unused=True).lower(x_spec, *[_spec(iw[k]) for k in args])
+    _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+    manifest["models"].append(
+        {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": "bcnn_pallas",
+            "scheme": scheme,
+            "batch": 1,
+            "weights_file": wfile,
+            "input": {"name": "x", "dtype": "f32", "shape": [96, 96, 3]},
+            "weight_args": [_arg_meta(k, iw[k]) for k in args],
+            "output": {"dtype": "f32", "shape": [4]},
+        }
+    )
+    log(f"  wrote {name}")
+
+    # Reference (pure-jnp packed) pipeline, batched — bit-identical logits
+    for bs in batches:
+        name = f"model_bcnn_{scheme}_ref_b{bs}"
+
+        def fn_ref(xs, *ws):
+            d = dict(zip(args, ws))
+            return (model_mod.bcnn_infer_ref_batch(d, xs, scheme),)
+
+        xs_spec = jax.ShapeDtypeStruct((bs, 96, 96, 3), jnp.float32)
+        lowered = jax.jit(fn_ref, keep_unused=True).lower(xs_spec, *[_spec(iw[k]) for k in args])
+        _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        manifest["models"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "bcnn_ref",
+                "scheme": scheme,
+                "batch": bs,
+                "weights_file": wfile,
+                "input": {"name": "x", "dtype": "f32", "shape": [bs, 96, 96, 3]},
+                "weight_args": [_arg_meta(k, iw[k]) for k in args],
+                "output": {"dtype": "f32", "shape": [bs, 4]},
+            }
+        )
+        log(f"  wrote {name}")
+
+
+# ---------------------------------------------------------------------------
+# per-layer artifacts (Table 2)
+# ---------------------------------------------------------------------------
+
+
+def export_layer_artifacts(out_dir, manifest, log):
+    f32 = jnp.float32
+    u32 = jnp.uint32
+    S = jax.ShapeDtypeStruct
+    layers = [
+        # --- full-precision (explicit-GEMM lowering, as the paper's cuDNN) ---
+        ("layer_im2col1_float", lambda x: (model_mod.layer_im2col_float(x),), [S((96, 96, 3), f32)]),
+        ("layer_gemm1_float", lambda c, w: (model_mod.layer_gemm_float(c, w),), [S((9216, 75), f32), S((32, 75), f32)]),
+        ("layer_pool1_float", lambda x: (model_mod.layer_pool_float(x),), [S((96, 96, 32), f32)]),
+        ("layer_im2col2_float", lambda x: (model_mod.layer_im2col_float(x),), [S((48, 48, 32), f32)]),
+        ("layer_gemm2_float", lambda c, w: (model_mod.layer_gemm_float(c, w),), [S((2304, 800), f32), S((32, 800), f32)]),
+        ("layer_pool2_float", lambda x: (model_mod.layer_pool_float(x),), [S((48, 48, 32), f32)]),
+        ("layer_fc_float", lambda x, w: (model_mod.layer_fc_float(x, w),), [S((18432,), f32), S((100, 18432), f32)]),
+        # --- binarized (Pallas kernels) ---
+        ("layer_im2col1_bin", lambda x: (model_mod.layer_im2col_pack(x),), [S((96, 96, 3), f32)]),
+        ("layer_bgemm1", lambda c, w: (model_mod.layer_bgemm(c, w, 75),), [S((9216, 3), u32), S((32, 3), u32)]),
+        ("layer_pool1_or", lambda x: (model_mod.layer_pool_or(x),), [S((96, 96, 1), u32)]),
+        ("layer_im2col2_bin", lambda x: (model_mod.layer_im2col_pack(x),), [S((48, 48, 32), f32)]),
+        ("layer_bgemm2", lambda c, w: (model_mod.layer_bgemm(c, w, 800),), [S((2304, 25), u32), S((32, 25), u32)]),
+        ("layer_pool2_or", lambda x: (model_mod.layer_pool_or(x),), [S((48, 48, 1), u32)]),
+        ("layer_fc_packed", lambda x, w: (model_mod.layer_fc_packed(x, w, 18432),), [S((576,), u32), S((100, 576), u32)]),
+    ]
+    for name, fn, specs in layers:
+        lowered = jax.jit(fn).lower(*specs)
+        _write(os.path.join(out_dir, f"{name}.hlo.txt"), to_hlo_text(lowered))
+        manifest["layers"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "args": [
+                    {"dtype": _DTYPE_NAMES[np.dtype(s.dtype)], "shape": list(s.shape)}
+                    for s in specs
+                ],
+            }
+        )
+        log(f"  wrote {name}")
+
+
+# ---------------------------------------------------------------------------
+# test set + expected logits
+# ---------------------------------------------------------------------------
+
+
+def export_testset(out_dir, manifest, log, n_expected=8):
+    (_, _), (x_test, y_test) = data_mod.load_splits(augment_train=False)
+    tensorio.save_tensors(
+        os.path.join(out_dir, "testset.bcnt"),
+        {"images": x_test.astype(np.float32), "labels": y_test.astype(np.int32)},
+    )
+    manifest["testset"] = {"file": "testset.bcnt", "count": int(len(x_test))}
+    log(f"  wrote testset.bcnt ({len(x_test)} images)")
+    return x_test[:n_expected], y_test[:n_expected]
+
+
+def export_expected_logits(out_dir, per_scheme_iw, float_params, x_head, manifest, log):
+    """Reference logits on the first test images, for Rust cross-checks."""
+    out = {"x": x_head.astype(np.float32)}
+    logits = np.asarray(model_mod.float_forward(float_params, jnp.asarray(x_head)))
+    out["logits_float"] = logits.astype(np.float32)
+    for scheme, iw in per_scheme_iw.items():
+        d = {k: jnp.asarray(v) for k, v in iw.items()}
+        lg = np.asarray(model_mod.bcnn_infer_ref_batch(d, jnp.asarray(x_head), scheme))
+        out[f"logits_bcnn_{scheme}"] = lg.astype(np.float32)
+    tensorio.save_tensors(os.path.join(out_dir, "expected_logits.bcnt"), out)
+    manifest["expected_logits"] = {"file": "expected_logits.bcnt", "count": int(len(x_head))}
+    log("  wrote expected_logits.bcnt")
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batches", default="1,4,16,64")
+    ap.add_argument("--schemes", default=",".join(SCHEMES))
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    log = (lambda *a: None) if args.quiet else print
+    batches = [int(b) for b in args.batches.split(",")]
+    schemes = [s for s in args.schemes.split(",") if s]
+
+    manifest = {
+        "version": 1,
+        "classes": list(data_mod.CLASSES),
+        "models": [],
+        "layers": [],
+        "d_real": {"conv1": 75, "conv2": 800, "fc1": 18432},
+        "trained": {},
+    }
+
+    log("=== float model ===")
+    float_params, trained = _get_float_params(out_dir, log)
+    manifest["trained"]["float"] = trained
+    export_float_models(out_dir, float_params, batches, manifest, log)
+
+    per_scheme_iw = {}
+    for scheme in schemes:
+        log(f"=== bcnn/{scheme} ===")
+        params, state, trained = _get_bcnn_params(out_dir, scheme, log)
+        manifest["trained"][scheme] = trained
+        iw = model_mod.export_inference_weights(params, state, scheme)
+        per_scheme_iw[scheme] = iw
+        export_bcnn_models(out_dir, scheme, iw, batches, manifest, log)
+
+    log("=== per-layer artifacts (Table 2) ===")
+    export_layer_artifacts(out_dir, manifest, log)
+
+    log("=== test set + expected logits ===")
+    x_head, _ = export_testset(out_dir, manifest, log)
+    export_expected_logits(out_dir, per_scheme_iw, float_params, x_head, manifest, log)
+
+    if os.path.exists(os.path.join(out_dir, "table3.json")):
+        manifest["table3"] = json.load(open(os.path.join(out_dir, "table3.json")))
+
+    # content hash over the python sources, for make-style staleness checks
+    h = hashlib.sha256()
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(src_dir):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                h.update(open(os.path.join(root, f), "rb").read())
+    manifest["source_hash"] = h.hexdigest()[:16]
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    log(f"manifest written: {len(manifest['models'])} models, {len(manifest['layers'])} layer kernels")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Input binarization schemes from the paper (Section 2.3).
+
+All three map a float image in [0, 1] to a {-1, +1} image that the first
+binarized conv layer consumes:
+
+* ``threshold_rgb``   — sign(X + T) with a learned per-channel threshold
+                        T in R^{1x1x3} (paper's chosen scheme: 92.52%).
+* ``threshold_gray``  — grayscale then sign(gray + t), single channel
+                        broadcast to one binary channel (89.16%).
+* ``lbp``             — modified local binary patterns: radius-1
+                        neighbourhood of the grayscale image, 3 of the 8
+                        neighbours selected at clockwise stride 3, each
+                        becoming one binary channel; bit = neighbour >
+                        center (92.06%).
+
+These are written in pure jnp so they lower into the same HLO module as
+the model (their cost is part of the serving path, as in the paper).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Luma weights for grayscale conversion (ITU-R BT.601).
+_LUMA = jnp.array([0.299, 0.587, 0.114], dtype=jnp.float32)
+
+
+def sign_pm1(x):
+    """Paper Eq. (1): -1 if x <= 0 else +1 (note: sign(0) = -1)."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+def threshold_rgb(x, t):
+    """sign(X + T), T per channel.  x: (..., H, W, 3), t: (3,)."""
+    return sign_pm1(x + t.reshape((1,) * (x.ndim - 1) + (3,)))
+
+
+def threshold_gray(x, t):
+    """Grayscale threshold: sign(luma(X) + t).  Output (..., H, W, 1)."""
+    gray = jnp.tensordot(x, _LUMA, axes=([-1], [0]))
+    return sign_pm1(gray + t)[..., None]
+
+
+# Neighbour offsets at radius 1, clockwise from the top-left corner:
+#   (-1,-1) (-1,0) (-1,+1) (0,+1) (+1,+1) (+1,0) (+1,-1) (0,-1)
+_NEIGHBOURS = (
+    (-1, -1), (-1, 0), (-1, 1), (0, 1), (1, 1), (1, 0), (1, -1), (0, -1),
+)
+#: Paper: "select 3 pixels at a clockwise stride of 3 in the neighbourhood"
+_LBP_SELECT = (0, 3, 6)
+
+
+def lbp(x):
+    """Modified LBP input binarization (paper Section 2.3).
+
+    x: (..., H, W, 3) float in [0,1].  Returns (..., H, W, 3) in {-1,+1}:
+    channel k is +1 where neighbour ``_LBP_SELECT[k]`` exceeds the center
+    pixel of the grayscale image, -1 otherwise.  Edges use zero padding
+    (border neighbours read 0, matching the CUDA kernel's halo init).
+    """
+    gray = jnp.tensordot(x, _LUMA, axes=([-1], [0]))  # (..., H, W)
+    padded = jnp.pad(gray, [(0, 0)] * (gray.ndim - 2) + [(1, 1), (1, 1)])
+    h, w = gray.shape[-2], gray.shape[-1]
+    chans = []
+    for k in _LBP_SELECT:
+        dy, dx = _NEIGHBOURS[k]
+        neigh = padded[..., 1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+        chans.append(jnp.where(neigh > gray, 1.0, -1.0))
+    return jnp.stack(chans, axis=-1).astype(x.dtype)
+
+
+SCHEMES = ("none", "rgb", "gray", "lbp")
+
+
+def apply_scheme(scheme: str, x, params):
+    """Dispatch: returns (binarized-or-raw input, #channels seen by conv1).
+
+    ``params`` is the model parameter dict (thresholds live there so they
+    can be trained; see train.py).
+    """
+    if scheme == "none":
+        return x, x.shape[-1]
+    if scheme == "rgb":
+        return threshold_rgb(x, params["input_t"]), 3
+    if scheme == "gray":
+        return threshold_gray(x, params["input_t"]), 1
+    if scheme == "lbp":
+        return lbp(x), 3
+    raise ValueError(f"unknown input-binarization scheme {scheme!r}")
+
+
+def input_channels(scheme: str) -> int:
+    """Number of channels conv1 sees under ``scheme``."""
+    return {"none": 3, "rgb": 3, "gray": 1, "lbp": 3}[scheme]

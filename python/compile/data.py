@@ -1,0 +1,258 @@
+"""SynthVehicles — deterministic procedural stand-in for the proprietary
+vehicle dataset of Huttunen et al. [12] used by the paper.
+
+The paper trains on 6555 camera images (96x96x3) manually labelled into
+four classes: *bus, normal, truck, van*. That dataset is not public, so we
+render a synthetic equivalent: side-view vehicles with class-dependent
+geometry on a road/sky background, with pose, scale, colour and lighting
+jitter plus sensor noise. The renderer is fully vectorized numpy and
+deterministic: image ``i`` under seed ``s`` is always the same bits.
+
+Class geometry (side view, x = direction of travel):
+  * bus    — single long, tall body; a row of many square windows; two
+             wheels far apart.
+  * normal — low body with a shorter trapezoid cabin on top; two wheels.
+  * truck  — short cab with windshield + separate taller cargo box; the
+             box/cab gap is the discriminative feature; two/three wheels.
+  * van    — one tall box with a short sloped hood; one side window near
+             the front; two wheels.
+
+The augmentation mirrors the paper: horizontal flip of every training
+image, plus filtering with a 2D Gaussian (sigma = 0.5) applied to a
+subset, growing the training set from 90% of 6555 to ~14k images.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+CLASSES = ("bus", "normal", "truck", "van")
+NUM_CLASSES = 4
+IMG_H = 96
+IMG_W = 96
+IMG_C = 3
+DATASET_SIZE = 6555  # same cardinality as the paper's dataset
+TEST_FRACTION = 0.10  # paper: 90% train / 10% test
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-image RNG (SplitMix64 — also implemented in rust/util/rng)
+# ---------------------------------------------------------------------------
+
+_MASK = (1 << 64) - 1
+
+
+def _splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """First ``n`` outputs of SplitMix64 starting from ``seed`` as u64."""
+    out = np.empty(n, dtype=np.uint64)
+    x = seed & _MASK
+    for i in range(n):
+        x = (x + 0x9E3779B97F4A7C15) & _MASK
+        z = x
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        out[i] = z ^ (z >> 31)
+    return out
+
+
+def _unit_floats(seed: int, n: int) -> np.ndarray:
+    """n deterministic floats in [0, 1) from SplitMix64."""
+    return (_splitmix64_stream(seed, n) >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+# ---------------------------------------------------------------------------
+# Rendering helpers
+# ---------------------------------------------------------------------------
+
+
+def _rect(xx, yy, x0, y0, x1, y1):
+    """Boolean mask of an axis-aligned rectangle (inclusive-exclusive)."""
+    return (xx >= x0) & (xx < x1) & (yy >= y0) & (yy < y1)
+
+
+def _disc(xx, yy, cx, cy, r):
+    return (xx - cx) ** 2 + (yy - cy) ** 2 <= r * r
+
+
+def _paint(img, mask, color):
+    img[mask] = color
+
+
+@dataclass(frozen=True)
+class Sample:
+    image: np.ndarray  # (96, 96, 3) float32 in [0, 1]
+    label: int
+
+
+def render_vehicle(index: int, seed: int = 0xB0C4) -> Sample:
+    """Render dataset image ``index`` deterministically.
+
+    The label is ``index % 4`` so the dataset is perfectly class-balanced;
+    all remaining randomness is drawn from SplitMix64(seed ^ index-stream).
+    """
+    label = index % NUM_CLASSES
+    u = _unit_floats((seed << 20) ^ (index * 0x9E37 + 0x1234_5678), 32)
+
+    yy, xx = np.mgrid[0:IMG_H, 0:IMG_W].astype(np.float32)
+    img = np.empty((IMG_H, IMG_W, IMG_C), dtype=np.float32)
+
+    # --- background: sky gradient + road ---------------------------------
+    horizon = 52 + int(u[0] * 10)  # 52..61
+    sky_top = np.array([0.45 + 0.2 * u[1], 0.55 + 0.2 * u[2], 0.75 + 0.2 * u[3]])
+    road = 0.25 + 0.15 * u[4]
+    t = (yy / max(horizon, 1)).clip(0.0, 1.0)[..., None]
+    img[:] = sky_top * (1.0 - 0.35 * t)
+    road_mask = yy >= horizon
+    img[road_mask] = np.array([road, road, road * 1.02])
+
+    # light clutter: a couple of background blobs (buildings / bushes)
+    for b in range(2):
+        bx = int(u[5 + b] * IMG_W)
+        bw = 8 + int(u[7 + b] * 16)
+        bh = 6 + int(u[9 + b] * 12)
+        shade = 0.35 + 0.3 * u[11 + b]
+        m = _rect(xx, yy, bx, horizon - bh, bx + bw, horizon)
+        _paint(img, m, np.array([shade, shade * 0.95, shade * 0.9]))
+
+    # --- vehicle geometry --------------------------------------------------
+    scale = 0.75 + 0.4 * u[13]  # overall size jitter
+    cx = 48 + (u[14] - 0.5) * 16  # horizontal jitter
+    ground = horizon + 14 + (u[15] - 0.5) * 8  # wheel contact line
+    body = np.array([0.15 + 0.75 * u[16], 0.15 + 0.75 * u[17], 0.15 + 0.75 * u[18]])
+    win = np.array([0.65, 0.8, 0.9]) * (0.7 + 0.3 * u[19])
+    dark = np.array([0.06, 0.06, 0.07])
+
+    def px(v):
+        return float(v) * scale
+
+    wheel_r = px(5.0)
+    wy = ground - wheel_r * 0.6
+
+    if label == 0:  # bus: long tall single body, window row
+        half_len, height = px(34), px(26)
+        x0, x1 = cx - half_len, cx + half_len
+        y1 = ground - px(3)
+        y0 = y1 - height
+        _paint(img, _rect(xx, yy, x0, y0, x1, y1), body)
+        # window row
+        wn = 5
+        wgap = (2 * half_len) / (wn + 1)
+        for w in range(wn):
+            wx0 = x0 + wgap * (w + 0.6)
+            _paint(img, _rect(xx, yy, wx0, y0 + px(4), wx0 + wgap * 0.6, y0 + px(11)), win)
+        wheels = [x0 + px(8), x1 - px(8)]
+    elif label == 1:  # normal car: low body + cabin
+        half_len, height = px(24), px(10)
+        x0, x1 = cx - half_len, cx + half_len
+        y1 = ground - px(2)
+        y0 = y1 - height
+        _paint(img, _rect(xx, yy, x0, y0, x1, y1), body)
+        # cabin: trapezoid approximated by a shorter rectangle + windows
+        cx0, cx1 = cx - half_len * 0.45, cx + half_len * 0.45
+        cy0 = y0 - px(9)
+        _paint(img, _rect(xx, yy, cx0, cy0, cx1, y0), body * 0.92)
+        _paint(img, _rect(xx, yy, cx0 + px(2), cy0 + px(2), cx - px(1), y0 - px(1)), win)
+        _paint(img, _rect(xx, yy, cx + px(1), cy0 + px(2), cx1 - px(2), y0 - px(1)), win)
+        wheels = [x0 + px(7), x1 - px(7)]
+    elif label == 2:  # truck: cab + separate cargo box with a visible gap
+        cab_len, cab_h = px(12), px(16)
+        box_len, box_h = px(30), px(24)
+        gap = px(3)
+        x_cab1 = cx + cab_len + box_len / 2 + gap  # cab at the front (right)
+        x_cab0 = x_cab1 - cab_len
+        xb0 = x_cab0 - gap - box_len
+        xb1 = x_cab0 - gap
+        y1 = ground - px(3)
+        _paint(img, _rect(xx, yy, xb0, y1 - box_h, xb1, y1), body)
+        _paint(img, _rect(xx, yy, x_cab0, y1 - cab_h, x_cab1, y1), body * 0.85)
+        _paint(img, _rect(xx, yy, x_cab0 + px(2), y1 - cab_h + px(2), x_cab1 - px(2), y1 - cab_h + px(8)), win)
+        wheels = [xb0 + px(6), xb1 - px(6), x_cab1 - px(5)]
+    else:  # van: tall box + short hood, front side window
+        half_len, height = px(26), px(22)
+        x0, x1 = cx - half_len, cx + half_len
+        y1 = ground - px(2)
+        y0 = y1 - height
+        _paint(img, _rect(xx, yy, x0, y0, x1, y1), body)
+        # short hood step at the front
+        _paint(img, _rect(xx, yy, x1, y1 - px(8), x1 + px(6), y1), body * 0.95)
+        _paint(img, _rect(xx, yy, x1 - px(10), y0 + px(3), x1 - px(2), y0 + px(11)), win)
+        wheels = [x0 + px(7), x1 - px(7)]
+
+    for wxc in wheels:
+        _paint(img, _disc(xx, yy, wxc, wy, wheel_r), dark)
+        _paint(img, _disc(xx, yy, wxc, wy, wheel_r * 0.45), np.array([0.5, 0.5, 0.52]))
+
+    # --- sensor noise + global illumination jitter -------------------------
+    gain = 0.85 + 0.3 * u[20]
+    noise = (
+        _unit_floats((seed << 21) ^ (index * 0x85EB + 77), IMG_H * IMG_W)
+        .reshape(IMG_H, IMG_W)
+        .astype(np.float32)
+    )
+    img = img * gain + (noise[..., None] - 0.5) * 0.06
+    return Sample(image=np.clip(img, 0.0, 1.0).astype(np.float32), label=label)
+
+
+# ---------------------------------------------------------------------------
+# Dataset assembly, split, augmentation
+# ---------------------------------------------------------------------------
+
+
+def gaussian_blur_05(img: np.ndarray) -> np.ndarray:
+    """2D Gaussian filter with sigma = 0.5 (paper's augmentation filter).
+
+    A 3-tap separable kernel captures >99.7% of the mass at sigma=0.5.
+    """
+    g = np.array([np.exp(-2.0), 1.0, np.exp(-2.0)], dtype=np.float32)
+    g /= g.sum()
+    # reflect-pad then convolve along H and W
+    p = np.pad(img, ((1, 1), (0, 0), (0, 0)), mode="reflect")
+    img = p[:-2] * g[0] + p[1:-1] * g[1] + p[2:] * g[2]
+    p = np.pad(img, ((0, 0), (1, 1), (0, 0)), mode="reflect")
+    img = p[:, :-2] * g[0] + p[:, 1:-1] * g[1] + p[:, 2:] * g[2]
+    return img.astype(np.float32)
+
+
+def generate(n: int = DATASET_SIZE, seed: int = 0xB0C4):
+    """Render ``n`` images; returns (images (n,96,96,3) f32, labels (n,) i32)."""
+    images = np.empty((n, IMG_H, IMG_W, IMG_C), dtype=np.float32)
+    labels = np.empty(n, dtype=np.int32)
+    for i in range(n):
+        s = render_vehicle(i, seed)
+        images[i] = s.image
+        labels[i] = s.label
+    return images, labels
+
+
+def split_indices(n: int = DATASET_SIZE, seed: int = 0xB0C4):
+    """Deterministic 90/10 train/test split (paper's protocol)."""
+    u = _unit_floats((seed << 22) ^ 0xDEAD_BEEF, n)
+    order = np.argsort(u, kind="stable")
+    n_test = int(round(n * TEST_FRACTION))
+    return np.sort(order[n_test:]), np.sort(order[:n_test])
+
+
+def augment(images: np.ndarray, labels: np.ndarray, seed: int = 0xB0C4):
+    """Paper's augmentation: flip everything, blur a subset.
+
+    Returns roughly 2.4x the input count (paper: 5900 -> 14108 ~ 2.39x).
+    """
+    flipped = images[:, :, ::-1, :]
+    u = _unit_floats((seed << 23) ^ 0x0A0B_0C0D, len(images))
+    blur_sel = u < 0.4
+    blurred = np.stack([gaussian_blur_05(im) for im in images[blur_sel]]) if blur_sel.any() else np.empty((0, IMG_H, IMG_W, IMG_C), np.float32)
+    out_images = np.concatenate([images, flipped, blurred], axis=0)
+    out_labels = np.concatenate([labels, labels, labels[blur_sel]], axis=0)
+    return out_images, out_labels
+
+
+def load_splits(n: int = DATASET_SIZE, seed: int = 0xB0C4, augment_train: bool = True):
+    """Full pipeline: render, split 90/10, augment the training half."""
+    images, labels = generate(n, seed)
+    tr, te = split_indices(n, seed)
+    x_train, y_train = images[tr], labels[tr]
+    if augment_train:
+        x_train, y_train = augment(x_train, y_train, seed)
+    return (x_train, y_train), (images[te], labels[te])

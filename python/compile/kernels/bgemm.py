@@ -1,0 +1,94 @@
+"""Pallas kernel: packed XNOR-popcount GEMM (paper Eq. 4 / Section 3.1).
+
+Computes ``out[m, n] = D - 2 * sum_k popcount(xor(A[m, k], W[n, k]))``
+over uint32 packed operands — the binarized replacement for the FMA GEMM
+of explicit-GEMM convolution.
+
+The CUDA version tiles both operands through shared memory (Tan et al.
+DGEMM style), one output element per thread.  TPU adaptation (DESIGN.md
+§3): the grid is (M-tiles x N-tiles); each step holds an (bm, KW) A-tile
+and (bn, KW) W-tile in VMEM and forms the (bm, bn, KW) xor-popcount
+reduction in vector registers.  On a real TPU the popcount lowering rides
+the VPU (32-lane int ops); the MXU analog would require an int8 outer
+product — see DESIGN.md §7 for the utilization estimate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _bgemm_kernel(a_ref, w_ref, o_ref, *, d_real: int):
+    """o[m,n] = D - 2*popcount(xor) over the packed-K axis."""
+    a = a_ref[...]  # (bm, KW) u32
+    w = w_ref[...]  # (bn, KW) u32
+    x = jnp.bitwise_xor(a[:, None, :], w[None, :, :])  # (bm, bn, KW)
+    pc = jnp.sum(lax.population_count(x).astype(jnp.int32), axis=-1)
+    o_ref[...] = jnp.int32(d_real) - 2 * pc
+
+
+@functools.partial(jax.jit, static_argnames=("d_real", "bm", "bn"))
+def bgemm(a_packed, w_packed, d_real: int, bm: int = 256, bn: int = 32):
+    """Packed GEMM.  a: (M, KW) u32, w: (N, KW) u32 -> (M, N) i32.
+
+    ``d_real`` is the true (pre-padding) bit length of the dot product;
+    tail bits must be 0 in both operands (ref.py convention).
+    """
+    m, kw = a_packed.shape
+    n, kw2 = w_packed.shape
+    assert kw == kw2, f"packed widths differ: {kw} vs {kw2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    mt, nt = -(-m // bm), -(-n // bn)
+    mp, np_ = mt * bm, nt * bn
+    if mp != m:
+        a_packed = jnp.pad(a_packed, ((0, mp - m), (0, 0)))
+    if np_ != n:
+        w_packed = jnp.pad(w_packed, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_bgemm_kernel, d_real=d_real),
+        grid=(mt, nt),
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        interpret=True,
+    )(a_packed, w_packed)
+    return out[:m, :n]
+
+
+def _fgemm_kernel(a_ref, w_ref, o_ref):
+    o_ref[...] = a_ref[...] @ w_ref[...].T
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def fgemm(a, w, bm: int = 256, bn: int = 32):
+    """Float GEMM baseline with the same tiling.  (M,D)x(N,D) -> (M,N)."""
+    m, d = a.shape
+    n, _ = w.shape
+    bm, bn = min(bm, m), min(bn, n)
+    mt, nt = -(-m // bm), -(-n // bn)
+    mp, np_ = mt * bm, nt * bn
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+    if np_ != n:
+        w = jnp.pad(w, ((0, np_ - n), (0, 0)))
+    out = pl.pallas_call(
+        _fgemm_kernel,
+        grid=(mt, nt),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a, w)
+    return out[:m, :n]

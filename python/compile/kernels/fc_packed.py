@@ -1,0 +1,64 @@
+"""Pallas kernel: packed fully-connected layer (paper Section 3.2).
+
+The CUDA kernel splits each weight-row dot product into 64 segments, one
+thread per segment, partial sums in shared memory, then a warp-level
+reduction.  TPU adaptation (DESIGN.md §3): each grid step owns a tile of
+output neurons; the packed-K axis is reshaped into (SEGMENTS, KW/SEGMENTS)
+and reduced in two stages — the same associativity decomposition, but
+expressed as vector reductions the VPU executes in lanes rather than
+explicit thread cooperation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+SEGMENTS = 64  # paper's partial-sum segment count
+
+
+def _fc_kernel(x_ref, w_ref, o_ref, *, d_real: int, segments: int):
+    """x_ref: (1, KWp) u32, w_ref: (bl, KWp) u32 -> o_ref: (bl,) i32."""
+    x = x_ref[...]
+    w = w_ref[...]
+    xr = jnp.bitwise_xor(w, x)  # (bl, KWp), broadcast row
+    pc = lax.population_count(xr).astype(jnp.int32)
+    bl, kwp = pc.shape
+    # two-stage segmented reduction (paper's 64 partial sums + final sum)
+    partial = jnp.sum(pc.reshape(bl, segments, kwp // segments), axis=-1)
+    total = jnp.sum(partial, axis=-1)
+    o_ref[...] = jnp.int32(d_real) - 2 * total
+
+
+@functools.partial(jax.jit, static_argnames=("d_real", "block_rows", "segments"))
+def fc_packed(x_words, w_words, d_real: int, block_rows: int = 32, segments: int = SEGMENTS):
+    """Packed FC.  x: (KW,) u32, w: (L, KW) u32 -> (L,) i32 counts."""
+    (kw,) = x_words.shape
+    l, kw2 = w_words.shape
+    assert kw == kw2
+    # pad packed-K to a segment multiple (zero words xor as zero popcount)
+    kwp = -(-kw // segments) * segments
+    if kwp != kw:
+        x_words = jnp.pad(x_words, (0, kwp - kw))
+        w_words = jnp.pad(w_words, ((0, 0), (0, kwp - kw)))
+    bl = min(block_rows, l)
+    lt = -(-l // bl)
+    lp = lt * bl
+    if lp != l:
+        w_words = jnp.pad(w_words, ((0, lp - l), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_fc_kernel, d_real=d_real, segments=segments),
+        grid=(lt,),
+        in_specs=[
+            pl.BlockSpec((1, kwp), lambda i: (0, 0)),
+            pl.BlockSpec((bl, kwp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lp,), jnp.int32),
+        interpret=True,
+    )(x_words[None, :], w_words)
+    return out[:l]

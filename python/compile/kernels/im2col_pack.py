@@ -1,0 +1,81 @@
+"""Pallas kernel: fused patch-extraction + packing (paper Algorithm 1).
+
+The CUDA kernel assigns an ``S x W`` threadblock per image row-slab, loads
+an ``(S+2R) x W`` region (with halo rows) into shared memory in three
+steps, then each thread walks its K*K*C patch with an integer counter
+(avoiding div/mod) and packs bits into a register word.
+
+TPU adaptation (DESIGN.md §3): the grid walks row-slabs of ``S`` output
+rows; the *pre-padded* image stays in (interpret-mode) ANY memory and the
+kernel dynamic-slices its ``(S+2R, W+2R, C)`` slab — the BlockSpec analog
+of the halo load (overlapping slabs cannot be expressed as disjoint
+blocks).  Patch gathering is K*K static slices of the slab (vector loads,
+no per-element index arithmetic), and packing is the same reshape +
+shift-reduce as :mod:`sign_pack`.  Padding pixels enter as bit 0 (= -1),
+exactly like the zero-initialized shared memory of the CUDA kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _im2col_pack_kernel(xp_ref, o_ref, *, s, h, w, c, k, nw, b):
+    """Grid step i packs rows [i*S, i*S+S) of the output.
+
+    xp_ref: full padded image (H+2R, W+2R, C), value domain {-1,+1} (pads
+    are -1).  o_ref: (S*W, NW) u32 — packed patches for this slab.
+    """
+    i = pl.program_id(0)
+    slab = xp_ref[pl.ds(i * s, s + k - 1), :, :]  # (S+2R, W+2R, C)
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(slab[dy : dy + s, dx : dx + w, :])  # (S, W, C)
+    patches = jnp.stack(cols, axis=2).reshape(s * w, k * k * c)
+    bits = (patches > 0).astype(jnp.uint32)
+    d = k * k * c
+    pad = nw * b - d
+    if pad:
+        bits = jnp.pad(bits, ((0, 0), (0, pad)))
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (b,), 0)
+    shifts = jnp.uint32(b - 1) - iota
+    grouped = bits.reshape(s * w, nw, b)
+    o_ref[...] = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b", "s"))
+def im2col_pack(x_pm1, k: int = 5, b: int = 32, s: int = 2):
+    """Fused im2col+pack.  x_pm1: (H, W, C) {-1,+1} -> (H*W, NW) u32.
+
+    ``s`` is the slab height (the paper's threadblock S = 2).  H must be
+    divisible by ``s``.
+    """
+    h, w, c = x_pm1.shape
+    assert h % s == 0, f"H={h} not divisible by slab height {s}"
+    r = (k - 1) // 2
+    nw = ref.packed_width(k * k * c, b)
+    xp = jnp.pad(x_pm1, ((r, r), (r, r), (0, 0)), constant_values=-1.0)
+    return pl.pallas_call(
+        functools.partial(
+            _im2col_pack_kernel, s=s, h=h, w=w, c=c, k=k, nw=nw, b=b
+        ),
+        grid=(h // s,),
+        in_specs=[pl.BlockSpec(xp.shape, lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((s * w, nw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h * w, nw), jnp.uint32),
+        interpret=True,
+    )(xp)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def im2col_float(x, k: int = 5):
+    """Float im2col ('same', zero pad) — the full-precision baseline's
+    explicit-GEMM lowering (paper: cuDNN explicit GEMM algorithm)."""
+    return ref.im2col(x, k, 0.0)

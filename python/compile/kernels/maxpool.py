@@ -1,0 +1,69 @@
+"""Pallas kernels: 2x2/stride-2 max-pooling.
+
+Two variants:
+
+* :func:`maxpool2x2` — float domain, the layer the full-precision network
+  and the paper's BCNN use (Table 2 rows "Max-Pooling").
+* :func:`orpool2x2` — packed binary domain: since sign is monotone,
+  ``sign(max(x)) == or(sign(x))`` bit-wise, so pooling after binarization
+  is a bitwise OR of packed words — 32 channels pooled per instruction.
+  This is our TPU adaptation (DESIGN.md §3, ablation E8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _maxpool_kernel(x_ref, o_ref):
+    """x_ref: (bh*2, W, C) -> o_ref: (bh, W/2, C)."""
+    x = x_ref[...]
+    h2, w, c = x.shape
+    g = x.reshape(h2 // 2, 2, w // 2, 2, c)
+    o_ref[...] = jnp.max(jnp.max(g, axis=3), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def maxpool2x2(x, block_rows: int = 8):
+    """Float 2x2 max pool.  x: (H, W, C), H and W even -> (H/2, W/2, C)."""
+    h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0
+    bh = min(block_rows, h // 2)
+    assert (h // 2) % bh == 0
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(h // 2 // bh,),
+        in_specs=[pl.BlockSpec((bh * 2, w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bh, w // 2, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h // 2, w // 2, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _orpool_kernel(x_ref, o_ref):
+    """x_ref: (bh*2, W, NW) u32 -> o_ref: (bh, W/2, NW) u32 (bitwise OR)."""
+    x = x_ref[...]
+    h2, w, nw = x.shape
+    g = x.reshape(h2 // 2, 2, w // 2, 2, nw)
+    o_ref[...] = g[:, 0, :, 0] | g[:, 0, :, 1] | g[:, 1, :, 0] | g[:, 1, :, 1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def orpool2x2(words, block_rows: int = 8):
+    """Packed OR pool.  words: (H, W, NW) u32 -> (H/2, W/2, NW) u32."""
+    h, w, nw = words.shape
+    assert h % 2 == 0 and w % 2 == 0
+    bh = min(block_rows, h // 2)
+    assert (h // 2) % bh == 0
+    return pl.pallas_call(
+        _orpool_kernel,
+        grid=(h // 2 // bh,),
+        in_specs=[pl.BlockSpec((bh * 2, w, nw), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bh, w // 2, nw), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h // 2, w // 2, nw), jnp.uint32),
+        interpret=True,
+    )(words)

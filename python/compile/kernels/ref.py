@@ -1,0 +1,229 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These definitions are the single source of truth for the bit-level
+conventions; the Pallas kernels (this package) and the Rust engine
+(``rust/src/bnn``) are both validated against them.
+
+Conventions (shared with the paper where it specifies them):
+
+* **sign** (Eq. 1): ``-1 if x <= 0 else +1``.
+* **bit encoding**: +1 -> bit 1, -1 -> bit 0 (Eq. 2's ``(1+x)/2``).
+* **packing** (Eq. 2): a length-D {0,1} row packs into ``ceil(D/B)``
+  words; element ``i`` (0-based) lands in word ``i // B`` at bit position
+  ``B-1 - (i % B)`` (MSB-first).  Tail bits beyond D are 0.  Words are
+  stored as uint32 even for B < 32.
+* **packed dot** (Eq. 4): ``a . b = D - 2 * sum_w popcount(xor(A_w, B_w))``
+  with D the *real* (unpadded) length — valid because tail bits are 0 in
+  both operands, contributing 0 to the xor-popcount.
+* **binarized-conv padding**: the CUDA kernel zero-initializes shared
+  memory and then takes ``s = sh_block[idx] > 0`` (Algorithm 1 line 8),
+  so halo pixels become bit 0, i.e. **-1** in the xnor dot.  We adopt the
+  same semantics: binarized convolutions pad with -1 (float convolutions
+  pad with 0 as usual).
+* **im2col patch order**: ``(dy, dx, c)`` flattened C-style, matching the
+  row-major shared-memory walk of Algorithm 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# sign / bits
+# ---------------------------------------------------------------------------
+
+
+def sign_pm1(x):
+    """Eq. (1): elementwise sign into {-1.0, +1.0} (sign(0) = -1)."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def pm1_to_bits(x):
+    """{-1,+1} (any numeric dtype) -> {0,1} uint32 (+1 -> 1)."""
+    return (x > 0).astype(jnp.uint32)
+
+
+def bits_to_pm1(b):
+    """{0,1} -> {-1.0,+1.0} float32."""
+    return jnp.where(b > 0, 1.0, -1.0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# packing (Eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def packed_width(d: int, b: int = 32) -> int:
+    """Number of words a length-``d`` bit vector packs into."""
+    return -(-d // b)
+
+
+def pack_bits(bits, b: int = 32):
+    """Pack {0,1} rows into words.  bits: (..., D) -> (..., ceil(D/B)) u32.
+
+    Element i -> word i//B, bit position B-1-(i%B); tail bits are 0.
+    """
+    bits = bits.astype(jnp.uint32)
+    d = bits.shape[-1]
+    nw = packed_width(d, b)
+    pad = nw * b - d
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    grouped = bits.reshape(bits.shape[:-1] + (nw, b))
+    shifts = jnp.arange(b - 1, -1, -1, dtype=jnp.uint32)
+    return jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words, d: int, b: int = 32):
+    """Inverse of :func:`pack_bits`: (..., NW) u32 -> (..., D) {0,1} u32."""
+    shifts = jnp.arange(b - 1, -1, -1, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :d]
+
+
+def packed_dot(a_words, b_words, d_real: int):
+    """Eq. (4): xnor-popcount dot of two packed rows -> int32."""
+    x = jnp.bitwise_xor(a_words, b_words)
+    pc = jnp.sum(lax.population_count(x).astype(jnp.int32), axis=-1)
+    return jnp.int32(d_real) - 2 * pc
+
+
+def packed_matmul(a_words, w_words, d_real: int):
+    """(M, NW) x (N, NW) packed -> (M, N) int32 counts (Eq. 4 GEMM)."""
+    x = jnp.bitwise_xor(a_words[:, None, :], w_words[None, :, :])
+    pc = jnp.sum(lax.population_count(x).astype(jnp.int32), axis=-1)
+    return jnp.int32(d_real) - 2 * pc
+
+
+# ---------------------------------------------------------------------------
+# im2col (float and +-1 domains)
+# ---------------------------------------------------------------------------
+
+
+def im2col(x, k: int, pad_value: float = 0.0):
+    """'same' im2col.  x: (H, W, C) -> (H*W, K*K*C), patch order (dy,dx,c).
+
+    ``pad_value`` is 0 for float convs, -1 for binarized convs (see module
+    docstring).
+    """
+    h, w, c = x.shape
+    r = (k - 1) // 2
+    xp = jnp.pad(x, ((r, r), (r, r), (0, 0)), constant_values=pad_value)
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(xp[dy : dy + h, dx : dx + w, :])
+    # (H, W, K*K, C) -> (H*W, K*K*C) in (dy, dx, c) order
+    patches = jnp.stack(cols, axis=2)
+    return patches.reshape(h * w, k * k * c)
+
+
+def im2col_pack(x_pm1, k: int, b: int = 32):
+    """Fused patch-extraction + packing oracle (Algorithm 1 analog).
+
+    x_pm1: (H, W, C) in {-1,+1}.  Returns (H*W, ceil(K*K*C/B)) u32.
+    Padding pixels enter as bit 0 (= -1), matching the CUDA kernel.
+    """
+    patches = im2col(x_pm1, k, pad_value=-1.0)
+    return pack_bits(pm1_to_bits(patches), b)
+
+
+def conv2d_float(x, w):
+    """Float 'same' conv via im2col+GEMM.  x: (H,W,C), w: (O,K,K,C)."""
+    o, k, _, c = w.shape
+    cols = im2col(x, k, 0.0)  # (H*W, K*K*C)
+    wm = w.reshape(o, k * k * c)  # (dy,dx,c) order matches im2col
+    return (cols @ wm.T).reshape(x.shape[0], x.shape[1], o)
+
+
+def conv2d_pm1(x_pm1, w_pm1):
+    """Binarized 'same' conv (pad = -1), exact integer counts as f32.
+
+    Equals ``unpack(packed conv)``: every product is +-1, the sum over the
+    K*K*C window is an integer in [-D, D] with D = K*K*C.
+    """
+    o, k, _, c = w_pm1.shape
+    cols = im2col(x_pm1, k, -1.0)
+    wm = w_pm1.reshape(o, k * k * c)
+    return (cols @ wm.T).reshape(x_pm1.shape[0], x_pm1.shape[1], o)
+
+
+def conv2d_packed(x_pm1, w_pm1, b: int = 32):
+    """Binarized conv through the packed path (the kernel under test)."""
+    o, k, _, c = w_pm1.shape
+    d = k * k * c
+    cols = im2col_pack(x_pm1, k, b)  # (H*W, NW)
+    wp = pack_bits(pm1_to_bits(w_pm1.reshape(o, d)), b)  # (O, NW)
+    counts = packed_matmul(cols, wp, d)  # (H*W, O) i32
+    return counts.reshape(x_pm1.shape[0], x_pm1.shape[1], o)
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+
+
+def maxpool2x2(x):
+    """2x2/stride-2 max pool.  x: (H, W, C) with even H, W."""
+    h, w, c = x.shape
+    return jnp.max(x.reshape(h // 2, 2, w // 2, 2, c), axis=(1, 3))
+
+
+def orpool2x2_packed(words):
+    """2x2/stride-2 pool in the packed binary domain: bitwise OR.
+
+    words: (H, W, NW) u32.  Valid because sign is monotone:
+    ``sign(max(x)) = or(sign(x))`` bit-wise.
+    """
+    h, w, nw = words.shape
+    g = words.reshape(h // 2, 2, w // 2, 2, nw)
+    return g[:, 0, :, 0] | g[:, 0, :, 1] | g[:, 1, :, 0] | g[:, 1, :, 1]
+
+
+# ---------------------------------------------------------------------------
+# fully connected
+# ---------------------------------------------------------------------------
+
+
+def fc_float(x, w):
+    """x: (D,), w: (L, D) -> (L,) float."""
+    return w @ x
+
+
+def fc_packed(x_words, w_words, d_real: int):
+    """Packed FC (Section 3.2): per-row xnor-popcount dot -> (L,) i32."""
+    return packed_dot(w_words, x_words[None, :], d_real)
+
+
+# ---------------------------------------------------------------------------
+# batch-norm threshold folding (inference)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn_to_threshold(gamma, beta, mean, var, eps: float = 1e-5):
+    """Fold BN + sign into an integer-count comparison.
+
+    sign(gamma * (y - mean)/sqrt(var+eps) + beta) = +1
+        iff  y > theta         (gamma > 0)
+        iff  y < theta         (gamma < 0)
+    with theta = mean - beta * sqrt(var+eps) / gamma.
+
+    Returns (theta f32, flip u32) — flip=1 where gamma < 0.  gamma == 0
+    collapses to the constant sign(beta); we encode that as theta = +-inf.
+    """
+    std = jnp.sqrt(var + eps)
+    safe_gamma = jnp.where(gamma == 0, 1.0, gamma)
+    theta = mean - beta * std / safe_gamma
+    flip = (gamma < 0).astype(jnp.uint32)
+    # gamma == 0: sign(beta) constant -> theta -inf (always fire) / +inf
+    const_fire = jnp.where(beta > 0, -jnp.inf, jnp.inf)
+    theta = jnp.where(gamma == 0, const_fire, theta)
+    return theta.astype(jnp.float32), flip
+
+
+def threshold_sign(y, theta, flip):
+    """Apply a folded threshold: bits = (y > theta) xor flip."""
+    gt = (y > theta).astype(jnp.uint32)
+    return jnp.bitwise_xor(gt, flip)

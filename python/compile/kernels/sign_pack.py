@@ -1,0 +1,61 @@
+"""Pallas kernel: fused sign + bit-packing (paper Eq. 1 + Eq. 2).
+
+Maps rows of real values to packed words: bit = (x > 0), element ``i`` of
+a row lands in word ``i // B`` at position ``B-1-(i % B)``.
+
+TPU adaptation (DESIGN.md §3): the CUDA version packs in per-thread
+registers with shifts inside Algorithm 1; here each grid step owns a row
+tile resident in VMEM and packs with a reshape + weighted reduction
+(``bits @ 2^shifts``), which the VPU vectorizes — no scalar loop, no
+div/mod in the hot path (the reshape encodes ``i//B`` and ``i%B``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _sign_pack_kernel(x_ref, o_ref, *, nw: int, b: int):
+    """One row-tile: x_ref (bm, NW*B) f32 -> o_ref (bm, NW) u32."""
+    bits = (x_ref[...] > 0).astype(jnp.uint32)
+    bm = bits.shape[0]
+    grouped = bits.reshape(bm, nw, b)
+    iota = jax.lax.broadcasted_iota(jnp.uint32, (b,), 0)
+    shifts = jnp.uint32(b - 1) - iota
+    o_ref[...] = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "block_rows"))
+def sign_pack(x, b: int = 32, block_rows: int = 128):
+    """sign+pack rows.  x: (N, D) f32 -> (N, ceil(D/B)) u32.
+
+    Elements past D (tail of the last word) pack as bit 0, matching
+    :func:`ref.pack_bits` on ``ref.pm1_to_bits(ref.sign_pm1(x))``.
+    """
+    n, d = x.shape
+    nw = ref.packed_width(d, b)
+    dp = nw * b
+    if dp != d:
+        # tail elements must binarize to bit 0 => pad with a negative value
+        x = jnp.pad(x, ((0, 0), (0, dp - d)), constant_values=-1.0)
+    bm = min(block_rows, n)
+    # pad N up to a tile multiple; extra rows are discarded after the call
+    n_tiles = -(-n // bm)
+    np_ = n_tiles * bm
+    if np_ != n:
+        x = jnp.pad(x, ((0, np_ - n), (0, 0)), constant_values=-1.0)
+    out = pl.pallas_call(
+        functools.partial(_sign_pack_kernel, nw=nw, b=b),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((bm, dp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, nw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, nw), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x)
+    return out[:n]

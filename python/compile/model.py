@@ -1,0 +1,487 @@
+"""Layer 2 — the vehicle-classifier network of Huttunen et al. [12] in
+both full-precision and binarized (BCNN) forms.
+
+Architecture (paper Section 2.1 + Table 2):
+
+    input 96x96x3
+    conv1  5x5, C_in -> 32, 'same'     (C_in = 3, or 1 for gray scheme)
+    pool1  2x2 max                     -> 48x48x32
+    conv2  5x5, 32 -> 32, 'same'
+    pool2  2x2 max                     -> 24x24x32
+    fc1    18432 -> 100
+    fc2    100 -> 100
+    fc3    100 -> 4                     (bus / normal / truck / van)
+
+Full-precision: ReLU activations, biases, no batch norm (the 2016-era
+reference net).  BCNN: `sign` activations, **no ReLU** (paper Section
+2.1), binary conv/fc1 weights, float fc2/fc3 ("the last 2 fully-connected
+layers ... more efficient to implement them on the CPU").  Like the BNN
+lineage the paper follows ([11] Hubara et al.), the binarized net needs a
+per-channel affine normalization before each sign to be trainable; at
+inference it folds into an integer threshold per channel
+(:func:`kernels.ref.fold_bn_to_threshold`) so the deployed network remains
+pure xnor-popcount + compare.  The paper is silent on this detail; we
+document it as a faithful-to-[11] addition (DESIGN.md §2).
+
+Two inference paths compute identical bits:
+
+* ``bcnn_infer_ref``    — pure jnp (vectorizable over a batch); and
+* ``bcnn_infer_pallas`` — the Pallas kernel pipeline (single image),
+  used for the AOT artifacts that the Rust runtime serves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import binarize_input
+from .kernels import bgemm as k_bgemm
+from .kernels import fc_packed as k_fc
+from .kernels import im2col_pack as k_im2col
+from .kernels import maxpool as k_pool
+from .kernels import ref
+from .kernels import sign_pack as k_sign
+
+IMG_H, IMG_W, IMG_C = 96, 96, 3
+K = 5
+CONV1_OUT = 32
+CONV2_OUT = 32
+FC1_OUT = 100
+FC2_OUT = 100
+NUM_CLASSES = 4
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# straight-through estimator (paper Section 2.1)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def ste_sign(x):
+    """sign with pass-through gradient (paper: d sign / dx := identity)."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _ste_fwd(x):
+    return ste_sign(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)  # identity, no clipping — matches the paper's text
+
+
+ste_sign.defvjp(_ste_fwd, _ste_bwd)
+
+
+@jax.custom_vjp
+def ste_sign_clip(x):
+    """sign with clipped pass-through (Hubara et al. [11] variant)."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _stec_fwd(x):
+    return ste_sign_clip(x), x
+
+
+def _stec_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign_clip.defvjp(_stec_fwd, _stec_bwd)
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in = int(np.prod(shape[1:]))
+    fan_out = shape[0]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def init_float_params(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "w1": _glorot(ks[0], (CONV1_OUT, K, K, IMG_C)),
+        "b1": jnp.zeros((CONV1_OUT,), jnp.float32),
+        "w2": _glorot(ks[1], (CONV2_OUT, K, K, CONV1_OUT)),
+        "b2": jnp.zeros((CONV2_OUT,), jnp.float32),
+        "wfc1": _glorot(ks[2], (FC1_OUT, 24 * 24 * CONV2_OUT)),
+        "bfc1": jnp.zeros((FC1_OUT,), jnp.float32),
+        "wfc2": _glorot(ks[3], (FC2_OUT, FC1_OUT)),
+        "bfc2": jnp.zeros((FC2_OUT,), jnp.float32),
+        "wfc3": _glorot(ks[4], (NUM_CLASSES, FC2_OUT)),
+        "bfc3": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+
+def init_bcnn_params(key, scheme: str = "rgb"):
+    c_in = binarize_input.input_channels(scheme)
+    ks = jax.random.split(key, 6)
+    p = {
+        "w1": _glorot(ks[0], (CONV1_OUT, K, K, c_in)),
+        "w2": _glorot(ks[1], (CONV2_OUT, K, K, CONV1_OUT)),
+        "wfc1": _glorot(ks[2], (FC1_OUT, 24 * 24 * CONV2_OUT)),
+        "wfc2": _glorot(ks[3], (FC2_OUT, FC1_OUT)),
+        "bfc2": jnp.zeros((FC2_OUT,), jnp.float32),
+        "wfc3": _glorot(ks[4], (NUM_CLASSES, FC2_OUT)),
+        "bfc3": jnp.zeros((NUM_CLASSES,), jnp.float32),
+        # batch-norm affine parameters (fold into thresholds at export)
+        "bn1_gamma": jnp.ones((CONV1_OUT,), jnp.float32),
+        "bn1_beta": jnp.zeros((CONV1_OUT,), jnp.float32),
+        "bn2_gamma": jnp.ones((CONV2_OUT,), jnp.float32),
+        "bn2_beta": jnp.zeros((CONV2_OUT,), jnp.float32),
+        "bn3_gamma": jnp.ones((FC1_OUT,), jnp.float32),
+        "bn3_beta": jnp.zeros((FC1_OUT,), jnp.float32),
+    }
+    if scheme in ("rgb", "gray"):
+        n_t = 3 if scheme == "rgb" else 1
+        # pixel range is [0,1]: initialize T near -mean so sign() is split
+        p["input_t"] = jnp.full((n_t,), -0.5, jnp.float32)
+    return p
+
+
+def init_bn_state():
+    return {
+        "bn1_mean": jnp.zeros((CONV1_OUT,), jnp.float32),
+        "bn1_var": jnp.ones((CONV1_OUT,), jnp.float32),
+        "bn2_mean": jnp.zeros((CONV2_OUT,), jnp.float32),
+        "bn2_var": jnp.ones((CONV2_OUT,), jnp.float32),
+        "bn3_mean": jnp.zeros((FC1_OUT,), jnp.float32),
+        "bn3_var": jnp.ones((FC1_OUT,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full-precision network (batched)
+# ---------------------------------------------------------------------------
+
+
+def _conv_same(x, w, pad_value: float = 0.0):
+    """x: (N,H,W,C), w: (O,K,K,C) -> (N,H,W,O), 'same' with pad_value."""
+    r = (w.shape[1] - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (r, r), (r, r), (0, 0)), constant_values=pad_value)
+    return lax.conv_general_dilated(
+        xp,
+        jnp.transpose(w, (1, 2, 3, 0)),  # KKIO
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool_nhwc(x):
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def float_forward(params, x):
+    """Full-precision forward.  x: (N,96,96,3) -> logits (N,4)."""
+    h = jax.nn.relu(_conv_same(x, params["w1"]) + params["b1"])
+    h = _maxpool_nhwc(h)
+    h = jax.nn.relu(_conv_same(h, params["w2"]) + params["b2"])
+    h = _maxpool_nhwc(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["wfc1"].T + params["bfc1"])
+    h = jax.nn.relu(h @ params["wfc2"].T + params["bfc2"])
+    return h @ params["wfc3"].T + params["bfc3"]
+
+
+# ---------------------------------------------------------------------------
+# BCNN training forward (batched, STE, batch norm)
+# ---------------------------------------------------------------------------
+
+
+def _bn_apply(x, gamma, beta, mean, var):
+    return gamma * (x - mean) * lax.rsqrt(var + BN_EPS) + beta
+
+
+def _bn_train(x, gamma, beta, run_mean, run_var, axes):
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    out = _bn_apply(x, gamma, beta, mean, var)
+    new_mean = BN_MOMENTUM * run_mean + (1 - BN_MOMENTUM) * mean
+    new_var = BN_MOMENTUM * run_var + (1 - BN_MOMENTUM) * var
+    return out, new_mean, new_var
+
+
+def bcnn_forward(params, state, x, scheme: str, train: bool, sign_fn=ste_sign):
+    """BCNN forward.  x: (N,96,96,3) float in [0,1].
+
+    Returns (logits (N,4), new_state).  ``train`` selects batch statistics
+    (and updates the running ones) vs the frozen running statistics.
+    """
+    xb, _ = binarize_input.apply_scheme(scheme, x, params)
+    if scheme in ("rgb", "gray"):
+        # make the threshold trainable through the hard sign
+        t = params["input_t"]
+        if scheme == "rgb":
+            xb = sign_fn(x + t.reshape(1, 1, 1, 3))
+        else:
+            gray = jnp.tensordot(x, binarize_input._LUMA, axes=([-1], [0]))
+            xb = sign_fn(gray + t)[..., None]
+
+    wb1 = sign_fn(params["w1"])
+    wb2 = sign_fn(params["w2"])
+    wbfc1 = sign_fn(params["wfc1"])
+
+    if scheme == "none":
+        y1 = _conv_same(x, wb1, 0.0)  # float input, binary weights, 0 pad
+    else:
+        y1 = _conv_same(xb, wb1, -1.0)  # binary domain pads with -1
+
+    def bn_block(y, name, axes):
+        g, b = params[f"{name}_gamma"], params[f"{name}_beta"]
+        rm, rv = state[f"{name}_mean"], state[f"{name}_var"]
+        if train:
+            out, nm, nv = _bn_train(y, g, b, rm, rv, axes)
+            return out, {f"{name}_mean": nm, f"{name}_var": nv}
+        return _bn_apply(y, g, b, rm, rv), {}
+
+    new_state = dict(state)
+    y1, upd = bn_block(y1, "bn1", (0, 1, 2))
+    new_state.update(upd)
+    h1 = _maxpool_nhwc(sign_fn(y1))  # max == OR in the +-1 domain
+
+    y2 = _conv_same(h1, wb2, -1.0)
+    y2, upd = bn_block(y2, "bn2", (0, 1, 2))
+    new_state.update(upd)
+    h2 = _maxpool_nhwc(sign_fn(y2))
+
+    y3 = h2.reshape(h2.shape[0], -1) @ wbfc1.T
+    y3, upd = bn_block(y3, "bn3", (0,))
+    new_state.update(upd)
+    h3 = sign_fn(y3)
+
+    h4 = sign_fn(h3 @ params["wfc2"].T + params["bfc2"])  # no ReLU anywhere
+    logits = h4 @ params["wfc3"].T + params["bfc3"]
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# inference export: fold BN, pack weights
+# ---------------------------------------------------------------------------
+
+
+def export_inference_weights(params, state, scheme: str) -> dict:
+    """Fold + pack trained parameters into the deployable representation.
+
+    Returned dict (all numpy arrays; names match the Rust loader):
+      w1_pm1      (32, 5,5,Cin) f32 +-1      conv1 weights, +-1 floats
+      w1_packed   (32, NW1) u32              flattened-patch packing, B=32
+      theta1      (32,) f32 / flip1 (32,) u32
+      w2_packed   (32, 25*ceil(32/32)) u32   channel-packed per (dy,dx)
+      theta2, flip2
+      wfc1_packed (100, 576) u32             channel-packed per pixel
+      theta3, flip3
+      wfc2, bfc2, wfc3, bfc3                 float CPU tail
+      input_t     (3,) or (1,) f32           (rgb / gray schemes only)
+    """
+    c_in = binarize_input.input_channels(scheme)
+    d1 = K * K * c_in
+    w1_pm1 = np.asarray(ref.sign_pm1(params["w1"]))
+    w1_packed = np.asarray(
+        ref.pack_bits(ref.pm1_to_bits(jnp.asarray(w1_pm1).reshape(CONV1_OUT, d1)), 32)
+    )
+    # conv2: channel-packed — bit order (dy, dx, c), one u32 per (dy,dx)
+    w2_pm1 = np.asarray(ref.sign_pm1(params["w2"]))  # (32,5,5,32)
+    w2_bits = jnp.asarray(w2_pm1).reshape(CONV2_OUT, K * K, CONV1_OUT)
+    w2_packed = np.asarray(ref.pack_bits(ref.pm1_to_bits(w2_bits), 32)).reshape(
+        CONV2_OUT, -1
+    )
+    # fc1: channel-packed per pixel — bit order (y, x, c)
+    wfc1_pm1 = np.asarray(ref.sign_pm1(params["wfc1"]))  # (100, 18432)
+    wfc1_bits = jnp.asarray(wfc1_pm1).reshape(FC1_OUT, 24 * 24, CONV2_OUT)
+    wfc1_packed = np.asarray(ref.pack_bits(ref.pm1_to_bits(wfc1_bits), 32)).reshape(
+        FC1_OUT, -1
+    )
+
+    out = {
+        "w1_pm1": w1_pm1.astype(np.float32),
+        "w1_packed": w1_packed.astype(np.uint32),
+        "w2_packed": w2_packed.astype(np.uint32),
+        "wfc1_packed": wfc1_packed.astype(np.uint32),
+        "wfc2": np.asarray(params["wfc2"], np.float32),
+        "bfc2": np.asarray(params["bfc2"], np.float32),
+        "wfc3": np.asarray(params["wfc3"], np.float32),
+        "bfc3": np.asarray(params["bfc3"], np.float32),
+    }
+    for i, name in ((1, "bn1"), (2, "bn2"), (3, "bn3")):
+        theta, flip = ref.fold_bn_to_threshold(
+            params[f"{name}_gamma"],
+            params[f"{name}_beta"],
+            state[f"{name}_mean"],
+            state[f"{name}_var"],
+            BN_EPS,
+        )
+        out[f"theta{i}"] = np.asarray(theta, np.float32)
+        out[f"flip{i}"] = np.asarray(flip, np.uint32)
+    if scheme in ("rgb", "gray"):
+        out["input_t"] = np.asarray(params["input_t"], np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BCNN inference — reference (jnp) and Pallas pipelines, single image
+# ---------------------------------------------------------------------------
+
+
+def _threshold_pm1(y, theta, flip):
+    """counts -> +-1 floats via the folded threshold."""
+    bits = ref.threshold_sign(y.astype(jnp.float32), theta, flip)
+    return ref.bits_to_pm1(bits)
+
+
+def _binarize_first(iw: dict, x, scheme: str):
+    if scheme == "rgb":
+        return binarize_input.threshold_rgb(x, jnp.asarray(iw["input_t"]))
+    if scheme == "gray":
+        return binarize_input.threshold_gray(x, jnp.asarray(iw["input_t"]))
+    if scheme == "lbp":
+        return binarize_input.lbp(x)
+    raise ValueError(scheme)
+
+
+def bcnn_infer_ref(iw: dict, x, scheme: str):
+    """Reference inference.  x: (96,96,3) float -> logits (4,) f32.
+
+    Pure jnp, bit-identical to the Pallas path (tested in
+    tests/test_model.py).
+    """
+    c_in = binarize_input.input_channels(scheme)
+    d1 = K * K * c_in
+    if scheme == "none":
+        w1 = jnp.asarray(iw["w1_pm1"])  # (32,5,5,3) +-1 floats
+        y1 = ref.conv2d_float(x, w1)  # zero pad, float counts
+    else:
+        xb = _binarize_first(iw, x, scheme)
+        y1 = ref.conv2d_packed(xb, jnp.asarray(iw["w1_pm1"]), 32).astype(jnp.float32)
+    bits1 = ref.threshold_sign(y1, jnp.asarray(iw["theta1"]), jnp.asarray(iw["flip1"]))
+    words1 = ref.pack_bits(bits1, 32)  # (96,96,1) channel-packed
+    words1 = ref.orpool2x2_packed(words1)  # (48,48,1)
+
+    # conv2 in the channel-packed domain: gather K*K words per pixel
+    cols2 = _im2col_words_ref(words1, K)  # (2304, 25)
+    counts2 = ref.packed_matmul(cols2, jnp.asarray(iw["w2_packed"]), K * K * CONV1_OUT)
+    y2 = counts2.reshape(48, 48, CONV2_OUT).astype(jnp.float32)
+    bits2 = ref.threshold_sign(y2, jnp.asarray(iw["theta2"]), jnp.asarray(iw["flip2"]))
+    words2 = ref.orpool2x2_packed(ref.pack_bits(bits2, 32))  # (24,24,1)
+
+    xfc = words2.reshape(-1)  # (576,) word order (y, x)
+    y3 = ref.fc_packed(xfc, jnp.asarray(iw["wfc1_packed"]), 24 * 24 * CONV2_OUT)
+    h3 = _threshold_pm1(y3, jnp.asarray(iw["theta3"]), jnp.asarray(iw["flip3"]))
+    h4 = ref.sign_pm1(jnp.asarray(iw["wfc2"]) @ h3 + jnp.asarray(iw["bfc2"]))
+    return jnp.asarray(iw["wfc3"]) @ h4 + jnp.asarray(iw["bfc3"])
+
+
+def _im2col_words_ref(words, k: int):
+    """'same' im2col over packed words, pad word = 0 (all channels -1)."""
+    h, w, nw = words.shape
+    r = (k - 1) // 2
+    wp = jnp.pad(words, ((r, r), (r, r), (0, 0)))
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(wp[dy : dy + h, dx : dx + w, :])
+    return jnp.stack(cols, axis=2).reshape(h * w, k * k * nw)
+
+
+def bcnn_infer_pallas(iw: dict, x, scheme: str):
+    """Pallas-kernel inference pipeline.  x: (96,96,3) -> logits (4,).
+
+    This is the function AOT-lowered into the served artifact: every
+    binarized stage runs through a Layer-1 kernel.
+    """
+    if scheme == "none":
+        w1 = jnp.asarray(iw["w1_pm1"])
+        cols = k_im2col.im2col_float(x, K)  # (9216, 75)
+        y1 = k_bgemm.fgemm(cols, w1.reshape(CONV1_OUT, -1)).reshape(96, 96, CONV1_OUT)
+    else:
+        xb = _binarize_first(iw, x, scheme)
+        c_in = xb.shape[-1]
+        cols = k_im2col.im2col_pack(xb, K, 32)  # (9216, NW1)
+        counts = k_bgemm.bgemm(cols, jnp.asarray(iw["w1_packed"]), K * K * c_in)
+        y1 = counts.reshape(96, 96, CONV1_OUT).astype(jnp.float32)
+
+    # threshold + channel-pack via the sign_pack kernel: bit = (z > 0)
+    z1 = _threshold_z(y1, jnp.asarray(iw["theta1"]), jnp.asarray(iw["flip1"]))
+    words1 = k_sign.sign_pack(z1.reshape(96 * 96, CONV1_OUT), 32).reshape(96, 96, 1)
+    words1 = k_pool.orpool2x2(words1)  # (48,48,1)
+
+    cols2 = _im2col_words_ref(words1, K)  # packed-word gather (cheap)
+    counts2 = k_bgemm.bgemm(cols2, jnp.asarray(iw["w2_packed"]), K * K * CONV1_OUT)
+    y2 = counts2.reshape(48, 48, CONV2_OUT).astype(jnp.float32)
+    z2 = _threshold_z(y2, jnp.asarray(iw["theta2"]), jnp.asarray(iw["flip2"]))
+    words2 = k_sign.sign_pack(z2.reshape(48 * 48, CONV2_OUT), 32).reshape(48, 48, 1)
+    words2 = k_pool.orpool2x2(words2)  # (24,24,1)
+
+    y3 = k_fc.fc_packed(
+        words2.reshape(-1), jnp.asarray(iw["wfc1_packed"]), 24 * 24 * CONV2_OUT
+    )
+    h3 = _threshold_pm1(y3, jnp.asarray(iw["theta3"]), jnp.asarray(iw["flip3"]))
+    h4 = ref.sign_pm1(jnp.asarray(iw["wfc2"]) @ h3 + jnp.asarray(iw["bfc2"]))
+    return jnp.asarray(iw["wfc3"]) @ h4 + jnp.asarray(iw["bfc3"])
+
+
+def _threshold_z(y, theta, flip):
+    """Map counts to a float whose sign bit encodes the folded threshold:
+    z > 0  iff  (y > theta) xor flip."""
+    s = 1.0 - 2.0 * flip.astype(jnp.float32)
+    return (y - theta) * s
+
+
+# ---------------------------------------------------------------------------
+# batched reference inference (for batching ablation artifacts)
+# ---------------------------------------------------------------------------
+
+
+def bcnn_infer_ref_batch(iw: dict, xs, scheme: str):
+    """vmapped reference inference: xs (N,96,96,3) -> (N,4)."""
+    return jax.vmap(lambda x: bcnn_infer_ref(iw, x, scheme))(xs)
+
+
+# ---------------------------------------------------------------------------
+# per-layer functions (Table 2 artifacts; weights are runtime arguments)
+# ---------------------------------------------------------------------------
+
+
+def layer_im2col_float(x, k: int = K):
+    return ref.im2col(x, k, 0.0)
+
+
+def layer_im2col_pack(x_pm1, k: int = K):
+    return k_im2col.im2col_pack(x_pm1, k, 32)
+
+
+def layer_gemm_float(cols, w2d):
+    return cols @ w2d.T
+
+
+def layer_bgemm(cols, wp, d_real: int):
+    return k_bgemm.bgemm(cols, wp, d_real)
+
+
+def layer_pool_float(x):
+    return k_pool.maxpool2x2(x)
+
+
+def layer_pool_or(words):
+    return k_pool.orpool2x2(words)
+
+
+def layer_fc_float(x, w):
+    return w @ x
+
+
+def layer_fc_packed(x_words, w_words, d_real: int):
+    return k_fc.fc_packed(x_words, w_words, d_real)

@@ -1,0 +1,62 @@
+"""Hand-rolled optimizers (the image has no optax).
+
+The paper trains the full-precision network with RMSprop [23] and the
+binarized network with Adam [15]; both are implemented here as simple
+pytree transforms: ``init(params) -> state`` and
+``update(grads, state, params) -> (new_params, new_state)``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """Adam (Kingma & Ba) — used for the BCNN."""
+
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        tf = t.astype(jnp.float32)
+        bc1 = 1 - b1**tf
+        bc2 = 1 - b2**tf
+        new_params = jax.tree.map(
+            lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+            params,
+            m,
+            v,
+        )
+        return new_params, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def rmsprop(lr: float = 1e-3, decay: float = 0.9, eps: float = 1e-8) -> Optimizer:
+    """RMSprop (Tieleman & Hinton) — used for the full-precision net."""
+
+    def init(params):
+        return {"s": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        s = jax.tree.map(lambda s_, g: decay * s_ + (1 - decay) * g * g, state["s"], grads)
+        new_params = jax.tree.map(
+            lambda p, s_, g: p - lr * g / (jnp.sqrt(s_) + eps), params, s, grads
+        )
+        return new_params, {"s": s}
+
+    return Optimizer(init, update)

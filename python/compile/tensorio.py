@@ -1,0 +1,76 @@
+"""Tiny named-tensor container shared between the Python build path and the
+Rust runtime (``rust/src/util/tensorio.rs`` implements the reader).
+
+Layout (little-endian throughout)::
+
+    magic   : 4 bytes  b"BCNT"
+    version : u32      (currently 1)
+    count   : u32      number of tensors
+    repeat count times:
+        name_len : u32
+        name     : name_len bytes (utf-8)
+        dtype    : u32   0=f32, 1=i32, 2=u32, 3=u8, 4=i8
+        ndim     : u32
+        dims     : ndim * u64
+        payload  : prod(dims) * sizeof(dtype) bytes, C order
+
+No compression, no alignment games — the files are small (a few MB) and
+the format must be trivially re-implementable in Rust without serde.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"BCNT"
+VERSION = 1
+
+_DTYPES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.int32): 1,
+    np.dtype(np.uint32): 2,
+    np.dtype(np.uint8): 3,
+    np.dtype(np.int8): 4,
+}
+_RDTYPES = {v: k for k, v in _DTYPES.items()}
+
+
+def save_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write ``tensors`` (name -> array) to ``path`` in BCNT format."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", _DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def load_tensors(path: str) -> dict[str, np.ndarray]:
+    """Read a BCNT file back into a dict of arrays."""
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            dtype_code, ndim = struct.unpack("<II", f.read(8))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            dtype = _RDTYPES[dtype_code]
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,195 @@
+"""Training for Table 3: full-precision net + BCNN under each
+input-binarization scheme, on the SynthVehicles dataset.
+
+Protocol (paper Section 2.1/2.2): 90/10 split, training set augmented
+(flip + Gaussian sigma=0.5), full-precision trained with RMSprop, BCNN
+with Adam + straight-through sign gradients; we report test accuracy at
+the best-validation-epoch.  The learned input thresholds T (rgb/gray
+schemes) are trained jointly with the other parameters rather than in
+the paper's separate second stage — a documented simplification
+(DESIGN.md §2); the effect on the scheme ordering is negligible.
+
+Usage::
+
+    python -m compile.train --out ../artifacts --all-schemes
+    python -m compile.train --out ../artifacts --scheme rgb --epochs 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import optimizers, tensorio
+
+VALID_FRACTION = 0.2  # paper: 20% of the training set for validation
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def _batches(n, bs, rng):
+    idx = rng.permutation(n)
+    for i in range(0, n - bs + 1, bs):
+        yield idx[i : i + bs]
+
+
+def train_float(x_train, y_train, x_val, y_val, epochs, bs, lr, seed=0, log=print):
+    params = model_mod.init_float_params(jax.random.PRNGKey(seed))
+    opt = optimizers.rmsprop(lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        def loss_fn(p):
+            return _xent(model_mod.float_forward(p, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    @jax.jit
+    def eval_logits(params, xb):
+        return model_mod.float_forward(params, xb)
+
+    best = (-1.0, params)
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        t0 = time.time()
+        losses = []
+        for bidx in _batches(len(x_train), bs, rng):
+            params, opt_state, loss = step(params, opt_state, x_train[bidx], y_train[bidx])
+            losses.append(float(loss))
+        vacc = _eval_acc(eval_logits, params, x_val, y_val, bs)
+        log(f"  [float] epoch {ep+1}/{epochs} loss={np.mean(losses):.4f} val_acc={vacc:.4f} ({time.time()-t0:.1f}s)")
+        if vacc > best[0]:
+            best = (vacc, jax.tree.map(lambda a: a.copy(), params))
+    return best[1], best[0]
+
+
+def train_bcnn(scheme, x_train, y_train, x_val, y_val, epochs, bs, lr, seed=0, log=print):
+    params = model_mod.init_bcnn_params(jax.random.PRNGKey(seed + 1), scheme)
+    state = model_mod.init_bn_state()
+    opt = optimizers.adam(lr)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, opt_state, xb, yb):
+        def loss_fn(p):
+            logits, new_state = model_mod.bcnn_forward(p, state, xb, scheme, train=True)
+            return _xent(logits, yb), new_state
+
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, new_state, opt_state, loss
+
+    @jax.jit
+    def eval_logits(bundle, xb):
+        params, state = bundle
+        logits, _ = model_mod.bcnn_forward(params, state, xb, scheme, train=False)
+        return logits
+
+    best = (-1.0, params, state)
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        t0 = time.time()
+        losses = []
+        for bidx in _batches(len(x_train), bs, rng):
+            params, state, opt_state, loss = step(params, state, opt_state, x_train[bidx], y_train[bidx])
+            losses.append(float(loss))
+        vacc = _eval_acc(eval_logits, (params, state), x_val, y_val, bs)
+        log(f"  [bcnn/{scheme}] epoch {ep+1}/{epochs} loss={np.mean(losses):.4f} val_acc={vacc:.4f} ({time.time()-t0:.1f}s)")
+        if vacc > best[0]:
+            best = (vacc, jax.tree.map(lambda a: a.copy(), params), jax.tree.map(lambda a: a.copy(), state))
+    return best[1], best[2], best[0]
+
+
+def _eval_acc(eval_fn, params, x, y, bs):
+    correct = 0
+    for i in range(0, len(x), bs):
+        logits = eval_fn(params, x[i : i + bs])
+        correct += int(np.sum(np.argmax(np.array(logits), axis=1) == y[i : i + bs]))
+    return correct / len(x)
+
+
+def _save_params(path, params, state=None):
+    flat = {k: np.asarray(v) for k, v in params.items()}
+    if state is not None:
+        flat.update({f"state_{k}": np.asarray(v) for k, v in state.items()})
+    tensorio.save_tensors(path, flat)
+
+
+def load_params(path):
+    flat = tensorio.load_tensors(path)
+    params = {k: jnp.asarray(v) for k, v in flat.items() if not k.startswith("state_")}
+    state = {k[len("state_"):]: jnp.asarray(v) for k, v in flat.items() if k.startswith("state_")}
+    return params, (state or None)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--scheme", default=None, choices=["float", "none", "rgb", "gray", "lbp"])
+    ap.add_argument("--all-schemes", action="store_true")
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--n", type=int, default=data_mod.DATASET_SIZE, help="dataset size (reduce for smoke runs)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    print(f"rendering SynthVehicles n={args.n} ...", flush=True)
+    (x_train, y_train), (x_test, y_test) = data_mod.load_splits(args.n)
+    n_val = int(len(x_train) * VALID_FRACTION)
+    rng = np.random.default_rng(args.seed)
+    perm = rng.permutation(len(x_train))
+    val_idx, tr_idx = perm[:n_val], perm[n_val:]
+    x_val, y_val = x_train[val_idx], y_train[val_idx]
+    x_tr, y_tr = x_train[tr_idx], y_train[tr_idx]
+    print(f"train={len(x_tr)} val={len(x_val)} test={len(x_test)}")
+
+    schemes = ["float", "none", "rgb", "gray", "lbp"] if args.all_schemes else [args.scheme or "rgb"]
+    results = {}
+    if os.path.exists(os.path.join(args.out, "table3.json")):
+        results = json.load(open(os.path.join(args.out, "table3.json")))
+
+    for scheme in schemes:
+        print(f"=== training {scheme} ===", flush=True)
+        if scheme == "float":
+            params, vacc = train_float(x_tr, y_tr, x_val, y_val, args.epochs, args.batch_size, args.lr, args.seed)
+            eval_fn = jax.jit(lambda p, xb: model_mod.float_forward(p, xb))
+            tacc = _eval_acc(eval_fn, params, x_test, y_test, args.batch_size)
+            _save_params(os.path.join(args.out, "trained_float.bcnt"), params)
+        else:
+            params, state, vacc = train_bcnn(scheme, x_tr, y_tr, x_val, y_val, args.epochs, args.batch_size, args.lr, args.seed)
+
+            def eval_fn(bundle, xb, _s=scheme):
+                logits, _ = model_mod.bcnn_forward(bundle[0], bundle[1], xb, _s, train=False)
+                return logits
+
+            tacc = _eval_acc(jax.jit(eval_fn), (params, state), x_test, y_test, args.batch_size)
+            _save_params(os.path.join(args.out, f"trained_bcnn_{scheme}.bcnt"), params, state)
+        print(f"  -> val_acc={vacc:.4f} test_acc={tacc:.4f}")
+        results[scheme] = {"val_acc": vacc, "test_acc": tacc, "epochs": args.epochs, "n": args.n}
+        with open(os.path.join(args.out, "table3.json"), "w") as f:
+            json.dump(results, f, indent=2)
+    print(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main()

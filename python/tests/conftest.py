@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Run from anywhere: make `compile.*` importable.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,72 @@
+"""Input binarization schemes (paper Section 2.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import binarize_input as BI
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def image():
+    return jnp.asarray(D.render_vehicle(1).image)
+
+
+def test_threshold_rgb_outputs_pm1(image):
+    out = np.asarray(BI.threshold_rgb(image, jnp.array([-0.5, -0.5, -0.5])))
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+    assert out.shape == (96, 96, 3)
+
+
+def test_threshold_rgb_threshold_shifts_balance(image):
+    lo = np.asarray(BI.threshold_rgb(image, jnp.array([-0.1, -0.1, -0.1])))
+    hi = np.asarray(BI.threshold_rgb(image, jnp.array([-0.9, -0.9, -0.9])))
+    # a higher threshold (more negative T) fires fewer +1s
+    assert hi.sum() < lo.sum()
+
+
+def test_threshold_gray_single_channel(image):
+    out = np.asarray(BI.threshold_gray(image, jnp.array([-0.5])))
+    assert out.shape == (96, 96, 1)
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+
+
+def test_lbp_three_channels_pm1(image):
+    out = np.asarray(BI.lbp(image))
+    assert out.shape == (96, 96, 3)
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+
+
+def test_lbp_flat_image_all_minus_one():
+    flat = jnp.full((1, 8, 8, 3), 0.5)
+    out = np.asarray(BI.lbp(flat))
+    assert (out == -1.0).all()
+
+
+def test_lbp_detects_gradient():
+    # horizontal ramp: right neighbour (select index 3) always brighter
+    ramp = jnp.tile(jnp.linspace(0, 1, 8)[None, :, None], (8, 1, 3))
+    out = np.asarray(BI.lbp(ramp))
+    # channel 1 = neighbour (0,+1): +1 everywhere except the last column
+    assert (out[:, :-1, 1] == 1.0).all()
+    assert (out[:, -1, 1] == -1.0).all()
+
+
+def test_apply_scheme_dispatch(image):
+    params = {"input_t": jnp.array([-0.5, -0.5, -0.5])}
+    for scheme in BI.SCHEMES:
+        p = dict(params)
+        if scheme == "gray":
+            p["input_t"] = jnp.array([-0.5])
+        out, c = BI.apply_scheme(scheme, image, p)
+        assert c == BI.input_channels(scheme)
+        if scheme == "none":
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(image))
+        else:
+            assert set(np.unique(np.asarray(out))) <= {-1.0, 1.0}
+
+
+def test_unknown_scheme_raises(image):
+    with pytest.raises(ValueError):
+        BI.apply_scheme("bogus", image, {})

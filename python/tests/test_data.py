@@ -1,0 +1,75 @@
+"""SynthVehicles dataset invariants + augmentation protocol."""
+
+import numpy as np
+
+from compile import data as D
+
+
+def test_render_deterministic():
+    a = D.render_vehicle(5)
+    b = D.render_vehicle(5)
+    np.testing.assert_array_equal(a.image, b.image)
+    assert a.label == 5 % 4
+
+
+def test_render_range_and_shape():
+    s = D.render_vehicle(0)
+    assert s.image.shape == (96, 96, 3)
+    assert s.image.dtype == np.float32
+    assert s.image.min() >= 0.0 and s.image.max() <= 1.0
+
+
+def test_labels_balanced():
+    _, labels = D.generate(16)
+    assert [int(l) for l in labels] == [i % 4 for i in range(16)]
+
+
+def test_split_is_disjoint_and_complete():
+    tr, te = D.split_indices(200)
+    assert len(set(tr) & set(te)) == 0
+    assert len(tr) + len(te) == 200
+    assert len(te) == 20  # 10%
+
+
+def test_split_deterministic():
+    a = D.split_indices(100)
+    b = D.split_indices(100)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_augment_grows_by_flip_plus_blur():
+    images, labels = D.generate(40)
+    xa, ya = D.augment(images, labels)
+    assert len(xa) == len(ya)
+    assert len(xa) >= 2 * len(images)  # at least the flips
+    assert len(xa) <= 3 * len(images)
+    # the flipped block mirrors the originals
+    np.testing.assert_array_equal(xa[len(images)], images[0][:, ::-1, :])
+
+
+def test_gaussian_blur_preserves_mean_and_smooths():
+    rng = np.random.default_rng(0)
+    img = rng.random((96, 96, 3)).astype(np.float32)
+    blurred = D.gaussian_blur_05(img)
+    assert blurred.shape == img.shape
+    assert abs(float(img.mean()) - float(blurred.mean())) < 1e-3
+    # smoothing reduces total variation
+    tv = lambda x: float(np.abs(np.diff(x, axis=0)).mean() + np.abs(np.diff(x, axis=1)).mean())
+    assert tv(blurred) < tv(img)
+
+
+def test_splitmix_matches_rust_reference_vector():
+    # same vector asserted in rust/src/util/rng.rs — keeps the two
+    # implementations in lock-step
+    out = D._splitmix64_stream(0, 3)
+    assert out[0] == 0xE220A8397B1DCDAF
+    assert out[1] == 0x6E789E6AA1B965F4
+    assert out[2] == 0x06C45D188009454F
+
+
+def test_classes_have_distinct_statistics():
+    mean_of = lambda lbl: np.mean(
+        [D.render_vehicle(i).image.mean() for i in range(40) if i % 4 == lbl]
+    )
+    assert abs(mean_of(2) - mean_of(1)) > 0.01  # truck vs car

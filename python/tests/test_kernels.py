@@ -1,0 +1,182 @@
+"""Pallas kernels vs the pure-jnp oracles in ref.py — the core L1
+correctness signal.  hypothesis sweeps shapes/bitwidths; every comparison
+is exact (bit-level), not allclose, because the binarized pipeline is
+integer arithmetic end to end."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import bgemm, fc_packed, im2col_pack, maxpool, ref, sign_pack
+
+
+# ---------------------------------------------------------------------------
+# sign_pack
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 40),
+    st.sampled_from([3, 32, 75, 100]),
+    st.sampled_from([8, 25, 32]),
+    st.integers(0, 2**31),
+)
+def test_sign_pack_matches_ref(n, d, b, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    got = np.asarray(sign_pack.sign_pack(jnp.asarray(x), b=b, block_rows=16))
+    want = np.asarray(ref.pack_bits(ref.pm1_to_bits(ref.sign_pm1(jnp.asarray(x))), b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_sign_pack_zero_input_packs_to_zero():
+    # sign(0) = -1 -> bit 0 everywhere
+    out = np.asarray(sign_pack.sign_pack(jnp.zeros((4, 64)), b=32))
+    assert (out == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# im2col_pack (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([(8, 8, 3), (12, 8, 1), (8, 12, 32), (16, 16, 4)]),
+    st.sampled_from([3, 5]),
+    st.sampled_from([25, 32]),
+    st.integers(0, 2**31),
+)
+def test_im2col_pack_matches_ref(hwc, k, b, seed):
+    h, w, c = hwc
+    rng = np.random.default_rng(seed)
+    x = np.where(rng.standard_normal((h, w, c)) > 0, 1.0, -1.0).astype(np.float32)
+    got = np.asarray(im2col_pack.im2col_pack(jnp.asarray(x), k=k, b=b, s=2))
+    want = np.asarray(ref.im2col_pack(jnp.asarray(x), k, b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_im2col_pack_paper_shape():
+    # the paper's first layer: (96,96,3), K=5 -> 9216 x ceil(75/32)
+    x = jnp.ones((96, 96, 3), jnp.float32)
+    out = im2col_pack.im2col_pack(x, k=5, b=32)
+    assert out.shape == (9216, 3)
+
+
+def test_im2col_border_packs_padding_as_minus_one():
+    # all-(+1) image: interior patches = all ones; the top-left corner
+    # patch must contain 0-bits exactly at the halo positions
+    x = jnp.ones((8, 8, 1), jnp.float32)
+    out = np.asarray(im2col_pack.im2col_pack(x, k=3, b=32))
+    corner_bits = np.asarray(ref.unpack_bits(jnp.asarray(out[0:1]), 9, 32))[0]
+    np.testing.assert_array_equal(corner_bits, [0, 0, 0, 0, 1, 1, 0, 1, 1])
+
+
+# ---------------------------------------------------------------------------
+# bgemm (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(1, 100),
+    st.sampled_from([1, 8, 32]),
+    st.sampled_from([25, 75, 128, 800]),
+    st.integers(0, 2**31),
+)
+def test_bgemm_matches_ref(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    ab = rng.integers(0, 2, (m, d)).astype(np.uint32)
+    wb = rng.integers(0, 2, (n, d)).astype(np.uint32)
+    ap = ref.pack_bits(jnp.asarray(ab), 32)
+    wp = ref.pack_bits(jnp.asarray(wb), 32)
+    got = np.asarray(bgemm.bgemm(ap, wp, d, bm=64, bn=16))
+    want = np.asarray(ref.packed_matmul(ap, wp, d))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bgemm_conv_equivalence():
+    # packed conv == ±1 integer conv (DESIGN invariant)
+    rng = np.random.default_rng(7)
+    x = np.where(rng.standard_normal((16, 16, 3)) > 0, 1.0, -1.0).astype(np.float32)
+    w = np.where(rng.standard_normal((8, 5, 5, 3)) > 0, 1.0, -1.0).astype(np.float32)
+    packed = np.asarray(ref.conv2d_packed(jnp.asarray(x), jnp.asarray(w)))
+    direct = np.asarray(ref.conv2d_pm1(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(packed, direct.astype(np.int32))
+
+
+def test_fgemm_matches_matmul():
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((50, 75)).astype(np.float32)
+    w = rng.standard_normal((32, 75)).astype(np.float32)
+    got = np.asarray(bgemm.fgemm(jnp.asarray(a), jnp.asarray(w), bm=16, bn=16))
+    np.testing.assert_allclose(got, a @ w.T, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(8, 8, 5), (16, 4, 2), (4, 16, 32)]), st.integers(0, 2**31))
+def test_maxpool_matches_ref(hwc, seed):
+    h, w, c = hwc
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((h, w, c)).astype(np.float32)
+    got = np.asarray(maxpool.maxpool2x2(jnp.asarray(x), block_rows=2))
+    want = np.asarray(ref.maxpool2x2(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(8, 8, 1), (16, 8, 3)]), st.integers(0, 2**31))
+def test_orpool_matches_ref(hwn, seed):
+    h, w, nw = hwn
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2**32, (h, w, nw), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(maxpool.orpool2x2(jnp.asarray(words), block_rows=2))
+    want = np.asarray(ref.orpool2x2_packed(jnp.asarray(words)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_orpool_equals_sign_of_maxpool():
+    # sign monotonicity: or(sign(x)) == sign(max(x)) channel-wise
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((8, 8, 32)).astype(np.float32)
+    bits = ref.pm1_to_bits(ref.sign_pm1(jnp.asarray(x)))
+    words = ref.pack_bits(bits, 32)  # (8,8,1)
+    a = np.asarray(ref.orpool2x2_packed(words))
+    pooled = ref.maxpool2x2(jnp.asarray(x))
+    b = np.asarray(ref.pack_bits(ref.pm1_to_bits(ref.sign_pm1(pooled)), 32))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fc_packed (Section 3.2)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 120), st.sampled_from([64, 576, 1024]), st.integers(0, 2**31))
+def test_fc_packed_matches_ref(l, kw, seed):
+    rng = np.random.default_rng(seed)
+    d = kw * 32
+    x = rng.integers(0, 2**32, kw, dtype=np.uint64).astype(np.uint32)
+    w = rng.integers(0, 2**32, (l, kw), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(fc_packed.fc_packed(jnp.asarray(x), jnp.asarray(w), d))
+    want = np.asarray(ref.fc_packed(jnp.asarray(x), jnp.asarray(w), d))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fc_packed_segment_padding():
+    # KW not a multiple of 64 segments exercises the zero-pad path
+    rng = np.random.default_rng(5)
+    kw, l, d = 18, 7, 18 * 32
+    x = rng.integers(0, 2**32, kw, dtype=np.uint64).astype(np.uint32)
+    w = rng.integers(0, 2**32, (l, kw), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(fc_packed.fc_packed(jnp.asarray(x), jnp.asarray(w), d))
+    want = np.asarray(ref.fc_packed(jnp.asarray(x), jnp.asarray(w), d))
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,158 @@
+"""Model-level invariants: ref vs Pallas inference equality, BN folding,
+export shapes, training-graph vs folded-inference agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as data_mod
+from compile import model as M
+from compile.kernels import ref
+
+SCHEMES = ("none", "rgb", "gray", "lbp")
+
+
+def _random_net(scheme, seed=0, perturb_state=True):
+    params = M.init_bcnn_params(jax.random.PRNGKey(seed), scheme)
+    state = M.init_bn_state()
+    if perturb_state:
+        state = {
+            k: (v + 0.37 if "mean" in k else v * 1.9 + 0.1) for k, v in state.items()
+        }
+    return params, state
+
+
+@pytest.fixture(scope="module")
+def image():
+    return jnp.asarray(data_mod.render_vehicle(3).image)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_ref_equals_pallas_inference(scheme, image):
+    params, state = _random_net(scheme)
+    iw = M.export_inference_weights(params, state, scheme)
+    iwj = {k: jnp.asarray(v) for k, v in iw.items()}
+    a = np.asarray(M.bcnn_infer_ref(iwj, image, scheme))
+    b = np.asarray(M.bcnn_infer_pallas(iwj, image, scheme))
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_batched_ref_matches_single(scheme):
+    params, state = _random_net(scheme, seed=4)
+    iw = {k: jnp.asarray(v) for k, v in M.export_inference_weights(params, state, scheme).items()}
+    xs = jnp.asarray(np.stack([data_mod.render_vehicle(i).image for i in range(3)]))
+    batched = np.asarray(M.bcnn_infer_ref_batch(iw, xs, scheme))
+    for i in range(3):
+        single = np.asarray(M.bcnn_infer_ref(iw, xs[i], scheme))
+        # the binarized pipeline is bit-identical; the float fc tail may
+        # round differently under vmap (batched matmul association)
+        np.testing.assert_allclose(batched[i], single, atol=1e-5, rtol=1e-5)
+        assert int(np.argmax(batched[i])) == int(np.argmax(single))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_train_graph_agrees_with_folded_inference(scheme, image):
+    # eval-mode training graph and the folded/packed inference pipeline
+    # implement the same function (up to sign-boundary float ties, which
+    # the random init makes measure-zero)
+    params, state = _random_net(scheme, seed=9)
+    logits_train, _ = M.bcnn_forward(params, state, image[None], scheme, train=False)
+    iw = {k: jnp.asarray(v) for k, v in M.export_inference_weights(params, state, scheme).items()}
+    logits_inf = M.bcnn_infer_ref(iw, image, scheme)
+    assert int(jnp.argmax(logits_train[0])) == int(jnp.argmax(logits_inf))
+    np.testing.assert_allclose(np.asarray(logits_train)[0], np.asarray(logits_inf), atol=1e-4)
+
+
+def test_export_shapes_rgb():
+    params, state = _random_net("rgb")
+    iw = M.export_inference_weights(params, state, "rgb")
+    assert iw["w1_packed"].shape == (32, 3)  # ceil(75/32)
+    assert iw["w2_packed"].shape == (32, 25)
+    assert iw["wfc1_packed"].shape == (100, 576)
+    assert iw["theta1"].shape == (32,)
+    assert iw["input_t"].shape == (3,)
+
+
+def test_export_shapes_gray():
+    params, state = _random_net("gray")
+    iw = M.export_inference_weights(params, state, "gray")
+    assert iw["w1_packed"].shape == (32, 1)  # ceil(25/32)
+    assert iw["input_t"].shape == (1,)
+
+
+def test_bn_fold_threshold_semantics():
+    gamma = jnp.array([2.0, -1.5, 0.0, 0.0])
+    beta = jnp.array([1.0, 0.5, 3.0, -2.0])
+    mean = jnp.array([10.0, -4.0, 0.0, 0.0])
+    var = jnp.array([4.0, 1.0, 1.0, 1.0])
+    theta, flip = ref.fold_bn_to_threshold(gamma, beta, mean, var, eps=0.0)
+    y = jnp.array([[12.0, -3.0, 123.0, -123.0]])
+    bits = np.asarray(ref.threshold_sign(y, theta, flip))[0]
+    # direct check: sign(gamma*(y-mean)/std + beta) > 0
+    direct = (gamma * (y[0] - mean) / jnp.sqrt(var) + beta) > 0
+    np.testing.assert_array_equal(bits.astype(bool), np.asarray(direct))
+
+
+def test_bn_fold_random_agreement():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        gamma = rng.standard_normal(8).astype(np.float32)
+        beta = rng.standard_normal(8).astype(np.float32)
+        mean = rng.standard_normal(8).astype(np.float32) * 10
+        var = rng.random(8).astype(np.float32) + 0.1
+        y = rng.standard_normal((5, 8)).astype(np.float32) * 20
+        theta, flip = ref.fold_bn_to_threshold(
+            jnp.asarray(gamma), jnp.asarray(beta), jnp.asarray(mean), jnp.asarray(var), eps=0.0
+        )
+        bits = np.asarray(ref.threshold_sign(jnp.asarray(y), theta, flip))
+        z = gamma * (y - mean) / np.sqrt(var) + beta
+        np.testing.assert_array_equal(bits, (z > 0).astype(np.uint32))
+
+
+def test_float_forward_shapes_and_finiteness():
+    params = M.init_float_params(jax.random.PRNGKey(1))
+    xs = jnp.asarray(np.stack([data_mod.render_vehicle(i).image for i in range(2)]))
+    logits = M.float_forward(params, xs)
+    assert logits.shape == (2, 4)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_ste_sign_gradient_is_identity():
+    g = jax.grad(lambda x: M.ste_sign(x).sum())(jnp.array([-2.0, 0.5, 3.0]))
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 1.0])
+
+
+def test_ste_sign_clip_gradient_masks_saturated():
+    g = jax.grad(lambda x: M.ste_sign_clip(x).sum())(jnp.array([-2.0, 0.5, 3.0]))
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 0.0])
+
+
+def test_training_step_reduces_loss_smoke():
+    # tiny BCNN training smoke test: loss decreases on a fixed batch
+    from compile import optimizers
+
+    scheme = "rgb"
+    params, state = _random_net(scheme, perturb_state=False)
+    opt = optimizers.adam(1e-2)
+    opt_state = opt.init(params)
+    xs = jnp.asarray(np.stack([data_mod.render_vehicle(i).image for i in range(16)]))
+    ys = jnp.asarray(np.array([i % 4 for i in range(16)], dtype=np.int32))
+
+    def loss_fn(p, s):
+        logits, ns = M.bcnn_forward(p, s, xs, scheme, train=True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, ys[:, None], axis=1)), ns
+
+    @jax.jit
+    def step(p, s, o):
+        (loss, ns), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, s)
+        p, o = opt.update(grads, o, p)
+        return p, ns, o, loss
+
+    losses = []
+    for _ in range(8):
+        params, state, opt_state, loss = step(params, state, opt_state)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"

@@ -1,0 +1,84 @@
+"""Bit-level invariants of the packing scheme (paper Eq. 2 + Eq. 4),
+property-tested with hypothesis against brute-force references."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+@st.composite
+def bits_and_width(draw, max_d=512):
+    d = draw(st.integers(1, max_d))
+    b = draw(st.sampled_from([1, 7, 8, 16, 25, 31, 32]))
+    bits = draw(st.lists(st.integers(0, 1), min_size=d, max_size=d))
+    return np.array(bits, dtype=np.uint32), b
+
+
+@settings(max_examples=80, deadline=None)
+@given(bits_and_width())
+def test_unpack_inverts_pack(case):
+    bits, b = case
+    packed = ref.pack_bits(jnp.asarray(bits), b)
+    assert packed.shape[-1] == ref.packed_width(len(bits), b)
+    got = np.asarray(ref.unpack_bits(packed, len(bits), b))
+    np.testing.assert_array_equal(got, bits)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 400), st.sampled_from([8, 16, 25, 32]), st.integers(0, 2**32 - 1))
+def test_packed_dot_matches_pm1_dot(d, b, seed):
+    rng = np.random.default_rng(seed)
+    xa = rng.integers(0, 2, d).astype(np.uint32)
+    xb = rng.integers(0, 2, d).astype(np.uint32)
+    pa = ref.pack_bits(jnp.asarray(xa), b)
+    pb = ref.pack_bits(jnp.asarray(xb), b)
+    got = int(ref.packed_dot(pa, pb, d))
+    want = int(np.sum((xa.astype(np.int64) * 2 - 1) * (xb.astype(np.int64) * 2 - 1)))
+    assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2**32 - 1))
+def test_packed_dot_bounds_and_parity(d, seed):
+    rng = np.random.default_rng(seed)
+    pa = ref.pack_bits(jnp.asarray(rng.integers(0, 2, d).astype(np.uint32)), 32)
+    pb = ref.pack_bits(jnp.asarray(rng.integers(0, 2, d).astype(np.uint32)), 32)
+    dot = int(ref.packed_dot(pa, pb, d))
+    assert abs(dot) <= d
+    assert (dot + d) % 2 == 0
+
+
+def test_eq2_example_msb_first():
+    # element 0 occupies the highest bit of the word
+    w = np.asarray(ref.pack_bits(jnp.array([[1, 0, 1, 1]], dtype=jnp.uint32), 4))
+    assert w.tolist() == [[0b1011]]
+    w = np.asarray(ref.pack_bits(jnp.array([[1, 0, 0]], dtype=jnp.uint32), 32))
+    assert w.tolist() == [[0b100 << 29]]
+
+
+def test_tail_bits_are_zero():
+    w = np.asarray(ref.pack_bits(jnp.ones((1, 3), dtype=jnp.uint32), 32))
+    assert w[0, 0] == 0b111 << 29
+
+
+def test_sign_of_zero_is_minus_one():
+    out = np.asarray(ref.sign_pm1(jnp.array([-1.0, 0.0, 1e-9, 2.0])))
+    np.testing.assert_array_equal(out, [-1.0, -1.0, 1.0, 1.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 6), st.integers(0, 2**31))
+def test_packed_matmul_matches_rowwise_dot(d, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, (5, d)).astype(np.uint32)
+    w = rng.integers(0, 2, (n, d)).astype(np.uint32)
+    pa = ref.pack_bits(jnp.asarray(a), 32)
+    pw = ref.pack_bits(jnp.asarray(w), 32)
+    got = np.asarray(ref.packed_matmul(pa, pw, d))
+    for i in range(5):
+        for j in range(n):
+            want = int(ref.packed_dot(pa[i], pw[j], d))
+            assert got[i, j] == want

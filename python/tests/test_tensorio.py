@@ -1,0 +1,57 @@
+"""BCNT container round-trips + the exact byte layout Rust parses."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import tensorio
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bcnt")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([0, 1, 2**32 - 1], dtype=np.uint32),
+        "c": np.array([-5], dtype=np.int32),
+        "d": np.array(3.5, dtype=np.float32),  # scalar
+    }
+    tensorio.save_tensors(path, tensors)
+    out = tensorio.load_tensors(path)
+    assert list(out.keys()) == list(tensors.keys())
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].dtype == tensors[k].dtype
+
+
+def test_byte_layout_is_stable(tmp_path):
+    # Freeze the exact header layout the Rust reader implements.
+    path = str(tmp_path / "l.bcnt")
+    tensorio.save_tensors(path, {"ab": np.array([7], dtype=np.uint32)})
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"BCNT"
+    version, count = struct.unpack("<II", raw[4:12])
+    assert (version, count) == (1, 1)
+    (name_len,) = struct.unpack("<I", raw[12:16])
+    assert name_len == 2
+    assert raw[16:18] == b"ab"
+    dtype_code, ndim = struct.unpack("<II", raw[18:26])
+    assert (dtype_code, ndim) == (2, 1)  # u32, 1-d
+    (dim0,) = struct.unpack("<Q", raw[26:34])
+    assert dim0 == 1
+    (value,) = struct.unpack("<I", raw[34:38])
+    assert value == 7
+
+
+def test_rejects_bad_magic(tmp_path):
+    path = tmp_path / "bad.bcnt"
+    path.write_bytes(b"XXXX" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        tensorio.load_tensors(str(path))
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        tensorio.save_tensors(
+            str(tmp_path / "f64.bcnt"), {"x": np.array([1.0], dtype=np.float64)}
+        )

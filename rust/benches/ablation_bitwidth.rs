@@ -1,0 +1,52 @@
+//! Ablation E5 — packing bitwidth B (paper Section 2.4 / 3.1).
+//!
+//! The paper packs B = 25 bits per word for the 5x5 patches (one word
+//! per channel); B = 32 packs the flattened patch densely.  Sweep B over
+//! {8, 16, 25, 32} on the conv1 and conv2 GEMMs: smaller B means more
+//! words per patch (ceil(D/B)) and proportionally more xor+popcounts.
+//!
+//!     cargo bench --bench ablation_bitwidth
+
+use bcnn::bnn::{bgemm, im2col, packing};
+use bcnn::util::rng::Xoshiro256;
+use bcnn::util::timer::{bench_for, fmt_ns};
+use std::time::Duration;
+
+const MIN_TIME: Duration = Duration::from_millis(300);
+
+fn main() {
+    let mut rng = Xoshiro256::new(42);
+    let img: Vec<f32> = (0..96 * 96 * 3).map(|_| rng.next_pm1()).collect();
+    let act2: Vec<f32> = (0..48 * 48 * 32).map(|_| rng.next_pm1()).collect();
+
+    println!("Ablation E5 — packing bitwidth (conv GEMM + fused im2col+pack)\n");
+    println!(
+        "{:<8}{:>8}{:>8}{:>14}{:>14}{:>14}",
+        "B", "KW1", "KW2", "pack1", "bgemm1", "bgemm2"
+    );
+    for b in [8usize, 16, 25, 32] {
+        let kw1 = packing::packed_width(75, b);
+        let kw2 = packing::packed_width(800, b);
+        let cols1 = im2col::im2col_pack(&img, 96, 96, 3, 5, b);
+        let cols2 = im2col::im2col_pack(&act2, 48, 48, 32, 5, b);
+        let w1: Vec<u32> = (0..32 * kw1).map(|_| rng.next_u32()).collect();
+        let w2: Vec<u32> = (0..32 * kw2).map(|_| rng.next_u32()).collect();
+        // mask washes out: identical layouts on both operands, results
+        // are layout-independent (asserted in bgemm unit tests)
+        let pack = bench_for(MIN_TIME, 10, || im2col::im2col_pack(&img, 96, 96, 3, 5, b));
+        let g1 = bench_for(MIN_TIME, 10, || bgemm::bgemm_bitwidth(&cols1, &w1, 9216, 32, kw1, 75));
+        let g2 = bench_for(MIN_TIME, 10, || bgemm::bgemm_bitwidth(&cols2, &w2, 2304, 32, kw2, 800));
+        println!(
+            "{:<8}{:>8}{:>8}{:>14}{:>14}{:>14}",
+            b,
+            kw1,
+            kw2,
+            fmt_ns(pack.mean_ns),
+            fmt_ns(g1.mean_ns),
+            fmt_ns(g2.mean_ns)
+        );
+    }
+    println!("\nexpected shape: bgemm cost scales with ceil(D/B); B=25 and B=32 tie for");
+    println!("conv1 (both 3 words) while B=32 wins for conv2 (25 vs 32 words — the");
+    println!("paper's per-channel B=25 layout trades density for indexing simplicity.");
+}

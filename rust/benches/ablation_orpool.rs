@@ -1,0 +1,66 @@
+//! Ablation E8 — pooling domain (our TPU/CPU adaptation, DESIGN.md §3).
+//!
+//! The paper pools in the float domain; because sign is monotone,
+//! pooling AFTER binarization is a bitwise OR over packed words — 32
+//! channels per instruction.  Compare:
+//!   a. float max-pool of the (H,W,32) activation, then threshold+pack;
+//!   b. threshold+pack first, then packed OR-pool.
+//!
+//!     cargo bench --bench ablation_orpool
+
+use bcnn::bnn::{maxpool, packing};
+use bcnn::util::rng::Xoshiro256;
+use bcnn::util::timer::{bench_for, fmt_ns};
+use std::time::Duration;
+
+const MIN_TIME: Duration = Duration::from_millis(400);
+
+fn threshold_pack(counts: &[f32], pixels: usize) -> Vec<u32> {
+    let mut out = vec![0u32; pixels];
+    for px in 0..pixels {
+        let mut w = 0u32;
+        for ch in 0..32 {
+            w |= packing::threshold_bit(counts[px * 32 + ch], 0.0, 0) << (31 - ch);
+        }
+        out[px] = w;
+    }
+    out
+}
+
+fn main() {
+    let mut rng = Xoshiro256::new(5);
+    println!("Ablation E8 — pool-then-binarize vs binarize-then-OR-pool\n");
+    println!(
+        "{:<18}{:>16}{:>16}{:>10}",
+        "shape", "float-pool path", "OR-pool path", "OR-x"
+    );
+    for (h, w) in [(96usize, 96usize), (48, 48)] {
+        let counts: Vec<f32> = (0..h * w * 32).map(|_| rng.next_normal_f32() * 20.0).collect();
+        // path a: float max-pool then threshold+pack
+        let a = bench_for(MIN_TIME, 10, || {
+            let pooled = maxpool::maxpool2x2(&counts, h, w, 32);
+            threshold_pack(&pooled, h * w / 4)
+        });
+        // path b: threshold+pack then OR-pool
+        let b = bench_for(MIN_TIME, 10, || {
+            let words = threshold_pack(&counts, h * w);
+            maxpool::orpool2x2(&words, h, w, 1)
+        });
+        // pure pooling-stage comparison (packing cost excluded)
+        let words: Vec<u32> = (0..h * w).map(|_| rng.next_u32()).collect();
+        let pool_f = bench_for(MIN_TIME, 10, || maxpool::maxpool2x2(&counts, h, w, 32));
+        let pool_or = bench_for(MIN_TIME, 10, || maxpool::orpool2x2(&words, h, w, 1));
+        println!(
+            "{:<18}{:>16}{:>16}{:>9.2}x   (pool stage alone: {} vs {}, {:.1}x)",
+            format!("({h},{w},32)"),
+            fmt_ns(a.mean_ns),
+            fmt_ns(b.mean_ns),
+            a.mean_ns / b.mean_ns,
+            fmt_ns(pool_f.mean_ns),
+            fmt_ns(pool_or.mean_ns),
+            pool_f.mean_ns / pool_or.mean_ns,
+        );
+    }
+    println!("\n(identical bits either way — asserted by property tests; the OR-pool");
+    println!(" touches 32x fewer bytes, which is the whole point)");
+}

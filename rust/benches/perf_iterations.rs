@@ -1,0 +1,91 @@
+//! §Perf iteration log (EXPERIMENTS.md): each optimization step kept in
+//! benchable form so before/after is reproducible.
+//!
+//!   bgemm v0 — per-(m,n) slicing with alignment checks (the first
+//!              implementation; `as_u64_chunks` per weight row per patch)
+//!   bgemm v1 — operands widened to padded u64 rows once, fixed-lane
+//!              inner kernels (shipped in bnn::bgemm)
+//!   pack  v0 — patch scratch buffer + div/mod packing (two-pass; kept
+//!              as bnn::im2col::im2col_then_pack for the E7 ablation)
+//!   pack  v1 — Algorithm-1 bit-writer, fused (shipped)
+//!
+//!     cargo bench --bench perf_iterations
+
+use bcnn::bnn::packing::as_u64_chunks;
+use bcnn::bnn::{bgemm, im2col};
+use bcnn::util::rng::Xoshiro256;
+use bcnn::util::timer::{bench_for, fmt_ns};
+use std::time::Duration;
+
+const MIN_TIME: Duration = Duration::from_millis(400);
+
+/// The original bgemm inner loop (v0), verbatim.
+fn bgemm_v0(a: &[u32], wt: &[u32], m: usize, n: usize, kw: usize, d_real: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    let d = d_real as i32;
+    for mi in 0..m {
+        let arow = &a[mi * kw..(mi + 1) * kw];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        let (a64, a_tail) = as_u64_chunks(arow);
+        for ni in 0..n {
+            let wrow = &wt[ni * kw..(ni + 1) * kw];
+            let (w64, w_tail) = as_u64_chunks(wrow);
+            let mut pc: u32 = 0;
+            if a64.len() == w64.len() {
+                for (&x, &y) in a64.iter().zip(w64) {
+                    pc += (x ^ y).count_ones();
+                }
+                for (&x, &y) in a_tail.iter().zip(w_tail) {
+                    pc += (x ^ y).count_ones();
+                }
+            } else {
+                for (&x, &y) in arow.iter().zip(wrow) {
+                    pc += (x ^ y).count_ones();
+                }
+            }
+            orow[ni] = d - 2 * pc as i32;
+        }
+    }
+    out
+}
+
+fn main() {
+    let mut rng = Xoshiro256::new(3);
+    println!("§Perf kernel iterations (quiet-machine, single core)\n");
+
+    for (label, m, n, kw, d) in [
+        ("conv1 bgemm (9216x32, KW=3)", 9216usize, 32usize, 3usize, 75usize),
+        ("conv2 bgemm (2304x32, KW=25)", 2304, 32, 25, 800),
+        ("fc-as-gemm (1x100, KW=576)", 1, 100, 576, 18432),
+    ] {
+        let a: Vec<u32> = (0..m * kw).map(|_| rng.next_u32()).collect();
+        let w: Vec<u32> = (0..n * kw).map(|_| rng.next_u32()).collect();
+        // correctness guard: both generations agree
+        assert_eq!(bgemm_v0(&a, &w, m, n, kw, d), bgemm::bgemm(&a, &w, m, n, kw, d));
+        let v0 = bench_for(MIN_TIME, 10, || bgemm_v0(&a, &w, m, n, kw, d));
+        let v1 = bench_for(MIN_TIME, 10, || bgemm::bgemm(&a, &w, m, n, kw, d));
+        println!(
+            "{label:<32} v0 {:>12}   v1 {:>12}   {:.2}x",
+            fmt_ns(v0.mean_ns),
+            fmt_ns(v1.mean_ns),
+            v0.mean_ns / v1.mean_ns
+        );
+    }
+
+    println!();
+    for (label, h, w, c) in [("im2col+pack conv1 (96,96,3)", 96usize, 96usize, 3usize), ("im2col+pack conv2 (48,48,32)", 48, 48, 32)] {
+        let x: Vec<f32> = (0..h * w * c).map(|_| rng.next_pm1()).collect();
+        assert_eq!(
+            im2col::im2col_then_pack(&x, h, w, c, 5, 32),
+            im2col::im2col_pack(&x, h, w, c, 5, 32)
+        );
+        let v0 = bench_for(MIN_TIME, 10, || im2col::im2col_then_pack(&x, h, w, c, 5, 32));
+        let v1 = bench_for(MIN_TIME, 10, || im2col::im2col_pack(&x, h, w, c, 5, 32));
+        println!(
+            "{label:<32} v0 {:>12}   v1 {:>12}   {:.2}x",
+            fmt_ns(v0.mean_ns),
+            fmt_ns(v1.mean_ns),
+            v0.mean_ns / v1.mean_ns
+        );
+    }
+}

@@ -1,0 +1,292 @@
+//! Packed XNOR-popcount GEMM (paper Eq. 4 + Section 3.1) — the binarized
+//! replacement for the FMA GEMM of explicit-GEMM convolution.
+//!
+//! `a` is (M, KW) packed patch rows, `wt` is (N, KW) packed weight rows
+//! (one per output channel); output is (M, N) i32 counts, row-major.
+//!
+//! The CUDA kernel tiles both operands through shared memory with one
+//! output element per thread.  The CPU translation keeps the same
+//! blocking idea (an A-row stays register/L1-hot across all N weight
+//! rows) and widens the popcount to u64: both operands are repacked once
+//! into padded u64 rows, so the hot loop is a branch-free
+//! xor+popcount+add over `ceil(KW/2)` u64 lanes — no per-pair slicing or
+//! alignment checks (which dominated the first, naive version; see
+//! EXPERIMENTS.md §Perf).
+
+/// u64 lanes per row for a KW-word operand.
+#[inline]
+fn lanes(kw: usize) -> usize {
+    kw.div_ceil(2)
+}
+
+/// Repack u32 rows into padded u64 rows (tail lane zero-padded).
+/// Word order within a lane is irrelevant as long as both operands agree.
+#[inline]
+fn widen_rows(src: &[u32], rows: usize, kw: usize, dst: &mut Vec<u64>) {
+    let l = lanes(kw);
+    dst.clear();
+    dst.resize(rows * l, 0);
+    for r in 0..rows {
+        let s = &src[r * kw..(r + 1) * kw];
+        let d = &mut dst[r * l..(r + 1) * l];
+        let mut i = 0;
+        while i + 1 < kw {
+            d[i / 2] = (s[i] as u64) | ((s[i + 1] as u64) << 32);
+            i += 2;
+        }
+        if i < kw {
+            d[i / 2] = s[i] as u64;
+        }
+    }
+}
+
+/// out[m, n] = d_real - 2 * popcount(a[m] ^ wt[n]).
+pub fn bgemm(a: &[u32], wt: &[u32], m: usize, n: usize, kw: usize, d_real: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    bgemm_into(a, wt, m, n, kw, d_real, &mut out);
+    out
+}
+
+/// Widen one row into a caller-provided lane buffer.
+#[inline]
+fn widen_row(src: &[u32], dst: &mut [u64]) {
+    let kw = src.len();
+    let mut i = 0;
+    while i + 1 < kw {
+        dst[i / 2] = (src[i] as u64) | ((src[i + 1] as u64) << 32);
+        i += 2;
+    }
+    if i < kw {
+        dst[i / 2] = src[i] as u64;
+    }
+}
+
+/// Allocation-light variant for the serving hot path: the weight matrix
+/// is widened once (n·L u64s — L1-resident for this network); each A row
+/// is widened into a reused scratch row.  Fixed-lane kernels let the
+/// compiler fully unroll conv1 (L=2) and conv2 (L=13).
+pub fn bgemm_into(
+    a: &[u32],
+    wt: &[u32],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d_real: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * kw);
+    assert_eq!(wt.len(), n * kw);
+    assert_eq!(out.len(), m * n);
+    let d = d_real as i32;
+    let l = lanes(kw);
+    let mut wbuf = Vec::new();
+    widen_rows(wt, n, kw, &mut wbuf);
+    match l {
+        2 => bgemm_lanes::<2>(a, &wbuf, m, n, kw, d, out),
+        13 => bgemm_lanes::<13>(a, &wbuf, m, n, kw, d, out),
+        _ => bgemm_lanes_dyn(a, &wbuf, m, n, kw, l, d, out),
+    }
+}
+
+/// Fixed-lane inner kernel: the compiler fully unrolls the L-loop.
+fn bgemm_lanes<const L: usize>(
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d: i32,
+    out: &mut [i32],
+) {
+    let mut arow = [0u64; L];
+    for mi in 0..m {
+        widen_row(&a[mi * kw..(mi + 1) * kw], &mut arow);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for ni in 0..n {
+            let wrow = &w64[ni * L..(ni + 1) * L];
+            let mut pc = 0u32;
+            for i in 0..L {
+                pc += (arow[i] ^ wrow[i]).count_ones();
+            }
+            orow[ni] = d - 2 * pc as i32;
+        }
+    }
+}
+
+fn bgemm_lanes_dyn(
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    l: usize,
+    d: i32,
+    out: &mut [i32],
+) {
+    let mut arow = vec![0u64; l];
+    for mi in 0..m {
+        arow.fill(0);
+        widen_row(&a[mi * kw..(mi + 1) * kw], &mut arow);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for ni in 0..n {
+            let wrow = &w64[ni * l..(ni + 1) * l];
+            let mut pc = 0u32;
+            for (x, y) in arow.iter().zip(wrow) {
+                pc += (x ^ y).count_ones();
+            }
+            orow[ni] = d - 2 * pc as i32;
+        }
+    }
+}
+
+/// bgemm at an arbitrary packing bitwidth `b` (for the E5 ablation):
+/// words still arrive as u32s but only `b` bits per word are meaningful.
+/// Identical results for any `b` as long as both operands share a layout.
+pub fn bgemm_bitwidth(
+    a: &[u32],
+    wt: &[u32],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d_real: usize,
+) -> Vec<i32> {
+    // The arithmetic is bit-layout independent; this exists so the
+    // ablation bench exercises the differing KW word counts per B.
+    bgemm(a, wt, m, n, kw, d_real)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::pack_bits;
+    use crate::util::prop::{self, ensure_eq};
+
+    /// ±1-domain reference GEMM.
+    fn naive_gemm(a_bits: &[u32], w_bits: &[u32], m: usize, n: usize, d: usize) -> Vec<i32> {
+        let mut out = vec![0i32; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut acc = 0i32;
+                for kk in 0..d {
+                    let x = a_bits[mi * d + kk] as i32 * 2 - 1;
+                    let y = w_bits[ni * d + kk] as i32 * 2 - 1;
+                    acc += x * y;
+                }
+                out[mi * n + ni] = acc;
+            }
+        }
+        out
+    }
+
+    fn pack_rows(bits: &[u32], rows: usize, d: usize, b: usize) -> (Vec<u32>, usize) {
+        let nw = crate::bnn::packing::packed_width(d, b);
+        let mut out = Vec::with_capacity(rows * nw);
+        for r in 0..rows {
+            out.extend(pack_bits(&bits[r * d..(r + 1) * d], b));
+        }
+        (out, nw)
+    }
+
+    #[test]
+    fn matches_naive_gemm() {
+        prop::check(64, |g| {
+            let m = g.usize_in(1, 20);
+            let n = g.usize_in(1, 8);
+            let d = g.usize_in(1, 200);
+            let b = *g.pick(&[16usize, 25, 32]);
+            let a_bits = g.bits(m * d);
+            let w_bits = g.bits(n * d);
+            let (ap, kw) = pack_rows(&a_bits, m, d, b);
+            let (wp, _) = pack_rows(&w_bits, n, d, b);
+            ensure_eq(
+                bgemm(&ap, &wp, m, n, kw, d),
+                naive_gemm(&a_bits, &w_bits, m, n, d),
+                "bgemm == ±1 GEMM",
+            )
+        });
+    }
+
+    #[test]
+    fn exercises_both_fixed_lane_kernels() {
+        // KW = 3 -> L = 2 (conv1) and KW = 25 -> L = 13 (conv2)
+        prop::check(32, |g| {
+            for (d, kw) in [(75usize, 3usize), (800, 25)] {
+                let a_bits = g.bits(2 * d);
+                let w_bits = g.bits(3 * d);
+                let (ap, got_kw) = pack_rows(&a_bits, 2, d, 32);
+                let (wp, _) = pack_rows(&w_bits, 3, d, 32);
+                ensure_eq(got_kw, kw, "packed width")?;
+                ensure_eq(
+                    bgemm(&ap, &wp, 2, 3, kw, d),
+                    naive_gemm(&a_bits, &w_bits, 2, 3, d),
+                    "fixed-lane kernel",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn conv1_shape_smoke() {
+        // the paper's first layer: M=9216 patches, N=32 filters, D=75
+        let m = 96 * 96;
+        let n = 32;
+        let d = 75;
+        let kw = 3;
+        let a = vec![0u32; m * kw];
+        let w = vec![u32::MAX << (96 - 75); n * kw];
+        let out = bgemm(&a, &w, m, n, kw, d);
+        assert_eq!(out.len(), m * n);
+    }
+
+    #[test]
+    fn identical_rows_give_d() {
+        let d = 100;
+        let bits: Vec<u32> = (0..d).map(|i| (i % 3 == 0) as u32).collect();
+        let p = pack_bits(&bits, 32);
+        let out = bgemm(&p, &p, 1, 1, p.len(), d);
+        assert_eq!(out, vec![d as i32]);
+    }
+
+    #[test]
+    fn complementary_rows_give_minus_d() {
+        let d = 77;
+        let bits: Vec<u32> = (0..d).map(|i| (i % 2) as u32).collect();
+        let inv: Vec<u32> = bits.iter().map(|&b| 1 - b).collect();
+        let pa = pack_bits(&bits, 32);
+        let pb = pack_bits(&inv, 32);
+        let out = bgemm(&pa, &pb, 1, 1, pa.len(), d);
+        assert_eq!(out, vec![-(d as i32)]);
+    }
+
+    #[test]
+    fn into_variant_matches() {
+        prop::check(32, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 5);
+            let d = g.usize_in(1, 64);
+            let a_bits = g.bits(m * d);
+            let w_bits = g.bits(n * d);
+            let (ap, kw) = pack_rows(&a_bits, m, d, 32);
+            let (wp, _) = pack_rows(&w_bits, n, d, 32);
+            let alloc = bgemm(&ap, &wp, m, n, kw, d);
+            let mut pre = vec![0i32; m * n];
+            bgemm_into(&ap, &wp, m, n, kw, d, &mut pre);
+            ensure_eq(alloc, pre, "bgemm_into == bgemm")
+        });
+    }
+
+    #[test]
+    fn odd_kw_tail_lane() {
+        // odd KW exercises the zero-padded tail lane
+        prop::check(32, |g| {
+            let kw = 2 * g.usize_in(0, 6) + 1; // odd
+            let d = kw * 32;
+            let a = g.words(kw);
+            let w = g.words(kw);
+            let scalar: u32 = a.iter().zip(&w).map(|(x, y)| (x ^ y).count_ones()).sum();
+            let got = bgemm(&a, &w, 1, 1, kw, d)[0];
+            ensure_eq(got, d as i32 - 2 * scalar as i32, "odd-KW")
+        });
+    }
+}

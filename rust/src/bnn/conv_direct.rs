@@ -1,0 +1,147 @@
+//! Implicit-GEMM binarized convolution (the paper's stated future work,
+//! Section 5: "extend this work to alternative convolution algorithms
+//! such as implicit GEMM, which can be faster than explicit GEMM").
+//!
+//! Instead of materializing the (H·W, K·K·NW) patch matrix and calling
+//! `bgemm`, the window walk happens inline per output pixel: each
+//! (dy, dx) contributes `popcount(words[iy, ix] ^ w[o, dy, dx])`, and
+//! out-of-bounds taps contribute `popcount(w)` (pad word 0 == all −1,
+//! identical semantics to the explicit path's zero-word gather — tested
+//! bit-exact against it).
+//!
+//! Operates in the channel-packed domain (the conv2 layout: NW words of
+//! 32 channel bits per pixel).
+
+/// Direct packed 'same' convolution.
+///
+/// `words`: (H, W, NW) u32; `wt`: (O, K*K*NW) u32 channel-packed weight
+/// rows; returns (H*W, O) i32 counts — identical to
+/// `bgemm(im2col_words(words), wt)`.
+pub fn conv_packed_direct(
+    words: &[u32],
+    h: usize,
+    w: usize,
+    nw: usize,
+    wt: &[u32],
+    o: usize,
+    k: usize,
+    d_real: usize,
+) -> Vec<i32> {
+    assert_eq!(words.len(), h * w * nw);
+    let kkn = k * k * nw;
+    assert_eq!(wt.len(), o * kkn);
+    let r = (k - 1) / 2;
+    let d = d_real as i32;
+    // per-tap weight popcounts: the padding contribution of tap j for
+    // output channel oc (hoisted so border pixels stay cheap)
+    let mut pad_pc = vec![0u32; o * k * k];
+    for oc in 0..o {
+        for j in 0..k * k {
+            let mut pc = 0u32;
+            for wi in 0..nw {
+                pc += wt[oc * kkn + j * nw + wi].count_ones();
+            }
+            pad_pc[oc * k * k + j] = pc;
+        }
+    }
+    // cumulative pad popcount per channel (all taps) minus interior taps
+    // is handled per-pixel below; interior pixels take the fast path.
+    let mut out = vec![0i32; h * w * o];
+    for oy in 0..h {
+        for ox in 0..w {
+            let interior =
+                oy >= r && oy + r < h && ox >= r && ox + r < w;
+            let orow = &mut out[(oy * w + ox) * o..(oy * w + ox + 1) * o];
+            if interior {
+                // fast path: every tap valid; each dy contributes one
+                // contiguous k*nw run in both operands, so the xor+
+                // popcount rides the u64-widened helper
+                let y0 = oy - r;
+                let x0 = ox - r;
+                for oc in 0..o {
+                    let wrow = &wt[oc * kkn..(oc + 1) * kkn];
+                    let mut pc = 0u32;
+                    for dy in 0..k {
+                        let base = ((y0 + dy) * w + x0) * nw;
+                        pc += crate::bnn::packing::xor_popcount(
+                            &words[base..base + k * nw],
+                            &wrow[dy * k * nw..(dy + 1) * k * nw],
+                        );
+                    }
+                    orow[oc] = d - 2 * pc as i32;
+                }
+            } else {
+                for oc in 0..o {
+                    let wrow = &wt[oc * kkn..(oc + 1) * kkn];
+                    let pads = &pad_pc[oc * k * k..(oc + 1) * k * k];
+                    let mut pc = 0u32;
+                    for dy in 0..k {
+                        let iy = oy as isize + dy as isize - r as isize;
+                        for dx in 0..k {
+                            let ix = ox as isize + dx as isize - r as isize;
+                            let j = dy * k + dx;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                let src = ((iy as usize) * w + ix as usize) * nw;
+                                for wi in 0..nw {
+                                    pc += (words[src + wi] ^ wrow[j * nw + wi]).count_ones();
+                                }
+                            } else {
+                                pc += pads[j]; // xor with zero pad word
+                            }
+                        }
+                    }
+                    orow[oc] = d - 2 * pc as i32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::{bgemm, im2col};
+    use crate::util::prop::{self, ensure_eq};
+
+    #[test]
+    fn matches_explicit_gemm_path() {
+        prop::check(24, |g| {
+            let h = g.usize_in(2, 10);
+            let w = g.usize_in(2, 10);
+            let nw = g.usize_in(1, 2);
+            let o = g.usize_in(1, 8);
+            let k = *g.pick(&[1usize, 3, 5]);
+            let d = k * k * nw * 32;
+            let words = g.words(h * w * nw);
+            let wt = g.words(o * k * k * nw);
+            let explicit = {
+                let cols = im2col::im2col_words(&words, h, w, nw, k);
+                bgemm::bgemm(&cols, &wt, h * w, o, k * k * nw, d)
+            };
+            let implicit = conv_packed_direct(&words, h, w, nw, &wt, o, k, d);
+            ensure_eq(implicit, explicit, "implicit == explicit GEMM")
+        });
+    }
+
+    #[test]
+    fn conv2_paper_shape() {
+        let mut rng = crate::util::rng::Xoshiro256::new(2);
+        let words: Vec<u32> = (0..48 * 48).map(|_| rng.next_u32()).collect();
+        let wt: Vec<u32> = (0..32 * 25).map(|_| rng.next_u32()).collect();
+        let implicit = conv_packed_direct(&words, 48, 48, 1, &wt, 32, 5, 800);
+        let cols = im2col::im2col_words(&words, 48, 48, 1, 5);
+        let explicit = bgemm::bgemm(&cols, &wt, 48 * 48, 32, 25, 800);
+        assert_eq!(implicit, explicit);
+    }
+
+    #[test]
+    fn k1_is_pointwise() {
+        // K=1: conv == per-pixel packed dot
+        let words = vec![0xF0F0_F0F0u32, 0x0F0F_0F0Fu32];
+        let wt = vec![0xFFFF_FFFFu32];
+        let out = conv_packed_direct(&words, 1, 2, 1, &wt, 1, 1, 32);
+        assert_eq!(out[0], 32 - 2 * 16);
+        assert_eq!(out[1], 32 - 2 * 16);
+    }
+}

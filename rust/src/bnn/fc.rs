@@ -1,0 +1,182 @@
+//! Fully-connected layers: packed xnor-popcount matrix×vector (paper
+//! Section 3.2) and the float baseline.
+//!
+//! The CUDA kernel splits each weight-row dot into 64 segments with a
+//! warp reduction; on CPU the u64 popcount loop over a row is already a
+//! single-pass reduction, and the segment structure survives as the
+//! chunked accumulation below (which also helps ILP: four independent
+//! accumulators).
+
+use super::packing::as_u64_chunks;
+
+/// Packed FC: `x` (KW,) u32, `wt` (L, KW) u32 -> (L,) i32 counts.
+pub fn fc_packed(x: &[u32], wt: &[u32], l: usize, kw: usize, d_real: usize) -> Vec<i32> {
+    let mut out = vec![0i32; l];
+    fc_packed_into(x, wt, l, kw, d_real, &mut out);
+    out
+}
+
+/// Allocation-free packed FC for the serving hot path.
+pub fn fc_packed_into(
+    x: &[u32],
+    wt: &[u32],
+    l: usize,
+    kw: usize,
+    d_real: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), kw);
+    assert_eq!(wt.len(), l * kw);
+    assert_eq!(out.len(), l);
+    let d = d_real as i32;
+    let (x64, x_tail) = as_u64_chunks(x);
+    for li in 0..l {
+        let wrow = &wt[li * kw..(li + 1) * kw];
+        let (w64, w_tail) = as_u64_chunks(wrow);
+        let mut pc: u32 = 0;
+        if x64.len() == w64.len() {
+            // 4-way unrolled accumulation (the "segments" of Section 3.2)
+            let mut acc = [0u32; 4];
+            let chunks = x64.len() / 4 * 4;
+            for i in (0..chunks).step_by(4) {
+                acc[0] += (x64[i] ^ w64[i]).count_ones();
+                acc[1] += (x64[i + 1] ^ w64[i + 1]).count_ones();
+                acc[2] += (x64[i + 2] ^ w64[i + 2]).count_ones();
+                acc[3] += (x64[i + 3] ^ w64[i + 3]).count_ones();
+            }
+            for i in chunks..x64.len() {
+                acc[0] += (x64[i] ^ w64[i]).count_ones();
+            }
+            for (&a, &b) in x_tail.iter().zip(w_tail) {
+                acc[0] += (a ^ b).count_ones();
+            }
+            pc = acc.iter().sum();
+        } else {
+            for (&a, &b) in x.iter().zip(wrow) {
+                pc += (a ^ b).count_ones();
+            }
+        }
+        out[li] = d - 2 * pc as i32;
+    }
+}
+
+/// Float FC: `x` (D,), `wt` (L, D) row-major -> (L,).
+pub fn fc_float(x: &[f32], wt: &[f32], l: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), d);
+    assert_eq!(wt.len(), l * d);
+    let mut out = vec![0f32; l];
+    for li in 0..l {
+        let row = &wt[li * d..(li + 1) * d];
+        let mut acc = 0f32;
+        for (a, b) in x.iter().zip(row) {
+            acc += a * b;
+        }
+        out[li] = acc;
+    }
+    out
+}
+
+/// Float FC with bias + optional sign activation (the CPU tail layers:
+/// fc2 with sign, fc3 raw logits).
+pub fn fc_float_bias(x: &[f32], wt: &[f32], bias: &[f32], l: usize, d: usize) -> Vec<f32> {
+    let mut out = fc_float(x, wt, l, d);
+    for (o, b) in out.iter_mut().zip(bias) {
+        *o += b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::pack_bits;
+    use crate::util::prop::{self, ensure, ensure_eq};
+
+    #[test]
+    fn fc_packed_matches_pm1_dot() {
+        prop::check(64, |g| {
+            let l = g.usize_in(1, 32);
+            let d = g.usize_in(1, 1024);
+            let xb = g.bits(d);
+            let wb = g.bits(l * d);
+            let xp = pack_bits(&xb, 32);
+            let kw = xp.len();
+            let mut wp = Vec::with_capacity(l * kw);
+            for li in 0..l {
+                wp.extend(pack_bits(&wb[li * d..(li + 1) * d], 32));
+            }
+            let got = fc_packed(&xp, &wp, l, kw, d);
+            let want: Vec<i32> = (0..l)
+                .map(|li| {
+                    (0..d)
+                        .map(|i| {
+                            let a = xb[i] as i32 * 2 - 1;
+                            let b = wb[li * d + i] as i32 * 2 - 1;
+                            a * b
+                        })
+                        .sum()
+                })
+                .collect();
+            ensure_eq(got, want, "fc_packed == ±1 dot")
+        });
+    }
+
+    #[test]
+    fn fc_packed_paper_dims() {
+        // paper's FC1: L=100, D=18432 -> KW=576
+        let d = 18432;
+        let kw = 576;
+        let x = vec![0xAAAA_AAAAu32; kw];
+        let wt = vec![0x5555_5555u32; 100 * kw];
+        let out = fc_packed(&x, &wt, 100, kw, d);
+        // complete disagreement: every bit differs -> dot = -D
+        assert!(out.iter().all(|&v| v == -(d as i32)));
+    }
+
+    #[test]
+    fn fc_float_known_values() {
+        let x = [1.0, 2.0];
+        let wt = [3.0, 4.0, -1.0, 0.5]; // rows [3,4], [-1,0.5]
+        let out = fc_float(&x, &wt, 2, 2);
+        assert_eq!(out, vec![11.0, 0.0]);
+    }
+
+    #[test]
+    fn fc_float_bias_adds() {
+        let x = [1.0];
+        let wt = [2.0, -2.0];
+        let out = fc_float_bias(&x, &wt, &[0.5, 0.25], 2, 1);
+        assert_eq!(out, vec![2.5, -1.75]);
+    }
+
+    #[test]
+    fn into_matches_alloc() {
+        prop::check(32, |g| {
+            let l = g.usize_in(1, 16);
+            let kw = g.usize_in(1, 80);
+            let d = kw * 32;
+            let x = g.words(kw);
+            let wt = g.words(l * kw);
+            let a = fc_packed(&x, &wt, l, kw, d);
+            let mut b = vec![0i32; l];
+            fc_packed_into(&x, &wt, l, kw, d, &mut b);
+            ensure_eq(a, b, "into == alloc")
+        });
+    }
+
+    #[test]
+    fn unroll_boundaries() {
+        // exercise kw that is not a multiple of 8 u32s (4 u64s) and odd kw
+        prop::check(32, |g| {
+            let kw = g.usize_in(1, 17);
+            let x = g.words(kw);
+            let wt = g.words(kw);
+            let scalar: u32 = x.iter().zip(&wt).map(|(&a, &b)| (a ^ b).count_ones()).sum();
+            let got = fc_packed(&x, &wt, 1, kw, kw * 32)[0];
+            ensure(
+                got == (kw * 32) as i32 - 2 * scalar as i32,
+                format!("kw={kw}: {got}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,228 @@
+//! Full-precision baselines — the role cuDNN / ARM Compute Library play
+//! in the paper's comparison (explicit-GEMM convolution, Section 3.1).
+//!
+//! Two GEMMs are provided: `gemm_naive` (the textbook triple loop) and
+//! `gemm_blocked` (register-tiled, the measured baseline).  The paper
+//! notes its own float GEMM is ~2x slower than cuBLAS; `gemm_blocked`
+//! plays the same "honest hand-written baseline" role here.
+
+/// Naive (M,D) x (N,D)^T -> (M,N) row-major.
+pub fn gemm_naive(a: &[f32], bt: &[f32], m: usize, n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * d);
+    assert_eq!(bt.len(), n * d);
+    let mut out = vec![0f32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut acc = 0f32;
+            for k in 0..d {
+                acc += a[mi * d + k] * bt[ni * d + k];
+            }
+            out[mi * n + ni] = acc;
+        }
+    }
+    out
+}
+
+/// Register-tiled GEMM: 4 output columns per inner loop, accumulators in
+/// registers, B^T rows streamed (both operands row-major over D).
+pub fn gemm_blocked(a: &[f32], bt: &[f32], m: usize, n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    gemm_blocked_into(a, bt, m, n, d, &mut out);
+    out
+}
+
+/// Allocation-free blocked GEMM.
+pub fn gemm_blocked_into(
+    a: &[f32],
+    bt: &[f32],
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * d);
+    assert_eq!(bt.len(), n * d);
+    assert_eq!(out.len(), m * n);
+    let n4 = n / 4 * 4;
+    for mi in 0..m {
+        let arow = &a[mi * d..(mi + 1) * d];
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        let mut ni = 0;
+        while ni < n4 {
+            let b0 = &bt[ni * d..(ni + 1) * d];
+            let b1 = &bt[(ni + 1) * d..(ni + 2) * d];
+            let b2 = &bt[(ni + 2) * d..(ni + 3) * d];
+            let b3 = &bt[(ni + 3) * d..(ni + 4) * d];
+            let (mut c0, mut c1, mut c2, mut c3) = (0f32, 0f32, 0f32, 0f32);
+            for k in 0..d {
+                let av = arow[k];
+                c0 += av * b0[k];
+                c1 += av * b1[k];
+                c2 += av * b2[k];
+                c3 += av * b3[k];
+            }
+            orow[ni] = c0;
+            orow[ni + 1] = c1;
+            orow[ni + 2] = c2;
+            orow[ni + 3] = c3;
+            ni += 4;
+        }
+        while ni < n {
+            let brow = &bt[ni * d..(ni + 1) * d];
+            let mut acc = 0f32;
+            for k in 0..d {
+                acc += arow[k] * brow[k];
+            }
+            orow[ni] = acc;
+            ni += 1;
+        }
+    }
+}
+
+/// Full-precision 'same' convolution via explicit im2col + GEMM
+/// (the paper's cuDNN algorithm choice).  `x` (H,W,C), `w` (O,K,K,C)
+/// flattened row-major -> (H,W,O).
+pub fn conv2d_float(
+    x: &[f32],
+    w: &[f32],
+    h: usize,
+    wd: usize,
+    c: usize,
+    o: usize,
+    k: usize,
+) -> Vec<f32> {
+    let cols = super::im2col::im2col_float(x, h, wd, c, k);
+    gemm_blocked(&cols, w, h * wd, o, k * k * c)
+}
+
+/// In-place ReLU (full-precision network's activation).
+pub fn relu(xs: &mut [f32]) {
+    for x in xs {
+        if *x < 0.0 {
+            *x = 0.0;
+        }
+    }
+}
+
+/// Add a per-channel bias to an (HW, O) activation map.
+pub fn add_bias(xs: &mut [f32], bias: &[f32]) {
+    let o = bias.len();
+    for row in xs.chunks_exact_mut(o) {
+        for (v, b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure};
+
+    #[test]
+    fn blocked_matches_naive() {
+        prop::check(48, |g| {
+            let m = g.usize_in(1, 24);
+            let n = g.usize_in(1, 17); // deliberately exercises the n%4 tail
+            let d = g.usize_in(1, 64);
+            let a = g.normals(m * d);
+            let b = g.normals(n * d);
+            let x = gemm_naive(&a, &b, m, n, d);
+            let y = gemm_blocked(&a, &b, m, n, d);
+            for (u, v) in x.iter().zip(&y) {
+                if (u - v).abs() > 1e-3 * (1.0 + u.abs()) {
+                    return Err(format!("blocked {v} != naive {u}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemm_identity() {
+        // A x I^T = A (I stored row-major as B^T works since I symmetric)
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(gemm_blocked(&a, &i, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn conv_matches_direct_convolution() {
+        prop::check(24, |g| {
+            let h = g.usize_in(1, 7);
+            let wd = g.usize_in(1, 7);
+            let c = g.usize_in(1, 3);
+            let o = g.usize_in(1, 4);
+            let k = *g.pick(&[1usize, 3, 5]);
+            let r = (k - 1) / 2;
+            let x = g.normals(h * wd * c);
+            let w = g.normals(o * k * k * c);
+            let got = conv2d_float(&x, &w, h, wd, c, o, k);
+            // direct sum
+            for oy in 0..h {
+                for ox in 0..wd {
+                    for oc in 0..o {
+                        let mut acc = 0f32;
+                        for dy in 0..k {
+                            for dx in 0..k {
+                                let iy = oy as isize + dy as isize - r as isize;
+                                let ix = ox as isize + dx as isize - r as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                for ch in 0..c {
+                                    acc += x[(iy as usize * wd + ix as usize) * c + ch]
+                                        * w[((oc * k + dy) * k + dx) * c + ch];
+                                }
+                            }
+                        }
+                        let v = got[(oy * wd + ox) * o + oc];
+                        if (v - acc).abs() > 1e-3 * (1.0 + acc.abs()) {
+                            return Err(format!("conv mismatch at ({oy},{ox},{oc}): {v} vs {acc}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut xs = vec![-1.0, 0.0, 2.0];
+        relu(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn bias_broadcasts_per_channel() {
+        let mut xs = vec![1.0, 2.0, 3.0, 4.0]; // 2 rows, O=2
+        add_bias(&mut xs, &[10.0, 20.0]);
+        assert_eq!(xs, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn prop_gemm_linearity() {
+        // GEMM(a1+a2, b) == GEMM(a1,b) + GEMM(a2,b)
+        prop::check(24, |g| {
+            let m = g.usize_in(1, 8);
+            let n = g.usize_in(1, 8);
+            let d = g.usize_in(1, 32);
+            let a1 = g.normals(m * d);
+            let a2 = g.normals(m * d);
+            let b = g.normals(n * d);
+            let sum: Vec<f32> = a1.iter().zip(&a2).map(|(x, y)| x + y).collect();
+            let lhs = gemm_blocked(&sum, &b, m, n, d);
+            let r1 = gemm_blocked(&a1, &b, m, n, d);
+            let r2 = gemm_blocked(&a2, &b, m, n, d);
+            for i in 0..lhs.len() {
+                let want = r1[i] + r2[i];
+                ensure(
+                    (lhs[i] - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                    format!("linearity at {i}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

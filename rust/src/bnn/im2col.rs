@@ -1,0 +1,286 @@
+//! Patch extraction: float im2col, fused im2col+pack (paper Algorithm 1),
+//! and the channel-packed word gather used between binarized layers.
+//!
+//! All variants produce 'same'-convolution patches in `(dy, dx, c)` order
+//! (the row-major shared-memory walk of the CUDA kernel).  Float im2col
+//! pads with 0; binarized variants pad with -1 / zero-words (bit 0 == -1),
+//! matching the zero-initialized shared memory of the paper.
+
+use super::packing::{pack_pm1, packed_width};
+
+/// Float 'same' im2col.  `x` is (H, W, C) row-major; output is
+/// (H*W, K*K*C) row-major, zero padding.
+pub fn im2col_float(x: &[f32], h: usize, w: usize, c: usize, k: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * w * c);
+    let r = (k - 1) / 2;
+    let d = k * k * c;
+    let mut out = vec![0f32; h * w * d];
+    for oy in 0..h {
+        for ox in 0..w {
+            let patch = &mut out[(oy * w + ox) * d..(oy * w + ox + 1) * d];
+            let mut p = 0;
+            for dy in 0..k {
+                let iy = oy as isize + dy as isize - r as isize;
+                for dx in 0..k {
+                    let ix = ox as isize + dx as isize - r as isize;
+                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        patch[p..p + c].copy_from_slice(&x[src..src + c]);
+                    } // else: leave zeros
+                    p += c;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// MSB-first bit writer — the register + counter of Algorithm 1.
+/// Bits stream in patch order; words flush every `b` bits; the final
+/// partial word is left-aligned (tail bits 0), matching `pack_bits`.
+struct BitWriter<'a> {
+    out: &'a mut [u32],
+    word: u32,
+    fill: u32,
+    b: u32,
+    pos: usize,
+}
+
+impl<'a> BitWriter<'a> {
+    #[inline]
+    fn new(out: &'a mut [u32], b: usize) -> Self {
+        Self { out, word: 0, fill: 0, b: b as u32, pos: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, bit: u32) {
+        self.word = (self.word << 1) | bit;
+        self.fill += 1;
+        if self.fill == self.b {
+            self.out[self.pos] = self.word;
+            self.pos += 1;
+            self.word = 0;
+            self.fill = 0;
+        }
+    }
+
+    /// Push `n` zero bits (padding region).
+    #[inline]
+    fn push_zeros(&mut self, mut n: u32) {
+        while n > 0 {
+            let take = n.min(self.b - self.fill);
+            self.word <<= take;
+            self.fill += take;
+            if self.fill == self.b {
+                self.out[self.pos] = self.word;
+                self.pos += 1;
+                self.word = 0;
+                self.fill = 0;
+            }
+            n -= take;
+        }
+    }
+
+    #[inline]
+    fn finish(mut self) {
+        if self.fill > 0 {
+            self.out[self.pos] = self.word << (self.b - self.fill);
+        }
+    }
+}
+
+/// Fused im2col + pack (Algorithm 1): ±1 image -> packed patch rows.
+///
+/// `x` is (H, W, C) of ±1 floats; returns (H*W) rows of
+/// `ceil(K*K*C / b)` u32 words each (flattened).  Padding pixels pack as
+/// bit 0 (= -1).  Bits go straight from the pixel compare into the
+/// packing register — no intermediate patch buffer, no div/mod (this is
+/// the paper's fused kernel, and it is also what makes it fast here; the
+/// two-pass variant below exists for the E7 ablation).
+pub fn im2col_pack(x: &[f32], h: usize, w: usize, c: usize, k: usize, b: usize) -> Vec<u32> {
+    assert_eq!(x.len(), h * w * c);
+    let r = (k - 1) / 2;
+    let d = k * k * c;
+    let nw = packed_width(d, b);
+    let mut out = vec![0u32; h * w * nw];
+    for oy in 0..h {
+        for ox in 0..w {
+            let row = &mut out[(oy * w + ox) * nw..(oy * w + ox + 1) * nw];
+            let mut bw = BitWriter::new(row, b);
+            for dy in 0..k {
+                let iy = oy as isize + dy as isize - r as isize;
+                if iy < 0 || iy as usize >= h {
+                    bw.push_zeros((k * c) as u32);
+                    continue;
+                }
+                let base = (iy as usize) * w;
+                for dx in 0..k {
+                    let ix = ox as isize + dx as isize - r as isize;
+                    if ix < 0 || ix as usize >= w {
+                        bw.push_zeros(c as u32);
+                    } else {
+                        let src = (base + ix as usize) * c;
+                        for &v in &x[src..src + c] {
+                            bw.push(u32::from(v > 0.0));
+                        }
+                    }
+                }
+            }
+            bw.finish();
+        }
+    }
+    out
+}
+
+/// Two-pass (unfused) variant for the fusion ablation (E7): materialize
+/// float patches, then pack them — the extra K*K*C global traffic the
+/// paper's fusion eliminates.
+pub fn im2col_then_pack(x: &[f32], h: usize, w: usize, c: usize, k: usize, b: usize) -> Vec<u32> {
+    // pass 1: float im2col with -1 padding
+    let r = (k - 1) / 2;
+    let d = k * k * c;
+    let mut cols = vec![-1.0f32; h * w * d];
+    for oy in 0..h {
+        for ox in 0..w {
+            let patch = &mut cols[(oy * w + ox) * d..(oy * w + ox + 1) * d];
+            let mut p = 0;
+            for dy in 0..k {
+                let iy = oy as isize + dy as isize - r as isize;
+                for dx in 0..k {
+                    let ix = ox as isize + dx as isize - r as isize;
+                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                        let src = ((iy as usize) * w + ix as usize) * c;
+                        patch[p..p + c].copy_from_slice(&x[src..src + c]);
+                    }
+                    p += c;
+                }
+            }
+        }
+    }
+    // pass 2: pack
+    let nw = packed_width(d, b);
+    let mut out = vec![0u32; h * w * nw];
+    for row in 0..h * w {
+        let words = pack_pm1(&cols[row * d..(row + 1) * d], b);
+        out[row * nw..(row + 1) * nw].copy_from_slice(&words);
+    }
+    out
+}
+
+/// Gather K*K channel-packed words per output pixel ('same', pad word 0).
+///
+/// `words` is (H, W, NW) u32 (NW words of packed channels per pixel);
+/// output is (H*W, K*K*NW).  Used between binarized layers where
+/// activations are already channel-packed — the gather IS the im2col.
+pub fn im2col_words(words: &[u32], h: usize, w: usize, nw: usize, k: usize) -> Vec<u32> {
+    assert_eq!(words.len(), h * w * nw);
+    let r = (k - 1) / 2;
+    let row_w = k * k * nw;
+    let mut out = vec![0u32; h * w * row_w];
+    for oy in 0..h {
+        for ox in 0..w {
+            let base = (oy * w + ox) * row_w;
+            let mut p = base;
+            for dy in 0..k {
+                let iy = oy as isize + dy as isize - r as isize;
+                for dx in 0..k {
+                    let ix = ox as isize + dx as isize - r as isize;
+                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                        let src = ((iy as usize) * w + ix as usize) * nw;
+                        out[p..p + nw].copy_from_slice(&words[src..src + nw]);
+                    } // else: zero words (all channels -1)
+                    p += nw;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::{pack_bits, unpack_bits};
+    use crate::util::prop::{self, ensure_eq};
+
+    #[test]
+    fn float_im2col_center_pixel_identity() {
+        // K=1: each patch is exactly the pixel
+        let x: Vec<f32> = (0..2 * 3 * 2).map(|i| i as f32).collect();
+        let cols = im2col_float(&x, 2, 3, 2, 1);
+        assert_eq!(cols, x);
+    }
+
+    #[test]
+    fn float_im2col_zero_pads_borders() {
+        // 1x1 image, K=3: only the center entry of the patch is non-zero
+        let cols = im2col_float(&[5.0], 1, 1, 1, 3);
+        assert_eq!(cols.len(), 9);
+        let mut want = vec![0.0; 9];
+        want[4] = 5.0; // (dy,dx) = (1,1)
+        assert_eq!(cols, want);
+    }
+
+    #[test]
+    fn fused_matches_two_pass() {
+        prop::check(32, |g| {
+            let h = g.usize_in(1, 8);
+            let w = g.usize_in(1, 8);
+            let c = g.usize_in(1, 4);
+            let k = *g.pick(&[1usize, 3, 5]);
+            let b = *g.pick(&[8usize, 25, 32]);
+            let x = g.pm1(h * w * c);
+            ensure_eq(
+                im2col_pack(&x, h, w, c, k, b),
+                im2col_then_pack(&x, h, w, c, k, b),
+                "fused == unfused",
+            )
+        });
+    }
+
+    #[test]
+    fn pack_layout_matches_ref_convention() {
+        // single pixel, K=1, C=3: patch = pixel channels, packed MSB-first
+        let x = [1.0f32, -1.0, 1.0];
+        let words = im2col_pack(&x, 1, 1, 3, 1, 32);
+        assert_eq!(words, vec![0b101u32 << 29]);
+    }
+
+    #[test]
+    fn border_padding_packs_as_minus_one() {
+        // 1x1 ±1 image of +1, K=3, B=9: only the center bit set
+        let words = im2col_pack(&[1.0], 1, 1, 1, 3, 9);
+        let bits = unpack_bits(&words, 9, 9);
+        assert_eq!(bits, vec![0, 0, 0, 0, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn word_gather_matches_bit_level_pack() {
+        // For C=32 channel-packed input, gathering words then flattening
+        // must equal packing the (dy,dx,c)-ordered ±1 patch directly.
+        prop::check(16, |g| {
+            let h = g.usize_in(2, 6);
+            let w = g.usize_in(2, 6);
+            let c = 32usize;
+            let k = 3usize;
+            let xs = g.pm1(h * w * c);
+            // channel-pack each pixel
+            let mut words = Vec::with_capacity(h * w);
+            for px in 0..h * w {
+                let bits: Vec<u32> =
+                    xs[px * c..(px + 1) * c].iter().map(|&v| u32::from(v > 0.0)).collect();
+                words.extend(pack_bits(&bits, 32));
+            }
+            let gathered = im2col_words(&words, h, w, 1, k);
+            let direct = im2col_pack(&xs, h, w, c, k, 32);
+            ensure_eq(gathered, direct, "word gather == direct pack (C=32)")
+        });
+    }
+
+    #[test]
+    fn im2col_words_shapes() {
+        let words = vec![7u32; 4 * 4 * 2];
+        let out = im2col_words(&words, 4, 4, 2, 5);
+        assert_eq!(out.len(), 16 * 25 * 2);
+    }
+}

@@ -1,0 +1,130 @@
+//! 2x2/stride-2 pooling: float max-pool (the paper's layer) and the
+//! packed-domain OR-pool (our binary-domain optimization, ablation E8):
+//! sign is monotone, so `sign(max(x)) == or(sign(x))` bit-wise — 32
+//! channels pooled per OR instruction.
+
+/// Float 2x2 max pool.  `x` (H, W, C) -> (H/2, W/2, C); H, W even.
+pub fn maxpool2x2(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert!(h % 2 == 0 && w % 2 == 0);
+    assert_eq!(x.len(), h * w * c);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let dst = (oy * ow + ox) * c;
+            for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                let src = ((oy * 2 + dy) * w + (ox * 2 + dx)) * c;
+                for ch in 0..c {
+                    let v = x[src + ch];
+                    if v > out[dst + ch] {
+                        out[dst + ch] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Packed OR pool.  `words` (H, W, NW) u32 -> (H/2, W/2, NW).
+pub fn orpool2x2(words: &[u32], h: usize, w: usize, nw: usize) -> Vec<u32> {
+    assert!(h % 2 == 0 && w % 2 == 0);
+    assert_eq!(words.len(), h * w * nw);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0u32; oh * ow * nw];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let dst = (oy * ow + ox) * nw;
+            let r0 = ((oy * 2) * w + ox * 2) * nw;
+            let r1 = ((oy * 2 + 1) * w + ox * 2) * nw;
+            for wi in 0..nw {
+                out[dst + wi] =
+                    words[r0 + wi] | words[r0 + nw + wi] | words[r1 + wi] | words[r1 + nw + wi];
+            }
+        }
+    }
+    out
+}
+
+/// Float max-pool on ±1 data followed by channel packing — the unfused
+/// ordering the paper uses (pool floats, binarize later).  For the E8
+/// ablation bench.
+pub fn maxpool_pm1_then_pack(x: &[f32], h: usize, w: usize, c: usize) -> Vec<u32> {
+    assert!(c <= 32);
+    let pooled = maxpool2x2(x, h, w, c);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0u32; oh * ow];
+    for px in 0..oh * ow {
+        let mut word = 0u32;
+        for ch in 0..c {
+            word |= u32::from(pooled[px * c + ch] > 0.0) << (31 - ch);
+        }
+        out[px] = word;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::packing::pack_channels32;
+    use crate::util::prop::{self, ensure_eq};
+
+    #[test]
+    fn maxpool_basic() {
+        // 2x2 single channel
+        let out = maxpool2x2(&[1.0, 4.0, 3.0, 2.0], 2, 2, 1);
+        assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn maxpool_multichannel_independent() {
+        // 2x2, C=2: channels pool independently
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 10.0,  2.0, -10.0,
+            3.0, -1.0,  0.0, 5.0,
+        ];
+        let out = maxpool2x2(&x, 2, 2, 2);
+        assert_eq!(out, vec![3.0, 10.0]);
+    }
+
+    #[test]
+    fn maxpool_handles_all_negative() {
+        let x = vec![-5.0, -3.0, -9.0, -4.0];
+        assert_eq!(maxpool2x2(&x, 2, 2, 1), vec![-3.0]);
+    }
+
+    #[test]
+    fn orpool_is_bitwise_or() {
+        let words = vec![0b0001, 0b0010, 0b0100, 0b1000];
+        assert_eq!(orpool2x2(&words, 2, 2, 1), vec![0b1111]);
+    }
+
+    #[test]
+    fn or_of_signs_equals_sign_of_max() {
+        prop::check(64, |g| {
+            let h = 2 * g.usize_in(1, 4);
+            let w = 2 * g.usize_in(1, 4);
+            let c = g.usize_in(1, 32);
+            let x = g.pm1(h * w * c);
+            // path A: float max-pool then channel-pack
+            let packed_after = maxpool_pm1_then_pack(&x, h, w, c);
+            // path B: channel-pack then OR-pool
+            let mut words = Vec::with_capacity(h * w);
+            for px in 0..h * w {
+                words.push(pack_channels32(
+                    x[px * c..(px + 1) * c].iter().map(|&v| u32::from(v > 0.0)),
+                ));
+            }
+            let packed_before = orpool2x2(&words, h, w, 1);
+            ensure_eq(packed_before, packed_after, "sign(max) == or(sign)")
+        });
+    }
+
+    #[test]
+    fn orpool_shapes() {
+        let out = orpool2x2(&vec![1u32; 8 * 6 * 3], 8, 6, 3);
+        assert_eq!(out.len(), 4 * 3 * 3);
+    }
+}

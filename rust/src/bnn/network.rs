@@ -1,0 +1,499 @@
+//! Full inference networks assembled from the layer kernels, with
+//! per-layer timers (the Nvidia-Visual-Profiler role in Table 2).
+//!
+//! Loads the weight containers written by `python/compile/aot.py`:
+//! `weights_float.bcnt` and `weights_bcnn_<scheme>.bcnt`.  The BCNN
+//! forward is bit-identical to `model.bcnn_infer_ref` / `_pallas` in
+//! Python (cross-checked against `expected_logits.bcnt` in the
+//! integration tests).
+
+use std::time::{Duration, Instant};
+
+use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
+use crate::input::binarize::{self, Scheme};
+use crate::util::tensorio::{TensorFile, TensorIoError};
+
+pub const IMG_H: usize = 96;
+pub const IMG_W: usize = 96;
+pub const IMG_C: usize = 3;
+pub const K: usize = 5;
+pub const CONV1_OUT: usize = 32;
+pub const CONV2_OUT: usize = 32;
+pub const FC1_OUT: usize = 100;
+pub const FC2_OUT: usize = 100;
+pub const NUM_CLASSES: usize = 4;
+pub const CLASSES: [&str; 4] = ["bus", "normal", "truck", "van"];
+
+/// Named per-layer wall times for one forward pass.
+pub type LayerTimings = Vec<(&'static str, Duration)>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum NetworkError {
+    #[error(transparent)]
+    Tensor(#[from] TensorIoError),
+    #[error("network: tensor {name} has {got} elements, expected {want}")]
+    Shape { name: &'static str, got: usize, want: usize },
+}
+
+fn expect_len(name: &'static str, v: &[impl Sized], want: usize) -> Result<(), NetworkError> {
+    if v.len() == want {
+        Ok(())
+    } else {
+        Err(NetworkError::Shape { name, got: v.len(), want })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BCNN
+// ---------------------------------------------------------------------------
+
+/// Packed + folded BCNN weights (see `model.export_inference_weights`).
+pub struct BcnnNetwork {
+    pub scheme: Scheme,
+    w1_pm1: Vec<f32>,    // (32, K*K*Cin) — used by Scheme::None
+    w1_packed: Vec<u32>, // (32, NW1)
+    nw1: usize,
+    d1: usize,
+    theta1: Vec<f32>,
+    flip1: Vec<u32>,
+    w2_packed: Vec<u32>, // (32, K*K) channel-packed
+    theta2: Vec<f32>,
+    flip2: Vec<u32>,
+    wfc1_packed: Vec<u32>, // (100, 576)
+    theta3: Vec<f32>,
+    flip3: Vec<u32>,
+    wfc2: Vec<f32>,
+    bfc2: Vec<f32>,
+    wfc3: Vec<f32>,
+    bfc3: Vec<f32>,
+    input_t: Vec<f32>, // (3,) rgb / (1,) gray / empty otherwise
+}
+
+impl BcnnNetwork {
+    pub fn from_tensor_file(tf: &TensorFile, scheme: Scheme) -> Result<Self, NetworkError> {
+        let c_in = scheme.input_channels();
+        let d1 = K * K * c_in;
+        let nw1 = packing::packed_width(d1, 32);
+        let net = Self {
+            scheme,
+            w1_pm1: tf.f32("w1_pm1")?,
+            w1_packed: tf.u32("w1_packed")?,
+            nw1,
+            d1,
+            theta1: tf.f32("theta1")?,
+            flip1: tf.u32("flip1")?,
+            w2_packed: tf.u32("w2_packed")?,
+            theta2: tf.f32("theta2")?,
+            flip2: tf.u32("flip2")?,
+            wfc1_packed: tf.u32("wfc1_packed")?,
+            theta3: tf.f32("theta3")?,
+            flip3: tf.u32("flip3")?,
+            wfc2: tf.f32("wfc2")?,
+            bfc2: tf.f32("bfc2")?,
+            wfc3: tf.f32("wfc3")?,
+            bfc3: tf.f32("bfc3")?,
+            input_t: if tf.contains("input_t") { tf.f32("input_t")? } else { Vec::new() },
+        };
+        expect_len("w1_pm1", &net.w1_pm1, CONV1_OUT * d1)?;
+        expect_len("w1_packed", &net.w1_packed, CONV1_OUT * nw1)?;
+        expect_len("theta1", &net.theta1, CONV1_OUT)?;
+        expect_len("w2_packed", &net.w2_packed, CONV2_OUT * K * K)?;
+        expect_len("wfc1_packed", &net.wfc1_packed, FC1_OUT * 24 * 24)?;
+        expect_len("wfc2", &net.wfc2, FC2_OUT * FC1_OUT)?;
+        expect_len("wfc3", &net.wfc3, NUM_CLASSES * FC2_OUT)?;
+        Ok(net)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>, scheme: Scheme) -> Result<Self, NetworkError> {
+        Ok(Self::from_tensor_file(&TensorFile::load(path)?, scheme)?)
+    }
+
+    /// Apply the input-binarization scheme (Section 2.3).
+    pub fn binarize_input(&self, x: &[f32]) -> Vec<f32> {
+        match self.scheme {
+            Scheme::None => x.to_vec(),
+            Scheme::Rgb => {
+                let t = [self.input_t[0], self.input_t[1], self.input_t[2]];
+                binarize::threshold_rgb(x, &t)
+            }
+            Scheme::Gray => binarize::threshold_gray(x, self.input_t[0]),
+            Scheme::Lbp => binarize::lbp(x, IMG_H, IMG_W),
+        }
+    }
+
+    /// Threshold integer counts and channel-pack 32 channels per word.
+    fn threshold_pack(counts: &[i32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
+        let c = theta.len();
+        debug_assert!(c <= 32);
+        let mut out = vec![0u32; pixels];
+        for px in 0..pixels {
+            let row = &counts[px * c..(px + 1) * c];
+            let mut word = 0u32;
+            for ch in 0..c {
+                word |= packing::threshold_bit(row[ch] as f32, theta[ch], flip[ch]) << (31 - ch);
+            }
+            out[px] = word;
+        }
+        out
+    }
+
+    /// Same for float counts (Scheme::None conv1 output).
+    fn threshold_pack_f32(counts: &[f32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
+        let c = theta.len();
+        let mut out = vec![0u32; pixels];
+        for px in 0..pixels {
+            let row = &counts[px * c..(px + 1) * c];
+            let mut word = 0u32;
+            for ch in 0..c {
+                word |= packing::threshold_bit(row[ch], theta[ch], flip[ch]) << (31 - ch);
+            }
+            out[px] = word;
+        }
+        out
+    }
+
+    /// Forward pass on one (96,96,3) image; returns logits + layer times.
+    pub fn forward(&self, x: &[f32]) -> ([f32; NUM_CLASSES], LayerTimings) {
+        assert_eq!(x.len(), IMG_H * IMG_W * IMG_C);
+        let mut times: LayerTimings = Vec::with_capacity(12);
+        let mut mark = Instant::now();
+        let lap = |name: &'static str, t: &mut Instant, times: &mut LayerTimings| {
+            let now = Instant::now();
+            times.push((name, now - *t));
+            *t = now;
+        };
+
+        // --- input binarization -----------------------------------------
+        let xb = self.binarize_input(x);
+        lap("input_binarize", &mut mark, &mut times);
+
+        // --- conv1 -------------------------------------------------------
+        let words1: Vec<u32>;
+        if self.scheme == Scheme::None {
+            let cols = im2col::im2col_float(&xb, IMG_H, IMG_W, IMG_C, K);
+            lap("im2col1", &mut mark, &mut times);
+            let counts =
+                float_ops::gemm_blocked(&cols, &self.w1_pm1, IMG_H * IMG_W, CONV1_OUT, self.d1);
+            lap("gemm1", &mut mark, &mut times);
+            words1 =
+                Self::threshold_pack_f32(&counts, &self.theta1, &self.flip1, IMG_H * IMG_W);
+        } else {
+            let c_in = self.scheme.input_channels();
+            let cols = im2col::im2col_pack(&xb, IMG_H, IMG_W, c_in, K, 32);
+            lap("im2col1", &mut mark, &mut times);
+            let counts = bgemm::bgemm(
+                &cols,
+                &self.w1_packed,
+                IMG_H * IMG_W,
+                CONV1_OUT,
+                self.nw1,
+                self.d1,
+            );
+            lap("gemm1", &mut mark, &mut times);
+            words1 = Self::threshold_pack(&counts, &self.theta1, &self.flip1, IMG_H * IMG_W);
+        }
+        lap("threshold_pack1", &mut mark, &mut times);
+        let pooled1 = maxpool::orpool2x2(&words1, IMG_H, IMG_W, 1); // (48,48,1)
+        lap("pool1", &mut mark, &mut times);
+
+        // --- conv2 (channel-packed domain) --------------------------------
+        let cols2 = im2col::im2col_words(&pooled1, 48, 48, 1, K); // (2304, 25)
+        lap("im2col2", &mut mark, &mut times);
+        let counts2 = bgemm::bgemm(
+            &cols2,
+            &self.w2_packed,
+            48 * 48,
+            CONV2_OUT,
+            K * K,
+            K * K * CONV1_OUT,
+        );
+        lap("gemm2", &mut mark, &mut times);
+        let words2 = Self::threshold_pack(&counts2, &self.theta2, &self.flip2, 48 * 48);
+        lap("threshold_pack2", &mut mark, &mut times);
+        let pooled2 = maxpool::orpool2x2(&words2, 48, 48, 1); // (24,24,1) = 576 words
+        lap("pool2", &mut mark, &mut times);
+
+        // --- fc1 (packed) --------------------------------------------------
+        let counts3 = fc::fc_packed(
+            &pooled2,
+            &self.wfc1_packed,
+            FC1_OUT,
+            24 * 24,
+            24 * 24 * CONV2_OUT,
+        );
+        lap("fc1", &mut mark, &mut times);
+
+        // --- float CPU tail -------------------------------------------------
+        let mut h3 = vec![0f32; FC1_OUT];
+        for i in 0..FC1_OUT {
+            h3[i] = if packing::threshold_bit(counts3[i] as f32, self.theta3[i], self.flip3[i])
+                == 1
+            {
+                1.0
+            } else {
+                -1.0
+            };
+        }
+        let mut h4 = fc::fc_float_bias(&h3, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT);
+        for v in h4.iter_mut() {
+            *v = packing::sign_pm1(*v);
+        }
+        let logits_v = fc::fc_float_bias(&h4, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
+        lap("fc_tail", &mut mark, &mut times);
+
+        let mut logits = [0f32; NUM_CLASSES];
+        logits.copy_from_slice(&logits_v);
+        (logits, times)
+    }
+
+    /// argmax class index for one image.
+    pub fn classify(&self, x: &[f32]) -> usize {
+        let (logits, _) = self.forward(x);
+        argmax(&logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-precision network
+// ---------------------------------------------------------------------------
+
+/// Full-precision baseline network (ReLU, biases).
+pub struct FloatNetwork {
+    w1: Vec<f32>, // (32, K*K*3)
+    b1: Vec<f32>,
+    w2: Vec<f32>, // (32, K*K*32)
+    b2: Vec<f32>,
+    wfc1: Vec<f32>, // (100, 18432)
+    bfc1: Vec<f32>,
+    wfc2: Vec<f32>,
+    bfc2: Vec<f32>,
+    wfc3: Vec<f32>,
+    bfc3: Vec<f32>,
+}
+
+impl FloatNetwork {
+    pub fn from_tensor_file(tf: &TensorFile) -> Result<Self, NetworkError> {
+        let net = Self {
+            w1: tf.f32("w1")?,
+            b1: tf.f32("b1")?,
+            w2: tf.f32("w2")?,
+            b2: tf.f32("b2")?,
+            wfc1: tf.f32("wfc1")?,
+            bfc1: tf.f32("bfc1")?,
+            wfc2: tf.f32("wfc2")?,
+            bfc2: tf.f32("bfc2")?,
+            wfc3: tf.f32("wfc3")?,
+            bfc3: tf.f32("bfc3")?,
+        };
+        expect_len("w1", &net.w1, CONV1_OUT * K * K * IMG_C)?;
+        expect_len("w2", &net.w2, CONV2_OUT * K * K * CONV1_OUT)?;
+        expect_len("wfc1", &net.wfc1, FC1_OUT * 24 * 24 * CONV2_OUT)?;
+        Ok(net)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, NetworkError> {
+        Ok(Self::from_tensor_file(&TensorFile::load(path)?)?)
+    }
+
+    /// Forward pass on one (96,96,3) image; returns logits + layer times.
+    pub fn forward(&self, x: &[f32]) -> ([f32; NUM_CLASSES], LayerTimings) {
+        assert_eq!(x.len(), IMG_H * IMG_W * IMG_C);
+        let mut times: LayerTimings = Vec::with_capacity(12);
+        let mut mark = Instant::now();
+        let lap = |name: &'static str, t: &mut Instant, times: &mut LayerTimings| {
+            let now = Instant::now();
+            times.push((name, now - *t));
+            *t = now;
+        };
+
+        let cols1 = im2col::im2col_float(x, IMG_H, IMG_W, IMG_C, K);
+        lap("im2col1", &mut mark, &mut times);
+        let mut a1 =
+            float_ops::gemm_blocked(&cols1, &self.w1, IMG_H * IMG_W, CONV1_OUT, K * K * IMG_C);
+        lap("gemm1", &mut mark, &mut times);
+        float_ops::add_bias(&mut a1, &self.b1);
+        float_ops::relu(&mut a1);
+        lap("relu1", &mut mark, &mut times);
+        let p1 = maxpool::maxpool2x2(&a1, IMG_H, IMG_W, CONV1_OUT); // (48,48,32)
+        lap("pool1", &mut mark, &mut times);
+
+        let cols2 = im2col::im2col_float(&p1, 48, 48, CONV1_OUT, K);
+        lap("im2col2", &mut mark, &mut times);
+        let mut a2 =
+            float_ops::gemm_blocked(&cols2, &self.w2, 48 * 48, CONV2_OUT, K * K * CONV1_OUT);
+        lap("gemm2", &mut mark, &mut times);
+        float_ops::add_bias(&mut a2, &self.b2);
+        float_ops::relu(&mut a2);
+        lap("relu2", &mut mark, &mut times);
+        let p2 = maxpool::maxpool2x2(&a2, 48, 48, CONV2_OUT); // (24,24,32)
+        lap("pool2", &mut mark, &mut times);
+
+        let mut h1 = fc::fc_float_bias(&p2, &self.wfc1, &self.bfc1, FC1_OUT, 24 * 24 * CONV2_OUT);
+        float_ops::relu(&mut h1);
+        lap("fc1", &mut mark, &mut times);
+        let mut h2 = fc::fc_float_bias(&h1, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT);
+        float_ops::relu(&mut h2);
+        let logits_v = fc::fc_float_bias(&h2, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
+        lap("fc_tail", &mut mark, &mut times);
+
+        let mut logits = [0f32; NUM_CLASSES];
+        logits.copy_from_slice(&logits_v);
+        (logits, times)
+    }
+
+    pub fn classify(&self, x: &[f32]) -> usize {
+        let (logits, _) = self.forward(x);
+        argmax(&logits)
+    }
+}
+
+/// Index of the maximum element (first wins ties, like jnp.argmax).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Sum per-layer timings into a map-like vec (helper for benches).
+pub fn total_time(times: &LayerTimings) -> Duration {
+    times.iter().map(|(_, d)| *d).sum()
+}
+
+/// Synthetic-weight builders shared by unit tests, integration tests,
+/// and benches (random but internally consistent networks).  Compiled
+/// unconditionally so integration tests and benches can use them without
+/// a feature flag.
+#[doc(hidden)]
+pub mod tests_support {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::tensorio::Tensor;
+
+    /// Build a random-but-valid BCNN weight file for a scheme.
+    pub fn synth_bcnn_tf(scheme: Scheme, seed: u64) -> TensorFile {
+        let mut rng = Xoshiro256::new(seed);
+        let c_in = scheme.input_channels();
+        let d1 = K * K * c_in;
+        let nw1 = packing::packed_width(d1, 32);
+        let mut tf = TensorFile::new();
+        // ±1 conv1 weights and their packed form (must be consistent!)
+        let w1_pm1: Vec<f32> = (0..CONV1_OUT * d1).map(|_| rng.next_pm1()).collect();
+        let mut w1_packed = Vec::new();
+        for o in 0..CONV1_OUT {
+            w1_packed.extend(packing::pack_pm1(&w1_pm1[o * d1..(o + 1) * d1], 32));
+        }
+        tf.insert("w1_pm1", Tensor::from_f32(vec![CONV1_OUT, d1], &w1_pm1));
+        tf.insert("w1_packed", Tensor::from_u32(vec![CONV1_OUT, nw1], &w1_packed));
+        tf.insert(
+            "theta1",
+            Tensor::from_f32(vec![CONV1_OUT], &(0..CONV1_OUT).map(|_| rng.next_normal_f32() * 5.0).collect::<Vec<_>>()),
+        );
+        tf.insert("flip1", Tensor::from_u32(vec![CONV1_OUT], &(0..CONV1_OUT).map(|_| (rng.next_u64() & 1) as u32).collect::<Vec<_>>()));
+        tf.insert("w2_packed", Tensor::from_u32(vec![CONV2_OUT, K * K], &(0..CONV2_OUT * K * K).map(|_| rng.next_u32()).collect::<Vec<_>>()));
+        tf.insert("theta2", Tensor::from_f32(vec![CONV2_OUT], &(0..CONV2_OUT).map(|_| rng.next_normal_f32() * 20.0).collect::<Vec<_>>()));
+        tf.insert("flip2", Tensor::from_u32(vec![CONV2_OUT], &(0..CONV2_OUT).map(|_| (rng.next_u64() & 1) as u32).collect::<Vec<_>>()));
+        tf.insert("wfc1_packed", Tensor::from_u32(vec![FC1_OUT, 576], &(0..FC1_OUT * 576).map(|_| rng.next_u32()).collect::<Vec<_>>()));
+        tf.insert("theta3", Tensor::from_f32(vec![FC1_OUT], &(0..FC1_OUT).map(|_| rng.next_normal_f32() * 50.0).collect::<Vec<_>>()));
+        tf.insert("flip3", Tensor::from_u32(vec![FC1_OUT], &(0..FC1_OUT).map(|_| (rng.next_u64() & 1) as u32).collect::<Vec<_>>()));
+        tf.insert("wfc2", Tensor::from_f32(vec![FC2_OUT, FC1_OUT], &(0..FC2_OUT * FC1_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
+        tf.insert("bfc2", Tensor::from_f32(vec![FC2_OUT], &vec![0.0; FC2_OUT]));
+        tf.insert("wfc3", Tensor::from_f32(vec![NUM_CLASSES, FC2_OUT], &(0..NUM_CLASSES * FC2_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
+        tf.insert("bfc3", Tensor::from_f32(vec![NUM_CLASSES], &vec![0.0; NUM_CLASSES]));
+        match scheme {
+            Scheme::Rgb => tf.insert("input_t", Tensor::from_f32(vec![3], &[-0.5, -0.5, -0.5])),
+            Scheme::Gray => tf.insert("input_t", Tensor::from_f32(vec![1], &[-0.5])),
+            _ => {}
+        }
+        tf
+    }
+
+    /// Random-but-consistent BCNN ready to run.
+    pub fn synth_bcnn_network(scheme: Scheme, seed: u64) -> BcnnNetwork {
+        BcnnNetwork::from_tensor_file(&synth_bcnn_tf(scheme, seed), scheme).unwrap()
+    }
+
+    /// Random float-network weight file.
+    pub fn synth_float_tf(seed: u64) -> TensorFile {
+        let mut rng = Xoshiro256::new(seed);
+        let mut tf = TensorFile::new();
+        tf.insert("w1", Tensor::from_f32(vec![CONV1_OUT, K * K * 3], &(0..CONV1_OUT * K * K * 3).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
+        tf.insert("b1", Tensor::from_f32(vec![CONV1_OUT], &vec![0.0; CONV1_OUT]));
+        tf.insert("w2", Tensor::from_f32(vec![CONV2_OUT, K * K * CONV1_OUT], &(0..CONV2_OUT * K * K * CONV1_OUT).map(|_| rng.next_normal_f32() * 0.05).collect::<Vec<_>>()));
+        tf.insert("b2", Tensor::from_f32(vec![CONV2_OUT], &vec![0.0; CONV2_OUT]));
+        tf.insert("wfc1", Tensor::from_f32(vec![FC1_OUT, 24 * 24 * CONV2_OUT], &(0..FC1_OUT * 24 * 24 * CONV2_OUT).map(|_| rng.next_normal_f32() * 0.01).collect::<Vec<_>>()));
+        tf.insert("bfc1", Tensor::from_f32(vec![FC1_OUT], &vec![0.0; FC1_OUT]));
+        tf.insert("wfc2", Tensor::from_f32(vec![FC2_OUT, FC1_OUT], &(0..FC2_OUT * FC1_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
+        tf.insert("bfc2", Tensor::from_f32(vec![FC2_OUT], &vec![0.0; FC2_OUT]));
+        tf.insert("wfc3", Tensor::from_f32(vec![NUM_CLASSES, FC2_OUT], &(0..NUM_CLASSES * FC2_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
+        tf.insert("bfc3", Tensor::from_f32(vec![NUM_CLASSES], &vec![0.0; NUM_CLASSES]));
+        tf
+    }
+
+    pub fn synth_float_network(seed: u64) -> FloatNetwork {
+        FloatNetwork::from_tensor_file(&synth_float_tf(seed)).unwrap()
+    }
+
+    /// Random image in [0,1].
+    pub fn synth_image(seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..IMG_H * IMG_W * IMG_C).map(|_| rng.next_f32()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::*;
+    use super::*;
+
+    #[test]
+    fn bcnn_forward_all_schemes_shapes() {
+        for scheme in Scheme::ALL {
+            let tf = synth_bcnn_tf(scheme, 42);
+            let net = BcnnNetwork::from_tensor_file(&tf, scheme).unwrap();
+            let (logits, times) = net.forward(&synth_image(1));
+            assert!(logits.iter().all(|v| v.is_finite()), "{scheme:?}: finite logits");
+            assert!(times.len() >= 9, "{scheme:?}: all layers timed");
+        }
+    }
+
+    #[test]
+    fn bcnn_forward_deterministic() {
+        let tf = synth_bcnn_tf(Scheme::Rgb, 7);
+        let net = BcnnNetwork::from_tensor_file(&tf, Scheme::Rgb).unwrap();
+        let x = synth_image(2);
+        let (a, _) = net.forward(&x);
+        let (b, _) = net.forward(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn float_network_roundtrip() {
+        let net = synth_float_network(3);
+        let (logits, times) = net.forward(&synth_image(4));
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(times.iter().any(|(n, _)| *n == "gemm2"));
+    }
+
+    #[test]
+    fn missing_tensor_is_reported() {
+        let tf = TensorFile::new();
+        assert!(BcnnNetwork::from_tensor_file(&tf, Scheme::Rgb).is_err());
+    }
+
+    #[test]
+    fn argmax_first_wins_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 0.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn classify_in_range() {
+        let tf = synth_bcnn_tf(Scheme::Lbp, 9);
+        let net = BcnnNetwork::from_tensor_file(&tf, Scheme::Lbp).unwrap();
+        assert!(net.classify(&synth_image(5)) < NUM_CLASSES);
+    }
+}

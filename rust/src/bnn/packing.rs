@@ -1,0 +1,255 @@
+//! Bit packing (paper Eq. 2) and the xnor-popcount dot product (Eq. 4).
+//!
+//! Conventions — identical to `python/compile/kernels/ref.py`:
+//! * +1 -> bit 1, -1 -> bit 0;
+//! * element `i` of a row lands in word `i / B` at bit `B-1-(i % B)`
+//!   (MSB-first), tail bits are 0;
+//! * `dot(a, b) = D - 2 * popcount(xor)` with `D` the real bit length —
+//!   valid because tail bits match (both 0).
+//!
+//! The hot-path kernels read pairs of u32 words as a single u64 so each
+//! `count_ones` covers 64 bits (the paper's 32-bit `__popc` doubled —
+//! the natural word width on this CPU).
+
+/// Packed words for a `d`-bit row at bitwidth `b`.
+#[inline]
+pub fn packed_width(d: usize, b: usize) -> usize {
+    d.div_ceil(b)
+}
+
+/// Pack a row of {0,1} bits into u32 words at bitwidth `b` (<= 32).
+pub fn pack_bits(bits: &[u32], b: usize) -> Vec<u32> {
+    assert!(b >= 1 && b <= 32);
+    let nw = packed_width(bits.len(), b);
+    let mut out = vec![0u32; nw];
+    for (i, &bit) in bits.iter().enumerate() {
+        debug_assert!(bit <= 1);
+        out[i / b] |= bit << (b - 1 - (i % b));
+    }
+    out
+}
+
+/// Pack a row of ±1 floats (bit = x > 0).
+pub fn pack_pm1(xs: &[f32], b: usize) -> Vec<u32> {
+    assert!(b >= 1 && b <= 32);
+    let nw = packed_width(xs.len(), b);
+    let mut out = vec![0u32; nw];
+    for (i, &x) in xs.iter().enumerate() {
+        out[i / b] |= u32::from(x > 0.0) << (b - 1 - (i % b));
+    }
+    out
+}
+
+/// Unpack words back to `d` bits.
+pub fn unpack_bits(words: &[u32], d: usize, b: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(d);
+    for i in 0..d {
+        out.push((words[i / b] >> (b - 1 - (i % b))) & 1);
+    }
+    out
+}
+
+/// Eq. 4: xnor-popcount dot of two packed rows (same layout, equal pads).
+#[inline]
+pub fn packed_dot(a: &[u32], b: &[u32], d_real: usize) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    d_real as i32 - 2 * xor_popcount(a, b) as i32
+}
+
+/// Total popcount of `a ^ b`, u64-at-a-time where both operands share
+/// 8-byte alignment; scalar otherwise (mixed alignments would mis-pair
+/// the wide/narrow splits — caught by `mixed_alignment_slices` below).
+#[inline]
+pub fn xor_popcount(a: &[u32], b: &[u32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc: u32 = 0;
+    let (a2, a_rem) = as_u64_chunks(a);
+    let (b2, b_rem) = as_u64_chunks(b);
+    if a2.len() == b2.len() {
+        for (&x, &y) in a2.iter().zip(b2) {
+            acc += (x ^ y).count_ones();
+        }
+        for (&x, &y) in a_rem.iter().zip(b_rem) {
+            acc += (x ^ y).count_ones();
+        }
+    } else {
+        for (&x, &y) in a.iter().zip(b) {
+            acc += (x ^ y).count_ones();
+        }
+    }
+    acc
+}
+
+/// Reinterpret a u32 slice as u64 chunks + u32 remainder (safe: alignment
+/// of Vec<u32> allocations is at least 4; we only widen when the pointer
+/// is 8-aligned, otherwise fall back to the scalar tail for everything).
+#[inline]
+pub fn as_u64_chunks(words: &[u32]) -> (&[u64], &[u32]) {
+    // SAFETY: we check 8-byte alignment before casting; the u64 slice
+    // covers exactly len/2 pairs of u32s; endianness does not matter for
+    // xor+popcount.
+    if words.as_ptr() as usize % 8 == 0 {
+        let pairs = words.len() / 2;
+        let head = unsafe { std::slice::from_raw_parts(words.as_ptr() as *const u64, pairs) };
+        (head, &words[pairs * 2..])
+    } else {
+        (&[], words)
+    }
+}
+
+/// Sign function from the paper (Eq. 1): -1 if x <= 0 else +1.
+#[inline]
+pub fn sign_pm1(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Folded BN threshold: bit = (y > theta) xor flip (ref.py convention).
+#[inline]
+pub fn threshold_bit(y: f32, theta: f32, flip: u32) -> u32 {
+    (u32::from(y > theta)) ^ flip
+}
+
+/// Channel-pack one pixel: bits for channels 0..C (C <= 32), channel c at
+/// bit position 31-c (matches ref.pack_bits over the trailing channel axis
+/// with B=32).
+#[inline]
+pub fn pack_channels32(bits: impl IntoIterator<Item = u32>) -> u32 {
+    let mut w = 0u32;
+    for (c, bit) in bits.into_iter().enumerate() {
+        debug_assert!(c < 32 && bit <= 1);
+        w |= bit << (31 - c);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure, ensure_eq};
+
+    /// Scalar reference dot in the ±1 domain.
+    fn naive_dot(a_bits: &[u32], b_bits: &[u32]) -> i32 {
+        a_bits
+            .iter()
+            .zip(b_bits)
+            .map(|(&x, &y)| if x == y { 1 } else { -1 })
+            .sum()
+    }
+
+    #[test]
+    fn pack_matches_eq2_example() {
+        // bits 1,0,1,1 at B=4 -> 0b1011
+        assert_eq!(pack_bits(&[1, 0, 1, 1], 4), vec![0b1011]);
+        // element 0 is the MSB
+        assert_eq!(pack_bits(&[1, 0, 0, 0], 4), vec![0b1000]);
+    }
+
+    #[test]
+    fn pack_tail_bits_zero() {
+        let w = pack_bits(&[1, 1, 1], 32);
+        assert_eq!(w, vec![0b111u32 << 29]);
+    }
+
+    #[test]
+    fn unpack_inverts_pack_all_bitwidths() {
+        prop::check(128, |g| {
+            let b = g.usize_in(1, 32);
+            let d = g.usize_in(1, 300);
+            let bits = g.bits(d);
+            let packed = pack_bits(&bits, b);
+            ensure_eq(unpack_bits(&packed, d, b), bits, "unpack∘pack = id")
+        });
+    }
+
+    #[test]
+    fn packed_dot_equals_naive_dot() {
+        prop::check(256, |g| {
+            let b = *g.pick(&[8usize, 16, 25, 32]);
+            let d = g.usize_in(1, 2048);
+            let xa = g.bits(d);
+            let xb = g.bits(d);
+            let pa = pack_bits(&xa, b);
+            let pb = pack_bits(&xb, b);
+            ensure_eq(packed_dot(&pa, &pb, d), naive_dot(&xa, &xb), "Eq.4")
+        });
+    }
+
+    #[test]
+    fn packed_dot_bounds() {
+        prop::check(128, |g| {
+            let d = g.usize_in(1, 512);
+            let pa = pack_bits(&g.bits(d), 32);
+            let pb = pack_bits(&g.bits(d), 32);
+            let dot = packed_dot(&pa, &pb, d);
+            ensure(
+                dot.abs() as usize <= d && (dot + d as i32) % 2 == 0,
+                format!("dot {dot} within ±{d} and parity"),
+            )
+        });
+    }
+
+    #[test]
+    fn pack_pm1_agrees_with_pack_bits() {
+        prop::check(64, |g| {
+            let d = g.usize_in(1, 256);
+            let xs = g.pm1(d);
+            let bits: Vec<u32> = xs.iter().map(|&x| u32::from(x > 0.0)).collect();
+            ensure_eq(pack_pm1(&xs, 32), pack_bits(&bits, 32), "pm1 packing")
+        });
+    }
+
+    #[test]
+    fn mixed_alignment_slices() {
+        // slices offset by one u32 have different u64 splits; the scalar
+        // fallback must still count every word (regression: the zip of
+        // mismatched wide/narrow splits silently dropped words)
+        prop::check(64, |g| {
+            let n = g.usize_in(2, 33);
+            let buf = g.words(n + 1);
+            let a = &buf[0..n];
+            let b = &buf[1..n + 1];
+            let scalar: u32 = a.iter().zip(b).map(|(&x, &y)| (x ^ y).count_ones()).sum();
+            ensure_eq(xor_popcount(a, b), scalar, "offset slices")
+        });
+    }
+
+    #[test]
+    fn xor_popcount_handles_odd_lengths() {
+        prop::check(64, |g| {
+            let n = g.usize_in(1, 65);
+            let a = g.words(n);
+            let b = g.words(n);
+            let scalar: u32 = a.iter().zip(&b).map(|(&x, &y)| (x ^ y).count_ones()).sum();
+            ensure_eq(xor_popcount(&a, &b), scalar, "u64 fast path == scalar")
+        });
+    }
+
+    #[test]
+    fn sign_of_zero_is_minus_one() {
+        assert_eq!(sign_pm1(0.0), -1.0);
+        assert_eq!(sign_pm1(-0.5), -1.0);
+        assert_eq!(sign_pm1(1e-30), 1.0);
+    }
+
+    #[test]
+    fn threshold_bit_flip_semantics() {
+        assert_eq!(threshold_bit(5.0, 3.0, 0), 1);
+        assert_eq!(threshold_bit(5.0, 3.0, 1), 0);
+        assert_eq!(threshold_bit(2.0, 3.0, 0), 0);
+        assert_eq!(threshold_bit(2.0, 3.0, 1), 1);
+        // exact equality: y > theta is false
+        assert_eq!(threshold_bit(3.0, 3.0, 0), 0);
+    }
+
+    #[test]
+    fn pack_channels32_is_msb_first() {
+        assert_eq!(pack_channels32([1, 0, 0]), 1 << 31);
+        assert_eq!(pack_channels32([0, 1, 1]), (1 << 30) | (1 << 29));
+        let all = pack_channels32((0..32).map(|_| 1u32));
+        assert_eq!(all, u32::MAX);
+    }
+}

@@ -1,0 +1,233 @@
+//! Inference backends: the pure-Rust engine and the PJRT runtime.
+//!
+//! Both expose `infer_batch(images) -> logits`; the batcher is agnostic.
+//! The PJRT client is not `Send`, so `RuntimeBackend` owns a dedicated
+//! executor thread and proxies batches over channels.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
+use crate::runtime::{Artifacts, ModelRuntime, RuntimeError};
+use crate::util::threadpool::scoped_map;
+
+pub const IMG_ELEMS: usize = 96 * 96 * 3;
+
+/// A model backend the batcher can drive.
+pub trait InferBackend: Send + Sync {
+    /// Human-readable backend name (for metrics / CLI).
+    fn name(&self) -> String;
+
+    /// Batch sizes the backend can execute natively, ascending.
+    /// The engine accepts anything (`vec![usize::MAX]` sentinel).
+    fn supported_batches(&self) -> Vec<usize>;
+
+    /// Run `n` images (flattened, `n * IMG_ELEMS` floats); returns
+    /// `n * NUM_CLASSES` logits.
+    fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String>;
+}
+
+// ---------------------------------------------------------------------------
+// pure-Rust engine backend
+// ---------------------------------------------------------------------------
+
+/// Which network the engine runs.
+pub enum EngineModel {
+    Bcnn(BcnnNetwork),
+    Float(FloatNetwork),
+}
+
+/// CPU engine backend; data-parallel across a scoped thread pool.
+pub struct EngineBackend {
+    model: EngineModel,
+    threads: usize,
+    label: String,
+}
+
+impl EngineBackend {
+    pub fn new(model: EngineModel, threads: usize, label: impl Into<String>) -> Self {
+        Self { model, threads: threads.max(1), label: label.into() }
+    }
+
+    pub fn bcnn(net: BcnnNetwork, threads: usize) -> Self {
+        let label = format!("engine/bcnn_{}", net.scheme.name());
+        Self::new(EngineModel::Bcnn(net), threads, label)
+    }
+
+    pub fn float(net: FloatNetwork, threads: usize) -> Self {
+        Self::new(EngineModel::Float(net), threads, "engine/float")
+    }
+}
+
+impl InferBackend for EngineBackend {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn supported_batches(&self) -> Vec<usize> {
+        vec![usize::MAX] // any size
+    }
+
+    fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+        if images.len() % IMG_ELEMS != 0 {
+            return Err(format!("batch payload {} not a multiple of {IMG_ELEMS}", images.len()));
+        }
+        let n = images.len() / IMG_ELEMS;
+        let per_image: Vec<[f32; NUM_CLASSES]> = if n == 1 || self.threads == 1 {
+            (0..n)
+                .map(|i| {
+                    let x = &images[i * IMG_ELEMS..(i + 1) * IMG_ELEMS];
+                    match &self.model {
+                        EngineModel::Bcnn(m) => m.forward(x).0,
+                        EngineModel::Float(m) => m.forward(x).0,
+                    }
+                })
+                .collect()
+        } else {
+            scoped_map(n, self.threads, |i| {
+                let x = &images[i * IMG_ELEMS..(i + 1) * IMG_ELEMS];
+                match &self.model {
+                    EngineModel::Bcnn(m) => m.forward(x).0,
+                    EngineModel::Float(m) => m.forward(x).0,
+                }
+            })
+        };
+        let mut out = Vec::with_capacity(n * NUM_CLASSES);
+        for l in per_image {
+            out.extend_from_slice(&l);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT runtime backend (dedicated executor thread)
+// ---------------------------------------------------------------------------
+
+enum RtMsg {
+    Infer { images: Vec<f32>, resp: mpsc::Sender<Result<Vec<f32>, String>> },
+    Shutdown,
+}
+
+/// Backend executing AOT HLO artifacts on a dedicated PJRT thread.
+///
+/// Loads every batch variant of a model family (e.g.
+/// `model_bcnn_rgb_ref_b{1,4,16,64}`) and dispatches each batch to the
+/// matching executable.
+pub struct RuntimeBackend {
+    tx: mpsc::Sender<RtMsg>,
+    batches: Vec<usize>,
+    label: String,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RuntimeBackend {
+    /// `model_names`: artifact names keyed by their batch size.
+    pub fn spawn(
+        artifacts: Arc<Artifacts>,
+        model_names: Vec<(usize, String)>,
+        label: impl Into<String>,
+    ) -> Result<Self, RuntimeError> {
+        let (tx, rx) = mpsc::channel::<RtMsg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<usize>, String>>();
+        let names = model_names.clone();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                // All PJRT state lives on this thread (client is !Send).
+                let client = match crate::runtime::client::cpu_client() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                let mut models: Vec<(usize, ModelRuntime)> = Vec::new();
+                for (bs, name) in &names {
+                    match ModelRuntime::load(&client, &artifacts, name) {
+                        Ok(m) => models.push((*bs, m)),
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{name}: {e}")));
+                            return;
+                        }
+                    }
+                }
+                models.sort_by_key(|(bs, _)| *bs);
+                let _ = ready_tx.send(Ok(models.iter().map(|(bs, _)| *bs).collect()));
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        RtMsg::Shutdown => break,
+                        RtMsg::Infer { images, resp } => {
+                            let n = images.len() / IMG_ELEMS;
+                            let result = models
+                                .iter()
+                                .find(|(bs, _)| *bs == n)
+                                .ok_or_else(|| format!("no executable for batch {n}"))
+                                .and_then(|(_, m)| m.infer(&images).map_err(|e| e.to_string()));
+                            let _ = resp.send(result);
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt executor");
+        let batches = ready_rx
+            .recv()
+            .map_err(|_| RuntimeError::Xla("executor thread died during init".into()))?
+            .map_err(RuntimeError::Xla)?;
+        Ok(Self { tx, batches, label: label.into(), handle: Some(handle) })
+    }
+}
+
+impl InferBackend for RuntimeBackend {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn supported_batches(&self) -> Vec<usize> {
+        self.batches.clone()
+    }
+
+    fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(RtMsg::Infer { images: images.to_vec(), resp: resp_tx })
+            .map_err(|_| "pjrt executor gone".to_string())?;
+        resp_rx.recv().map_err(|_| "pjrt executor dropped response".to_string())?
+    }
+}
+
+impl Drop for RuntimeBackend {
+    fn drop(&mut self) {
+        let _ = self.tx.send(RtMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::network::tests_support::synth_bcnn_network;
+    use crate::input::binarize::Scheme;
+
+    #[test]
+    fn engine_backend_single_and_batch_agree() {
+        let net = synth_bcnn_network(Scheme::Rgb, 11);
+        let be = EngineBackend::bcnn(net, 4);
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let imgs: Vec<f32> = (0..3 * IMG_ELEMS).map(|_| rng.next_f32()).collect();
+        let batched = be.infer_batch(&imgs).unwrap();
+        for i in 0..3 {
+            let single = be.infer_batch(&imgs[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]).unwrap();
+            assert_eq!(&batched[i * 4..(i + 1) * 4], &single[..]);
+        }
+    }
+
+    #[test]
+    fn engine_backend_rejects_ragged_payload() {
+        let net = synth_bcnn_network(Scheme::Lbp, 3);
+        let be = EngineBackend::bcnn(net, 1);
+        assert!(be.infer_batch(&[0.0; 100]).is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Dynamic batcher: drains the admission queue under a size+deadline
+//! policy, plans backend-executable batch sizes, runs the backend, and
+//! fans responses back out.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::backend::{InferBackend, IMG_ELEMS};
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use super::request::{InferRequest, InferResponse};
+use crate::bnn::network::{argmax, NUM_CLASSES};
+
+/// Batch formation policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch (1 = the paper's real-time protocol).
+    pub max_batch: usize,
+    /// How long to hold an open batch waiting for more requests.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 1, max_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Split `n` pending requests into backend-supported chunk sizes.
+///
+/// Greedy largest-first; the remainder uses the smallest supported size
+/// that covers it (the tail gets zero-padded by the caller, padded
+/// outputs discarded).  `supported` must be ascending; `usize::MAX`
+/// means "any size" (pure-Rust engine).
+pub fn plan_batches(n: usize, supported: &[usize]) -> Vec<(usize, usize)> {
+    assert!(!supported.is_empty());
+    if supported.contains(&usize::MAX) {
+        return if n == 0 { vec![] } else { vec![(n, n)] };
+    }
+    let mut plan = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        // largest supported <= left, else smallest supported >= left
+        let exec = match supported.iter().rev().find(|&&b| b <= left) {
+            Some(&b) => b,
+            None => *supported.first().unwrap(),
+        };
+        let real = exec.min(left);
+        plan.push((real, exec));
+        left -= real;
+    }
+    plan
+}
+
+/// The batcher thread bundle.
+pub struct Batcher {
+    handle: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    /// Kept so `drop` can close the queue and wake a blocked `pop_wait`
+    /// (otherwise joining the thread would deadlock).
+    queue: Arc<BoundedQueue<InferRequest>>,
+}
+
+impl Batcher {
+    /// Start a batcher draining `queue` into `backend`.
+    pub fn spawn(
+        queue: Arc<BoundedQueue<InferRequest>>,
+        backend: Arc<dyn InferBackend>,
+        policy: BatchPolicy,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let queue2 = Arc::clone(&queue);
+        let handle = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || {
+                let supported = backend.supported_batches();
+                while !stop2.load(Ordering::Relaxed) {
+                    let batch = queue2.drain_batch(policy.max_batch, policy.max_wait);
+                    if batch.is_empty() {
+                        break; // queue closed and drained
+                    }
+                    Self::run_batch(batch, &*backend, &supported, &metrics);
+                }
+            })
+            .expect("spawn batcher");
+        Self { handle: Some(handle), stop, queue }
+    }
+
+    fn run_batch(
+        mut reqs: Vec<InferRequest>,
+        backend: &dyn InferBackend,
+        supported: &[usize],
+        metrics: &Metrics,
+    ) {
+        let plan = plan_batches(reqs.len(), supported);
+        let mut cursor = 0usize;
+        for (real, exec) in plan {
+            let chunk: Vec<InferRequest> = reqs.drain(..real).collect();
+            cursor += real;
+            let _ = cursor;
+            // assemble the padded payload
+            let mut payload = vec![0f32; exec * IMG_ELEMS];
+            for (i, r) in chunk.iter().enumerate() {
+                payload[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&r.image);
+            }
+            let started = Instant::now();
+            let result = backend.infer_batch(&payload);
+            let exec_time = started.elapsed();
+            match result {
+                Ok(logits) => {
+                    metrics.record_batch(real, exec_time);
+                    for (i, r) in chunk.into_iter().enumerate() {
+                        let l = logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec();
+                        let queue_time = started.duration_since(r.enqueued);
+                        metrics.record_request(queue_time, exec_time);
+                        let resp = InferResponse {
+                            id: r.id,
+                            class: argmax(&l),
+                            logits: l,
+                            queue_time,
+                            exec_time,
+                            batch_size: real,
+                            error: None,
+                        };
+                        let _ = r.resp.send(resp);
+                    }
+                }
+                Err(msg) => {
+                    metrics.record_failure(real);
+                    for r in chunk {
+                        let _ = r.resp.send(InferResponse::failed(r.id, msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Signal the thread and wait for it to drain.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.close(); // wakes a blocked pop_wait
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure};
+
+    #[test]
+    fn plan_exact_fit() {
+        assert_eq!(plan_batches(8, &[1, 4, 16]), vec![(4, 4), (4, 4)]);
+        assert_eq!(plan_batches(16, &[1, 4, 16]), vec![(16, 16)]);
+    }
+
+    #[test]
+    fn plan_remainder_pads_up() {
+        // 5 = 4 + 1
+        assert_eq!(plan_batches(5, &[1, 4, 16]), vec![(4, 4), (1, 1)]);
+        // 3 with only {4,16} available -> one padded 4-batch
+        assert_eq!(plan_batches(3, &[4, 16]), vec![(3, 4)]);
+    }
+
+    #[test]
+    fn plan_any_size_engine() {
+        assert_eq!(plan_batches(7, &[usize::MAX]), vec![(7, 7)]);
+        assert_eq!(plan_batches(0, &[usize::MAX]), vec![]);
+    }
+
+    #[test]
+    fn plan_properties() {
+        prop::check(256, |g| {
+            let n = g.usize_in(0, 200);
+            let supported: Vec<usize> = match g.usize_in(0, 2) {
+                0 => vec![1],
+                1 => vec![1, 4, 16, 64],
+                _ => vec![4, 16],
+            };
+            let plan = plan_batches(n, &supported);
+            let total: usize = plan.iter().map(|(real, _)| real).sum();
+            ensure(total == n, format!("covers all: {total} != {n}"))?;
+            for (real, exec) in &plan {
+                ensure(real <= exec, "real <= exec")?;
+                ensure(supported.contains(exec), format!("exec {exec} supported"))?;
+            }
+            // padding waste is bounded by the smallest supported size
+            let waste: usize = plan.iter().map(|(r, e)| e - r).sum();
+            ensure(
+                waste < *supported.first().unwrap(),
+                format!("waste {waste} < min supported"),
+            )
+        });
+    }
+}

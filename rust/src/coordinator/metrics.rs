@@ -1,0 +1,143 @@
+//! Serving metrics: latency histograms + counters, snapshot as JSON.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::histogram::Histogram;
+use crate::util::json::{Json, JsonObj};
+
+#[derive(Default)]
+struct Counters {
+    submitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    batched_requests: u64,
+}
+
+/// Thread-safe metrics hub shared by admission, batcher, and server.
+pub struct Metrics {
+    queue_hist: Mutex<Histogram>,
+    exec_hist: Mutex<Histogram>,
+    e2e_hist: Mutex<Histogram>,
+    counters: Mutex<Counters>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            queue_hist: Mutex::new(Histogram::new()),
+            exec_hist: Mutex::new(Histogram::new()),
+            e2e_hist: Mutex::new(Histogram::new()),
+            counters: Mutex::new(Counters::default()),
+        }
+    }
+
+    pub fn record_submit(&self) {
+        self.counters.lock().unwrap().submitted += 1;
+    }
+
+    pub fn record_reject(&self) {
+        self.counters.lock().unwrap().rejected += 1;
+    }
+
+    /// Called per request completing in a batch.
+    pub fn record_request(&self, queue_time: Duration, exec_time: Duration) {
+        self.queue_hist.lock().unwrap().record(queue_time.as_nanos() as u64);
+        self.exec_hist.lock().unwrap().record(exec_time.as_nanos() as u64);
+        self.e2e_hist
+            .lock()
+            .unwrap()
+            .record((queue_time + exec_time).as_nanos() as u64);
+        self.counters.lock().unwrap().completed += 1;
+    }
+
+    /// Called once per executed batch.
+    pub fn record_batch(&self, size: usize, _exec: Duration) {
+        let mut c = self.counters.lock().unwrap();
+        c.batches += 1;
+        c.batched_requests += size as u64;
+    }
+
+    pub fn record_failure(&self, size: usize) {
+        self.counters.lock().unwrap().failed += size as u64;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.counters.lock().unwrap().completed
+    }
+
+    /// JSON snapshot (served by the `stats` op and printed by the CLI).
+    pub fn snapshot(&self) -> Json {
+        let c = self.counters.lock().unwrap();
+        let mut obj = JsonObj::new();
+        obj.insert("submitted", Json::from(c.submitted as usize));
+        obj.insert("rejected", Json::from(c.rejected as usize));
+        obj.insert("completed", Json::from(c.completed as usize));
+        obj.insert("failed", Json::from(c.failed as usize));
+        obj.insert("batches", Json::from(c.batches as usize));
+        let mean_batch = if c.batches > 0 {
+            c.batched_requests as f64 / c.batches as f64
+        } else {
+            0.0
+        };
+        obj.insert("mean_batch_size", Json::from(mean_batch));
+        drop(c);
+        for (name, hist) in [
+            ("queue_us", &self.queue_hist),
+            ("exec_us", &self.exec_hist),
+            ("e2e_us", &self.e2e_hist),
+        ] {
+            let h = hist.lock().unwrap();
+            let mut stats = JsonObj::new();
+            stats.insert("count", Json::from(h.count() as usize));
+            stats.insert("mean", Json::from(h.mean_ns() / 1_000.0));
+            stats.insert("p50", Json::from(h.quantile_ns(0.5) / 1_000.0));
+            stats.insert("p95", Json::from(h.quantile_ns(0.95) / 1_000.0));
+            stats.insert("p99", Json::from(h.quantile_ns(0.99) / 1_000.0));
+            stats.insert("max", Json::from(h.max_ns() as f64 / 1_000.0));
+            obj.insert(name, Json::Obj(stats));
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_counts() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_reject();
+        m.record_request(Duration::from_micros(50), Duration::from_micros(150));
+        m.record_batch(1, Duration::from_micros(150));
+        let snap = m.snapshot();
+        assert_eq!(snap.get("submitted").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(snap.get("rejected").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(snap.get("completed").unwrap().as_usize().unwrap(), 1);
+        let e2e = snap.get("e2e_us").unwrap();
+        assert_eq!(e2e.get("count").unwrap().as_usize().unwrap(), 1);
+        let mean = e2e.get("mean").unwrap().as_f64().unwrap();
+        assert!((mean - 200.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn mean_batch_size() {
+        let m = Metrics::new();
+        m.record_batch(4, Duration::ZERO);
+        m.record_batch(8, Duration::ZERO);
+        let snap = m.snapshot();
+        let mb = snap.get("mean_batch_size").unwrap().as_f64().unwrap();
+        assert!((mb - 6.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,33 @@
+//! Layer-3 coordinator: the serving system around the compiled models.
+//!
+//! Request flow (the paper's "real-time inference" use case, Section 2.2,
+//! generalized to a serving loop):
+//!
+//! ```text
+//!  client ──submit──▶ admission (bounded queue, backpressure)
+//!                       │
+//!                  batcher thread (size + deadline policy)
+//!                       │ batches
+//!                  backend: pure-Rust engine (parallel workers)
+//!                           or PJRT executor thread (HLO artifacts)
+//!                       │ logits
+//!                  response channels + metrics (latency histograms)
+//! ```
+//!
+//! The default policy is `max_batch = 1` — the paper's protocol feeds
+//! images one at a time ("batch processing is not a suitable option for
+//! real-time applications") — and the batching ablation (E6) raises it.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+
+pub use backend::{EngineBackend, InferBackend, RuntimeBackend};
+pub use batcher::{plan_batches, BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use queue::BoundedQueue;
+pub use request::{InferRequest, InferResponse, RequestId};
+pub use router::Router;

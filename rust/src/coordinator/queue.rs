@@ -1,0 +1,204 @@
+//! Bounded MPMC queue with blocking pop and batch draining — the
+//! admission-control stage (backpressure: `try_push` fails when full).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded FIFO; producers use `try_push` (admission) and consumers
+/// `pop_wait` / `drain_batch`.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum PushError {
+    #[error("queue full (capacity reached) — backpressure")]
+    Full,
+    #[error("queue closed")]
+    Closed,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Admission: enqueue or fail fast (the caller surfaces 429-style
+    /// rejection to the client).
+    pub fn try_push(&self, item: T) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.items.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` when the queue is closed and drained.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop one item (blocking), then keep draining until either
+    /// `max_batch` items are collected or `window` elapses.
+    /// Returns an empty vec only when closed.
+    pub fn drain_batch(&self, max_batch: usize, window: Duration) -> Vec<T> {
+        let mut batch = Vec::new();
+        match self.pop_wait() {
+            Some(first) => batch.push(first),
+            None => return batch,
+        }
+        if max_batch <= 1 {
+            return batch;
+        }
+        let deadline = Instant::now() + window;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            while batch.len() < max_batch {
+                match g.items.pop_front() {
+                    Some(it) => batch.push(it),
+                    None => break,
+                }
+            }
+            if batch.len() >= max_batch || g.closed {
+                return batch;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return batch;
+            }
+            let (ng, timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if timeout.timed_out() && g.items.is_empty() {
+                return batch;
+            }
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain whatever is left.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full));
+        assert_eq!(q.pop_wait(), Some(1));
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_rejects_and_drains() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2), Err(PushError::Closed));
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), None);
+    }
+
+    #[test]
+    fn drain_batch_respects_max() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.try_push(i).unwrap();
+        }
+        let b = q.drain_batch(4, Duration::from_millis(1));
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn drain_batch_returns_partial_after_window() {
+        let q = BoundedQueue::new(16);
+        q.try_push(42).unwrap();
+        let start = Instant::now();
+        let b = q.drain_batch(8, Duration::from_millis(20));
+        assert_eq!(b, vec![42]);
+        assert!(start.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn drain_batch_collects_across_threads() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..4 {
+                std::thread::sleep(Duration::from_millis(2));
+                q2.try_push(i).unwrap();
+            }
+        });
+        let b = q.drain_batch(4, Duration::from_millis(200));
+        producer.join().unwrap();
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(10));
+        q.try_push(99).unwrap();
+        assert_eq!(h.join().unwrap(), Some(99));
+    }
+}

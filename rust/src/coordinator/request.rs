@@ -1,0 +1,59 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+pub type RequestId = u64;
+
+/// A single inference request: one (96,96,3) image.
+pub struct InferRequest {
+    pub id: RequestId,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+    /// Response channel (one-shot).
+    pub resp: mpsc::Sender<InferResponse>,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    pub logits: Vec<f32>,
+    /// argmax class index.
+    pub class: usize,
+    /// Time spent waiting in the queue + batch window.
+    pub queue_time: Duration,
+    /// Backend execution time for the batch this request rode in.
+    pub exec_time: Duration,
+    /// Size of that batch.
+    pub batch_size: usize,
+    /// Set when the backend failed; logits empty in that case.
+    pub error: Option<String>,
+}
+
+impl InferResponse {
+    pub fn failed(id: RequestId, msg: String) -> Self {
+        Self {
+            id,
+            logits: Vec::new(),
+            class: usize::MAX,
+            queue_time: Duration::ZERO,
+            exec_time: Duration::ZERO,
+            batch_size: 0,
+            error: Some(msg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failed_response_is_marked() {
+        let r = InferResponse::failed(7, "boom".into());
+        assert_eq!(r.id, 7);
+        assert!(r.error.is_some());
+        assert!(r.logits.is_empty());
+    }
+}

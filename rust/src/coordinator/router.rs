@@ -1,0 +1,254 @@
+//! The router: the serving front door.  Owns one (queue, batcher,
+//! backend, metrics) lane per registered model variant and routes
+//! submissions by variant name.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use super::backend::{InferBackend, IMG_ELEMS};
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::queue::{BoundedQueue, PushError};
+use super::request::{InferRequest, InferResponse, RequestId};
+use crate::util::json::{Json, JsonObj};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RouteError {
+    #[error("unknown model variant {0:?} (available: {1})")]
+    UnknownVariant(String, String),
+    #[error("admission rejected: {0}")]
+    Rejected(#[from] PushError),
+    #[error("image payload must be {IMG_ELEMS} floats, got {0}")]
+    BadPayload(usize),
+}
+
+struct Lane {
+    queue: Arc<BoundedQueue<InferRequest>>,
+    metrics: Arc<Metrics>,
+    _batcher: Batcher,
+}
+
+/// Multi-variant serving router.
+pub struct Router {
+    lanes: HashMap<String, Lane>,
+    default_variant: String,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn builder() -> RouterBuilder {
+        RouterBuilder { lanes: Vec::new(), queue_capacity: 1024, policy: BatchPolicy::default() }
+    }
+
+    fn lane(&self, variant: &str) -> Result<&Lane, RouteError> {
+        let key = if variant.is_empty() { &self.default_variant } else { variant };
+        self.lanes.get(key).ok_or_else(|| {
+            RouteError::UnknownVariant(
+                key.to_string(),
+                self.lanes.keys().cloned().collect::<Vec<_>>().join(", "),
+            )
+        })
+    }
+
+    /// Submit one image; returns the request id and the response channel.
+    pub fn submit(
+        &self,
+        variant: &str,
+        image: Vec<f32>,
+    ) -> Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError> {
+        if image.len() != IMG_ELEMS {
+            return Err(RouteError::BadPayload(image.len()));
+        }
+        let lane = self.lane(variant)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        lane.metrics.record_submit();
+        let req = InferRequest { id, image, enqueued: Instant::now(), resp: tx };
+        match lane.queue.try_push(req) {
+            Ok(()) => Ok((id, rx)),
+            Err(e) => {
+                lane.metrics.record_reject();
+                Err(RouteError::Rejected(e))
+            }
+        }
+    }
+
+    /// Submit and block for the response (convenience for CLI paths).
+    pub fn infer_blocking(
+        &self,
+        variant: &str,
+        image: Vec<f32>,
+    ) -> Result<InferResponse, RouteError> {
+        let (_, rx) = self.submit(variant, image)?;
+        Ok(rx.recv().expect("batcher dropped response channel"))
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.lanes.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn default_variant(&self) -> &str {
+        &self.default_variant
+    }
+
+    pub fn metrics(&self, variant: &str) -> Result<Arc<Metrics>, RouteError> {
+        Ok(Arc::clone(&self.lane(variant)?.metrics))
+    }
+
+    /// Aggregate stats across all lanes.
+    pub fn stats(&self) -> Json {
+        let mut obj = JsonObj::new();
+        let mut names: Vec<&String> = self.lanes.keys().collect();
+        names.sort();
+        for name in names {
+            obj.insert(name.clone(), self.lanes[name].metrics.snapshot());
+        }
+        Json::Obj(obj)
+    }
+
+    /// Close all queues (drains in-flight work; batchers exit).
+    pub fn shutdown(&self) {
+        for lane in self.lanes.values() {
+            lane.queue.close();
+        }
+    }
+}
+
+/// Builder: register variants then `build`.
+pub struct RouterBuilder {
+    lanes: Vec<(String, Arc<dyn InferBackend>)>,
+    queue_capacity: usize,
+    policy: BatchPolicy,
+}
+
+impl RouterBuilder {
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_capacity = cap;
+        self
+    }
+
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn variant(mut self, name: impl Into<String>, backend: Arc<dyn InferBackend>) -> Self {
+        self.lanes.push((name.into(), backend));
+        self
+    }
+
+    pub fn build(self) -> Router {
+        assert!(!self.lanes.is_empty(), "router needs at least one variant");
+        let default_variant = self.lanes[0].0.clone();
+        let mut lanes = HashMap::new();
+        for (name, backend) in self.lanes {
+            let queue = Arc::new(BoundedQueue::new(self.queue_capacity));
+            let metrics = Arc::new(Metrics::new());
+            let batcher = Batcher::spawn(
+                Arc::clone(&queue),
+                backend,
+                self.policy,
+                Arc::clone(&metrics),
+            );
+            lanes.insert(name, Lane { queue, metrics, _batcher: batcher });
+        }
+        Router { lanes, default_variant, next_id: AtomicU64::new(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::network::tests_support::synth_bcnn_network;
+    use crate::coordinator::backend::EngineBackend;
+    use crate::input::binarize::Scheme;
+    use crate::util::rng::Xoshiro256;
+
+    fn test_router(policy: BatchPolicy, capacity: usize) -> Router {
+        let be: Arc<dyn InferBackend> =
+            Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 1), 2));
+        Router::builder()
+            .policy(policy)
+            .queue_capacity(capacity)
+            .variant("bcnn_rgb", be)
+            .build()
+    }
+
+    fn image(seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..IMG_ELEMS).map(|_| rng.next_f32()).collect()
+    }
+
+    #[test]
+    fn routes_and_answers() {
+        let r = test_router(BatchPolicy::default(), 64);
+        let resp = r.infer_blocking("bcnn_rgb", image(1)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.logits.len(), 4);
+        assert!(resp.class < 4);
+        r.shutdown();
+    }
+
+    #[test]
+    fn default_variant_used_for_empty_name() {
+        let r = test_router(BatchPolicy::default(), 64);
+        let resp = r.infer_blocking("", image(2)).unwrap();
+        assert!(resp.error.is_none());
+        r.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_is_reported() {
+        let r = test_router(BatchPolicy::default(), 64);
+        let err = r.infer_blocking("nope", image(3)).unwrap_err();
+        assert!(err.to_string().contains("bcnn_rgb"));
+        r.shutdown();
+    }
+
+    #[test]
+    fn bad_payload_rejected() {
+        let r = test_router(BatchPolicy::default(), 64);
+        assert!(matches!(
+            r.infer_blocking("bcnn_rgb", vec![0.0; 10]),
+            Err(RouteError::BadPayload(10))
+        ));
+        r.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let r = Arc::new(test_router(
+            BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(2) },
+            256,
+        ));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let r2 = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..16 {
+                    let resp = r2.infer_blocking("bcnn_rgb", image(t * 100 + i)).unwrap();
+                    assert!(resp.error.is_none());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.metrics("bcnn_rgb").unwrap().completed(), 64);
+        r.shutdown();
+    }
+
+    #[test]
+    fn deterministic_same_image_same_class() {
+        let r = test_router(BatchPolicy::default(), 64);
+        let img = image(9);
+        let a = r.infer_blocking("bcnn_rgb", img.clone()).unwrap();
+        let b = r.infer_blocking("bcnn_rgb", img).unwrap();
+        assert_eq!(a.logits, b.logits);
+        r.shutdown();
+    }
+}

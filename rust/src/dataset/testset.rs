@@ -1,0 +1,87 @@
+//! Loader for the canonical test split dumped by `python/compile/aot.py`
+//! (`artifacts/testset.bcnt`) — the images Table 3 accuracy is measured
+//! on, plus the expected-logits file used for cross-validation.
+
+use std::path::Path;
+
+use crate::util::tensorio::{TensorFile, TensorIoError};
+
+pub const IMG_ELEMS: usize = 96 * 96 * 3;
+
+/// The dumped test split.
+pub struct TestSet {
+    /// (N, 96, 96, 3) row-major.
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl TestSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, TensorIoError> {
+        let tf = TensorFile::load(path)?;
+        let images = tf.f32("images")?;
+        let labels = tf.i32("labels")?;
+        assert_eq!(images.len(), labels.len() * IMG_ELEMS, "testset shape mismatch");
+        Ok(Self { images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Image `i` as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]
+    }
+}
+
+/// Expected logits for cross-validating Rust vs JAX (first N test images).
+pub struct ExpectedLogits {
+    pub x: Vec<f32>, // (N, 96, 96, 3)
+    pub n: usize,
+    tf: TensorFile,
+}
+
+impl ExpectedLogits {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, TensorIoError> {
+        let tf = TensorFile::load(path)?;
+        let x = tf.f32("x")?;
+        let n = x.len() / IMG_ELEMS;
+        Ok(Self { x, n, tf })
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.x[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]
+    }
+
+    /// Logits tensor for a model key, e.g. "logits_bcnn_rgb" or
+    /// "logits_float"; rows of 4.
+    pub fn logits(&self, key: &str) -> Result<Vec<f32>, TensorIoError> {
+        self.tf.f32(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorio::Tensor;
+
+    #[test]
+    fn loads_synthetic_testset() {
+        let dir = std::env::temp_dir().join("bcnn-testset-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ts.bcnt");
+        let mut tf = TensorFile::new();
+        let images = vec![0.5f32; 2 * IMG_ELEMS];
+        tf.insert("images", Tensor::from_f32(vec![2, 96, 96, 3], &images));
+        tf.insert("labels", Tensor::from_i32(vec![2], &[1, 3]));
+        tf.save(&path).unwrap();
+        let ts = TestSet::load(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts.labels, vec![1, 3]);
+        assert_eq!(ts.image(1).len(), IMG_ELEMS);
+    }
+}

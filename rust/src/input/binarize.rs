@@ -1,0 +1,188 @@
+//! Input binarization schemes (paper Section 2.3) — Rust ports of
+//! `python/compile/binarize_input.py`, bit-identical on the same input.
+//!
+//! All map a (96,96,3) float image in [0,1] to a ±1 image the first
+//! binarized conv layer consumes.
+
+/// Luma weights (ITU-R BT.601), matching the Python `_LUMA` constant.
+pub const LUMA: [f32; 3] = [0.299, 0.587, 0.114];
+
+/// Neighbour offsets at radius 1, clockwise from the top-left corner.
+const NEIGHBOURS: [(isize, isize); 8] =
+    [(-1, -1), (-1, 0), (-1, 1), (0, 1), (1, 1), (1, 0), (1, -1), (0, -1)];
+
+/// Paper: "3 pixels at a clockwise stride of 3 in the neighbourhood".
+const LBP_SELECT: [usize; 3] = [0, 3, 6];
+
+/// Eq. 1: sign into ±1 (sign(0) = -1).
+#[inline]
+fn sign(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// `sign(X + T)` with a per-channel threshold `t` (len 3).
+/// In/out layout: (H, W, 3) row-major.
+pub fn threshold_rgb(x: &[f32], t: &[f32; 3]) -> Vec<f32> {
+    x.chunks_exact(3)
+        .flat_map(|px| [sign(px[0] + t[0]), sign(px[1] + t[1]), sign(px[2] + t[2])])
+        .collect()
+}
+
+/// Grayscale threshold: `sign(luma(X) + t)`, output (H, W, 1).
+pub fn threshold_gray(x: &[f32], t: f32) -> Vec<f32> {
+    x.chunks_exact(3)
+        .map(|px| sign(px[0] * LUMA[0] + px[1] * LUMA[1] + px[2] * LUMA[2] + t))
+        .collect()
+}
+
+/// Grayscale conversion helper (shared with the LBP path and Figure 1).
+pub fn to_gray(x: &[f32], h: usize, w: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * w * 3);
+    x.chunks_exact(3)
+        .map(|px| px[0] * LUMA[0] + px[1] * LUMA[1] + px[2] * LUMA[2])
+        .collect()
+}
+
+/// Modified LBP (paper Section 2.3): 3 binary channels, channel k set to
+/// +1 where neighbour `LBP_SELECT[k]` (radius 1) exceeds the center pixel
+/// of the grayscale image; borders read neighbour value 0.
+/// Output layout: (H, W, 3).
+pub fn lbp(x: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let gray = to_gray(x, h, w);
+    let mut out = vec![-1.0f32; h * w * 3];
+    for y in 0..h {
+        for xx in 0..w {
+            let center = gray[y * w + xx];
+            for (ch, &sel) in LBP_SELECT.iter().enumerate() {
+                let (dy, dx) = NEIGHBOURS[sel];
+                let ny = y as isize + dy;
+                let nx = xx as isize + dx;
+                let neigh = if ny >= 0 && nx >= 0 && (ny as usize) < h && (nx as usize) < w {
+                    gray[ny as usize * w + nx as usize]
+                } else {
+                    0.0
+                };
+                out[(y * w + xx) * 3 + ch] = if neigh > center { 1.0 } else { -1.0 };
+            }
+        }
+    }
+    out
+}
+
+/// Scheme dispatch matching `binarize_input.apply_scheme`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// First layer stays full-precision on the raw input.
+    None,
+    /// sign(X + T) per RGB channel (the paper's deployed choice).
+    Rgb,
+    /// Grayscale threshold.
+    Gray,
+    /// Modified local binary patterns.
+    Lbp,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "none" => Scheme::None,
+            "rgb" => Scheme::Rgb,
+            "gray" => Scheme::Gray,
+            "lbp" => Scheme::Lbp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::None => "none",
+            Scheme::Rgb => "rgb",
+            Scheme::Gray => "gray",
+            Scheme::Lbp => "lbp",
+        }
+    }
+
+    /// Channels conv1 sees under this scheme.
+    pub fn input_channels(&self) -> usize {
+        match self {
+            Scheme::None | Scheme::Rgb | Scheme::Lbp => 3,
+            Scheme::Gray => 1,
+        }
+    }
+
+    pub const ALL: [Scheme; 4] = [Scheme::None, Scheme::Rgb, Scheme::Gray, Scheme::Lbp];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_rgb_splits_range() {
+        let x = [0.2, 0.5, 0.8, 0.6, 0.4, 0.1];
+        let t = [-0.5, -0.5, -0.5];
+        let out = threshold_rgb(&x, &t);
+        assert_eq!(out, vec![-1.0, -1.0, 1.0, 1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn threshold_at_exact_zero_is_minus_one() {
+        let out = threshold_rgb(&[0.5, 0.5, 0.5], &[-0.5, -0.5, -0.5]);
+        assert_eq!(out, vec![-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn gray_uses_luma() {
+        // pure green is brighter than pure blue in luma
+        let g = to_gray(&[0.0, 1.0, 0.0, 0.0, 0.0, 1.0], 1, 2);
+        assert!((g[0] - 0.587).abs() < 1e-6);
+        assert!((g[1] - 0.114).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lbp_flat_image_is_all_minus_one() {
+        // constant image: no neighbour exceeds the center (borders read 0
+        // which is < 0.5 too)
+        let x = vec![0.5f32; 4 * 4 * 3];
+        let out = lbp(&x, 4, 4);
+        assert!(out.iter().all(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn lbp_detects_bright_neighbour() {
+        // 3x3 grayscale ramp: the bottom-right pixel is brightest.
+        // neighbour 4 = (+1,+1); center (1,1) should fire channel 1
+        // (select index 3 -> neighbour (0,+1)) when right neighbour brighter.
+        let mut x = vec![0.0f32; 9 * 3];
+        for i in 0..9 {
+            let v = i as f32 / 10.0;
+            x[i * 3] = v;
+            x[i * 3 + 1] = v;
+            x[i * 3 + 2] = v;
+        }
+        let out = lbp(&x, 3, 3);
+        // center pixel (1,1): neighbour (0,+1) = pixel (1,2), brighter -> +1
+        assert_eq!(out[(1 * 3 + 1) * 3 + 1], 1.0);
+        // channel 0 neighbour (-1,-1) = pixel (0,0), darker -> -1
+        assert_eq!(out[(1 * 3 + 1) * 3], -1.0);
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("bogus"), None);
+    }
+
+    #[test]
+    fn scheme_channels() {
+        assert_eq!(Scheme::Gray.input_channels(), 1);
+        assert_eq!(Scheme::Rgb.input_channels(), 3);
+        assert_eq!(Scheme::Lbp.input_channels(), 3);
+    }
+}

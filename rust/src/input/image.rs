@@ -1,0 +1,144 @@
+//! Minimal image IO: binary PPM (P6) / PGM (P5) writers and a PPM reader.
+//! Used by the Figure-1 demo (`examples/binarize_demo.rs`) and the
+//! `repro classify` CLI path.
+
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ImageError {
+    #[error("image io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("image parse: {0}")]
+    Parse(String),
+}
+
+fn clamp_u8(v: f32) -> u8 {
+    (v.clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+/// Write an (H, W, 3) float image in [0,1] as binary PPM.
+pub fn write_ppm(path: impl AsRef<Path>, x: &[f32], h: usize, w: usize) -> Result<(), ImageError> {
+    assert_eq!(x.len(), h * w * 3);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = x.iter().map(|&v| clamp_u8(v)).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Write an (H, W) float image in [0,1] as binary PGM.
+pub fn write_pgm(path: impl AsRef<Path>, x: &[f32], h: usize, w: usize) -> Result<(), ImageError> {
+    assert_eq!(x.len(), h * w);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = x.iter().map(|&v| clamp_u8(v)).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Map a ±1 image to [0,1] for visualization (-1 -> 0, +1 -> 1).
+pub fn pm1_to_unit(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect()
+}
+
+/// Read a binary PPM (P6, maxval 255) into (H, W, 3) floats in [0,1].
+pub fn read_ppm(path: impl AsRef<Path>) -> Result<(Vec<f32>, usize, usize), ImageError> {
+    let data = std::fs::read(path)?;
+    let mut pos = 0usize;
+    let mut token = |data: &[u8]| -> Result<String, ImageError> {
+        // skip whitespace and comments
+        while pos < data.len() {
+            match data[pos] {
+                b' ' | b'\t' | b'\r' | b'\n' => pos += 1,
+                b'#' => {
+                    while pos < data.len() && data[pos] != b'\n' {
+                        pos += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let start = pos;
+        while pos < data.len() && !data[pos].is_ascii_whitespace() {
+            pos += 1;
+        }
+        if start == pos {
+            return Err(ImageError::Parse("unexpected EOF in header".into()));
+        }
+        Ok(String::from_utf8_lossy(&data[start..pos]).to_string())
+    };
+    let magic = token(&data)?;
+    if magic != "P6" {
+        return Err(ImageError::Parse(format!("unsupported magic {magic:?}")));
+    }
+    let w: usize = token(&data)?.parse().map_err(|_| ImageError::Parse("bad width".into()))?;
+    let h: usize = token(&data)?.parse().map_err(|_| ImageError::Parse("bad height".into()))?;
+    let maxval: usize =
+        token(&data)?.parse().map_err(|_| ImageError::Parse("bad maxval".into()))?;
+    if maxval != 255 {
+        return Err(ImageError::Parse(format!("unsupported maxval {maxval}")));
+    }
+    pos += 1; // single whitespace after maxval
+    let need = w * h * 3;
+    if data.len() < pos + need {
+        return Err(ImageError::Parse("truncated pixel data".into()));
+    }
+    let px = data[pos..pos + need].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok((px, h, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bcnn-image-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn ppm_roundtrip() {
+        let x: Vec<f32> = (0..2 * 3 * 3).map(|i| (i as f32) / 17.0).collect();
+        let p = tmp("rt.ppm");
+        write_ppm(&p, &x, 2, 3).unwrap();
+        let (y, h, w) = read_ppm(&p).unwrap();
+        assert_eq!((h, w), (2, 3));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1.0 / 255.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pgm_writes_header_and_payload() {
+        let p = tmp("g.pgm");
+        write_pgm(&p, &[0.0, 1.0], 1, 2).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P5\n2 1\n255\n"));
+        assert_eq!(&data[data.len() - 2..], &[0u8, 255u8]);
+    }
+
+    #[test]
+    fn pm1_maps_to_unit() {
+        assert_eq!(pm1_to_unit(&[-1.0, 1.0, -1.0]), vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn read_rejects_bad_magic() {
+        let p = tmp("bad.ppm");
+        std::fs::write(&p, b"P5\n1 1\n255\n\0").unwrap();
+        assert!(read_ppm(&p).is_err());
+    }
+
+    #[test]
+    fn read_handles_comments() {
+        let p = tmp("comment.ppm");
+        let mut bytes = b"P6\n# a comment\n1 1\n255\n".to_vec();
+        bytes.extend_from_slice(&[10, 20, 30]);
+        std::fs::write(&p, &bytes).unwrap();
+        let (px, h, w) = read_ppm(&p).unwrap();
+        assert_eq!((h, w), (1, 1));
+        assert!((px[0] - 10.0 / 255.0).abs() < 1e-6);
+    }
+}

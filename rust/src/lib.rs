@@ -1,0 +1,65 @@
+//! # bcnn — Binarized CNN inference on a Rust + JAX/Pallas stack
+//!
+//! Reproduction of *"Binarized Convolutional Neural Networks for
+//! Efficient Inference on GPUs"* (Khan, Huttunen, Boutellier, 2018).
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** Pallas kernels (`python/compile/kernels/`) — packed
+//!   xnor-popcount GEMM, fused im2col+pack, OR-pool, packed FC;
+//! * **L2** JAX model (`python/compile/model.py`) — AOT-lowered to HLO
+//!   text artifacts at build time;
+//! * **L3** this crate — the serving coordinator (`coordinator`,
+//!   `server`), the PJRT runtime that executes the artifacts
+//!   (`runtime`), a pure-Rust engine implementing the same kernels for
+//!   the CPU hot path (`bnn`), and every substrate the system needs
+//!   (`util`, `input`, `dataset`, `platform`).
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + weight/test containers once, and the `repro`
+//! binary serves from them.
+
+pub mod bnn {
+    //! Pure-Rust binarized inference engine (the paper's CUDA kernels,
+    //! re-expressed for CPU: u64 xnor+popcount, cache-blocked GEMM).
+    pub mod bgemm;
+    pub mod conv_direct;
+    pub mod fc;
+    pub mod float_ops;
+    pub mod im2col;
+    pub mod maxpool;
+    pub mod network;
+    pub mod packing;
+}
+
+pub mod coordinator;
+
+pub mod dataset {
+    //! SynthVehicles renderer (Rust port) + canonical test-split loader.
+    pub mod synth;
+    pub mod testset;
+}
+
+pub mod input {
+    //! Input binarization schemes (paper Section 2.3) + image IO.
+    pub mod binarize;
+    pub mod image;
+}
+
+pub mod platform;
+
+pub mod runtime;
+
+pub mod server;
+
+pub mod util {
+    //! Substrates the offline vendor set lacks: JSON, CLI, RNG, thread
+    //! pool, histogram, property testing, timing, tensor IO.
+    pub mod cli;
+    pub mod histogram;
+    pub mod json;
+    pub mod prop;
+    pub mod rng;
+    pub mod tensorio;
+    pub mod threadpool;
+    pub mod timer;
+}

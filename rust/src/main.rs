@@ -1,0 +1,266 @@
+//! `repro` — CLI entrypoint for the binarized-CNN serving system.
+//!
+//! Subcommands:
+//!   serve      start the TCP serving loop (engine or PJRT backend)
+//!   classify   classify one image (PPM file or synthetic index)
+//!   evaluate   test-set accuracy for one or all variants (Table 3)
+//!   inspect    print the artifact manifest summary
+//!   gen-data   render SynthVehicles samples to PPM files
+//!   platforms  print the analytical platform model (Table 1 projection)
+
+use std::process::ExitCode;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use bcnn::bnn::network::{BcnnNetwork, FloatNetwork, CLASSES};
+use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router, RuntimeBackend};
+use bcnn::dataset::synth;
+use bcnn::dataset::testset::TestSet;
+use bcnn::input::binarize::Scheme;
+use bcnn::input::image;
+use bcnn::runtime::Artifacts;
+use bcnn::server::Server;
+use bcnn::util::cli::{Args, CliError};
+use bcnn::util::threadpool::default_threads;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "classify" => cmd_classify(rest),
+        "evaluate" => cmd_evaluate(rest),
+        "inspect" => cmd_inspect(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "platforms" => cmd_platforms(rest),
+        "-h" | "--help" | "help" => {
+            println!("{USAGE}");
+            return ExitCode::SUCCESS;
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            if matches!(e.downcast_ref::<CliError>(), Some(CliError::Help)) {
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "repro — binarized CNN inference (Khan et al. 2018 reproduction)
+
+usage: repro <command> [options]
+
+commands:
+  serve       start the TCP serving loop
+  classify    classify one image (PPM file or --synth index)
+  evaluate    test-set accuracy per variant (Table 3)
+  inspect     summarize artifacts/manifest.json
+  gen-data    render SynthVehicles samples to PPM
+  platforms   print the analytical platform projections (Table 1)
+
+run `repro <command> --help` for options";
+
+/// Build an engine backend for a scheme (or float) from the artifacts dir.
+fn engine_backend(artifacts_dir: &str, variant: &str, threads: usize) -> anyhow::Result<Arc<dyn InferBackend>> {
+    if variant == "float" {
+        let net = FloatNetwork::load(format!("{artifacts_dir}/weights_float.bcnt"))?;
+        return Ok(Arc::new(EngineBackend::float(net, threads)));
+    }
+    let scheme = Scheme::parse(variant)
+        .ok_or_else(|| anyhow::anyhow!("unknown variant {variant:?} (float|none|rgb|gray|lbp)"))?;
+    let net = BcnnNetwork::load(
+        format!("{artifacts_dir}/weights_bcnn_{}.bcnt", scheme.name()),
+        scheme,
+    )?;
+    Ok(Arc::new(EngineBackend::bcnn(net, threads)))
+}
+
+fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("repro serve", "start the TCP serving loop")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("addr", "127.0.0.1:7878", "bind address")
+        .opt("variants", "rgb,none,float", "comma-separated variants to load")
+        .opt("backend", "engine", "engine | pjrt")
+        .opt("max-batch", "1", "dynamic batcher max batch")
+        .opt("batch-window-us", "200", "batch window in microseconds")
+        .opt("queue-cap", "1024", "admission queue capacity")
+        .opt("threads", "0", "engine worker threads (0 = all cores)")
+        .parse(raw)?;
+    let dir = a.get("artifacts");
+    let threads = match a.get_usize("threads")? {
+        0 => default_threads(),
+        n => n,
+    };
+    let policy = BatchPolicy {
+        max_batch: a.get_usize("max-batch")?,
+        max_wait: std::time::Duration::from_micros(a.get_u64("batch-window-us")?),
+    };
+    let mut builder = Router::builder().policy(policy).queue_capacity(a.get_usize("queue-cap")?);
+    let backend_kind = a.get("backend");
+    let artifacts = Arc::new(Artifacts::load(&dir)?);
+    for variant in a.get("variants").split(',').filter(|v| !v.is_empty()) {
+        let backend: Arc<dyn InferBackend> = match backend_kind.as_str() {
+            "engine" => engine_backend(&dir, variant, threads)?,
+            "pjrt" => {
+                let names: Vec<(usize, String)> = artifacts
+                    .models
+                    .iter()
+                    .filter(|m| {
+                        if variant == "float" {
+                            m.kind == "float"
+                        } else {
+                            m.scheme == variant && m.kind == "bcnn_ref"
+                        }
+                    })
+                    .map(|m| (m.batch, m.name.clone()))
+                    .collect();
+                anyhow::ensure!(!names.is_empty(), "no artifacts for variant {variant}");
+                Arc::new(RuntimeBackend::spawn(
+                    Arc::clone(&artifacts),
+                    names,
+                    format!("pjrt/{variant}"),
+                )?)
+            }
+            other => anyhow::bail!("unknown backend {other:?}"),
+        };
+        builder = builder.variant(variant, backend);
+    }
+    let router = Arc::new(builder.build());
+    let server = Arc::new(Server::new(router, CLASSES.iter().map(|s| s.to_string()).collect()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server.serve(&a.get("addr"), threads.max(2), stop)?;
+    println!("serving on {addr} (backend={backend_kind}, max_batch={})", policy.max_batch);
+    println!("protocol: line JSON, e.g. {{\"op\":\"classify_synth\",\"index\":0}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_classify(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("repro classify", "classify one image")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("variant", "rgb", "model variant (float|none|rgb|gray|lbp)")
+        .opt("synth", "-1", "render synthetic sample <n> instead of reading a file")
+        .opt("threads", "1", "engine threads")
+        .parse(raw)?;
+    let dir = a.get("artifacts");
+    let variant = a.get("variant");
+    let backend = engine_backend(&dir, &variant, a.get_usize("threads")?)?;
+    let synth_idx: i64 = a.get("synth").parse().unwrap_or(-1);
+    let (img, truth) = if synth_idx >= 0 {
+        let s = synth::render_vehicle(synth_idx as usize, synth::DEFAULT_SEED);
+        (s.image, Some(s.label))
+    } else {
+        let pos = a.positional();
+        anyhow::ensure!(!pos.is_empty(), "pass a PPM path or --synth <n>");
+        let (px, h, w) = image::read_ppm(&pos[0])?;
+        anyhow::ensure!(h == 96 && w == 96, "image must be 96x96 (got {h}x{w})");
+        (px, None)
+    };
+    let start = std::time::Instant::now();
+    let logits = backend.infer_batch(&img).map_err(|e| anyhow::anyhow!(e))?;
+    let took = start.elapsed();
+    let class = bcnn::bnn::network::argmax(&logits);
+    println!("class: {} ({})", class, CLASSES[class]);
+    println!("logits: {logits:?}");
+    println!("latency: {:.1} µs", took.as_nanos() as f64 / 1_000.0);
+    if let Some(t) = truth {
+        println!("truth: {} ({}) -> {}", t, CLASSES[t], if t == class { "CORRECT" } else { "WRONG" });
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("repro evaluate", "test-set accuracy per variant (Table 3)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("variants", "float,none,rgb,gray,lbp", "variants to evaluate")
+        .opt("threads", "0", "engine threads (0 = all cores)")
+        .opt("limit", "0", "evaluate only the first N test images (0 = all)")
+        .parse(raw)?;
+    let dir = a.get("artifacts");
+    let threads = match a.get_usize("threads")? {
+        0 => default_threads(),
+        n => n,
+    };
+    let artifacts = Artifacts::load(&dir)?;
+    let ts_path = artifacts
+        .testset_path()
+        .ok_or_else(|| anyhow::anyhow!("manifest has no testset — rerun make artifacts"))?;
+    let ts = TestSet::load(ts_path)?;
+    let limit = match a.get_usize("limit")? {
+        0 => ts.len(),
+        n => n.min(ts.len()),
+    };
+    println!("evaluating {limit} test images (trained flags: {:?})", artifacts.trained);
+    println!("{:<24}{:>10}", "variant", "accuracy");
+    for variant in a.get("variants").split(',').filter(|v| !v.is_empty()) {
+        let backend = engine_backend(&dir, variant, threads)?;
+        let correct: usize = bcnn::util::threadpool::scoped_map(limit, threads, |i| {
+            let logits = backend.infer_batch(ts.image(i)).expect("infer");
+            usize::from(bcnn::bnn::network::argmax(&logits) as i32 == ts.labels[i])
+        })
+        .into_iter()
+        .sum();
+        println!("{:<24}{:>9.2}%", variant, 100.0 * correct as f64 / limit as f64);
+    }
+    Ok(())
+}
+
+fn cmd_inspect(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("repro inspect", "summarize artifacts/manifest.json")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse(raw)?;
+    let artifacts = Artifacts::load(a.get("artifacts"))?;
+    println!("classes: {:?}", artifacts.classes);
+    println!("trained: {:?}", artifacts.trained);
+    println!("\n{} models:", artifacts.models.len());
+    for m in &artifacts.models {
+        println!(
+            "  {:<32} kind={:<12} scheme={:<6} batch={:<3} weights={}",
+            m.name, m.kind, m.scheme, m.batch, m.weights_file
+        );
+    }
+    println!("\n{} layer kernels:", artifacts.layers.len());
+    for l in &artifacts.layers {
+        let shapes: Vec<String> = l.args.iter().map(|s| format!("{:?}", s.shape)).collect();
+        println!("  {:<32} args={}", l.name, shapes.join(" x "));
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(raw: &[String]) -> anyhow::Result<()> {
+    let a = Args::new("repro gen-data", "render SynthVehicles samples to PPM")
+        .opt("count", "8", "how many samples")
+        .opt("start", "0", "first sample index")
+        .opt("out", "out/synth", "output directory")
+        .parse(raw)?;
+    let out = a.get("out");
+    std::fs::create_dir_all(&out)?;
+    let start = a.get_usize("start")?;
+    for i in start..start + a.get_usize("count")? {
+        let s = synth::render_vehicle(i, synth::DEFAULT_SEED);
+        let path = format!("{out}/sample_{i:04}_{}.ppm", CLASSES[s.label]);
+        image::write_ppm(&path, &s.image, 96, 96)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_platforms(raw: &[String]) -> anyhow::Result<()> {
+    let _a = Args::new("repro platforms", "analytical platform projections")
+        .parse(raw)?;
+    bcnn::platform::print_table1_projection();
+    Ok(())
+}

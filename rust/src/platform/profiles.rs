@@ -1,0 +1,65 @@
+//! Platform profiles for the three GPUs of the paper's testbed.
+//!
+//! Numbers are public datasheet figures (peak fp32, memory bandwidth)
+//! plus two modelled parameters: integer-op throughput (fp32 rate x the
+//! architecture's int32 issue ratio) and on-chip-memory effectiveness
+//! (1.0 where shared/local memory is real SRAM; 0.0 on Mali where OpenCL
+//! local memory is allocated in system DRAM — the paper's explanation
+//! for the small Mali speedup).
+
+use super::Profile;
+
+/// Nvidia GTX 1080 (Pascal GP104): 8.87 TFLOP/s fp32, 320 GB/s GDDR5X.
+/// Pascal issues 32-bit integer logic at roughly the fp32 rate; popcount
+/// runs on the SFU-adjacent path, modelled inside the 0.75 factor.
+pub const GTX1080: Profile = Profile {
+    name: "GTX 1080",
+    fp32_gflops: 8870.0,
+    int_gops: 8870.0 * 0.75,
+    dram_gbps: 320.0,
+    onchip_gbps: 6000.0,
+    onchip_effectiveness: 1.0,
+    launch_overhead_us: 3.0,
+};
+
+/// ARM Mali T860 MP4 (Midgard, 650 MHz): ~94 GFLOP/s fp32, ~10 GB/s LPDDR.
+/// Crucially, OpenCL local memory is a region of global memory, so the
+/// shared-memory tiling the kernels rely on buys nothing: effectiveness 0.
+pub const MALI_T860: Profile = Profile {
+    name: "Mali T860",
+    fp32_gflops: 94.0,
+    int_gops: 94.0 * 0.9, // Midgard SIMD issues int ops near fp rate
+    dram_gbps: 10.0,
+    onchip_gbps: 10.0, // "local" memory IS dram
+    onchip_effectiveness: 0.0,
+    launch_overhead_us: 40.0,
+};
+
+/// Nvidia Tegra X2 (Pascal, 2 SM @ 1.3 GHz): ~665 GFLOP/s fp32,
+/// 58 GB/s LPDDR4 (shared with the CPU). Real on-chip shared memory.
+pub const TEGRA_X2: Profile = Profile {
+    name: "Tegra X2",
+    fp32_gflops: 665.0,
+    int_gops: 665.0 * 0.75,
+    dram_gbps: 58.0,
+    onchip_gbps: 1300.0,
+    onchip_effectiveness: 1.0,
+    launch_overhead_us: 8.0,
+};
+
+/// All paper platforms, in Table 1 column order.
+pub const ALL: [Profile; 3] = [GTX1080, MALI_T860, TEGRA_X2];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_have_sane_orderings() {
+        assert!(GTX1080.fp32_gflops > TEGRA_X2.fp32_gflops);
+        assert!(TEGRA_X2.fp32_gflops > MALI_T860.fp32_gflops);
+        assert!(GTX1080.dram_gbps > TEGRA_X2.dram_gbps);
+        assert_eq!(MALI_T860.onchip_effectiveness, 0.0);
+        assert_eq!(GTX1080.onchip_effectiveness, 1.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Manifest parsing: the index of everything `python/compile/aot.py`
+//! exported (models, per-layer kernels, weight/test containers).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{Json, JsonError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("artifact io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(transparent)]
+    Json(#[from] JsonError),
+    #[error("manifest: model {0:?} not found (available: {1})")]
+    ModelNotFound(String, String),
+    #[error("manifest: layer {0:?} not found")]
+    LayerNotFound(String),
+    #[error("manifest: unsupported dtype {0:?}")]
+    BadDType(String),
+}
+
+/// Element dtype of a runtime argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgDType {
+    F32,
+    I32,
+    U32,
+}
+
+impl ArgDType {
+    fn parse(s: &str) -> Result<Self, ArtifactError> {
+        Ok(match s {
+            "f32" => ArgDType::F32,
+            "i32" => ArgDType::I32,
+            "u32" => ArgDType::U32,
+            other => return Err(ArtifactError::BadDType(other.to_string())),
+        })
+    }
+}
+
+/// One runtime argument (name + dtype + shape).
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: ArgDType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    fn parse(j: &Json, default_name: &str) -> Result<Self, ArtifactError> {
+        let name = match j.get_opt("name")? {
+            Some(n) => n.as_str()?.to_string(),
+            None => default_name.to_string(),
+        };
+        let dtype = ArgDType::parse(j.get("dtype")?.as_str()?)?;
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self { name, dtype, shape })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An end-to-end model artifact.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub file: String,
+    /// "float" | "bcnn_pallas" | "bcnn_ref"
+    pub kind: String,
+    pub scheme: String,
+    pub batch: usize,
+    pub weights_file: String,
+    pub input: ArgSpec,
+    pub weight_args: Vec<ArgSpec>,
+    pub output_shape: Vec<usize>,
+}
+
+/// A per-layer kernel artifact (Table 2 benches).
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Parsed manifest + base directory.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub classes: Vec<String>,
+    pub models: Vec<ModelSpec>,
+    pub layers: Vec<LayerSpec>,
+    /// scheme -> whether trained weights were baked (vs random init)
+    pub trained: Vec<(String, bool)>,
+    pub testset_file: Option<String>,
+    pub expected_logits_file: Option<String>,
+}
+
+impl Artifacts {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)?;
+
+        let classes = j
+            .get("classes")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_str()?.to_string()))
+            .collect::<Result<Vec<_>, JsonError>>()?;
+
+        let mut models = Vec::new();
+        for m in j.get("models")?.as_arr()? {
+            models.push(ModelSpec {
+                name: m.get("name")?.as_str()?.to_string(),
+                file: m.get("file")?.as_str()?.to_string(),
+                kind: m.get("kind")?.as_str()?.to_string(),
+                scheme: m.get("scheme")?.as_str()?.to_string(),
+                batch: m.get("batch")?.as_usize()?,
+                weights_file: m.get("weights_file")?.as_str()?.to_string(),
+                input: ArgSpec::parse(m.get("input")?, "x")?,
+                weight_args: m
+                    .get("weight_args")?
+                    .as_arr()?
+                    .iter()
+                    .map(|a| ArgSpec::parse(a, "?"))
+                    .collect::<Result<Vec<_>, _>>()?,
+                output_shape: m
+                    .get("output")?
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>, _>>()?,
+            });
+        }
+
+        let mut layers = Vec::new();
+        for l in j.get("layers")?.as_arr()? {
+            layers.push(LayerSpec {
+                name: l.get("name")?.as_str()?.to_string(),
+                file: l.get("file")?.as_str()?.to_string(),
+                args: l
+                    .get("args")?
+                    .as_arr()?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, a)| ArgSpec::parse(a, &format!("arg{i}")))
+                    .collect::<Result<Vec<_>, _>>()?,
+            });
+        }
+
+        let mut trained = Vec::new();
+        if let Some(t) = j.get_opt("trained")? {
+            for (k, v) in t.as_obj()?.iter() {
+                trained.push((k.clone(), v.as_bool().unwrap_or(false)));
+            }
+        }
+
+        let testset_file = match j.get_opt("testset")? {
+            Some(t) => Some(t.get("file")?.as_str()?.to_string()),
+            None => None,
+        };
+        let expected_logits_file = match j.get_opt("expected_logits")? {
+            Some(t) => Some(t.get("file")?.as_str()?.to_string()),
+            None => None,
+        };
+
+        Ok(Self { dir, classes, models, layers, trained, testset_file, expected_logits_file })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec, ArtifactError> {
+        self.models.iter().find(|m| m.name == name).ok_or_else(|| {
+            ArtifactError::ModelNotFound(
+                name.to_string(),
+                self.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", "),
+            )
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerSpec, ArtifactError> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| ArtifactError::LayerNotFound(name.to_string()))
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    pub fn testset_path(&self) -> Option<PathBuf> {
+        self.testset_file.as_ref().map(|f| self.dir.join(f))
+    }
+
+    pub fn expected_logits_path(&self) -> Option<PathBuf> {
+        self.expected_logits_file.as_ref().map(|f| self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_MANIFEST: &str = r#"{
+      "version": 1,
+      "classes": ["bus", "normal", "truck", "van"],
+      "models": [
+        {
+          "name": "model_bcnn_rgb_b1",
+          "file": "model_bcnn_rgb_b1.hlo.txt",
+          "kind": "bcnn_pallas",
+          "scheme": "rgb",
+          "batch": 1,
+          "weights_file": "weights_bcnn_rgb.bcnt",
+          "input": {"name": "x", "dtype": "f32", "shape": [96, 96, 3]},
+          "weight_args": [
+            {"name": "w1_packed", "dtype": "u32", "shape": [32, 3]}
+          ],
+          "output": {"dtype": "f32", "shape": [4]}
+        }
+      ],
+      "layers": [
+        {
+          "name": "layer_bgemm1",
+          "file": "layer_bgemm1.hlo.txt",
+          "args": [
+            {"dtype": "u32", "shape": [9216, 3]},
+            {"dtype": "u32", "shape": [32, 3]}
+          ]
+        }
+      ],
+      "trained": {"float": false, "rgb": true},
+      "testset": {"file": "testset.bcnt", "count": 656}
+    }"#;
+
+    fn write_manifest() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bcnn-artifact-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), MINI_MANIFEST).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let dir = write_manifest();
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.classes, vec!["bus", "normal", "truck", "van"]);
+        let m = a.model("model_bcnn_rgb_b1").unwrap();
+        assert_eq!(m.batch, 1);
+        assert_eq!(m.input.shape, vec![96, 96, 3]);
+        assert_eq!(m.weight_args.len(), 1);
+        assert_eq!(m.weight_args[0].dtype, ArgDType::U32);
+        let l = a.layer("layer_bgemm1").unwrap();
+        assert_eq!(l.args[0].elements(), 9216 * 3);
+        assert_eq!(a.trained, vec![("float".to_string(), false), ("rgb".to_string(), true)]);
+        assert!(a.testset_path().unwrap().ends_with("testset.bcnt"));
+    }
+
+    #[test]
+    fn unknown_model_lists_available() {
+        let dir = write_manifest();
+        let a = Artifacts::load(&dir).unwrap();
+        let err = a.model("nope").unwrap_err();
+        assert!(err.to_string().contains("model_bcnn_rgb_b1"));
+    }
+}

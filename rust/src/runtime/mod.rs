@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! `Artifacts` reads `artifacts/manifest.json`; `ModelRuntime` compiles
+//! one model's HLO on the CPU PJRT client, uploads its weight buffers
+//! once, and serves `infer` calls with only the input image crossing the
+//! host boundary per request.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactError, Artifacts, LayerSpec, ModelSpec};
+pub use client::{ModelRuntime, RuntimeError};

@@ -1,0 +1,8 @@
+//! TCP serving front end: line-delimited JSON over a thread-pooled
+//! listener, speaking the protocol in `protocol.rs`.
+
+pub mod protocol;
+pub mod tcp;
+
+pub use protocol::{Request, Response};
+pub use tcp::Server;

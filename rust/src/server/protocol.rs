@@ -1,0 +1,188 @@
+//! Line-delimited JSON protocol.
+//!
+//! Requests (one JSON object per line):
+//!
+//! ```text
+//!     {"op": "classify", "model": "bcnn_rgb", "pixels": [27648 floats]}
+//!     {"op": "classify_synth", "model": "bcnn_rgb", "index": 17}
+//!     {"op": "stats"}
+//!     {"op": "variants"}
+//!     {"op": "ping"}
+//! ```
+//!
+//! Responses:
+//!
+//! ```text
+//!     {"ok": true, "class": 2, "label": "truck", "logits": [...],
+//!      "queue_us": 12.0, "exec_us": 830.0, "batch": 1}
+//!     {"ok": true, "stats": {...}} / {"ok": true, "variants": [...]}
+//!     {"ok": false, "error": "..."}
+//! ```
+
+use crate::util::json::{Json, JsonObj};
+
+/// Parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Classify { model: String, pixels: Vec<f32> },
+    ClassifySynth { model: String, index: usize },
+    Stats,
+    Variants,
+    Ping,
+}
+
+/// Server response payload.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Classified {
+        class: usize,
+        label: String,
+        logits: Vec<f32>,
+        queue_us: f64,
+        exec_us: f64,
+        batch: usize,
+    },
+    Stats(Json),
+    Variants(Vec<String>),
+    Pong,
+    Error(String),
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        let op = j.get("op").and_then(|o| o.as_str()).map_err(|e| e.to_string())?;
+        let model = j
+            .get_opt("model")
+            .ok()
+            .flatten()
+            .and_then(|m| m.as_str().ok())
+            .unwrap_or("")
+            .to_string();
+        match op {
+            "classify" => {
+                let pixels = j
+                    .get("pixels")
+                    .and_then(|p| p.as_arr())
+                    .map_err(|e| e.to_string())?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|e| e.to_string())?;
+                Ok(Request::Classify { model, pixels })
+            }
+            "classify_synth" => {
+                let index =
+                    j.get("index").and_then(|i| i.as_usize()).map_err(|e| e.to_string())?;
+                Ok(Request::ClassifySynth { model, index })
+            }
+            "stats" => Ok(Request::Stats),
+            "variants" => Ok(Request::Variants),
+            "ping" => Ok(Request::Ping),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json_line(&self) -> String {
+        let mut obj = JsonObj::new();
+        match self {
+            Response::Classified { class, label, logits, queue_us, exec_us, batch } => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("class", Json::from(*class));
+                obj.insert("label", Json::from(label.as_str()));
+                obj.insert(
+                    "logits",
+                    Json::Arr(logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+                obj.insert("queue_us", Json::from(*queue_us));
+                obj.insert("exec_us", Json::from(*exec_us));
+                obj.insert("batch", Json::from(*batch));
+            }
+            Response::Stats(s) => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("stats", s.clone());
+            }
+            Response::Variants(v) => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert(
+                    "variants",
+                    Json::Arr(v.iter().map(|s| Json::from(s.as_str())).collect()),
+                );
+            }
+            Response::Pong => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("pong", Json::Bool(true));
+            }
+            Response::Error(msg) => {
+                obj.insert("ok", Json::Bool(false));
+                obj.insert("error", Json::from(msg.as_str()));
+            }
+        }
+        Json::Obj(obj).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_classify_synth() {
+        let r = Request::parse(r#"{"op":"classify_synth","model":"float","index":5}"#).unwrap();
+        assert_eq!(r, Request::ClassifySynth { model: "float".into(), index: 5 });
+    }
+
+    #[test]
+    fn parse_classify_pixels() {
+        let r = Request::parse(r#"{"op":"classify","pixels":[0.5, 1.0]}"#).unwrap();
+        match r {
+            Request::Classify { model, pixels } => {
+                assert_eq!(model, "");
+                assert_eq!(pixels, vec![0.5, 1.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_control_ops() {
+        assert_eq!(Request::parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
+        assert_eq!(Request::parse(r#"{"op":"variants"}"#).unwrap(), Request::Variants);
+        assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"op":"fly"}"#).is_err());
+        assert!(Request::parse(r#"{"nop":"classify"}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_json() {
+        let r = Response::Classified {
+            class: 2,
+            label: "truck".into(),
+            logits: vec![0.1, -0.5, 3.0, 0.0],
+            queue_us: 11.5,
+            exec_us: 820.0,
+            batch: 1,
+        };
+        let line = r.to_json_line();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("class").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("label").unwrap().as_str().unwrap(), "truck");
+        assert_eq!(j.get("logits").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn error_response_shape() {
+        let line = Response::Error("bad".into()).to_json_line();
+        let j = Json::parse(&line).unwrap();
+        assert!(!j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "bad");
+    }
+}

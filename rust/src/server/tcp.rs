@@ -1,0 +1,195 @@
+//! TCP listener: one line-JSON session per connection, handled on a
+//! fixed thread pool, requests routed through the coordinator.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::protocol::{Request, Response};
+use crate::coordinator::Router;
+use crate::dataset::synth;
+use crate::util::threadpool::ThreadPool;
+
+/// The serving front end.
+pub struct Server {
+    router: Arc<Router>,
+    classes: Vec<String>,
+    synth_seed: u64,
+}
+
+impl Server {
+    pub fn new(router: Arc<Router>, classes: Vec<String>) -> Self {
+        Self { router, classes, synth_seed: synth::DEFAULT_SEED }
+    }
+
+    /// Handle one already-parsed request (also used by unit tests and the
+    /// in-process CLI path — no socket required).
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Variants => Response::Variants(self.router.variants()),
+            Request::Stats => Response::Stats(self.router.stats()),
+            Request::Classify { model, pixels } => self.classify(&model, pixels),
+            Request::ClassifySynth { model, index } => {
+                let sample = synth::render_vehicle(index, self.synth_seed);
+                self.classify(&model, sample.image)
+            }
+        }
+    }
+
+    fn classify(&self, model: &str, pixels: Vec<f32>) -> Response {
+        match self.router.infer_blocking(model, pixels) {
+            Ok(resp) => {
+                if let Some(err) = resp.error {
+                    return Response::Error(err);
+                }
+                Response::Classified {
+                    class: resp.class,
+                    label: self
+                        .classes
+                        .get(resp.class)
+                        .cloned()
+                        .unwrap_or_else(|| "?".to_string()),
+                    logits: resp.logits,
+                    queue_us: resp.queue_time.as_nanos() as f64 / 1_000.0,
+                    exec_us: resp.exec_time.as_nanos() as f64 / 1_000.0,
+                    batch: resp.batch_size,
+                }
+            }
+            Err(e) => Response::Error(e.to_string()),
+        }
+    }
+
+    fn session(&self, stream: TcpStream) {
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        log::info!("session open: {peer}");
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = match Request::parse(&line) {
+                Ok(req) => self.handle(req),
+                Err(e) => Response::Error(e),
+            };
+            let mut out = resp.to_json_line();
+            out.push('\n');
+            if writer.write_all(out.as_bytes()).is_err() {
+                break;
+            }
+        }
+        log::info!("session closed: {peer}");
+    }
+
+    /// Bind and serve until `stop` flips (or forever).  Returns the bound
+    /// address once listening.
+    pub fn serve(
+        self: Arc<Self>,
+        addr: &str,
+        threads: usize,
+        stop: Arc<AtomicBool>,
+    ) -> std::io::Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let pool = ThreadPool::new(threads, "server");
+        std::thread::Builder::new().name("acceptor".into()).spawn(move || {
+            loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let _ = stream.set_nonblocking(false);
+                        let me = Arc::clone(&self);
+                        pool.execute(move || me.session(stream));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        })?;
+        Ok(local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::network::tests_support::synth_bcnn_network;
+    use crate::coordinator::{EngineBackend, InferBackend, Router};
+    use crate::input::binarize::Scheme;
+
+    fn test_server() -> Arc<Server> {
+        let be: Arc<dyn InferBackend> =
+            Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 5), 2));
+        let router = Arc::new(Router::builder().variant("bcnn_rgb", be).build());
+        Arc::new(Server::new(
+            router,
+            vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+        ))
+    }
+
+    #[test]
+    fn handle_ping_and_variants() {
+        let s = test_server();
+        assert!(matches!(s.handle(Request::Ping), Response::Pong));
+        match s.handle(Request::Variants) {
+            Response::Variants(v) => assert_eq!(v, vec!["bcnn_rgb"]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_classify_synth() {
+        let s = test_server();
+        match s.handle(Request::ClassifySynth { model: "".into(), index: 3 }) {
+            Response::Classified { class, label, logits, batch, .. } => {
+                assert!(class < 4);
+                assert!(["bus", "normal", "truck", "van"].contains(&label.as_str()));
+                assert_eq!(logits.len(), 4);
+                assert_eq!(batch, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_bad_model() {
+        let s = test_server();
+        match s.handle(Request::ClassifySynth { model: "bogus".into(), index: 0 }) {
+            Response::Error(e) => assert!(e.contains("bcnn_rgb")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        let s = test_server();
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = Arc::clone(&s).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{\"op\":\"classify_synth\",\"index\":1}\n{\"op\":\"stats\"}\n")
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\": true") || line.contains("\"ok\":true"), "{line}");
+        assert!(line.contains("label"));
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("stats"));
+        stop.store(true, Ordering::Relaxed);
+    }
+}

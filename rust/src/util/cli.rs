@@ -1,0 +1,241 @@
+//! Tiny declarative CLI argument parser (no clap in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands (handled by `main.rs`), `-h/--help` text generation, and
+//! typed accessors with defaults.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative parser for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    cmd: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: HashMap<String, String>,
+    flags: HashMap<String, bool>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0} (try --help)")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1:?} ({2})")]
+    Invalid(String, String, String),
+    #[error("help requested")]
+    Help,
+}
+
+impl Args {
+    pub fn new(cmd: &str, about: &'static str) -> Self {
+        Self { cmd: cmd.to_string(), about, ..Default::default() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Declare a required `--name <value>` (no default).
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Parse raw arguments (excluding program/subcommand names).
+    pub fn parse(mut self, raw: &[String]) -> Result<Self, CliError> {
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "-h" || a == "--help" {
+                eprintln!("{}", self.help_text());
+                return Err(CliError::Help);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?
+                    .clone();
+                if spec.is_flag {
+                    self.flags.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    self.values.insert(name, value);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // check required options
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !self.values.contains_key(spec.name) {
+                return Err(CliError::MissingValue(spec.name.to_string()));
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.cmd, self.about);
+        let _ = writeln!(s, "options:");
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let def = match &spec.default {
+                Some(d) if !spec.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "{head:<24} {}{def}", spec.help);
+        }
+        s
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        self.values.get(name).cloned().or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name && !s.is_flag)
+                .and_then(|s| s.default.clone())
+        })
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name).unwrap_or_else(|| panic!("undeclared option --{name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name);
+        v.parse().map_err(|e: std::num::ParseIntError| {
+            CliError::Invalid(name.to_string(), v.clone(), e.to_string())
+        })
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.get(name);
+        v.parse().map_err(|e: std::num::ParseIntError| {
+            CliError::Invalid(name.to_string(), v.clone(), e.to_string())
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name);
+        v.parse().map_err(|e: std::num::ParseFloatError| {
+            CliError::Invalid(name.to_string(), v.clone(), e.to_string())
+        })
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn demo() -> Args {
+        Args::new("demo", "test command")
+            .opt("model", "bcnn_rgb", "model variant")
+            .opt("iters", "100", "iterations")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = demo().parse(&raw(&[])).unwrap();
+        assert_eq!(a.get("model"), "bcnn_rgb");
+        assert_eq!(a.get_usize("iters").unwrap(), 100);
+        assert!(!a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = demo().parse(&raw(&["--model", "float", "--iters=7", "--verbose"])).unwrap();
+        assert_eq!(a.get("model"), "float");
+        assert_eq!(a.get_usize("iters").unwrap(), 7);
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = demo().parse(&raw(&["input.ppm", "--iters", "3", "more"])).unwrap();
+        assert_eq!(a.positional(), &["input.ppm".to_string(), "more".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(matches!(demo().parse(&raw(&["--nope"])), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(demo().parse(&raw(&["--model"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn required_option_enforced() {
+        let p = Args::new("x", "y").opt_req("path", "required path");
+        assert!(matches!(p.parse(&raw(&[])), Err(CliError::MissingValue(_))));
+        let p = Args::new("x", "y").opt_req("path", "required path");
+        assert_eq!(p.parse(&raw(&["--path", "/tmp"])).unwrap().get("path"), "/tmp");
+    }
+
+    #[test]
+    fn invalid_number_reports() {
+        let a = demo().parse(&raw(&["--iters", "abc"])).unwrap();
+        assert!(matches!(a.get_usize("iters"), Err(CliError::Invalid(..))));
+    }
+
+    #[test]
+    fn help_text_lists_options() {
+        let h = demo().help_text();
+        assert!(h.contains("--model"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("[default: bcnn_rgb]"));
+    }
+}

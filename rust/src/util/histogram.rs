@@ -1,0 +1,189 @@
+//! Log-bucketed latency histogram for coordinator metrics.
+//!
+//! Fixed memory, lock-free-friendly (plain u64 counters behind a mutex in
+//! `coordinator::metrics`), ~4% relative error per bucket — plenty for
+//! p50/p95/p99 serving statistics.
+
+/// Histogram over nanosecond values with logarithmic buckets.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i covers [base * growth^i, base * growth^(i+1))
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: f64,
+    min_ns: u64,
+    max_ns: u64,
+    base: f64,
+    growth: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Buckets spanning 100ns .. ~1000s with 8% growth (~290 buckets).
+    pub fn new() -> Self {
+        Self::with_params(100.0, 1.08, 300)
+    }
+
+    pub fn with_params(base: f64, growth: f64, buckets: usize) -> Self {
+        Self {
+            counts: vec![0; buckets],
+            total: 0,
+            sum_ns: 0.0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+            base,
+            growth,
+        }
+    }
+
+    fn bucket_for(&self, ns: u64) -> usize {
+        if (ns as f64) < self.base {
+            return 0;
+        }
+        let idx = ((ns as f64 / self.base).ln() / self.growth.ln()) as usize;
+        idx.min(self.counts.len() - 1)
+    }
+
+    /// Lower edge of bucket `i` in ns.
+    fn bucket_edge(&self, i: usize) -> f64 {
+        self.base * self.growth.powi(i as i32)
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        let b = self.bucket_for(ns);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum_ns += ns as f64;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns / self.total as f64
+        }
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min_ns }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Quantile estimate (0.0..=1.0); returns the bucket's geometric
+    /// midpoint, clamped to observed min/max.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                let mid = self.bucket_edge(i) * self.growth.sqrt();
+                return mid.clamp(self.min_ns as f64, self.max_ns as f64);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum_ns = 0.0;
+        self.min_ns = u64::MAX;
+        self.max_ns = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        for v in [1_000u64, 2_000, 3_000] {
+            h.record(v);
+        }
+        assert!((h.mean_ns() - 2_000.0).abs() < 1e-9);
+        assert_eq!(h.min_ns(), 1_000);
+        assert_eq!(h.max_ns(), 3_000);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 1_000); // 1µs .. 10ms uniform
+        }
+        let p50 = h.quantile_ns(0.50);
+        let p99 = h.quantile_ns(0.99);
+        // log buckets with 8% growth: allow 10% relative error
+        assert!((p50 - 5_000_000.0).abs() / 5_000_000.0 < 0.10, "p50={p50}");
+        assert!((p99 - 9_900_000.0).abs() / 9_900_000.0 < 0.10, "p99={p99}");
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1_000);
+        b.record(9_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min_ns(), 1_000);
+        assert_eq!(a.max_ns(), 9_000);
+    }
+
+    #[test]
+    fn extreme_values_clamp_to_edge_buckets() {
+        let mut h = Histogram::new();
+        h.record(1); // below base
+        h.record(u64::MAX / 2); // beyond last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_ns(0.0) >= 1.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut h = Histogram::new();
+        h.record(5_000);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+}

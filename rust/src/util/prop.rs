@@ -1,0 +1,183 @@
+//! Mini property-based testing harness (no proptest in the vendor set).
+//!
+//! Usage pattern:
+//!
+//! ```text
+//!     prop::check(256, |g| {
+//!         let d = g.usize_in(1, 4096);
+//!         let bits = g.bits(d);
+//!         // ... assert an invariant, return Ok(()) or Err(msg)
+//!         prop::ensure(cond, "message")
+//!     });
+//! ```
+//!
+//! On failure the harness retries with the recorded seed and reports it so
+//! the case can be replayed (`PROP_SEED=<n> cargo test`).  Generation is
+//! seeded deterministically per test unless `PROP_SEED` overrides it.
+
+use super::rng::Xoshiro256;
+
+/// Value generator handed to property closures.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Human-readable trace of generated values (printed on failure).
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.trace.push(format!("u64 = {v}"));
+        v
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        let v = self.rng.next_u32();
+        self.trace.push(format!("u32 = {v:#010x}"));
+        v
+    }
+
+    /// Inclusive range.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below((hi - lo + 1) as u64) as usize;
+        self.trace.push(format!("usize in [{lo},{hi}] = {v}"));
+        v
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.next_f32() * (hi - lo);
+        self.trace.push(format!("f32 in [{lo},{hi}] = {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.trace.push(format!("bool = {v}"));
+        v
+    }
+
+    /// Vector of `n` random {0,1} bits.
+    pub fn bits(&mut self, n: usize) -> Vec<u32> {
+        let v: Vec<u32> = (0..n).map(|_| (self.rng.next_u64() & 1) as u32).collect();
+        self.trace.push(format!("bits[{n}]"));
+        v
+    }
+
+    /// Vector of `n` random {-1.0, +1.0} values.
+    pub fn pm1(&mut self, n: usize) -> Vec<f32> {
+        let v: Vec<f32> = (0..n).map(|_| self.rng.next_pm1()).collect();
+        self.trace.push(format!("pm1[{n}]"));
+        v
+    }
+
+    /// Vector of `n` standard-normal f32 values.
+    pub fn normals(&mut self, n: usize) -> Vec<f32> {
+        let v: Vec<f32> = (0..n).map(|_| self.rng.next_normal_f32()).collect();
+        self.trace.push(format!("normals[{n}]"));
+        v
+    }
+
+    /// Vector of `n` random u32 words.
+    pub fn words(&mut self, n: usize) -> Vec<u32> {
+        let v: Vec<u32> = (0..n).map(|_| self.rng.next_u32()).collect();
+        self.trace.push(format!("words[{n}]"));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u64) as usize;
+        self.trace.push(format!("pick #{i} of {}", xs.len()));
+        &xs[i]
+    }
+}
+
+/// Property result: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Equality helper with value reporting.
+pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` random cases of the property; panic with seed + trace on
+/// the first failure.
+pub fn check(cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base_seed = match std::env::var("PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("PROP_SEED must be u64"),
+        Err(_) => 0xBC44_2026,
+    };
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed on case {case} (replay: PROP_SEED={base_seed})\n  {msg}\n  trace:\n    {}",
+                g.trace.join("\n    ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(64, |g| {
+            let n = g.usize_in(1, 100);
+            ensure(n >= 1 && n <= 100, "range respected")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(64, |g| {
+            let n = g.usize_in(0, 10);
+            ensure(n < 10, "will eventually fail")
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        assert_eq!(a.u64(), b.u64());
+        assert_eq!(a.bits(16), b.bits(16));
+    }
+
+    #[test]
+    fn pm1_values_are_pm1() {
+        let mut g = Gen::new(3);
+        for v in g.pm1(100) {
+            assert!(v == 1.0 || v == -1.0);
+        }
+    }
+
+    #[test]
+    fn ensure_eq_formats_context() {
+        let err = ensure_eq(1, 2, "demo").unwrap_err();
+        assert!(err.contains("demo"));
+        assert!(err.contains("1"));
+        assert!(err.contains("2"));
+    }
+}

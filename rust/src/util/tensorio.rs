@@ -1,0 +1,320 @@
+//! Reader/writer for the BCNT named-tensor container produced by
+//! `python/compile/tensorio.py` (see that file for the layout).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"BCNT";
+const VERSION: u32 = 1;
+
+/// Element type codes (must match tensorio.py `_DTYPES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32 = 0,
+    I32 = 1,
+    U32 = 2,
+    U8 = 3,
+    I8 = 4,
+}
+
+impl DType {
+    fn from_code(c: u32) -> Result<Self, TensorIoError> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            3 => DType::U8,
+            4 => DType::I8,
+            _ => return Err(TensorIoError::BadDType(c)),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::U8 | DType::I8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+            DType::U8 => "u8",
+            DType::I8 => "i8",
+        }
+    }
+}
+
+/// A named tensor: raw little-endian bytes + shape + dtype.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TensorIoError {
+    #[error("tensor io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("tensor io: bad magic")]
+    BadMagic,
+    #[error("tensor io: unsupported version {0}")]
+    BadVersion(u32),
+    #[error("tensor io: unknown dtype code {0}")]
+    BadDType(u32),
+    #[error("tensor io: tensor {0:?} not found")]
+    NotFound(String),
+    #[error("tensor io: {name:?} has dtype {got}, expected {want}")]
+    DTypeMismatch { name: String, got: &'static str, want: &'static str },
+    #[error("tensor io: truncated payload for {0:?}")]
+    Truncated(String),
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(if self.shape.is_empty() { 1 } else { 0 })
+    }
+
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Self {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_u32(shape: Vec<usize>, values: &[u32]) -> Self {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::U32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Self {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { dtype: DType::I32, shape, data }
+    }
+
+    pub fn to_f32(&self, name: &str) -> Result<Vec<f32>, TensorIoError> {
+        if self.dtype != DType::F32 {
+            return Err(TensorIoError::DTypeMismatch {
+                name: name.to_string(),
+                got: self.dtype.name(),
+                want: "f32",
+            });
+        }
+        Ok(self.data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn to_u32(&self, name: &str) -> Result<Vec<u32>, TensorIoError> {
+        if self.dtype != DType::U32 {
+            return Err(TensorIoError::DTypeMismatch {
+                name: name.to_string(),
+                got: self.dtype.name(),
+                want: "u32",
+            });
+        }
+        Ok(self.data.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn to_i32(&self, name: &str) -> Result<Vec<i32>, TensorIoError> {
+        if self.dtype != DType::I32 {
+            return Err(TensorIoError::DTypeMismatch {
+                name: name.to_string(),
+                got: self.dtype.name(),
+                want: "i32",
+            });
+        }
+        Ok(self.data.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Ordered collection of named tensors.
+#[derive(Debug, Default, Clone)]
+pub struct TensorFile {
+    names: Vec<String>,
+    tensors: HashMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if !self.tensors.contains_key(&name) {
+            self.names.push(name.clone());
+        }
+        self.tensors.insert(name, t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor, TensorIoError> {
+        self.tensors.get(name).ok_or_else(|| TensorIoError::NotFound(name.to_string()))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>, TensorIoError> {
+        self.get(name)?.to_f32(name)
+    }
+
+    pub fn u32(&self, name: &str) -> Result<Vec<u32>, TensorIoError> {
+        self.get(name)?.to_u32(name)
+    }
+
+    pub fn i32(&self, name: &str) -> Result<Vec<i32>, TensorIoError> {
+        self.get(name)?.to_i32(name)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, TensorIoError> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(TensorIoError::BadMagic);
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            return Err(TensorIoError::BadVersion(version));
+        }
+        let count = read_u32(&mut f)?;
+        let mut out = Self::new();
+        for _ in 0..count {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8_lossy(&name_bytes).to_string();
+            let dtype = DType::from_code(read_u32(&mut f)?)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let n: usize = shape.iter().product::<usize>().max(usize::from(shape.is_empty()));
+            let mut data = vec![0u8; n * dtype.size()];
+            f.read_exact(&mut data).map_err(|_| TensorIoError::Truncated(name.clone()))?;
+            out.insert(name, Tensor { dtype, shape, data });
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), TensorIoError> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.names.len() as u32).to_le_bytes())?;
+        for name in &self.names {
+            let t = &self.tensors[name];
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.dtype as u32).to_le_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for d in &t.shape {
+                f.write_all(&(*d as u64).to_le_bytes())?;
+            }
+            f.write_all(&t.data)?;
+        }
+        Ok(())
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bcnn-tensorio-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32_u32_i32() {
+        let mut tf = TensorFile::new();
+        tf.insert("a", Tensor::from_f32(vec![2, 3], &[1.0, -2.5, 3.0, 4.0, 5.5, -6.0]));
+        tf.insert("b", Tensor::from_u32(vec![4], &[0, 1, u32::MAX, 42]));
+        tf.insert("c", Tensor::from_i32(vec![2], &[-7, 7]));
+        let path = tmpfile("roundtrip.bcnt");
+        tf.save(&path).unwrap();
+        let rt = TensorFile::load(&path).unwrap();
+        assert_eq!(rt.names(), tf.names());
+        assert_eq!(rt.f32("a").unwrap(), vec![1.0, -2.5, 3.0, 4.0, 5.5, -6.0]);
+        assert_eq!(rt.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(rt.u32("b").unwrap(), vec![0, 1, u32::MAX, 42]);
+        assert_eq!(rt.i32("c").unwrap(), vec![-7, 7]);
+    }
+
+    #[test]
+    fn missing_tensor_and_dtype_mismatch() {
+        let mut tf = TensorFile::new();
+        tf.insert("x", Tensor::from_f32(vec![1], &[1.0]));
+        assert!(matches!(tf.get("y"), Err(TensorIoError::NotFound(_))));
+        assert!(matches!(tf.u32("x"), Err(TensorIoError::DTypeMismatch { .. })));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmpfile("badmagic.bcnt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(matches!(TensorFile::load(&path), Err(TensorIoError::BadMagic)));
+    }
+
+    #[test]
+    fn python_compatibility_layout() {
+        // Hand-build the byte layout tensorio.py writes for a known tensor
+        // and check we parse it identically.
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"BCNT");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // count
+        bytes.extend_from_slice(&3u32.to_le_bytes()); // name len
+        bytes.extend_from_slice(b"abc");
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // dtype u32
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // ndim
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // dim 0 = 2
+        bytes.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        bytes.extend_from_slice(&7u32.to_le_bytes());
+        let path = tmpfile("pycompat.bcnt");
+        std::fs::write(&path, &bytes).unwrap();
+        let tf = TensorFile::load(&path).unwrap();
+        assert_eq!(tf.u32("abc").unwrap(), vec![0xDEADBEEF, 7]);
+    }
+
+    #[test]
+    fn scalar_tensor_roundtrip() {
+        let mut tf = TensorFile::new();
+        tf.insert("s", Tensor::from_f32(vec![], &[3.25]));
+        let path = tmpfile("scalar.bcnt");
+        tf.save(&path).unwrap();
+        let rt = TensorFile::load(&path).unwrap();
+        assert_eq!(rt.f32("s").unwrap(), vec![3.25]);
+        assert!(rt.get("s").unwrap().shape.is_empty());
+    }
+}

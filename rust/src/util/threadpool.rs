@@ -1,0 +1,168 @@
+//! Fixed-size worker thread pool (no tokio in the offline vendor set).
+//!
+//! The coordinator uses this for inference workers; the bench harness and
+//! dataset generator use [`scoped_map`] for data-parallel loops.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing queued jobs.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let active = Arc::clone(&active);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                active.fetch_add(1, Ordering::SeqCst);
+                                // keep the pool alive across panicking jobs
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                active.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, active }
+    }
+
+    /// Queue a job. Panics if the pool is shut down.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    /// Number of jobs currently executing (approximate).
+    pub fn active_jobs(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Data-parallel map over indices `0..n` using scoped threads.
+///
+/// `f(i)` must be `Sync`-callable; results come back in index order.
+pub fn scoped_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    assert!(threads > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|o| o.expect("slot filled")).collect()
+}
+
+/// Default parallelism: physical cores as reported by the OS.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_executes_all_jobs() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join workers
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2, "panic-test");
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.execute(|| panic!("boom"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scoped_map_ordered_results() {
+        let out = scoped_map(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn scoped_map_handles_small_n() {
+        assert_eq!(scoped_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(scoped_map(1, 4, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn threads_reported() {
+        let pool = ThreadPool::new(3, "t");
+        assert_eq!(pool.threads(), 3);
+    }
+}

@@ -1,0 +1,139 @@
+//! Monotonic timing helpers shared by the bench harness, the per-layer
+//! instrumentation in `bnn::network`, and the coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure a closure's wall time.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Benchmark protocol used throughout (mirrors the paper's Section 2.2:
+/// warmup, then many single-sample runs, report the mean over samples).
+///
+/// Returns per-iteration statistics in nanoseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub std_ns: f64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Self {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Self {
+            iters: n,
+            mean_ns: mean,
+            median_ns: ns[n / 2],
+            p95_ns: ns[(n as f64 * 0.95) as usize % n],
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+            std_ns: var.sqrt(),
+        }
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1_000.0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1_000_000.0
+    }
+}
+
+/// Run `f` with `warmup` unmeasured iterations then `iters` measured ones.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        samples.push(start.elapsed().as_nanos() as f64);
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Adaptive variant: runs until `min_time` has elapsed (at least
+/// `min_iters` iterations), so fast kernels get enough samples.
+pub fn bench_for<T>(min_time: Duration, min_iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    // warmup ~10% of budget
+    let warm_deadline = Instant::now() + min_time / 10;
+    while Instant::now() < warm_deadline {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let deadline = Instant::now() + min_time;
+    while Instant::now() < deadline || samples.len() < min_iters {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        samples.push(start.elapsed().as_nanos() as f64);
+        if samples.len() > 5_000_000 {
+            break; // safety valve for sub-ns closures
+        }
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Human-friendly duration formatting for bench tables.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_samples() {
+        let s = BenchStats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert!((s.mean_ns - 3.0).abs() < 1e-9);
+        assert_eq!(s.median_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+        assert_eq!(s.max_ns, 5.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0usize;
+        let s = bench(2, 10, || count += 1);
+        assert_eq!(s.iters, 10);
+        assert_eq!(count, 12);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.00 s");
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

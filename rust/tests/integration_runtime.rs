@@ -1,0 +1,191 @@
+//! Integration tests over the real AOT artifacts (`make artifacts` must
+//! have run — these tests are skipped politely when artifacts/ is absent).
+//!
+//! The decisive correctness signal: the HLO executables (lowered from the
+//! JAX/Pallas model) and the pure-Rust engine produce the SAME logits on
+//! the same weights, for every scheme — and both match the
+//! `expected_logits.bcnt` reference computed by jnp at export time.
+
+use bcnn::bnn::network::{argmax, BcnnNetwork, FloatNetwork};
+use bcnn::dataset::testset::{ExpectedLogits, TestSet};
+use bcnn::input::binarize::Scheme;
+use bcnn::runtime::{Artifacts, ModelRuntime};
+
+const DIR: &str = "artifacts";
+
+fn artifacts() -> Option<Artifacts> {
+    if !std::path::Path::new(DIR).join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Artifacts::load(DIR).expect("manifest parses"))
+}
+
+#[test]
+fn manifest_inventory_is_complete() {
+    let Some(a) = artifacts() else { return };
+    assert_eq!(a.classes, vec!["bus", "normal", "truck", "van"]);
+    // 4 float batches + per scheme: 1 pallas + 4 ref batches
+    assert!(a.models.len() >= 4 + 4 * 5, "got {} models", a.models.len());
+    assert_eq!(a.layers.len(), 14);
+    for m in &a.models {
+        assert!(a.path_of(&m.file).exists(), "{} missing", m.file);
+        assert!(a.path_of(&m.weights_file).exists());
+    }
+}
+
+#[test]
+fn rust_engine_matches_expected_logits_all_schemes() {
+    let Some(a) = artifacts() else { return };
+    let exp = ExpectedLogits::load(a.expected_logits_path().unwrap()).unwrap();
+    for scheme in Scheme::ALL {
+        let tf_path = a.path_of(&format!("weights_bcnn_{}.bcnt", scheme.name()));
+        let net = BcnnNetwork::load(&tf_path, scheme).unwrap();
+        let want = exp.logits(&format!("logits_bcnn_{}", scheme.name())).unwrap();
+        for i in 0..exp.n {
+            let (logits, _) = net.forward(exp.image(i));
+            let w = &want[i * 4..(i + 1) * 4];
+            for k in 0..4 {
+                assert!(
+                    (logits[k] - w[k]).abs() <= 1e-3 + 1e-3 * w[k].abs(),
+                    "{scheme:?} image {i} logit {k}: rust {} vs jax {}",
+                    logits[k],
+                    w[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rust_float_network_matches_expected_logits() {
+    let Some(a) = artifacts() else { return };
+    let exp = ExpectedLogits::load(a.expected_logits_path().unwrap()).unwrap();
+    let net = FloatNetwork::load(a.path_of("weights_float.bcnt")).unwrap();
+    let want = exp.logits("logits_float").unwrap();
+    for i in 0..exp.n {
+        let (logits, _) = net.forward(exp.image(i));
+        let w = &want[i * 4..(i + 1) * 4];
+        for k in 0..4 {
+            // float path accumulates in different order than XLA: allow
+            // proportional tolerance
+            assert!(
+                (logits[k] - w[k]).abs() <= 1e-2 + 1e-3 * w[k].abs(),
+                "float image {i} logit {k}: rust {} vs jax {}",
+                logits[k],
+                w[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn hlo_ref_models_match_rust_engine() {
+    let Some(a) = artifacts() else { return };
+    let client = bcnn::runtime::client::cpu_client().unwrap();
+    let exp = ExpectedLogits::load(a.expected_logits_path().unwrap()).unwrap();
+    for scheme in ["rgb", "none", "lbp", "gray"] {
+        let model = format!("model_bcnn_{scheme}_ref_b1");
+        let rt = ModelRuntime::load(&client, &a, &model).unwrap();
+        let net = BcnnNetwork::load(
+            a.path_of(&format!("weights_bcnn_{scheme}.bcnt")),
+            Scheme::parse(scheme).unwrap(),
+        )
+        .unwrap();
+        for i in 0..exp.n.min(3) {
+            let hlo = rt.infer(exp.image(i)).unwrap();
+            let (rust, _) = net.forward(exp.image(i));
+            for k in 0..4 {
+                assert!(
+                    (hlo[k] - rust[k]).abs() <= 1e-3 + 1e-3 * rust[k].abs(),
+                    "{model} image {i} logit {k}: hlo {} vs rust {}",
+                    hlo[k],
+                    rust[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hlo_pallas_model_matches_ref_model() {
+    let Some(a) = artifacts() else { return };
+    let client = bcnn::runtime::client::cpu_client().unwrap();
+    let exp = ExpectedLogits::load(a.expected_logits_path().unwrap()).unwrap();
+    let pallas = ModelRuntime::load(&client, &a, "model_bcnn_rgb_b1").unwrap();
+    let reference = ModelRuntime::load(&client, &a, "model_bcnn_rgb_ref_b1").unwrap();
+    for i in 0..exp.n.min(3) {
+        let p = pallas.infer(exp.image(i)).unwrap();
+        let r = reference.infer(exp.image(i)).unwrap();
+        assert_eq!(p, r, "pallas vs ref logits differ on image {i}");
+    }
+}
+
+#[test]
+fn hlo_float_model_runs_and_classifies() {
+    let Some(a) = artifacts() else { return };
+    let client = bcnn::runtime::client::cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &a, "model_float_b1").unwrap();
+    let exp = ExpectedLogits::load(a.expected_logits_path().unwrap()).unwrap();
+    let want = exp.logits("logits_float").unwrap();
+    // batch-1 float model input is (1,96,96,3)
+    let hlo = rt.infer(exp.image(0)).unwrap();
+    assert_eq!(hlo.len(), 4);
+    for k in 0..4 {
+        assert!(
+            (hlo[k] - want[k]).abs() <= 1e-3 + 1e-3 * want[k].abs(),
+            "logit {k}: {} vs {}",
+            hlo[k],
+            want[k]
+        );
+    }
+}
+
+#[test]
+fn batched_hlo_matches_singles() {
+    let Some(a) = artifacts() else { return };
+    let client = bcnn::runtime::client::cpu_client().unwrap();
+    let b1 = ModelRuntime::load(&client, &a, "model_bcnn_rgb_ref_b1").unwrap();
+    let b4 = ModelRuntime::load(&client, &a, "model_bcnn_rgb_ref_b4").unwrap();
+    let ts = TestSet::load(a.testset_path().unwrap()).unwrap();
+    let n = 4;
+    let mut batch = Vec::with_capacity(n * 96 * 96 * 3);
+    for i in 0..n {
+        batch.extend_from_slice(ts.image(i));
+    }
+    let batched = b4.infer(&batch).unwrap();
+    for i in 0..n {
+        let single = b1.infer(ts.image(i)).unwrap();
+        // bit pipeline identical; the float fc tail may round differently
+        // across batch layouts
+        for k in 0..4 {
+            assert!(
+                (batched[i * 4 + k] - single[k]).abs() <= 1e-5 + 1e-5 * single[k].abs(),
+                "image {i} logit {k}: {} vs {}",
+                batched[i * 4 + k],
+                single[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_accuracy_on_testset_is_sane() {
+    // with untrained (random) weights accuracy hovers near chance; with
+    // trained weights it must beat chance substantially.  Either way the
+    // pipeline must classify every image without error.
+    let Some(a) = artifacts() else { return };
+    let ts = TestSet::load(a.testset_path().unwrap()).unwrap();
+    let net = BcnnNetwork::load(a.path_of("weights_bcnn_rgb.bcnt"), Scheme::Rgb).unwrap();
+    let n = ts.len().min(64);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let (logits, _) = net.forward(ts.image(i));
+        assert!(logits.iter().all(|v| v.is_finite()));
+        correct += usize::from(argmax(&logits) as i32 == ts.labels[i]);
+    }
+    let trained = a.trained.iter().any(|(k, t)| k == "rgb" && *t);
+    if trained {
+        assert!(correct * 2 > n, "trained rgb accuracy {}/{n} below 50%", correct);
+    }
+}

@@ -1,0 +1,226 @@
+//! End-to-end serving integration: router + batcher + backends + TCP,
+//! over real artifacts when present (engine-only parts run regardless).
+
+use std::sync::Arc;
+
+use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_image};
+use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router};
+use bcnn::input::binarize::Scheme;
+use bcnn::runtime::Artifacts;
+use bcnn::server::{Request, Response, Server};
+
+fn engine_router(max_batch: usize) -> Arc<Router> {
+    let rgb: Arc<dyn InferBackend> =
+        Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 21), 2));
+    let lbp: Arc<dyn InferBackend> =
+        Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Lbp, 22), 2));
+    Arc::new(
+        Router::builder()
+            .policy(BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(1),
+            })
+            .queue_capacity(512)
+            .variant("rgb", rgb)
+            .variant("lbp", lbp)
+            .build(),
+    )
+}
+
+#[test]
+fn multi_variant_routing_is_isolated() {
+    let router = engine_router(1);
+    let img = synth_image(1);
+    let a = router.infer_blocking("rgb", img.clone()).unwrap();
+    let b = router.infer_blocking("lbp", img).unwrap();
+    assert!(a.error.is_none() && b.error.is_none());
+    // different weights -> (almost surely) different logits
+    assert_ne!(a.logits, b.logits);
+}
+
+#[test]
+fn paper_protocol_1000_requests_single_sample() {
+    // Section 2.2: 1000 images one at a time; mean per-sample time.
+    let router = engine_router(1);
+    let n = 1000;
+    for i in 0..n {
+        let resp = router.infer_blocking("rgb", synth_image(i as u64)).unwrap();
+        assert!(resp.error.is_none());
+        assert_eq!(resp.batch_size, 1);
+    }
+    let m = router.metrics("rgb").unwrap();
+    assert_eq!(m.completed(), n as u64);
+    let snap = m.snapshot();
+    let mean_us = snap.get("e2e_us").unwrap().get("mean").unwrap().as_f64().unwrap();
+    assert!(mean_us > 0.0);
+    println!("paper-protocol mean e2e = {mean_us:.1} µs over {n} samples");
+}
+
+#[test]
+fn batching_aggregates_under_load() {
+    let router = engine_router(16);
+    let mut rxs = Vec::new();
+    for i in 0..64 {
+        let (_, rx) = router.submit("rgb", synth_image(i)).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none());
+    }
+    let snap = router.metrics("rgb").unwrap().snapshot();
+    let mean_batch = snap.get("mean_batch_size").unwrap().as_f64().unwrap();
+    assert!(mean_batch > 1.0, "batching never engaged: mean={mean_batch}");
+}
+
+#[test]
+fn server_in_process_roundtrip() {
+    let router = engine_router(1);
+    let server = Server::new(
+        router,
+        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+    );
+    match server.handle(Request::ClassifySynth { model: "rgb".into(), index: 0 }) {
+        Response::Classified { label, .. } => {
+            assert!(["bus", "normal", "truck", "van"].contains(&label.as_str()))
+        }
+        other => panic!("{other:?}"),
+    }
+    match server.handle(Request::Stats) {
+        Response::Stats(s) => assert!(s.get("rgb").is_ok()),
+        other => panic!("{other:?}"),
+    }
+}
+
+/// A backend that fails every Nth batch — exercises error fan-out.
+struct FlakyBackend {
+    fail_every: u64,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl InferBackend for FlakyBackend {
+    fn name(&self) -> String {
+        "flaky".into()
+    }
+
+    fn supported_batches(&self) -> Vec<usize> {
+        vec![usize::MAX]
+    }
+
+    fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+        let c = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        if (c + 1) % self.fail_every == 0 {
+            return Err("injected failure".into());
+        }
+        let n = images.len() / (96 * 96 * 3);
+        Ok(vec![0.25f32; n * 4])
+    }
+}
+
+#[test]
+fn backend_failures_propagate_to_clients() {
+    let be: Arc<dyn InferBackend> =
+        Arc::new(FlakyBackend { fail_every: 3, calls: Default::default() });
+    let router = Router::builder()
+        .policy(BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(50) })
+        .variant("flaky", be)
+        .build();
+    let mut failures = 0;
+    for i in 0..9u64 {
+        let resp = router.infer_blocking("flaky", synth_image(i)).unwrap();
+        if let Some(msg) = resp.error {
+            assert!(msg.contains("injected"));
+            failures += 1;
+        } else {
+            assert_eq!(resp.logits, vec![0.25; 4]);
+        }
+    }
+    assert_eq!(failures, 3, "every third batch fails");
+    router.shutdown();
+}
+
+#[test]
+fn queue_overflow_rejects_cleanly() {
+    // a slow backend + tiny queue forces admission rejections
+    struct Slow;
+    impl InferBackend for Slow {
+        fn name(&self) -> String {
+            "slow".into()
+        }
+        fn supported_batches(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+        fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            Ok(vec![0.0; images.len() / (96 * 96 * 3) * 4])
+        }
+    }
+    let router = Router::builder()
+        .policy(BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(10) })
+        .queue_capacity(2)
+        .variant("slow", Arc::new(Slow))
+        .build();
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        match router.submit("slow", synth_image(i)) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(e) => {
+                assert!(e.to_string().contains("backpressure"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "tiny queue must reject under burst");
+    for rx in rxs {
+        assert!(rx.recv().unwrap().error.is_none());
+    }
+    router.shutdown();
+}
+
+#[test]
+fn pjrt_backend_serves_through_router() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let artifacts = Arc::new(Artifacts::load("artifacts").unwrap());
+    let names: Vec<(usize, String)> = artifacts
+        .models
+        .iter()
+        .filter(|m| m.scheme == "rgb" && m.kind == "bcnn_ref")
+        .map(|m| (m.batch, m.name.clone()))
+        .collect();
+    assert!(!names.is_empty());
+    let backend: Arc<dyn InferBackend> = Arc::new(
+        bcnn::coordinator::RuntimeBackend::spawn(Arc::clone(&artifacts), names, "pjrt/rgb")
+            .unwrap(),
+    );
+    let router = Arc::new(
+        Router::builder()
+            .policy(BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) })
+            .variant("rgb", backend)
+            .build(),
+    );
+    // engine with the SAME exported weights must agree with the HLO path
+    let net = bcnn::bnn::network::BcnnNetwork::load(
+        artifacts.path_of("weights_bcnn_rgb.bcnt"),
+        Scheme::Rgb,
+    )
+    .unwrap();
+    for i in 0..8u64 {
+        let img = synth_image(i);
+        let resp = router.infer_blocking("rgb", img.clone()).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let (want, _) = net.forward(&img);
+        for k in 0..4 {
+            assert!(
+                (resp.logits[k] - want[k]).abs() <= 1e-3 + 1e-3 * want[k].abs(),
+                "image {i} logit {k}: pjrt {} vs engine {}",
+                resp.logits[k],
+                want[k]
+            );
+        }
+    }
+    router.shutdown();
+}
