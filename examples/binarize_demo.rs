@@ -10,7 +10,9 @@ use bcnn::dataset::synth;
 use bcnn::input::binarize;
 use bcnn::input::image::{pm1_to_unit, write_pgm, write_ppm};
 
-fn main() -> anyhow::Result<()> {
+use bcnn::util::error::AppResult;
+
+fn main() -> AppResult<()> {
     let out = "out/fig1";
     std::fs::create_dir_all(out)?;
     let (h, w) = (96usize, 96usize);

@@ -23,11 +23,13 @@ const PAPER: [(&str, &str, f64); 5] = [
     ("float", "Full-precision network", 97.09),
 ];
 
-fn main() -> anyhow::Result<()> {
+use bcnn::util::error::AppResult;
+
+fn main() -> AppResult<()> {
     let artifacts = Artifacts::load("artifacts")
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| bcnn::app_err!("{e}\nhint: run `make artifacts` first"))?;
     let ts = TestSet::load(
-        artifacts.testset_path().ok_or_else(|| anyhow::anyhow!("no testset in manifest"))?,
+        artifacts.testset_path().ok_or_else(|| bcnn::app_err!("no testset in manifest"))?,
     )?;
     let threads = default_threads();
     let n = ts.len();

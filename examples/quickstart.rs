@@ -14,9 +14,11 @@ use bcnn::dataset::synth;
 use bcnn::input::binarize::Scheme;
 use bcnn::runtime::{Artifacts, ModelRuntime};
 
-fn main() -> anyhow::Result<()> {
+use bcnn::util::error::AppResult;
+
+fn main() -> AppResult<()> {
     let artifacts = Artifacts::load("artifacts")
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
+        .map_err(|e| bcnn::app_err!("{e}\nhint: run `make artifacts` first"))?;
 
     // 1. render a synthetic vehicle (the test-set images live in
     //    artifacts/testset.bcnt; here we draw a fresh one)
@@ -47,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     println!("[pjrt]    logits = {hlo_logits:?}");
     println!("[pjrt]    latency = {hlo_us:.1} µs (first call; compile+upload amortized at load)");
 
-    anyhow::ensure!(engine_class == hlo_class, "engine and HLO disagree!");
+    bcnn::app_ensure!(engine_class == hlo_class, "engine and HLO disagree!");
     println!("\nengine and PJRT agree ✓");
     if artifacts.trained.iter().any(|(k, t)| k == "rgb" && *t) {
         println!("(trained weights — prediction is meaningful)");

@@ -24,7 +24,9 @@ use bcnn::runtime::Artifacts;
 use bcnn::server::Server;
 use bcnn::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+use bcnn::util::error::AppResult;
+
+fn main() -> AppResult<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let a = Args::new("serve example", "end-to-end serving driver (paper protocol)")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -32,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         .opt("max-batch", "1", "batcher max batch size")
         .flag("pjrt", "serve HLO artifacts through PJRT instead of the engine")
         .parse(&raw)
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        .map_err(|e| bcnn::app_err!("{e}"))?;
 
     let dir = a.get("artifacts");
     let n = a.get_usize("requests")?;
@@ -95,12 +97,12 @@ fn main() -> anyhow::Result<()> {
             let s = synth::render_vehicle(i, synth::DEFAULT_SEED);
             let resp = router
                 .infer_blocking(variant, s.image)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
-            anyhow::ensure!(resp.error.is_none(), "backend error: {:?}", resp.error);
+                .map_err(|e| bcnn::app_err!("{e}"))?;
+            bcnn::app_ensure!(resp.error.is_none(), "backend error: {:?}", resp.error);
             correct += usize::from(resp.class == s.label);
         }
         let wall = started.elapsed();
-        let snap = router.metrics(variant).map_err(|e| anyhow::anyhow!("{e}"))?.snapshot();
+        let snap = router.metrics(variant).map_err(|e| bcnn::app_err!("{e}"))?.snapshot();
         let e2e = snap.get("e2e_us").unwrap();
         let mean = e2e.get("mean").unwrap().as_f64().unwrap();
         mean_us.push(mean);

@@ -1,0 +1,61 @@
+//! Batched-forward ablation: images/sec vs batch size for the pure-Rust
+//! engine, float and packed — the tentpole measurement for the batched
+//! end-to-end path.
+//!
+//! The single-image protocol (the paper's Section 2.2) pays the A-operand
+//! repack, the weight widening, and every intermediate allocation once
+//! per image; `infer_batch` pays them once per batch with
+//! M = batch × spatial positions, keeping the packed weight rows L1-hot
+//! across all images (the bit-level-parallelism-at-small-batch gap BSTC
+//! and FINN point out).  Runs on synthetic weights, so no artifacts are
+//! required:
+//!
+//!     cargo bench --bench ablation_batch_forward
+
+use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_float_network, synth_image};
+use bcnn::input::binarize::Scheme;
+use bcnn::util::timer::{bench, fmt_ns};
+
+fn main() {
+    let batches = [1usize, 4, 16, 64];
+    let max_n = *batches.iter().max().unwrap();
+    let pool: Vec<f32> = (0..max_n as u64).flat_map(synth_image).collect();
+    const IMG: usize = 96 * 96 * 3;
+
+    let bcnn = synth_bcnn_network(Scheme::Rgb, 101);
+    let float = synth_float_network(102);
+
+    println!("Batched forward — images/sec vs batch size (single-core engine)\n");
+    println!(
+        "{:<8}{:>18}{:>14}{:>18}{:>14}{:>12}",
+        "batch", "bcnn/sample", "bcnn img/s", "float/sample", "float img/s", "bcnn-x"
+    );
+    let mut bcnn_ips = Vec::new();
+    for &bs in &batches {
+        let payload = &pool[..bs * IMG];
+        // fewer measured iters at large batch keeps wall time flat
+        let iters = (64 / bs).max(4);
+        let b = bench(2, iters, || bcnn.infer_batch(payload).unwrap());
+        let f = bench(1, (iters / 2).max(2), || float.infer_batch(payload).unwrap());
+        let b_ips = bs as f64 / (b.mean_ns * 1e-9);
+        let f_ips = bs as f64 / (f.mean_ns * 1e-9);
+        bcnn_ips.push((bs, b_ips));
+        println!(
+            "{:<8}{:>18}{:>14.1}{:>18}{:>14.1}{:>11.2}x",
+            bs,
+            fmt_ns(b.mean_ns / bs as f64),
+            b_ips,
+            fmt_ns(f.mean_ns / bs as f64),
+            f_ips,
+            f.mean_ns / b.mean_ns,
+        );
+    }
+
+    let b1 = bcnn_ips.iter().find(|(bs, _)| *bs == 1).unwrap().1;
+    let b16 = bcnn_ips.iter().find(|(bs, _)| *bs == 16).unwrap().1;
+    println!(
+        "\npacked engine: batch 16 throughput = {:.2}x batch 1 ({b16:.1} vs {b1:.1} img/s)",
+        b16 / b1
+    );
+    println!("(amortized per batch: weight widening, fused repack setup, allocations)");
+}

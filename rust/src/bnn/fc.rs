@@ -60,6 +60,26 @@ pub fn fc_packed_into(
     }
 }
 
+/// Batched packed FC: `xs` is N contiguous (KW,) activation rows,
+/// output is N contiguous (L,) count rows.  Bit-identical per row to
+/// `fc_packed`; the weight matrix streams once per image but stays
+/// L1-resident across the batch (576 words/row for this network).
+pub fn fc_packed_batch(
+    xs: &[u32],
+    wt: &[u32],
+    n: usize,
+    l: usize,
+    kw: usize,
+    d_real: usize,
+) -> Vec<i32> {
+    assert_eq!(xs.len(), n * kw);
+    let mut out = vec![0i32; n * l];
+    for i in 0..n {
+        fc_packed_into(&xs[i * kw..(i + 1) * kw], wt, l, kw, d_real, &mut out[i * l..(i + 1) * l]);
+    }
+    out
+}
+
 /// Float FC: `x` (D,), `wt` (L, D) row-major -> (L,).
 pub fn fc_float(x: &[f32], wt: &[f32], l: usize, d: usize) -> Vec<f32> {
     assert_eq!(x.len(), d);
@@ -147,6 +167,27 @@ mod tests {
         let wt = [2.0, -2.0];
         let out = fc_float_bias(&x, &wt, &[0.5, 0.25], 2, 1);
         assert_eq!(out, vec![2.5, -1.75]);
+    }
+
+    #[test]
+    fn batch_matches_per_row() {
+        prop::check(32, |g| {
+            let n = g.usize_in(1, 6);
+            let l = g.usize_in(1, 12);
+            let kw = g.usize_in(1, 40);
+            let d = kw * 32;
+            let xs = g.words(n * kw);
+            let wt = g.words(l * kw);
+            let got = fc_packed_batch(&xs, &wt, n, l, kw, d);
+            for i in 0..n {
+                ensure_eq(
+                    got[i * l..(i + 1) * l].to_vec(),
+                    fc_packed(&xs[i * kw..(i + 1) * kw], &wt, l, kw, d),
+                    "fc batch == single",
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

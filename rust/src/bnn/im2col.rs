@@ -12,9 +12,16 @@ use super::packing::{pack_pm1, packed_width};
 /// (H*W, K*K*C) row-major, zero padding.
 pub fn im2col_float(x: &[f32], h: usize, w: usize, c: usize, k: usize) -> Vec<f32> {
     assert_eq!(x.len(), h * w * c);
-    let r = (k - 1) / 2;
     let d = k * k * c;
     let mut out = vec![0f32; h * w * d];
+    im2col_float_into(x, h, w, c, k, &mut out);
+    out
+}
+
+/// Core: patch one image into a zeroed (H*W, K*K*C) slice.
+fn im2col_float_into(x: &[f32], h: usize, w: usize, c: usize, k: usize, out: &mut [f32]) {
+    let r = (k - 1) / 2;
+    let d = k * k * c;
     for oy in 0..h {
         for ox in 0..w {
             let patch = &mut out[(oy * w + ox) * d..(oy * w + ox + 1) * d];
@@ -31,6 +38,33 @@ pub fn im2col_float(x: &[f32], h: usize, w: usize, c: usize, k: usize) -> Vec<f3
                 }
             }
         }
+    }
+}
+
+/// Batched float im2col over `n` contiguous (H, W, C) images; output is
+/// (N*H*W, K*K*C) — image i's patch rows occupy rows [i*H*W, (i+1)*H*W).
+/// Bit-identical per image to `im2col_float` (pads never cross images).
+pub fn im2col_float_batch(
+    xs: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+) -> Vec<f32> {
+    assert_eq!(xs.len(), n * h * w * c);
+    let d = k * k * c;
+    let (img_in, img_out) = (h * w * c, h * w * d);
+    let mut out = vec![0f32; n * img_out];
+    for i in 0..n {
+        im2col_float_into(
+            &xs[i * img_in..(i + 1) * img_in],
+            h,
+            w,
+            c,
+            k,
+            &mut out[i * img_out..(i + 1) * img_out],
+        );
     }
     out
 }
@@ -99,10 +133,24 @@ impl<'a> BitWriter<'a> {
 /// two-pass variant below exists for the E7 ablation).
 pub fn im2col_pack(x: &[f32], h: usize, w: usize, c: usize, k: usize, b: usize) -> Vec<u32> {
     assert_eq!(x.len(), h * w * c);
-    let r = (k - 1) / 2;
-    let d = k * k * c;
-    let nw = packed_width(d, b);
+    let nw = packed_width(k * k * c, b);
     let mut out = vec![0u32; h * w * nw];
+    im2col_pack_into(x, h, w, c, k, b, &mut out);
+    out
+}
+
+/// Core: fused im2col+pack of one image into a zeroed (H*W, NW) slice.
+fn im2col_pack_into(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    b: usize,
+    out: &mut [u32],
+) {
+    let r = (k - 1) / 2;
+    let nw = packed_width(k * k * c, b);
     for oy in 0..h {
         for ox in 0..w {
             let row = &mut out[(oy * w + ox) * nw..(oy * w + ox + 1) * nw];
@@ -128,6 +176,35 @@ pub fn im2col_pack(x: &[f32], h: usize, w: usize, c: usize, k: usize, b: usize) 
             }
             bw.finish();
         }
+    }
+}
+
+/// Batched fused im2col+pack over `n` contiguous (H, W, C) ±1 images;
+/// output is (N*H*W, NW) packed patch rows, bit-identical per image to
+/// `im2col_pack` (the halo never reads across image boundaries).
+pub fn im2col_pack_batch(
+    xs: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    b: usize,
+) -> Vec<u32> {
+    assert_eq!(xs.len(), n * h * w * c);
+    let nw = packed_width(k * k * c, b);
+    let (img_in, img_out) = (h * w * c, h * w * nw);
+    let mut out = vec![0u32; n * img_out];
+    for i in 0..n {
+        im2col_pack_into(
+            &xs[i * img_in..(i + 1) * img_in],
+            h,
+            w,
+            c,
+            k,
+            b,
+            &mut out[i * img_out..(i + 1) * img_out],
+        );
     }
     out
 }
@@ -174,9 +251,15 @@ pub fn im2col_then_pack(x: &[f32], h: usize, w: usize, c: usize, k: usize, b: us
 /// activations are already channel-packed — the gather IS the im2col.
 pub fn im2col_words(words: &[u32], h: usize, w: usize, nw: usize, k: usize) -> Vec<u32> {
     assert_eq!(words.len(), h * w * nw);
+    let mut out = vec![0u32; h * w * k * k * nw];
+    im2col_words_into(words, h, w, nw, k, &mut out);
+    out
+}
+
+/// Core: gather one image's words into a zeroed (H*W, K*K*NW) slice.
+fn im2col_words_into(words: &[u32], h: usize, w: usize, nw: usize, k: usize, out: &mut [u32]) {
     let r = (k - 1) / 2;
     let row_w = k * k * nw;
-    let mut out = vec![0u32; h * w * row_w];
     for oy in 0..h {
         for ox in 0..w {
             let base = (oy * w + ox) * row_w;
@@ -193,6 +276,31 @@ pub fn im2col_words(words: &[u32], h: usize, w: usize, nw: usize, k: usize) -> V
                 }
             }
         }
+    }
+}
+
+/// Batched word gather over `n` contiguous (H, W, NW) packed images;
+/// output is (N*H*W, K*K*NW), bit-identical per image to `im2col_words`.
+pub fn im2col_words_batch(
+    words: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    nw: usize,
+    k: usize,
+) -> Vec<u32> {
+    assert_eq!(words.len(), n * h * w * nw);
+    let (img_in, img_out) = (h * w * nw, h * w * k * k * nw);
+    let mut out = vec![0u32; n * img_out];
+    for i in 0..n {
+        im2col_words_into(
+            &words[i * img_in..(i + 1) * img_in],
+            h,
+            w,
+            nw,
+            k,
+            &mut out[i * img_out..(i + 1) * img_out],
+        );
     }
     out
 }
@@ -282,5 +390,47 @@ mod tests {
         let words = vec![7u32; 4 * 4 * 2];
         let out = im2col_words(&words, 4, 4, 2, 5);
         assert_eq!(out.len(), 16 * 25 * 2);
+    }
+
+    #[test]
+    fn batch_variants_match_per_image() {
+        prop::check(24, |g| {
+            let n = g.usize_in(1, 4);
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 6);
+            let c = g.usize_in(1, 3);
+            let k = *g.pick(&[1usize, 3, 5]);
+            let b = *g.pick(&[25usize, 32]);
+            let xs = g.pm1(n * h * w * c);
+            let words = g.words(n * h * w * c);
+
+            let fb = im2col_float_batch(&xs, n, h, w, c, k);
+            let pb = im2col_pack_batch(&xs, n, h, w, c, k, b);
+            let wb = im2col_words_batch(&words, n, h, w, c, k);
+
+            let img = h * w * c;
+            let d = k * k * c;
+            let nw = packed_width(d, b);
+            for i in 0..n {
+                let x = &xs[i * img..(i + 1) * img];
+                ensure_eq(
+                    fb[i * h * w * d..(i + 1) * h * w * d].to_vec(),
+                    im2col_float(x, h, w, c, k),
+                    "float batch == single",
+                )?;
+                ensure_eq(
+                    pb[i * h * w * nw..(i + 1) * h * w * nw].to_vec(),
+                    im2col_pack(x, h, w, c, k, b),
+                    "pack batch == single",
+                )?;
+                let ws = &words[i * img..(i + 1) * img];
+                ensure_eq(
+                    wb[i * h * w * k * k * c..(i + 1) * h * w * k * k * c].to_vec(),
+                    im2col_words(ws, h, w, c, k),
+                    "words batch == single",
+                )?;
+            }
+            Ok(())
+        });
     }
 }

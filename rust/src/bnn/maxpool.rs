@@ -3,12 +3,68 @@
 //! sign is monotone, so `sign(max(x)) == or(sign(x))` bit-wise — 32
 //! channels pooled per OR instruction.
 
+/// Pool-shape violation — recoverable so a serving worker can answer a
+/// malformed artifact or request with a protocol error instead of
+/// aborting its thread (the bare `maxpool2x2`/`orpool2x2` wrappers keep
+/// the assert semantics for bench/test code).
+#[derive(Debug, PartialEq, Eq)]
+pub struct PoolError {
+    pub what: &'static str,
+    pub h: usize,
+    pub w: usize,
+    pub got: usize,
+    pub want: usize,
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: H={} W={} (len {} vs expected {})",
+            self.what, self.h, self.w, self.got, self.want
+        )
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+fn check_pool_shape(
+    what: &'static str,
+    len: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Result<(), PoolError> {
+    if h % 2 != 0 || w % 2 != 0 || len != h * w * c {
+        Err(PoolError { what, h, w, got: len, want: h * w * c })
+    } else {
+        Ok(())
+    }
+}
+
 /// Float 2x2 max pool.  `x` (H, W, C) -> (H/2, W/2, C); H, W even.
 pub fn maxpool2x2(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
-    assert!(h % 2 == 0 && w % 2 == 0);
-    assert_eq!(x.len(), h * w * c);
+    maxpool2x2_checked(x, h, w, c).expect("maxpool2x2 shape")
+}
+
+/// Fallible max pool for serving-reachable paths.
+pub fn maxpool2x2_checked(
+    x: &[f32],
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Result<Vec<f32>, PoolError> {
+    check_pool_shape("maxpool2x2: odd extent or length mismatch", x.len(), h, w, c)?;
     let (oh, ow) = (h / 2, w / 2);
     let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    maxpool2x2_image_into(x, h, w, c, &mut out);
+    Ok(out)
+}
+
+/// Pool one image into a pre-sized output slice (`out` must be
+/// `NEG_INFINITY`-initialized, (H/2)*(W/2)*C long).
+fn maxpool2x2_image_into(x: &[f32], h: usize, w: usize, c: usize, out: &mut [f32]) {
+    let (oh, ow) = (h / 2, w / 2);
     for oy in 0..oh {
         for ox in 0..ow {
             let dst = (oy * ow + ox) * c;
@@ -23,15 +79,53 @@ pub fn maxpool2x2(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
             }
         }
     }
-    out
+}
+
+/// Batched max pool over `n` contiguous (H, W, C) images.
+/// Bit-identical per image to `maxpool2x2` on each slice.
+pub fn maxpool2x2_batch(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Result<Vec<f32>, PoolError> {
+    check_pool_shape("maxpool2x2_batch: odd extent or length mismatch", x.len(), h, w, n * c)?;
+    let (img_in, img_out) = (h * w * c, (h / 2) * (w / 2) * c);
+    let mut out = vec![f32::NEG_INFINITY; n * img_out];
+    for i in 0..n {
+        maxpool2x2_image_into(
+            &x[i * img_in..(i + 1) * img_in],
+            h,
+            w,
+            c,
+            &mut out[i * img_out..(i + 1) * img_out],
+        );
+    }
+    Ok(out)
 }
 
 /// Packed OR pool.  `words` (H, W, NW) u32 -> (H/2, W/2, NW).
 pub fn orpool2x2(words: &[u32], h: usize, w: usize, nw: usize) -> Vec<u32> {
-    assert!(h % 2 == 0 && w % 2 == 0);
-    assert_eq!(words.len(), h * w * nw);
+    orpool2x2_checked(words, h, w, nw).expect("orpool2x2 shape")
+}
+
+/// Fallible OR pool for serving-reachable paths.
+pub fn orpool2x2_checked(
+    words: &[u32],
+    h: usize,
+    w: usize,
+    nw: usize,
+) -> Result<Vec<u32>, PoolError> {
+    check_pool_shape("orpool2x2: odd extent or length mismatch", words.len(), h, w, nw)?;
+    let mut out = vec![0u32; (h / 2) * (w / 2) * nw];
+    orpool2x2_image_into(words, h, w, nw, &mut out);
+    Ok(out)
+}
+
+/// OR-pool one image into a pre-sized zeroed output slice.
+fn orpool2x2_image_into(words: &[u32], h: usize, w: usize, nw: usize, out: &mut [u32]) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = vec![0u32; oh * ow * nw];
     for oy in 0..oh {
         for ox in 0..ow {
             let dst = (oy * ow + ox) * nw;
@@ -43,7 +137,30 @@ pub fn orpool2x2(words: &[u32], h: usize, w: usize, nw: usize) -> Vec<u32> {
             }
         }
     }
-    out
+}
+
+/// Batched OR pool over `n` contiguous (H, W, NW) packed images.
+/// Bit-identical per image to `orpool2x2` on each slice.
+pub fn orpool2x2_batch(
+    words: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    nw: usize,
+) -> Result<Vec<u32>, PoolError> {
+    check_pool_shape("orpool2x2_batch: odd extent or length mismatch", words.len(), h, w, n * nw)?;
+    let (img_in, img_out) = (h * w * nw, (h / 2) * (w / 2) * nw);
+    let mut out = vec![0u32; n * img_out];
+    for i in 0..n {
+        orpool2x2_image_into(
+            &words[i * img_in..(i + 1) * img_in],
+            h,
+            w,
+            nw,
+            &mut out[i * img_out..(i + 1) * img_out],
+        );
+    }
+    Ok(out)
 }
 
 /// Float max-pool on ±1 data followed by channel packing — the unfused
@@ -126,5 +243,52 @@ mod tests {
     fn orpool_shapes() {
         let out = orpool2x2(&vec![1u32; 8 * 6 * 3], 8, 6, 3);
         assert_eq!(out.len(), 4 * 3 * 3);
+    }
+
+    #[test]
+    fn checked_variants_reject_bad_shapes() {
+        // odd extent
+        assert!(maxpool2x2_checked(&[0.0; 3 * 2], 3, 2, 1).is_err());
+        assert!(orpool2x2_checked(&[0u32; 2 * 3], 2, 3, 1).is_err());
+        // length mismatch
+        assert!(maxpool2x2_checked(&[0.0; 5], 2, 2, 1).is_err());
+        assert!(orpool2x2_checked(&[0u32; 5], 2, 2, 1).is_err());
+        // errors are printable and name the offender
+        let e = orpool2x2_checked(&[0u32; 5], 2, 2, 1).unwrap_err();
+        assert!(e.to_string().contains("orpool2x2"));
+    }
+
+    #[test]
+    fn batch_pools_match_per_image() {
+        prop::check(32, |g| {
+            let n = g.usize_in(1, 5);
+            let h = 2 * g.usize_in(1, 4);
+            let w = 2 * g.usize_in(1, 4);
+            let c = g.usize_in(1, 4);
+            let xs = g.normals(n * h * w * c);
+            let words = g.words(n * h * w * c);
+            let fb = maxpool2x2_batch(&xs, n, h, w, c).unwrap();
+            let ob = orpool2x2_batch(&words, n, h, w, c).unwrap();
+            let (img_in, img_out) = (h * w * c, (h / 2) * (w / 2) * c);
+            for i in 0..n {
+                ensure_eq(
+                    fb[i * img_out..(i + 1) * img_out].to_vec(),
+                    maxpool2x2(&xs[i * img_in..(i + 1) * img_in], h, w, c),
+                    "maxpool batch == single",
+                )?;
+                ensure_eq(
+                    ob[i * img_out..(i + 1) * img_out].to_vec(),
+                    orpool2x2(&words[i * img_in..(i + 1) * img_in], h, w, c),
+                    "orpool batch == single",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_pools_reject_bad_shapes() {
+        assert!(maxpool2x2_batch(&[0.0; 8], 3, 2, 2, 1).is_err());
+        assert!(orpool2x2_batch(&[0u32; 9], 1, 3, 3, 1).is_err());
     }
 }

@@ -27,12 +27,40 @@ pub const CLASSES: [&str; 4] = ["bus", "normal", "truck", "van"];
 /// Named per-layer wall times for one forward pass.
 pub type LayerTimings = Vec<(&'static str, Duration)>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum NetworkError {
-    #[error(transparent)]
-    Tensor(#[from] TensorIoError),
-    #[error("network: tensor {name} has {got} elements, expected {want}")]
+    Tensor(TensorIoError),
     Shape { name: &'static str, got: usize, want: usize },
+    /// Recoverable bad-input error on the inference path (batched entry
+    /// points return this instead of asserting).
+    BadInput(String),
+}
+
+impl std::fmt::Display for NetworkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetworkError::Tensor(e) => write!(f, "{e}"),
+            NetworkError::Shape { name, got, want } => {
+                write!(f, "network: tensor {name} has {got} elements, expected {want}")
+            }
+            NetworkError::BadInput(msg) => write!(f, "network: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetworkError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NetworkError::Tensor(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<TensorIoError> for NetworkError {
+    fn from(e: TensorIoError) -> Self {
+        NetworkError::Tensor(e)
+    }
 }
 
 fn expect_len(name: &'static str, v: &[impl Sized], want: usize) -> Result<(), NetworkError> {
@@ -224,6 +252,15 @@ impl BcnnNetwork {
         lap("fc1", &mut mark, &mut times);
 
         // --- float CPU tail -------------------------------------------------
+        let logits = self.float_tail(&counts3);
+        lap("fc_tail", &mut mark, &mut times);
+        (logits, times)
+    }
+
+    /// The float CPU tail after fc1: threshold to ±1, fc2 + sign, fc3.
+    /// Shared verbatim by the single-image and batched paths so they are
+    /// bit-identical.
+    fn float_tail(&self, counts3: &[i32]) -> [f32; NUM_CLASSES] {
         let mut h3 = vec![0f32; FC1_OUT];
         for i in 0..FC1_OUT {
             h3[i] = if packing::threshold_bit(counts3[i] as f32, self.theta3[i], self.flip3[i])
@@ -239,11 +276,82 @@ impl BcnnNetwork {
             *v = packing::sign_pm1(*v);
         }
         let logits_v = fc::fc_float_bias(&h4, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
-        lap("fc_tail", &mut mark, &mut times);
-
         let mut logits = [0f32; NUM_CLASSES];
         logits.copy_from_slice(&logits_v);
-        (logits, times)
+        logits
+    }
+
+    /// Batched forward over `n` contiguous (96,96,3) images.
+    ///
+    /// This is the tentpole batching path: one fused im2col+pack over the
+    /// whole batch, one `bgemm` call per conv layer with
+    /// M = batch × spatial positions (the packed weight matrix is widened
+    /// once and its rows stay L1-hot across every image), batched OR-pools,
+    /// and a batched packed fc1.  Per image the arithmetic is exactly the
+    /// single-image pipeline, so logits are bit-identical to `forward`.
+    ///
+    /// Malformed input is a recoverable `NetworkError::BadInput`, never a
+    /// panic — this is the serving-reachable entry point.
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
+        const IMG: usize = IMG_H * IMG_W * IMG_C;
+        if images.len() % IMG != 0 {
+            return Err(NetworkError::BadInput(format!(
+                "batch payload {} is not a multiple of {IMG}",
+                images.len()
+            )));
+        }
+        let n = images.len() / IMG;
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let px = IMG_H * IMG_W;
+        let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
+
+        // --- conv1 over the whole batch ----------------------------------
+        let words1 = if self.scheme == Scheme::None {
+            // Scheme::None consumes the raw input directly — no binarize
+            // pass, no intermediate copy of the batch.
+            let cols = im2col::im2col_float_batch(images, n, IMG_H, IMG_W, IMG_C, K);
+            let counts =
+                float_ops::gemm_blocked(&cols, &self.w1_pm1, n * px, CONV1_OUT, self.d1);
+            Self::threshold_pack_f32(&counts, &self.theta1, &self.flip1, n * px)
+        } else {
+            // binarize per image, concatenated (±1 domain)
+            let c_in = self.scheme.input_channels();
+            let mut xb = Vec::with_capacity(n * px * c_in);
+            for i in 0..n {
+                xb.extend(self.binarize_input(&images[i * IMG..(i + 1) * IMG]));
+            }
+            let cols = im2col::im2col_pack_batch(&xb, n, IMG_H, IMG_W, c_in, K, 32);
+            let counts =
+                bgemm::bgemm(&cols, &self.w1_packed, n * px, CONV1_OUT, self.nw1, self.d1);
+            Self::threshold_pack(&counts, &self.theta1, &self.flip1, n * px)
+        };
+        let pooled1 = maxpool::orpool2x2_batch(&words1, n, IMG_H, IMG_W, 1).map_err(bad)?;
+
+        // --- conv2 over the whole batch ----------------------------------
+        let cols2 = im2col::im2col_words_batch(&pooled1, n, 48, 48, 1, K);
+        let counts2 = bgemm::bgemm(
+            &cols2,
+            &self.w2_packed,
+            n * 48 * 48,
+            CONV2_OUT,
+            K * K,
+            K * K * CONV1_OUT,
+        );
+        let words2 = Self::threshold_pack(&counts2, &self.theta2, &self.flip2, n * 48 * 48);
+        let pooled2 = maxpool::orpool2x2_batch(&words2, n, 48, 48, 1).map_err(bad)?;
+
+        // --- fc1 (batched packed) + per-image float tail ------------------
+        let counts3 = fc::fc_packed_batch(
+            &pooled2,
+            &self.wfc1_packed,
+            n,
+            FC1_OUT,
+            24 * 24,
+            24 * 24 * CONV2_OUT,
+        );
+        Ok((0..n).map(|i| self.float_tail(&counts3[i * FC1_OUT..(i + 1) * FC1_OUT])).collect())
     }
 
     /// argmax class index for one image.
@@ -339,6 +447,56 @@ impl FloatNetwork {
         let mut logits = [0f32; NUM_CLASSES];
         logits.copy_from_slice(&logits_v);
         (logits, times)
+    }
+
+    /// Batched forward over `n` contiguous (96,96,3) images: batched
+    /// im2col + GEMM (M = batch × spatial) and batched max-pools, with a
+    /// per-image FC tail.  Bit-identical per image to `forward` (every
+    /// row of every GEMM is accumulated in the same order).  Malformed
+    /// input is a recoverable error, never a panic.
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
+        const IMG: usize = IMG_H * IMG_W * IMG_C;
+        if images.len() % IMG != 0 {
+            return Err(NetworkError::BadInput(format!(
+                "batch payload {} is not a multiple of {IMG}",
+                images.len()
+            )));
+        }
+        let n = images.len() / IMG;
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let px = IMG_H * IMG_W;
+        let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
+
+        let cols1 = im2col::im2col_float_batch(images, n, IMG_H, IMG_W, IMG_C, K);
+        let mut a1 =
+            float_ops::gemm_blocked(&cols1, &self.w1, n * px, CONV1_OUT, K * K * IMG_C);
+        float_ops::add_bias(&mut a1, &self.b1);
+        float_ops::relu(&mut a1);
+        let p1 = maxpool::maxpool2x2_batch(&a1, n, IMG_H, IMG_W, CONV1_OUT).map_err(bad)?;
+
+        let cols2 = im2col::im2col_float_batch(&p1, n, 48, 48, CONV1_OUT, K);
+        let mut a2 =
+            float_ops::gemm_blocked(&cols2, &self.w2, n * 48 * 48, CONV2_OUT, K * K * CONV1_OUT);
+        float_ops::add_bias(&mut a2, &self.b2);
+        float_ops::relu(&mut a2);
+        let p2 = maxpool::maxpool2x2_batch(&a2, n, 48, 48, CONV2_OUT).map_err(bad)?;
+
+        let feat = 24 * 24 * CONV2_OUT;
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let f = &p2[i * feat..(i + 1) * feat];
+            let mut h1 = fc::fc_float_bias(f, &self.wfc1, &self.bfc1, FC1_OUT, feat);
+            float_ops::relu(&mut h1);
+            let mut h2 = fc::fc_float_bias(&h1, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT);
+            float_ops::relu(&mut h2);
+            let logits_v = fc::fc_float_bias(&h2, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
+            let mut logits = [0f32; NUM_CLASSES];
+            logits.copy_from_slice(&logits_v);
+            out.push(logits);
+        }
+        Ok(out)
     }
 
     pub fn classify(&self, x: &[f32]) -> usize {
@@ -495,5 +653,64 @@ mod tests {
         let tf = synth_bcnn_tf(Scheme::Lbp, 9);
         let net = BcnnNetwork::from_tensor_file(&tf, Scheme::Lbp).unwrap();
         assert!(net.classify(&synth_image(5)) < NUM_CLASSES);
+    }
+
+    #[test]
+    fn bcnn_infer_batch_bit_identical_to_singles() {
+        use crate::util::prop::{self, ensure_eq};
+        // Every scheme (packed conv1 and the float-conv1 None scheme),
+        // random batch sizes: batched logits must be BIT-identical to n
+        // independent single-image forwards.
+        let nets: Vec<BcnnNetwork> = Scheme::ALL
+            .iter()
+            .map(|&s| BcnnNetwork::from_tensor_file(&synth_bcnn_tf(s, 33), s).unwrap())
+            .collect();
+        prop::check(6, |g| {
+            let net = g.pick(&nets);
+            let n = g.usize_in(1, 5);
+            let seed = g.u64();
+            let mut images = Vec::with_capacity(n * IMG_H * IMG_W * IMG_C);
+            for i in 0..n {
+                images.extend(synth_image(seed.wrapping_add(i as u64)));
+            }
+            let batched = net.infer_batch(&images).unwrap();
+            ensure_eq(batched.len(), n, "one logit row per image")?;
+            for i in 0..n {
+                let x = &images[i * IMG_H * IMG_W * IMG_C..(i + 1) * IMG_H * IMG_W * IMG_C];
+                let (single, _) = net.forward(x);
+                ensure_eq(batched[i], single, "batched == single (bitwise)")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn float_infer_batch_bit_identical_to_singles() {
+        use crate::util::prop::{self, ensure_eq};
+        let net = synth_float_network(44);
+        prop::check(4, |g| {
+            let n = g.usize_in(1, 4);
+            let seed = g.u64();
+            let mut images = Vec::with_capacity(n * IMG_H * IMG_W * IMG_C);
+            for i in 0..n {
+                images.extend(synth_image(seed.wrapping_add(i as u64)));
+            }
+            let batched = net.infer_batch(&images).unwrap();
+            for i in 0..n {
+                let x = &images[i * IMG_H * IMG_W * IMG_C..(i + 1) * IMG_H * IMG_W * IMG_C];
+                let (single, _) = net.forward(x);
+                ensure_eq(batched[i], single, "float batched == single (bitwise)")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn infer_batch_rejects_ragged_and_accepts_empty() {
+        let net = synth_bcnn_network(Scheme::Rgb, 8);
+        assert!(matches!(net.infer_batch(&[0.0; 100]), Err(NetworkError::BadInput(_))));
+        assert!(net.infer_batch(&[]).unwrap().is_empty());
+        let fnet = synth_float_network(8);
+        assert!(matches!(fnet.infer_batch(&[0.0; 7]), Err(NetworkError::BadInput(_))));
     }
 }

@@ -73,28 +73,33 @@ impl InferBackend for EngineBackend {
             return Err(format!("batch payload {} not a multiple of {IMG_ELEMS}", images.len()));
         }
         let n = images.len() / IMG_ELEMS;
-        let per_image: Vec<[f32; NUM_CLASSES]> = if n == 1 || self.threads == 1 {
-            (0..n)
-                .map(|i| {
-                    let x = &images[i * IMG_ELEMS..(i + 1) * IMG_ELEMS];
-                    match &self.model {
-                        EngineModel::Bcnn(m) => m.forward(x).0,
-                        EngineModel::Float(m) => m.forward(x).0,
-                    }
-                })
-                .collect()
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        // The whole batch flows through the networks' batched forward
+        // (one A-operand repack + one weight widening per conv layer, not
+        // per image).  With several worker threads the batch is split into
+        // contiguous sub-batches — still batched within each chunk, and
+        // bit-identical per image either way.
+        let run = |lo: usize, hi: usize| -> Result<Vec<[f32; NUM_CLASSES]>, String> {
+            let xs = &images[lo * IMG_ELEMS..hi * IMG_ELEMS];
+            match &self.model {
+                EngineModel::Bcnn(m) => m.infer_batch(xs).map_err(|e| e.to_string()),
+                EngineModel::Float(m) => m.infer_batch(xs).map_err(|e| e.to_string()),
+            }
+        };
+        let per = n.div_ceil(self.threads.min(n));
+        let chunks = n.div_ceil(per);
+        let results: Vec<Result<Vec<[f32; NUM_CLASSES]>, String>> = if chunks == 1 {
+            vec![run(0, n)]
         } else {
-            scoped_map(n, self.threads, |i| {
-                let x = &images[i * IMG_ELEMS..(i + 1) * IMG_ELEMS];
-                match &self.model {
-                    EngineModel::Bcnn(m) => m.forward(x).0,
-                    EngineModel::Float(m) => m.forward(x).0,
-                }
-            })
+            scoped_map(chunks, chunks, |i| run(i * per, ((i + 1) * per).min(n)))
         };
         let mut out = Vec::with_capacity(n * NUM_CLASSES);
-        for l in per_image {
-            out.extend_from_slice(&l);
+        for chunk in results {
+            for l in chunk? {
+                out.extend_from_slice(&l);
+            }
         }
         Ok(out)
     }

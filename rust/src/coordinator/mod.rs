@@ -17,6 +17,23 @@
 //! The default policy is `max_batch = 1` — the paper's protocol feeds
 //! images one at a time ("batch processing is not a suitable option for
 //! real-time applications") — and the batching ablation (E6) raises it.
+//!
+//! When `max_batch > 1`, a drained batch is executed as ONE batched
+//! backend call: `EngineBackend::infer_batch` forwards the whole payload
+//! through `BcnnNetwork::infer_batch` / `FloatNetwork::infer_batch`
+//! (M = batch × spatial GEMMs, one weight widening per batch, weight
+//! rows L1-hot across images) instead of looping image-by-image, so the
+//! batching policy is a real throughput lever rather than decorative
+//! grouping.  Logits are bit-identical to the single-image path per
+//! image, which is what lets the policy be changed freely in production.
+//!
+//! Batch-size/latency tradeoff: a request riding a batch of B waits up
+//! to `BatchPolicy::max_wait` for peers plus the batched execution time;
+//! in exchange, per-batch fixed costs amortize ~B-fold (see
+//! `benches/ablation_batch_forward.rs` for the measured curve).  Clients
+//! can opt whole groups of images in via the `classify_batch` protocol
+//! op, which `Router::infer_blocking_batch` submits back-to-back so the
+//! batcher can coalesce them.
 
 pub mod backend;
 pub mod batcher;

@@ -19,13 +19,22 @@ struct Inner<T> {
 }
 
 /// Why a push was refused.
-#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum PushError {
-    #[error("queue full (capacity reached) — backpressure")]
     Full,
-    #[error("queue closed")]
     Closed,
 }
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full => write!(f, "queue full (capacity reached) — backpressure"),
+            PushError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for PushError {}
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {

@@ -14,14 +14,43 @@ use super::queue::{BoundedQueue, PushError};
 use super::request::{InferRequest, InferResponse, RequestId};
 use crate::util::json::{Json, JsonObj};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RouteError {
-    #[error("unknown model variant {0:?} (available: {1})")]
     UnknownVariant(String, String),
-    #[error("admission rejected: {0}")]
-    Rejected(#[from] PushError),
-    #[error("image payload must be {IMG_ELEMS} floats, got {0}")]
+    Rejected(PushError),
     BadPayload(usize),
+    /// The lane's batcher died before answering (worker crash).
+    BackendGone,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownVariant(name, avail) => {
+                write!(f, "unknown model variant {name:?} (available: {avail})")
+            }
+            RouteError::Rejected(e) => write!(f, "admission rejected: {e}"),
+            RouteError::BadPayload(n) => {
+                write!(f, "image payload must be {IMG_ELEMS} floats, got {n}")
+            }
+            RouteError::BackendGone => write!(f, "backend dropped the response channel"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RouteError::Rejected(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<PushError> for RouteError {
+    fn from(e: PushError) -> Self {
+        RouteError::Rejected(e)
+    }
 }
 
 struct Lane {
@@ -76,13 +105,43 @@ impl Router {
     }
 
     /// Submit and block for the response (convenience for CLI paths).
+    /// A dead batcher surfaces as `BackendGone` instead of a panic so a
+    /// serving thread can answer the client with a structured error.
     pub fn infer_blocking(
         &self,
         variant: &str,
         image: Vec<f32>,
     ) -> Result<InferResponse, RouteError> {
         let (_, rx) = self.submit(variant, image)?;
-        Ok(rx.recv().expect("batcher dropped response channel"))
+        rx.recv().map_err(|_| RouteError::BackendGone)
+    }
+
+    /// Submit a whole batch of images to one variant's lane back-to-back,
+    /// then block for every response (in submission order).  Because the
+    /// images hit the admission queue together, the dynamic batcher can
+    /// drain them into a single backend call (up to `BatchPolicy::max_batch`)
+    /// — this is the serving entry point for the batched forward path.
+    ///
+    /// Errors stay per-image (`InferResponse::failed`): a mid-batch
+    /// admission rejection must not discard the results of images already
+    /// submitted and executing.
+    pub fn infer_blocking_batch(
+        &self,
+        variant: &str,
+        images: Vec<Vec<f32>>,
+    ) -> Vec<InferResponse> {
+        // submit everything first so the batcher sees the whole group...
+        let rxs: Vec<Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError>> =
+            images.into_iter().map(|img| self.submit(variant, img)).collect();
+        // ...then collect, mapping failures per-image
+        rxs.into_iter()
+            .map(|r| match r {
+                Err(e) => InferResponse::failed(0, e.to_string()),
+                Ok((id, rx)) => rx
+                    .recv()
+                    .unwrap_or_else(|_| InferResponse::failed(id, RouteError::BackendGone.to_string())),
+            })
+            .collect()
     }
 
     pub fn variants(&self) -> Vec<String> {

@@ -5,12 +5,34 @@
 use std::io::Write;
 use std::path::Path;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ImageError {
-    #[error("image io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("image parse: {0}")]
+    Io(std::io::Error),
     Parse(String),
+}
+
+impl std::fmt::Display for ImageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ImageError::Io(e) => write!(f, "image io: {e}"),
+            ImageError::Parse(msg) => write!(f, "image parse: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ImageError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ImageError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ImageError {
+    fn from(e: std::io::Error) -> Self {
+        ImageError::Io(e)
+    }
 }
 
 fn clamp_u8(v: f32) -> u8 {

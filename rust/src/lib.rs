@@ -55,6 +55,7 @@ pub mod util {
     //! Substrates the offline vendor set lacks: JSON, CLI, RNG, thread
     //! pool, histogram, property testing, timing, tensor IO.
     pub mod cli;
+    pub mod error;
     pub mod histogram;
     pub mod json;
     pub mod prop;

@@ -21,6 +21,8 @@ use bcnn::input::image;
 use bcnn::runtime::Artifacts;
 use bcnn::server::Server;
 use bcnn::util::cli::{Args, CliError};
+use bcnn::util::error::AppResult;
+use bcnn::{app_bail, app_ensure, app_err};
 use bcnn::util::threadpool::default_threads;
 
 fn main() -> ExitCode {
@@ -52,7 +54,7 @@ fn main() -> ExitCode {
             if matches!(e.downcast_ref::<CliError>(), Some(CliError::Help)) {
                 return ExitCode::SUCCESS;
             }
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }
@@ -73,13 +75,13 @@ commands:
 run `repro <command> --help` for options";
 
 /// Build an engine backend for a scheme (or float) from the artifacts dir.
-fn engine_backend(artifacts_dir: &str, variant: &str, threads: usize) -> anyhow::Result<Arc<dyn InferBackend>> {
+fn engine_backend(artifacts_dir: &str, variant: &str, threads: usize) -> AppResult<Arc<dyn InferBackend>> {
     if variant == "float" {
         let net = FloatNetwork::load(format!("{artifacts_dir}/weights_float.bcnt"))?;
         return Ok(Arc::new(EngineBackend::float(net, threads)));
     }
     let scheme = Scheme::parse(variant)
-        .ok_or_else(|| anyhow::anyhow!("unknown variant {variant:?} (float|none|rgb|gray|lbp)"))?;
+        .ok_or_else(|| app_err!("unknown variant {variant:?} (float|none|rgb|gray|lbp)"))?;
     let net = BcnnNetwork::load(
         format!("{artifacts_dir}/weights_bcnn_{}.bcnt", scheme.name()),
         scheme,
@@ -87,7 +89,7 @@ fn engine_backend(artifacts_dir: &str, variant: &str, threads: usize) -> anyhow:
     Ok(Arc::new(EngineBackend::bcnn(net, threads)))
 }
 
-fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
+fn cmd_serve(raw: &[String]) -> AppResult<()> {
     let a = Args::new("repro serve", "start the TCP serving loop")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("addr", "127.0.0.1:7878", "bind address")
@@ -126,14 +128,14 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
                     })
                     .map(|m| (m.batch, m.name.clone()))
                     .collect();
-                anyhow::ensure!(!names.is_empty(), "no artifacts for variant {variant}");
+                app_ensure!(!names.is_empty(), "no artifacts for variant {variant}");
                 Arc::new(RuntimeBackend::spawn(
                     Arc::clone(&artifacts),
                     names,
                     format!("pjrt/{variant}"),
                 )?)
             }
-            other => anyhow::bail!("unknown backend {other:?}"),
+            other => app_bail!("unknown backend {other:?}"),
         };
         builder = builder.variant(variant, backend);
     }
@@ -148,7 +150,7 @@ fn cmd_serve(raw: &[String]) -> anyhow::Result<()> {
     }
 }
 
-fn cmd_classify(raw: &[String]) -> anyhow::Result<()> {
+fn cmd_classify(raw: &[String]) -> AppResult<()> {
     let a = Args::new("repro classify", "classify one image")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("variant", "rgb", "model variant (float|none|rgb|gray|lbp)")
@@ -164,13 +166,13 @@ fn cmd_classify(raw: &[String]) -> anyhow::Result<()> {
         (s.image, Some(s.label))
     } else {
         let pos = a.positional();
-        anyhow::ensure!(!pos.is_empty(), "pass a PPM path or --synth <n>");
+        app_ensure!(!pos.is_empty(), "pass a PPM path or --synth <n>");
         let (px, h, w) = image::read_ppm(&pos[0])?;
-        anyhow::ensure!(h == 96 && w == 96, "image must be 96x96 (got {h}x{w})");
+        app_ensure!(h == 96 && w == 96, "image must be 96x96 (got {h}x{w})");
         (px, None)
     };
     let start = std::time::Instant::now();
-    let logits = backend.infer_batch(&img).map_err(|e| anyhow::anyhow!(e))?;
+    let logits = backend.infer_batch(&img).map_err(|e| app_err!("{e}"))?;
     let took = start.elapsed();
     let class = bcnn::bnn::network::argmax(&logits);
     println!("class: {} ({})", class, CLASSES[class]);
@@ -182,7 +184,7 @@ fn cmd_classify(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_evaluate(raw: &[String]) -> anyhow::Result<()> {
+fn cmd_evaluate(raw: &[String]) -> AppResult<()> {
     let a = Args::new("repro evaluate", "test-set accuracy per variant (Table 3)")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("variants", "float,none,rgb,gray,lbp", "variants to evaluate")
@@ -197,7 +199,7 @@ fn cmd_evaluate(raw: &[String]) -> anyhow::Result<()> {
     let artifacts = Artifacts::load(&dir)?;
     let ts_path = artifacts
         .testset_path()
-        .ok_or_else(|| anyhow::anyhow!("manifest has no testset — rerun make artifacts"))?;
+        .ok_or_else(|| app_err!("manifest has no testset — rerun make artifacts"))?;
     let ts = TestSet::load(ts_path)?;
     let limit = match a.get_usize("limit")? {
         0 => ts.len(),
@@ -218,7 +220,7 @@ fn cmd_evaluate(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_inspect(raw: &[String]) -> anyhow::Result<()> {
+fn cmd_inspect(raw: &[String]) -> AppResult<()> {
     let a = Args::new("repro inspect", "summarize artifacts/manifest.json")
         .opt("artifacts", "artifacts", "artifacts directory")
         .parse(raw)?;
@@ -240,7 +242,7 @@ fn cmd_inspect(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gen_data(raw: &[String]) -> anyhow::Result<()> {
+fn cmd_gen_data(raw: &[String]) -> AppResult<()> {
     let a = Args::new("repro gen-data", "render SynthVehicles samples to PPM")
         .opt("count", "8", "how many samples")
         .opt("start", "0", "first sample index")
@@ -258,7 +260,7 @@ fn cmd_gen_data(raw: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_platforms(raw: &[String]) -> anyhow::Result<()> {
+fn cmd_platforms(raw: &[String]) -> AppResult<()> {
     let _a = Args::new("repro platforms", "analytical platform projections")
         .parse(raw)?;
     bcnn::platform::print_table1_projection();

@@ -5,18 +5,49 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::{Json, JsonError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("artifact io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error(transparent)]
-    Json(#[from] JsonError),
-    #[error("manifest: model {0:?} not found (available: {1})")]
+    Io(std::io::Error),
+    Json(JsonError),
     ModelNotFound(String, String),
-    #[error("manifest: layer {0:?} not found")]
     LayerNotFound(String),
-    #[error("manifest: unsupported dtype {0:?}")]
     BadDType(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "artifact io: {e}"),
+            ArtifactError::Json(e) => write!(f, "{e}"),
+            ArtifactError::ModelNotFound(name, avail) => {
+                write!(f, "manifest: model {name:?} not found (available: {avail})")
+            }
+            ArtifactError::LayerNotFound(name) => write!(f, "manifest: layer {name:?} not found"),
+            ArtifactError::BadDType(d) => write!(f, "manifest: unsupported dtype {d:?}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            ArtifactError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
+}
+
+impl From<JsonError> for ArtifactError {
+    fn from(e: JsonError) -> Self {
+        ArtifactError::Json(e)
+    }
 }
 
 /// Element dtype of a runtime argument.

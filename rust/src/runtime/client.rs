@@ -7,19 +7,49 @@
 
 use std::path::Path;
 
+// In a build with the real PJRT bindings this alias points at the `xla`
+// crate; the offline build uses the API-compatible stub (see xla_stub.rs).
+use crate::runtime::xla_stub as xla;
+
 use crate::runtime::artifact::{ArgDType, ArgSpec, Artifacts, LayerSpec, ModelSpec};
 use crate::util::tensorio::TensorFile;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("runtime: weight tensor {0:?} missing from container")]
     MissingWeight(String),
-    #[error("runtime: input has {got} elements, model expects {want}")]
     InputShape { got: usize, want: usize },
-    #[error(transparent)]
-    Tensor(#[from] crate::util::tensorio::TensorIoError),
+    Tensor(crate::util::tensorio::TensorIoError),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(msg) => write!(f, "xla: {msg}"),
+            RuntimeError::MissingWeight(n) => {
+                write!(f, "runtime: weight tensor {n:?} missing from container")
+            }
+            RuntimeError::InputShape { got, want } => {
+                write!(f, "runtime: input has {got} elements, model expects {want}")
+            }
+            RuntimeError::Tensor(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Tensor(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::tensorio::TensorIoError> for RuntimeError {
+    fn from(e: crate::util::tensorio::TensorIoError) -> Self {
+        RuntimeError::Tensor(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

@@ -7,6 +7,7 @@
 
 pub mod artifact;
 pub mod client;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactError, Artifacts, LayerSpec, ModelSpec};
 pub use client::{ModelRuntime, RuntimeError};

@@ -4,6 +4,8 @@
 //!
 //! ```text
 //!     {"op": "classify", "model": "bcnn_rgb", "pixels": [27648 floats]}
+//!     {"op": "classify_batch", "model": "bcnn_rgb",
+//!      "images": [[27648 floats], [27648 floats], ...]}
 //!     {"op": "classify_synth", "model": "bcnn_rgb", "index": 17}
 //!     {"op": "stats"}
 //!     {"op": "variants"}
@@ -15,16 +17,30 @@
 //! ```text
 //!     {"ok": true, "class": 2, "label": "truck", "logits": [...],
 //!      "queue_us": 12.0, "exec_us": 830.0, "batch": 1}
+//!     {"ok": true, "results": [<classify responses, one per image>]}
 //!     {"ok": true, "stats": {...}} / {"ok": true, "variants": [...]}
 //!     {"ok": false, "error": "..."}
 //! ```
+//!
+//! `classify_batch` submits every image to the router back-to-back, so
+//! the dynamic batcher can drain them into one batched backend call (up
+//! to `BatchPolicy::max_batch`) — the wire-level entry to the batched
+//! forward path.  At most [`MAX_BATCH_IMAGES`] images per request.
 
 use crate::util::json::{Json, JsonObj};
+
+/// Cap on images per `classify_batch` request (admission control at the
+/// protocol layer; the batcher's `max_batch` governs execution grouping).
+/// Sized so a maximal request (64 × 27648 floats, worst-case ~20 text
+/// bytes per float ≈ 36 MB of JSON) fits under the transport's
+/// `tcp::MAX_LINE_BYTES` (64 MiB) line cap.
+pub const MAX_BATCH_IMAGES: usize = 64;
 
 /// Parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Classify { model: String, pixels: Vec<f32> },
+    ClassifyBatch { model: String, images: Vec<Vec<f32>> },
     ClassifySynth { model: String, index: usize },
     Stats,
     Variants,
@@ -42,6 +58,9 @@ pub enum Response {
         exec_us: f64,
         batch: usize,
     },
+    /// One entry per image of a `classify_batch` request (each entry is a
+    /// `Classified` or a per-image `Error`).
+    Batch(Vec<Response>),
     Stats(Json),
     Variants(Vec<String>),
     Pong,
@@ -71,6 +90,26 @@ impl Request {
                     .map_err(|e| e.to_string())?;
                 Ok(Request::Classify { model, pixels })
             }
+            "classify_batch" => {
+                let arr = j.get("images").and_then(|p| p.as_arr()).map_err(|e| e.to_string())?;
+                if arr.len() > MAX_BATCH_IMAGES {
+                    return Err(format!(
+                        "classify_batch: {} images exceeds the limit of {MAX_BATCH_IMAGES}",
+                        arr.len()
+                    ));
+                }
+                let images = arr
+                    .iter()
+                    .map(|img| {
+                        img.as_arr()
+                            .map_err(|e| e.to_string())?
+                            .iter()
+                            .map(|v| v.as_f64().map(|f| f as f32).map_err(|e| e.to_string()))
+                            .collect::<Result<Vec<f32>, String>>()
+                    })
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(Request::ClassifyBatch { model, images })
+            }
             "classify_synth" => {
                 let index =
                     j.get("index").and_then(|i| i.as_usize()).map_err(|e| e.to_string())?;
@@ -85,7 +124,7 @@ impl Request {
 }
 
 impl Response {
-    pub fn to_json_line(&self) -> String {
+    fn to_json_obj(&self) -> JsonObj {
         let mut obj = JsonObj::new();
         match self {
             Response::Classified { class, label, logits, queue_us, exec_us, batch } => {
@@ -99,6 +138,13 @@ impl Response {
                 obj.insert("queue_us", Json::from(*queue_us));
                 obj.insert("exec_us", Json::from(*exec_us));
                 obj.insert("batch", Json::from(*batch));
+            }
+            Response::Batch(items) => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert(
+                    "results",
+                    Json::Arr(items.iter().map(|r| Json::Obj(r.to_json_obj())).collect()),
+                );
             }
             Response::Stats(s) => {
                 obj.insert("ok", Json::Bool(true));
@@ -120,7 +166,11 @@ impl Response {
                 obj.insert("error", Json::from(msg.as_str()));
             }
         }
-        Json::Obj(obj).to_string()
+        obj
+    }
+
+    pub fn to_json_line(&self) -> String {
+        Json::Obj(self.to_json_obj()).to_string()
     }
 }
 
@@ -158,6 +208,51 @@ mod tests {
         assert!(Request::parse("not json").is_err());
         assert!(Request::parse(r#"{"op":"fly"}"#).is_err());
         assert!(Request::parse(r#"{"nop":"classify"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_classify_batch() {
+        let r = Request::parse(r#"{"op":"classify_batch","model":"rgb","images":[[1.0,2.0],[3.0,4.0]]}"#)
+            .unwrap();
+        match r {
+            Request::ClassifyBatch { model, images } => {
+                assert_eq!(model, "rgb");
+                assert_eq!(images, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_batch_rejects_malformed() {
+        // missing images
+        assert!(Request::parse(r#"{"op":"classify_batch"}"#).is_err());
+        // non-array image entry
+        assert!(Request::parse(r#"{"op":"classify_batch","images":[1.0]}"#).is_err());
+        // non-numeric pixel
+        assert!(Request::parse(r#"{"op":"classify_batch","images":[["x"]]}"#).is_err());
+    }
+
+    #[test]
+    fn batch_response_renders_per_image_results() {
+        let r = Response::Batch(vec![
+            Response::Classified {
+                class: 1,
+                label: "normal".into(),
+                logits: vec![0.0, 1.0, 0.0, 0.0],
+                queue_us: 1.0,
+                exec_us: 2.0,
+                batch: 2,
+            },
+            Response::Error("bad image".into()),
+        ]);
+        let j = Json::parse(&r.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(results[0].get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(results[0].get("label").unwrap().as_str().unwrap(), "normal");
+        assert!(!results[1].get("ok").unwrap().as_bool().unwrap());
     }
 
     #[test]

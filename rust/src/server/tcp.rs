@@ -11,6 +11,55 @@ use crate::coordinator::Router;
 use crate::dataset::synth;
 use crate::util::threadpool::ThreadPool;
 
+/// Hard cap on one protocol line.  The largest legitimate request is a
+/// `classify_batch` of `protocol::MAX_BATCH_IMAGES` (= 64) images; at a
+/// worst-case ~20 text bytes per float (full f64 precision plus comma),
+/// 64 × 27648 floats ≈ 36 MB of JSON, so 64 MiB leaves real headroom.
+/// Anything beyond this is a hostile or broken client and gets a
+/// structured error instead of an unbounded allocation.
+pub const MAX_LINE_BYTES: usize = 64 * 1024 * 1024;
+
+/// Read one `\n`-terminated line with a byte budget.
+///
+/// Returns `Ok(None)` at clean EOF, `Ok(Some(Err(())))` when the line
+/// exceeded `MAX_LINE_BYTES` (the oversized tail is drained so the
+/// session can continue), and IO errors otherwise.
+fn read_line_bounded(
+    reader: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<Option<Result<(), ()>>> {
+    buf.clear();
+    let mut oversized = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a final unterminated line still counts as a line
+            return Ok(match (oversized, buf.is_empty()) {
+                (true, _) => Some(Err(())),
+                (false, true) => None,
+                (false, false) => Some(Ok(())),
+            });
+        }
+        if let Some(nl) = chunk.iter().position(|&b| b == b'\n') {
+            if !oversized && buf.len() + nl <= MAX_LINE_BYTES {
+                buf.extend_from_slice(&chunk[..nl]);
+            } else {
+                oversized = true;
+            }
+            reader.consume(nl + 1);
+            return Ok(Some(if oversized { Err(()) } else { Ok(()) }));
+        }
+        let take = chunk.len();
+        if !oversized && buf.len() + take <= MAX_LINE_BYTES {
+            buf.extend_from_slice(chunk);
+        } else {
+            oversized = true;
+            buf.clear(); // stop buffering a hostile line
+        }
+        reader.consume(take);
+    }
+}
+
 /// The serving front end.
 pub struct Server {
     router: Arc<Router>,
@@ -31,6 +80,7 @@ impl Server {
             Request::Variants => Response::Variants(self.router.variants()),
             Request::Stats => Response::Stats(self.router.stats()),
             Request::Classify { model, pixels } => self.classify(&model, pixels),
+            Request::ClassifyBatch { model, images } => self.classify_batch(&model, images),
             Request::ClassifySynth { model, index } => {
                 let sample = synth::render_vehicle(index, self.synth_seed);
                 self.classify(&model, sample.image)
@@ -38,56 +88,79 @@ impl Server {
         }
     }
 
+    /// Turn a completed coordinator response into a protocol response.
+    fn render(&self, resp: crate::coordinator::InferResponse) -> Response {
+        if let Some(err) = resp.error {
+            return Response::Error(err);
+        }
+        Response::Classified {
+            class: resp.class,
+            label: self
+                .classes
+                .get(resp.class)
+                .cloned()
+                .unwrap_or_else(|| "?".to_string()),
+            logits: resp.logits,
+            queue_us: resp.queue_time.as_nanos() as f64 / 1_000.0,
+            exec_us: resp.exec_time.as_nanos() as f64 / 1_000.0,
+            batch: resp.batch_size,
+        }
+    }
+
     fn classify(&self, model: &str, pixels: Vec<f32>) -> Response {
         match self.router.infer_blocking(model, pixels) {
-            Ok(resp) => {
-                if let Some(err) = resp.error {
-                    return Response::Error(err);
-                }
-                Response::Classified {
-                    class: resp.class,
-                    label: self
-                        .classes
-                        .get(resp.class)
-                        .cloned()
-                        .unwrap_or_else(|| "?".to_string()),
-                    logits: resp.logits,
-                    queue_us: resp.queue_time.as_nanos() as f64 / 1_000.0,
-                    exec_us: resp.exec_time.as_nanos() as f64 / 1_000.0,
-                    batch: resp.batch_size,
-                }
-            }
+            Ok(resp) => self.render(resp),
             Err(e) => Response::Error(e.to_string()),
         }
     }
 
+    /// Submit every image back-to-back so the dynamic batcher can drain
+    /// them into one batched backend call; errors stay per-image
+    /// (`render` maps a failed `InferResponse` to `Response::Error`).
+    fn classify_batch(&self, model: &str, images: Vec<Vec<f32>>) -> Response {
+        let items = self
+            .router
+            .infer_blocking_batch(model, images)
+            .into_iter()
+            .map(|resp| self.render(resp))
+            .collect();
+        Response::Batch(items)
+    }
+
     fn session(&self, stream: TcpStream) {
-        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-        log::info!("session open: {peer}");
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
             Err(_) => return,
         };
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = match line {
-                Ok(l) => l,
-                Err(_) => break,
-            };
-            if line.trim().is_empty() {
-                continue;
-            }
-            let resp = match Request::parse(&line) {
-                Ok(req) => self.handle(req),
-                Err(e) => Response::Error(e),
+        let mut reader = BufReader::new(stream);
+        let mut buf = Vec::new();
+        loop {
+            let resp = match read_line_bounded(&mut reader, &mut buf) {
+                Ok(None) | Err(_) => break, // EOF or dead socket
+                Ok(Some(Err(()))) => {
+                    Response::Error(format!("request line exceeds {MAX_LINE_BYTES} bytes"))
+                }
+                Ok(Some(Ok(()))) => {
+                    // invalid UTF-8 (e.g. binary garbage) must produce a
+                    // protocol error, not kill the session
+                    let line = String::from_utf8_lossy(&buf);
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match Request::parse(&line) {
+                        Ok(req) => self.handle(req),
+                        Err(e) => Response::Error(e),
+                    }
+                }
             };
             let mut out = resp.to_json_line();
             out.push('\n');
             if writer.write_all(out.as_bytes()).is_err() {
                 break;
             }
+            // a maximal request mustn't pin tens of MB for an idle session
+            buf.shrink_to(64 * 1024);
         }
-        log::info!("session closed: {peer}");
     }
 
     /// Bind and serve until `stop` flips (or forever).  Returns the bound
@@ -172,6 +245,36 @@ mod tests {
             Response::Error(e) => assert!(e.contains("bcnn_rgb")),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn handle_classify_batch_mixed_validity() {
+        let s = test_server();
+        let good = vec![0.5f32; 96 * 96 * 3];
+        let bad = vec![0.5f32; 10]; // wrong payload size -> per-image error
+        match s.handle(Request::ClassifyBatch {
+            model: "".into(),
+            images: vec![good.clone(), bad, good],
+        }) {
+            Response::Batch(items) => {
+                assert_eq!(items.len(), 3);
+                assert!(matches!(items[0], Response::Classified { .. }));
+                assert!(matches!(items[1], Response::Error(_)));
+                assert!(matches!(items[2], Response::Classified { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn read_line_bounded_handles_eof_and_split_lines() {
+        let mut r = std::io::BufReader::new(&b"abc\ndef"[..]);
+        let mut buf = Vec::new();
+        assert_eq!(read_line_bounded(&mut r, &mut buf).unwrap(), Some(Ok(())));
+        assert_eq!(buf, b"abc");
+        assert_eq!(read_line_bounded(&mut r, &mut buf).unwrap(), Some(Ok(())));
+        assert_eq!(buf, b"def"); // unterminated final line still delivered
+        assert_eq!(read_line_bounded(&mut r, &mut buf).unwrap(), None);
     }
 
     #[test]

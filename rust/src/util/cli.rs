@@ -27,17 +27,26 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0} (try --help)")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1:?} ({2})")]
     Invalid(String, String, String),
-    #[error("help requested")]
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown option --{n} (try --help)"),
+            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
+            CliError::Invalid(n, v, why) => write!(f, "invalid value for --{n}: {v:?} ({why})"),
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn new(cmd: &str, about: &'static str) -> Self {

@@ -1,0 +1,69 @@
+//! Crate-local application-error plumbing (no anyhow in the offline
+//! vendor set): a boxed error alias plus `app_err!` / `app_bail!` /
+//! `app_ensure!` macros used by the CLI binary and the examples.
+
+/// Boxed dynamic error, thread-safe so it can cross worker threads.
+pub type BoxError = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// `Result` alias for application entry points (`main`, examples).
+pub type AppResult<T> = std::result::Result<T, BoxError>;
+
+/// Build a [`BoxError`] from format arguments.
+#[macro_export]
+macro_rules! app_err {
+    ($($t:tt)*) => {
+        $crate::util::error::BoxError::from(format!($($t)*))
+    };
+}
+
+/// Return early with a formatted [`BoxError`].
+#[macro_export]
+macro_rules! app_bail {
+    ($($t:tt)*) => {
+        return Err($crate::app_err!($($t)*).into())
+    };
+}
+
+/// Return early with a formatted [`BoxError`] unless `cond` holds.
+#[macro_export]
+macro_rules! app_ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::app_err!($($t)*).into());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> AppResult<()> {
+        app_bail!("bad {}", 7);
+    }
+
+    fn guarded(x: i32) -> AppResult<i32> {
+        app_ensure!(x > 0, "x must be positive, got {x}");
+        Ok(x * 2)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "bad 7");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        assert_eq!(guarded(3).unwrap(), 6);
+        assert!(guarded(-1).unwrap_err().to_string().contains("positive"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> AppResult<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io boom"))?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("io boom"));
+    }
+}

@@ -56,22 +56,46 @@ pub struct Tensor {
     pub data: Vec<u8>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TensorIoError {
-    #[error("tensor io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("tensor io: bad magic")]
+    Io(std::io::Error),
     BadMagic,
-    #[error("tensor io: unsupported version {0}")]
     BadVersion(u32),
-    #[error("tensor io: unknown dtype code {0}")]
     BadDType(u32),
-    #[error("tensor io: tensor {0:?} not found")]
     NotFound(String),
-    #[error("tensor io: {name:?} has dtype {got}, expected {want}")]
     DTypeMismatch { name: String, got: &'static str, want: &'static str },
-    #[error("tensor io: truncated payload for {0:?}")]
     Truncated(String),
+}
+
+impl std::fmt::Display for TensorIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TensorIoError::Io(e) => write!(f, "tensor io: {e}"),
+            TensorIoError::BadMagic => write!(f, "tensor io: bad magic"),
+            TensorIoError::BadVersion(v) => write!(f, "tensor io: unsupported version {v}"),
+            TensorIoError::BadDType(c) => write!(f, "tensor io: unknown dtype code {c}"),
+            TensorIoError::NotFound(n) => write!(f, "tensor io: tensor {n:?} not found"),
+            TensorIoError::DTypeMismatch { name, got, want } => {
+                write!(f, "tensor io: {name:?} has dtype {got}, expected {want}")
+            }
+            TensorIoError::Truncated(n) => write!(f, "tensor io: truncated payload for {n:?}"),
+        }
+    }
+}
+
+impl std::error::Error for TensorIoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TensorIoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TensorIoError {
+    fn from(e: std::io::Error) -> Self {
+        TensorIoError::Io(e)
+    }
 }
 
 impl Tensor {

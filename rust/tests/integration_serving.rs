@@ -179,6 +179,91 @@ fn queue_overflow_rejects_cleanly() {
 }
 
 #[test]
+fn batched_submission_rides_one_backend_batch_and_matches_singles() {
+    // the tentpole e2e: images submitted back-to-back coalesce into
+    // batched backend calls, and logits stay bit-identical to the
+    // single-image protocol
+    let router = engine_router(16);
+    let net = synth_bcnn_network(Scheme::Rgb, 21); // same weights as the router's rgb lane
+    let images: Vec<Vec<f32>> = (0..16u64).map(synth_image).collect();
+    let resps = router.infer_blocking_batch("rgb", images.clone());
+    assert_eq!(resps.len(), 16);
+    for (i, resp) in resps.iter().enumerate() {
+        assert!(resp.error.is_none());
+        let (want, _) = net.forward(&images[i]);
+        assert_eq!(resp.logits, want.to_vec(), "image {i} logits drifted from single path");
+    }
+    let snap = router.metrics("rgb").unwrap().snapshot();
+    let mean_batch = snap.get("mean_batch_size").unwrap().as_f64().unwrap();
+    assert!(mean_batch > 1.0, "batch submission never batched: mean={mean_batch}");
+}
+
+#[test]
+fn tcp_survives_garbage_bytes_and_answers_structured_errors() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let router = engine_router(4);
+    let server = Arc::new(Server::new(
+        router,
+        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+
+    // 1. binary garbage (invalid UTF-8, not JSON)
+    conn.write_all(b"\xff\xfe\x00\x01garbage\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\": false") || line.contains("\"ok\":false"), "{line}");
+
+    // 2. truncated JSON
+    line.clear();
+    conn.write_all(b"{\"op\":\"classify\",\"pixels\":[1.0,\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // 3. valid op with a wrong-sized pixel payload: the engine must
+    //    answer with a protocol error, not abort a worker on an assert
+    line.clear();
+    conn.write_all(b"{\"op\":\"classify\",\"model\":\"rgb\",\"pixels\":[0.5,0.5]}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // 3b. a deeply nested JSON bomb (stack-overflow attempt) must come
+    //     back as a parse error, not kill the server process
+    line.clear();
+    let mut bomb = "[".repeat(50_000);
+    bomb.push('\n');
+    conn.write_all(bomb.as_bytes()).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // 4. the session is still alive: a valid request succeeds on the SAME
+    //    connection after all that garbage
+    line.clear();
+    conn.write_all(b"{\"op\":\"classify_synth\",\"model\":\"rgb\",\"index\":2}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("label"), "{line}");
+
+    // 5. batched classify over the wire
+    line.clear();
+    let px: Vec<String> = vec!["0.5".to_string(); 96 * 96 * 3];
+    let img = format!("[{}]", px.join(","));
+    let req = format!("{{\"op\":\"classify_batch\",\"model\":\"rgb\",\"images\":[{img},{img}]}}\n");
+    conn.write_all(req.as_bytes()).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("results"), "{line}");
+    assert!(line.contains("label"), "{line}");
+
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
 fn pjrt_backend_serves_through_router() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
