@@ -1,0 +1,72 @@
+//! Allocation ablation: images/sec with the forward scratch arena OFF
+//! (every `infer_batch` call allocates fresh intermediate tensors — the
+//! PR 1 behavior) vs ON (a reused per-worker `ForwardScratch`, the
+//! steady-state serving configuration).  Both paths are bit-identical;
+//! this bench isolates what allocator traffic alone costs at each batch
+//! size.  Runs on synthetic weights, so no artifacts are required:
+//!
+//!     cargo bench --bench ablation_alloc
+
+use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_float_network, synth_image};
+use bcnn::bnn::scratch::ForwardScratch;
+use bcnn::input::binarize::Scheme;
+use bcnn::util::timer::bench;
+
+fn main() {
+    let batches = [1usize, 4, 16, 64];
+    let max_n = *batches.iter().max().unwrap();
+    let pool: Vec<f32> = (0..max_n as u64).flat_map(synth_image).collect();
+    const IMG: usize = 96 * 96 * 3;
+
+    let bcnn = synth_bcnn_network(Scheme::Rgb, 201);
+    let float = synth_float_network(202);
+
+    println!("Scratch-arena ablation — images/sec, arena off (fresh buffers) vs on (reused)\n");
+    println!(
+        "{:<8}{:>14}{:>14}{:>8}{:>14}{:>14}{:>8}",
+        "batch", "bcnn off", "bcnn on", "x", "float off", "float on", "x"
+    );
+    let mut b1_gain = 0.0;
+    for &bs in &batches {
+        let payload = &pool[..bs * IMG];
+        let iters = (64 / bs).max(4);
+
+        let mut bscratch = ForwardScratch::new();
+        // grow the arena to its high-water mark before measuring
+        bcnn.infer_batch_with(payload, &mut bscratch).unwrap();
+        let b_off = bench(2, iters, || bcnn.infer_batch(payload).unwrap());
+        let b_on = bench(2, iters, || bcnn.infer_batch_with(payload, &mut bscratch).unwrap());
+
+        let mut fscratch = ForwardScratch::new();
+        float.infer_batch_with(payload, &mut fscratch).unwrap();
+        let f_iters = (iters / 2).max(2);
+        let f_off = bench(1, f_iters, || float.infer_batch(payload).unwrap());
+        let f_on =
+            bench(1, f_iters, || float.infer_batch_with(payload, &mut fscratch).unwrap());
+
+        let ips = |mean_ns: f64| bs as f64 / (mean_ns * 1e-9);
+        if bs == 1 {
+            b1_gain = b_off.mean_ns / b_on.mean_ns;
+        }
+        println!(
+            "{:<8}{:>14.1}{:>14.1}{:>7.2}x{:>14.1}{:>14.1}{:>7.2}x",
+            bs,
+            ips(b_off.mean_ns),
+            ips(b_on.mean_ns),
+            b_off.mean_ns / b_on.mean_ns,
+            ips(f_off.mean_ns),
+            ips(f_on.mean_ns),
+            f_off.mean_ns / f_on.mean_ns,
+        );
+    }
+    println!(
+        "\npacked engine at B=1 (the paper's real-time protocol): arena = {b1_gain:.2}x \
+         (arena elements held: {})",
+        {
+            let mut s = ForwardScratch::new();
+            bcnn.infer_batch_with(&pool[..IMG], &mut s).unwrap();
+            s.capacity_elems()
+        }
+    );
+    println!("(arena off pays malloc/free for every im2col, GEMM, pack, pool, and fc buffer per call)");
+}

@@ -64,7 +64,7 @@ fn widen_row(src: &[u32], dst: &mut [u64]) {
 /// Allocation-light variant for the serving hot path: the weight matrix
 /// is widened once (n·L u64s — L1-resident for this network); each A row
 /// is widened into a reused scratch row.  Fixed-lane kernels let the
-/// compiler fully unroll conv1 (L=2) and conv2 (L=13).
+/// compiler fully unroll conv1 (L=1/2) and conv2 (L=13).
 pub fn bgemm_into(
     a: &[u32],
     wt: &[u32],
@@ -74,17 +74,47 @@ pub fn bgemm_into(
     d_real: usize,
     out: &mut [i32],
 ) {
-    assert_eq!(a.len(), m * kw);
     assert_eq!(wt.len(), n * kw);
-    assert_eq!(out.len(), m * n);
-    let d = d_real as i32;
-    let l = lanes(kw);
     let mut wbuf = Vec::new();
     widen_rows(wt, n, kw, &mut wbuf);
+    bgemm_prewidened(a, &wbuf, m, n, kw, d_real, out);
+}
+
+/// Widen a packed weight matrix once at load time (rows padded to u64
+/// lanes, layout of `widen_rows`) so the serving hot path can skip the
+/// per-call widening pass entirely — see [`bgemm_prewidened`].
+pub fn widen_weights(wt: &[u32], n: usize, kw: usize) -> Vec<u64> {
+    assert_eq!(wt.len(), n * kw);
+    let mut buf = Vec::new();
+    widen_rows(wt, n, kw, &mut buf);
+    buf
+}
+
+/// `bgemm_into` against a pre-widened weight matrix ([`widen_weights`]).
+///
+/// This is the zero-allocation steady-state kernel: the only per-call
+/// work besides the popcount loop is widening each A row into a stack
+/// buffer — no heap traffic for this network's lane counts (1, 2, 13).
+/// Bit-identical to `bgemm` (widening is a pure re-layout).
+pub fn bgemm_prewidened(
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d_real: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * kw);
+    let l = lanes(kw);
+    assert_eq!(w64.len(), n * l);
+    assert_eq!(out.len(), m * n);
+    let d = d_real as i32;
     match l {
-        2 => bgemm_lanes::<2>(a, &wbuf, m, n, kw, d, out),
-        13 => bgemm_lanes::<13>(a, &wbuf, m, n, kw, d, out),
-        _ => bgemm_lanes_dyn(a, &wbuf, m, n, kw, l, d, out),
+        1 => bgemm_lanes::<1>(a, w64, m, n, kw, d, out),
+        2 => bgemm_lanes::<2>(a, w64, m, n, kw, d, out),
+        13 => bgemm_lanes::<13>(a, w64, m, n, kw, d, out),
+        _ => bgemm_lanes_dyn(a, w64, m, n, kw, l, d, out),
     }
 }
 
@@ -273,6 +303,28 @@ mod tests {
             let mut pre = vec![0i32; m * n];
             bgemm_into(&ap, &wp, m, n, kw, d, &mut pre);
             ensure_eq(alloc, pre, "bgemm_into == bgemm")
+        });
+    }
+
+    #[test]
+    fn prewidened_matches_bgemm_all_lane_kernels() {
+        // KW = 1 (gray conv1, L=1), 3 (rgb conv1, L=2), 25 (conv2, L=13),
+        // and a dyn-path width — the pre-widened weights must be a pure
+        // re-layout with bit-identical counts
+        prop::check(32, |g| {
+            for kw in [1usize, 3, 25, 7] {
+                let d = kw * 32;
+                let m = g.usize_in(1, 6);
+                let n = g.usize_in(1, 4);
+                let a = g.words(m * kw);
+                let w = g.words(n * kw);
+                let w64 = widen_weights(&w, n, kw);
+                ensure_eq(w64.len(), n * lanes(kw), "widened rows")?;
+                let mut got = vec![0i32; m * n];
+                bgemm_prewidened(&a, &w64, m, n, kw, d, &mut got);
+                ensure_eq(got, bgemm(&a, &w, m, n, kw, d), "prewidened == bgemm")?;
+            }
+            Ok(())
         });
     }
 

@@ -72,19 +72,41 @@ pub fn fc_packed_batch(
     kw: usize,
     d_real: usize,
 ) -> Vec<i32> {
+    let mut out = Vec::new();
+    fc_packed_batch_into(xs, wt, n, l, kw, d_real, &mut out);
+    out
+}
+
+/// `fc_packed_batch` into a caller-owned buffer (capacity grows
+/// monotonically; no pre-zeroing — every output count is assigned).
+pub fn fc_packed_batch_into(
+    xs: &[u32],
+    wt: &[u32],
+    n: usize,
+    l: usize,
+    kw: usize,
+    d_real: usize,
+    out: &mut Vec<i32>,
+) {
     assert_eq!(xs.len(), n * kw);
-    let mut out = vec![0i32; n * l];
+    out.resize(n * l, 0);
     for i in 0..n {
         fc_packed_into(&xs[i * kw..(i + 1) * kw], wt, l, kw, d_real, &mut out[i * l..(i + 1) * l]);
     }
-    out
 }
 
 /// Float FC: `x` (D,), `wt` (L, D) row-major -> (L,).
 pub fn fc_float(x: &[f32], wt: &[f32], l: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0f32; l];
+    fc_float_into(x, wt, l, d, &mut out);
+    out
+}
+
+/// Allocation-free float FC: overwrites `out` (len L) entirely.
+pub fn fc_float_into(x: &[f32], wt: &[f32], l: usize, d: usize, out: &mut [f32]) {
     assert_eq!(x.len(), d);
     assert_eq!(wt.len(), l * d);
-    let mut out = vec![0f32; l];
+    assert_eq!(out.len(), l);
     for li in 0..l {
         let row = &wt[li * d..(li + 1) * d];
         let mut acc = 0f32;
@@ -93,7 +115,6 @@ pub fn fc_float(x: &[f32], wt: &[f32], l: usize, d: usize) -> Vec<f32> {
         }
         out[li] = acc;
     }
-    out
 }
 
 /// Float FC with bias + optional sign activation (the CPU tail layers:
@@ -104,6 +125,22 @@ pub fn fc_float_bias(x: &[f32], wt: &[f32], bias: &[f32], l: usize, d: usize) ->
         *o += b;
     }
     out
+}
+
+/// Allocation-free `fc_float_bias` (same accumulation order, so the
+/// results are bit-identical to the allocating variant).
+pub fn fc_float_bias_into(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    l: usize,
+    d: usize,
+    out: &mut [f32],
+) {
+    fc_float_into(x, wt, l, d, out);
+    for (o, b) in out.iter_mut().zip(bias) {
+        *o += b;
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +239,39 @@ mod tests {
             let mut b = vec![0i32; l];
             fc_packed_into(&x, &wt, l, kw, d, &mut b);
             ensure_eq(a, b, "into == alloc")
+        });
+    }
+
+    #[test]
+    fn float_into_variants_match_alloc() {
+        prop::check(32, |g| {
+            let l = g.usize_in(1, 10);
+            let d = g.usize_in(1, 64);
+            let x = g.normals(d);
+            let wt = g.normals(l * d);
+            let bias = g.normals(l);
+            // dirty output buffer: _into must fully overwrite it
+            let mut out = vec![f32::NAN; l];
+            fc_float_into(&x, &wt, l, d, &mut out);
+            ensure_eq(out.clone(), fc_float(&x, &wt, l, d), "fc_float_into")?;
+            let mut outb = vec![f32::NAN; l];
+            fc_float_bias_into(&x, &wt, &bias, l, d, &mut outb);
+            ensure_eq(outb, fc_float_bias(&x, &wt, &bias, l, d), "fc_float_bias_into")
+        });
+    }
+
+    #[test]
+    fn batch_into_reuse_matches_alloc() {
+        let mut buf = Vec::new();
+        prop::check(24, |g| {
+            let n = g.usize_in(1, 5);
+            let l = g.usize_in(1, 8);
+            let kw = g.usize_in(1, 30);
+            let d = kw * 32;
+            let xs = g.words(n * kw);
+            let wt = g.words(l * kw);
+            fc_packed_batch_into(&xs, &wt, n, l, kw, d, &mut buf);
+            ensure_eq(buf.clone(), fc_packed_batch(&xs, &wt, n, l, kw, d), "fc batch reuse")
         });
     }
 

@@ -52,10 +52,29 @@ pub fn im2col_float_batch(
     c: usize,
     k: usize,
 ) -> Vec<f32> {
+    let mut out = Vec::new();
+    im2col_float_batch_into(xs, n, h, w, c, k, &mut out);
+    out
+}
+
+/// `im2col_float_batch` into a caller-owned buffer.  The buffer is
+/// resized and fully re-initialized (capacity grows monotonically across
+/// calls), so reusing one buffer across differently-sized batches can
+/// never leak state between calls.
+pub fn im2col_float_batch_into(
+    xs: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(xs.len(), n * h * w * c);
     let d = k * k * c;
     let (img_in, img_out) = (h * w * c, h * w * d);
-    let mut out = vec![0f32; n * img_out];
+    out.clear();
+    out.resize(n * img_out, 0.0);
     for i in 0..n {
         im2col_float_into(
             &xs[i * img_in..(i + 1) * img_in],
@@ -66,7 +85,6 @@ pub fn im2col_float_batch(
             &mut out[i * img_out..(i + 1) * img_out],
         );
     }
-    out
 }
 
 /// MSB-first bit writer — the register + counter of Algorithm 1.
@@ -139,7 +157,10 @@ pub fn im2col_pack(x: &[f32], h: usize, w: usize, c: usize, k: usize, b: usize) 
     out
 }
 
-/// Core: fused im2col+pack of one image into a zeroed (H*W, NW) slice.
+/// Core: fused im2col+pack of one image into a (H*W, NW) slice.  The
+/// `BitWriter` flushes exactly NW words per patch row (`finish` always
+/// emits the partial tail word), so every element is assigned and the
+/// slice may arrive dirty — the reused-arena path relies on this.
 fn im2col_pack_into(
     x: &[f32],
     h: usize,
@@ -191,10 +212,28 @@ pub fn im2col_pack_batch(
     k: usize,
     b: usize,
 ) -> Vec<u32> {
+    let mut out = Vec::new();
+    im2col_pack_batch_into(xs, n, h, w, c, k, b, &mut out);
+    out
+}
+
+/// `im2col_pack_batch` into a caller-owned buffer (capacity grows
+/// monotonically; no pre-zeroing — the `BitWriter` flushes exactly
+/// `ceil(K*K*C/b)` words per patch row, covering every element).
+pub fn im2col_pack_batch_into(
+    xs: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    b: usize,
+    out: &mut Vec<u32>,
+) {
     assert_eq!(xs.len(), n * h * w * c);
     let nw = packed_width(k * k * c, b);
     let (img_in, img_out) = (h * w * c, h * w * nw);
-    let mut out = vec![0u32; n * img_out];
+    out.resize(n * img_out, 0);
     for i in 0..n {
         im2col_pack_into(
             &xs[i * img_in..(i + 1) * img_in],
@@ -206,7 +245,6 @@ pub fn im2col_pack_batch(
             &mut out[i * img_out..(i + 1) * img_out],
         );
     }
-    out
 }
 
 /// Two-pass (unfused) variant for the fusion ablation (E7): materialize
@@ -289,9 +327,26 @@ pub fn im2col_words_batch(
     nw: usize,
     k: usize,
 ) -> Vec<u32> {
+    let mut out = Vec::new();
+    im2col_words_batch_into(words, n, h, w, nw, k, &mut out);
+    out
+}
+
+/// `im2col_words_batch` into a caller-owned buffer (resized + fully
+/// re-initialized every call; capacity grows monotonically).
+pub fn im2col_words_batch_into(
+    words: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    nw: usize,
+    k: usize,
+    out: &mut Vec<u32>,
+) {
     assert_eq!(words.len(), n * h * w * nw);
     let (img_in, img_out) = (h * w * nw, h * w * k * k * nw);
-    let mut out = vec![0u32; n * img_out];
+    out.clear();
+    out.resize(n * img_out, 0);
     for i in 0..n {
         im2col_words_into(
             &words[i * img_in..(i + 1) * img_in],
@@ -302,7 +357,6 @@ pub fn im2col_words_batch(
             &mut out[i * img_out..(i + 1) * img_out],
         );
     }
-    out
 }
 
 #[cfg(test)]
@@ -390,6 +444,32 @@ mod tests {
         let words = vec![7u32; 4 * 4 * 2];
         let out = im2col_words(&words, 4, 4, 2, 5);
         assert_eq!(out.len(), 16 * 25 * 2);
+    }
+
+    #[test]
+    fn reused_into_buffers_never_leak_between_calls() {
+        // one set of buffers reused across shrinking/growing shapes must
+        // give the same bytes as fresh allocations every time
+        let mut fbuf = Vec::new();
+        let mut pbuf = Vec::new();
+        let mut wbuf = Vec::new();
+        prop::check(24, |g| {
+            let n = g.usize_in(1, 3);
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 6);
+            let c = g.usize_in(1, 3);
+            let k = *g.pick(&[1usize, 3, 5]);
+            let xs = g.pm1(n * h * w * c);
+            let words = g.words(n * h * w * c);
+            // the buffers arrive dirty from the previous case
+            im2col_float_batch_into(&xs, n, h, w, c, k, &mut fbuf);
+            ensure_eq(fbuf.clone(), im2col_float_batch(&xs, n, h, w, c, k), "float reuse")?;
+            im2col_pack_batch_into(&xs, n, h, w, c, k, 32, &mut pbuf);
+            ensure_eq(pbuf.clone(), im2col_pack_batch(&xs, n, h, w, c, k, 32), "pack reuse")?;
+            im2col_words_batch_into(&words, n, h, w, c, k, &mut wbuf);
+            ensure_eq(wbuf.clone(), im2col_words_batch(&words, n, h, w, c, k), "words reuse")?;
+            Ok(())
+        });
     }
 
     #[test]

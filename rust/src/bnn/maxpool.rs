@@ -90,9 +90,26 @@ pub fn maxpool2x2_batch(
     w: usize,
     c: usize,
 ) -> Result<Vec<f32>, PoolError> {
+    let mut out = Vec::new();
+    maxpool2x2_batch_into(x, n, h, w, c, &mut out)?;
+    Ok(out)
+}
+
+/// `maxpool2x2_batch` into a caller-owned buffer (resized + fully
+/// re-initialized every call, so cross-batch reuse cannot leak state;
+/// capacity grows monotonically).
+pub fn maxpool2x2_batch_into(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    out: &mut Vec<f32>,
+) -> Result<(), PoolError> {
     check_pool_shape("maxpool2x2_batch: odd extent or length mismatch", x.len(), h, w, n * c)?;
     let (img_in, img_out) = (h * w * c, (h / 2) * (w / 2) * c);
-    let mut out = vec![f32::NEG_INFINITY; n * img_out];
+    out.clear();
+    out.resize(n * img_out, f32::NEG_INFINITY);
     for i in 0..n {
         maxpool2x2_image_into(
             &x[i * img_in..(i + 1) * img_in],
@@ -102,7 +119,7 @@ pub fn maxpool2x2_batch(
             &mut out[i * img_out..(i + 1) * img_out],
         );
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Packed OR pool.  `words` (H, W, NW) u32 -> (H/2, W/2, NW).
@@ -123,7 +140,9 @@ pub fn orpool2x2_checked(
     Ok(out)
 }
 
-/// OR-pool one image into a pre-sized zeroed output slice.
+/// OR-pool one image into a pre-sized output slice.  Assigns every
+/// output word (never OR-accumulates), so the slice may arrive dirty —
+/// the reused-arena path relies on this.
 fn orpool2x2_image_into(words: &[u32], h: usize, w: usize, nw: usize, out: &mut [u32]) {
     let (oh, ow) = (h / 2, w / 2);
     for oy in 0..oh {
@@ -148,9 +167,25 @@ pub fn orpool2x2_batch(
     w: usize,
     nw: usize,
 ) -> Result<Vec<u32>, PoolError> {
+    let mut out = Vec::new();
+    orpool2x2_batch_into(words, n, h, w, nw, &mut out)?;
+    Ok(out)
+}
+
+/// `orpool2x2_batch` into a caller-owned buffer (capacity grows
+/// monotonically; no pre-zeroing — `orpool2x2_image_into` assigns every
+/// output word, it never ORs into existing contents).
+pub fn orpool2x2_batch_into(
+    words: &[u32],
+    n: usize,
+    h: usize,
+    w: usize,
+    nw: usize,
+    out: &mut Vec<u32>,
+) -> Result<(), PoolError> {
     check_pool_shape("orpool2x2_batch: odd extent or length mismatch", words.len(), h, w, n * nw)?;
     let (img_in, img_out) = (h * w * nw, (h / 2) * (w / 2) * nw);
-    let mut out = vec![0u32; n * img_out];
+    out.resize(n * img_out, 0);
     for i in 0..n {
         orpool2x2_image_into(
             &words[i * img_in..(i + 1) * img_in],
@@ -160,7 +195,7 @@ pub fn orpool2x2_batch(
             &mut out[i * img_out..(i + 1) * img_out],
         );
     }
-    Ok(out)
+    Ok(())
 }
 
 /// Float max-pool on ±1 data followed by channel packing — the unfused
@@ -290,5 +325,24 @@ mod tests {
     fn batch_pools_reject_bad_shapes() {
         assert!(maxpool2x2_batch(&[0.0; 8], 3, 2, 2, 1).is_err());
         assert!(orpool2x2_batch(&[0u32; 9], 1, 3, 3, 1).is_err());
+    }
+
+    #[test]
+    fn reused_into_buffers_never_leak_between_calls() {
+        let mut mbuf = Vec::new();
+        let mut obuf = Vec::new();
+        prop::check(24, |g| {
+            let n = g.usize_in(1, 4);
+            let h = 2 * g.usize_in(1, 4);
+            let w = 2 * g.usize_in(1, 4);
+            let c = g.usize_in(1, 3);
+            let xs = g.normals(n * h * w * c);
+            let words = g.words(n * h * w * c);
+            maxpool2x2_batch_into(&xs, n, h, w, c, &mut mbuf).unwrap();
+            ensure_eq(mbuf.clone(), maxpool2x2_batch(&xs, n, h, w, c).unwrap(), "max reuse")?;
+            orpool2x2_batch_into(&words, n, h, w, c, &mut obuf).unwrap();
+            ensure_eq(obuf.clone(), orpool2x2_batch(&words, n, h, w, c).unwrap(), "or reuse")?;
+            Ok(())
+        });
     }
 }

@@ -9,6 +9,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::bnn::scratch::ForwardScratch;
 use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
 use crate::input::binarize::{self, Scheme};
 use crate::util::tensorio::{TensorFile, TensorIoError};
@@ -36,32 +37,14 @@ pub enum NetworkError {
     BadInput(String),
 }
 
-impl std::fmt::Display for NetworkError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            NetworkError::Tensor(e) => write!(f, "{e}"),
-            NetworkError::Shape { name, got, want } => {
-                write!(f, "network: tensor {name} has {got} elements, expected {want}")
-            }
-            NetworkError::BadInput(msg) => write!(f, "network: {msg}"),
-        }
-    }
+crate::error_enum_impls!(NetworkError {
+    NetworkError::Tensor(e) => ("{e}"),
+    NetworkError::Shape { name, got, want } =>
+        ("network: tensor {name} has {got} elements, expected {want}"),
+    NetworkError::BadInput(msg) => ("network: {msg}"),
 }
-
-impl std::error::Error for NetworkError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            NetworkError::Tensor(e) => Some(e),
-            _ => None,
-        }
-    }
-}
-
-impl From<TensorIoError> for NetworkError {
-    fn from(e: TensorIoError) -> Self {
-        NetworkError::Tensor(e)
-    }
-}
+source { NetworkError::Tensor(e) => e }
+from { TensorIoError => NetworkError::Tensor });
 
 fn expect_len(name: &'static str, v: &[impl Sized], want: usize) -> Result<(), NetworkError> {
     if v.len() == want {
@@ -80,11 +63,13 @@ pub struct BcnnNetwork {
     pub scheme: Scheme,
     w1_pm1: Vec<f32>,    // (32, K*K*Cin) — used by Scheme::None
     w1_packed: Vec<u32>, // (32, NW1)
+    w1_64: Vec<u64>,     // w1_packed pre-widened to u64 lanes (load-time)
     nw1: usize,
     d1: usize,
     theta1: Vec<f32>,
     flip1: Vec<u32>,
     w2_packed: Vec<u32>, // (32, K*K) channel-packed
+    w2_64: Vec<u64>,     // w2_packed pre-widened to u64 lanes (load-time)
     theta2: Vec<f32>,
     flip2: Vec<u32>,
     wfc1_packed: Vec<u32>, // (100, 576)
@@ -102,15 +87,17 @@ impl BcnnNetwork {
         let c_in = scheme.input_channels();
         let d1 = K * K * c_in;
         let nw1 = packing::packed_width(d1, 32);
-        let net = Self {
+        let mut net = Self {
             scheme,
             w1_pm1: tf.f32("w1_pm1")?,
             w1_packed: tf.u32("w1_packed")?,
+            w1_64: Vec::new(),
             nw1,
             d1,
             theta1: tf.f32("theta1")?,
             flip1: tf.u32("flip1")?,
             w2_packed: tf.u32("w2_packed")?,
+            w2_64: Vec::new(),
             theta2: tf.f32("theta2")?,
             flip2: tf.u32("flip2")?,
             wfc1_packed: tf.u32("wfc1_packed")?,
@@ -129,6 +116,10 @@ impl BcnnNetwork {
         expect_len("wfc1_packed", &net.wfc1_packed, FC1_OUT * 24 * 24)?;
         expect_len("wfc2", &net.wfc2, FC2_OUT * FC1_OUT)?;
         expect_len("wfc3", &net.wfc3, NUM_CLASSES * FC2_OUT)?;
+        // Pre-widen the packed conv weights once (after the length checks)
+        // so the scratch-arena forward path never widens per call.
+        net.w1_64 = bgemm::widen_weights(&net.w1_packed, CONV1_OUT, nw1);
+        net.w2_64 = bgemm::widen_weights(&net.w2_packed, CONV2_OUT, K * K);
         Ok(net)
     }
 
@@ -138,22 +129,50 @@ impl BcnnNetwork {
 
     /// Apply the input-binarization scheme (Section 2.3).
     pub fn binarize_input(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; x.len() / IMG_C * self.scheme.input_channels()];
+        // only the LBP scheme reads the grayscale scratch
+        let mut gray =
+            if self.scheme == Scheme::Lbp { vec![0f32; IMG_H * IMG_W] } else { Vec::new() };
+        self.binarize_input_into(x, &mut gray, &mut out);
+        out
+    }
+
+    /// `binarize_input` into caller-provided buffers: `gray` is the LBP
+    /// grayscale scratch (len `IMG_H * IMG_W`), `out` is sized for the
+    /// scheme's channel count.  Both are fully overwritten.
+    pub fn binarize_input_into(&self, x: &[f32], gray: &mut [f32], out: &mut [f32]) {
         match self.scheme {
-            Scheme::None => x.to_vec(),
+            Scheme::None => out.copy_from_slice(x),
             Scheme::Rgb => {
                 let t = [self.input_t[0], self.input_t[1], self.input_t[2]];
-                binarize::threshold_rgb(x, &t)
+                binarize::threshold_rgb_into(x, &t, out)
             }
-            Scheme::Gray => binarize::threshold_gray(x, self.input_t[0]),
-            Scheme::Lbp => binarize::lbp(x, IMG_H, IMG_W),
+            Scheme::Gray => binarize::threshold_gray_into(x, self.input_t[0], out),
+            Scheme::Lbp => binarize::lbp_into(x, IMG_H, IMG_W, gray, out),
         }
     }
 
     /// Threshold integer counts and channel-pack 32 channels per word.
     fn threshold_pack(counts: &[i32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        Self::threshold_pack_into(counts, theta, flip, pixels, &mut out);
+        out
+    }
+
+    /// `threshold_pack` into a caller-owned buffer (resized + fully
+    /// re-initialized every call; capacity grows monotonically).
+    fn threshold_pack_into(
+        counts: &[i32],
+        theta: &[f32],
+        flip: &[u32],
+        pixels: usize,
+        out: &mut Vec<u32>,
+    ) {
         let c = theta.len();
         debug_assert!(c <= 32);
-        let mut out = vec![0u32; pixels];
+        // resize without clear: every element of 0..pixels is assigned
+        // below, so no pre-zeroing pass (or stale state) is possible
+        out.resize(pixels, 0);
         for px in 0..pixels {
             let row = &counts[px * c..(px + 1) * c];
             let mut word = 0u32;
@@ -162,13 +181,26 @@ impl BcnnNetwork {
             }
             out[px] = word;
         }
-        out
     }
 
     /// Same for float counts (Scheme::None conv1 output).
     fn threshold_pack_f32(counts: &[f32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        Self::threshold_pack_f32_into(counts, theta, flip, pixels, &mut out);
+        out
+    }
+
+    /// `threshold_pack_f32` into a caller-owned buffer.
+    fn threshold_pack_f32_into(
+        counts: &[f32],
+        theta: &[f32],
+        flip: &[u32],
+        pixels: usize,
+        out: &mut Vec<u32>,
+    ) {
         let c = theta.len();
-        let mut out = vec![0u32; pixels];
+        // resize without clear: fully overwritten below
+        out.resize(pixels, 0);
         for px in 0..pixels {
             let row = &counts[px * c..(px + 1) * c];
             let mut word = 0u32;
@@ -177,7 +209,6 @@ impl BcnnNetwork {
             }
             out[px] = word;
         }
-        out
     }
 
     /// Forward pass on one (96,96,3) image; returns logits + layer times.
@@ -261,7 +292,20 @@ impl BcnnNetwork {
     /// Shared verbatim by the single-image and batched paths so they are
     /// bit-identical.
     fn float_tail(&self, counts3: &[i32]) -> [f32; NUM_CLASSES] {
-        let mut h3 = vec![0f32; FC1_OUT];
+        self.float_tail_into(counts3, &mut Vec::new(), &mut Vec::new())
+    }
+
+    /// `float_tail` with caller-owned hidden-layer buffers (the scratch
+    /// arena's `h_a`/`h_b`); every buffer is cleared + rewritten, and the
+    /// accumulation order matches the allocating path exactly.
+    fn float_tail_into(
+        &self,
+        counts3: &[i32],
+        h3: &mut Vec<f32>,
+        h4: &mut Vec<f32>,
+    ) -> [f32; NUM_CLASSES] {
+        h3.clear();
+        h3.resize(FC1_OUT, 0.0);
         for i in 0..FC1_OUT {
             h3[i] = if packing::threshold_bit(counts3[i] as f32, self.theta3[i], self.flip3[i])
                 == 1
@@ -271,28 +315,51 @@ impl BcnnNetwork {
                 -1.0
             };
         }
-        let mut h4 = fc::fc_float_bias(&h3, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT);
+        h4.clear();
+        h4.resize(FC2_OUT, 0.0);
+        fc::fc_float_bias_into(h3, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT, h4);
         for v in h4.iter_mut() {
             *v = packing::sign_pm1(*v);
         }
-        let logits_v = fc::fc_float_bias(&h4, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
         let mut logits = [0f32; NUM_CLASSES];
-        logits.copy_from_slice(&logits_v);
+        fc::fc_float_bias_into(h4, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT, &mut logits);
         logits
     }
 
     /// Batched forward over `n` contiguous (96,96,3) images.
     ///
+    /// Allocates a fresh [`ForwardScratch`] per call; serving hot paths
+    /// should hold a per-worker scratch and call
+    /// [`BcnnNetwork::infer_batch_with`] instead (bit-identical results —
+    /// property-tested in `bnn::scratch`).
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
+        self.infer_batch_with(images, &mut ForwardScratch::new())
+    }
+
+    /// Batched forward through a reusable scratch arena.
+    ///
     /// This is the tentpole batching path: one fused im2col+pack over the
     /// whole batch, one `bgemm` call per conv layer with
     /// M = batch × spatial positions (the packed weight matrix is widened
-    /// once and its rows stay L1-hot across every image), batched OR-pools,
-    /// and a batched packed fc1.  Per image the arithmetic is exactly the
-    /// single-image pipeline, so logits are bit-identical to `forward`.
+    /// once at load time and its rows stay L1-hot across every image),
+    /// batched OR-pools, and a batched packed fc1.  Per image the
+    /// arithmetic is exactly the single-image pipeline, so logits are
+    /// bit-identical to `forward`.
+    ///
+    /// Every intermediate tensor lives in `scratch`; after the arena has
+    /// grown to the largest batch seen, steady-state calls perform no
+    /// intermediate-tensor allocation.  Stages with disjoint lifetimes
+    /// share buffers (noted inline); every `_into` kernel assigns every
+    /// element of its output range or pre-fills it with its identity
+    /// first, so reuse cannot leak state.
     ///
     /// Malformed input is a recoverable `NetworkError::BadInput`, never a
     /// panic — this is the serving-reachable entry point.
-    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
+    pub fn infer_batch_with(
+        &self,
+        images: &[f32],
+        scratch: &mut ForwardScratch,
+    ) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
         const IMG: usize = IMG_H * IMG_W * IMG_C;
         if images.len() % IMG != 0 {
             return Err(NetworkError::BadInput(format!(
@@ -306,52 +373,76 @@ impl BcnnNetwork {
         }
         let px = IMG_H * IMG_W;
         let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
+        let ForwardScratch { xb, gray, cols_p, counts, words, pooled, cols_f, act_f, h_a, h_b, .. } =
+            scratch;
 
         // --- conv1 over the whole batch ----------------------------------
-        let words1 = if self.scheme == Scheme::None {
+        // (`words` carries conv1's threshold-packed activations)
+        if self.scheme == Scheme::None {
             // Scheme::None consumes the raw input directly — no binarize
             // pass, no intermediate copy of the batch.
-            let cols = im2col::im2col_float_batch(images, n, IMG_H, IMG_W, IMG_C, K);
-            let counts =
-                float_ops::gemm_blocked(&cols, &self.w1_pm1, n * px, CONV1_OUT, self.d1);
-            Self::threshold_pack_f32(&counts, &self.theta1, &self.flip1, n * px)
+            im2col::im2col_float_batch_into(images, n, IMG_H, IMG_W, IMG_C, K, cols_f);
+            // resize without clear: the GEMM assigns every element
+            act_f.resize(n * px * CONV1_OUT, 0.0);
+            float_ops::gemm_blocked_into(cols_f, &self.w1_pm1, n * px, CONV1_OUT, self.d1, act_f);
+            Self::threshold_pack_f32_into(act_f, &self.theta1, &self.flip1, n * px, words);
         } else {
-            // binarize per image, concatenated (±1 domain)
+            // binarize per image, concatenated (±1 domain); each per-image
+            // binarize fully overwrites its xb slice
             let c_in = self.scheme.input_channels();
-            let mut xb = Vec::with_capacity(n * px * c_in);
-            for i in 0..n {
-                xb.extend(self.binarize_input(&images[i * IMG..(i + 1) * IMG]));
+            xb.resize(n * px * c_in, 0.0);
+            if self.scheme == Scheme::Lbp {
+                gray.resize(px, 0.0); // only LBP reads the gray scratch
             }
-            let cols = im2col::im2col_pack_batch(&xb, n, IMG_H, IMG_W, c_in, K, 32);
-            let counts =
-                bgemm::bgemm(&cols, &self.w1_packed, n * px, CONV1_OUT, self.nw1, self.d1);
-            Self::threshold_pack(&counts, &self.theta1, &self.flip1, n * px)
-        };
-        let pooled1 = maxpool::orpool2x2_batch(&words1, n, IMG_H, IMG_W, 1).map_err(bad)?;
+            for i in 0..n {
+                self.binarize_input_into(
+                    &images[i * IMG..(i + 1) * IMG],
+                    gray,
+                    &mut xb[i * px * c_in..(i + 1) * px * c_in],
+                );
+            }
+            im2col::im2col_pack_batch_into(xb, n, IMG_H, IMG_W, c_in, K, 32, cols_p);
+            counts.resize(n * px * CONV1_OUT, 0); // bgemm assigns every element
+            bgemm::bgemm_prewidened(cols_p, &self.w1_64, n * px, CONV1_OUT, self.nw1, self.d1, counts);
+            Self::threshold_pack_into(counts, &self.theta1, &self.flip1, n * px, words);
+        }
+        maxpool::orpool2x2_batch_into(words, n, IMG_H, IMG_W, 1, pooled).map_err(bad)?;
 
         // --- conv2 over the whole batch ----------------------------------
-        let cols2 = im2col::im2col_words_batch(&pooled1, n, 48, 48, 1, K);
-        let counts2 = bgemm::bgemm(
-            &cols2,
-            &self.w2_packed,
+        // conv1's patch rows (`cols_p`) and counts are dead once `words`
+        // was packed, so both buffers are reused for conv2.
+        im2col::im2col_words_batch_into(pooled, n, 48, 48, 1, K, cols_p);
+        counts.resize(n * 48 * 48 * CONV2_OUT, 0); // bgemm assigns every element
+        bgemm::bgemm_prewidened(
+            cols_p,
+            &self.w2_64,
             n * 48 * 48,
             CONV2_OUT,
             K * K,
             K * K * CONV1_OUT,
+            counts,
         );
-        let words2 = Self::threshold_pack(&counts2, &self.theta2, &self.flip2, n * 48 * 48);
-        let pooled2 = maxpool::orpool2x2_batch(&words2, n, 48, 48, 1).map_err(bad)?;
+        Self::threshold_pack_into(counts, &self.theta2, &self.flip2, n * 48 * 48, words);
+        // pool1's output was consumed by the word gather above — reuse it
+        maxpool::orpool2x2_batch_into(words, n, 48, 48, 1, pooled).map_err(bad)?;
 
         // --- fc1 (batched packed) + per-image float tail ------------------
-        let counts3 = fc::fc_packed_batch(
-            &pooled2,
+        // conv2's counts are dead once `words` was packed; fc1's counts
+        // land in the same buffer.
+        fc::fc_packed_batch_into(
+            pooled,
             &self.wfc1_packed,
             n,
             FC1_OUT,
             24 * 24,
             24 * 24 * CONV2_OUT,
+            counts,
         );
-        Ok((0..n).map(|i| self.float_tail(&counts3[i * FC1_OUT..(i + 1) * FC1_OUT])).collect())
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            out.push(self.float_tail_into(&counts[i * FC1_OUT..(i + 1) * FC1_OUT], h_a, h_b));
+        }
+        Ok(out)
     }
 
     /// argmax class index for one image.
@@ -449,12 +540,24 @@ impl FloatNetwork {
         (logits, times)
     }
 
-    /// Batched forward over `n` contiguous (96,96,3) images: batched
+    /// Batched forward over `n` contiguous (96,96,3) images.  Allocates a
+    /// fresh [`ForwardScratch`] per call; hot paths should reuse one via
+    /// [`FloatNetwork::infer_batch_with`].
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
+        self.infer_batch_with(images, &mut ForwardScratch::new())
+    }
+
+    /// Batched forward through a reusable scratch arena: batched
     /// im2col + GEMM (M = batch × spatial) and batched max-pools, with a
     /// per-image FC tail.  Bit-identical per image to `forward` (every
-    /// row of every GEMM is accumulated in the same order).  Malformed
-    /// input is a recoverable error, never a panic.
-    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
+    /// row of every GEMM is accumulated in the same order), and
+    /// allocation-free once the arena has grown to the largest batch
+    /// seen.  Malformed input is a recoverable error, never a panic.
+    pub fn infer_batch_with(
+        &self,
+        images: &[f32],
+        scratch: &mut ForwardScratch,
+    ) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
         const IMG: usize = IMG_H * IMG_W * IMG_C;
         if images.len() % IMG != 0 {
             return Err(NetworkError::BadInput(format!(
@@ -468,32 +571,46 @@ impl FloatNetwork {
         }
         let px = IMG_H * IMG_W;
         let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
+        let ForwardScratch { cols_f, act_f, pool_f, h_a, h_b, .. } = scratch;
 
-        let cols1 = im2col::im2col_float_batch(images, n, IMG_H, IMG_W, IMG_C, K);
-        let mut a1 =
-            float_ops::gemm_blocked(&cols1, &self.w1, n * px, CONV1_OUT, K * K * IMG_C);
-        float_ops::add_bias(&mut a1, &self.b1);
-        float_ops::relu(&mut a1);
-        let p1 = maxpool::maxpool2x2_batch(&a1, n, IMG_H, IMG_W, CONV1_OUT).map_err(bad)?;
+        im2col::im2col_float_batch_into(images, n, IMG_H, IMG_W, IMG_C, K, cols_f);
+        act_f.resize(n * px * CONV1_OUT, 0.0); // the GEMM assigns every element
+        float_ops::gemm_blocked_into(cols_f, &self.w1, n * px, CONV1_OUT, K * K * IMG_C, act_f);
+        float_ops::add_bias(act_f, &self.b1);
+        float_ops::relu(act_f);
+        maxpool::maxpool2x2_batch_into(act_f, n, IMG_H, IMG_W, CONV1_OUT, pool_f).map_err(bad)?;
 
-        let cols2 = im2col::im2col_float_batch(&p1, n, 48, 48, CONV1_OUT, K);
-        let mut a2 =
-            float_ops::gemm_blocked(&cols2, &self.w2, n * 48 * 48, CONV2_OUT, K * K * CONV1_OUT);
-        float_ops::add_bias(&mut a2, &self.b2);
-        float_ops::relu(&mut a2);
-        let p2 = maxpool::maxpool2x2_batch(&a2, n, 48, 48, CONV2_OUT).map_err(bad)?;
+        // conv1's patch rows and activations are dead once pool1 is
+        // written, so `cols_f` and `act_f` are reused for conv2
+        im2col::im2col_float_batch_into(pool_f, n, 48, 48, CONV1_OUT, K, cols_f);
+        act_f.resize(n * 48 * 48 * CONV2_OUT, 0.0); // the GEMM assigns every element
+        float_ops::gemm_blocked_into(
+            cols_f,
+            &self.w2,
+            n * 48 * 48,
+            CONV2_OUT,
+            K * K * CONV1_OUT,
+            act_f,
+        );
+        float_ops::add_bias(act_f, &self.b2);
+        float_ops::relu(act_f);
+        // pool1 was consumed by conv2's im2col above — reuse its buffer
+        maxpool::maxpool2x2_batch_into(act_f, n, 48, 48, CONV2_OUT, pool_f).map_err(bad)?;
 
         let feat = 24 * 24 * CONV2_OUT;
         let mut out = Vec::with_capacity(n);
         for i in 0..n {
-            let f = &p2[i * feat..(i + 1) * feat];
-            let mut h1 = fc::fc_float_bias(f, &self.wfc1, &self.bfc1, FC1_OUT, feat);
-            float_ops::relu(&mut h1);
-            let mut h2 = fc::fc_float_bias(&h1, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT);
-            float_ops::relu(&mut h2);
-            let logits_v = fc::fc_float_bias(&h2, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
+            let f = &pool_f[i * feat..(i + 1) * feat];
+            h_a.clear();
+            h_a.resize(FC1_OUT, 0.0);
+            fc::fc_float_bias_into(f, &self.wfc1, &self.bfc1, FC1_OUT, feat, h_a);
+            float_ops::relu(h_a);
+            h_b.clear();
+            h_b.resize(FC2_OUT, 0.0);
+            fc::fc_float_bias_into(h_a, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT, h_b);
+            float_ops::relu(h_b);
             let mut logits = [0f32; NUM_CLASSES];
-            logits.copy_from_slice(&logits_v);
+            fc::fc_float_bias_into(h_b, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT, &mut logits);
             out.push(logits);
         }
         Ok(out)

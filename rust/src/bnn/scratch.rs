@@ -1,0 +1,185 @@
+//! `ForwardScratch` — the per-worker forward arena.
+//!
+//! The paper's pitch is that binarization "decreases both the
+//! computational load and the memory footprint"; the serving translation
+//! of that discipline (FINN's reused on-chip buffers, the XNOR-conv GPU
+//! work's once-per-stream workspace) is to allocate every intermediate
+//! tensor of `infer_batch` exactly once per worker and reuse it across
+//! calls.  `BcnnNetwork::infer_batch_with` / `FloatNetwork::infer_batch_with`
+//! thread one of these through the whole pipeline; `EngineBackend` keeps
+//! a pool of them (one per concurrent worker) so steady-state inference
+//! performs **no intermediate-tensor allocation at all**.
+//!
+//! Correctness contract: every `_into` kernel either assigns every
+//! element of its exact-resized output range (GEMMs, packers, OR-pool,
+//! FC) or pre-fills the range with its required identity before
+//! accumulating (zero for float/word im2col padding, `NEG_INFINITY` for
+//! max-pool) — so a scratch reused across batches of different sizes, or
+//! even across different networks and schemes, can never leak state
+//! between calls (property-tested below).  Buffer capacity only grows
+//! (monotone high-water mark sized by the largest batch seen).
+
+/// Reusable buffers for one in-flight `infer_batch_with` call.
+///
+/// Buffers are named by role; stages with disjoint lifetimes share one
+/// buffer (e.g. `cols_p` carries conv1's packed patch rows, then is
+/// overwritten with conv2's word gather once conv1's GEMM has consumed
+/// it).  The reuse plan is documented at each use site in `network.rs`.
+#[derive(Default)]
+pub struct ForwardScratch {
+    /// Binarized batch input (packed-conv1 schemes).
+    pub(crate) xb: Vec<f32>,
+    /// Per-image grayscale scratch (LBP binarization).
+    pub(crate) gray: Vec<f32>,
+    /// Packed patch rows: conv1 fused im2col+pack, then conv2 word gather.
+    pub(crate) cols_p: Vec<u32>,
+    /// XNOR-popcount counts: conv1, then conv2, then fc1.
+    pub(crate) counts: Vec<i32>,
+    /// Threshold-packed activation words: conv1, then conv2.
+    pub(crate) words: Vec<u32>,
+    /// OR-pooled words: pool1, then pool2.
+    pub(crate) pooled: Vec<u32>,
+    /// Float patch rows (`Scheme::None` conv1; `FloatNetwork` conv1/conv2).
+    pub(crate) cols_f: Vec<f32>,
+    /// Float GEMM activations (`Scheme::None` conv1; `FloatNetwork` conv1/conv2).
+    pub(crate) act_f: Vec<f32>,
+    /// Max-pooled float activations (`FloatNetwork` pool1, then pool2).
+    pub(crate) pool_f: Vec<f32>,
+    /// FC-tail hidden activations (per image).
+    pub(crate) h_a: Vec<f32>,
+    pub(crate) h_b: Vec<f32>,
+}
+
+impl ForwardScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total elements currently reserved across all buffers — the arena's
+    /// high-water mark, for diagnostics and the allocation bench.
+    pub fn capacity_elems(&self) -> usize {
+        self.xb.capacity()
+            + self.gray.capacity()
+            + self.cols_p.capacity()
+            + self.counts.capacity()
+            + self.words.capacity()
+            + self.pooled.capacity()
+            + self.cols_f.capacity()
+            + self.act_f.capacity()
+            + self.pool_f.capacity()
+            + self.h_a.capacity()
+            + self.h_b.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::network::tests_support::{
+        synth_bcnn_network, synth_float_network, synth_image,
+    };
+    use crate::bnn::network::{IMG_C, IMG_H, IMG_W};
+    use crate::input::binarize::Scheme;
+    use crate::util::prop::{self, ensure_eq};
+
+    const IMG: usize = IMG_H * IMG_W * IMG_C;
+
+    fn images(n: usize, seed: u64) -> Vec<f32> {
+        let mut xs = Vec::with_capacity(n * IMG);
+        for i in 0..n {
+            xs.extend(synth_image(seed.wrapping_add(i as u64)));
+        }
+        xs
+    }
+
+    #[test]
+    fn bcnn_scratch_path_bit_identical_and_leak_free() {
+        // ONE scratch reused across every case: random scheme, random
+        // batch size (so consecutive calls shrink and grow the buffers),
+        // compared against (a) a fresh scratch and (b) the single-image
+        // forward — both must be bit-identical every time.
+        let nets: Vec<_> = Scheme::ALL.iter().map(|&s| synth_bcnn_network(s, 77)).collect();
+        let mut reused = ForwardScratch::new();
+        prop::check(12, |g| {
+            let net = g.pick(&nets);
+            let n = g.usize_in(1, 5);
+            let xs = images(n, g.u64());
+            let with_reused = net.infer_batch_with(&xs, &mut reused).unwrap();
+            let with_fresh = net.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap();
+            ensure_eq(with_reused.clone(), with_fresh, "reused scratch == fresh scratch")?;
+            for i in 0..n {
+                let (single, _) = net.forward(&xs[i * IMG..(i + 1) * IMG]);
+                ensure_eq(with_reused[i], single, "scratch batched == single forward")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn float_scratch_path_bit_identical_and_leak_free() {
+        let net = synth_float_network(78);
+        let mut reused = ForwardScratch::new();
+        prop::check(6, |g| {
+            let n = g.usize_in(1, 4);
+            let xs = images(n, g.u64());
+            let with_reused = net.infer_batch_with(&xs, &mut reused).unwrap();
+            let with_fresh = net.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap();
+            ensure_eq(with_reused.clone(), with_fresh, "float reused == fresh")?;
+            for i in 0..n {
+                let (single, _) = net.forward(&xs[i * IMG..(i + 1) * IMG]);
+                ensure_eq(with_reused[i], single, "float scratch batched == single")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_then_growing_batches_do_not_leak() {
+        // explicit worst case for stale-state bugs: big batch warms the
+        // high-water mark, then smaller batches run inside dirty buffers
+        let net = synth_bcnn_network(Scheme::Rgb, 5);
+        let mut scratch = ForwardScratch::new();
+        let mut high_water = 0;
+        for (round, &n) in [4usize, 1, 3, 2, 5, 1].iter().enumerate() {
+            let xs = images(n, 1000 + round as u64);
+            let got = net.infer_batch_with(&xs, &mut scratch).unwrap();
+            for i in 0..n {
+                let (want, _) = net.forward(&xs[i * IMG..(i + 1) * IMG]);
+                assert_eq!(got[i], want, "round {round}, image {i}");
+            }
+            // capacity is a monotone high-water mark (no realloc churn)
+            let cap = scratch.capacity_elems();
+            assert!(cap >= high_water, "round {round}: capacity shrank {high_water} -> {cap}");
+            high_water = cap;
+        }
+    }
+
+    #[test]
+    fn one_scratch_serves_bcnn_and_float_interleaved() {
+        // a worker's arena may alternate between model kinds; nothing may
+        // bleed across (different buffer roles, but shared h_a/h_b etc.)
+        let bnet = synth_bcnn_network(Scheme::Gray, 9);
+        let fnet = synth_float_network(9);
+        let mut scratch = ForwardScratch::new();
+        for round in 0..3u64 {
+            let xs = images(2, 2000 + round);
+            let b = bnet.infer_batch_with(&xs, &mut scratch).unwrap();
+            let f = fnet.infer_batch_with(&xs, &mut scratch).unwrap();
+            for i in 0..2 {
+                assert_eq!(b[i], bnet.forward(&xs[i * IMG..(i + 1) * IMG]).0);
+                assert_eq!(f[i], fnet.forward(&xs[i * IMG..(i + 1) * IMG]).0);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_rejects_ragged_and_accepts_empty() {
+        let net = synth_bcnn_network(Scheme::Rgb, 8);
+        let mut scratch = ForwardScratch::new();
+        assert!(net.infer_batch_with(&[0.0; 100], &mut scratch).is_err());
+        assert!(net.infer_batch_with(&[], &mut scratch).unwrap().is_empty());
+        let fnet = synth_float_network(8);
+        assert!(fnet.infer_batch_with(&[0.0; 7], &mut scratch).is_err());
+        assert!(fnet.infer_batch_with(&[], &mut scratch).unwrap().is_empty());
+    }
+}

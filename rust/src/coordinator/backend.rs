@@ -5,9 +5,10 @@
 //! executor thread and proxies batches over channels.
 
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
+use crate::bnn::scratch::ForwardScratch;
 use crate::runtime::{Artifacts, ModelRuntime, RuntimeError};
 use crate::util::threadpool::scoped_map;
 
@@ -42,11 +43,22 @@ pub struct EngineBackend {
     model: EngineModel,
     threads: usize,
     label: String,
+    /// Checked-out-and-returned forward arenas, one per concurrent
+    /// worker: a worker pops one for the duration of its chunk and pushes
+    /// it back, so steady-state inference allocates no intermediate
+    /// tensors (the pool grows to at most `threads` arenas, each sized by
+    /// the largest per-worker chunk seen).
+    scratch_pool: Mutex<Vec<ForwardScratch>>,
 }
 
 impl EngineBackend {
     pub fn new(model: EngineModel, threads: usize, label: impl Into<String>) -> Self {
-        Self { model, threads: threads.max(1), label: label.into() }
+        Self {
+            model,
+            threads: threads.max(1),
+            label: label.into(),
+            scratch_pool: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn bcnn(net: BcnnNetwork, threads: usize) -> Self {
@@ -77,16 +89,21 @@ impl InferBackend for EngineBackend {
             return Ok(Vec::new());
         }
         // The whole batch flows through the networks' batched forward
-        // (one A-operand repack + one weight widening per conv layer, not
-        // per image).  With several worker threads the batch is split into
-        // contiguous sub-batches — still batched within each chunk, and
-        // bit-identical per image either way.
+        // (one A-operand repack per conv layer, not per image).  With
+        // several worker threads the batch is split into contiguous
+        // sub-batches — still batched within each chunk, and bit-identical
+        // per image either way.  Each worker checks a forward arena out of
+        // the pool, so steady-state serving allocates no intermediate
+        // tensors.
         let run = |lo: usize, hi: usize| -> Result<Vec<[f32; NUM_CLASSES]>, String> {
             let xs = &images[lo * IMG_ELEMS..hi * IMG_ELEMS];
-            match &self.model {
-                EngineModel::Bcnn(m) => m.infer_batch(xs).map_err(|e| e.to_string()),
-                EngineModel::Float(m) => m.infer_batch(xs).map_err(|e| e.to_string()),
-            }
+            let mut scratch = self.scratch_pool.lock().unwrap().pop().unwrap_or_default();
+            let result = match &self.model {
+                EngineModel::Bcnn(m) => m.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string()),
+                EngineModel::Float(m) => m.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string()),
+            };
+            self.scratch_pool.lock().unwrap().push(scratch);
+            result
         };
         let per = n.div_ceil(self.threads.min(n));
         let chunks = n.div_ceil(per);
@@ -227,6 +244,24 @@ mod tests {
             let single = be.infer_batch(&imgs[i * IMG_ELEMS..(i + 1) * IMG_ELEMS]).unwrap();
             assert_eq!(&batched[i * 4..(i + 1) * 4], &single[..]);
         }
+    }
+
+    #[test]
+    fn engine_backend_scratch_pool_reuses_arenas() {
+        let net = synth_bcnn_network(Scheme::Gray, 12);
+        let be = EngineBackend::bcnn(net, 2);
+        let mut rng = crate::util::rng::Xoshiro256::new(9);
+        let imgs: Vec<f32> = (0..4 * IMG_ELEMS).map(|_| rng.next_f32()).collect();
+        let first = be.infer_batch(&imgs).unwrap();
+        // repeated and differently-sized payloads flow through the same
+        // pooled arenas and stay bit-identical
+        for _ in 0..3 {
+            assert_eq!(be.infer_batch(&imgs).unwrap(), first);
+        }
+        let small = be.infer_batch(&imgs[..IMG_ELEMS]).unwrap();
+        assert_eq!(&first[..4], &small[..]);
+        // the pool never grows beyond the worker count
+        assert!(be.scratch_pool.lock().unwrap().len() <= 2);
     }
 
     #[test]

@@ -77,12 +77,15 @@ impl Batcher {
             .name("batcher".into())
             .spawn(move || {
                 let supported = backend.supported_batches();
+                // the lane's padded-payload buffer, reused across batches
+                // (grows to the largest executed batch, then stays put)
+                let mut payload: Vec<f32> = Vec::new();
                 while !stop2.load(Ordering::Relaxed) {
                     let batch = queue2.drain_batch(policy.max_batch, policy.max_wait);
                     if batch.is_empty() {
                         break; // queue closed and drained
                     }
-                    Self::run_batch(batch, &*backend, &supported, &metrics);
+                    Self::run_batch(batch, &*backend, &supported, &metrics, &mut payload);
                 }
             })
             .expect("spawn batcher");
@@ -94,20 +97,21 @@ impl Batcher {
         backend: &dyn InferBackend,
         supported: &[usize],
         metrics: &Metrics,
+        payload: &mut Vec<f32>,
     ) {
         let plan = plan_batches(reqs.len(), supported);
-        let mut cursor = 0usize;
         for (real, exec) in plan {
             let chunk: Vec<InferRequest> = reqs.drain(..real).collect();
-            cursor += real;
-            let _ = cursor;
-            // assemble the padded payload
-            let mut payload = vec![0f32; exec * IMG_ELEMS];
+            // assemble the padded payload in the lane's reused buffer —
+            // cleared and re-zeroed every time, so padding lanes never
+            // carry a previous batch's pixels
+            payload.clear();
+            payload.resize(exec * IMG_ELEMS, 0.0);
             for (i, r) in chunk.iter().enumerate() {
                 payload[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&r.image);
             }
             let started = Instant::now();
-            let result = backend.infer_batch(&payload);
+            let result = backend.infer_batch(payload);
             let exec_time = started.elapsed();
             match result {
                 Ok(logits) => {
@@ -115,6 +119,20 @@ impl Batcher {
                     for (i, r) in chunk.into_iter().enumerate() {
                         let l = logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec();
                         let queue_time = started.duration_since(r.enqueued);
+                        // Non-finite logits mean the image poisoned the
+                        // forward pass (inf/NaN pixels); argmax over NaNs
+                        // would silently answer class 0 — fail the image
+                        // with a structured per-image error instead, and
+                        // count it as a failure (not a completion) so the
+                        // stats op reflects the incident.
+                        if l.iter().any(|v| !v.is_finite()) {
+                            metrics.record_failure(1);
+                            let _ = r.resp.send(InferResponse::failed(
+                                r.id,
+                                "non-finite logits (input pixels out of range?)".to_string(),
+                            ));
+                            continue;
+                        }
                         metrics.record_request(queue_time, exec_time);
                         let resp = InferResponse {
                             id: r.id,

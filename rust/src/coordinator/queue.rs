@@ -25,16 +25,10 @@ pub enum PushError {
     Closed,
 }
 
-impl std::fmt::Display for PushError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            PushError::Full => write!(f, "queue full (capacity reached) — backpressure"),
-            PushError::Closed => write!(f, "queue closed"),
-        }
-    }
-}
-
-impl std::error::Error for PushError {}
+crate::error_enum_impls!(PushError {
+    PushError::Full => ("queue full (capacity reached) — backpressure"),
+    PushError::Closed => ("queue closed"),
+});
 
 impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {

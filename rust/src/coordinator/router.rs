@@ -23,35 +23,15 @@ pub enum RouteError {
     BackendGone,
 }
 
-impl std::fmt::Display for RouteError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            RouteError::UnknownVariant(name, avail) => {
-                write!(f, "unknown model variant {name:?} (available: {avail})")
-            }
-            RouteError::Rejected(e) => write!(f, "admission rejected: {e}"),
-            RouteError::BadPayload(n) => {
-                write!(f, "image payload must be {IMG_ELEMS} floats, got {n}")
-            }
-            RouteError::BackendGone => write!(f, "backend dropped the response channel"),
-        }
-    }
+crate::error_enum_impls!(RouteError {
+    RouteError::UnknownVariant(name, avail) =>
+        ("unknown model variant {name:?} (available: {avail})"),
+    RouteError::Rejected(e) => ("admission rejected: {e}"),
+    RouteError::BadPayload(n) => ("image payload must be {IMG_ELEMS} floats, got {n}"),
+    RouteError::BackendGone => ("backend dropped the response channel"),
 }
-
-impl std::error::Error for RouteError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            RouteError::Rejected(e) => Some(e),
-            _ => None,
-        }
-    }
-}
-
-impl From<PushError> for RouteError {
-    fn from(e: PushError) -> Self {
-        RouteError::Rejected(e)
-    }
-}
+source { RouteError::Rejected(e) => e }
+from { PushError => RouteError::Rejected });
 
 struct Lane {
     queue: Arc<BoundedQueue<InferRequest>>,
@@ -81,9 +61,24 @@ impl Router {
         })
     }
 
+    fn alloc_id(&self) -> RequestId {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Submit one image; returns the request id and the response channel.
     pub fn submit(
         &self,
+        variant: &str,
+        image: Vec<f32>,
+    ) -> Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError> {
+        self.submit_with_id(self.alloc_id(), variant, image)
+    }
+
+    /// Submission with a caller-assigned id, so the batch path can report
+    /// a real request id even when admission itself fails.
+    fn submit_with_id(
+        &self,
+        id: RequestId,
         variant: &str,
         image: Vec<f32>,
     ) -> Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError> {
@@ -91,7 +86,6 @@ impl Router {
             return Err(RouteError::BadPayload(image.len()));
         }
         let lane = self.lane(variant)?;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         lane.metrics.record_submit();
         let req = InferRequest { id, image, enqueued: Instant::now(), resp: tx };
@@ -130,14 +124,21 @@ impl Router {
         variant: &str,
         images: Vec<Vec<f32>>,
     ) -> Vec<InferResponse> {
-        // submit everything first so the batcher sees the whole group...
-        let rxs: Vec<Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError>> =
-            images.into_iter().map(|img| self.submit(variant, img)).collect();
+        // submit everything first so the batcher sees the whole group;
+        // each image gets its id up front so a failed submission still
+        // reports a real id (regression: failures used to answer id 0)
+        let rxs: Vec<(RequestId, Result<mpsc::Receiver<InferResponse>, RouteError>)> = images
+            .into_iter()
+            .map(|img| {
+                let id = self.alloc_id();
+                (id, self.submit_with_id(id, variant, img).map(|(_, rx)| rx))
+            })
+            .collect();
         // ...then collect, mapping failures per-image
         rxs.into_iter()
-            .map(|r| match r {
-                Err(e) => InferResponse::failed(0, e.to_string()),
-                Ok((id, rx)) => rx
+            .map(|(id, r)| match r {
+                Err(e) => InferResponse::failed(id, e.to_string()),
+                Ok(rx) => rx
                     .recv()
                     .unwrap_or_else(|_| InferResponse::failed(id, RouteError::BackendGone.to_string())),
             })
@@ -298,6 +299,22 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(r.metrics("bcnn_rgb").unwrap().completed(), 64);
+        r.shutdown();
+    }
+
+    #[test]
+    fn batch_failures_carry_real_request_ids() {
+        // regression: failed submissions used to answer with id 0
+        let r = test_router(BatchPolicy::default(), 64);
+        let resps =
+            r.infer_blocking_batch("bcnn_rgb", vec![vec![0.0; 3], image(4), vec![0.0; 5]]);
+        assert_eq!(resps.len(), 3);
+        assert!(resps[0].error.is_some() && resps[2].error.is_some());
+        assert!(resps[1].error.is_none());
+        assert_ne!(resps[0].id, 0);
+        assert_ne!(resps[2].id, 0);
+        // ids follow submission order, distinct per image
+        assert!(resps[0].id < resps[1].id && resps[1].id < resps[2].id);
         r.shutdown();
     }
 

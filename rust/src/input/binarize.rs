@@ -27,24 +27,54 @@ fn sign(x: f32) -> f32 {
 /// `sign(X + T)` with a per-channel threshold `t` (len 3).
 /// In/out layout: (H, W, 3) row-major.
 pub fn threshold_rgb(x: &[f32], t: &[f32; 3]) -> Vec<f32> {
-    x.chunks_exact(3)
-        .flat_map(|px| [sign(px[0] + t[0]), sign(px[1] + t[1]), sign(px[2] + t[2])])
-        .collect()
+    let mut out = vec![0f32; x.len()];
+    threshold_rgb_into(x, t, &mut out);
+    out
+}
+
+/// `threshold_rgb` into a caller-provided buffer (len = `x.len()`,
+/// fully overwritten — the ROADMAP-flagged zero-copy variant used by the
+/// scratch-arena forward path).
+pub fn threshold_rgb_into(x: &[f32], t: &[f32; 3], out: &mut [f32]) {
+    assert_eq!(out.len(), x.len());
+    for (px, o) in x.chunks_exact(3).zip(out.chunks_exact_mut(3)) {
+        o[0] = sign(px[0] + t[0]);
+        o[1] = sign(px[1] + t[1]);
+        o[2] = sign(px[2] + t[2]);
+    }
 }
 
 /// Grayscale threshold: `sign(luma(X) + t)`, output (H, W, 1).
 pub fn threshold_gray(x: &[f32], t: f32) -> Vec<f32> {
-    x.chunks_exact(3)
-        .map(|px| sign(px[0] * LUMA[0] + px[1] * LUMA[1] + px[2] * LUMA[2] + t))
-        .collect()
+    let mut out = vec![0f32; x.len() / 3];
+    threshold_gray_into(x, t, &mut out);
+    out
+}
+
+/// `threshold_gray` into a caller-provided buffer (len = `x.len() / 3`,
+/// fully overwritten).
+pub fn threshold_gray_into(x: &[f32], t: f32, out: &mut [f32]) {
+    assert_eq!(out.len(), x.len() / 3);
+    for (px, o) in x.chunks_exact(3).zip(out.iter_mut()) {
+        *o = sign(px[0] * LUMA[0] + px[1] * LUMA[1] + px[2] * LUMA[2] + t);
+    }
 }
 
 /// Grayscale conversion helper (shared with the LBP path and Figure 1).
 pub fn to_gray(x: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let mut out = vec![0f32; h * w];
+    to_gray_into(x, h, w, &mut out);
+    out
+}
+
+/// `to_gray` into a caller-provided buffer (len = `h * w`, fully
+/// overwritten).
+pub fn to_gray_into(x: &[f32], h: usize, w: usize, out: &mut [f32]) {
     assert_eq!(x.len(), h * w * 3);
-    x.chunks_exact(3)
-        .map(|px| px[0] * LUMA[0] + px[1] * LUMA[1] + px[2] * LUMA[2])
-        .collect()
+    assert_eq!(out.len(), h * w);
+    for (px, o) in x.chunks_exact(3).zip(out.iter_mut()) {
+        *o = px[0] * LUMA[0] + px[1] * LUMA[1] + px[2] * LUMA[2];
+    }
 }
 
 /// Modified LBP (paper Section 2.3): 3 binary channels, channel k set to
@@ -52,8 +82,17 @@ pub fn to_gray(x: &[f32], h: usize, w: usize) -> Vec<f32> {
 /// of the grayscale image; borders read neighbour value 0.
 /// Output layout: (H, W, 3).
 pub fn lbp(x: &[f32], h: usize, w: usize) -> Vec<f32> {
-    let gray = to_gray(x, h, w);
-    let mut out = vec![-1.0f32; h * w * 3];
+    let mut gray = vec![0f32; h * w];
+    let mut out = vec![0f32; h * w * 3];
+    lbp_into(x, h, w, &mut gray, &mut out);
+    out
+}
+
+/// `lbp` into caller-provided buffers: `gray` is an (H*W) grayscale
+/// scratch, `out` the (H, W, 3) result.  Both are fully overwritten.
+pub fn lbp_into(x: &[f32], h: usize, w: usize, gray: &mut [f32], out: &mut [f32]) {
+    assert_eq!(out.len(), h * w * 3);
+    to_gray_into(x, h, w, gray);
     for y in 0..h {
         for xx in 0..w {
             let center = gray[y * w + xx];
@@ -70,7 +109,6 @@ pub fn lbp(x: &[f32], h: usize, w: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Scheme dispatch matching `binarize_input.apply_scheme`.
@@ -169,6 +207,29 @@ mod tests {
         assert_eq!(out[(1 * 3 + 1) * 3 + 1], 1.0);
         // channel 0 neighbour (-1,-1) = pixel (0,0), darker -> -1
         assert_eq!(out[(1 * 3 + 1) * 3], -1.0);
+    }
+
+    #[test]
+    fn into_variants_match_alloc_on_dirty_buffers() {
+        use crate::util::prop::{self, ensure_eq};
+        prop::check(24, |g| {
+            let h = g.usize_in(1, 8);
+            let w = g.usize_in(1, 8);
+            let x: Vec<f32> = (0..h * w * 3).map(|_| g.f32_in(0.0, 1.0)).collect();
+            let t = [g.f32_in(-1.0, 0.0), g.f32_in(-1.0, 0.0), g.f32_in(-1.0, 0.0)];
+            let mut rgb = vec![f32::NAN; h * w * 3];
+            threshold_rgb_into(&x, &t, &mut rgb);
+            ensure_eq(rgb, threshold_rgb(&x, &t), "rgb into")?;
+            let mut gr = vec![f32::NAN; h * w];
+            threshold_gray_into(&x, t[0], &mut gr);
+            ensure_eq(gr, threshold_gray(&x, t[0]), "gray into")?;
+            let mut gray = vec![f32::NAN; h * w];
+            let mut lb = vec![f32::NAN; h * w * 3];
+            lbp_into(&x, h, w, &mut gray, &mut lb);
+            ensure_eq(lb, lbp(&x, h, w), "lbp into")?;
+            ensure_eq(gray, to_gray(&x, h, w), "gray scratch filled")?;
+            Ok(())
+        });
     }
 
     #[test]

@@ -11,29 +11,12 @@ pub enum ImageError {
     Parse(String),
 }
 
-impl std::fmt::Display for ImageError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ImageError::Io(e) => write!(f, "image io: {e}"),
-            ImageError::Parse(msg) => write!(f, "image parse: {msg}"),
-        }
-    }
+crate::error_enum_impls!(ImageError {
+    ImageError::Io(e) => ("image io: {e}"),
+    ImageError::Parse(msg) => ("image parse: {msg}"),
 }
-
-impl std::error::Error for ImageError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            ImageError::Io(e) => Some(e),
-            _ => None,
-        }
-    }
-}
-
-impl From<std::io::Error> for ImageError {
-    fn from(e: std::io::Error) -> Self {
-        ImageError::Io(e)
-    }
-}
+source { ImageError::Io(e) => e }
+from { std::io::Error => ImageError::Io });
 
 fn clamp_u8(v: f32) -> u8 {
     (v.clamp(0.0, 1.0) * 255.0).round() as u8
@@ -63,6 +46,11 @@ pub fn write_pgm(path: impl AsRef<Path>, x: &[f32], h: usize, w: usize) -> Resul
 pub fn pm1_to_unit(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| if v > 0.0 { 1.0 } else { 0.0 }).collect()
 }
+
+/// Upper bound on parsed PPM extents.  The pipeline consumes (96, 96)
+/// images; this leaves generous headroom while keeping `w * h * 3` far
+/// from `usize` overflow on crafted headers.
+pub const MAX_DIM: usize = 1 << 15;
 
 /// Read a binary PPM (P6, maxval 255) into (H, W, 3) floats in [0,1].
 pub fn read_ppm(path: impl AsRef<Path>) -> Result<(Vec<f32>, usize, usize), ImageError> {
@@ -102,8 +90,17 @@ pub fn read_ppm(path: impl AsRef<Path>) -> Result<(Vec<f32>, usize, usize), Imag
         return Err(ImageError::Parse(format!("unsupported maxval {maxval}")));
     }
     pos += 1; // single whitespace after maxval
-    let need = w * h * 3;
-    if data.len() < pos + need {
+    // A crafted header ("P6\n<huge> <huge>\n255\n") must not wrap
+    // `w * h * 3` (which bypassed the truncation check in release builds
+    // and panicked in debug): cap the extents and multiply checked.
+    if w == 0 || h == 0 || w > MAX_DIM || h > MAX_DIM {
+        return Err(ImageError::Parse(format!("unreasonable dimensions {w}x{h}")));
+    }
+    let need = w
+        .checked_mul(h)
+        .and_then(|px| px.checked_mul(3))
+        .ok_or_else(|| ImageError::Parse(format!("dimensions {w}x{h} overflow")))?;
+    if data.len() < pos || data.len() - pos < need {
         return Err(ImageError::Parse("truncated pixel data".into()));
     }
     let px = data[pos..pos + need].iter().map(|&b| b as f32 / 255.0).collect();
@@ -151,6 +148,27 @@ mod tests {
         let p = tmp("bad.ppm");
         std::fs::write(&p, b"P5\n1 1\n255\n\0").unwrap();
         assert!(read_ppm(&p).is_err());
+    }
+
+    #[test]
+    fn read_rejects_overflowing_header() {
+        // 2^63 * 2 * 3 wraps usize to 0: the old code then read an empty
+        // pixel payload as a "valid" 2^63-wide image in release builds
+        // (and panicked on the multiply in debug).  Must be a Parse error.
+        let p = tmp("overflow.ppm");
+        std::fs::write(&p, b"P6\n9223372036854775808 2\n255\n\0\0\0").unwrap();
+        match read_ppm(&p) {
+            Err(ImageError::Parse(_)) => {}
+            other => panic!("expected parse error, got {other:?}"),
+        }
+        // enormous-but-non-wrapping extents hit the dimension cap
+        let p2 = tmp("huge.ppm");
+        std::fs::write(&p2, b"P6\n1000000 1000000\n255\n\0\0\0").unwrap();
+        assert!(matches!(read_ppm(&p2), Err(ImageError::Parse(_))));
+        // zero extents are equally meaningless for a P6 payload
+        let p3 = tmp("zero.ppm");
+        std::fs::write(&p3, b"P6\n0 4\n255\n").unwrap();
+        assert!(matches!(read_ppm(&p3), Err(ImageError::Parse(_))));
     }
 
     #[test]

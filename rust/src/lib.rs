@@ -29,6 +29,7 @@ pub mod bnn {
     pub mod maxpool;
     pub mod network;
     pub mod packing;
+    pub mod scratch;
 }
 
 pub mod coordinator;

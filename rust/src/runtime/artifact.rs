@@ -14,41 +14,22 @@ pub enum ArtifactError {
     BadDType(String),
 }
 
-impl std::fmt::Display for ArtifactError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            ArtifactError::Io(e) => write!(f, "artifact io: {e}"),
-            ArtifactError::Json(e) => write!(f, "{e}"),
-            ArtifactError::ModelNotFound(name, avail) => {
-                write!(f, "manifest: model {name:?} not found (available: {avail})")
-            }
-            ArtifactError::LayerNotFound(name) => write!(f, "manifest: layer {name:?} not found"),
-            ArtifactError::BadDType(d) => write!(f, "manifest: unsupported dtype {d:?}"),
-        }
-    }
+crate::error_enum_impls!(ArtifactError {
+    ArtifactError::Io(e) => ("artifact io: {e}"),
+    ArtifactError::Json(e) => ("{e}"),
+    ArtifactError::ModelNotFound(name, avail) =>
+        ("manifest: model {name:?} not found (available: {avail})"),
+    ArtifactError::LayerNotFound(name) => ("manifest: layer {name:?} not found"),
+    ArtifactError::BadDType(d) => ("manifest: unsupported dtype {d:?}"),
 }
-
-impl std::error::Error for ArtifactError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            ArtifactError::Io(e) => Some(e),
-            ArtifactError::Json(e) => Some(e),
-            _ => None,
-        }
-    }
+source {
+    ArtifactError::Io(e) => e,
+    ArtifactError::Json(e) => e,
 }
-
-impl From<std::io::Error> for ArtifactError {
-    fn from(e: std::io::Error) -> Self {
-        ArtifactError::Io(e)
-    }
-}
-
-impl From<JsonError> for ArtifactError {
-    fn from(e: JsonError) -> Self {
-        ArtifactError::Json(e)
-    }
-}
+from {
+    std::io::Error => ArtifactError::Io,
+    JsonError => ArtifactError::Json,
+});
 
 /// Element dtype of a runtime argument.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

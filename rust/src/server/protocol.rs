@@ -67,6 +67,22 @@ pub enum Response {
     Error(String),
 }
 
+/// Parse one pixel value, rejecting anything non-finite.
+///
+/// Two distinct overflow routes both used to smuggle `inf` into the
+/// network (NaN logits → `argmax` silently answered class 0, "bus"):
+/// `1e400` overflows f64 at JSON-parse time, and a finite-but-huge f64
+/// like `1e200` overflows during the f32 cast — so the check runs AFTER
+/// the cast.
+fn finite_pixel(v: &Json) -> Result<f32, String> {
+    let f = v.as_f64().map_err(|e| e.to_string())? as f32;
+    if f.is_finite() {
+        Ok(f)
+    } else {
+        Err("non-finite pixel value (inf/nan after f32 conversion)".to_string())
+    }
+}
+
 impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let j = Json::parse(line).map_err(|e| e.to_string())?;
@@ -85,9 +101,8 @@ impl Request {
                     .and_then(|p| p.as_arr())
                     .map_err(|e| e.to_string())?
                     .iter()
-                    .map(|v| v.as_f64().map(|f| f as f32))
-                    .collect::<Result<Vec<_>, _>>()
-                    .map_err(|e| e.to_string())?;
+                    .map(finite_pixel)
+                    .collect::<Result<Vec<_>, String>>()?;
                 Ok(Request::Classify { model, pixels })
             }
             "classify_batch" => {
@@ -104,7 +119,7 @@ impl Request {
                         img.as_arr()
                             .map_err(|e| e.to_string())?
                             .iter()
-                            .map(|v| v.as_f64().map(|f| f as f32).map_err(|e| e.to_string()))
+                            .map(finite_pixel)
                             .collect::<Result<Vec<f32>, String>>()
                     })
                     .collect::<Result<Vec<_>, String>>()?;
@@ -208,6 +223,19 @@ mod tests {
         assert!(Request::parse("not json").is_err());
         assert!(Request::parse(r#"{"op":"fly"}"#).is_err());
         assert!(Request::parse(r#"{"nop":"classify"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_non_finite_pixels() {
+        // 1e400 overflows f64 to +inf at JSON-parse time
+        assert!(Request::parse(r#"{"op":"classify","pixels":[1e400]}"#).is_err());
+        // 1e200 is a finite f64 but overflows the f32 cast
+        assert!(Request::parse(r#"{"op":"classify","pixels":[0.5,1e200]}"#).is_err());
+        assert!(Request::parse(r#"{"op":"classify","pixels":[-1e400]}"#).is_err());
+        // batch variant enforces the same check per pixel
+        assert!(Request::parse(r#"{"op":"classify_batch","images":[[0.5,1e400]]}"#).is_err());
+        // ordinary pixels still parse
+        assert!(Request::parse(r#"{"op":"classify","pixels":[0.0,0.5,1.0]}"#).is_ok());
     }
 
     #[test]

@@ -35,18 +35,12 @@ pub enum CliError {
     Help,
 }
 
-impl std::fmt::Display for CliError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            CliError::Unknown(n) => write!(f, "unknown option --{n} (try --help)"),
-            CliError::MissingValue(n) => write!(f, "option --{n} requires a value"),
-            CliError::Invalid(n, v, why) => write!(f, "invalid value for --{n}: {v:?} ({why})"),
-            CliError::Help => write!(f, "help requested"),
-        }
-    }
-}
-
-impl std::error::Error for CliError {}
+crate::error_enum_impls!(CliError {
+    CliError::Unknown(n) => ("unknown option --{n} (try --help)"),
+    CliError::MissingValue(n) => ("option --{n} requires a value"),
+    CliError::Invalid(n, v, why) => ("invalid value for --{n}: {v:?} ({why})"),
+    CliError::Help => ("help requested"),
+});
 
 impl Args {
     pub fn new(cmd: &str, about: &'static str) -> Self {

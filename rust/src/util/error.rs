@@ -34,6 +34,66 @@ macro_rules! app_ensure {
     };
 }
 
+/// Implement `Display`, `std::error::Error` (with optional `source`),
+/// and optional `From` conversions for an error enum in one declaration
+/// — replaces the hand-rolled three-impl blocks that every typed error
+/// in the crate used to carry.
+///
+/// ```text
+///     crate::error_enum_impls!(MyError {
+///         MyError::Io(e) => ("my io: {e}"),
+///         MyError::Bad { what, n } => ("bad {what}: {n}"),
+///     }
+///     source { MyError::Io(e) => e }
+///     from { std::io::Error => MyError::Io });
+/// ```
+///
+/// * every Display arm is `pattern => (format args...)`;
+/// * `source { pattern => expr }` arms return `Some(expr)`, everything
+///   else `None` (omit the block for source-less enums);
+/// * `from { Type => constructor }` emits `impl From<Type>`; the
+///   constructor is any callable expression (a variant path or a
+///   closure), invoked as `(ctor)(e)`.
+#[macro_export]
+macro_rules! error_enum_impls {
+    (
+        $ty:ident {
+            $( $pat:pat => ( $($fmt:tt)+ ) ),+ $(,)?
+        }
+        $( source { $( $spat:pat => $src:expr ),+ $(,)? } )?
+        $( from { $( $fty:ty => $ctor:expr ),+ $(,)? } )?
+    ) => {
+        impl std::fmt::Display for $ty {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                match self {
+                    $( $pat => write!(f, $($fmt)+) ),+
+                }
+            }
+        }
+
+        impl std::error::Error for $ty {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                $(
+                    match self {
+                        $( $spat => return Some($src), )+
+                        #[allow(unreachable_patterns)]
+                        _ => {}
+                    }
+                )?
+                None
+            }
+        }
+
+        $( $(
+            impl From<$fty> for $ty {
+                fn from(e: $fty) -> Self {
+                    ($ctor)(e)
+                }
+            }
+        )+ )?
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +125,31 @@ mod tests {
             Ok(())
         }
         assert!(f().unwrap_err().to_string().contains("io boom"));
+    }
+
+    #[derive(Debug)]
+    enum DemoError {
+        Io(std::io::Error),
+        Plain(String),
+        Coded { code: u32 },
+    }
+
+    crate::error_enum_impls!(DemoError {
+        DemoError::Io(e) => ("demo io: {e}"),
+        DemoError::Plain(msg) => ("demo: {msg}"),
+        DemoError::Coded { code } => ("demo code {code}"),
+    }
+    source { DemoError::Io(e) => e }
+    from { std::io::Error => DemoError::Io });
+
+    #[test]
+    fn error_enum_macro_generates_display_source_from() {
+        let e: DemoError = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert_eq!(e.to_string(), "demo io: boom");
+        assert!(std::error::Error::source(&e).is_some());
+        let p = DemoError::Plain("x".into());
+        assert_eq!(p.to_string(), "demo: x");
+        assert!(std::error::Error::source(&p).is_none());
+        assert_eq!(DemoError::Coded { code: 7 }.to_string(), "demo code 7");
     }
 }

@@ -73,19 +73,11 @@ pub enum JsonError {
     MissingKey(String),
 }
 
-impl fmt::Display for JsonError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            JsonError::Parse { pos, msg } => write!(f, "json parse error at byte {pos}: {msg}"),
-            JsonError::Type { expected, found } => {
-                write!(f, "json: expected {expected}, found {found}")
-            }
-            JsonError::MissingKey(k) => write!(f, "json: missing key {k:?}"),
-        }
-    }
-}
-
-impl std::error::Error for JsonError {}
+crate::error_enum_impls!(JsonError {
+    JsonError::Parse { pos, msg } => ("json parse error at byte {pos}: {msg}"),
+    JsonError::Type { expected, found } => ("json: expected {expected}, found {found}"),
+    JsonError::MissingKey(k) => ("json: missing key {k:?}"),
+});
 
 impl Json {
     // ------------------------------------------------------------------

@@ -118,8 +118,9 @@ pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropR
 }
 
 /// Run `cases` random cases of the property; panic with seed + trace on
-/// the first failure.
-pub fn check(cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+/// the first failure.  `FnMut` so properties can thread mutable state
+/// (e.g. a reused scratch arena) across cases.
+pub fn check(cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
     let base_seed = match std::env::var("PROP_SEED") {
         Ok(s) => s.parse::<u64>().expect("PROP_SEED must be u64"),
         Err(_) => 0xBC44_2026,

@@ -67,36 +67,18 @@ pub enum TensorIoError {
     Truncated(String),
 }
 
-impl std::fmt::Display for TensorIoError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            TensorIoError::Io(e) => write!(f, "tensor io: {e}"),
-            TensorIoError::BadMagic => write!(f, "tensor io: bad magic"),
-            TensorIoError::BadVersion(v) => write!(f, "tensor io: unsupported version {v}"),
-            TensorIoError::BadDType(c) => write!(f, "tensor io: unknown dtype code {c}"),
-            TensorIoError::NotFound(n) => write!(f, "tensor io: tensor {n:?} not found"),
-            TensorIoError::DTypeMismatch { name, got, want } => {
-                write!(f, "tensor io: {name:?} has dtype {got}, expected {want}")
-            }
-            TensorIoError::Truncated(n) => write!(f, "tensor io: truncated payload for {n:?}"),
-        }
-    }
+crate::error_enum_impls!(TensorIoError {
+    TensorIoError::Io(e) => ("tensor io: {e}"),
+    TensorIoError::BadMagic => ("tensor io: bad magic"),
+    TensorIoError::BadVersion(v) => ("tensor io: unsupported version {v}"),
+    TensorIoError::BadDType(c) => ("tensor io: unknown dtype code {c}"),
+    TensorIoError::NotFound(n) => ("tensor io: tensor {n:?} not found"),
+    TensorIoError::DTypeMismatch { name, got, want } =>
+        ("tensor io: {name:?} has dtype {got}, expected {want}"),
+    TensorIoError::Truncated(n) => ("tensor io: truncated payload for {n:?}"),
 }
-
-impl std::error::Error for TensorIoError {
-    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
-        match self {
-            TensorIoError::Io(e) => Some(e),
-            _ => None,
-        }
-    }
-}
-
-impl From<std::io::Error> for TensorIoError {
-    fn from(e: std::io::Error) -> Self {
-        TensorIoError::Io(e)
-    }
-}
+source { TensorIoError::Io(e) => e }
+from { std::io::Error => TensorIoError::Io });
 
 impl Tensor {
     pub fn elements(&self) -> usize {

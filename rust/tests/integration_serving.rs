@@ -264,6 +264,82 @@ fn tcp_survives_garbage_bytes_and_answers_structured_errors() {
 }
 
 #[test]
+fn non_finite_pixels_rejected_end_to_end() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let router = engine_router(4);
+    let server = Arc::new(Server::new(
+        router,
+        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+
+    // regression: a full-size payload with one 1e400 pixel used to parse
+    // as f64::INFINITY, cast to f32 inf, produce NaN logits, and argmax
+    // silently answered class 0 ("bus").  Must be a structured error.
+    let mut px: Vec<String> = vec!["0.5".to_string(); 96 * 96 * 3];
+    px[7] = "1e400".to_string();
+    let req = format!("{{\"op\":\"classify\",\"model\":\"rgb\",\"pixels\":[{}]}}\n", px.join(","));
+    conn.write_all(req.as_bytes()).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\": false") || line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("non-finite"), "{line}");
+    assert!(!line.contains("bus"), "NaN logits must not classify: {line}");
+
+    // same guard on the batch op: the poisoned request fails as a whole
+    // at the protocol layer (no image reaches the network)
+    line.clear();
+    let bad_img = format!("[{}]", px.join(","));
+    let req = format!("{{\"op\":\"classify_batch\",\"model\":\"rgb\",\"images\":[{bad_img}]}}\n");
+    conn.write_all(req.as_bytes()).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("non-finite"), "{line}");
+
+    // the session survives and still answers honest requests
+    line.clear();
+    conn.write_all(b"{\"op\":\"classify_synth\",\"model\":\"rgb\",\"index\":1}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("label"), "{line}");
+
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn non_finite_logits_fail_per_image_in_batcher() {
+    // Defense in depth behind the protocol check: a backend that emits
+    // NaN logits (bad artifact, runtime bug) must produce a per-image
+    // error, never a silent class-0 answer.
+    struct NanBackend;
+    impl InferBackend for NanBackend {
+        fn name(&self) -> String {
+            "nan".into()
+        }
+        fn supported_batches(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+        fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+            Ok(vec![f32::NAN; images.len() / (96 * 96 * 3) * 4])
+        }
+    }
+    let router = Router::builder().variant("nan", Arc::new(NanBackend)).build();
+    let resp = router.infer_blocking("nan", synth_image(1)).unwrap();
+    let err = resp.error.expect("NaN logits must surface as an error");
+    assert!(err.contains("non-finite"), "{err}");
+    // the incident shows up in the stats op as a failure, not a completion
+    let snap = router.metrics("nan").unwrap().snapshot();
+    assert_eq!(snap.get("failed").unwrap().as_usize().unwrap(), 1, "{snap}");
+    assert_eq!(snap.get("completed").unwrap().as_usize().unwrap(), 0, "{snap}");
+    router.shutdown();
+}
+
+#[test]
 fn pjrt_backend_serves_through_router() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
