@@ -77,6 +77,7 @@ fn main() -> AppResult<()> {
             .policy(BatchPolicy {
                 max_batch,
                 max_wait: std::time::Duration::from_micros(200),
+                ..BatchPolicy::default()
             })
             .queue_capacity(4096)
             .variant("float", float_be)

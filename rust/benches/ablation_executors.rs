@@ -1,0 +1,91 @@
+//! Multi-executor lane ablation: end-to-end coordinator throughput
+//! (images/sec through router + queue + batcher + backend) as the
+//! executor pool grows, at each batch-formation size.
+//!
+//! The backend runs with ONE engine thread per batch so the curve
+//! isolates what cross-batch concurrency alone buys: executors=1 is the
+//! pre-PR-3 serial lane (batch formation and execution alternate),
+//! executors=N overlaps them.  Expect near-linear scaling at small B
+//! (execution dominates, batches are independent) flattening once
+//! executors × B saturate the host's cores — and no benefit past
+//! `platform::profiles::MAX_AUTO_EXECUTORS` by design.  Runs on
+//! synthetic weights, so no artifacts are required:
+//!
+//!     cargo bench --bench ablation_executors
+//!
+//! Record the table in docs/ARCHITECTURE.md when re-running on a new
+//! host (see "Multi-executor ablation" there).
+
+use std::sync::Arc;
+
+use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_image};
+use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router};
+use bcnn::input::binarize::Scheme;
+
+const IMG: usize = 96 * 96 * 3;
+const TOTAL_IMAGES: usize = 256;
+
+fn run_once(executors: usize, max_batch: usize, pool: &[f32]) -> f64 {
+    let be: Arc<dyn InferBackend> =
+        Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 301), 1));
+    let router = Router::builder()
+        .policy(BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(200),
+            executors,
+        })
+        .queue_capacity(TOTAL_IMAGES * 2)
+        .variant("rgb", be)
+        .build();
+    // warm the arenas and code paths
+    let _ = router.infer_blocking("rgb", pool[..IMG].to_vec());
+    let started = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(TOTAL_IMAGES);
+    for i in 0..TOTAL_IMAGES {
+        let img = pool[i * IMG..(i + 1) * IMG].to_vec();
+        rxs.push(router.submit("rgb", img).expect("admission").1);
+    }
+    for rx in rxs {
+        let resp = rx.recv().expect("lane alive");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let secs = started.elapsed().as_secs_f64();
+    router.shutdown();
+    TOTAL_IMAGES as f64 / secs
+}
+
+fn main() {
+    let pool: Vec<f32> = (0..TOTAL_IMAGES as u64).flat_map(synth_image).collect();
+    let executor_counts = [1usize, 2, 4, 8];
+    let batch_sizes = [1usize, 16, 64];
+
+    println!(
+        "Multi-executor lane ablation — images/sec over {TOTAL_IMAGES} requests \
+         (engine threads per batch = 1)\n"
+    );
+    print!("{:<12}", "executors");
+    for &b in &batch_sizes {
+        print!("{:>12}", format!("B={b}"));
+    }
+    println!("{:>12}", "B=1 spdup");
+    let mut serial_b1 = 0.0;
+    for &e in &executor_counts {
+        print!("{e:<12}");
+        let mut b1 = 0.0;
+        for &b in &batch_sizes {
+            let ips = run_once(e, b, &pool);
+            if b == 1 {
+                b1 = ips;
+                if e == 1 {
+                    serial_b1 = ips;
+                }
+            }
+            print!("{ips:>12.1}");
+        }
+        println!("{:>11.2}x", b1 / serial_b1);
+    }
+    println!(
+        "\nexecutors=1 is the serial lane (batch formation and execution alternate);\n\
+         logits are bit-identical across every cell (integration-tested)."
+    );
+}

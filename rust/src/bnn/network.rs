@@ -373,8 +373,8 @@ impl BcnnNetwork {
         }
         let px = IMG_H * IMG_W;
         let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
-        let ForwardScratch { xb, gray, cols_p, counts, words, pooled, cols_f, act_f, h_a, h_b, .. } =
-            scratch;
+        let ForwardScratch { xb, gray, cols_p, counts, words, pooled, cols_f, act_f, .. } =
+            &mut *scratch;
 
         // --- conv1 over the whole batch ----------------------------------
         // (`words` carries conv1's threshold-packed activations)
@@ -407,6 +407,12 @@ impl BcnnNetwork {
             Self::threshold_pack_into(counts, &self.theta1, &self.flip1, n * px, words);
         }
         maxpool::orpool2x2_batch_into(words, n, IMG_H, IMG_W, 1, pooled).map_err(bad)?;
+
+        // counts/words/pooled peak at conv1/pool1 and shrink from here on;
+        // sample for the decay window before conv2 resizes them (cols_p
+        // peaks at conv2's gather and is caught by end_batch's sample)
+        scratch.note_batch_peaks();
+        let ForwardScratch { cols_p, counts, words, pooled, h_a, h_b, .. } = &mut *scratch;
 
         // --- conv2 over the whole batch ----------------------------------
         // conv1's patch rows (`cols_p`) and counts are dead once `words`
@@ -442,6 +448,7 @@ impl BcnnNetwork {
         for i in 0..n {
             out.push(self.float_tail_into(&counts[i * FC1_OUT..(i + 1) * FC1_OUT], h_a, h_b));
         }
+        scratch.end_batch(); // decay bookkeeping (no-op unless enabled)
         Ok(out)
     }
 
@@ -571,7 +578,7 @@ impl FloatNetwork {
         }
         let px = IMG_H * IMG_W;
         let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
-        let ForwardScratch { cols_f, act_f, pool_f, h_a, h_b, .. } = scratch;
+        let ForwardScratch { cols_f, act_f, pool_f, .. } = &mut *scratch;
 
         im2col::im2col_float_batch_into(images, n, IMG_H, IMG_W, IMG_C, K, cols_f);
         act_f.resize(n * px * CONV1_OUT, 0.0); // the GEMM assigns every element
@@ -579,6 +586,12 @@ impl FloatNetwork {
         float_ops::add_bias(act_f, &self.b1);
         float_ops::relu(act_f);
         maxpool::maxpool2x2_batch_into(act_f, n, IMG_H, IMG_W, CONV1_OUT, pool_f).map_err(bad)?;
+
+        // act_f/pool_f peak at conv1/pool1 and shrink from here on; sample
+        // for the decay window before conv2 resizes them (cols_f peaks at
+        // conv2's gather and is caught by end_batch's sample)
+        scratch.note_batch_peaks();
+        let ForwardScratch { cols_f, act_f, pool_f, h_a, h_b, .. } = &mut *scratch;
 
         // conv1's patch rows and activations are dead once pool1 is
         // written, so `cols_f` and `act_f` are reused for conv2
@@ -613,6 +626,7 @@ impl FloatNetwork {
             fc::fc_float_bias_into(h_b, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT, &mut logits);
             out.push(logits);
         }
+        scratch.end_batch(); // decay bookkeeping (no-op unless enabled)
         Ok(out)
     }
 

@@ -16,8 +16,13 @@
 //! accumulating (zero for float/word im2col padding, `NEG_INFINITY` for
 //! max-pool) — so a scratch reused across batches of different sizes, or
 //! even across different networks and schemes, can never leak state
-//! between calls (property-tested below).  Buffer capacity only grows
-//! (monotone high-water mark sized by the largest batch seen).
+//! between calls (property-tested below).  By default buffer capacity
+//! only grows (monotone high-water mark sized by the largest batch
+//! seen); long-lived serving workers opt into a **decay policy**
+//! ([`ForwardScratch::with_decay`]) that shrinks the arena back to the
+//! high-water mark of the last N batches every N batches, so a worker
+//! that once saw B=64 doesn't pin that memory forever once traffic
+//! settles back to B=1 (decay never changes outputs — property-tested).
 
 /// Reusable buffers for one in-flight `infer_batch_with` call.
 ///
@@ -48,11 +53,135 @@ pub struct ForwardScratch {
     /// FC-tail hidden activations (per image).
     pub(crate) h_a: Vec<f32>,
     pub(crate) h_b: Vec<f32>,
+    /// Decay policy: shrink every `decay_after` batches back to the
+    /// window's per-buffer high-water marks.  `0` disables decay (the
+    /// default — ad-hoc arenas and benches keep the pure monotone
+    /// high-water behavior).
+    decay_after: usize,
+    /// Per-buffer peak `len()` observed in the current decay window,
+    /// in field-declaration order.
+    window_peaks: [usize; NUM_BUFFERS],
+    /// Batches completed since the last decay check.
+    batches_since_decay: usize,
+}
+
+/// Number of role-named buffers in the arena (the `Vec` fields of
+/// [`ForwardScratch`], in declaration order).
+const NUM_BUFFERS: usize = 11;
+
+/// The decay bookkeeping views every buffer through one vtable so the
+/// field list lives in exactly one place ([`ForwardScratch::buffers_mut`])
+/// instead of being hand-synced across peak sampling and shrinking.
+trait DecayBuf {
+    fn len(&self) -> usize;
+    fn shrink_to_peak(&mut self, peak: usize);
+}
+
+impl<T> DecayBuf for Vec<T> {
+    fn len(&self) -> usize {
+        Vec::len(self)
+    }
+    fn shrink_to_peak(&mut self, peak: usize) {
+        // `shrink_to` keeps capacity ≥ max(len, peak): the buffer ends
+        // the window able to hold exactly its window high-water mark, so
+        // under steady traffic the next batches fit without reallocating
+        if self.capacity() > peak {
+            self.shrink_to(peak);
+        }
+    }
 }
 
 impl ForwardScratch {
+    /// Every role-named buffer, in `window_peaks` index order — THE
+    /// single field list the decay machinery iterates.  The
+    /// `NUM_BUFFERS` array length makes the compiler reject a buffer
+    /// added to the struct and counted, but missing here (and a
+    /// too-short `window_peaks` can't silently truncate a `zip`).
+    fn buffers_mut(&mut self) -> [&mut dyn DecayBuf; NUM_BUFFERS] {
+        [
+            &mut self.xb,
+            &mut self.gray,
+            &mut self.cols_p,
+            &mut self.counts,
+            &mut self.words,
+            &mut self.pooled,
+            &mut self.cols_f,
+            &mut self.act_f,
+            &mut self.pool_f,
+            &mut self.h_a,
+            &mut self.h_b,
+        ]
+    }
+
+    /// Decay window used by serving workers ([`crate::coordinator::backend::EngineBackend`]'s
+    /// arena pool): after this many batches, capacity not touched within
+    /// the window is released.  Large enough that a transient dip in
+    /// batch size doesn't thrash the allocator; small enough that a
+    /// one-off B=64 burst stops pinning ~megabytes within a second of
+    /// steady B=1 traffic.
+    pub const SERVING_DECAY_BATCHES: usize = 64;
+
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// An arena with the decay policy enabled: every `decay_after`
+    /// batches, each buffer's capacity shrinks to the largest size that
+    /// buffer actually reached within the window.  `0` disables decay.
+    pub fn with_decay(decay_after: usize) -> Self {
+        Self { decay_after, ..Self::default() }
+    }
+
+    /// Fold the buffers' current `len()`s into the window's per-buffer
+    /// peaks.  A single end-of-batch sample would under-read: the
+    /// forward resizes several buffers *down* as it proceeds (conv1's
+    /// spatial extent is 4× conv2's, and the FC tail is smaller still).
+    /// So the networks sample twice — once **after pool1** (where the
+    /// conv1-peaking buffers — counts, words, pooled, act_f — hold their
+    /// largest extent) and once from [`ForwardScratch::end_batch`]
+    /// (which catches the buffers whose *last* resize is their largest:
+    /// the conv2 patch-row gathers `cols_p`/`cols_f`, and the constant
+    /// FC tails).  The max of both samples is the true per-batch
+    /// high-water mark for every buffer.
+    pub(crate) fn note_batch_peaks(&mut self) {
+        if self.decay_after == 0 {
+            return;
+        }
+        let mut peaks = self.window_peaks;
+        for (peak, buf) in peaks.iter_mut().zip(self.buffers_mut()) {
+            *peak = (*peak).max(buf.len());
+        }
+        self.window_peaks = peaks;
+    }
+
+    /// Mark the end of one `infer_batch_with` call and run the decay
+    /// policy.  Called by the networks after every batched forward; a
+    /// no-op unless decay is enabled.
+    ///
+    /// Correctness: decay only ever *releases capacity* — it truncates a
+    /// buffer to a length every `_into` kernel will overwrite (each
+    /// kernel resizes its output to the exact size it needs and assigns
+    /// or identity-fills the whole range before reading), so shrinking
+    /// can never change results (property-tested below).  Under steady
+    /// traffic the window peak equals the shrunk capacity, so the decay
+    /// check is a no-op and the zero-allocation steady state is
+    /// preserved; only after the load genuinely drops does a shrink (and
+    /// the one regrow on the next larger batch) happen.
+    pub(crate) fn end_batch(&mut self) {
+        if self.decay_after == 0 {
+            return;
+        }
+        self.note_batch_peaks();
+        self.batches_since_decay += 1;
+        if self.batches_since_decay < self.decay_after {
+            return;
+        }
+        let peaks = self.window_peaks;
+        for (peak, buf) in peaks.into_iter().zip(self.buffers_mut()) {
+            buf.shrink_to_peak(peak);
+        }
+        self.window_peaks = [0; NUM_BUFFERS];
+        self.batches_since_decay = 0;
     }
 
     /// Total elements currently reserved across all buffers — the arena's
@@ -169,6 +298,96 @@ mod tests {
                 assert_eq!(b[i], bnet.forward(&xs[i * IMG..(i + 1) * IMG]).0);
                 assert_eq!(f[i], fnet.forward(&xs[i * IMG..(i + 1) * IMG]).0);
             }
+        }
+    }
+
+    #[test]
+    fn decay_never_changes_outputs() {
+        // the satellite property: an aggressively-decaying arena (window
+        // of 2, so it shrinks constantly while batch sizes jump around)
+        // stays bit-identical to a fresh arena and to the single-image
+        // forward, across schemes and the float network
+        let nets: Vec<_> = Scheme::ALL.iter().map(|&s| synth_bcnn_network(s, 91)).collect();
+        let fnet = synth_float_network(92);
+        let mut decaying = ForwardScratch::with_decay(2);
+        prop::check(16, |g| {
+            let n = g.usize_in(1, 6);
+            let xs = images(n, g.u64());
+            let (with_decay, with_fresh) = if g.usize_in(0, 3) == 0 {
+                (
+                    fnet.infer_batch_with(&xs, &mut decaying).unwrap(),
+                    fnet.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap(),
+                )
+            } else {
+                let net = g.pick(&nets);
+                (
+                    net.infer_batch_with(&xs, &mut decaying).unwrap(),
+                    net.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap(),
+                )
+            };
+            ensure_eq(with_decay, with_fresh, "decaying arena == fresh arena")
+        });
+    }
+
+    #[test]
+    fn decay_releases_capacity_after_burst() {
+        // a B=8 burst grows the arena; once a full decay window passes
+        // with only B=1 traffic, the burst capacity must be released
+        let net = synth_bcnn_network(Scheme::Rgb, 93);
+        let mut scratch = ForwardScratch::with_decay(4);
+        net.infer_batch_with(&images(8, 1), &mut scratch).unwrap();
+        let burst_cap = scratch.capacity_elems();
+        for round in 0..8u64 {
+            net.infer_batch_with(&images(1, 100 + round), &mut scratch).unwrap();
+        }
+        let settled_cap = scratch.capacity_elems();
+        assert!(
+            settled_cap < burst_cap,
+            "decay never released the burst: {settled_cap} >= {burst_cap}"
+        );
+        // and the settled arena still answers correctly
+        let xs = images(2, 7);
+        let got = net.infer_batch_with(&xs, &mut scratch).unwrap();
+        for i in 0..2 {
+            assert_eq!(got[i], net.forward(&xs[i * IMG..(i + 1) * IMG]).0);
+        }
+    }
+
+    #[test]
+    fn decay_is_noop_under_steady_traffic() {
+        // regression (code review): sampling only end-of-batch len() under-
+        // read the buffers the forward resizes downward (counts, words,
+        // pooled peak at conv1), so decay shrank them below their working
+        // size and every window reallocated them.  With two-point peak
+        // sampling + shrink_to, capacity must settle and then hold exactly
+        // steady across further decay windows under constant load.
+        let net = synth_bcnn_network(Scheme::Rgb, 95);
+        let mut scratch = ForwardScratch::with_decay(3);
+        for round in 0..7u64 {
+            net.infer_batch_with(&images(2, 300 + round), &mut scratch).unwrap();
+        }
+        let settled = scratch.capacity_elems();
+        for round in 0..6u64 {
+            net.infer_batch_with(&images(2, 400 + round), &mut scratch).unwrap();
+            assert_eq!(
+                scratch.capacity_elems(),
+                settled,
+                "round {round}: decay churned capacity under steady load"
+            );
+        }
+    }
+
+    #[test]
+    fn decay_disabled_keeps_monotone_high_water() {
+        // ForwardScratch::new() must keep the PR 2 contract: capacity
+        // never shrinks, no realloc churn for ad-hoc arenas
+        let net = synth_bcnn_network(Scheme::Gray, 94);
+        let mut scratch = ForwardScratch::new();
+        net.infer_batch_with(&images(6, 1), &mut scratch).unwrap();
+        let high = scratch.capacity_elems();
+        for round in 0..6u64 {
+            net.infer_batch_with(&images(1, 200 + round), &mut scratch).unwrap();
+            assert_eq!(scratch.capacity_elems(), high, "round {round} reallocated");
         }
     }
 

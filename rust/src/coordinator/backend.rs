@@ -46,8 +46,12 @@ pub struct EngineBackend {
     /// Checked-out-and-returned forward arenas, one per concurrent
     /// worker: a worker pops one for the duration of its chunk and pushes
     /// it back, so steady-state inference allocates no intermediate
-    /// tensors (the pool grows to at most `threads` arenas, each sized by
-    /// the largest per-worker chunk seen).
+    /// tensors (the pool grows to at most `threads × executors` arenas,
+    /// each sized by the largest per-worker chunk seen).  Arenas carry
+    /// the serving decay policy: every
+    /// [`ForwardScratch::SERVING_DECAY_BATCHES`] batches an arena shrinks
+    /// back to the window's high-water mark, so a worker that once served
+    /// a B=64 burst stops pinning that memory under steady B=1 traffic.
     scratch_pool: Mutex<Vec<ForwardScratch>>,
 }
 
@@ -97,7 +101,12 @@ impl InferBackend for EngineBackend {
         // tensors.
         let run = |lo: usize, hi: usize| -> Result<Vec<[f32; NUM_CLASSES]>, String> {
             let xs = &images[lo * IMG_ELEMS..hi * IMG_ELEMS];
-            let mut scratch = self.scratch_pool.lock().unwrap().pop().unwrap_or_default();
+            let mut scratch = self
+                .scratch_pool
+                .lock()
+                .unwrap()
+                .pop()
+                .unwrap_or_else(|| ForwardScratch::with_decay(ForwardScratch::SERVING_DECAY_BATCHES));
             let result = match &self.model {
                 EngineModel::Bcnn(m) => m.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string()),
                 EngineModel::Float(m) => m.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string()),

@@ -1,6 +1,17 @@
 //! Dynamic batcher: drains the admission queue under a size+deadline
 //! policy, plans backend-executable batch sizes, runs the backend, and
 //! fans responses back out.
+//!
+//! A lane is a **multi-executor pool**: `BatchPolicy::executors` worker
+//! threads drain the same admission queue concurrently, so batch
+//! formation overlaps with execution and several batches for the same
+//! model variant can be in flight at once (the coordinator-level
+//! serialization FINN frames as the real scaling problem for BNN
+//! inference).  The queue is MPMC, so each drained request lands in
+//! exactly one executor's batch; per-request response channels make
+//! fan-out order-independent, and per-image logits are bit-identical
+//! regardless of which executor (or batch) a request rides in
+//! (integration-tested against the serial lane).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -19,11 +30,18 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// How long to hold an open batch waiting for more requests.
     pub max_wait: Duration,
+    /// Batched workers per lane (clamped to ≥ 1).  With N > 1, batch
+    /// formation overlaps with execution: while one executor runs a
+    /// batch, the others keep draining the queue, so a long batch never
+    /// stalls admission.  Requests may then complete out of submission
+    /// order — ids and per-request channels keep the fan-out correct,
+    /// and `classify_batch_stream` exposes the reordering to clients.
+    pub executors: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 1, max_wait: Duration::from_micros(200) }
+        Self { max_batch: 1, max_wait: Duration::from_micros(200), executors: 1 }
     }
 }
 
@@ -53,17 +71,19 @@ pub fn plan_batches(n: usize, supported: &[usize]) -> Vec<(usize, usize)> {
     plan
 }
 
-/// The batcher thread bundle.
+/// The batcher executor pool for one lane.
 pub struct Batcher {
-    handle: Option<std::thread::JoinHandle<()>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
     stop: Arc<AtomicBool>,
-    /// Kept so `drop` can close the queue and wake a blocked `pop_wait`
-    /// (otherwise joining the thread would deadlock).
+    /// Kept so `drop` can close the queue and wake blocked `pop_wait`s
+    /// (otherwise joining the threads would deadlock).
     queue: Arc<BoundedQueue<InferRequest>>,
 }
 
 impl Batcher {
-    /// Start a batcher draining `queue` into `backend`.
+    /// Start `policy.executors` batched workers draining `queue` into
+    /// `backend`.  Each executor owns its padded-payload buffer; the
+    /// shared MPMC queue hands every request to exactly one of them.
     pub fn spawn(
         queue: Arc<BoundedQueue<InferRequest>>,
         backend: Arc<dyn InferBackend>,
@@ -71,25 +91,33 @@ impl Batcher {
         metrics: Arc<Metrics>,
     ) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let queue2 = Arc::clone(&queue);
-        let handle = std::thread::Builder::new()
-            .name("batcher".into())
-            .spawn(move || {
-                let supported = backend.supported_batches();
-                // the lane's padded-payload buffer, reused across batches
-                // (grows to the largest executed batch, then stays put)
-                let mut payload: Vec<f32> = Vec::new();
-                while !stop2.load(Ordering::Relaxed) {
-                    let batch = queue2.drain_batch(policy.max_batch, policy.max_wait);
-                    if batch.is_empty() {
-                        break; // queue closed and drained
+        let executors = policy.executors.max(1);
+        let mut handles = Vec::with_capacity(executors);
+        for e in 0..executors {
+            let stop2 = Arc::clone(&stop);
+            let queue2 = Arc::clone(&queue);
+            let backend2 = Arc::clone(&backend);
+            let metrics2 = Arc::clone(&metrics);
+            let handle = std::thread::Builder::new()
+                .name(format!("batcher-{e}"))
+                .spawn(move || {
+                    let supported = backend2.supported_batches();
+                    // this executor's padded-payload buffer, reused across
+                    // batches (grows to the largest executed batch, then
+                    // stays put)
+                    let mut payload: Vec<f32> = Vec::new();
+                    while !stop2.load(Ordering::Relaxed) {
+                        let batch = queue2.drain_batch(policy.max_batch, policy.max_wait);
+                        if batch.is_empty() {
+                            break; // queue closed and drained
+                        }
+                        Self::run_batch(batch, &*backend2, &supported, &metrics2, &mut payload);
                     }
-                    Self::run_batch(batch, &*backend, &supported, &metrics, &mut payload);
-                }
-            })
-            .expect("spawn batcher");
-        Self { handle: Some(handle), stop, queue }
+                })
+                .expect("spawn batcher");
+            handles.push(handle);
+        }
+        Self { handles, stop, queue }
     }
 
     fn run_batch(
@@ -156,15 +184,20 @@ impl Batcher {
         }
     }
 
-    /// Signal the thread and wait for it to drain.
+    /// Signal every executor and wait for them to drain.
     pub fn join(mut self) {
         self.shutdown();
     }
 
+    /// Number of executor threads in this lane's pool.
+    pub fn executors(&self) -> usize {
+        self.handles.len()
+    }
+
     fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        self.queue.close(); // wakes a blocked pop_wait
-        if let Some(h) = self.handle.take() {
+        self.queue.close(); // wakes every blocked pop_wait
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -180,6 +213,80 @@ impl Drop for Batcher {
 mod tests {
     use super::*;
     use crate::util::prop::{self, ensure};
+
+    /// Echoes each image's first pixel into logit 0, so a response can be
+    /// matched back to the request that produced it regardless of which
+    /// executor or batch it rode in.
+    struct EchoBackend;
+
+    impl InferBackend for EchoBackend {
+        fn name(&self) -> String {
+            "echo".into()
+        }
+        fn supported_batches(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+        fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+            let n = images.len() / IMG_ELEMS;
+            let mut out = vec![0.0; n * NUM_CLASSES];
+            for i in 0..n {
+                out[i * NUM_CLASSES] = images[i * IMG_ELEMS];
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn multi_executor_pool_answers_every_request_exactly_once() {
+        let queue = Arc::new(BoundedQueue::new(256));
+        let metrics = Arc::new(Metrics::new());
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            executors: 4,
+        };
+        let batcher = Batcher::spawn(
+            Arc::clone(&queue),
+            Arc::new(EchoBackend),
+            policy,
+            Arc::clone(&metrics),
+        );
+        assert_eq!(batcher.executors(), 4);
+        let mut rxs = Vec::new();
+        for i in 0..48u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let mut image = vec![0.0f32; IMG_ELEMS];
+            image[0] = i as f32;
+            queue
+                .try_push(InferRequest { id: i, image, enqueued: Instant::now(), resp: tx })
+                .unwrap();
+            rxs.push((i, rx));
+        }
+        // every request is answered on its own channel with its own
+        // payload, no matter which of the 4 executors ran it
+        for (i, rx) in rxs {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none());
+            assert_eq!(resp.id, i);
+            assert_eq!(resp.logits[0], i as f32);
+        }
+        assert_eq!(metrics.completed(), 48);
+        batcher.join();
+    }
+
+    #[test]
+    fn zero_executors_clamps_to_one() {
+        let queue = Arc::new(BoundedQueue::new(4));
+        let policy = BatchPolicy { executors: 0, ..BatchPolicy::default() };
+        let batcher = Batcher::spawn(
+            Arc::clone(&queue),
+            Arc::new(EchoBackend),
+            policy,
+            Arc::new(Metrics::new()),
+        );
+        assert_eq!(batcher.executors(), 1);
+        batcher.join();
+    }
 
     #[test]
     fn plan_exact_fit() {

@@ -14,6 +14,11 @@ struct Counters {
     failed: u64,
     batches: u64,
     batched_requests: u64,
+    /// `classify_batch_stream` sessions opened against this lane.
+    streams: u64,
+    /// Per-image frames emitted by those sessions (success + failure,
+    /// excluding the terminal summary frame).
+    stream_frames: u64,
 }
 
 /// Thread-safe metrics hub shared by admission, batcher, and server.
@@ -70,6 +75,16 @@ impl Metrics {
         self.counters.lock().unwrap().failed += size as u64;
     }
 
+    /// Called once per `classify_batch_stream` request against this lane.
+    pub fn record_stream(&self) {
+        self.counters.lock().unwrap().streams += 1;
+    }
+
+    /// Called per per-image frame a stream session emits.
+    pub fn record_stream_frame(&self) {
+        self.counters.lock().unwrap().stream_frames += 1;
+    }
+
     pub fn completed(&self) -> u64 {
         self.counters.lock().unwrap().completed
     }
@@ -89,6 +104,8 @@ impl Metrics {
             0.0
         };
         obj.insert("mean_batch_size", Json::from(mean_batch));
+        obj.insert("streams", Json::from(c.streams as usize));
+        obj.insert("stream_frames", Json::from(c.stream_frames as usize));
         drop(c);
         for (name, hist) in [
             ("queue_us", &self.queue_hist),
@@ -129,6 +146,17 @@ mod tests {
         assert_eq!(e2e.get("count").unwrap().as_usize().unwrap(), 1);
         let mean = e2e.get("mean").unwrap().as_f64().unwrap();
         assert!((mean - 200.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn stream_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.record_stream();
+        m.record_stream_frame();
+        m.record_stream_frame();
+        let snap = m.snapshot();
+        assert_eq!(snap.get("streams").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(snap.get("stream_frames").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

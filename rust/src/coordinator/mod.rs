@@ -4,11 +4,13 @@
 //! generalized to a serving loop):
 //!
 //! ```text
-//!  client ──submit──▶ admission (bounded queue, backpressure)
-//!                       │
-//!                  batcher thread (size + deadline policy)
-//!                       │ batches
-//!                  backend: pure-Rust engine (parallel workers)
+//!  client ──submit──▶ admission (bounded MPMC queue, backpressure)
+//!                       │            │
+//!                  batcher-0 … batcher-N   (one lane = an executor pool;
+//!                       │            │      size + deadline policy each)
+//!                       │ batches    │ batches  — concurrently in flight
+//!                  backend: pure-Rust engine (parallel workers,
+//!                           pooled ForwardScratch arenas w/ decay)
 //!                           or PJRT executor thread (HLO artifacts)
 //!                       │ logits
 //!                  response channels + metrics (latency histograms)
@@ -34,6 +36,17 @@
 //! can opt whole groups of images in via the `classify_batch` protocol
 //! op, which `Router::infer_blocking_batch` submits back-to-back so the
 //! batcher can coalesce them.
+//!
+//! With `BatchPolicy::executors > 1` a lane runs several batched
+//! workers against its queue, so batch formation overlaps execution and
+//! multiple batches per variant are in flight concurrently (see
+//! `benches/ablation_executors.rs`); requests may then complete out of
+//! submission order.  Blocking entry points re-order by request id;
+//! `Router::submit_group` exposes completion order on one shared
+//! channel, which is what the server's `classify_batch_stream` op
+//! streams to clients frame by frame.  The full request lifecycle is
+//! diagrammed in `docs/ARCHITECTURE.md`, the wire format in
+//! `docs/PROTOCOL.md`.
 
 pub mod backend;
 pub mod batcher;
@@ -47,4 +60,4 @@ pub use batcher::{plan_batches, BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use queue::BoundedQueue;
 pub use request::{InferRequest, InferResponse, RequestId};
-pub use router::Router;
+pub use router::{GroupSlot, GroupSubmission, Router};

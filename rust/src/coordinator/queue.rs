@@ -196,6 +196,34 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_drain_partitions_items_exactly_once() {
+        // the multi-executor contract: several workers draining the same
+        // queue receive disjoint batches that together cover every item
+        let q = Arc::new(BoundedQueue::new(256));
+        for i in 0..96 {
+            q.try_push(i).unwrap();
+        }
+        q.close(); // drained workers exit instead of blocking
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let q2 = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    let b = q2.drain_batch(8, Duration::from_millis(1));
+                    if b.is_empty() {
+                        return got;
+                    }
+                    got.extend(b);
+                }
+            }));
+        }
+        let mut all: Vec<i32> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..96).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn pop_wait_blocks_until_push() {
         let q = Arc::new(BoundedQueue::new(4));
         let q2 = Arc::clone(&q);

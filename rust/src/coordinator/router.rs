@@ -39,6 +39,45 @@ struct Lane {
     _batcher: Batcher,
 }
 
+/// One image's slot in a group submission.  Every slot owns a real,
+/// distinct request id — including images that never reached the queue
+/// (validation or admission failure), so failure frames can always name
+/// the request they answer.
+pub struct GroupSlot {
+    pub id: RequestId,
+    /// Set when the image never entered the lane (bad payload, parse
+    /// rejection carried in by the caller, admission backpressure, …).
+    /// `None` means a response for `id` will arrive on the group channel.
+    pub error: Option<String>,
+}
+
+impl GroupSlot {
+    /// Whether a response for this slot will arrive on the group channel.
+    pub fn submitted(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// A whole group submitted onto one shared response channel.
+///
+/// `rx` yields responses in **completion order**, not submission order —
+/// with multi-executor lanes a later image can finish first.  Match
+/// responses back to slots by `InferResponse::id`.  Dropping `rx` is
+/// safe at any point: executors send into a disconnected channel without
+/// blocking or failing the lane.
+pub struct GroupSubmission {
+    pub slots: Vec<GroupSlot>,
+    pub rx: mpsc::Receiver<InferResponse>,
+}
+
+impl GroupSubmission {
+    /// How many responses the group channel will deliver (slots that
+    /// were actually admitted).
+    pub fn pending(&self) -> usize {
+        self.slots.iter().filter(|s| s.submitted()).count()
+    }
+}
+
 /// Multi-variant serving router.
 pub struct Router {
     lanes: HashMap<String, Lane>,
@@ -82,20 +121,32 @@ impl Router {
         variant: &str,
         image: Vec<f32>,
     ) -> Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_sender(id, variant, image, tx)?;
+        Ok((id, rx))
+    }
+
+    /// Submission onto a caller-owned response channel — the group/stream
+    /// path shares ONE channel across a whole request group, so responses
+    /// arrive in **completion order** (a fast image's response is
+    /// available before a slow peer finishes, even mid-group).
+    fn submit_with_sender(
+        &self,
+        id: RequestId,
+        variant: &str,
+        image: Vec<f32>,
+        resp: mpsc::Sender<InferResponse>,
+    ) -> Result<(), RouteError> {
         if image.len() != IMG_ELEMS {
             return Err(RouteError::BadPayload(image.len()));
         }
         let lane = self.lane(variant)?;
-        let (tx, rx) = mpsc::channel();
         lane.metrics.record_submit();
-        let req = InferRequest { id, image, enqueued: Instant::now(), resp: tx };
-        match lane.queue.try_push(req) {
-            Ok(()) => Ok((id, rx)),
-            Err(e) => {
-                lane.metrics.record_reject();
-                Err(RouteError::Rejected(e))
-            }
-        }
+        let req = InferRequest { id, image, enqueued: Instant::now(), resp };
+        lane.queue.try_push(req).map_err(|e| {
+            lane.metrics.record_reject();
+            RouteError::Rejected(e)
+        })
     }
 
     /// Submit and block for the response (convenience for CLI paths).
@@ -110,37 +161,74 @@ impl Router {
         rx.recv().map_err(|_| RouteError::BackendGone)
     }
 
-    /// Submit a whole batch of images to one variant's lane back-to-back,
-    /// then block for every response (in submission order).  Because the
-    /// images hit the admission queue together, the dynamic batcher can
-    /// drain them into a single backend call (up to `BatchPolicy::max_batch`)
-    /// — this is the serving entry point for the batched forward path.
+    /// Submit a whole group of images to one variant's lane back-to-back
+    /// onto ONE shared response channel.  Because the images hit the
+    /// admission queue together, the dynamic batcher can drain them into
+    /// batched backend calls (up to `BatchPolicy::max_batch`), and with
+    /// multi-executor lanes several of those batches execute
+    /// concurrently.  This is the entry point for both `classify_batch`
+    /// (which blocks for the whole group) and `classify_batch_stream`
+    /// (which forwards each response as it completes).
     ///
-    /// Errors stay per-image (`InferResponse::failed`): a mid-batch
-    /// admission rejection must not discard the results of images already
-    /// submitted and executing.
+    /// `images` entries may carry an upstream per-image error (e.g. a
+    /// non-finite pixel caught at protocol parse); those get a real
+    /// request id and an errored slot without touching the lane.
+    /// Errors stay per-image: a mid-group rejection must not discard the
+    /// results of images already submitted and executing.
+    pub fn submit_group(
+        &self,
+        variant: &str,
+        images: Vec<Result<Vec<f32>, String>>,
+    ) -> GroupSubmission {
+        let (tx, rx) = mpsc::channel();
+        // submit everything first so the batcher sees the whole group;
+        // each image gets its id up front so a failed submission still
+        // reports a real id (regression: failures used to answer id 0)
+        let slots = images
+            .into_iter()
+            .map(|img| {
+                let id = self.alloc_id();
+                let error = match img {
+                    Err(reason) => Some(reason),
+                    Ok(image) => self
+                        .submit_with_sender(id, variant, image, tx.clone())
+                        .err()
+                        .map(|e| e.to_string()),
+                };
+                GroupSlot { id, error }
+            })
+            .collect();
+        GroupSubmission { slots, rx }
+    }
+
+    /// Submit a whole batch of images to one variant's lane, then block
+    /// for every response and return them in **submission order** (the
+    /// `classify_batch` contract; responses are matched back to slots by
+    /// id, so out-of-order completion under multi-executor lanes is
+    /// invisible here).
     pub fn infer_blocking_batch(
         &self,
         variant: &str,
         images: Vec<Vec<f32>>,
     ) -> Vec<InferResponse> {
-        // submit everything first so the batcher sees the whole group;
-        // each image gets its id up front so a failed submission still
-        // reports a real id (regression: failures used to answer id 0)
-        let rxs: Vec<(RequestId, Result<mpsc::Receiver<InferResponse>, RouteError>)> = images
+        let group = self.submit_group(variant, images.into_iter().map(Ok).collect());
+        let mut by_id: HashMap<RequestId, InferResponse> = HashMap::new();
+        for _ in 0..group.pending() {
+            match group.rx.recv() {
+                Ok(resp) => {
+                    by_id.insert(resp.id, resp);
+                }
+                Err(_) => break, // lane died; remaining slots fail below
+            }
+        }
+        group
+            .slots
             .into_iter()
-            .map(|img| {
-                let id = self.alloc_id();
-                (id, self.submit_with_id(id, variant, img).map(|(_, rx)| rx))
-            })
-            .collect();
-        // ...then collect, mapping failures per-image
-        rxs.into_iter()
-            .map(|(id, r)| match r {
-                Err(e) => InferResponse::failed(id, e.to_string()),
-                Ok(rx) => rx
-                    .recv()
-                    .unwrap_or_else(|_| InferResponse::failed(id, RouteError::BackendGone.to_string())),
+            .map(|slot| match slot.error {
+                Some(e) => InferResponse::failed(slot.id, e),
+                None => by_id.remove(&slot.id).unwrap_or_else(|| {
+                    InferResponse::failed(slot.id, RouteError::BackendGone.to_string())
+                }),
             })
             .collect()
     }
@@ -282,7 +370,11 @@ mod tests {
     #[test]
     fn many_concurrent_requests_all_complete() {
         let r = Arc::new(test_router(
-            BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(2) },
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(2),
+                ..BatchPolicy::default()
+            },
             256,
         ));
         let mut handles = Vec::new();
@@ -315,6 +407,37 @@ mod tests {
         assert_ne!(resps[2].id, 0);
         // ids follow submission order, distinct per image
         assert!(resps[0].id < resps[1].id && resps[1].id < resps[2].id);
+        r.shutdown();
+    }
+
+    #[test]
+    fn submit_group_slots_carry_upstream_errors_and_real_ids() {
+        let r = test_router(BatchPolicy::default(), 64);
+        let group = r.submit_group(
+            "bcnn_rgb",
+            vec![
+                Ok(image(11)),
+                Err("non-finite pixel".to_string()), // parse-layer reject
+                Ok(vec![0.0; 9]),                    // bad payload
+                Ok(image(12)),
+            ],
+        );
+        assert_eq!(group.slots.len(), 4);
+        assert_eq!(group.pending(), 2);
+        assert!(group.slots[0].submitted() && group.slots[3].submitted());
+        assert_eq!(group.slots[1].error.as_deref(), Some("non-finite pixel"));
+        assert!(group.slots[2].error.as_ref().unwrap().contains("payload"));
+        // every slot owns a real, distinct, ascending id — failures too
+        for w in group.slots.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+        // the shared channel delivers exactly the admitted responses,
+        // ids matching the submitted slots
+        let mut got = vec![group.rx.recv().unwrap(), group.rx.recv().unwrap()];
+        got.sort_by_key(|resp| resp.id);
+        assert_eq!(got[0].id, group.slots[0].id);
+        assert_eq!(got[1].id, group.slots[3].id);
+        assert!(got.iter().all(|resp| resp.error.is_none()));
         r.shutdown();
     }
 

@@ -99,20 +99,35 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
         .opt("batch-window-us", "200", "batch window in microseconds")
         .opt("queue-cap", "1024", "admission queue capacity")
         .opt("threads", "0", "engine worker threads (0 = all cores)")
+        .opt("executors", "0", "batched workers per lane (0 = auto from host profile)")
         .parse(raw)?;
     let dir = a.get("artifacts");
     let threads = match a.get_usize("threads")? {
         0 => default_threads(),
         n => n,
     };
+    let variants: Vec<String> = a
+        .get("variants")
+        .split(',')
+        .filter(|v| !v.is_empty())
+        .map(str::to_string)
+        .collect();
+    // auto-size from the operator's core budget: `threads` is
+    // default_threads() unless --threads capped it, and the cap must
+    // bound executor spawning too
+    let executors = match a.get_usize_in("executors", 0, 64)? {
+        0 => bcnn::platform::profiles::recommended_executors(threads, variants.len()),
+        n => n,
+    };
     let policy = BatchPolicy {
         max_batch: a.get_usize("max-batch")?,
         max_wait: std::time::Duration::from_micros(a.get_u64("batch-window-us")?),
+        executors,
     };
     let mut builder = Router::builder().policy(policy).queue_capacity(a.get_usize("queue-cap")?);
     let backend_kind = a.get("backend");
     let artifacts = Arc::new(Artifacts::load(&dir)?);
-    for variant in a.get("variants").split(',').filter(|v| !v.is_empty()) {
+    for variant in variants.iter().map(String::as_str) {
         let backend: Arc<dyn InferBackend> = match backend_kind.as_str() {
             "engine" => engine_backend(&dir, variant, threads)?,
             "pjrt" => {
@@ -143,7 +158,10 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
     let server = Arc::new(Server::new(router, CLASSES.iter().map(|s| s.to_string()).collect()));
     let stop = Arc::new(AtomicBool::new(false));
     let addr = server.serve(&a.get("addr"), threads.max(2), stop)?;
-    println!("serving on {addr} (backend={backend_kind}, max_batch={})", policy.max_batch);
+    println!(
+        "serving on {addr} (backend={backend_kind}, max_batch={}, executors={}/lane)",
+        policy.max_batch, policy.executors
+    );
     println!("protocol: line JSON, e.g. {{\"op\":\"classify_synth\",\"index\":0}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

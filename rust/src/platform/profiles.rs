@@ -50,9 +50,61 @@ pub const TEGRA_X2: Profile = Profile {
 /// All paper platforms, in Table 1 column order.
 pub const ALL: [Profile; 3] = [GTX1080, MALI_T860, TEGRA_X2];
 
+// ---------------------------------------------------------------------------
+// serving-host lane sizing
+// ---------------------------------------------------------------------------
+
+/// Hard cap on auto-selected executors per lane.  Past this point
+/// executors stop overlapping batch formation with execution and start
+/// fighting the engine's own data-parallel workers for cores (the
+/// `benches/ablation_executors.rs` curve flattens well before 8 on
+/// typical hosts).
+pub const MAX_AUTO_EXECUTORS: usize = 8;
+
+/// Recommended batched workers per lane for a serving host with `cores`
+/// logical CPUs serving `lanes` model variants.
+///
+/// Rationale: one executor per lane serializes the coordinator — while a
+/// batch executes, newly admitted requests just queue (the FINN
+/// observation that BNN serving throughput is a dataflow/scheduling
+/// problem, not only a kernel problem).  A second executor lets batch
+/// formation overlap execution; beyond that, extra executors only help
+/// while spare cores exist, because `EngineBackend` already
+/// data-parallelizes each batch across its worker threads.  So: spend
+/// about half the cores on cross-batch concurrency, split across lanes,
+/// clamped to `1..=MAX_AUTO_EXECUTORS`.
+///
+/// Used by `repro serve --executors 0` (the auto default); any explicit
+/// `--executors N` overrides it.
+pub fn recommended_executors(cores: usize, lanes: usize) -> usize {
+    (cores / (2 * lanes.max(1))).clamp(1, MAX_AUTO_EXECUTORS)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn recommended_executors_is_sane() {
+        // always at least one, even on tiny hosts or absurd lane counts
+        assert_eq!(recommended_executors(1, 1), 1);
+        assert_eq!(recommended_executors(4, 100), 1);
+        // half the cores for a single lane, split across lanes
+        assert_eq!(recommended_executors(8, 1), 4);
+        assert_eq!(recommended_executors(8, 2), 2);
+        assert_eq!(recommended_executors(16, 4), 2);
+        // capped: a 128-core host doesn't get 64 executors on one lane
+        assert_eq!(recommended_executors(128, 1), MAX_AUTO_EXECUTORS);
+        // monotone in cores for a fixed lane count
+        for lanes in 1..4 {
+            let mut prev = 0;
+            for cores in 1..64 {
+                let e = recommended_executors(cores, lanes);
+                assert!(e >= prev, "cores {cores} lanes {lanes}: {e} < {prev}");
+                prev = e;
+            }
+        }
+    }
 
     #[test]
     fn profiles_have_sane_orderings() {

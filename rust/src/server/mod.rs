@@ -4,5 +4,5 @@
 pub mod protocol;
 pub mod tcp;
 
-pub use protocol::{Request, Response};
+pub use protocol::{Request, Response, StreamStatus};
 pub use tcp::Server;

@@ -6,18 +6,24 @@
 //!     {"op": "classify", "model": "bcnn_rgb", "pixels": [27648 floats]}
 //!     {"op": "classify_batch", "model": "bcnn_rgb",
 //!      "images": [[27648 floats], [27648 floats], ...]}
+//!     {"op": "classify_batch_stream", "model": "bcnn_rgb",
+//!      "images": [[27648 floats], ...]}
 //!     {"op": "classify_synth", "model": "bcnn_rgb", "index": 17}
 //!     {"op": "stats"}
 //!     {"op": "variants"}
 //!     {"op": "ping"}
 //! ```
 //!
-//! Responses:
+//! Responses (one line each; a stream request produces several lines):
 //!
 //! ```text
 //!     {"ok": true, "class": 2, "label": "truck", "logits": [...],
 //!      "queue_us": 12.0, "exec_us": 830.0, "batch": 1}
 //!     {"ok": true, "results": [<classify responses, one per image>]}
+//!     {"ok": true, "stream": true, "seq": 3, "id": 41, ...classify fields}
+//!     {"ok": false, "stream": true, "seq": 1, "id": 39, "error": "..."}
+//!     {"ok": true, "stream_end": true, "count": 4, "completed": 3,
+//!      "failed": 1, "results": [{"seq": 0, "id": 38, "ok": true}, ...]}
 //!     {"ok": true, "stats": {...}} / {"ok": true, "variants": [...]}
 //!     {"ok": false, "error": "..."}
 //! ```
@@ -26,6 +32,16 @@
 //! the dynamic batcher can drain them into one batched backend call (up
 //! to `BatchPolicy::max_batch`) — the wire-level entry to the batched
 //! forward path.  At most [`MAX_BATCH_IMAGES`] images per request.
+//!
+//! `classify_batch_stream` submits the same way but answers with one
+//! framed line per image **as it completes** (completion order, NOT
+//! submission order — multi-executor lanes finish fast batches first),
+//! then a terminal `stream_end` summary naming every per-image status in
+//! submission order.  Unlike `classify_batch`, a malformed image (e.g. a
+//! non-finite pixel) fails **per image** with its own frame and real
+//! request id instead of rejecting the whole request — a stream client
+//! consumes per-image status anyway.  See `docs/PROTOCOL.md` for the
+//! full wire reference and worked sessions.
 
 use crate::util::json::{Json, JsonObj};
 
@@ -41,6 +57,10 @@ pub const MAX_BATCH_IMAGES: usize = 64;
 pub enum Request {
     Classify { model: String, pixels: Vec<f32> },
     ClassifyBatch { model: String, images: Vec<Vec<f32>> },
+    /// Streaming variant: per-image parse failures ride along as `Err`
+    /// entries (each will get a real request id and a failure frame)
+    /// instead of rejecting the whole request like `ClassifyBatch`.
+    ClassifyBatchStream { model: String, images: Vec<Result<Vec<f32>, String>> },
     ClassifySynth { model: String, index: usize },
     Stats,
     Variants,
@@ -61,10 +81,27 @@ pub enum Response {
     /// One entry per image of a `classify_batch` request (each entry is a
     /// `Classified` or a per-image `Error`).
     Batch(Vec<Response>),
+    /// One per-image frame of a `classify_batch_stream` session: the
+    /// wrapped `Classified`/`Error` body plus the image's submission
+    /// index (`seq`) and request id, tagged `"stream": true` on the wire.
+    StreamItem { seq: usize, id: u64, body: Box<Response> },
+    /// Terminal frame of a stream session: per-image status in
+    /// submission order, tagged `"stream_end": true` on the wire.
+    StreamEnd { count: usize, completed: usize, failed: usize, results: Vec<StreamStatus> },
     Stats(Json),
     Variants(Vec<String>),
     Pong,
     Error(String),
+}
+
+/// One image's outcome in a `stream_end` summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamStatus {
+    /// Submission index within the request's `images` array.
+    pub seq: usize,
+    /// The router-assigned request id (matches the image's stream frame).
+    pub id: u64,
+    pub ok: bool,
 }
 
 /// Parse one pixel value, rejecting anything non-finite.
@@ -125,6 +162,28 @@ impl Request {
                     .collect::<Result<Vec<_>, String>>()?;
                 Ok(Request::ClassifyBatch { model, images })
             }
+            "classify_batch_stream" => {
+                let arr = j.get("images").and_then(|p| p.as_arr()).map_err(|e| e.to_string())?;
+                if arr.len() > MAX_BATCH_IMAGES {
+                    return Err(format!(
+                        "classify_batch_stream: {} images exceeds the limit of {MAX_BATCH_IMAGES}",
+                        arr.len()
+                    ));
+                }
+                // per-image errors are DEFERRED, not fatal: each Err entry
+                // becomes a per-image failure frame with a real request id
+                let images = arr
+                    .iter()
+                    .map(|img| {
+                        img.as_arr()
+                            .map_err(|e| e.to_string())?
+                            .iter()
+                            .map(finite_pixel)
+                            .collect::<Result<Vec<f32>, String>>()
+                    })
+                    .collect();
+                Ok(Request::ClassifyBatchStream { model, images })
+            }
             "classify_synth" => {
                 let index =
                     j.get("index").and_then(|i| i.as_usize()).map_err(|e| e.to_string())?;
@@ -159,6 +218,35 @@ impl Response {
                 obj.insert(
                     "results",
                     Json::Arr(items.iter().map(|r| Json::Obj(r.to_json_obj())).collect()),
+                );
+            }
+            Response::StreamItem { seq, id, body } => {
+                // the body's own fields (incl. its "ok") plus stream tags
+                obj = body.to_json_obj();
+                obj.insert("stream", Json::Bool(true));
+                obj.insert("seq", Json::from(*seq));
+                obj.insert("id", Json::from(*id as usize));
+            }
+            Response::StreamEnd { count, completed, failed, results } => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("stream_end", Json::Bool(true));
+                obj.insert("count", Json::from(*count));
+                obj.insert("completed", Json::from(*completed));
+                obj.insert("failed", Json::from(*failed));
+                obj.insert(
+                    "results",
+                    Json::Arr(
+                        results
+                            .iter()
+                            .map(|s| {
+                                let mut o = JsonObj::new();
+                                o.insert("seq", Json::from(s.seq));
+                                o.insert("id", Json::from(s.id as usize));
+                                o.insert("ok", Json::Bool(s.ok));
+                                Json::Obj(o)
+                            })
+                            .collect(),
+                    ),
                 );
             }
             Response::Stats(s) => {
@@ -259,6 +347,91 @@ mod tests {
         assert!(Request::parse(r#"{"op":"classify_batch","images":[1.0]}"#).is_err());
         // non-numeric pixel
         assert!(Request::parse(r#"{"op":"classify_batch","images":[["x"]]}"#).is_err());
+    }
+
+    #[test]
+    fn parse_classify_batch_stream_defers_per_image_errors() {
+        // one good image, one non-finite pixel, one non-array entry: the
+        // request parses, and the bad entries ride along as Err slots
+        let r = Request::parse(
+            r#"{"op":"classify_batch_stream","model":"rgb","images":[[0.5,1.0],[0.5,1e400],7]}"#,
+        )
+        .unwrap();
+        match r {
+            Request::ClassifyBatchStream { model, images } => {
+                assert_eq!(model, "rgb");
+                assert_eq!(images.len(), 3);
+                assert_eq!(images[0], Ok(vec![0.5, 1.0]));
+                assert!(images[1].as_ref().unwrap_err().contains("non-finite"));
+                assert!(images[2].is_err());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_batch_stream_still_caps_group_size() {
+        let imgs = vec!["[0.5]"; MAX_BATCH_IMAGES + 1].join(",");
+        let req = format!("{{\"op\":\"classify_batch_stream\",\"images\":[{imgs}]}}");
+        let err = Request::parse(&req).unwrap_err();
+        assert!(err.contains("exceeds the limit"), "{err}");
+    }
+
+    #[test]
+    fn stream_item_frame_carries_body_and_tags() {
+        let ok = Response::StreamItem {
+            seq: 3,
+            id: 41,
+            body: Box::new(Response::Classified {
+                class: 2,
+                label: "truck".into(),
+                logits: vec![0.0, 0.0, 1.0, 0.0],
+                queue_us: 1.0,
+                exec_us: 2.0,
+                batch: 4,
+            }),
+        };
+        let j = Json::parse(&ok.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("stream").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("seq").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 41);
+        assert_eq!(j.get("label").unwrap().as_str().unwrap(), "truck");
+
+        let err = Response::StreamItem {
+            seq: 1,
+            id: 39,
+            body: Box::new(Response::Error("non-finite logits".into())),
+        };
+        let j = Json::parse(&err.to_json_line()).unwrap();
+        assert!(!j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("stream").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("id").unwrap().as_usize().unwrap(), 39);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("non-finite"));
+    }
+
+    #[test]
+    fn stream_end_frame_summarizes_in_submission_order() {
+        let end = Response::StreamEnd {
+            count: 2,
+            completed: 1,
+            failed: 1,
+            results: vec![
+                StreamStatus { seq: 0, id: 38, ok: true },
+                StreamStatus { seq: 1, id: 39, ok: false },
+            ],
+        };
+        let j = Json::parse(&end.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("stream_end").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 1);
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("seq").unwrap().as_usize().unwrap(), 0);
+        assert!(results[0].get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(results[1].get("id").unwrap().as_usize().unwrap(), 39);
+        assert!(!results[1].get("ok").unwrap().as_bool().unwrap());
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use super::protocol::{Request, Response};
+use super::protocol::{Request, Response, StreamStatus};
 use crate::coordinator::Router;
 use crate::dataset::synth;
 use crate::util::threadpool::ThreadPool;
@@ -74,6 +74,11 @@ impl Server {
 
     /// Handle one already-parsed request (also used by unit tests and the
     /// in-process CLI path — no socket required).
+    ///
+    /// `ClassifyBatchStream` is the one op that produces *several* frames
+    /// for one request line, so it cannot be answered here; the TCP
+    /// session routes it to [`Server::stream_batch`] instead, and
+    /// single-response callers get a structured error.
     pub fn handle(&self, req: Request) -> Response {
         match req {
             Request::Ping => Response::Pong,
@@ -81,6 +86,11 @@ impl Server {
             Request::Stats => Response::Stats(self.router.stats()),
             Request::Classify { model, pixels } => self.classify(&model, pixels),
             Request::ClassifyBatch { model, images } => self.classify_batch(&model, images),
+            Request::ClassifyBatchStream { .. } => Response::Error(
+                "classify_batch_stream emits multiple frames; use a streaming transport \
+                 (or classify_batch for a single grouped response)"
+                    .to_string(),
+            ),
             Request::ClassifySynth { model, index } => {
                 let sample = synth::render_vehicle(index, self.synth_seed);
                 self.classify(&model, sample.image)
@@ -127,6 +137,125 @@ impl Server {
         Response::Batch(items)
     }
 
+    /// The `classify_batch_stream` engine: submit the whole group onto
+    /// one shared response channel, then `emit` one framed response per
+    /// image **as it completes** (completion order — with multi-executor
+    /// lanes a fast image's frame goes out while a slow peer is still
+    /// executing), finishing with a `stream_end` summary in submission
+    /// order.
+    ///
+    /// `emit` returns `false` when the client is gone (failed write);
+    /// the method then stops immediately — dropping the group receiver
+    /// is safe, executors never block on a disconnected channel.
+    /// Returns `false` iff an emit failed.
+    ///
+    /// Per-image failures all flow through the same frame shape with a
+    /// real request id, whatever their origin: parse-layer rejects
+    /// (non-finite pixels) arrive as `Err` images, bad payload sizes and
+    /// queue backpressure fail at submission, and non-finite logits fail
+    /// in the batcher.
+    pub fn stream_batch(
+        &self,
+        model: &str,
+        images: Vec<Result<Vec<f32>, String>>,
+        emit: &mut dyn FnMut(&Response) -> bool,
+    ) -> bool {
+        // One path for every per-image frame, whatever layer produced the
+        // body: record its outcome, count it, frame it, write it.
+        fn emit_item(
+            metrics: &Option<Arc<crate::coordinator::Metrics>>,
+            ok_by_seq: &mut [Option<bool>],
+            emit: &mut dyn FnMut(&Response) -> bool,
+            seq: usize,
+            id: u64,
+            body: Response,
+        ) -> bool {
+            ok_by_seq[seq] = Some(!matches!(body, Response::Error(_)));
+            let delivered = emit(&Response::StreamItem { seq, id, body: Box::new(body) });
+            // count only frames actually written — a client hanging up
+            // mid-stream must not inflate the stats op
+            if delivered {
+                if let Some(m) = metrics {
+                    m.record_stream_frame();
+                }
+            }
+            delivered
+        }
+
+        let metrics = self.router.metrics(model).ok();
+        if let Some(m) = &metrics {
+            m.record_stream();
+        }
+        let group = self.router.submit_group(model, images);
+        let count = group.slots.len();
+        let mut ok_by_seq: Vec<Option<bool>> = vec![None; count];
+        // failure frames first for images that never reached the lane
+        // (parse rejects, bad payloads, admission backpressure) — their
+        // outcome is already known, the client shouldn't wait for it
+        for (seq, slot) in group.slots.iter().enumerate() {
+            if let Some(err) = &slot.error {
+                let body = Response::Error(err.clone());
+                if !emit_item(&metrics, &mut ok_by_seq, &mut *emit, seq, slot.id, body) {
+                    return false;
+                }
+            }
+        }
+        // then one frame per admitted image, in completion order
+        let seq_of_id: std::collections::HashMap<u64, usize> =
+            group.slots.iter().enumerate().map(|(seq, s)| (s.id, seq)).collect();
+        let mut pending = group.pending();
+        while pending > 0 {
+            match group.rx.recv() {
+                Ok(resp) => {
+                    pending -= 1;
+                    // only this group's senders hold the channel, so the id
+                    // always resolves; guard anyway — a session thread must
+                    // never panic on traffic
+                    let Some(&seq) = seq_of_id.get(&resp.id) else { continue };
+                    let id = resp.id;
+                    let body = self.render(resp);
+                    if !emit_item(&metrics, &mut ok_by_seq, &mut *emit, seq, id, body) {
+                        return false;
+                    }
+                }
+                Err(_) => {
+                    // the lane died mid-group: fail every still-pending
+                    // image with its real id instead of hanging the client
+                    for (seq, slot) in group.slots.iter().enumerate() {
+                        if ok_by_seq[seq].is_none() {
+                            let body = Response::Error(
+                                "backend dropped the response channel".to_string(),
+                            );
+                            if !emit_item(&metrics, &mut ok_by_seq, &mut *emit, seq, slot.id, body)
+                            {
+                                return false;
+                            }
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        let results: Vec<StreamStatus> = group
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(seq, slot)| StreamStatus {
+                seq,
+                id: slot.id,
+                ok: ok_by_seq[seq].unwrap_or(false),
+            })
+            .collect();
+        let completed = results.iter().filter(|s| s.ok).count();
+        let end = Response::StreamEnd {
+            count,
+            completed,
+            failed: count - completed,
+            results,
+        };
+        emit(&end)
+    }
+
     fn session(&self, stream: TcpStream) {
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
@@ -143,11 +272,32 @@ impl Server {
                 Ok(Some(Ok(()))) => {
                     // invalid UTF-8 (e.g. binary garbage) must produce a
                     // protocol error, not kill the session
-                    let line = String::from_utf8_lossy(&buf);
-                    if line.trim().is_empty() {
-                        continue;
-                    }
-                    match Request::parse(&line) {
+                    let parsed = {
+                        let line = String::from_utf8_lossy(&buf);
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        Request::parse(&line)
+                    };
+                    match parsed {
+                        // the one multi-frame op: write each frame as it
+                        // completes.  Backpressure is structural — while a
+                        // slow client stalls a write here, completed
+                        // responses buffer in the group's channel, which
+                        // holds at most MAX_BATCH_IMAGES entries for this
+                        // session; the lane's executors never block on it.
+                        Ok(Request::ClassifyBatchStream { model, images }) => {
+                            let alive = self.stream_batch(&model, images, &mut |frame| {
+                                let mut out = frame.to_json_line();
+                                out.push('\n');
+                                writer.write_all(out.as_bytes()).is_ok()
+                            });
+                            if !alive {
+                                break; // client gone mid-stream
+                            }
+                            buf.shrink_to(64 * 1024);
+                            continue;
+                        }
                         Ok(req) => self.handle(req),
                         Err(e) => Response::Error(e),
                     }
@@ -262,6 +412,90 @@ mod tests {
                 assert!(matches!(items[1], Response::Error(_)));
                 assert!(matches!(items[2], Response::Classified { .. }));
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_batch_emits_per_image_frames_and_summary() {
+        let s = test_server();
+        let good = vec![0.5f32; 96 * 96 * 3];
+        let frames = {
+            let mut frames: Vec<Response> = Vec::new();
+            let alive = s.stream_batch(
+                "",
+                vec![
+                    Ok(good.clone()),
+                    Err("non-finite pixel value".to_string()), // parse reject
+                    Ok(vec![0.5f32; 10]),                      // bad payload
+                ],
+                &mut |frame| {
+                    frames.push(frame.clone());
+                    true
+                },
+            );
+            assert!(alive);
+            frames
+        };
+        assert_eq!(frames.len(), 4, "3 item frames + stream_end");
+        // the two known-bad images fail first (no reason to wait), the
+        // good image's frame follows on completion
+        let mut ids = Vec::new();
+        for frame in &frames[..3] {
+            match frame {
+                Response::StreamItem { id, body, seq } => {
+                    ids.push(*id);
+                    match (*seq, &**body) {
+                        (0, Response::Classified { .. }) => {}
+                        (1 | 2, Response::Error(_)) => {}
+                        other => panic!("unexpected frame {other:?}"),
+                    }
+                }
+                other => panic!("expected StreamItem, got {other:?}"),
+            }
+        }
+        // real, distinct request ids on every frame — failures included
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3);
+        assert!(ids.iter().all(|&id| id != 0));
+        match &frames[3] {
+            Response::StreamEnd { count, completed, failed, results } => {
+                assert_eq!((*count, *completed, *failed), (3, 1, 2));
+                let seqs: Vec<usize> = results.iter().map(|r| r.seq).collect();
+                assert_eq!(seqs, vec![0, 1, 2], "summary is in submission order");
+                assert!(results[0].ok && !results[1].ok && !results[2].ok);
+            }
+            other => panic!("expected StreamEnd, got {other:?}"),
+        }
+        // the lane's stats op records the stream session and its frames
+        let snap = s.router.metrics("").unwrap().snapshot();
+        assert_eq!(snap.get("streams").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(snap.get("stream_frames").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn stream_batch_stops_when_client_goes_away() {
+        let s = test_server();
+        let good = vec![0.5f32; 96 * 96 * 3];
+        let mut emitted = 0;
+        let alive = s.stream_batch(
+            "",
+            vec![Ok(good.clone()), Ok(good)],
+            &mut |_| {
+                emitted += 1;
+                false // client hung up on the first write
+            },
+        );
+        assert!(!alive);
+        assert_eq!(emitted, 1, "must stop emitting after a failed write");
+    }
+
+    #[test]
+    fn handle_rejects_stream_op_on_single_response_path() {
+        let s = test_server();
+        match s.handle(Request::ClassifyBatchStream { model: "".into(), images: vec![] }) {
+            Response::Error(e) => assert!(e.contains("streaming"), "{e}"),
             other => panic!("{other:?}"),
         }
     }

@@ -150,6 +150,21 @@ impl Args {
         })
     }
 
+    /// `get_usize` with an inclusive range check — serving options like
+    /// `--executors` reject nonsense (e.g. 10_000 worker threads) at
+    /// startup with a structured error instead of spawning it.
+    pub fn get_usize_in(&self, name: &str, lo: usize, hi: usize) -> Result<usize, CliError> {
+        let v = self.get_usize(name)?;
+        if v < lo || v > hi {
+            return Err(CliError::Invalid(
+                name.to_string(),
+                v.to_string(),
+                format!("must be in {lo}..={hi}"),
+            ));
+        }
+        Ok(v)
+    }
+
     pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
         let v = self.get(name);
         v.parse().map_err(|e: std::num::ParseIntError| {
@@ -232,6 +247,22 @@ mod tests {
     fn invalid_number_reports() {
         let a = demo().parse(&raw(&["--iters", "abc"])).unwrap();
         assert!(matches!(a.get_usize("iters"), Err(CliError::Invalid(..))));
+    }
+
+    #[test]
+    fn bounded_usize_enforces_range() {
+        let a = demo().parse(&raw(&["--iters", "7"])).unwrap();
+        assert_eq!(a.get_usize_in("iters", 0, 64).unwrap(), 7);
+        assert_eq!(a.get_usize_in("iters", 7, 7).unwrap(), 7);
+        match a.get_usize_in("iters", 8, 64) {
+            Err(CliError::Invalid(name, v, why)) => {
+                assert_eq!(name, "iters");
+                assert_eq!(v, "7");
+                assert!(why.contains("8..=64"));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(a.get_usize_in("iters", 0, 6).is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@ fn engine_router(max_batch: usize) -> Arc<Router> {
             .policy(BatchPolicy {
                 max_batch,
                 max_wait: std::time::Duration::from_millis(1),
+                ..BatchPolicy::default()
             })
             .queue_capacity(512)
             .variant("rgb", rgb)
@@ -122,7 +123,11 @@ fn backend_failures_propagate_to_clients() {
     let be: Arc<dyn InferBackend> =
         Arc::new(FlakyBackend { fail_every: 3, calls: Default::default() });
     let router = Router::builder()
-        .policy(BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(50) })
+        .policy(BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_micros(50),
+            ..BatchPolicy::default()
+        })
         .variant("flaky", be)
         .build();
     let mut failures = 0;
@@ -156,7 +161,11 @@ fn queue_overflow_rejects_cleanly() {
         }
     }
     let router = Router::builder()
-        .policy(BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(10) })
+        .policy(BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_micros(10),
+            ..BatchPolicy::default()
+        })
         .queue_capacity(2)
         .variant("slow", Arc::new(Slow))
         .build();
@@ -339,6 +348,206 @@ fn non_finite_logits_fail_per_image_in_batcher() {
     router.shutdown();
 }
 
+/// A backend whose per-batch latency is controlled by the first pixel:
+/// images with pixel0 > 0.5 sleep `slow_ms` before answering.  Logits
+/// echo pixel0 so responses can be traced back to their requests.
+struct SleepyBackend {
+    slow_ms: u64,
+}
+
+impl InferBackend for SleepyBackend {
+    fn name(&self) -> String {
+        "sleepy".into()
+    }
+    fn supported_batches(&self) -> Vec<usize> {
+        vec![usize::MAX]
+    }
+    fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+        const IMG: usize = 96 * 96 * 3;
+        let n = images.len() / IMG;
+        if (0..n).any(|i| images[i * IMG] > 0.5) {
+            std::thread::sleep(std::time::Duration::from_millis(self.slow_ms));
+        }
+        let mut out = vec![0.0f32; n * 4];
+        for i in 0..n {
+            out[i * 4] = images[i * IMG];
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn stream_delivers_fast_image_before_slow_peer_completes() {
+    // the tentpole acceptance test: with a multi-executor lane, a fast
+    // image's streamed response arrives while a slow image in the SAME
+    // request group is still executing
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    // generous sleep/budget gap: the budget must absorb server-side parse
+    // of a ~1.4 MB request in a debug build on a loaded CI host without
+    // flaking (the load-bearing assertion is the frame ORDER, the timing
+    // bound is belt-and-braces)
+    const SLOW_MS: u64 = 1500;
+    let be: Arc<dyn InferBackend> = Arc::new(SleepyBackend { slow_ms: SLOW_MS });
+    let router = Arc::new(
+        Router::builder()
+            .policy(BatchPolicy {
+                max_batch: 1, // each image is its own batch...
+                max_wait: std::time::Duration::from_micros(10),
+                executors: 2, // ...and two executors run them concurrently
+            })
+            .variant("sleepy", be)
+            .build(),
+    );
+    let server = Arc::new(Server::new(
+        router,
+        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    // seq 0 is the SLOW image (pixel0=0.9), seq 1 the fast one (0.1)
+    let slow = "0.9,".to_string() + &vec!["0.0"; 96 * 96 * 3 - 1].join(",");
+    let fast = "0.1,".to_string() + &vec!["0.0"; 96 * 96 * 3 - 1].join(",");
+    let req = format!(
+        "{{\"op\":\"classify_batch_stream\",\"model\":\"sleepy\",\"images\":[[{slow}],[{fast}]]}}\n"
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+
+    let started = std::time::Instant::now();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let first_frame_after = started.elapsed();
+    // the FIRST frame on the wire is the fast image (submitted second),
+    // and it arrives before the slow image's SLOW_MS sleep can finish
+    let first = bcnn::util::json::Json::parse(&line).unwrap();
+    assert!(first.get("stream").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(first.get("seq").unwrap().as_usize().unwrap(), 1, "fast image first: {line}");
+    assert!(
+        first_frame_after < std::time::Duration::from_millis(SLOW_MS - 100),
+        "fast frame waited on the slow batch: {first_frame_after:?}"
+    );
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let second = bcnn::util::json::Json::parse(&line).unwrap();
+    assert_eq!(second.get("seq").unwrap().as_usize().unwrap(), 0, "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let end = bcnn::util::json::Json::parse(&line).unwrap();
+    assert!(end.get("stream_end").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(end.get("completed").unwrap().as_usize().unwrap(), 2, "{line}");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn multi_executor_lane_is_bit_identical_to_serial_lane() {
+    // acceptance: N>=2 executors produce bit-identical logits to the
+    // serial lane for the same request set
+    let images: Vec<Vec<f32>> = (0..24u64).map(synth_image).collect();
+    let mut runs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for executors in [1usize, 4] {
+        let be: Arc<dyn InferBackend> =
+            Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 33), 2));
+        let router = Router::builder()
+            .policy(BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+                executors,
+            })
+            .variant("rgb", be)
+            .build();
+        let resps = router.infer_blocking_batch("rgb", images.clone());
+        assert_eq!(resps.len(), images.len());
+        runs.push(
+            resps
+                .into_iter()
+                .map(|resp| {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    resp.logits
+                })
+                .collect(),
+        );
+        router.shutdown();
+    }
+    assert_eq!(runs[0], runs[1], "executors=4 drifted from the serial lane");
+}
+
+#[test]
+fn stream_failure_frames_mix_parse_rejects_and_nan_logits() {
+    // satellite: a group mixing valid images, a non-finite-pixel reject,
+    // and a NaN-logit backend must stream per-image failure frames with
+    // real request ids and still deliver the terminal summary
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    struct NanBackend;
+    impl InferBackend for NanBackend {
+        fn name(&self) -> String {
+            "nan".into()
+        }
+        fn supported_batches(&self) -> Vec<usize> {
+            vec![usize::MAX]
+        }
+        fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
+            Ok(vec![f32::NAN; images.len() / (96 * 96 * 3) * 4])
+        }
+    }
+    let router = Arc::new(Router::builder().variant("nan", Arc::new(NanBackend)).build());
+    let server = Arc::new(Server::new(
+        router,
+        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let good = vec!["0.5"; 96 * 96 * 3].join(",");
+    let mut poisoned: Vec<&str> = vec!["0.5"; 96 * 96 * 3];
+    poisoned[7] = "1e400"; // non-finite at parse time
+    let poisoned = poisoned.join(",");
+    let req = format!(
+        "{{\"op\":\"classify_batch_stream\",\"model\":\"nan\",\
+         \"images\":[[{good}],[{poisoned}],[{good}]]}}\n"
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+
+    let mut ids = Vec::new();
+    let mut seqs = Vec::new();
+    for _ in 0..3 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = bcnn::util::json::Json::parse(&line).unwrap();
+        assert!(j.get("stream").unwrap().as_bool().unwrap(), "{line}");
+        assert!(!j.get("ok").unwrap().as_bool().unwrap(), "every image fails: {line}");
+        let err = j.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("non-finite"), "{line}");
+        ids.push(j.get("id").unwrap().as_usize().unwrap());
+        seqs.push(j.get("seq").unwrap().as_usize().unwrap());
+    }
+    // real, distinct ids on every failure frame; all seqs accounted for
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 3);
+    assert!(ids.iter().all(|&id| id != 0));
+    seqs.sort_unstable();
+    assert_eq!(seqs, vec![0, 1, 2]);
+    // the terminal summary still arrives, naming every image
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let end = bcnn::util::json::Json::parse(&line).unwrap();
+    assert!(end.get("stream_end").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(end.get("count").unwrap().as_usize().unwrap(), 3, "{line}");
+    assert_eq!(end.get("failed").unwrap().as_usize().unwrap(), 3, "{line}");
+    assert_eq!(end.get("results").unwrap().as_arr().unwrap().len(), 3, "{line}");
+    stop.store(true, Ordering::Relaxed);
+}
+
 #[test]
 fn pjrt_backend_serves_through_router() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -359,7 +568,11 @@ fn pjrt_backend_serves_through_router() {
     );
     let router = Arc::new(
         Router::builder()
-            .policy(BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(1) })
+            .policy(BatchPolicy {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                ..BatchPolicy::default()
+            })
             .variant("rgb", backend)
             .build(),
     );

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve.
+
+Scans the repo's markdown tree (docs/, root-level *.md, and README.md
+files under rust/ and python/) for inline links `[text](target)` and
+verifies that every relative target exists, and that `#anchor`
+fragments pointing into markdown files match a real heading (GitHub
+slug rules: lowercase, spaces to dashes, punctuation stripped).
+
+External links (http/https/mailto) are ignored — this guards the docs
+tree against silent rot when files move, not against the internet.
+
+Exit status: 0 when every link resolves, 1 otherwise (one line per
+broken link). Wired into CI next to `cargo doc`; run locally with:
+
+    python3 scripts/check_docs_links.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — stop at the first unescaped ')'; tolerate titles
+# like (path "title"); skip images by treating them the same (their
+# targets must resolve too).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def markdown_files() -> list[Path]:
+    files = set(REPO.glob("*.md"))
+    files.update(REPO.glob("docs/**/*.md"))
+    files.update(REPO.glob("rust/**/*.md"))
+    files.update(REPO.glob("python/**/*.md"))
+    files.update(REPO.glob("scripts/**/*.md"))
+    return sorted(p for p in files if ".pytest_cache" not in p.parts)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code, lowercase,
+    drop punctuation, spaces become dashes."""
+    text = re.sub(r"[`*_]", "", heading).strip()
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: Path) -> set[str]:
+    slugs: set[str] = set()
+    seen: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+        slugs.add(slug)
+    return slugs
+
+
+def iter_links(path: Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main() -> int:
+    errors = []
+    for md in markdown_files():
+        for lineno, target in iter_links(md):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:, …
+                continue
+            target, _, anchor = target.partition("#")
+            if target:
+                resolved = (md.parent / target).resolve()
+                if not resolved.exists():
+                    errors.append(f"{md.relative_to(REPO)}:{lineno}: broken link -> {target}")
+                    continue
+            else:
+                resolved = md  # pure-anchor link into the same file
+            if anchor and resolved.suffix == ".md":
+                if anchor not in heading_slugs(resolved):
+                    errors.append(
+                        f"{md.relative_to(REPO)}:{lineno}: missing anchor "
+                        f"#{anchor} in {resolved.relative_to(REPO)}"
+                    )
+    for e in errors:
+        print(e)
+    checked = len(markdown_files())
+    if errors:
+        print(f"\n{len(errors)} broken link(s) across {checked} markdown files")
+        return 1
+    print(f"ok: all intra-repo links resolve across {checked} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
