@@ -17,9 +17,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use bcnn::bnn::network::{BcnnNetwork, FloatNetwork, CLASSES};
-use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router, RuntimeBackend};
+use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, RuntimeBackend};
 use bcnn::dataset::synth;
 use bcnn::input::binarize::Scheme;
+use bcnn::registry::ModelRegistry;
 use bcnn::runtime::Artifacts;
 use bcnn::server::Server;
 use bcnn::util::cli::Args;
@@ -72,18 +73,21 @@ fn main() -> AppResult<()> {
         ))
     };
 
-    let router = Arc::new(
-        Router::builder()
-            .policy(BatchPolicy {
-                max_batch,
-                max_wait: std::time::Duration::from_micros(200),
-                ..BatchPolicy::default()
-            })
-            .queue_capacity(4096)
-            .variant("float", float_be)
-            .variant("bcnn_rgb", bcnn_be)
-            .build(),
-    );
+    let registry = ModelRegistry::builder()
+        .policy(BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(200),
+            ..BatchPolicy::default()
+        })
+        .queue_capacity(4096)
+        .build();
+    registry
+        .publish_backend("float", 1, "float", "float", None, float_be)
+        .map_err(|e| bcnn::app_err!("{e}"))?;
+    registry
+        .publish_backend("bcnn_rgb", 1, "bcnn", "rgb", None, bcnn_be)
+        .map_err(|e| bcnn::app_err!("{e}"))?;
+    let router = Arc::clone(registry.router());
 
     // --- the paper's protocol: n single-sample requests per variant ------
     println!(
@@ -91,7 +95,7 @@ fn main() -> AppResult<()> {
         if use_pjrt { "pjrt" } else { "engine" }
     );
     let mut mean_us = Vec::new();
-    for variant in ["float", "bcnn_rgb"] {
+    for variant in ["float@1", "bcnn_rgb@1"] {
         let started = Instant::now();
         let mut correct = 0usize;
         for i in 0..n {
@@ -124,7 +128,7 @@ fn main() -> AppResult<()> {
 
     // --- burst through the TCP front end ---------------------------------
     let server = Arc::new(Server::new(
-        Arc::clone(&router),
+        Arc::clone(&registry),
         CLASSES.iter().map(|s| s.to_string()).collect(),
     ));
     let stop = Arc::new(AtomicBool::new(false));

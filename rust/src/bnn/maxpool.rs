@@ -276,7 +276,7 @@ mod tests {
 
     #[test]
     fn orpool_shapes() {
-        let out = orpool2x2(&vec![1u32; 8 * 6 * 3], 8, 6, 3);
+        let out = orpool2x2(&[1u32; 8 * 6 * 3], 8, 6, 3);
         assert_eq!(out.len(), 4 * 3 * 3);
     }
 

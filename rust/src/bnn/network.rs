@@ -124,7 +124,7 @@ impl BcnnNetwork {
     }
 
     pub fn load(path: impl AsRef<std::path::Path>, scheme: Scheme) -> Result<Self, NetworkError> {
-        Ok(Self::from_tensor_file(&TensorFile::load(path)?, scheme)?)
+        Self::from_tensor_file(&TensorFile::load(path)?, scheme)
     }
 
     /// Apply the input-binarization scheme (Section 2.3).
@@ -498,7 +498,7 @@ impl FloatNetwork {
     }
 
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, NetworkError> {
-        Ok(Self::from_tensor_file(&TensorFile::load(path)?)?)
+        Self::from_tensor_file(&TensorFile::load(path)?)
     }
 
     /// Forward pass on one (96,96,3) image; returns logits + layer times.
@@ -689,9 +689,9 @@ pub mod tests_support {
         tf.insert("theta3", Tensor::from_f32(vec![FC1_OUT], &(0..FC1_OUT).map(|_| rng.next_normal_f32() * 50.0).collect::<Vec<_>>()));
         tf.insert("flip3", Tensor::from_u32(vec![FC1_OUT], &(0..FC1_OUT).map(|_| (rng.next_u64() & 1) as u32).collect::<Vec<_>>()));
         tf.insert("wfc2", Tensor::from_f32(vec![FC2_OUT, FC1_OUT], &(0..FC2_OUT * FC1_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
-        tf.insert("bfc2", Tensor::from_f32(vec![FC2_OUT], &vec![0.0; FC2_OUT]));
+        tf.insert("bfc2", Tensor::from_f32(vec![FC2_OUT], &[0.0; FC2_OUT]));
         tf.insert("wfc3", Tensor::from_f32(vec![NUM_CLASSES, FC2_OUT], &(0..NUM_CLASSES * FC2_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
-        tf.insert("bfc3", Tensor::from_f32(vec![NUM_CLASSES], &vec![0.0; NUM_CLASSES]));
+        tf.insert("bfc3", Tensor::from_f32(vec![NUM_CLASSES], &[0.0; NUM_CLASSES]));
         match scheme {
             Scheme::Rgb => tf.insert("input_t", Tensor::from_f32(vec![3], &[-0.5, -0.5, -0.5])),
             Scheme::Gray => tf.insert("input_t", Tensor::from_f32(vec![1], &[-0.5])),
@@ -710,15 +710,15 @@ pub mod tests_support {
         let mut rng = Xoshiro256::new(seed);
         let mut tf = TensorFile::new();
         tf.insert("w1", Tensor::from_f32(vec![CONV1_OUT, K * K * 3], &(0..CONV1_OUT * K * K * 3).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
-        tf.insert("b1", Tensor::from_f32(vec![CONV1_OUT], &vec![0.0; CONV1_OUT]));
+        tf.insert("b1", Tensor::from_f32(vec![CONV1_OUT], &[0.0; CONV1_OUT]));
         tf.insert("w2", Tensor::from_f32(vec![CONV2_OUT, K * K * CONV1_OUT], &(0..CONV2_OUT * K * K * CONV1_OUT).map(|_| rng.next_normal_f32() * 0.05).collect::<Vec<_>>()));
-        tf.insert("b2", Tensor::from_f32(vec![CONV2_OUT], &vec![0.0; CONV2_OUT]));
+        tf.insert("b2", Tensor::from_f32(vec![CONV2_OUT], &[0.0; CONV2_OUT]));
         tf.insert("wfc1", Tensor::from_f32(vec![FC1_OUT, 24 * 24 * CONV2_OUT], &(0..FC1_OUT * 24 * 24 * CONV2_OUT).map(|_| rng.next_normal_f32() * 0.01).collect::<Vec<_>>()));
-        tf.insert("bfc1", Tensor::from_f32(vec![FC1_OUT], &vec![0.0; FC1_OUT]));
+        tf.insert("bfc1", Tensor::from_f32(vec![FC1_OUT], &[0.0; FC1_OUT]));
         tf.insert("wfc2", Tensor::from_f32(vec![FC2_OUT, FC1_OUT], &(0..FC2_OUT * FC1_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
-        tf.insert("bfc2", Tensor::from_f32(vec![FC2_OUT], &vec![0.0; FC2_OUT]));
+        tf.insert("bfc2", Tensor::from_f32(vec![FC2_OUT], &[0.0; FC2_OUT]));
         tf.insert("wfc3", Tensor::from_f32(vec![NUM_CLASSES, FC2_OUT], &(0..NUM_CLASSES * FC2_OUT).map(|_| rng.next_normal_f32() * 0.1).collect::<Vec<_>>()));
-        tf.insert("bfc3", Tensor::from_f32(vec![NUM_CLASSES], &vec![0.0; NUM_CLASSES]));
+        tf.insert("bfc3", Tensor::from_f32(vec![NUM_CLASSES], &[0.0; NUM_CLASSES]));
         tf
     }
 

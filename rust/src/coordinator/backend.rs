@@ -26,6 +26,35 @@ pub trait InferBackend: Send + Sync {
     /// Run `n` images (flattened, `n * IMG_ELEMS` floats); returns
     /// `n * NUM_CLASSES` logits.
     fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String>;
+
+    /// Gather-free batch entry: one slice per request (each `IMG_ELEMS`
+    /// floats) plus the padded batch size `exec` to execute.  The
+    /// default gathers the slices into `gather` (reused across calls by
+    /// the batcher, so steady state allocates nothing) and runs
+    /// [`InferBackend::infer_batch`]; backends that can consume a
+    /// request's buffer in place override it — [`EngineBackend`] skips
+    /// the copy entirely on the B=1 path.  Must be bit-identical to the
+    /// gathered path (property-tested in this module).
+    fn infer_slices(
+        &self,
+        images: &[&[f32]],
+        exec: usize,
+        gather: &mut Vec<f32>,
+    ) -> Result<Vec<f32>, String> {
+        gather_padded(images, exec, gather);
+        self.infer_batch(gather)
+    }
+}
+
+/// Assemble per-request image slices into one contiguous payload of
+/// `exec * IMG_ELEMS` floats (tail zero-padded).  Cleared and re-zeroed
+/// every call, so padding lanes never carry a previous batch's pixels.
+pub fn gather_padded(images: &[&[f32]], exec: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(exec * IMG_ELEMS, 0.0);
+    for (i, img) in images.iter().enumerate() {
+        out[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(img);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -128,6 +157,25 @@ impl InferBackend for EngineBackend {
             }
         }
         Ok(out)
+    }
+
+    /// The engine runs any batch size, so a single unpadded request can
+    /// be forwarded straight from its own buffer — the dominant serving
+    /// shape under the paper's real-time protocol (`max_batch = 1`)
+    /// never copies pixels into a staging payload at all.
+    fn infer_slices(
+        &self,
+        images: &[&[f32]],
+        exec: usize,
+        gather: &mut Vec<f32>,
+    ) -> Result<Vec<f32>, String> {
+        if let [only] = images {
+            if exec == 1 {
+                return self.infer_batch(only);
+            }
+        }
+        gather_padded(images, exec, gather);
+        self.infer_batch(gather)
     }
 }
 
@@ -278,5 +326,55 @@ mod tests {
         let net = synth_bcnn_network(Scheme::Lbp, 3);
         let be = EngineBackend::bcnn(net, 1);
         assert!(be.infer_batch(&[0.0; 100]).is_err());
+    }
+
+    #[test]
+    fn gather_padded_zeroes_padding_lanes() {
+        let a = vec![1.0f32; IMG_ELEMS];
+        let mut buf = vec![9.0f32; 7]; // stale garbage must vanish
+        gather_padded(&[&a], 4, &mut buf);
+        assert_eq!(buf.len(), 4 * IMG_ELEMS);
+        assert!(buf[..IMG_ELEMS].iter().all(|&v| v == 1.0));
+        assert!(buf[IMG_ELEMS..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn engine_single_slice_skips_the_gather_buffer() {
+        // the B=1 path must run straight off the request's own buffer:
+        // the (empty) gather buffer stays untouched, and the logits are
+        // bit-identical to the contiguous path
+        let net = synth_bcnn_network(Scheme::Rgb, 17);
+        let be = EngineBackend::bcnn(net, 1);
+        let mut rng = crate::util::rng::Xoshiro256::new(3);
+        let img: Vec<f32> = (0..IMG_ELEMS).map(|_| rng.next_f32()).collect();
+        let mut gather = Vec::new();
+        let via_slices = be.infer_slices(&[&img[..]], 1, &mut gather).unwrap();
+        assert!(gather.is_empty(), "B=1 must not gather");
+        assert_eq!(via_slices, be.infer_batch(&img).unwrap());
+    }
+
+    #[test]
+    fn infer_slices_bit_identical_to_gathered_batches() {
+        use crate::util::prop::{self, ensure_eq};
+        let net = synth_bcnn_network(Scheme::Gray, 23);
+        let be = EngineBackend::bcnn(net, 2);
+        prop::check(6, |g| {
+            let n = g.usize_in(1, 4);
+            let exec = n + g.usize_in(0, 2); // sometimes padded
+            let seed = g.u64();
+            let images: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    let mut rng = crate::util::rng::Xoshiro256::new(seed.wrapping_add(i as u64));
+                    (0..IMG_ELEMS).map(|_| rng.next_f32()).collect()
+                })
+                .collect();
+            let slices: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+            let mut gather = Vec::new();
+            let via_slices = be.infer_slices(&slices, exec, &mut gather).unwrap();
+            let mut contiguous = Vec::new();
+            gather_padded(&slices, exec, &mut contiguous);
+            let direct = be.infer_batch(&contiguous).unwrap();
+            ensure_eq(via_slices, direct, "slices == gathered (bitwise)")
+        });
     }
 }

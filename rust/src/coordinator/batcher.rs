@@ -17,7 +17,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::backend::{InferBackend, IMG_ELEMS};
+use super::backend::InferBackend;
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
 use super::request::{InferRequest, InferResponse};
@@ -78,6 +78,9 @@ pub struct Batcher {
     /// Kept so `drop` can close the queue and wake blocked `pop_wait`s
     /// (otherwise joining the threads would deadlock).
     queue: Arc<BoundedQueue<InferRequest>>,
+    /// Set by [`Batcher::retire`]: drop must NOT raise the stop flag, so
+    /// executors drain every already-admitted request before exiting.
+    retired: bool,
 }
 
 impl Batcher {
@@ -117,7 +120,7 @@ impl Batcher {
                 .expect("spawn batcher");
             handles.push(handle);
         }
-        Self { handles, stop, queue }
+        Self { handles, stop, queue, retired: false }
     }
 
     fn run_batch(
@@ -130,16 +133,14 @@ impl Batcher {
         let plan = plan_batches(reqs.len(), supported);
         for (real, exec) in plan {
             let chunk: Vec<InferRequest> = reqs.drain(..real).collect();
-            // assemble the padded payload in the lane's reused buffer —
-            // cleared and re-zeroed every time, so padding lanes never
-            // carry a previous batch's pixels
-            payload.clear();
-            payload.resize(exec * IMG_ELEMS, 0.0);
-            for (i, r) in chunk.iter().enumerate() {
-                payload[i * IMG_ELEMS..(i + 1) * IMG_ELEMS].copy_from_slice(&r.image);
-            }
+            // hand the backend each request's own pixel buffer: padding
+            // and gathering (when needed at all) happen behind
+            // `InferBackend::infer_slices`, which reuses this executor's
+            // `payload` buffer — and the engine's B=1 path runs with no
+            // copy at all
+            let slices: Vec<&[f32]> = chunk.iter().map(|r| r.image.as_slice()).collect();
             let started = Instant::now();
-            let result = backend.infer_batch(payload);
+            let result = backend.infer_slices(&slices, exec, payload);
             let exec_time = started.elapsed();
             match result {
                 Ok(logits) => {
@@ -189,13 +190,40 @@ impl Batcher {
         self.shutdown();
     }
 
+    /// Graceful lane retirement (the registry's unpublish path): close
+    /// the queue so no new request can be admitted, but do **not** raise
+    /// the stop flag — the executors keep draining until every
+    /// already-admitted request has been answered, then exit on the
+    /// closed-and-empty queue.  Joining happens on a detached reaper
+    /// thread so the admin caller isn't blocked behind in-flight
+    /// batches.
+    pub fn retire(mut self) {
+        self.retired = true;
+        self.queue.close();
+        let handles: Vec<_> = self.handles.drain(..).collect();
+        if handles.is_empty() {
+            return;
+        }
+        // if the reaper can't spawn the threads still drain and exit on
+        // their own; they just go unjoined
+        let _ = std::thread::Builder::new().name("lane-reaper".into()).spawn(move || {
+            for h in handles {
+                let _ = h.join();
+            }
+        });
+    }
+
     /// Number of executor threads in this lane's pool.
     pub fn executors(&self) -> usize {
         self.handles.len()
     }
 
     fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        if !self.retired {
+            // retired lanes must finish their admitted work; everything
+            // else stops after the batch in progress
+            self.stop.store(true, Ordering::Relaxed);
+        }
         self.queue.close(); // wakes every blocked pop_wait
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -212,6 +240,7 @@ impl Drop for Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::IMG_ELEMS;
     use crate::util::prop::{self, ensure};
 
     /// Echoes each image's first pixel into logit 0, so a response can be
@@ -272,6 +301,45 @@ mod tests {
         }
         assert_eq!(metrics.completed(), 48);
         batcher.join();
+    }
+
+    #[test]
+    fn retire_answers_every_admitted_request() {
+        // the hot-swap guarantee: a retired lane drains everything that
+        // was admitted before the queue closed — nothing is dropped
+        let queue = Arc::new(BoundedQueue::new(256));
+        let batcher = Batcher::spawn(
+            Arc::clone(&queue),
+            Arc::new(EchoBackend),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(50), executors: 2 },
+            Arc::new(Metrics::new()),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..32u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let mut image = vec![0.0f32; IMG_ELEMS];
+            image[0] = i as f32;
+            queue
+                .try_push(InferRequest { id: i, image, enqueued: Instant::now(), resp: tx })
+                .unwrap();
+            rxs.push((i, rx));
+        }
+        batcher.retire();
+        // post-retire admissions are refused...
+        assert!(queue
+            .try_push(InferRequest {
+                id: 999,
+                image: vec![0.0; IMG_ELEMS],
+                enqueued: Instant::now(),
+                resp: std::sync::mpsc::channel().0,
+            })
+            .is_err());
+        // ...but every admitted request is still answered
+        for (i, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert_eq!(resp.id, i);
+            assert_eq!(resp.logits[0], i as f32);
+        }
     }
 
     #[test]

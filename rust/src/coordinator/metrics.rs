@@ -89,6 +89,18 @@ impl Metrics {
         self.counters.lock().unwrap().completed
     }
 
+    pub fn failed(&self) -> u64 {
+        self.counters.lock().unwrap().failed
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.counters.lock().unwrap().submitted
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.counters.lock().unwrap().rejected
+    }
+
     /// JSON snapshot (served by the `stats` op and printed by the CLI).
     pub fn snapshot(&self) -> Json {
         let c = self.counters.lock().unwrap();

@@ -44,7 +44,15 @@
 //! submission order.  Blocking entry points re-order by request id;
 //! `Router::submit_group` exposes completion order on one shared
 //! channel, which is what the server's `classify_batch_stream` op
-//! streams to clients frame by frame.  The full request lifecycle is
+//! streams to clients frame by frame.
+//!
+//! Lanes have a **runtime lifecycle**: the model registry
+//! ([`crate::registry`]) spawns one lane per published `name@version`
+//! entry ([`Router::add_lane`]) and retires lanes gracefully on unload
+//! ([`Router::remove_lane`] → [`Batcher::retire`]: the queue closes,
+//! admitted requests drain, threads reap in the background), so model
+//! versions hot-swap without dropping a request and a batch can never
+//! mix two versions' weights.  The full request lifecycle is
 //! diagrammed in `docs/ARCHITECTURE.md`, the wire format in
 //! `docs/PROTOCOL.md`.
 

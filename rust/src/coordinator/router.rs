@@ -1,10 +1,20 @@
 //! The router: the serving front door.  Owns one (queue, batcher,
 //! backend, metrics) lane per registered model variant and routes
 //! submissions by variant name.
+//!
+//! Lanes are **dynamic**: [`Router::add_lane`] spawns a new lane at
+//! runtime and [`Router::remove_lane`] retires one gracefully (the
+//! queue closes so nothing new is admitted, the executors drain every
+//! already-admitted request, and the threads are reaped in the
+//! background).  This is the substrate the model registry
+//! ([`crate::registry`]) drives: each published `name@version` entry
+//! owns one lane, so a batch can never mix model versions, and in-flight
+//! work finishes on the old version while new admissions route to the
+//! new one.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use super::backend::{InferBackend, IMG_ELEMS};
@@ -17,6 +27,8 @@ use crate::util::json::{Json, JsonObj};
 #[derive(Debug)]
 pub enum RouteError {
     UnknownVariant(String, String),
+    /// `add_lane` refused a duplicate lane name.
+    LaneExists(String),
     Rejected(PushError),
     BadPayload(usize),
     /// The lane's batcher died before answering (worker crash).
@@ -26,6 +38,7 @@ pub enum RouteError {
 crate::error_enum_impls!(RouteError {
     RouteError::UnknownVariant(name, avail) =>
         ("unknown model variant {name:?} (available: {avail})"),
+    RouteError::LaneExists(name) => ("lane {name:?} already registered"),
     RouteError::Rejected(e) => ("admission rejected: {e}"),
     RouteError::BadPayload(n) => ("image payload must be {IMG_ELEMS} floats, got {n}"),
     RouteError::BackendGone => ("backend dropped the response channel"),
@@ -36,7 +49,20 @@ from { PushError => RouteError::Rejected });
 struct Lane {
     queue: Arc<BoundedQueue<InferRequest>>,
     metrics: Arc<Metrics>,
-    _batcher: Batcher,
+    /// Taken (and retired) by `remove_lane`; dropped with the router
+    /// otherwise.  Behind a mutex because lanes are shared as `Arc`s
+    /// with in-flight submitters while an admin thread retires them.
+    batcher: Mutex<Option<Batcher>>,
+}
+
+impl Lane {
+    fn spawn(queue_capacity: usize, policy: BatchPolicy, backend: Arc<dyn InferBackend>) -> Self {
+        let queue = Arc::new(BoundedQueue::new(queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let batcher =
+            Batcher::spawn(Arc::clone(&queue), backend, policy, Arc::clone(&metrics));
+        Self { queue, metrics, batcher: Mutex::new(Some(batcher)) }
+    }
 }
 
 /// One image's slot in a group submission.  Every slot owns a real,
@@ -78,11 +104,13 @@ impl GroupSubmission {
     }
 }
 
-/// Multi-variant serving router.
+/// Multi-variant serving router with runtime lane lifecycle.
 pub struct Router {
-    lanes: HashMap<String, Lane>,
-    default_variant: String,
+    lanes: RwLock<HashMap<String, Arc<Lane>>>,
+    default_variant: RwLock<String>,
     next_id: AtomicU64,
+    queue_capacity: usize,
+    policy: BatchPolicy,
 }
 
 impl Router {
@@ -90,14 +118,111 @@ impl Router {
         RouterBuilder { lanes: Vec::new(), queue_capacity: 1024, policy: BatchPolicy::default() }
     }
 
-    fn lane(&self, variant: &str) -> Result<&Lane, RouteError> {
-        let key = if variant.is_empty() { &self.default_variant } else { variant };
-        self.lanes.get(key).ok_or_else(|| {
+    /// An empty router whose lanes are managed entirely at runtime (the
+    /// registry's constructor).  `add_lane` / `remove_lane` /
+    /// `set_default` drive the lifecycle; every lane shares `policy`
+    /// (including its `executors` pool size) and `queue_capacity`.
+    pub fn new_dynamic(queue_capacity: usize, policy: BatchPolicy) -> Self {
+        Self {
+            lanes: RwLock::new(HashMap::new()),
+            default_variant: RwLock::new(String::new()),
+            next_id: AtomicU64::new(1),
+            queue_capacity,
+            policy,
+        }
+    }
+
+    fn lane(&self, variant: &str) -> Result<Arc<Lane>, RouteError> {
+        // never hold the default-variant and lane-map locks together
+        // (add_lane takes them in sequence; nesting could deadlock)
+        let key = if variant.is_empty() {
+            self.default_variant.read().unwrap().clone()
+        } else {
+            variant.to_string()
+        };
+        let lanes = self.lanes.read().unwrap();
+        lanes.get(&key).cloned().ok_or_else(|| {
             RouteError::UnknownVariant(
-                key.to_string(),
-                self.lanes.keys().cloned().collect::<Vec<_>>().join(", "),
+                key.clone(),
+                lanes.keys().cloned().collect::<Vec<_>>().join(", "),
             )
         })
+    }
+
+    /// Spawn a new lane for `backend` under `name`, using the router's
+    /// shared policy and queue capacity.  The first lane ever added
+    /// becomes the default variant (unless one was already set).
+    pub fn add_lane(
+        &self,
+        name: impl Into<String>,
+        backend: Arc<dyn InferBackend>,
+    ) -> Result<(), RouteError> {
+        let name = name.into();
+        {
+            let mut lanes = self.lanes.write().unwrap();
+            if lanes.contains_key(&name) {
+                return Err(RouteError::LaneExists(name));
+            }
+            let lane = Lane::spawn(self.queue_capacity, self.policy, backend);
+            lanes.insert(name.clone(), Arc::new(lane));
+        }
+        let mut def = self.default_variant.write().unwrap();
+        if def.is_empty() {
+            *def = name;
+        }
+        Ok(())
+    }
+
+    /// Retire a lane: unregister it (new submissions fail with
+    /// `UnknownVariant`, racing ones with a closed-queue rejection),
+    /// then let its executors drain every already-admitted request
+    /// before the threads are reaped in the background.  If the removed
+    /// lane was the default variant, the default is cleared rather than
+    /// left dangling — the empty-variant route then fails with a
+    /// structured error until `set_default` (or the next first
+    /// `add_lane`) re-points it.
+    pub fn remove_lane(&self, name: &str) -> Result<(), RouteError> {
+        let lane = {
+            let mut lanes = self.lanes.write().unwrap();
+            match lanes.remove(name) {
+                Some(lane) => lane,
+                None => {
+                    return Err(RouteError::UnknownVariant(
+                        name.to_string(),
+                        lanes.keys().cloned().collect::<Vec<_>>().join(", "),
+                    ))
+                }
+            }
+        };
+        {
+            let mut def = self.default_variant.write().unwrap();
+            if *def == name {
+                def.clear();
+            }
+        }
+        if let Some(batcher) = lane.batcher.lock().unwrap().take() {
+            batcher.retire();
+        }
+        Ok(())
+    }
+
+    /// Re-point the empty-variant (`""`) route at `name`.
+    pub fn set_default(&self, name: &str) -> Result<(), RouteError> {
+        {
+            let lanes = self.lanes.read().unwrap();
+            if !lanes.contains_key(name) {
+                return Err(RouteError::UnknownVariant(
+                    name.to_string(),
+                    lanes.keys().cloned().collect::<Vec<_>>().join(", "),
+                ));
+            }
+        }
+        *self.default_variant.write().unwrap() = name.to_string();
+        Ok(())
+    }
+
+    pub fn has_lane(&self, name: &str) -> bool {
+        self.lanes.read().unwrap().contains_key(name)
     }
 
     fn alloc_id(&self) -> RequestId {
@@ -234,13 +359,13 @@ impl Router {
     }
 
     pub fn variants(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.lanes.keys().cloned().collect();
+        let mut v: Vec<String> = self.lanes.read().unwrap().keys().cloned().collect();
         v.sort();
         v
     }
 
-    pub fn default_variant(&self) -> &str {
-        &self.default_variant
+    pub fn default_variant(&self) -> String {
+        self.default_variant.read().unwrap().clone()
     }
 
     pub fn metrics(&self, variant: &str) -> Result<Arc<Metrics>, RouteError> {
@@ -249,18 +374,19 @@ impl Router {
 
     /// Aggregate stats across all lanes.
     pub fn stats(&self) -> Json {
+        let lanes = self.lanes.read().unwrap();
         let mut obj = JsonObj::new();
-        let mut names: Vec<&String> = self.lanes.keys().collect();
+        let mut names: Vec<&String> = lanes.keys().collect();
         names.sort();
         for name in names {
-            obj.insert(name.clone(), self.lanes[name].metrics.snapshot());
+            obj.insert(name.clone(), lanes[name].metrics.snapshot());
         }
         Json::Obj(obj)
     }
 
     /// Close all queues (drains in-flight work; batchers exit).
     pub fn shutdown(&self) {
-        for lane in self.lanes.values() {
+        for lane in self.lanes.read().unwrap().values() {
             lane.queue.close();
         }
     }
@@ -291,20 +417,11 @@ impl RouterBuilder {
 
     pub fn build(self) -> Router {
         assert!(!self.lanes.is_empty(), "router needs at least one variant");
-        let default_variant = self.lanes[0].0.clone();
-        let mut lanes = HashMap::new();
+        let router = Router::new_dynamic(self.queue_capacity, self.policy);
         for (name, backend) in self.lanes {
-            let queue = Arc::new(BoundedQueue::new(self.queue_capacity));
-            let metrics = Arc::new(Metrics::new());
-            let batcher = Batcher::spawn(
-                Arc::clone(&queue),
-                backend,
-                self.policy,
-                Arc::clone(&metrics),
-            );
-            lanes.insert(name, Lane { queue, metrics, _batcher: batcher });
+            router.add_lane(name, backend).expect("duplicate variant registered");
         }
-        Router { lanes, default_variant, next_id: AtomicU64::new(1) }
+        router
     }
 }
 
@@ -438,6 +555,45 @@ mod tests {
         assert_eq!(got[0].id, group.slots[0].id);
         assert_eq!(got[1].id, group.slots[3].id);
         assert!(got.iter().all(|resp| resp.error.is_none()));
+        r.shutdown();
+    }
+
+    #[test]
+    fn dynamic_lane_lifecycle_add_default_remove() {
+        let r = Router::new_dynamic(64, BatchPolicy::default());
+        assert!(r.variants().is_empty());
+        assert!(matches!(r.infer_blocking("", image(1)), Err(RouteError::UnknownVariant(..))));
+
+        let be_a: Arc<dyn InferBackend> =
+            Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 1), 1));
+        let be_b: Arc<dyn InferBackend> =
+            Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 2), 1));
+        r.add_lane("m@1", Arc::clone(&be_a)).unwrap();
+        // first lane becomes the default route
+        assert_eq!(r.default_variant(), "m@1");
+        assert!(r.infer_blocking("", image(2)).unwrap().error.is_none());
+
+        // duplicates are refused
+        assert!(matches!(r.add_lane("m@1", be_a), Err(RouteError::LaneExists(_))));
+
+        r.add_lane("m@2", be_b).unwrap();
+        assert_eq!(r.variants(), vec!["m@1", "m@2"]);
+        r.set_default("m@2").unwrap();
+        assert_eq!(r.default_variant(), "m@2");
+        assert!(matches!(r.set_default("nope"), Err(RouteError::UnknownVariant(..))));
+
+        // retire the old version: it disappears from routing...
+        r.remove_lane("m@1").unwrap();
+        assert!(!r.has_lane("m@1"));
+        assert!(matches!(r.infer_blocking("m@1", image(3)), Err(RouteError::UnknownVariant(..))));
+        assert!(matches!(r.remove_lane("m@1"), Err(RouteError::UnknownVariant(..))));
+        // ...while the new default keeps serving
+        assert!(r.infer_blocking("", image(4)).unwrap().error.is_none());
+        // removing the default lane clears the default instead of
+        // leaving it dangling at a dead name
+        r.remove_lane("m@2").unwrap();
+        assert_eq!(r.default_variant(), "");
+        assert!(matches!(r.infer_blocking("", image(5)), Err(RouteError::UnknownVariant(..))));
         r.shutdown();
     }
 

@@ -8,11 +8,12 @@
 //!   xnor-popcount GEMM, fused im2col+pack, OR-pool, packed FC;
 //! * **L2** JAX model (`python/compile/model.py`) — AOT-lowered to HLO
 //!   text artifacts at build time;
-//! * **L3** this crate — the serving coordinator (`coordinator`,
-//!   `server`), the PJRT runtime that executes the artifacts
-//!   (`runtime`), a pure-Rust engine implementing the same kernels for
-//!   the CPU hot path (`bnn`), and every substrate the system needs
-//!   (`util`, `input`, `dataset`, `platform`).
+//! * **L3** this crate — the serving coordinator (`coordinator`), the
+//!   hot-swappable versioned model store and admin plane (`registry`),
+//!   the TCP front end (`server`), the PJRT runtime that executes the
+//!   artifacts (`runtime`), a pure-Rust engine implementing the same
+//!   kernels for the CPU hot path (`bnn`), and every substrate the
+//!   system needs (`util`, `input`, `dataset`, `platform`).
 //!
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt` + weight/test containers once, and the `repro`
@@ -47,6 +48,8 @@ pub mod input {
 }
 
 pub mod platform;
+
+pub mod registry;
 
 pub mod runtime;
 

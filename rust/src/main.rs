@@ -13,12 +13,13 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 use bcnn::bnn::network::{BcnnNetwork, FloatNetwork, CLASSES};
-use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router, RuntimeBackend};
+use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, RuntimeBackend};
 use bcnn::dataset::synth;
 use bcnn::dataset::testset::TestSet;
 use bcnn::input::binarize::Scheme;
 use bcnn::input::image;
-use bcnn::runtime::Artifacts;
+use bcnn::registry::{parse_model_ref, ModelRegistry};
+use bcnn::runtime::{Artifacts, RegistryManifest};
 use bcnn::server::Server;
 use bcnn::util::cli::{Args, CliError};
 use bcnn::util::error::AppResult;
@@ -91,32 +92,41 @@ fn engine_backend(artifacts_dir: &str, variant: &str, threads: usize) -> AppResu
 
 fn cmd_serve(raw: &[String]) -> AppResult<()> {
     let a = Args::new("repro serve", "start the TCP serving loop")
-        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("artifacts", "artifacts", "artifacts directory (classic --variants mode)")
+        .opt("models", "", "model-registry dir (registry.json + weights); enables load_model")
+        .opt("default", "", "default model, name or name@version (requests naming none)")
         .opt("addr", "127.0.0.1:7878", "bind address")
-        .opt("variants", "rgb,none,float", "comma-separated variants to load")
-        .opt("backend", "engine", "engine | pjrt")
+        .opt("variants", "rgb,none,float", "variants to load (ignored with --models)")
+        .opt("backend", "engine", "engine | pjrt (classic mode)")
         .opt("max-batch", "1", "dynamic batcher max batch")
         .opt("batch-window-us", "200", "batch window in microseconds")
         .opt("queue-cap", "1024", "admission queue capacity")
         .opt("threads", "0", "engine worker threads (0 = all cores)")
         .opt("executors", "0", "batched workers per lane (0 = auto from host profile)")
+        .opt("write-timeout-ms", "10000", "per-session write deadline in ms (0 = disabled)")
         .parse(raw)?;
-    let dir = a.get("artifacts");
     let threads = match a.get_usize("threads")? {
         0 => default_threads(),
         n => n,
     };
-    let variants: Vec<String> = a
-        .get("variants")
-        .split(',')
-        .filter(|v| !v.is_empty())
-        .map(str::to_string)
-        .collect();
+    let models_dir = a.get_nonempty("models");
+    // parse the manifest once; the same snapshot sizes the executor
+    // pools AND drives the startup loads below, so they can't diverge
+    let manifest = match &models_dir {
+        Some(dir) => Some(RegistryManifest::load(dir)?),
+        None => None,
+    };
+    // what the registry starts with: manifest entries (registry mode)
+    // or the classic --variants list — also sizes the executor pools
+    let initial_lanes = match &manifest {
+        Some(m) => m.entries.len(),
+        None => a.get("variants").split(',').filter(|v| !v.is_empty()).count(),
+    };
     // auto-size from the operator's core budget: `threads` is
     // default_threads() unless --threads capped it, and the cap must
     // bound executor spawning too
     let executors = match a.get_usize_in("executors", 0, 64)? {
-        0 => bcnn::platform::profiles::recommended_executors(threads, variants.len()),
+        0 => bcnn::platform::profiles::recommended_executors(threads, initial_lanes.max(1)),
         n => n,
     };
     let policy = BatchPolicy {
@@ -124,45 +134,102 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
         max_wait: std::time::Duration::from_micros(a.get_u64("batch-window-us")?),
         executors,
     };
-    let mut builder = Router::builder().policy(policy).queue_capacity(a.get_usize("queue-cap")?);
-    let backend_kind = a.get("backend");
-    let artifacts = Arc::new(Artifacts::load(&dir)?);
-    for variant in variants.iter().map(String::as_str) {
-        let backend: Arc<dyn InferBackend> = match backend_kind.as_str() {
-            "engine" => engine_backend(&dir, variant, threads)?,
-            "pjrt" => {
-                let names: Vec<(usize, String)> = artifacts
-                    .models
-                    .iter()
-                    .filter(|m| {
-                        if variant == "float" {
-                            m.kind == "float"
-                        } else {
-                            m.scheme == variant && m.kind == "bcnn_ref"
-                        }
-                    })
-                    .map(|m| (m.batch, m.name.clone()))
-                    .collect();
-                app_ensure!(!names.is_empty(), "no artifacts for variant {variant}");
-                Arc::new(RuntimeBackend::spawn(
-                    Arc::clone(&artifacts),
-                    names,
-                    format!("pjrt/{variant}"),
-                )?)
-            }
-            other => app_bail!("unknown backend {other:?}"),
-        };
-        builder = builder.variant(variant, backend);
+    let mut builder = ModelRegistry::builder()
+        .policy(policy)
+        .queue_capacity(a.get_usize("queue-cap")?)
+        .engine_threads(threads);
+    if let Some(dir) = &models_dir {
+        builder = builder.models_dir(dir);
     }
-    let router = Arc::new(builder.build());
-    let server = Arc::new(Server::new(router, CLASSES.iter().map(|s| s.to_string()).collect()));
+    let registry = builder.build();
+
+    let backend_kind = a.get("backend");
+    if let Some(manifest) = manifest {
+        // registry mode: load + validate + publish every manifest entry
+        // (checksums verified, smoke-inferred) via the background loader
+        app_ensure!(
+            !manifest.entries.is_empty(),
+            "registry manifest in {} lists no models",
+            manifest.dir.display()
+        );
+        for entry in &manifest.entries {
+            let key = registry
+                .load_model(&entry.name, entry.version)
+                .map_err(|e| app_err!("loading {}: {e}", entry.key()))?;
+            println!("loaded {key} ({} / {})", entry.kind, entry.scheme);
+        }
+        // --default wins over the manifest's default; first entry otherwise
+        let default_ref = a
+            .get_nonempty("default")
+            .or(manifest.default_model)
+            .unwrap_or_else(|| manifest.entries[0].name.clone());
+        let (name, version) = parse_model_ref(&default_ref).map_err(|e| app_err!("{e}"))?;
+        registry.set_default(&name, version).map_err(|e| app_err!("{e}"))?;
+    } else {
+        // classic mode: each --variants entry becomes version 1 of a
+        // same-named registry entry
+        let artifacts = Arc::new(Artifacts::load(a.get("artifacts"))?);
+        let dir = a.get("artifacts");
+        for variant in a.get("variants").split(',').filter(|v| !v.is_empty()) {
+            let (kind, backend): (&str, Arc<dyn InferBackend>) = match backend_kind.as_str() {
+                "engine" => {
+                    let kind = if variant == "float" { "float" } else { "bcnn" };
+                    (kind, engine_backend(&dir, variant, threads)?)
+                }
+                "pjrt" => {
+                    let names: Vec<(usize, String)> = artifacts
+                        .models
+                        .iter()
+                        .filter(|m| {
+                            if variant == "float" {
+                                m.kind == "float"
+                            } else {
+                                m.scheme == variant && m.kind == "bcnn_ref"
+                            }
+                        })
+                        .map(|m| (m.batch, m.name.clone()))
+                        .collect();
+                    app_ensure!(!names.is_empty(), "no artifacts for variant {variant}");
+                    (
+                        "pjrt",
+                        Arc::new(RuntimeBackend::spawn(
+                            Arc::clone(&artifacts),
+                            names,
+                            format!("pjrt/{variant}"),
+                        )?),
+                    )
+                }
+                other => app_bail!("unknown backend {other:?}"),
+            };
+            registry
+                .publish_backend(variant, 1, kind, variant, None, backend)
+                .map_err(|e| app_err!("publishing {variant}: {e}"))?;
+        }
+        if let Some(default_ref) = a.get_nonempty("default") {
+            let (name, version) = parse_model_ref(&default_ref).map_err(|e| app_err!("{e}"))?;
+            registry.set_default(&name, version).map_err(|e| app_err!("{e}"))?;
+        }
+    }
+
+    let write_timeout = match a.get_u64("write-timeout-ms")? {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms)),
+    };
+    let server = Arc::new(
+        Server::new(Arc::clone(&registry), CLASSES.iter().map(|s| s.to_string()).collect())
+            .with_write_timeout(write_timeout),
+    );
     let stop = Arc::new(AtomicBool::new(false));
     let addr = server.serve(&a.get("addr"), threads.max(2), stop)?;
     println!(
-        "serving on {addr} (backend={backend_kind}, max_batch={}, executors={}/lane)",
-        policy.max_batch, policy.executors
+        "serving on {addr} (default={}, max_batch={}, executors={}/lane, write_timeout={:?})",
+        registry.default_key(),
+        policy.max_batch,
+        policy.executors,
+        write_timeout,
     );
     println!("protocol: line JSON, e.g. {{\"op\":\"classify_synth\",\"index\":0}}");
+    println!("admin ops: load_model / unload_model / set_default / list_models");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

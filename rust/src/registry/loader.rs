@@ -1,0 +1,205 @@
+//! Background artifact loader: the registry's parse/validate pipeline,
+//! run on a dedicated thread so weight-file IO and parsing never block
+//! a serving or session thread.
+//!
+//! Every load runs the same gauntlet before an entry may be published:
+//!
+//! 1. manifest lookup (`registry.json`, re-read per load so entries
+//!    dropped into the directory while the server runs are visible);
+//! 2. FNV-1a 64 checksum over the raw weight-file bytes against the
+//!    manifest's `fnv1a64:<hex>` declaration;
+//! 3. tensor-container parse + network construction (shape-checked);
+//! 4. smoke inference: one deterministic synthetic image must produce
+//!    `NUM_CLASSES` finite logits.
+//!
+//! A failure at any stage is a structured [`RegistryError::Load`]; the
+//! registry never publishes a backend that did not pass all four.
+
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+
+use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
+use crate::coordinator::{EngineBackend, InferBackend};
+use crate::dataset::synth;
+use crate::input::binarize::Scheme;
+use crate::runtime::RegistryManifest;
+use crate::util::tensorio::TensorFile;
+
+use super::RegistryError;
+
+/// FNV-1a 64-bit hash — the registry's artifact checksum.  Chosen for
+/// being dependency-free and fast over multi-megabyte weight files; it
+/// guards against truncation, corruption, and copy-paste mixups, not
+/// adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Render a checksum the way the manifest declares it.
+pub fn format_checksum(sum: u64) -> String {
+    format!("fnv1a64:{sum:016x}")
+}
+
+/// Parse a manifest checksum declaration (`fnv1a64:<hex>`).
+pub fn parse_checksum(s: &str) -> Result<u64, RegistryError> {
+    let hex = s.strip_prefix("fnv1a64:").ok_or_else(|| {
+        RegistryError::Load(format!("checksum {s:?} must start with \"fnv1a64:\""))
+    })?;
+    u64::from_str_radix(hex, 16)
+        .map_err(|e| RegistryError::Load(format!("checksum {s:?}: {e}")))
+}
+
+/// A fully-validated model, ready for publication.
+pub(crate) struct Loaded {
+    pub kind: String,
+    pub scheme: String,
+    pub checksum: u64,
+    pub backend: Arc<dyn InferBackend>,
+}
+
+struct Job {
+    name: String,
+    version: u32,
+    reply: mpsc::Sender<Result<Loaded, RegistryError>>,
+}
+
+/// Handle to the background loader thread.
+pub(crate) struct Loader {
+    /// `Some` for the loader's lifetime; dropped first in `drop` so the
+    /// thread's `recv` loop ends before the join.
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Loader {
+    pub fn spawn(dir: PathBuf, engine_threads: usize) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("model-loader".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    let result = load_entry(&dir, &job.name, job.version, engine_threads);
+                    let _ = job.reply.send(result);
+                }
+            })
+            .expect("spawn model loader");
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Run one load on the loader thread and wait for the outcome.  The
+    /// calling (admin session) thread blocks; serving lanes never do.
+    pub fn load(&self, name: &str, version: u32) -> Result<Loaded, RegistryError> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or(RegistryError::LoaderGone)?
+            .send(Job { name: name.to_string(), version, reply })
+            .map_err(|_| RegistryError::LoaderGone)?;
+        rx.recv().map_err(|_| RegistryError::LoaderGone)?
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        self.tx = None; // close the channel; the thread drains and exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn load_err(e: impl std::fmt::Display) -> RegistryError {
+    RegistryError::Load(e.to_string())
+}
+
+/// The full validation pipeline for one manifest entry (see the module
+/// docs for the stages).
+fn load_entry(
+    dir: &Path,
+    name: &str,
+    version: u32,
+    threads: usize,
+) -> Result<Loaded, RegistryError> {
+    let manifest = RegistryManifest::load(dir).map_err(load_err)?;
+    let spec = manifest.entry(name, version).map_err(load_err)?.clone();
+    let path = manifest.path_of(&spec.weights_file);
+    let bytes =
+        std::fs::read(&path).map_err(|e| RegistryError::Load(format!("{}: {e}", path.display())))?;
+    let want = parse_checksum(&spec.checksum)?;
+    let got = fnv1a64(&bytes);
+    if got != want {
+        return Err(RegistryError::Load(format!(
+            "checksum mismatch for {}: manifest {}, file {}",
+            spec.weights_file,
+            format_checksum(want),
+            format_checksum(got)
+        )));
+    }
+    let tf = TensorFile::load(&path).map_err(load_err)?;
+    let backend: Arc<dyn InferBackend> = match spec.kind.as_str() {
+        "float" => {
+            Arc::new(EngineBackend::float(FloatNetwork::from_tensor_file(&tf).map_err(load_err)?, threads))
+        }
+        "bcnn" => {
+            let scheme = Scheme::parse(&spec.scheme).ok_or_else(|| {
+                RegistryError::Load(format!(
+                    "unknown scheme {:?} (none|rgb|gray|lbp)",
+                    spec.scheme
+                ))
+            })?;
+            Arc::new(EngineBackend::bcnn(
+                BcnnNetwork::from_tensor_file(&tf, scheme).map_err(load_err)?,
+                threads,
+            ))
+        }
+        other => {
+            return Err(RegistryError::Load(format!("unknown kind {other:?} (bcnn|float)")))
+        }
+    };
+    smoke_test(&*backend)?;
+    Ok(Loaded { kind: spec.kind, scheme: spec.scheme, checksum: got, backend })
+}
+
+/// One deterministic synthetic image through a freshly-built backend:
+/// publication is refused unless it answers `NUM_CLASSES` finite
+/// logits.  Catches weight/scheme mismatches and poisoned containers
+/// before any client request can reach them.
+pub(crate) fn smoke_test(backend: &dyn InferBackend) -> Result<(), RegistryError> {
+    let img = synth::render_vehicle(0, synth::DEFAULT_SEED).image;
+    let logits = backend
+        .infer_batch(&img)
+        .map_err(|e| RegistryError::Load(format!("smoke inference failed: {e}")))?;
+    if logits.len() != NUM_CLASSES || logits.iter().any(|v| !v.is_finite()) {
+        return Err(RegistryError::Load(format!(
+            "smoke inference produced {} logits (want {NUM_CLASSES}, all finite)",
+            logits.len()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn checksum_roundtrip_and_rejects() {
+        let sum = fnv1a64(b"weights");
+        assert_eq!(parse_checksum(&format_checksum(sum)).unwrap(), sum);
+        assert!(parse_checksum("crc32:abcd").is_err());
+        assert!(parse_checksum("fnv1a64:not-hex").is_err());
+    }
+}

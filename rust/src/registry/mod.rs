@@ -1,0 +1,784 @@
+//! Hot-swappable model registry: the versioned store behind the
+//! serving plane.
+//!
+//! The paper's central trade — a binarized network giving up 4.4%
+//! accuracy for a 7.4× speedup over its float twin — means a real
+//! deployment wants *several* accuracy/latency points resident at once
+//! (the multi-variant posture FINN argues for, and XNOR-Net's
+//! binary-vs-float accuracy ladder motivates), and wants to move
+//! between them without dropping a connection.  This module provides
+//! that lifecycle:
+//!
+//! * **Versioned entries.**  Every published model is a `name@version`
+//!   key ([`ModelKey`]) owning its *own* coordinator lane (queue +
+//!   executor pool + metrics, via [`Router::add_lane`]) — a batch can
+//!   structurally never mix two versions' weights.
+//! * **Atomic publication.**  Clients resolve model references through
+//!   an immutable route-table snapshot behind an `Arc` swap: a
+//!   request group resolves once, rides its resolved lane to
+//!   completion, and concurrent `load_model` / `set_default` /
+//!   `unload_model` calls swap the snapshot without ever invalidating
+//!   an in-flight resolution.  In-flight batches finish on the old
+//!   version while new admissions see the new one.
+//! * **Validated loads off the hot path.**  A background loader thread
+//!   (`loader.rs`) re-reads `registry.json`, checksums the weight file
+//!   (FNV-1a 64), parses and shape-checks the container, and
+//!   smoke-infers one synthetic image — only then is the entry
+//!   published.  Serving threads never parse artifacts.
+//! * **Graceful retirement.**  Unloading removes the entry from the
+//!   snapshot first, then retires its lane: the queue closes, the
+//!   executors drain every already-admitted request, and the threads
+//!   are reaped in the background ([`crate::coordinator::Batcher::retire`]).
+//!   No admitted request is ever dropped by a swap.
+//!
+//! Wire-level admin (`load_model`, `unload_model`, `set_default`,
+//! `list_models`) lives in [`crate::server::protocol`]; lifecycle
+//! documentation in `docs/ARCHITECTURE.md`.
+
+mod loader;
+
+pub use loader::{fnv1a64, format_checksum, parse_checksum};
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::coordinator::{BatchPolicy, InferBackend, Router};
+use crate::util::json::{Json, JsonObj};
+use crate::util::threadpool::default_threads;
+
+#[derive(Debug)]
+pub enum RegistryError {
+    BadName(String),
+    Exists(String),
+    Unknown(String, String),
+    ServingDefault(String),
+    NoModelsDir,
+    LoaderGone,
+    Load(String),
+}
+
+crate::error_enum_impls!(RegistryError {
+    RegistryError::BadName(n) =>
+        ("invalid model name {n:?} (must be non-empty, no '@' or whitespace)"),
+    RegistryError::Exists(k) => ("model {k} is already loaded"),
+    RegistryError::Unknown(k, avail) => ("unknown model {k:?} (loaded: {avail})"),
+    RegistryError::ServingDefault(k) =>
+        ("model {k} serves the default route; set_default to another entry before unloading"),
+    RegistryError::NoModelsDir => ("server started without --models; load_model is unavailable"),
+    RegistryError::LoaderGone => ("model loader thread is gone"),
+    RegistryError::Load(msg) => ("model load failed: {msg}"),
+});
+
+/// Identity of one published model version.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelKey {
+    pub name: String,
+    pub version: u32,
+}
+
+impl ModelKey {
+    /// The lane key this entry serves under (`name@version`).
+    pub fn lane(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+}
+
+impl std::fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}", self.name, self.version)
+    }
+}
+
+/// Parse a client-facing model reference: `"name"` → `(name, None)`,
+/// `"name@version"` → `(name, Some(version))`.
+pub fn parse_model_ref(s: &str) -> Result<(String, Option<u32>), RegistryError> {
+    match s.split_once('@') {
+        None => {
+            validate_name(s)?;
+            Ok((s.to_string(), None))
+        }
+        Some((name, version)) => {
+            validate_name(name)?;
+            let v: u32 = version
+                .parse()
+                .map_err(|_| RegistryError::BadName(s.to_string()))?;
+            Ok((name.to_string(), Some(v)))
+        }
+    }
+}
+
+fn validate_name(name: &str) -> Result<(), RegistryError> {
+    if name.is_empty() || name.contains('@') || name.contains(char::is_whitespace) {
+        return Err(RegistryError::BadName(name.to_string()));
+    }
+    Ok(())
+}
+
+/// Published-entry metadata (immutable once published).
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub key: ModelKey,
+    /// `"bcnn"` | `"float"` | `"pjrt"` (programmatic publishers may
+    /// extend this).
+    pub kind: String,
+    /// Input-binarization scheme label (`none|rgb|gray|lbp|float`).
+    pub scheme: String,
+    /// FNV-1a 64 of the weight container; `None` for programmatic
+    /// (non-file) publications.
+    pub checksum: Option<u64>,
+}
+
+/// Mutable registry state, guarded by one mutex and only ever touched
+/// by admin operations.
+struct State {
+    /// name → version → metadata.
+    entries: BTreeMap<String, BTreeMap<u32, EntryMeta>>,
+    /// name → the version currently serving the bare-`name` alias.
+    serving: BTreeMap<String, u32>,
+    /// Model *name* the empty model reference routes to.
+    default_name: String,
+}
+
+impl State {
+    fn available(&self) -> String {
+        let mut keys = Vec::new();
+        for (name, versions) in &self.entries {
+            for v in versions.keys() {
+                keys.push(format!("{name}@{v}"));
+            }
+        }
+        keys.join(", ")
+    }
+}
+
+/// Immutable resolution snapshot.  Rebuilt and `Arc`-swapped on every
+/// publication event; readers resolve against a consistent table
+/// without taking the state mutex.
+struct RouteTable {
+    /// Every acceptable model reference → the lane that serves it:
+    /// `name@version` maps to itself, bare `name` to its serving
+    /// version.
+    aliases: HashMap<String, String>,
+    /// Lane serving the empty model reference (empty string = none).
+    default_key: String,
+}
+
+impl RouteTable {
+    fn available(&self) -> String {
+        let mut v: Vec<&str> = self.aliases.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v.join(", ")
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    loads: u64,
+    load_failures: u64,
+    swaps: u64,
+    evictions: u64,
+}
+
+/// The registry: versioned model store + route snapshot + admin plane.
+pub struct ModelRegistry {
+    router: Arc<Router>,
+    state: Mutex<State>,
+    routes: RwLock<Arc<RouteTable>>,
+    counters: Mutex<Counters>,
+    loader: Option<loader::Loader>,
+}
+
+impl ModelRegistry {
+    pub fn builder() -> RegistryBuilder {
+        RegistryBuilder {
+            policy: BatchPolicy::default(),
+            queue_capacity: 1024,
+            engine_threads: 0,
+            models_dir: None,
+        }
+    }
+
+    /// The router whose lanes this registry manages.  Callers resolve a
+    /// model reference first ([`ModelRegistry::resolve`]) and submit to
+    /// the returned lane key.
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Resolve a client-facing model reference (`""` = default, bare
+    /// name, or `name@version`) to the lane key that serves it, against
+    /// the current snapshot.
+    pub fn resolve(&self, model: &str) -> Result<String, RegistryError> {
+        let routes = Arc::clone(&self.routes.read().unwrap());
+        let wanted = if model.is_empty() { routes.default_key.as_str() } else { model };
+        if wanted.is_empty() {
+            return Err(RegistryError::Unknown("<default>".to_string(), routes.available()));
+        }
+        routes
+            .aliases
+            .get(wanted)
+            .cloned()
+            .ok_or_else(|| RegistryError::Unknown(wanted.to_string(), routes.available()))
+    }
+
+    /// Publish an already-constructed backend under `name@version`
+    /// (programmatic path: `serve --variants`, PJRT backends, tests).
+    /// Runs the same smoke gate as file loads; the first published name
+    /// becomes the default.
+    pub fn publish_backend(
+        &self,
+        name: &str,
+        version: u32,
+        kind: &str,
+        scheme: &str,
+        checksum: Option<u64>,
+        backend: Arc<dyn InferBackend>,
+    ) -> Result<String, RegistryError> {
+        validate_name(name)?;
+        loader::smoke_test(&*backend)?;
+        self.publish_validated(
+            EntryMeta {
+                key: ModelKey { name: name.to_string(), version },
+                kind: kind.to_string(),
+                scheme: scheme.to_string(),
+                checksum,
+            },
+            backend,
+        )
+    }
+
+    /// Load `name@version` from the models directory via the background
+    /// loader (checksum + parse + smoke validation) and publish it.
+    /// Serving traffic continues on the existing lanes throughout.
+    pub fn load_model(&self, name: &str, version: u32) -> Result<String, RegistryError> {
+        validate_name(name)?;
+        let loader = self.loader.as_ref().ok_or(RegistryError::NoModelsDir)?;
+        {
+            let st = self.state.lock().unwrap();
+            if st.entries.get(name).is_some_and(|vs| vs.contains_key(&version)) {
+                return Err(RegistryError::Exists(format!("{name}@{version}")));
+            }
+        }
+        match loader.load(name, version) {
+            Ok(loaded) => {
+                let key = self.publish_validated(
+                    EntryMeta {
+                        key: ModelKey { name: name.to_string(), version },
+                        kind: loaded.kind,
+                        scheme: loaded.scheme,
+                        checksum: Some(loaded.checksum),
+                    },
+                    loaded.backend,
+                )?;
+                self.counters.lock().unwrap().loads += 1;
+                Ok(key)
+            }
+            Err(e) => {
+                self.counters.lock().unwrap().load_failures += 1;
+                Err(e)
+            }
+        }
+    }
+
+    fn publish_validated(
+        &self,
+        meta: EntryMeta,
+        backend: Arc<dyn InferBackend>,
+    ) -> Result<String, RegistryError> {
+        let lane_key = meta.key.lane();
+        let mut st = self.state.lock().unwrap();
+        if st
+            .entries
+            .get(&meta.key.name)
+            .is_some_and(|vs| vs.contains_key(&meta.key.version))
+        {
+            return Err(RegistryError::Exists(lane_key));
+        }
+        self.router
+            .add_lane(lane_key.clone(), backend)
+            .map_err(|e| RegistryError::Load(e.to_string()))?;
+        let name = meta.key.name.clone();
+        let version = meta.key.version;
+        st.entries.entry(name.clone()).or_default().insert(version, meta);
+        // a name's first version starts serving its bare alias; later
+        // versions wait for an explicit set_default (hot swaps are
+        // admin-driven, never implicit)
+        st.serving.entry(name.clone()).or_insert(version);
+        if st.default_name.is_empty() {
+            st.default_name = name;
+        }
+        self.rebuild_routes(&st);
+        Ok(lane_key)
+    }
+
+    /// Point the serving alias for `name` at `version`, atomically (one
+    /// snapshot swap: every request line parsed after the swap resolves
+    /// to the new version; groups already resolved finish on the old
+    /// one).  Two intents, split by the `version` argument:
+    ///
+    /// * `Some(v)` — **pin** `name`'s serving version.  The registry
+    ///   default follows only if `name` already *is* the default model,
+    ///   so upgrading a secondary model never hijacks default-route
+    ///   traffic.
+    /// * `None` — make `name` the **default model** (serving its
+    ///   highest loaded version).
+    pub fn set_default(&self, name: &str, version: Option<u32>) -> Result<String, RegistryError> {
+        let mut st = self.state.lock().unwrap();
+        let Some(versions) = st.entries.get(name) else {
+            let avail = st.available();
+            return Err(RegistryError::Unknown(name.to_string(), avail));
+        };
+        let pinned = version;
+        let version = match version {
+            Some(v) => {
+                if !versions.contains_key(&v) {
+                    let avail = st.available();
+                    return Err(RegistryError::Unknown(format!("{name}@{v}"), avail));
+                }
+                v
+            }
+            None => *versions.keys().next_back().expect("published name has >= 1 version"),
+        };
+        let serving_changed = st.serving.insert(name.to_string(), version) != Some(version);
+        let adopt_default =
+            pinned.is_none() || st.default_name.is_empty() || st.default_name == name;
+        let default_changed = adopt_default && st.default_name != name;
+        if adopt_default {
+            st.default_name = name.to_string();
+        }
+        self.rebuild_routes(&st);
+        drop(st);
+        if serving_changed || default_changed {
+            self.counters.lock().unwrap().swaps += 1;
+        }
+        Ok(format!("{name}@{version}"))
+    }
+
+    /// Evict `name@version`.  The entry leaves the route snapshot
+    /// first, then its lane retires gracefully (admitted requests
+    /// drain; threads reap in the background).  The entry serving the
+    /// registry default is protected — repoint the default first.
+    pub fn unload_model(&self, name: &str, version: u32) -> Result<String, RegistryError> {
+        let lane_key = format!("{name}@{version}");
+        let mut st = self.state.lock().unwrap();
+        if !st.entries.get(name).is_some_and(|vs| vs.contains_key(&version)) {
+            let avail = st.available();
+            return Err(RegistryError::Unknown(lane_key, avail));
+        }
+        if st.default_name == name && st.serving.get(name) == Some(&version) {
+            return Err(RegistryError::ServingDefault(lane_key));
+        }
+        let versions = st.entries.get_mut(name).expect("checked above");
+        versions.remove(&version);
+        let remaining_highest = versions.keys().next_back().copied();
+        if versions.is_empty() {
+            st.entries.remove(name);
+        }
+        // re-point (or drop) the bare-name alias if it tracked this one
+        if st.serving.get(name) == Some(&version) {
+            match remaining_highest {
+                Some(v) => {
+                    st.serving.insert(name.to_string(), v);
+                }
+                None => {
+                    st.serving.remove(name);
+                }
+            }
+        }
+        self.rebuild_routes(&st);
+        drop(st);
+        // retire AFTER the snapshot swap: no new resolution reaches the
+        // lane, and its executors drain everything already admitted
+        self.router
+            .remove_lane(&lane_key)
+            .map_err(|e| RegistryError::Load(e.to_string()))?;
+        self.counters.lock().unwrap().evictions += 1;
+        Ok(lane_key)
+    }
+
+    fn rebuild_routes(&self, st: &State) {
+        let mut aliases = HashMap::new();
+        for (name, versions) in &st.entries {
+            for v in versions.keys() {
+                let key = format!("{name}@{v}");
+                aliases.insert(key.clone(), key);
+            }
+            if let Some(v) = st.serving.get(name) {
+                aliases.insert(name.clone(), format!("{name}@{v}"));
+            }
+        }
+        let default_key = st
+            .serving
+            .get(&st.default_name)
+            .map(|v| format!("{}@{v}", st.default_name))
+            .unwrap_or_default();
+        *self.routes.write().unwrap() = Arc::new(RouteTable { aliases, default_key });
+    }
+
+    /// The lane key currently serving the empty model reference
+    /// (empty when nothing is published).
+    pub fn default_key(&self) -> String {
+        self.routes.read().unwrap().default_key.clone()
+    }
+
+    /// One JSON row per resident entry — identity, serving role, and
+    /// its lane's traffic counters (the `list_models` admin op body).
+    pub fn list_models(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let mut rows = Vec::new();
+        for (name, versions) in &st.entries {
+            for (version, meta) in versions {
+                let lane_key = format!("{name}@{version}");
+                let mut row = JsonObj::new();
+                row.insert("model", Json::from(lane_key.as_str()));
+                row.insert("name", Json::from(name.as_str()));
+                row.insert("version", Json::from(*version as usize));
+                row.insert("kind", Json::from(meta.kind.as_str()));
+                row.insert("scheme", Json::from(meta.scheme.as_str()));
+                row.insert(
+                    "checksum",
+                    match meta.checksum {
+                        Some(c) => Json::from(format_checksum(c)),
+                        None => Json::Null,
+                    },
+                );
+                let serving = st.serving.get(name) == Some(version);
+                row.insert("serving", Json::Bool(serving));
+                row.insert("default", Json::Bool(st.default_name == *name && serving));
+                if let Ok(m) = self.router.metrics(&lane_key) {
+                    row.insert("submitted", Json::from(m.submitted() as usize));
+                    row.insert("completed", Json::from(m.completed() as usize));
+                    row.insert("failed", Json::from(m.failed() as usize));
+                    row.insert("rejected", Json::from(m.rejected() as usize));
+                }
+                rows.push(Json::Obj(row));
+            }
+        }
+        Json::Arr(rows)
+    }
+
+    /// Registry lifecycle counters (the `stats` op's `registry`
+    /// section and part of every `list_models` reply).
+    pub fn counters_json(&self) -> Json {
+        let c = self.counters.lock().unwrap();
+        let mut obj = JsonObj::new();
+        obj.insert("loads", Json::from(c.loads as usize));
+        obj.insert("load_failures", Json::from(c.load_failures as usize));
+        obj.insert("swaps", Json::from(c.swaps as usize));
+        obj.insert("evictions", Json::from(c.evictions as usize));
+        Json::Obj(obj)
+    }
+
+    /// Close every lane queue (drains in-flight work; executors exit).
+    pub fn shutdown(&self) {
+        self.router.shutdown();
+    }
+}
+
+/// Builder for [`ModelRegistry`].
+pub struct RegistryBuilder {
+    policy: BatchPolicy,
+    queue_capacity: usize,
+    engine_threads: usize,
+    models_dir: Option<PathBuf>,
+}
+
+impl RegistryBuilder {
+    /// Batch policy shared by every lane the registry spawns
+    /// (including `BatchPolicy::executors`, the per-lane worker pool).
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_capacity = cap;
+        self
+    }
+
+    /// Engine worker threads for backends the loader constructs
+    /// (`0` = all cores).
+    pub fn engine_threads(mut self, threads: usize) -> Self {
+        self.engine_threads = threads;
+        self
+    }
+
+    /// Directory holding `registry.json` + weight containers; enables
+    /// the `load_model` admin op (and the background loader thread).
+    pub fn models_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.models_dir = Some(dir.into());
+        self
+    }
+
+    pub fn build(self) -> Arc<ModelRegistry> {
+        let threads = match self.engine_threads {
+            0 => default_threads(),
+            n => n,
+        };
+        let loader = self.models_dir.map(|dir| loader::Loader::spawn(dir, threads));
+        Arc::new(ModelRegistry {
+            router: Arc::new(Router::new_dynamic(self.queue_capacity, self.policy)),
+            state: Mutex::new(State {
+                entries: BTreeMap::new(),
+                serving: BTreeMap::new(),
+                default_name: String::new(),
+            }),
+            routes: RwLock::new(Arc::new(RouteTable {
+                aliases: HashMap::new(),
+                default_key: String::new(),
+            })),
+            counters: Mutex::new(Counters::default()),
+            loader,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::network::tests_support::{synth_bcnn_network, synth_bcnn_tf, synth_image};
+    use crate::coordinator::EngineBackend;
+    use crate::input::binarize::Scheme;
+
+    fn backend(seed: u64) -> Arc<dyn InferBackend> {
+        Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, seed), 1))
+    }
+
+    fn registry() -> Arc<ModelRegistry> {
+        ModelRegistry::builder().queue_capacity(64).build()
+    }
+
+    #[test]
+    fn parse_model_ref_shapes() {
+        assert_eq!(parse_model_ref("bcnn").unwrap(), ("bcnn".to_string(), None));
+        assert_eq!(parse_model_ref("bcnn@3").unwrap(), ("bcnn".to_string(), Some(3)));
+        assert!(parse_model_ref("").is_err());
+        assert!(parse_model_ref("a@b").is_err());
+        assert!(parse_model_ref("a b").is_err());
+    }
+
+    #[test]
+    fn publish_resolve_and_default_flow() {
+        let r = registry();
+        assert!(r.resolve("").is_err(), "empty registry has no default");
+        let key = r.publish_backend("bcnn", 1, "bcnn", "rgb", None, backend(1)).unwrap();
+        assert_eq!(key, "bcnn@1");
+        // "" and "bcnn" and "bcnn@1" all resolve to the first entry
+        assert_eq!(r.resolve("").unwrap(), "bcnn@1");
+        assert_eq!(r.resolve("bcnn").unwrap(), "bcnn@1");
+        assert_eq!(r.resolve("bcnn@1").unwrap(), "bcnn@1");
+        assert!(r.resolve("bcnn@2").is_err());
+
+        // a second version is resident but NOT serving until set_default
+        r.publish_backend("bcnn", 2, "bcnn", "rgb", None, backend(2)).unwrap();
+        assert_eq!(r.resolve("bcnn").unwrap(), "bcnn@1");
+        assert_eq!(r.resolve("bcnn@2").unwrap(), "bcnn@2");
+        assert_eq!(r.set_default("bcnn", None).unwrap(), "bcnn@2");
+        assert_eq!(r.resolve("bcnn").unwrap(), "bcnn@2");
+        assert_eq!(r.resolve("").unwrap(), "bcnn@2");
+        // explicit version pin rolls back
+        assert_eq!(r.set_default("bcnn", Some(1)).unwrap(), "bcnn@1");
+        assert_eq!(r.default_key(), "bcnn@1");
+        r.shutdown();
+    }
+
+    #[test]
+    fn pinning_a_secondary_model_does_not_hijack_the_default_route() {
+        let r = registry();
+        r.publish_backend("bcnn", 1, "bcnn", "rgb", None, backend(20)).unwrap();
+        r.publish_backend("float", 1, "bcnn", "rgb", None, backend(21)).unwrap();
+        r.publish_backend("float", 2, "bcnn", "rgb", None, backend(22)).unwrap();
+        assert_eq!(r.resolve("").unwrap(), "bcnn@1");
+        // upgrading float's serving version leaves the default on bcnn
+        assert_eq!(r.set_default("float", Some(2)).unwrap(), "float@2");
+        assert_eq!(r.resolve("float").unwrap(), "float@2");
+        assert_eq!(r.resolve("").unwrap(), "bcnn@1", "default must not move");
+        // versionless set_default is the explicit default-model switch
+        assert_eq!(r.set_default("float", None).unwrap(), "float@2");
+        assert_eq!(r.resolve("").unwrap(), "float@2");
+        r.shutdown();
+    }
+
+    #[test]
+    fn duplicate_and_invalid_publications_refused() {
+        let r = registry();
+        r.publish_backend("m", 1, "bcnn", "rgb", None, backend(3)).unwrap();
+        assert!(matches!(
+            r.publish_backend("m", 1, "bcnn", "rgb", None, backend(3)),
+            Err(RegistryError::Exists(_))
+        ));
+        assert!(matches!(
+            r.publish_backend("m@x", 1, "bcnn", "rgb", None, backend(3)),
+            Err(RegistryError::BadName(_))
+        ));
+        r.shutdown();
+    }
+
+    #[test]
+    fn unload_protects_the_serving_default_and_repoints_aliases() {
+        let r = registry();
+        r.publish_backend("m", 1, "bcnn", "rgb", None, backend(4)).unwrap();
+        r.publish_backend("m", 2, "bcnn", "rgb", None, backend(5)).unwrap();
+        // v1 serves the default: refuse to unload it
+        assert!(matches!(r.unload_model("m", 1), Err(RegistryError::ServingDefault(_))));
+        // after the swap, v1 is evictable; the pinned alias dies with it
+        r.set_default("m", Some(2)).unwrap();
+        assert_eq!(r.unload_model("m", 1).unwrap(), "m@1");
+        assert!(r.resolve("m@1").is_err());
+        assert_eq!(r.resolve("m").unwrap(), "m@2");
+        assert_eq!(r.resolve("").unwrap(), "m@2");
+        assert!(matches!(r.unload_model("m", 1), Err(RegistryError::Unknown(..))));
+        // the lane is gone from the router too
+        assert!(!r.router().has_lane("m@1"));
+        assert!(r.router().has_lane("m@2"));
+        r.shutdown();
+    }
+
+    #[test]
+    fn served_requests_flow_through_resolved_lanes() {
+        let r = registry();
+        r.publish_backend("a", 1, "bcnn", "rgb", None, backend(6)).unwrap();
+        r.publish_backend("b", 1, "bcnn", "rgb", None, backend(7)).unwrap();
+        let img = synth_image(1);
+        let lane_a = r.resolve("a").unwrap();
+        let lane_b = r.resolve("b@1").unwrap();
+        let ra = r.router().infer_blocking(&lane_a, img.clone()).unwrap();
+        let rb = r.router().infer_blocking(&lane_b, img).unwrap();
+        assert!(ra.error.is_none() && rb.error.is_none());
+        assert_ne!(ra.logits, rb.logits, "distinct weights, distinct lanes");
+        r.shutdown();
+    }
+
+    #[test]
+    fn counters_track_the_lifecycle() {
+        let r = registry();
+        r.publish_backend("m", 1, "bcnn", "rgb", None, backend(8)).unwrap();
+        r.publish_backend("m", 2, "bcnn", "rgb", None, backend(9)).unwrap();
+        r.set_default("m", Some(2)).unwrap();
+        r.unload_model("m", 1).unwrap();
+        let c = r.counters_json();
+        assert_eq!(c.get("swaps").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(c.get("evictions").unwrap().as_usize().unwrap(), 1);
+        // programmatic publications aren't "loads"
+        assert_eq!(c.get("loads").unwrap().as_usize().unwrap(), 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn list_models_reports_identity_roles_and_traffic() {
+        let r = registry();
+        r.publish_backend("m", 1, "bcnn", "rgb", Some(0xabcd), backend(10)).unwrap();
+        r.publish_backend("m", 2, "bcnn", "rgb", None, backend(11)).unwrap();
+        let lane = r.resolve("m").unwrap();
+        assert!(r.router().infer_blocking(&lane, synth_image(2)).unwrap().error.is_none());
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        let v1 = &rows[0];
+        assert_eq!(v1.get("model").unwrap().as_str().unwrap(), "m@1");
+        assert_eq!(v1.get("scheme").unwrap().as_str().unwrap(), "rgb");
+        assert!(v1.get("serving").unwrap().as_bool().unwrap());
+        assert!(v1.get("default").unwrap().as_bool().unwrap());
+        assert_eq!(
+            v1.get("checksum").unwrap().as_str().unwrap(),
+            "fnv1a64:000000000000abcd"
+        );
+        assert_eq!(v1.get("completed").unwrap().as_usize().unwrap(), 1);
+        let v2 = &rows[1];
+        assert!(!v2.get("serving").unwrap().as_bool().unwrap());
+        assert_eq!(v2.get("checksum").unwrap(), &Json::Null);
+        assert_eq!(v2.get("completed").unwrap().as_usize().unwrap(), 0);
+        r.shutdown();
+    }
+
+    // -- directory/loader path ---------------------------------------------
+
+    fn write_models_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tf1 = synth_bcnn_tf(Scheme::Rgb, 100);
+        tf1.save(dir.join("m_v1.bcnt")).unwrap();
+        let tf2 = synth_bcnn_tf(Scheme::Gray, 200);
+        tf2.save(dir.join("m_v2.bcnt")).unwrap();
+        let sum = |f: &str| {
+            format_checksum(fnv1a64(&std::fs::read(dir.join(f)).unwrap()))
+        };
+        let manifest = format!(
+            r#"{{"version": 1, "default": "m", "models": [
+  {{"name": "m", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "m_v1.bcnt", "checksum": "{}"}},
+  {{"name": "m", "version": 2, "kind": "bcnn", "scheme": "gray",
+    "weights_file": "m_v2.bcnt", "checksum": "{}"}},
+  {{"name": "corrupt", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "m_v1.bcnt", "checksum": "fnv1a64:0000000000000000"}},
+  {{"name": "mismatched", "version": 1, "kind": "bcnn", "scheme": "gray",
+    "weights_file": "m_v1.bcnt", "checksum": "{}"}}
+]}}"#,
+            sum("m_v1.bcnt"),
+            sum("m_v2.bcnt"),
+            sum("m_v1.bcnt"),
+        );
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_model_from_dir_validates_and_publishes() {
+        let dir = write_models_dir("load");
+        let r = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        assert_eq!(r.load_model("m", 1).unwrap(), "m@1");
+        assert_eq!(r.load_model("m", 2).unwrap(), "m@2");
+        // per-scheme metadata came from the manifest
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows[0].get("scheme").unwrap().as_str().unwrap(), "rgb");
+        assert_eq!(rows[1].get("scheme").unwrap().as_str().unwrap(), "gray");
+        // both servable immediately
+        for model in ["m@1", "m@2"] {
+            let lane = r.resolve(model).unwrap();
+            assert!(r.router().infer_blocking(&lane, synth_image(3)).unwrap().error.is_none());
+        }
+        // duplicates and unknown entries refuse cleanly
+        assert!(matches!(r.load_model("m", 1), Err(RegistryError::Exists(_))));
+        assert!(matches!(r.load_model("ghost", 1), Err(RegistryError::Load(_))));
+        let c = r.counters_json();
+        assert_eq!(c.get("loads").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(c.get("load_failures").unwrap().as_usize().unwrap(), 1);
+        r.shutdown();
+    }
+
+    #[test]
+    fn checksum_mismatch_and_scheme_mismatch_refuse_publication() {
+        let dir = write_models_dir("corrupt");
+        let r = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        // declared checksum doesn't match the file bytes
+        let err = r.load_model("corrupt", 1).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        // right bytes, wrong scheme: the shape check catches it before
+        // publication (a gray network can't be built from rgb weights)
+        let err = r.load_model("mismatched", 1).unwrap_err();
+        assert!(matches!(err, RegistryError::Load(_)), "{err}");
+        assert!(r.resolve("corrupt").is_err() && r.resolve("mismatched").is_err());
+        assert_eq!(
+            r.counters_json().get("load_failures").unwrap().as_usize().unwrap(),
+            2
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn load_model_without_dir_is_a_structured_error() {
+        let r = registry();
+        assert!(matches!(r.load_model("m", 1), Err(RegistryError::NoModelsDir)));
+    }
+}

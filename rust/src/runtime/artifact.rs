@@ -12,6 +12,9 @@ pub enum ArtifactError {
     ModelNotFound(String, String),
     LayerNotFound(String),
     BadDType(String),
+    /// A structurally-valid JSON manifest with semantically-invalid
+    /// contents (bad version number, malformed checksum, bad name).
+    BadManifest(String),
 }
 
 crate::error_enum_impls!(ArtifactError {
@@ -21,6 +24,7 @@ crate::error_enum_impls!(ArtifactError {
         ("manifest: model {name:?} not found (available: {avail})"),
     ArtifactError::LayerNotFound(name) => ("manifest: layer {name:?} not found"),
     ArtifactError::BadDType(d) => ("manifest: unsupported dtype {d:?}"),
+    ArtifactError::BadManifest(why) => ("manifest: {why}"),
 }
 source {
     ArtifactError::Io(e) => e,
@@ -217,6 +221,115 @@ impl Artifacts {
     }
 }
 
+// ---------------------------------------------------------------------------
+// registry manifest (`registry.json`)
+// ---------------------------------------------------------------------------
+
+/// One versioned, servable model in a registry directory.
+///
+/// Unlike [`ModelSpec`] (which indexes AOT HLO artifacts for the PJRT
+/// path), a registry entry names a weight container the engine loads
+/// directly, plus the identity the serving plane exposes:
+/// `name@version`, the binarization scheme, and the checksum the loader
+/// verifies before the entry can be published.
+#[derive(Debug, Clone)]
+pub struct RegistryEntrySpec {
+    pub name: String,
+    pub version: u32,
+    /// `"bcnn"` (packed engine) or `"float"` (full-precision baseline).
+    pub kind: String,
+    /// Input-binarization scheme for `bcnn` entries
+    /// (`none|rgb|gray|lbp`); `"float"` for float entries.
+    pub scheme: String,
+    pub weights_file: String,
+    /// `fnv1a64:<16 hex digits>` over the raw bytes of `weights_file`
+    /// (see `registry::fnv1a64`).  Verified on every load.
+    pub checksum: String,
+}
+
+impl RegistryEntrySpec {
+    /// The serving key, `name@version`.
+    pub fn key(&self) -> String {
+        format!("{}@{}", self.name, self.version)
+    }
+}
+
+/// Parsed `<dir>/registry.json`: the catalog of model versions the
+/// serving registry may load at startup or via the `load_model` admin
+/// op.  Shape:
+///
+/// ```text
+/// {"version": 1,
+///  "default": "bcnn",
+///  "models": [
+///    {"name": "bcnn", "version": 1, "kind": "bcnn", "scheme": "rgb",
+///     "weights_file": "weights_bcnn_rgb.bcnt",
+///     "checksum": "fnv1a64:89abcdef01234567"},
+///    ...]}
+/// ```
+pub struct RegistryManifest {
+    pub dir: PathBuf,
+    /// Model *name* to serve when the client names none.
+    pub default_model: Option<String>,
+    pub entries: Vec<RegistryEntrySpec>,
+}
+
+impl RegistryManifest {
+    /// Load `<dir>/registry.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("registry.json"))?;
+        let j = Json::parse(&text)?;
+        let default_model = match j.get_opt("default")? {
+            Some(d) => Some(d.as_str()?.to_string()),
+            None => None,
+        };
+        let mut entries = Vec::new();
+        for m in j.get("models")?.as_arr()? {
+            let name = m.get("name")?.as_str()?.to_string();
+            if name.is_empty() || name.contains('@') || name.contains(char::is_whitespace) {
+                return Err(ArtifactError::BadManifest(format!(
+                    "model name {name:?} must be non-empty with no '@' or whitespace"
+                )));
+            }
+            let version = m.get("version")?.as_usize()?;
+            let version = u32::try_from(version).map_err(|_| {
+                ArtifactError::BadManifest(format!("version {version} of {name:?} exceeds u32"))
+            })?;
+            if version == 0 {
+                return Err(ArtifactError::BadManifest(format!(
+                    "version of {name:?} must be >= 1"
+                )));
+            }
+            entries.push(RegistryEntrySpec {
+                name,
+                version,
+                kind: m.get("kind")?.as_str()?.to_string(),
+                scheme: m.get("scheme")?.as_str()?.to_string(),
+                weights_file: m.get("weights_file")?.as_str()?.to_string(),
+                checksum: m.get("checksum")?.as_str()?.to_string(),
+            });
+        }
+        Ok(Self { dir, default_model, entries })
+    }
+
+    pub fn entry(&self, name: &str, version: u32) -> Result<&RegistryEntrySpec, ArtifactError> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.version == version)
+            .ok_or_else(|| {
+                ArtifactError::ModelNotFound(
+                    format!("{name}@{version}"),
+                    self.entries.iter().map(|e| e.key()).collect::<Vec<_>>().join(", "),
+                )
+            })
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,5 +395,54 @@ mod tests {
         let a = Artifacts::load(&dir).unwrap();
         let err = a.model("nope").unwrap_err();
         assert!(err.to_string().contains("model_bcnn_rgb_b1"));
+    }
+
+    const MINI_REGISTRY: &str = r#"{
+      "version": 1,
+      "default": "bcnn",
+      "models": [
+        {"name": "bcnn", "version": 1, "kind": "bcnn", "scheme": "rgb",
+         "weights_file": "weights_bcnn_rgb.bcnt",
+         "checksum": "fnv1a64:0011223344556677"},
+        {"name": "float", "version": 1, "kind": "float", "scheme": "float",
+         "weights_file": "weights_float.bcnt",
+         "checksum": "fnv1a64:8899aabbccddeeff"}
+      ]
+    }"#;
+
+    fn write_registry(body: &str, tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-manifest-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("registry.json"), body).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_registry_manifest() {
+        let dir = write_registry(MINI_REGISTRY, "ok");
+        let r = RegistryManifest::load(&dir).unwrap();
+        assert_eq!(r.default_model.as_deref(), Some("bcnn"));
+        assert_eq!(r.entries.len(), 2);
+        let e = r.entry("bcnn", 1).unwrap();
+        assert_eq!(e.key(), "bcnn@1");
+        assert_eq!(e.scheme, "rgb");
+        assert!(e.checksum.starts_with("fnv1a64:"));
+        assert!(r.path_of(&e.weights_file).ends_with("weights_bcnn_rgb.bcnt"));
+        let err = r.entry("bcnn", 9).unwrap_err();
+        assert!(err.to_string().contains("bcnn@1"), "{err}");
+    }
+
+    #[test]
+    fn registry_manifest_rejects_bad_names_and_versions() {
+        for (tag, body) in [
+            ("atname", r#"{"models":[{"name":"a@b","version":1,"kind":"bcnn","scheme":"rgb","weights_file":"w","checksum":"c"}]}"#),
+            ("emptyname", r#"{"models":[{"name":"","version":1,"kind":"bcnn","scheme":"rgb","weights_file":"w","checksum":"c"}]}"#),
+            ("zerover", r#"{"models":[{"name":"a","version":0,"kind":"bcnn","scheme":"rgb","weights_file":"w","checksum":"c"}]}"#),
+        ] {
+            let dir = write_registry(body, tag);
+            let err = RegistryManifest::load(&dir).unwrap_err();
+            assert!(matches!(err, ArtifactError::BadManifest(_)), "{tag}: {err}");
+        }
     }
 }

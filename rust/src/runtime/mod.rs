@@ -9,5 +9,7 @@ pub mod artifact;
 pub mod client;
 pub mod xla_stub;
 
-pub use artifact::{ArtifactError, Artifacts, LayerSpec, ModelSpec};
+pub use artifact::{
+    ArtifactError, Artifacts, LayerSpec, ModelSpec, RegistryEntrySpec, RegistryManifest,
+};
 pub use client::{ModelRuntime, RuntimeError};

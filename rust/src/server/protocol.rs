@@ -3,22 +3,33 @@
 //! Requests (one JSON object per line):
 //!
 //! ```text
-//!     {"op": "classify", "model": "bcnn_rgb", "pixels": [27648 floats]}
-//!     {"op": "classify_batch", "model": "bcnn_rgb",
+//!     {"op": "classify", "model": "bcnn", "pixels": [27648 floats]}
+//!     {"op": "classify_batch", "model": "bcnn@2",
 //!      "images": [[27648 floats], [27648 floats], ...]}
-//!     {"op": "classify_batch_stream", "model": "bcnn_rgb",
+//!     {"op": "classify_batch_stream", "model": "bcnn",
 //!      "images": [[27648 floats], ...]}
-//!     {"op": "classify_synth", "model": "bcnn_rgb", "index": 17}
+//!     {"op": "classify_synth", "model": "bcnn", "index": 17}
 //!     {"op": "stats"}
 //!     {"op": "variants"}
 //!     {"op": "ping"}
+//!     {"op": "load_model", "name": "bcnn", "version": 2}
+//!     {"op": "unload_model", "name": "bcnn", "version": 1}
+//!     {"op": "set_default", "name": "bcnn", "version": 2}
+//!     {"op": "list_models"}
 //! ```
+//!
+//! `model` on the classify ops is optional: empty/absent routes to the
+//! registry's default entry, a bare name to that name's serving
+//! version, `name@version` pins an exact entry.  Every successful
+//! classification reports the `name@version` that served it.  The four
+//! admin ops drive the hot-swap lifecycle (load → validate → publish →
+//! retire) in [`crate::registry`].
 //!
 //! Responses (one line each; a stream request produces several lines):
 //!
 //! ```text
-//!     {"ok": true, "class": 2, "label": "truck", "logits": [...],
-//!      "queue_us": 12.0, "exec_us": 830.0, "batch": 1}
+//!     {"ok": true, "model": "bcnn@2", "class": 2, "label": "truck",
+//!      "logits": [...], "queue_us": 12.0, "exec_us": 830.0, "batch": 1}
 //!     {"ok": true, "results": [<classify responses, one per image>]}
 //!     {"ok": true, "stream": true, "seq": 3, "id": 41, ...classify fields}
 //!     {"ok": false, "stream": true, "seq": 1, "id": 39, "error": "..."}
@@ -65,12 +76,25 @@ pub enum Request {
     Stats,
     Variants,
     Ping,
+    /// Admin: load + validate + publish `name@version` from the models
+    /// directory (background loader; serving never blocks).
+    LoadModel { name: String, version: u32 },
+    /// Admin: retire `name@version` (graceful drain).
+    UnloadModel { name: String, version: u32 },
+    /// Admin: make `name` (at `version`, default its highest loaded
+    /// one) the serving target for bare-`name` and default routing.
+    SetDefault { name: String, version: Option<u32> },
+    /// Admin: list resident entries with identity + per-model counters.
+    ListModels,
 }
 
 /// Server response payload.
 #[derive(Debug, Clone)]
 pub enum Response {
     Classified {
+        /// The registry entry (`name@version`) that served this image —
+        /// under a hot swap, clients see exactly which version answered.
+        model: String,
         class: usize,
         label: String,
         logits: Vec<f32>,
@@ -91,6 +115,12 @@ pub enum Response {
     Stats(Json),
     Variants(Vec<String>),
     Pong,
+    /// `list_models` body: per-entry rows plus registry lifecycle
+    /// counters.
+    Models { models: Json, registry: Json },
+    /// Acknowledgement of a state-changing admin op, naming the
+    /// `name@version` it acted on.
+    AdminAck { action: &'static str, model: String },
     Error(String),
 }
 
@@ -117,6 +147,20 @@ fn finite_pixel(v: &Json) -> Result<f32, String> {
         Ok(f)
     } else {
         Err("non-finite pixel value (inf/nan after f32 conversion)".to_string())
+    }
+}
+
+/// Required `name` field of an admin op.
+fn name_field(j: &Json) -> Result<String, String> {
+    Ok(j.get("name").and_then(|n| n.as_str()).map_err(|e| e.to_string())?.to_string())
+}
+
+/// Required `version` field of an admin op (u32, >= 1).
+fn version_field(j: &Json) -> Result<u32, String> {
+    let v = j.get("version").and_then(|v| v.as_usize()).map_err(|e| e.to_string())?;
+    match u32::try_from(v) {
+        Ok(v) if v >= 1 => Ok(v),
+        _ => Err(format!("version {v} must be in 1..=4294967295")),
     }
 }
 
@@ -192,6 +236,20 @@ impl Request {
             "stats" => Ok(Request::Stats),
             "variants" => Ok(Request::Variants),
             "ping" => Ok(Request::Ping),
+            "load_model" => {
+                Ok(Request::LoadModel { name: name_field(&j)?, version: version_field(&j)? })
+            }
+            "unload_model" => {
+                Ok(Request::UnloadModel { name: name_field(&j)?, version: version_field(&j)? })
+            }
+            "set_default" => {
+                let version = match j.get_opt("version").map_err(|e| e.to_string())? {
+                    None => None,
+                    Some(_) => Some(version_field(&j)?),
+                };
+                Ok(Request::SetDefault { name: name_field(&j)?, version })
+            }
+            "list_models" => Ok(Request::ListModels),
             other => Err(format!("unknown op {other:?}")),
         }
     }
@@ -201,8 +259,9 @@ impl Response {
     fn to_json_obj(&self) -> JsonObj {
         let mut obj = JsonObj::new();
         match self {
-            Response::Classified { class, label, logits, queue_us, exec_us, batch } => {
+            Response::Classified { model, class, label, logits, queue_us, exec_us, batch } => {
                 obj.insert("ok", Json::Bool(true));
+                obj.insert("model", Json::from(model.as_str()));
                 obj.insert("class", Json::from(*class));
                 obj.insert("label", Json::from(label.as_str()));
                 obj.insert(
@@ -264,6 +323,16 @@ impl Response {
                 obj.insert("ok", Json::Bool(true));
                 obj.insert("pong", Json::Bool(true));
             }
+            Response::Models { models, registry } => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("models", models.clone());
+                obj.insert("registry", registry.clone());
+            }
+            Response::AdminAck { action, model } => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("action", Json::from(*action));
+                obj.insert("model", Json::from(model.as_str()));
+            }
             Response::Error(msg) => {
                 obj.insert("ok", Json::Bool(false));
                 obj.insert("error", Json::from(msg.as_str()));
@@ -304,6 +373,58 @@ mod tests {
         assert_eq!(Request::parse(r#"{"op":"stats"}"#).unwrap(), Request::Stats);
         assert_eq!(Request::parse(r#"{"op":"variants"}"#).unwrap(), Request::Variants);
         assert_eq!(Request::parse(r#"{"op":"ping"}"#).unwrap(), Request::Ping);
+    }
+
+    #[test]
+    fn parse_admin_ops() {
+        assert_eq!(
+            Request::parse(r#"{"op":"load_model","name":"bcnn","version":2}"#).unwrap(),
+            Request::LoadModel { name: "bcnn".into(), version: 2 }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"unload_model","name":"bcnn","version":1}"#).unwrap(),
+            Request::UnloadModel { name: "bcnn".into(), version: 1 }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"set_default","name":"bcnn","version":2}"#).unwrap(),
+            Request::SetDefault { name: "bcnn".into(), version: Some(2) }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"set_default","name":"bcnn"}"#).unwrap(),
+            Request::SetDefault { name: "bcnn".into(), version: None }
+        );
+        assert_eq!(Request::parse(r#"{"op":"list_models"}"#).unwrap(), Request::ListModels);
+    }
+
+    #[test]
+    fn admin_ops_reject_malformed_fields() {
+        // missing name / version
+        assert!(Request::parse(r#"{"op":"load_model","version":1}"#).is_err());
+        assert!(Request::parse(r#"{"op":"load_model","name":"bcnn"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"unload_model","name":"bcnn"}"#).is_err());
+        // version bounds: 0 and >u32::MAX are refused at parse
+        assert!(Request::parse(r#"{"op":"load_model","name":"b","version":0}"#).is_err());
+        assert!(
+            Request::parse(r#"{"op":"set_default","name":"b","version":5000000000}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn admin_response_shapes() {
+        let ack = Response::AdminAck { action: "set_default", model: "bcnn@2".into() };
+        let j = Json::parse(&ack.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("action").unwrap().as_str().unwrap(), "set_default");
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "bcnn@2");
+
+        let models = Response::Models {
+            models: Json::Arr(vec![]),
+            registry: Json::Obj(JsonObj::new()),
+        };
+        let j = Json::parse(&models.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("models").unwrap().as_arr().unwrap().len(), 0);
+        assert!(j.get("registry").is_ok());
     }
 
     #[test]
@@ -383,6 +504,7 @@ mod tests {
             seq: 3,
             id: 41,
             body: Box::new(Response::Classified {
+                model: "bcnn@2".into(),
                 class: 2,
                 label: "truck".into(),
                 logits: vec![0.0, 0.0, 1.0, 0.0],
@@ -438,6 +560,7 @@ mod tests {
     fn batch_response_renders_per_image_results() {
         let r = Response::Batch(vec![
             Response::Classified {
+                model: "bcnn@1".into(),
                 class: 1,
                 label: "normal".into(),
                 logits: vec![0.0, 1.0, 0.0, 0.0],
@@ -459,6 +582,7 @@ mod tests {
     #[test]
     fn response_roundtrips_through_json() {
         let r = Response::Classified {
+            model: "bcnn@1".into(),
             class: 2,
             label: "truck".into(),
             logits: vec![0.1, -0.5, 3.0, 0.0],
@@ -469,6 +593,7 @@ mod tests {
         let line = r.to_json_line();
         let j = Json::parse(&line).unwrap();
         assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "bcnn@1");
         assert_eq!(j.get("class").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("label").unwrap().as_str().unwrap(), "truck");
         assert_eq!(j.get("logits").unwrap().as_arr().unwrap().len(), 4);

@@ -1,14 +1,17 @@
 //! TCP listener: one line-JSON session per connection, handled on a
-//! fixed thread pool, requests routed through the coordinator.
+//! fixed thread pool, requests resolved through the model registry and
+//! routed through the coordinator.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::protocol::{Request, Response, StreamStatus};
-use crate::coordinator::Router;
 use crate::dataset::synth;
+use crate::registry::ModelRegistry;
+use crate::util::json::{Json, JsonObj};
 use crate::util::threadpool::ThreadPool;
 
 /// Hard cap on one protocol line.  The largest legitimate request is a
@@ -60,16 +63,71 @@ fn read_line_bounded(
     }
 }
 
+/// Default per-session deadline on blocking response writes: a client
+/// that stops reading for this long is disconnected (and counted in
+/// the `stats` op) instead of pinning a session-pool thread forever.
+pub const DEFAULT_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Session-pool counters, surfaced under `"server"` in the `stats` op.
+#[derive(Default)]
+struct ServerCounters {
+    /// Sessions accepted over the server's lifetime.
+    sessions: AtomicU64,
+    /// Sessions disconnected because a response write sat blocked past
+    /// the write deadline (stalled client).
+    write_timeouts: AtomicU64,
+}
+
+impl ServerCounters {
+    fn snapshot(&self) -> Json {
+        let mut obj = JsonObj::new();
+        obj.insert("sessions", Json::from(self.sessions.load(Ordering::Relaxed) as usize));
+        obj.insert(
+            "write_timeouts",
+            Json::from(self.write_timeouts.load(Ordering::Relaxed) as usize),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// A blocked-write error produced by the socket write deadline
+/// (`SO_SNDTIMEO` surfaces as `WouldBlock` on Unix, `TimedOut` on
+/// other platforms).
+fn is_write_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
 /// The serving front end.
 pub struct Server {
-    router: Arc<Router>,
+    registry: Arc<ModelRegistry>,
     classes: Vec<String>,
     synth_seed: u64,
+    write_timeout: Option<Duration>,
+    counters: ServerCounters,
 }
 
 impl Server {
-    pub fn new(router: Arc<Router>, classes: Vec<String>) -> Self {
-        Self { router, classes, synth_seed: synth::DEFAULT_SEED }
+    pub fn new(registry: Arc<ModelRegistry>, classes: Vec<String>) -> Self {
+        Self {
+            registry,
+            classes,
+            synth_seed: synth::DEFAULT_SEED,
+            write_timeout: Some(DEFAULT_WRITE_TIMEOUT),
+            counters: ServerCounters::default(),
+        }
+    }
+
+    /// Override the per-session write deadline (`None` disables it —
+    /// a stalled client then pins its session thread indefinitely).
+    pub fn with_write_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.write_timeout = timeout;
+        self
+    }
+
+    /// The registry this server resolves models against (admin surface
+    /// for embedding callers and tests).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// Handle one already-parsed request (also used by unit tests and the
@@ -82,8 +140,14 @@ impl Server {
     pub fn handle(&self, req: Request) -> Response {
         match req {
             Request::Ping => Response::Pong,
-            Request::Variants => Response::Variants(self.router.variants()),
-            Request::Stats => Response::Stats(self.router.stats()),
+            Request::Variants => Response::Variants(self.registry.router().variants()),
+            Request::Stats => {
+                let mut obj = JsonObj::new();
+                obj.insert("lanes", self.registry.router().stats());
+                obj.insert("registry", self.registry.counters_json());
+                obj.insert("server", self.counters.snapshot());
+                Response::Stats(Json::Obj(obj))
+            }
             Request::Classify { model, pixels } => self.classify(&model, pixels),
             Request::ClassifyBatch { model, images } => self.classify_batch(&model, images),
             Request::ClassifyBatchStream { .. } => Response::Error(
@@ -95,15 +159,41 @@ impl Server {
                 let sample = synth::render_vehicle(index, self.synth_seed);
                 self.classify(&model, sample.image)
             }
+            Request::LoadModel { name, version } => {
+                match self.registry.load_model(&name, version) {
+                    Ok(model) => Response::AdminAck { action: "load_model", model },
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Request::UnloadModel { name, version } => {
+                match self.registry.unload_model(&name, version) {
+                    Ok(model) => Response::AdminAck { action: "unload_model", model },
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Request::SetDefault { name, version } => {
+                match self.registry.set_default(&name, version) {
+                    Ok(model) => Response::AdminAck { action: "set_default", model },
+                    Err(e) => Response::Error(e.to_string()),
+                }
+            }
+            Request::ListModels => Response::Models {
+                models: self.registry.list_models(),
+                registry: self.registry.counters_json(),
+            },
         }
     }
 
     /// Turn a completed coordinator response into a protocol response.
-    fn render(&self, resp: crate::coordinator::InferResponse) -> Response {
+    /// `lane` is the resolved `name@version` that served the request —
+    /// clients see exactly which version answered, which is what the
+    /// hot-reload test asserts across a mid-flight swap.
+    fn render(&self, lane: &str, resp: crate::coordinator::InferResponse) -> Response {
         if let Some(err) = resp.error {
             return Response::Error(err);
         }
         Response::Classified {
+            model: lane.to_string(),
             class: resp.class,
             label: self
                 .classes
@@ -118,8 +208,12 @@ impl Server {
     }
 
     fn classify(&self, model: &str, pixels: Vec<f32>) -> Response {
-        match self.router.infer_blocking(model, pixels) {
-            Ok(resp) => self.render(resp),
+        let lane = match self.registry.resolve(model) {
+            Ok(lane) => lane,
+            Err(e) => return Response::Error(e.to_string()),
+        };
+        match self.registry.router().infer_blocking(&lane, pixels) {
+            Ok(resp) => self.render(&lane, resp),
             Err(e) => Response::Error(e.to_string()),
         }
     }
@@ -127,12 +221,25 @@ impl Server {
     /// Submit every image back-to-back so the dynamic batcher can drain
     /// them into one batched backend call; errors stay per-image
     /// (`render` maps a failed `InferResponse` to `Response::Error`).
+    /// The model reference resolves ONCE for the whole group, so every
+    /// image of a batch is served by the same registry entry even if an
+    /// admin swaps the default mid-request.
     fn classify_batch(&self, model: &str, images: Vec<Vec<f32>>) -> Response {
+        let lane = match self.registry.resolve(model) {
+            Ok(lane) => lane,
+            // keep the per-image results shape for every failure class of
+            // this op: a client indexing results[] by submitted image must
+            // not see a bare top-level error for this one case
+            Err(e) => {
+                return Response::Batch(vec![Response::Error(e.to_string()); images.len()])
+            }
+        };
         let items = self
-            .router
-            .infer_blocking_batch(model, images)
+            .registry
+            .router()
+            .infer_blocking_batch(&lane, images)
             .into_iter()
-            .map(|resp| self.render(resp))
+            .map(|resp| self.render(&lane, resp))
             .collect();
         Response::Batch(items)
     }
@@ -182,11 +289,26 @@ impl Server {
             delivered
         }
 
-        let metrics = self.router.metrics(model).ok();
+        // resolve the model reference once for the whole group: every
+        // frame of this stream is served by (and reports) one registry
+        // entry, even when an admin swap lands mid-stream.  An
+        // unresolvable reference fails per image — stream clients
+        // consume per-image status anyway.
+        let router = Arc::clone(self.registry.router());
+        let (lane, images) = match self.registry.resolve(model) {
+            Ok(lane) => (lane, images),
+            Err(e) => {
+                let msg = e.to_string();
+                (String::new(), images.into_iter().map(|_| Err(msg.clone())).collect())
+            }
+        };
+        let metrics = if lane.is_empty() { None } else { router.metrics(&lane).ok() };
         if let Some(m) = &metrics {
             m.record_stream();
         }
-        let group = self.router.submit_group(model, images);
+        // with an empty lane every image is an Err slot, so the group
+        // never touches a queue — the frames below are pure failures
+        let group = router.submit_group(&lane, images);
         let count = group.slots.len();
         let mut ok_by_seq: Vec<Option<bool>> = vec![None; count];
         // failure frames first for images that never reached the lane
@@ -213,7 +335,7 @@ impl Server {
                     // never panic on traffic
                     let Some(&seq) = seq_of_id.get(&resp.id) else { continue };
                     let id = resp.id;
-                    let body = self.render(resp);
+                    let body = self.render(&lane, resp);
                     if !emit_item(&metrics, &mut ok_by_seq, &mut *emit, seq, id, body) {
                         return false;
                     }
@@ -256,7 +378,29 @@ impl Server {
         emit(&end)
     }
 
+    /// Write one response line.  Returns `false` when the session must
+    /// end; a write that sat blocked past the per-session deadline
+    /// (stalled client) is counted before the disconnect.
+    fn write_frame(&self, writer: &mut TcpStream, resp: &Response) -> bool {
+        let mut out = resp.to_json_line();
+        out.push('\n');
+        match writer.write_all(out.as_bytes()) {
+            Ok(()) => true,
+            Err(e) => {
+                if is_write_timeout(&e) {
+                    self.counters.write_timeouts.fetch_add(1, Ordering::Relaxed);
+                }
+                false
+            }
+        }
+    }
+
     fn session(&self, stream: TcpStream) {
+        self.counters.sessions.fetch_add(1, Ordering::Relaxed);
+        // the write deadline bounds how long a stalled client can pin
+        // this session thread (docs/PROTOCOL.md "Backpressure"); reads
+        // stay deadline-free — an idle-but-healthy session is fine
+        let _ = stream.set_write_timeout(self.write_timeout);
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
             Err(_) => return,
@@ -285,15 +429,14 @@ impl Server {
                         // slow client stalls a write here, completed
                         // responses buffer in the group's channel, which
                         // holds at most MAX_BATCH_IMAGES entries for this
-                        // session; the lane's executors never block on it.
+                        // session; the lane's executors never block on it,
+                        // and the write deadline bounds the stall itself.
                         Ok(Request::ClassifyBatchStream { model, images }) => {
                             let alive = self.stream_batch(&model, images, &mut |frame| {
-                                let mut out = frame.to_json_line();
-                                out.push('\n');
-                                writer.write_all(out.as_bytes()).is_ok()
+                                self.write_frame(&mut writer, frame)
                             });
                             if !alive {
-                                break; // client gone mid-stream
+                                break; // client gone (or stalled) mid-stream
                             }
                             buf.shrink_to(64 * 1024);
                             continue;
@@ -303,9 +446,7 @@ impl Server {
                     }
                 }
             };
-            let mut out = resp.to_json_line();
-            out.push('\n');
-            if writer.write_all(out.as_bytes()).is_err() {
+            if !self.write_frame(&mut writer, &resp) {
                 break;
             }
             // a maximal request mustn't pin tens of MB for an idle session
@@ -351,15 +492,16 @@ impl Server {
 mod tests {
     use super::*;
     use crate::bnn::network::tests_support::synth_bcnn_network;
-    use crate::coordinator::{EngineBackend, InferBackend, Router};
+    use crate::coordinator::{EngineBackend, InferBackend};
     use crate::input::binarize::Scheme;
 
     fn test_server() -> Arc<Server> {
+        let registry = ModelRegistry::builder().build();
         let be: Arc<dyn InferBackend> =
             Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 5), 2));
-        let router = Arc::new(Router::builder().variant("bcnn_rgb", be).build());
+        registry.publish_backend("bcnn_rgb", 1, "bcnn", "rgb", None, be).unwrap();
         Arc::new(Server::new(
-            router,
+            registry,
             vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
         ))
     }
@@ -369,7 +511,7 @@ mod tests {
         let s = test_server();
         assert!(matches!(s.handle(Request::Ping), Response::Pong));
         match s.handle(Request::Variants) {
-            Response::Variants(v) => assert_eq!(v, vec!["bcnn_rgb"]),
+            Response::Variants(v) => assert_eq!(v, vec!["bcnn_rgb@1"]),
             other => panic!("{other:?}"),
         }
     }
@@ -378,7 +520,8 @@ mod tests {
     fn handle_classify_synth() {
         let s = test_server();
         match s.handle(Request::ClassifySynth { model: "".into(), index: 3 }) {
-            Response::Classified { class, label, logits, batch, .. } => {
+            Response::Classified { model, class, label, logits, batch, .. } => {
+                assert_eq!(model, "bcnn_rgb@1", "response reports the serving entry");
                 assert!(class < 4);
                 assert!(["bus", "normal", "truck", "van"].contains(&label.as_str()));
                 assert_eq!(logits.len(), 4);
@@ -386,6 +529,81 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn handle_admin_lifecycle_in_process() {
+        let s = test_server();
+        // a second version arrives and is swapped in
+        let be: Arc<dyn InferBackend> =
+            Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 6), 2));
+        s.registry().publish_backend("bcnn_rgb", 2, "bcnn", "rgb", None, be).unwrap();
+        match s.handle(Request::SetDefault { name: "bcnn_rgb".into(), version: Some(2) }) {
+            Response::AdminAck { action, model } => {
+                assert_eq!(action, "set_default");
+                assert_eq!(model, "bcnn_rgb@2");
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::ClassifySynth { model: "".into(), index: 0 }) {
+            Response::Classified { model, .. } => assert_eq!(model, "bcnn_rgb@2"),
+            other => panic!("{other:?}"),
+        }
+        // pinned references still reach the old version until unload
+        match s.handle(Request::ClassifySynth { model: "bcnn_rgb@1".into(), index: 0 }) {
+            Response::Classified { model, .. } => assert_eq!(model, "bcnn_rgb@1"),
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::UnloadModel { name: "bcnn_rgb".into(), version: 1 }) {
+            Response::AdminAck { action, model } => {
+                assert_eq!(action, "unload_model");
+                assert_eq!(model, "bcnn_rgb@1");
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::ClassifySynth { model: "bcnn_rgb@1".into(), index: 0 }) {
+            Response::Error(e) => assert!(e.contains("unknown model"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::ListModels) {
+            Response::Models { models, registry } => {
+                let rows = models.as_arr().unwrap();
+                assert_eq!(rows.len(), 1);
+                assert_eq!(rows[0].get("model").unwrap().as_str().unwrap(), "bcnn_rgb@2");
+                assert_eq!(registry.get("evictions").unwrap().as_usize().unwrap(), 1);
+                assert_eq!(registry.get("swaps").unwrap().as_usize().unwrap(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        // load_model without a models dir is a structured error
+        match s.handle(Request::LoadModel { name: "bcnn_rgb".into(), version: 3 }) {
+            Response::Error(e) => assert!(e.contains("--models"), "{e}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_compose_lanes_registry_and_server_sections() {
+        let s = test_server();
+        s.handle(Request::ClassifySynth { model: "".into(), index: 1 });
+        match s.handle(Request::Stats) {
+            Response::Stats(stats) => {
+                let lanes = stats.get("lanes").unwrap();
+                let lane = lanes.get("bcnn_rgb@1").unwrap();
+                assert_eq!(lane.get("completed").unwrap().as_usize().unwrap(), 1);
+                assert!(stats.get("registry").unwrap().get("loads").is_ok());
+                let server = stats.get("server").unwrap();
+                assert_eq!(server.get("write_timeouts").unwrap().as_usize().unwrap(), 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn write_timeout_error_kinds_are_classified() {
+        assert!(is_write_timeout(&std::io::Error::from(std::io::ErrorKind::WouldBlock)));
+        assert!(is_write_timeout(&std::io::Error::from(std::io::ErrorKind::TimedOut)));
+        assert!(!is_write_timeout(&std::io::Error::from(std::io::ErrorKind::BrokenPipe)));
     }
 
     #[test]
@@ -411,6 +629,27 @@ mod tests {
                 assert!(matches!(items[0], Response::Classified { .. }));
                 assert!(matches!(items[1], Response::Error(_)));
                 assert!(matches!(items[2], Response::Classified { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn classify_batch_unknown_model_keeps_per_image_results_shape() {
+        let s = test_server();
+        let good = vec![0.5f32; 96 * 96 * 3];
+        match s.handle(Request::ClassifyBatch {
+            model: "ghost".into(),
+            images: vec![good.clone(), good],
+        }) {
+            Response::Batch(items) => {
+                assert_eq!(items.len(), 2, "one entry per submitted image");
+                for item in items {
+                    match item {
+                        Response::Error(e) => assert!(e.contains("unknown model"), "{e}"),
+                        other => panic!("{other:?}"),
+                    }
+                }
             }
             other => panic!("{other:?}"),
         }
@@ -469,7 +708,8 @@ mod tests {
             other => panic!("expected StreamEnd, got {other:?}"),
         }
         // the lane's stats op records the stream session and its frames
-        let snap = s.router.metrics("").unwrap().snapshot();
+        let lane = s.registry().resolve("").unwrap();
+        let snap = s.registry().router().metrics(&lane).unwrap().snapshot();
         assert_eq!(snap.get("streams").unwrap().as_usize().unwrap(), 1);
         assert_eq!(snap.get("stream_frames").unwrap().as_usize().unwrap(), 3);
     }

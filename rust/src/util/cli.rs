@@ -143,6 +143,17 @@ impl Args {
         self.raw(name).unwrap_or_else(|| panic!("undeclared option --{name}"))
     }
 
+    /// `get` for options whose empty-string default means "absent"
+    /// (e.g. `serve --models`, `serve --default`).
+    pub fn get_nonempty(&self, name: &str) -> Option<String> {
+        let v = self.get(name);
+        if v.is_empty() {
+            None
+        } else {
+            Some(v)
+        }
+    }
+
     pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
         let v = self.get(name);
         v.parse().map_err(|e: std::num::ParseIntError| {
@@ -217,6 +228,17 @@ mod tests {
         assert_eq!(a.get("model"), "float");
         assert_eq!(a.get_usize("iters").unwrap(), 7);
         assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn nonempty_treats_empty_default_as_absent() {
+        let p = Args::new("x", "y").opt("dir", "", "optional dir");
+        assert_eq!(p.parse(&raw(&[])).unwrap().get_nonempty("dir"), None);
+        let p = Args::new("x", "y").opt("dir", "", "optional dir");
+        assert_eq!(
+            p.parse(&raw(&["--dir", "/tmp"])).unwrap().get_nonempty("dir"),
+            Some("/tmp".to_string())
+        );
     }
 
     #[test]

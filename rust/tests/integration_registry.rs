@@ -1,0 +1,261 @@
+//! End-to-end registry lifecycle over TCP: versioned entries from a
+//! models directory, admin ops, and hot version swaps under live
+//! streaming traffic — the acceptance test for the hot-swappable
+//! registry (ISSUE 4).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bcnn::bnn::network::tests_support::{synth_bcnn_tf, synth_float_tf};
+use bcnn::coordinator::BatchPolicy;
+use bcnn::input::binarize::Scheme;
+use bcnn::registry::{fnv1a64, format_checksum, ModelRegistry};
+use bcnn::server::Server;
+use bcnn::util::json::Json;
+
+/// Write a models directory holding bcnn v1 + v2 (different weights)
+/// and float v1, with a registry.json carrying real checksums.
+fn write_models_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bcnn-reg-e2e-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    synth_bcnn_tf(Scheme::Rgb, 1001).save(dir.join("bcnn_v1.bcnt")).unwrap();
+    synth_bcnn_tf(Scheme::Rgb, 1002).save(dir.join("bcnn_v2.bcnt")).unwrap();
+    synth_float_tf(1003).save(dir.join("float_v1.bcnt")).unwrap();
+    let sum = |f: &str| format_checksum(fnv1a64(&std::fs::read(dir.join(f)).unwrap()));
+    let manifest = format!(
+        r#"{{"version": 1, "default": "bcnn", "models": [
+  {{"name": "bcnn", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "bcnn_v1.bcnt", "checksum": "{}"}},
+  {{"name": "bcnn", "version": 2, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "bcnn_v2.bcnt", "checksum": "{}"}},
+  {{"name": "float", "version": 1, "kind": "float", "scheme": "float",
+    "weights_file": "float_v1.bcnt", "checksum": "{}"}}
+]}}"#,
+        sum("bcnn_v1.bcnt"),
+        sum("bcnn_v2.bcnt"),
+        sum("float_v1.bcnt"),
+    );
+    std::fs::write(dir.join("registry.json"), manifest).unwrap();
+    dir
+}
+
+/// Start a server with bcnn@1 + float@1 resident (bcnn default);
+/// bcnn@2 stays on disk for the hot load.
+fn start_server(dir: &Path) -> (std::net::SocketAddr, Arc<AtomicBool>) {
+    let registry = ModelRegistry::builder()
+        .policy(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            executors: 2,
+        })
+        .queue_capacity(512)
+        .engine_threads(1)
+        .models_dir(dir)
+        .build();
+    registry.load_model("bcnn", 1).unwrap();
+    registry.load_model("float", 1).unwrap();
+    registry.set_default("bcnn", Some(1)).unwrap();
+    let server = Arc::new(Server::new(
+        registry,
+        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 4, Arc::clone(&stop)).unwrap();
+    (addr, stop)
+}
+
+struct Client {
+    conn: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Self {
+        let conn = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(conn.try_clone().unwrap());
+        Self { conn, reader }
+    }
+
+    fn roundtrip(&mut self, req: &str) -> Json {
+        self.conn.write_all(req.as_bytes()).unwrap();
+        self.conn.write_all(b"\n").unwrap();
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).expect(&line)
+    }
+}
+
+fn one_image_json() -> String {
+    let px = vec!["0.5"; 96 * 96 * 3].join(",");
+    format!("[{px}]")
+}
+
+#[test]
+fn hot_swap_under_streaming_load_drops_nothing_and_reports_versions() {
+    let dir = write_models_dir("hotswap");
+    let (addr, stop) = start_server(&dir);
+    let mut a = Client::connect(addr);
+
+    // --- acceptance: two entries servable concurrently over ONE conn ---
+    let img = one_image_json();
+    let r = a.roundtrip(&format!(r#"{{"op":"classify","model":"bcnn","pixels":{img}}}"#));
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@1");
+    let bcnn_logits = format!("{:?}", r.get("logits").unwrap());
+    let r = a.roundtrip(&format!(r#"{{"op":"classify","model":"float","pixels":{img}}}"#));
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "float@1");
+    assert_ne!(format!("{:?}", r.get("logits").unwrap()), bcnn_logits);
+
+    // --- stream a 48-image group, swap versions while it's in flight ---
+    const GROUP: usize = 48;
+    let group = vec![img.clone(); GROUP].join(",");
+    a.conn
+        .write_all(
+            format!(r#"{{"op":"classify_batch_stream","model":"","images":[{group}]}}"#)
+                .as_bytes(),
+        )
+        .unwrap();
+    a.conn.write_all(b"\n").unwrap();
+
+    // admin lane: load bcnn@2 from disk and make it the default while
+    // the stream above is being parsed/served
+    let mut b = Client::connect(addr);
+    let r = b.roundtrip(r#"{"op":"load_model","name":"bcnn","version":2}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("action").unwrap().as_str().unwrap(), "load_model");
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@2");
+    let r = b.roundtrip(r#"{"op":"set_default","name":"bcnn","version":2}"#);
+    assert_eq!(r.get("action").unwrap().as_str().unwrap(), "set_default");
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@2");
+
+    // --- the stream completes: zero drops, zero failures, one version ---
+    let mut ids = Vec::new();
+    let mut versions = Vec::new();
+    for _ in 0..GROUP {
+        let frame = a.read_line();
+        assert!(frame.get("stream").unwrap().as_bool().unwrap(), "{frame}");
+        assert!(frame.get("ok").unwrap().as_bool().unwrap(), "no frame may fail: {frame}");
+        ids.push(frame.get("id").unwrap().as_usize().unwrap());
+        versions.push(frame.get("model").unwrap().as_str().unwrap().to_string());
+    }
+    let end = a.read_line();
+    assert!(end.get("stream_end").unwrap().as_bool().unwrap(), "{end}");
+    assert_eq!(end.get("count").unwrap().as_usize().unwrap(), GROUP);
+    assert_eq!(end.get("completed").unwrap().as_usize().unwrap(), GROUP);
+    assert_eq!(end.get("failed").unwrap().as_usize().unwrap(), 0);
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), GROUP, "every image answered exactly once, real ids");
+    // a group never mixes versions: whichever side of the swap the
+    // request landed on, every frame reports the same entry
+    versions.sort();
+    versions.dedup();
+    assert_eq!(versions.len(), 1, "one group, one version: {versions:?}");
+    assert!(versions[0] == "bcnn@1" || versions[0] == "bcnn@2");
+
+    // --- post-swap traffic on the SAME connection routes to v2 --------
+    let r = a.roundtrip(&format!(r#"{{"op":"classify","pixels":{img}}}"#));
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@2", "{r}");
+    // pinned references still reach v1 until it is unloaded
+    let r = a.roundtrip(&format!(r#"{{"op":"classify","model":"bcnn@1","pixels":{img}}}"#));
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@1", "{r}");
+
+    // --- retire v1; the registry reflects the whole lifecycle ----------
+    let r = b.roundtrip(r#"{"op":"unload_model","name":"bcnn","version":1}"#);
+    assert_eq!(r.get("action").unwrap().as_str().unwrap(), "unload_model");
+    let r = a.roundtrip(&format!(r#"{{"op":"classify","model":"bcnn@1","pixels":{img}}}"#));
+    assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown model"), "{r}");
+    let r = a.roundtrip(&format!(r#"{{"op":"classify","model":"bcnn","pixels":{img}}}"#));
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@2", "{r}");
+
+    let r = b.roundtrip(r#"{"op":"list_models"}"#);
+    let rows = r.get("models").unwrap().as_arr().unwrap();
+    let keys: Vec<&str> =
+        rows.iter().map(|row| row.get("model").unwrap().as_str().unwrap()).collect();
+    assert_eq!(keys, vec!["bcnn@2", "float@1"]);
+    for row in rows {
+        assert!(row.get("serving").unwrap().as_bool().unwrap());
+        assert!(row.get("checksum").unwrap().as_str().unwrap().starts_with("fnv1a64:"));
+    }
+    let counters = r.get("registry").unwrap();
+    assert_eq!(counters.get("loads").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(counters.get("evictions").unwrap().as_usize().unwrap(), 1);
+    assert!(counters.get("swaps").unwrap().as_usize().unwrap() >= 1);
+    // per-model counters: the survivor served traffic
+    let bcnn2 = rows.iter().find(|row| {
+        row.get("model").unwrap().as_str().unwrap() == "bcnn@2"
+    });
+    assert!(bcnn2.unwrap().get("completed").unwrap().as_usize().unwrap() >= 1);
+
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn repeated_swaps_under_continuous_streams_never_fail_a_request() {
+    // a tighter hot-swap hammer: stream groups back to back while an
+    // admin thread flips the default between two resident versions;
+    // every group must complete fully on exactly one version
+    let dir = write_models_dir("hammer");
+    let (addr, stop) = start_server(&dir);
+    {
+        let mut admin = Client::connect(addr);
+        let r = admin.roundtrip(r#"{"op":"load_model","name":"bcnn","version":2}"#);
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    }
+
+    let flipping = Arc::new(AtomicBool::new(true));
+    let flipping2 = Arc::clone(&flipping);
+    let admin = std::thread::spawn(move || {
+        let mut admin = Client::connect(addr);
+        let mut v = 2;
+        while flipping2.load(Ordering::Relaxed) {
+            let r = admin.roundtrip(&format!(
+                r#"{{"op":"set_default","name":"bcnn","version":{v}}}"#
+            ));
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+            v = if v == 2 { 1 } else { 2 };
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    });
+
+    let mut client = Client::connect(addr);
+    let img = one_image_json();
+    const GROUP: usize = 16;
+    let group = vec![img; GROUP].join(",");
+    for _ in 0..6 {
+        client
+            .conn
+            .write_all(
+                format!(r#"{{"op":"classify_batch_stream","model":"","images":[{group}]}}"#)
+                    .as_bytes(),
+            )
+            .unwrap();
+        client.conn.write_all(b"\n").unwrap();
+        let mut versions = Vec::new();
+        for _ in 0..GROUP {
+            let frame = client.read_line();
+            assert!(frame.get("ok").unwrap().as_bool().unwrap(), "{frame}");
+            versions.push(frame.get("model").unwrap().as_str().unwrap().to_string());
+        }
+        versions.sort();
+        versions.dedup();
+        assert_eq!(versions.len(), 1, "group mixed versions: {versions:?}");
+        let end = client.read_line();
+        assert_eq!(end.get("completed").unwrap().as_usize().unwrap(), GROUP, "{end}");
+        assert_eq!(end.get("failed").unwrap().as_usize().unwrap(), 0, "{end}");
+    }
+
+    flipping.store(false, Ordering::Relaxed);
+    admin.join().unwrap();
+    stop.store(true, Ordering::Relaxed);
+}

@@ -6,6 +6,7 @@ use std::sync::Arc;
 use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_image};
 use bcnn::coordinator::{BatchPolicy, EngineBackend, InferBackend, Router};
 use bcnn::input::binarize::Scheme;
+use bcnn::registry::ModelRegistry;
 use bcnn::runtime::Artifacts;
 use bcnn::server::{Request, Response, Server};
 
@@ -26,6 +27,30 @@ fn engine_router(max_batch: usize) -> Arc<Router> {
             .variant("lbp", lbp)
             .build(),
     )
+}
+
+/// Registry with the same rgb + lbp engine entries the old fixed router
+/// carried (bare names resolve to `…@1`).
+fn engine_registry(max_batch: usize) -> Arc<ModelRegistry> {
+    let registry = ModelRegistry::builder()
+        .policy(BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+        .queue_capacity(512)
+        .build();
+    let rgb: Arc<dyn InferBackend> =
+        Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 21), 2));
+    let lbp: Arc<dyn InferBackend> =
+        Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Lbp, 22), 2));
+    registry.publish_backend("rgb", 1, "bcnn", "rgb", None, rgb).unwrap();
+    registry.publish_backend("lbp", 1, "bcnn", "lbp", None, lbp).unwrap();
+    registry
+}
+
+fn classes() -> Vec<String> {
+    vec!["bus".into(), "normal".into(), "truck".into(), "van".into()]
 }
 
 #[test]
@@ -76,19 +101,19 @@ fn batching_aggregates_under_load() {
 
 #[test]
 fn server_in_process_roundtrip() {
-    let router = engine_router(1);
-    let server = Server::new(
-        router,
-        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
-    );
+    let server = Server::new(engine_registry(1), classes());
     match server.handle(Request::ClassifySynth { model: "rgb".into(), index: 0 }) {
-        Response::Classified { label, .. } => {
+        Response::Classified { model, label, .. } => {
+            assert_eq!(model, "rgb@1", "the response names the serving entry");
             assert!(["bus", "normal", "truck", "van"].contains(&label.as_str()))
         }
         other => panic!("{other:?}"),
     }
     match server.handle(Request::Stats) {
-        Response::Stats(s) => assert!(s.get("rgb").is_ok()),
+        Response::Stats(s) => {
+            assert!(s.get("lanes").unwrap().get("rgb@1").is_ok());
+            assert!(s.get("registry").is_ok() && s.get("server").is_ok());
+        }
         other => panic!("{other:?}"),
     }
 }
@@ -213,11 +238,7 @@ fn tcp_survives_garbage_bytes_and_answers_structured_errors() {
     use std::net::TcpStream;
     use std::sync::atomic::{AtomicBool, Ordering};
 
-    let router = engine_router(4);
-    let server = Arc::new(Server::new(
-        router,
-        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
-    ));
+    let server = Arc::new(Server::new(engine_registry(4), classes()));
     let stop = Arc::new(AtomicBool::new(false));
     let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
 
@@ -278,11 +299,7 @@ fn non_finite_pixels_rejected_end_to_end() {
     use std::net::TcpStream;
     use std::sync::atomic::{AtomicBool, Ordering};
 
-    let router = engine_router(4);
-    let server = Arc::new(Server::new(
-        router,
-        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
-    ));
+    let server = Arc::new(Server::new(engine_registry(4), classes()));
     let stop = Arc::new(AtomicBool::new(false));
     let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
 
@@ -391,20 +408,15 @@ fn stream_delivers_fast_image_before_slow_peer_completes() {
     // bound is belt-and-braces)
     const SLOW_MS: u64 = 1500;
     let be: Arc<dyn InferBackend> = Arc::new(SleepyBackend { slow_ms: SLOW_MS });
-    let router = Arc::new(
-        Router::builder()
-            .policy(BatchPolicy {
-                max_batch: 1, // each image is its own batch...
-                max_wait: std::time::Duration::from_micros(10),
-                executors: 2, // ...and two executors run them concurrently
-            })
-            .variant("sleepy", be)
-            .build(),
-    );
-    let server = Arc::new(Server::new(
-        router,
-        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
-    ));
+    let registry = ModelRegistry::builder()
+        .policy(BatchPolicy {
+            max_batch: 1, // each image is its own batch...
+            max_wait: std::time::Duration::from_micros(10),
+            executors: 2, // ...and two executors run them concurrently
+        })
+        .build();
+    registry.publish_backend("sleepy", 1, "custom", "rgb", None, be).unwrap();
+    let server = Arc::new(Server::new(registry, classes()));
     let stop = Arc::new(AtomicBool::new(false));
     let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
 
@@ -485,23 +497,40 @@ fn stream_failure_frames_mix_parse_rejects_and_nan_logits() {
     use std::net::TcpStream;
     use std::sync::atomic::{AtomicBool, Ordering};
 
-    struct NanBackend;
-    impl InferBackend for NanBackend {
+    /// Finite on the first call — so it passes the registry's smoke
+    /// gate — then degrades to NaN logits: the runtime-failure shape
+    /// the batcher's defense-in-depth exists for.
+    struct LatentNanBackend {
+        calls: std::sync::atomic::AtomicU64,
+    }
+    impl InferBackend for LatentNanBackend {
         fn name(&self) -> String {
-            "nan".into()
+            "latent-nan".into()
         }
         fn supported_batches(&self) -> Vec<usize> {
             vec![usize::MAX]
         }
         fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String> {
-            Ok(vec![f32::NAN; images.len() / (96 * 96 * 3) * 4])
+            let c = self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let n = images.len() / (96 * 96 * 3);
+            if c == 0 {
+                return Ok(vec![0.25; n * 4]);
+            }
+            Ok(vec![f32::NAN; n * 4])
         }
     }
-    let router = Arc::new(Router::builder().variant("nan", Arc::new(NanBackend)).build());
-    let server = Arc::new(Server::new(
-        router,
-        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
-    ));
+    let registry = ModelRegistry::builder().build();
+    registry
+        .publish_backend(
+            "nan",
+            1,
+            "custom",
+            "rgb",
+            None,
+            Arc::new(LatentNanBackend { calls: Default::default() }),
+        )
+        .unwrap();
+    let server = Arc::new(Server::new(registry, classes()));
     let stop = Arc::new(AtomicBool::new(false));
     let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
 
@@ -545,6 +574,77 @@ fn stream_failure_frames_mix_parse_rejects_and_nan_logits() {
     assert_eq!(end.get("count").unwrap().as_usize().unwrap(), 3, "{line}");
     assert_eq!(end.get("failed").unwrap().as_usize().unwrap(), 3, "{line}");
     assert_eq!(end.get("results").unwrap().as_arr().unwrap().len(), 3, "{line}");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn stalled_client_is_disconnected_by_the_write_deadline() {
+    // satellite: a client that stops reading must not pin a session-pool
+    // thread forever.  One connection floods pings and never reads —
+    // once the TCP windows fill, the server's blocking write trips the
+    // per-session deadline, the session is disconnected, and the
+    // incident is counted in the stats op (observed from a second,
+    // healthy connection).
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let server = Arc::new(
+        Server::new(engine_registry(1), classes())
+            .with_write_timeout(Some(std::time::Duration::from_millis(200))),
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    // the stalled client: pipeline pings from a writer thread, read
+    // nothing.  Its own write timeout bounds every syscall so the
+    // thread can always be joined, even if the server misbehaves.
+    let stalled = TcpStream::connect(addr).unwrap();
+    stalled.set_write_timeout(Some(std::time::Duration::from_millis(500))).unwrap();
+    let done = Arc::new(AtomicBool::new(false));
+    let done2 = Arc::clone(&done);
+    let mut stalled_writer = stalled.try_clone().unwrap();
+    let writer = std::thread::spawn(move || {
+        let chunk = "{\"op\":\"ping\"}\n".repeat(512);
+        while !done2.load(Ordering::Relaxed) {
+            // once both directions are full (the server has stalled on
+            // its response write), our writes error out — job done: the
+            // server now has a deep backlog of answered-but-unread data
+            if stalled_writer.write_all(chunk.as_bytes()).is_err() {
+                break;
+            }
+        }
+    });
+
+    // a healthy observer polls the stats op for the recorded timeout
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let mut saw_timeout = false;
+    while std::time::Instant::now() < deadline {
+        conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = bcnn::util::json::Json::parse(&line).unwrap();
+        let n = j
+            .get("stats")
+            .unwrap()
+            .get("server")
+            .unwrap()
+            .get("write_timeouts")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        if n >= 1 {
+            saw_timeout = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    done.store(true, Ordering::Relaxed);
+    drop(stalled); // unblock the writer thread if it's wedged in write()
+    let _ = writer.join();
+    assert!(saw_timeout, "stalled client never tripped the write deadline");
     stop.store(true, Ordering::Relaxed);
 }
 
