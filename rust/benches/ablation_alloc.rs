@@ -1,6 +1,6 @@
 //! Allocation ablation: images/sec with the forward scratch arena OFF
 //! (every `infer_batch` call allocates fresh intermediate tensors — the
-//! PR 1 behavior) vs ON (a reused per-worker `ForwardScratch`, the
+//! PR 1 behavior) vs ON (a reused per-worker `PlanScratch` (the planned arena), the
 //! steady-state serving configuration).  Both paths are bit-identical;
 //! this bench isolates what allocator traffic alone costs at each batch
 //! size.  Runs on synthetic weights, so no artifacts are required:
@@ -8,7 +8,7 @@
 //!     cargo bench --bench ablation_alloc
 
 use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_float_network, synth_image};
-use bcnn::bnn::scratch::ForwardScratch;
+use bcnn::bnn::scratch::PlanScratch;
 use bcnn::input::binarize::Scheme;
 use bcnn::util::timer::bench;
 
@@ -31,13 +31,13 @@ fn main() {
         let payload = &pool[..bs * IMG];
         let iters = (64 / bs).max(4);
 
-        let mut bscratch = ForwardScratch::new();
+        let mut bscratch = PlanScratch::new();
         // grow the arena to its high-water mark before measuring
         bcnn.infer_batch_with(payload, &mut bscratch).unwrap();
         let b_off = bench(2, iters, || bcnn.infer_batch(payload).unwrap());
         let b_on = bench(2, iters, || bcnn.infer_batch_with(payload, &mut bscratch).unwrap());
 
-        let mut fscratch = ForwardScratch::new();
+        let mut fscratch = PlanScratch::new();
         float.infer_batch_with(payload, &mut fscratch).unwrap();
         let f_iters = (iters / 2).max(2);
         let f_off = bench(1, f_iters, || float.infer_batch(payload).unwrap());
@@ -63,7 +63,7 @@ fn main() {
         "\npacked engine at B=1 (the paper's real-time protocol): arena = {b1_gain:.2}x \
          (arena elements held: {})",
         {
-            let mut s = ForwardScratch::new();
+            let mut s = PlanScratch::new();
             bcnn.infer_batch_with(&pool[..IMG], &mut s).unwrap();
             s.capacity_elems()
         }

@@ -1,0 +1,90 @@
+//! Plan ablation: images/sec through the layer-graph compiled forward
+//! (ISSUE 5 tentpole) in its three execution postures, at the batch
+//! sizes the serving plane actually uses:
+//!
+//! * **planned** — `CompiledNetwork::infer_batch_with` through a reused
+//!   `PlanScratch` (the steady-state serving path: liveness-planned
+//!   slots, zero intermediate allocation);
+//! * **fresh** — the same compiled plan with a fresh arena per call
+//!   (what the plan costs when nothing is pooled);
+//! * **legacy loop** — the pre-refactor per-image protocol: one
+//!   single-image forward per image (per-image kernel launches, no
+//!   cross-image GEMM batching).
+//!
+//! Runs on synthetic weights, so no artifacts are required:
+//!
+//!     cargo bench --bench ablation_plan
+
+use bcnn::bnn::network::tests_support::{synth_bcnn_network, synth_float_network, synth_image};
+use bcnn::bnn::scratch::PlanScratch;
+use bcnn::input::binarize::Scheme;
+use bcnn::util::timer::bench;
+
+fn main() {
+    let batches = [1usize, 16, 64];
+    let max_n = *batches.iter().max().unwrap();
+    let pool: Vec<f32> = (0..max_n as u64).flat_map(synth_image).collect();
+    const IMG: usize = 96 * 96 * 3;
+
+    let bcnn = synth_bcnn_network(Scheme::Rgb, 501);
+    let float = synth_float_network(502);
+
+    println!("Layer-graph plan ablation — images/sec, compiled forward postures\n");
+    println!(
+        "{:<7}{:<7}{:>14}{:>14}{:>16}{:>9}",
+        "net", "batch", "planned", "fresh", "legacy loop", "plan-x"
+    );
+    for &bs in &batches {
+        let payload = &pool[..bs * IMG];
+        let iters = (64 / bs).max(4);
+
+        let mut arena = PlanScratch::new();
+        bcnn.infer_batch_with(payload, &mut arena).unwrap(); // warm the slots
+        let planned = bench(2, iters, || bcnn.infer_batch_with(payload, &mut arena).unwrap());
+        let fresh = bench(2, iters, || bcnn.infer_batch(payload).unwrap());
+        let loop_legacy = bench(2, iters, || {
+            for i in 0..bs {
+                bcnn.forward(&payload[i * IMG..(i + 1) * IMG]);
+            }
+        });
+        let ips = |mean_ns: f64| bs as f64 / (mean_ns * 1e-9);
+        println!(
+            "{:<7}{:<7}{:>14.1}{:>14.1}{:>16.1}{:>8.2}x",
+            "bcnn",
+            bs,
+            ips(planned.mean_ns),
+            ips(fresh.mean_ns),
+            ips(loop_legacy.mean_ns),
+            loop_legacy.mean_ns / planned.mean_ns,
+        );
+
+        let f_iters = (iters / 2).max(2);
+        let mut farena = PlanScratch::new();
+        float.infer_batch_with(payload, &mut farena).unwrap();
+        let planned =
+            bench(1, f_iters, || float.infer_batch_with(payload, &mut farena).unwrap());
+        let fresh = bench(1, f_iters, || float.infer_batch(payload).unwrap());
+        let loop_legacy = bench(1, f_iters, || {
+            for i in 0..bs {
+                float.forward(&payload[i * IMG..(i + 1) * IMG]);
+            }
+        });
+        println!(
+            "{:<7}{:<7}{:>14.1}{:>14.1}{:>16.1}{:>8.2}x",
+            "float",
+            bs,
+            ips(planned.mean_ns),
+            ips(fresh.mean_ns),
+            ips(loop_legacy.mean_ns),
+            loop_legacy.mean_ns / planned.mean_ns,
+        );
+    }
+    let mut probe = PlanScratch::new();
+    bcnn.infer_batch_with(&pool[..IMG], &mut probe).unwrap();
+    println!(
+        "\nplanned arena for the rgb plan: {} slots, {} elements after warmup",
+        probe.slot_counts().iter().sum::<usize>(),
+        probe.capacity_elems(),
+    );
+    println!("(the plan compiler sizes the arena from per-edge liveness — see docs/ARCHITECTURE.md)");
+}

@@ -1,0 +1,930 @@
+//! [`CompiledNetwork`]: a compiled [`Plan`] with weights bound, executing
+//! batches over a planned scratch arena.
+//!
+//! Binding happens once at load time: every weight tensor is fetched by
+//! its resolved name, length-checked against the plan's declared shape,
+//! and packed conv weights are pre-widened to u64 lanes
+//! ([`crate::bnn::bgemm::widen_weights`]) so the hot path never touches
+//! them again.  Execution walks the lowered steps in order; each step
+//! reads its input slot (or the caller's image payload), writes its
+//! planned output slot, and uses at most one planned per-step scratch
+//! slot (patch gathers, the LBP gray plane).  Every kernel either
+//! assigns its entire exact-resized output range or identity-fills it
+//! first, so arena slots reused across steps, batches, and even
+//! different plans can never leak state — the same contract the
+//! hand-named `ForwardScratch` arena relied on, now enforced per
+//! planned slot.
+//!
+//! Per-image arithmetic is exactly the legacy fixed pipeline's (same
+//! kernels, same accumulation order, batched along the leading
+//! dimension only), so logits are bit-identical to the pre-refactor
+//! `BcnnNetwork`/`FloatNetwork` paths — property-tested below against
+//! independent reference compositions of the allocating kernels.
+
+use std::time::Instant;
+
+use crate::bnn::network::{LayerTimings, IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::bnn::scratch::PlanScratch;
+use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
+use crate::input::binarize::{self, Scheme};
+use crate::util::tensorio::TensorFile;
+
+use super::plan::{BufClass, BufId, Plan, Src, StepKind};
+use super::{Activation, GraphError, NetworkSpec};
+
+/// One lowered step with its weights resident (see [`StepKind`] for the
+/// unbound form).
+struct BoundStep {
+    kind: BoundKind,
+    input: Src,
+    output: BufId,
+    scratch: Option<BufId>,
+    h: usize,
+    w: usize,
+    c_in: usize,
+    label_a: String,
+    label_b: Option<String>,
+}
+
+enum BoundKind {
+    Binarize { scheme: Scheme, t: Vec<f32> },
+    ConvBinPacked { k: usize, c_out: usize, nw: usize, d: usize, w64: Vec<u64> },
+    ConvBinWords { k: usize, c_out: usize, d: usize, w64: Vec<u64> },
+    ConvFloat { k: usize, c_out: usize, relu: bool, w: Vec<f32>, b: Option<Vec<f32>> },
+    MaxPool,
+    OrPool,
+    ThresholdPack { f32_in: bool, theta: Vec<f32>, flip: Vec<u32> },
+    ThresholdPm1 { theta: Vec<f32>, flip: Vec<u32> },
+    FcBin { kw: usize, c_out: usize, d: usize, w: Vec<u32> },
+    FcFloat { d: usize, c_out: usize, act: Activation, w: Vec<f32>, b: Option<Vec<f32>> },
+}
+
+/// A plan with weights bound — the executable form of a network.
+pub struct CompiledNetwork {
+    steps: Vec<BoundStep>,
+    plan: Plan,
+}
+
+/// Wall-clock recorder for the timed single-image path (`None` on the
+/// serving path — zero timing overhead for batches).
+struct TimingRec {
+    times: LayerTimings,
+    mark: Instant,
+}
+
+impl TimingRec {
+    fn lap(&mut self, label: &str) {
+        let now = Instant::now();
+        self.times.push((label.to_string(), now - self.mark));
+        self.mark = now;
+    }
+}
+
+fn lap(rec: &mut Option<TimingRec>, label: &str) {
+    if let Some(r) = rec {
+        r.lap(label);
+    }
+}
+
+impl CompiledNetwork {
+    /// Compile `spec` and bind every declared weight from `tf`.
+    pub fn from_tensor_file(tf: &TensorFile, spec: &NetworkSpec) -> Result<Self, GraphError> {
+        Self::from_plan(spec.plan()?, tf)
+    }
+
+    /// Bind an already-compiled plan (the registry loader compiles once,
+    /// then binds).
+    pub fn from_plan(plan: Plan, tf: &TensorFile) -> Result<Self, GraphError> {
+        let fetch_f32 = |name: &str, want: usize| -> Result<Vec<f32>, GraphError> {
+            let v = tf.f32(name).map_err(|e| GraphError::Weight(e.to_string()))?;
+            if v.len() != want {
+                return Err(GraphError::Weight(format!(
+                    "tensor {name:?} has {} elements, plan expects {want}",
+                    v.len()
+                )));
+            }
+            Ok(v)
+        };
+        let fetch_u32 = |name: &str, want: usize| -> Result<Vec<u32>, GraphError> {
+            let v = tf.u32(name).map_err(|e| GraphError::Weight(e.to_string()))?;
+            if v.len() != want {
+                return Err(GraphError::Weight(format!(
+                    "tensor {name:?} has {} elements, plan expects {want}",
+                    v.len()
+                )));
+            }
+            Ok(v)
+        };
+
+        let mut steps = Vec::with_capacity(plan.steps.len());
+        for step in &plan.steps {
+            let (h, w, c_in) = (step.in_ty.h, step.in_ty.w, step.in_ty.c);
+            let kind = match &step.kind {
+                StepKind::Binarize { scheme } => BoundKind::Binarize {
+                    scheme: *scheme,
+                    t: match scheme {
+                        Scheme::Rgb => fetch_f32("input_t", 3)?,
+                        Scheme::Gray => fetch_f32("input_t", 1)?,
+                        _ => Vec::new(),
+                    },
+                },
+                StepKind::ConvBinPacked { k, c_out, nw, d, w } => {
+                    let mut packed = fetch_u32(w, c_out * nw)?;
+                    // zero each row's tail-word pad bits: activations pack
+                    // with zero pads (BitWriter), so nonzero weight pads
+                    // would pollute every popcount with a constant offset
+                    let tail = d % 32;
+                    if tail != 0 {
+                        let mask = !0u32 << (32 - tail);
+                        for row in 0..*c_out {
+                            packed[row * nw + (nw - 1)] &= mask;
+                        }
+                    }
+                    BoundKind::ConvBinPacked {
+                        k: *k,
+                        c_out: *c_out,
+                        nw: *nw,
+                        d: *d,
+                        w64: bgemm::widen_weights(&packed, *c_out, *nw),
+                    }
+                }
+                StepKind::ConvBinWords { k, c_out, d, w } => {
+                    let mut packed = fetch_u32(w, c_out * k * k)?;
+                    mask_channel_pads(&mut packed, c_in);
+                    BoundKind::ConvBinWords {
+                        k: *k,
+                        c_out: *c_out,
+                        d: *d,
+                        w64: bgemm::widen_weights(&packed, *c_out, k * k),
+                    }
+                }
+                StepKind::ConvFloat { k, c_out, relu, w, b } => BoundKind::ConvFloat {
+                    k: *k,
+                    c_out: *c_out,
+                    relu: *relu,
+                    w: fetch_f32(w, c_out * k * k * c_in)?,
+                    b: match b {
+                        Some(b) => Some(fetch_f32(b, *c_out)?),
+                        None => None,
+                    },
+                },
+                StepKind::MaxPool => BoundKind::MaxPool,
+                StepKind::OrPool => BoundKind::OrPool,
+                StepKind::ThresholdPack { f32_in, theta, flip } => BoundKind::ThresholdPack {
+                    f32_in: *f32_in,
+                    theta: fetch_f32(theta, c_in)?,
+                    flip: fetch_u32(flip, c_in)?,
+                },
+                StepKind::ThresholdPm1 { theta, flip } => BoundKind::ThresholdPm1 {
+                    theta: fetch_f32(theta, c_in)?,
+                    flip: fetch_u32(flip, c_in)?,
+                },
+                StepKind::FcBin { kw, c_out, d, w } => {
+                    let mut packed = fetch_u32(w, c_out * kw)?;
+                    mask_channel_pads(&mut packed, c_in);
+                    BoundKind::FcBin { kw: *kw, c_out: *c_out, d: *d, w: packed }
+                }
+                StepKind::FcFloat { d, c_out, act, w, b } => BoundKind::FcFloat {
+                    d: *d,
+                    c_out: *c_out,
+                    act: *act,
+                    w: fetch_f32(w, c_out * d)?,
+                    b: match b {
+                        Some(b) => Some(fetch_f32(b, *c_out)?),
+                        None => None,
+                    },
+                },
+            };
+            steps.push(BoundStep {
+                kind,
+                input: step.input,
+                output: step.output,
+                scratch: step.scratch,
+                h,
+                w,
+                c_in,
+                label_a: step.label_a.clone(),
+                label_b: step.label_b.clone(),
+            });
+        }
+        Ok(Self { steps, plan })
+    }
+
+    /// The compiled plan (arena layout, weight declarations, labels).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Logit rows per image.
+    pub fn num_classes(&self) -> usize {
+        self.plan.classes
+    }
+
+    /// Batched forward through a fresh arena (convenience; hot paths
+    /// hold a pooled arena and call
+    /// [`CompiledNetwork::infer_batch_with`]).
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, GraphError> {
+        self.infer_batch_with(images, &mut PlanScratch::new())
+    }
+
+    /// Batched forward over `n` contiguous (96,96,3) images through a
+    /// reusable planned arena.  Malformed input is a recoverable
+    /// [`GraphError::BadInput`], never a panic — this is the
+    /// serving-reachable entry point.
+    pub fn infer_batch_with(
+        &self,
+        images: &[f32],
+        scratch: &mut PlanScratch,
+    ) -> Result<Vec<[f32; NUM_CLASSES]>, GraphError> {
+        const IMG: usize = IMG_H * IMG_W * IMG_C;
+        if images.len() % IMG != 0 {
+            return Err(GraphError::BadInput(format!(
+                "batch payload {} is not a multiple of {IMG}",
+                images.len()
+            )));
+        }
+        let n = images.len() / IMG;
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut rec = None;
+        self.execute(images, n, scratch, &mut rec)?;
+        let out = self.read_logits(n, scratch);
+        scratch.end_batch();
+        Ok(out)
+    }
+
+    /// Single-image forward with per-step wall times (the Table 2 /
+    /// Nvidia-Visual-Profiler instrument).  Allocates a fresh arena —
+    /// this is a diagnostic path, not the serving path.
+    pub fn forward_timed(&self, x: &[f32]) -> Result<([f32; NUM_CLASSES], LayerTimings), GraphError> {
+        const IMG: usize = IMG_H * IMG_W * IMG_C;
+        if x.len() != IMG {
+            return Err(GraphError::BadInput(format!(
+                "single-image payload must be {IMG} floats, got {}",
+                x.len()
+            )));
+        }
+        let mut scratch = PlanScratch::new();
+        let mut rec = Some(TimingRec { times: Vec::new(), mark: Instant::now() });
+        self.execute(x, 1, &mut scratch, &mut rec)?;
+        let logits = self.read_logits(1, &scratch)[0];
+        Ok((logits, rec.take().expect("timing rec").times))
+    }
+
+    /// Copy the final step's output slot into per-image logit rows.
+    ///
+    /// The fixed `[f32; NUM_CLASSES]` row type is coupled to the plan
+    /// validator, which rejects any graph not ending in exactly
+    /// `NUM_CLASSES` logits — if that check is ever relaxed, this
+    /// return type (and the protocol's logit shape) must generalize
+    /// with it, or the slice copy below panics.
+    fn read_logits(&self, n: usize, scratch: &PlanScratch) -> Vec<[f32; NUM_CLASSES]> {
+        let last = self.steps.last().expect("plan has >= 1 step");
+        let out = scratch.f32_slot(last.output.idx);
+        let c = self.plan.classes;
+        debug_assert_eq!(c, NUM_CLASSES, "validated at plan time");
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = [0f32; NUM_CLASSES];
+            row.copy_from_slice(&out[i * c..(i + 1) * c]);
+            rows.push(row);
+        }
+        rows
+    }
+
+    /// Run every step for a batch of `n` images.
+    fn execute(
+        &self,
+        images: &[f32],
+        n: usize,
+        scratch: &mut PlanScratch,
+        rec: &mut Option<TimingRec>,
+    ) -> Result<(), GraphError> {
+        scratch.ensure(self.plan.nbufs);
+        // the plan validator guarantees even pool extents, so a runtime
+        // PoolError can only mean a compiler bug — surface it as such,
+        // never as a client-attributed bad payload
+        let bad = |e: maxpool::PoolError| GraphError::Internal(e.to_string());
+        for step in &self.steps {
+            let (h, w) = (step.h, step.w);
+            let px = h * w;
+            match &step.kind {
+                BoundKind::Binarize { scheme, t } => {
+                    let c_out = scheme.input_channels();
+                    let mut gray = match step.scratch {
+                        Some(s) => scratch.take_f32(s.idx),
+                        None => Vec::new(),
+                    };
+                    let mut out = scratch.take_f32(step.output.idx);
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        // resize without clear: every per-image slice is
+                        // fully overwritten below
+                        out.resize(n * px * c_out, 0.0);
+                        if *scheme == Scheme::Lbp {
+                            gray.resize(px, 0.0); // only LBP reads it
+                        }
+                        for i in 0..n {
+                            let xi = &x[i * px * 3..(i + 1) * px * 3];
+                            let oi = &mut out[i * px * c_out..(i + 1) * px * c_out];
+                            match scheme {
+                                Scheme::Rgb => {
+                                    binarize::threshold_rgb_into(xi, &[t[0], t[1], t[2]], oi)
+                                }
+                                Scheme::Gray => binarize::threshold_gray_into(xi, t[0], oi),
+                                Scheme::Lbp => binarize::lbp_into(xi, h, w, &mut gray, oi),
+                                Scheme::None => unreachable!("rejected at plan time"),
+                            }
+                        }
+                    }
+                    if let Some(s) = step.scratch {
+                        scratch.put_f32(s.idx, gray);
+                    }
+                    scratch.put_f32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+                BoundKind::ConvBinPacked { k, c_out, nw, d, w64 } => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_u32(sc.idx);
+                    let mut counts = scratch.take_i32(step.output.idx);
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        im2col::im2col_pack_batch_into(x, n, h, w, step.c_in, *k, 32, &mut cols);
+                        lap(rec, &step.label_a);
+                        counts.resize(n * px * c_out, 0); // the GEMM assigns every element
+                        bgemm::bgemm_prewidened(&cols, w64, n * px, *c_out, *nw, *d, &mut counts);
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_u32(sc.idx, cols);
+                    scratch.put_i32(step.output.idx, counts);
+                }
+                BoundKind::ConvBinWords { k, c_out, d, w64 } => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_u32(sc.idx);
+                    let mut counts = scratch.take_i32(step.output.idx);
+                    {
+                        let x = input_u32(scratch, step.input)?;
+                        im2col::im2col_words_batch_into(x, n, h, w, 1, *k, &mut cols);
+                        lap(rec, &step.label_a);
+                        counts.resize(n * px * c_out, 0); // the GEMM assigns every element
+                        bgemm::bgemm_prewidened(&cols, w64, n * px, *c_out, k * k, *d, &mut counts);
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_u32(sc.idx, cols);
+                    scratch.put_i32(step.output.idx, counts);
+                }
+                BoundKind::ConvFloat { k, c_out, relu, w, b } => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_f32(sc.idx);
+                    let mut act = scratch.take_f32(step.output.idx);
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        im2col::im2col_float_batch_into(x, n, h, w, step.c_in, *k, &mut cols);
+                        lap(rec, &step.label_a);
+                        act.resize(n * px * c_out, 0.0); // the GEMM assigns every element
+                        float_ops::gemm_blocked_into(
+                            &cols,
+                            w,
+                            n * px,
+                            *c_out,
+                            k * k * step.c_in,
+                            &mut act,
+                        );
+                        if let Some(b) = b {
+                            float_ops::add_bias(&mut act, b);
+                        }
+                        if *relu {
+                            float_ops::relu(&mut act);
+                        }
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_f32(sc.idx, cols);
+                    scratch.put_f32(step.output.idx, act);
+                }
+                BoundKind::MaxPool => {
+                    let mut out = scratch.take_f32(step.output.idx);
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        maxpool::maxpool2x2_batch_into(x, n, h, w, step.c_in, &mut out)
+                            .map_err(bad)?;
+                    }
+                    scratch.put_f32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+                BoundKind::OrPool => {
+                    let mut out = scratch.take_u32(step.output.idx);
+                    {
+                        let x = input_u32(scratch, step.input)?;
+                        maxpool::orpool2x2_batch_into(x, n, h, w, 1, &mut out).map_err(bad)?;
+                    }
+                    scratch.put_u32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+                BoundKind::ThresholdPack { f32_in, theta, flip } => {
+                    let mut out = scratch.take_u32(step.output.idx);
+                    if *f32_in {
+                        let x = input_f32(scratch, images, step.input);
+                        threshold_pack_words(x, theta, flip, n * px, &mut out, |v| v);
+                    } else {
+                        let x = input_i32(scratch, step.input)?;
+                        threshold_pack_words(x, theta, flip, n * px, &mut out, |v| v as f32);
+                    }
+                    scratch.put_u32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+                BoundKind::ThresholdPm1 { theta, flip } => {
+                    let c = step.c_in;
+                    let mut out = scratch.take_f32(step.output.idx);
+                    {
+                        let x = input_i32(scratch, step.input)?;
+                        // resize without clear: every element is assigned
+                        out.resize(n * c, 0.0);
+                        for (o, (&v, j)) in out
+                            .iter_mut()
+                            .zip(x.iter().zip((0..c).cycle()))
+                        {
+                            *o = if packing::threshold_bit(v as f32, theta[j], flip[j]) == 1 {
+                                1.0
+                            } else {
+                                -1.0
+                            };
+                        }
+                    }
+                    scratch.put_f32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+                BoundKind::FcBin { kw, c_out, d, w } => {
+                    let mut out = scratch.take_i32(step.output.idx);
+                    {
+                        let x = input_u32(scratch, step.input)?;
+                        fc::fc_packed_batch_into(x, w, n, *c_out, *kw, *d, &mut out);
+                    }
+                    scratch.put_i32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+                BoundKind::FcFloat { d, c_out, act, w, b } => {
+                    let mut out = scratch.take_f32(step.output.idx);
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        // resize without clear: every row is assigned by
+                        // the FC kernel below
+                        out.resize(n * c_out, 0.0);
+                        for i in 0..n {
+                            let xi = &x[i * d..(i + 1) * d];
+                            let oi = &mut out[i * c_out..(i + 1) * c_out];
+                            match b {
+                                Some(b) => fc::fc_float_bias_into(xi, w, b, *c_out, *d, oi),
+                                None => fc::fc_float_into(xi, w, *c_out, *d, oi),
+                            }
+                            match act {
+                                Activation::None => {}
+                                Activation::Relu => float_ops::relu(oi),
+                                Activation::Sign => {
+                                    for v in oi.iter_mut() {
+                                        *v = packing::sign_pm1(*v);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    scratch.put_f32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Zero the pad bits of channel-packed weight words (`c` live channels
+/// occupy the TOP `c` bits of each word, matching the threshold
+/// packer's layout).  Word-domain activations always carry zero pads,
+/// so `d - 2·popcount(x ^ w)` is the declared XNOR dot only if weight
+/// pads are zero too — exporters that leave them uninitialized would
+/// otherwise get a silent constant offset per output channel.
+fn mask_channel_pads(packed: &mut [u32], c: usize) {
+    if c < 32 {
+        let mask = !0u32 << (32 - c);
+        for w in packed.iter_mut() {
+            *w &= mask;
+        }
+    }
+}
+
+/// Resolve a step's float input: the external image payload or a planned
+/// f32 slot.
+fn input_f32<'a>(scratch: &'a PlanScratch, images: &'a [f32], src: Src) -> &'a [f32] {
+    match src {
+        Src::External => images,
+        Src::Buf(b) => {
+            debug_assert_eq!(b.class, BufClass::F32);
+            scratch.f32_slot(b.idx)
+        }
+    }
+}
+
+/// Packed-words inputs only ever come from a planned slot (the external
+/// payload is float pixels); a violation is a compiler bug, reported as
+/// [`GraphError::Internal`] so it can never masquerade as a malformed
+/// client payload.
+fn input_u32(scratch: &PlanScratch, src: Src) -> Result<&[u32], GraphError> {
+    match src {
+        Src::Buf(b) if b.class == BufClass::U32 => Ok(scratch.u32_slot(b.idx)),
+        _ => Err(GraphError::Internal("packed step without a packed slot".into())),
+    }
+}
+
+fn input_i32(scratch: &PlanScratch, src: Src) -> Result<&[i32], GraphError> {
+    match src {
+        Src::Buf(b) if b.class == BufClass::I32 => Ok(scratch.i32_slot(b.idx)),
+        _ => Err(GraphError::Internal("counts step without a counts slot".into())),
+    }
+}
+
+/// Threshold per-channel values and channel-pack ≤ 32 channels into one
+/// word per pixel, MSB-first — the ONE definition of the layout that
+/// `im2col_words` gathers and `mask_channel_pads` assumes (integer and
+/// float counts share it via `to_f32`, so the two domains can never
+/// drift).  Resized without clear: every element of `0..pixels` is
+/// assigned.
+fn threshold_pack_words<T: Copy>(
+    counts: &[T],
+    theta: &[f32],
+    flip: &[u32],
+    pixels: usize,
+    out: &mut Vec<u32>,
+    to_f32: impl Fn(T) -> f32,
+) {
+    let c = theta.len();
+    debug_assert!(c <= 32);
+    out.resize(pixels, 0);
+    for px in 0..pixels {
+        let row = &counts[px * c..(px + 1) * c];
+        let mut word = 0u32;
+        for ch in 0..c {
+            word |= packing::threshold_bit(to_f32(row[ch]), theta[ch], flip[ch]) << (31 - ch);
+        }
+        out[px] = word;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::network::tests_support::{
+        synth_bcnn_tf, synth_float_tf, synth_image, synth_tf_for_spec,
+    };
+    use crate::bnn::packing::packed_width;
+    use crate::util::prop::{self, ensure_eq};
+
+    const IMG: usize = IMG_H * IMG_W * IMG_C;
+
+    // --- independent reference compositions -----------------------------
+    // These re-derive the pre-refactor forward passes from the simple
+    // ALLOCATING kernels (non-widened bgemm, per-image im2col, fresh
+    // vectors everywhere) — a different code path from the planned
+    // executor, so agreement is a real oracle, not a tautology.
+
+    fn ref_thr_pack(counts: &[f32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
+        let c = theta.len();
+        let mut out = vec![0u32; pixels];
+        for px in 0..pixels {
+            let mut word = 0u32;
+            for ch in 0..c {
+                word |= packing::threshold_bit(counts[px * c + ch], theta[ch], flip[ch])
+                    << (31 - ch);
+            }
+            out[px] = word;
+        }
+        out
+    }
+
+    fn ref_bcnn_forward(tf: &TensorFile, scheme: Scheme, x: &[f32]) -> [f32; NUM_CLASSES] {
+        let c_in = scheme.input_channels();
+        let d1 = 25 * c_in;
+        let nw1 = packed_width(d1, 32);
+        let theta1 = tf.f32("theta1").unwrap();
+        let flip1 = tf.u32("flip1").unwrap();
+        let words1 = match scheme {
+            Scheme::None => {
+                let cols = im2col::im2col_float(x, 96, 96, 3, 5);
+                let counts = float_ops::gemm_blocked(
+                    &cols,
+                    &tf.f32("w1_pm1").unwrap(),
+                    96 * 96,
+                    32,
+                    75,
+                );
+                ref_thr_pack(&counts, &theta1, &flip1, 96 * 96)
+            }
+            _ => {
+                let t = tf.f32("input_t").ok();
+                let xb = match scheme {
+                    Scheme::Rgb => {
+                        let t = t.unwrap();
+                        binarize::threshold_rgb(x, &[t[0], t[1], t[2]])
+                    }
+                    Scheme::Gray => binarize::threshold_gray(x, t.unwrap()[0]),
+                    Scheme::Lbp => binarize::lbp(x, 96, 96),
+                    Scheme::None => unreachable!(),
+                };
+                let cols = im2col::im2col_pack(&xb, 96, 96, c_in, 5, 32);
+                let counts =
+                    bgemm::bgemm(&cols, &tf.u32("w1_packed").unwrap(), 96 * 96, 32, nw1, d1);
+                let f: Vec<f32> = counts.iter().map(|&v| v as f32).collect();
+                ref_thr_pack(&f, &theta1, &flip1, 96 * 96)
+            }
+        };
+        let pooled1 = maxpool::orpool2x2(&words1, 96, 96, 1);
+        let cols2 = im2col::im2col_words(&pooled1, 48, 48, 1, 5);
+        let counts2 =
+            bgemm::bgemm(&cols2, &tf.u32("w2_packed").unwrap(), 48 * 48, 32, 25, 25 * 32);
+        let f2: Vec<f32> = counts2.iter().map(|&v| v as f32).collect();
+        let words2 = ref_thr_pack(&f2, &tf.f32("theta2").unwrap(), &tf.u32("flip2").unwrap(), 48 * 48);
+        let pooled2 = maxpool::orpool2x2(&words2, 48, 48, 1);
+        let counts3 =
+            fc::fc_packed(&pooled2, &tf.u32("wfc1_packed").unwrap(), 100, 576, 576 * 32);
+        let theta3 = tf.f32("theta3").unwrap();
+        let flip3 = tf.u32("flip3").unwrap();
+        let h3: Vec<f32> = counts3
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                if packing::threshold_bit(v as f32, theta3[i], flip3[i]) == 1 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            })
+            .collect();
+        let mut h4 = fc::fc_float_bias(
+            &h3,
+            &tf.f32("wfc2").unwrap(),
+            &tf.f32("bfc2").unwrap(),
+            100,
+            100,
+        );
+        for v in h4.iter_mut() {
+            *v = packing::sign_pm1(*v);
+        }
+        let logits_v = fc::fc_float_bias(
+            &h4,
+            &tf.f32("wfc3").unwrap(),
+            &tf.f32("bfc3").unwrap(),
+            NUM_CLASSES,
+            100,
+        );
+        let mut logits = [0f32; NUM_CLASSES];
+        logits.copy_from_slice(&logits_v);
+        logits
+    }
+
+    fn ref_float_forward(tf: &TensorFile, x: &[f32]) -> [f32; NUM_CLASSES] {
+        let cols1 = im2col::im2col_float(x, 96, 96, 3, 5);
+        let mut a1 = float_ops::gemm_blocked(&cols1, &tf.f32("w1").unwrap(), 96 * 96, 32, 75);
+        float_ops::add_bias(&mut a1, &tf.f32("b1").unwrap());
+        float_ops::relu(&mut a1);
+        let p1 = maxpool::maxpool2x2(&a1, 96, 96, 32);
+        let cols2 = im2col::im2col_float(&p1, 48, 48, 32, 5);
+        let mut a2 =
+            float_ops::gemm_blocked(&cols2, &tf.f32("w2").unwrap(), 48 * 48, 32, 25 * 32);
+        float_ops::add_bias(&mut a2, &tf.f32("b2").unwrap());
+        float_ops::relu(&mut a2);
+        let p2 = maxpool::maxpool2x2(&a2, 48, 48, 32);
+        let mut h1 = fc::fc_float_bias(
+            &p2,
+            &tf.f32("wfc1").unwrap(),
+            &tf.f32("bfc1").unwrap(),
+            100,
+            24 * 24 * 32,
+        );
+        float_ops::relu(&mut h1);
+        let mut h2 = fc::fc_float_bias(
+            &h1,
+            &tf.f32("wfc2").unwrap(),
+            &tf.f32("bfc2").unwrap(),
+            100,
+            100,
+        );
+        float_ops::relu(&mut h2);
+        let logits_v = fc::fc_float_bias(
+            &h2,
+            &tf.f32("wfc3").unwrap(),
+            &tf.f32("bfc3").unwrap(),
+            NUM_CLASSES,
+            100,
+        );
+        let mut logits = [0f32; NUM_CLASSES];
+        logits.copy_from_slice(&logits_v);
+        logits
+    }
+
+    fn images(n: usize, seed: u64) -> Vec<f32> {
+        let mut xs = Vec::with_capacity(n * IMG);
+        for i in 0..n {
+            xs.extend(synth_image(seed.wrapping_add(i as u64)));
+        }
+        xs
+    }
+
+    #[test]
+    fn compiled_bcnn_is_bit_identical_to_the_legacy_reference() {
+        // THE tentpole property: for every scheme, random batch sizes,
+        // ONE arena reused across all cases (so slots shrink and grow),
+        // the planned executor must equal (a) a fresh arena and (b) the
+        // independent allocating reference, bitwise.
+        let cases: Vec<(Scheme, TensorFile, CompiledNetwork)> = Scheme::ALL
+            .iter()
+            .map(|&s| {
+                let tf = synth_bcnn_tf(s, 310);
+                let net =
+                    CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_bcnn(s)).unwrap();
+                (s, tf, net)
+            })
+            .collect();
+        let mut reused = PlanScratch::new();
+        prop::check(12, |g| {
+            let (scheme, tf, net) = g.pick(&cases);
+            let n = g.usize_in(1, 5);
+            let xs = images(n, g.u64());
+            let with_reused = net.infer_batch_with(&xs, &mut reused).unwrap();
+            let with_fresh = net.infer_batch(&xs).unwrap();
+            ensure_eq(with_reused.clone(), with_fresh, "reused arena == fresh arena")?;
+            for i in 0..n {
+                let want = ref_bcnn_forward(tf, *scheme, &xs[i * IMG..(i + 1) * IMG]);
+                ensure_eq(with_reused[i], want, "compiled == legacy reference")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compiled_float_is_bit_identical_to_the_legacy_reference() {
+        let tf = synth_float_tf(311);
+        let net = CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_float()).unwrap();
+        let mut reused = PlanScratch::new();
+        prop::check(6, |g| {
+            let n = g.usize_in(1, 4);
+            let xs = images(n, g.u64());
+            let got = net.infer_batch_with(&xs, &mut reused).unwrap();
+            ensure_eq(got.clone(), net.infer_batch(&xs).unwrap(), "reused == fresh")?;
+            for i in 0..n {
+                let want = ref_float_forward(&tf, &xs[i * IMG..(i + 1) * IMG]);
+                ensure_eq(got[i], want, "compiled float == legacy reference")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn one_arena_serves_different_plans_interleaved() {
+        // the backend pool hands arenas to whatever plan runs next;
+        // slots are role-less, so nothing may bleed across plans
+        let btf = synth_bcnn_tf(Scheme::Gray, 321);
+        let bnet =
+            CompiledNetwork::from_tensor_file(&btf, &NetworkSpec::legacy_bcnn(Scheme::Gray))
+                .unwrap();
+        let ftf = synth_float_tf(322);
+        let fnet = CompiledNetwork::from_tensor_file(&ftf, &NetworkSpec::legacy_float()).unwrap();
+        let mut arena = PlanScratch::new();
+        for round in 0..3u64 {
+            let xs = images(2, 4000 + round);
+            let b = bnet.infer_batch_with(&xs, &mut arena).unwrap();
+            let f = fnet.infer_batch_with(&xs, &mut arena).unwrap();
+            for i in 0..2 {
+                assert_eq!(b[i], ref_bcnn_forward(&btf, Scheme::Gray, &xs[i * IMG..(i + 1) * IMG]));
+                assert_eq!(f[i], ref_float_forward(&ftf, &xs[i * IMG..(i + 1) * IMG]));
+            }
+        }
+    }
+
+    #[test]
+    fn a_custom_three_conv_plan_executes_and_batches_consistently() {
+        // no legacy twin exists for this topology — the invariant is
+        // batch-of-n == n batches-of-1, bitwise, through a reused arena
+        let spec = NetworkSpec {
+            ops: vec![
+                crate::bnn::graph::LayerOp::Binarize { scheme: Scheme::Rgb },
+                crate::bnn::graph::LayerOp::ConvBin { k: 3, c_out: 16 },
+                crate::bnn::graph::LayerOp::Threshold,
+                crate::bnn::graph::LayerOp::OrPool,
+                crate::bnn::graph::LayerOp::ConvBin { k: 3, c_out: 16 },
+                crate::bnn::graph::LayerOp::Threshold,
+                crate::bnn::graph::LayerOp::OrPool,
+                crate::bnn::graph::LayerOp::ConvBin { k: 3, c_out: 16 },
+                crate::bnn::graph::LayerOp::Threshold,
+                crate::bnn::graph::LayerOp::OrPool,
+                crate::bnn::graph::LayerOp::FcBin { c_out: 32 },
+                crate::bnn::graph::LayerOp::Threshold,
+                crate::bnn::graph::LayerOp::FcFloat {
+                    c_out: NUM_CLASSES,
+                    bias: true,
+                    act: Activation::None,
+                },
+            ],
+        };
+        let tf = synth_tf_for_spec(&spec, 333);
+        let net = CompiledNetwork::from_tensor_file(&tf, &spec).unwrap();
+        let mut arena = PlanScratch::new();
+        prop::check(8, |g| {
+            let n = g.usize_in(1, 4);
+            let xs = images(n, g.u64());
+            let batched = net.infer_batch_with(&xs, &mut arena).unwrap();
+            ensure_eq(batched.len(), n, "one row per image")?;
+            for i in 0..n {
+                let single = net.infer_batch(&xs[i * IMG..(i + 1) * IMG]).unwrap();
+                ensure_eq(batched[i], single[0], "batched == single (bitwise)")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_weight_pad_bits_are_masked_at_bind() {
+        // regression (code review): with < 32 live channels, nonzero pad
+        // bits in an exporter's packed weights would add a constant
+        // popcount offset per output channel — binding must zero them,
+        // so two containers differing ONLY in pad bits are equivalent
+        use crate::bnn::graph::LayerOp;
+        use crate::util::tensorio::Tensor;
+        let spec = NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 3, c_out: 16 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 16 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        };
+        let tf = synth_tf_for_spec(&spec, 940);
+        let x = synth_image(12);
+        let base = CompiledNetwork::from_tensor_file(&tf, &spec)
+            .unwrap()
+            .infer_batch(&x)
+            .unwrap();
+        // pollute ONLY pad bits: conv2's words-domain weights have 16
+        // live (top) bits per word, so the low 16 are padding; fc1's
+        // words also carry 16 live channels
+        let mut tf2 = synth_tf_for_spec(&spec, 940);
+        let mut w2 = tf.u32("w2_packed").unwrap();
+        for w in w2.iter_mut() {
+            *w ^= 0x0000_ffff;
+        }
+        tf2.insert("w2_packed", Tensor::from_u32(vec![16, 9], &w2));
+        let mut wfc1 = tf.u32("wfc1_packed").unwrap();
+        for w in wfc1.iter_mut() {
+            *w ^= 0x0000_ffff;
+        }
+        tf2.insert("wfc1_packed", Tensor::from_u32(vec![32, 24 * 24], &wfc1));
+        let polluted = CompiledNetwork::from_tensor_file(&tf2, &spec)
+            .unwrap()
+            .infer_batch(&x)
+            .unwrap();
+        assert_eq!(base, polluted, "pad bits leaked into the popcount");
+    }
+
+    #[test]
+    fn forward_timed_labels_cover_the_plan() {
+        let tf = synth_bcnn_tf(Scheme::Rgb, 350);
+        let net =
+            CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_bcnn(Scheme::Rgb)).unwrap();
+        let (logits, times) = net.forward_timed(&synth_image(1)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(times.len() >= 9, "{times:?}");
+        assert!(times.iter().any(|(n, _)| n == "gemm2"));
+        assert!(times.iter().any(|(n, _)| n == "input_binarize"));
+    }
+
+    #[test]
+    fn ragged_and_empty_payloads_are_recoverable() {
+        let tf = synth_bcnn_tf(Scheme::Rgb, 351);
+        let net =
+            CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_bcnn(Scheme::Rgb)).unwrap();
+        assert!(matches!(net.infer_batch(&[0.0; 100]), Err(GraphError::BadInput(_))));
+        assert!(net.infer_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn weight_binding_rejects_missing_and_misshaped_tensors() {
+        // empty container: first missing tensor is a structured error
+        let err = CompiledNetwork::from_tensor_file(
+            &TensorFile::new(),
+            &NetworkSpec::legacy_bcnn(Scheme::Rgb),
+        )
+        .unwrap_err();
+        assert!(matches!(err, GraphError::Weight(_)), "{err}");
+        // scheme mismatch: a gray plan binding an rgb container trips the
+        // packed-width length check (nw differs per input channel count)
+        let rgb_tf = synth_bcnn_tf(Scheme::Rgb, 352);
+        let err =
+            CompiledNetwork::from_tensor_file(&rgb_tf, &NetworkSpec::legacy_bcnn(Scheme::Gray))
+                .unwrap_err();
+        assert!(matches!(err, GraphError::Weight(_)), "{err}");
+    }
+}

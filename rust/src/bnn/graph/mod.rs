@@ -1,0 +1,345 @@
+//! Layer-graph IR: networks as *data*, not Rust structs.
+//!
+//! The paper's core claim is that a binarized layer is a drop-in
+//! replacement for its float twin — pack → XNOR-GEMM →
+//! popcount-threshold instead of im2col → SGEMM → ReLU.  FINN
+//! (Umuroglu et al., 2016) turns that observation into an architecture:
+//! a *compiler* from a layer graph to streaming compute, instead of a
+//! hand-wired forward function per topology.  This module is that
+//! factoring for the Rust engine:
+//!
+//! * [`LayerOp`] — the typed op vocabulary (binarize, packed/float
+//!   conv, OR/max pool, packed/float FC, threshold), each op carrying
+//!   only its *declared* metadata; every derived shape is inferred.
+//! * [`NetworkSpec`] — an ordered op list.  Parsed from an
+//!   `"arch": [...]` JSON array in the registry manifest
+//!   ([`NetworkSpec::from_json`]), or synthesized for the legacy fixed
+//!   2-conv/2-fc topologies ([`NetworkSpec::legacy_bcnn`] /
+//!   [`NetworkSpec::legacy_float`]) so every pre-existing weight
+//!   container keeps loading unchanged.
+//! * [`plan`] — the compiler: shape inference + validation, weight-name
+//!   resolution (positional, reproducing the legacy tensor names), and
+//!   per-edge liveness analysis that assigns every intermediate tensor
+//!   to a slot in a planned scratch arena
+//!   ([`crate::bnn::scratch::PlanScratch`]).
+//! * [`exec`] — [`CompiledNetwork`](exec::CompiledNetwork): the plan
+//!   with weights bound (pre-widened at build time), executing batches
+//!   over the planned arena.  `BcnnNetwork`/`FloatNetwork` are thin
+//!   wrappers over it.
+//!
+//! Mixed precision per layer (XNOR-Net's motivation) falls out of the
+//! vocabulary: a spec may open with a float conv and binarize later, or
+//! stack three packed convs — no new forward function required.
+
+pub mod exec;
+pub mod plan;
+
+pub use exec::CompiledNetwork;
+pub use plan::{Plan, WeightReq};
+
+use crate::input::binarize::Scheme;
+use crate::util::json::Json;
+
+/// Activation applied inside a float FC layer, after the bias add.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    /// `sign(x)` to ±1 — the BCNN tail's re-binarization.
+    Sign,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "none" => Activation::None,
+            "relu" => Activation::Relu,
+            "sign" => Activation::Sign,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+            Activation::Sign => "sign",
+        }
+    }
+}
+
+/// One layer of a network graph.  Ops carry declared parameters only;
+/// input shapes, value domains (float / packed words / integer counts),
+/// buffer placement, and weight tensor names are resolved by the plan
+/// compiler ([`NetworkSpec::plan`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerOp {
+    /// Input binarization (paper Section 2.3).  Float image → ±1 floats
+    /// with the scheme's channel count.  `Scheme::None` networks simply
+    /// omit this op (the float conv consumes the raw image directly).
+    Binarize { scheme: Scheme },
+    /// Packed binary convolution: fused im2col(+pack) + XNOR-popcount
+    /// GEMM.  Accepts ±1 floats (first binary layer; Algorithm 1 pack)
+    /// or channel-packed words (deeper layers; the word gather).
+    /// Output is integer counts — follow with [`LayerOp::Threshold`].
+    ConvBin { k: usize, c_out: usize },
+    /// Float convolution: im2col + blocked SGEMM (+ bias + ReLU).
+    /// `w` overrides the positional weight name (the legacy
+    /// `Scheme::None` container calls conv1's ±1 float weights
+    /// `w1_pm1`).
+    ConvFloat { k: usize, c_out: usize, bias: bool, relu: bool, w: Option<String> },
+    /// Float 2×2/2 max pool.
+    MaxPool,
+    /// Packed 2×2/2 OR pool (max in the {-1,+1} domain).
+    OrPool,
+    /// Per-channel learned threshold (the folded
+    /// batchnorm/sign of the paper).  On spatial counts or float
+    /// activations → channel-packed words (≤ 32 channels); on flat FC
+    /// counts → ±1 floats for the float tail.
+    Threshold,
+    /// Packed binary fully-connected layer over channel-packed words;
+    /// output is integer counts.
+    FcBin { c_out: usize },
+    /// Float fully-connected layer (flattens any float input).
+    FcFloat { c_out: usize, bias: bool, act: Activation },
+}
+
+#[derive(Debug)]
+pub enum GraphError {
+    /// Malformed `"arch"` JSON (unknown op, bad field, empty graph).
+    Spec(String),
+    /// Structurally-valid graph that fails shape inference.
+    Validate { step: usize, op: String, why: String },
+    /// A weight tensor missing from, or mis-shaped in, the container.
+    Weight(String),
+    /// Recoverable bad input on the inference path (ragged payload).
+    BadInput(String),
+    /// A broken plan/executor invariant — a compiler bug, NOT a client
+    /// error (never mapped to the client-attributed `BadInput`).
+    Internal(String),
+}
+
+crate::error_enum_impls!(GraphError {
+    GraphError::Spec(msg) => ("graph spec: {msg}"),
+    GraphError::Validate { step, op, why } => ("graph step {step} ({op}): {why}"),
+    GraphError::Weight(msg) => ("graph weights: {msg}"),
+    GraphError::BadInput(msg) => ("graph: {msg}"),
+    GraphError::Internal(msg) => ("graph internal error (plan/executor bug): {msg}"),
+});
+
+/// An ordered layer graph (a linear chain — the shape every network in
+/// this system has; branching would extend [`plan`]'s liveness analysis,
+/// not this type).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    pub ops: Vec<LayerOp>,
+}
+
+impl NetworkSpec {
+    /// The legacy 2-conv/2-fc BCNN topology for `scheme` — synthesized
+    /// when a weight container or manifest entry declares no `arch`, so
+    /// every pre-graph artifact keeps loading byte-compatibly (the
+    /// positional weight-name rules reproduce `w1_packed`, `theta1`,
+    /// `wfc1_packed`, … exactly; see [`plan`]).
+    pub fn legacy_bcnn(scheme: Scheme) -> Self {
+        let mut ops = Vec::new();
+        match scheme {
+            Scheme::None => {
+                // conv1 stays full precision on the raw image; its float
+                // counts are thresholded into the packed domain
+                ops.push(LayerOp::ConvFloat {
+                    k: 5,
+                    c_out: 32,
+                    bias: false,
+                    relu: false,
+                    w: Some("w1_pm1".to_string()),
+                });
+            }
+            _ => {
+                ops.push(LayerOp::Binarize { scheme });
+                ops.push(LayerOp::ConvBin { k: 5, c_out: 32 });
+            }
+        }
+        ops.push(LayerOp::Threshold);
+        ops.push(LayerOp::OrPool);
+        ops.push(LayerOp::ConvBin { k: 5, c_out: 32 });
+        ops.push(LayerOp::Threshold);
+        ops.push(LayerOp::OrPool);
+        ops.push(LayerOp::FcBin { c_out: 100 });
+        ops.push(LayerOp::Threshold);
+        ops.push(LayerOp::FcFloat { c_out: 100, bias: true, act: Activation::Sign });
+        ops.push(LayerOp::FcFloat {
+            c_out: crate::bnn::network::NUM_CLASSES,
+            bias: true,
+            act: Activation::None,
+        });
+        Self { ops }
+    }
+
+    /// The legacy full-precision baseline (conv-pool ×2, fc ×3, ReLU).
+    pub fn legacy_float() -> Self {
+        let conv = |_i: usize| LayerOp::ConvFloat { k: 5, c_out: 32, bias: true, relu: true, w: None };
+        Self {
+            ops: vec![
+                conv(1),
+                LayerOp::MaxPool,
+                conv(2),
+                LayerOp::MaxPool,
+                LayerOp::FcFloat { c_out: 100, bias: true, act: Activation::Relu },
+                LayerOp::FcFloat { c_out: 100, bias: true, act: Activation::Relu },
+                LayerOp::FcFloat {
+                    c_out: crate::bnn::network::NUM_CLASSES,
+                    bias: true,
+                    act: Activation::None,
+                },
+            ],
+        }
+    }
+
+    /// Parse an `"arch": [...]` JSON array (registry-manifest form).
+    /// Every entry is an object with an `"op"` tag:
+    ///
+    /// ```text
+    /// [{"op": "binarize", "scheme": "rgb"},
+    ///  {"op": "conv_bin", "k": 5, "out": 32},
+    ///  {"op": "threshold"},
+    ///  {"op": "orpool"},
+    ///  ...
+    ///  {"op": "fc_float", "out": 4}]
+    /// ```
+    ///
+    /// Optional fields: `conv_float` takes `"bias"` (default `true`),
+    /// `"relu"` (default `false`) and `"w"` (weight-name override);
+    /// `fc_float` takes `"bias"` and `"act"` (`none|relu|sign`).
+    /// Shape legality is checked by [`NetworkSpec::plan`], not here.
+    pub fn from_json(arch: &Json) -> Result<Self, GraphError> {
+        let bad = GraphError::Spec; // variant constructor as error helper
+        let arr = arch.as_arr().map_err(|e| bad(format!("arch must be an array: {e}")))?;
+        if arr.is_empty() {
+            return Err(bad("arch array is empty".to_string()));
+        }
+        let mut ops = Vec::with_capacity(arr.len());
+        for (i, entry) in arr.iter().enumerate() {
+            let ctx = |e: crate::util::json::JsonError| bad(format!("arch[{i}]: {e}"));
+            let op = entry.get("op").and_then(|o| o.as_str()).map_err(ctx)?;
+            let out = |field: &str| -> Result<usize, GraphError> {
+                entry.get(field).and_then(|v| v.as_usize()).map_err(ctx)
+            };
+            let flag = |field: &str, default: bool| -> Result<bool, GraphError> {
+                match entry.get_opt(field).map_err(ctx)? {
+                    Some(v) => v.as_bool().map_err(ctx),
+                    None => Ok(default),
+                }
+            };
+            ops.push(match op {
+                "binarize" => {
+                    let s = entry.get("scheme").and_then(|s| s.as_str()).map_err(ctx)?;
+                    let scheme = Scheme::parse(s).ok_or_else(|| {
+                        bad(format!("arch[{i}]: unknown scheme {s:?} (none|rgb|gray|lbp)"))
+                    })?;
+                    if scheme == Scheme::None {
+                        return Err(bad(format!(
+                            "arch[{i}]: scheme \"none\" has no binarize op — omit it \
+                             and start with conv_float"
+                        )));
+                    }
+                    LayerOp::Binarize { scheme }
+                }
+                "conv_bin" => LayerOp::ConvBin { k: out("k")?, c_out: out("out")? },
+                "conv_float" => LayerOp::ConvFloat {
+                    k: out("k")?,
+                    c_out: out("out")?,
+                    bias: flag("bias", true)?,
+                    relu: flag("relu", false)?,
+                    w: match entry.get_opt("w").map_err(ctx)? {
+                        Some(v) => Some(v.as_str().map_err(ctx)?.to_string()),
+                        None => None,
+                    },
+                },
+                "maxpool" => LayerOp::MaxPool,
+                "orpool" => LayerOp::OrPool,
+                "threshold" => LayerOp::Threshold,
+                "fc_bin" => LayerOp::FcBin { c_out: out("out")? },
+                "fc_float" => LayerOp::FcFloat {
+                    c_out: out("out")?,
+                    bias: flag("bias", true)?,
+                    act: match entry.get_opt("act").map_err(ctx)? {
+                        Some(v) => {
+                            let s = v.as_str().map_err(ctx)?;
+                            Activation::parse(s).ok_or_else(|| {
+                                bad(format!("arch[{i}]: unknown act {s:?} (none|relu|sign)"))
+                            })?
+                        }
+                        None => Activation::None,
+                    },
+                },
+                other => return Err(bad(format!("arch[{i}]: unknown op {other:?}"))),
+            });
+        }
+        Ok(Self { ops })
+    }
+
+    /// Compile the graph: shape inference, validation, weight-name
+    /// resolution, and liveness-driven buffer assignment.
+    pub fn plan(&self) -> Result<Plan, GraphError> {
+        plan::compile(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_specs_have_expected_shapes() {
+        for scheme in Scheme::ALL {
+            let spec = NetworkSpec::legacy_bcnn(scheme);
+            if scheme == Scheme::None {
+                // no binarize op: the float conv consumes the raw image
+                assert_eq!(spec.ops.len(), 10);
+                assert!(matches!(spec.ops[0], LayerOp::ConvFloat { bias: false, .. }));
+            } else {
+                assert_eq!(spec.ops.len(), 11);
+                assert!(matches!(spec.ops[0], LayerOp::Binarize { .. }));
+            }
+        }
+        assert_eq!(NetworkSpec::legacy_float().ops.len(), 7);
+    }
+
+    #[test]
+    fn arch_json_roundtrips_the_legacy_bcnn_topology() {
+        let arch = Json::parse(
+            r#"[{"op": "binarize", "scheme": "rgb"},
+                {"op": "conv_bin", "k": 5, "out": 32},
+                {"op": "threshold"},
+                {"op": "orpool"},
+                {"op": "conv_bin", "k": 5, "out": 32},
+                {"op": "threshold"},
+                {"op": "orpool"},
+                {"op": "fc_bin", "out": 100},
+                {"op": "threshold"},
+                {"op": "fc_float", "out": 100, "act": "sign"},
+                {"op": "fc_float", "out": 4}]"#,
+        )
+        .unwrap();
+        let spec = NetworkSpec::from_json(&arch).unwrap();
+        assert_eq!(spec, NetworkSpec::legacy_bcnn(Scheme::Rgb));
+    }
+
+    #[test]
+    fn arch_json_rejects_malformed_entries() {
+        for (tag, arch) in [
+            ("empty", "[]"),
+            ("unknown-op", r#"[{"op": "teleport"}]"#),
+            ("missing-out", r#"[{"op": "conv_bin", "k": 5}]"#),
+            ("bad-scheme", r#"[{"op": "binarize", "scheme": "sepia"}]"#),
+            ("none-binarize", r#"[{"op": "binarize", "scheme": "none"}]"#),
+            ("bad-act", r#"[{"op": "fc_float", "out": 4, "act": "gelu"}]"#),
+            ("not-an-array", r#"{"op": "fc_float"}"#),
+        ] {
+            let j = Json::parse(arch).unwrap();
+            let err = NetworkSpec::from_json(&j).unwrap_err();
+            assert!(matches!(err, GraphError::Spec(_)), "{tag}: {err}");
+        }
+    }
+}

@@ -1,0 +1,751 @@
+//! The plan compiler: [`NetworkSpec`] → [`Plan`].
+//!
+//! Three passes over the op chain, all at load time (never on the
+//! request path):
+//!
+//! 1. **Shape inference + validation.**  Every edge between two ops
+//!    carries a typed value — float activations, channel-packed words,
+//!    or integer popcount counts — with a spatial extent.  Each op
+//!    declares what it accepts and what it produces; a mismatch (OR-pool
+//!    on floats, threshold on > 32 channels, odd extent into a 2×2
+//!    pool, a graph that doesn't end in `NUM_CLASSES` float logits) is a
+//!    structured [`GraphError::Validate`] naming the step.
+//! 2. **Weight-name resolution.**  Tensor names are positional —
+//!    conv `i` → `w{i}_packed` / `w{i}`+`b{i}`, threshold `t` →
+//!    `theta{t}`+`flip{t}`, fc `f` → `wfc{f}_packed` / `wfc{f}`+`bfc{f}`
+//!    — which reproduces the legacy container names exactly on the
+//!    synthesized legacy specs, so every existing artifact binds
+//!    unchanged.  The resolved list (with dtypes and shapes) is exposed
+//!    as [`Plan::weights`] for generators and docs.
+//! 3. **Liveness analysis + buffer assignment.**  In a linear chain
+//!    each op's output dies as soon as the next op has consumed it, and
+//!    an op's internal patch-gather scratch dies within the step.  The
+//!    compiler walks the chain with a free-list per storage class
+//!    (f32 / u32 / i32), allocating a slot for each output and scratch
+//!    and releasing slots the moment they die — interval coloring on
+//!    the edge live-ranges.  The result is the minimal planned arena
+//!    ([`crate::bnn::scratch::PlanScratch`] slots): the legacy 2-conv
+//!    BCNN plans 2 f32 + 2 u32 + 1 i32 buffers (plus the LBP gray
+//!    scratch when used) where the hand-named `ForwardScratch` carried
+//!    11 fixed roles, and a deeper graph gets exactly what its own
+//!    liveness demands, not another hand-audited struct.
+
+use crate::bnn::network::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::bnn::packing::packed_width;
+use crate::input::binarize::Scheme;
+
+use super::{Activation, GraphError, LayerOp, NetworkSpec};
+
+/// Storage class of a planned buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufClass {
+    F32 = 0,
+    U32 = 1,
+    I32 = 2,
+}
+
+/// One slot in the planned arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufId {
+    pub class: BufClass,
+    pub idx: usize,
+}
+
+/// Where a step reads its input from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// The caller's image payload (only ever float pixels).
+    External,
+    Buf(BufId),
+}
+
+/// A value type on one edge of the graph.  `h == w == 1` encodes flat
+/// feature vectors (the FC tail).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ValTy {
+    pub kind: ValKind,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValKind {
+    /// Float activations / images / ±1 binarized pixels.
+    F32,
+    /// Channel-packed words, one `u32` per pixel (`c` ≤ 32 live bits).
+    Words,
+    /// Integer XNOR-popcount counts.
+    Counts,
+}
+
+impl ValTy {
+    fn f32(h: usize, w: usize, c: usize) -> Self {
+        Self { kind: ValKind::F32, h, w, c }
+    }
+    fn words(h: usize, w: usize, c: usize) -> Self {
+        Self { kind: ValKind::Words, h, w, c }
+    }
+    fn counts(h: usize, w: usize, c: usize) -> Self {
+        Self { kind: ValKind::Counts, h, w, c }
+    }
+    /// Storage class of a value of this type.
+    fn class(&self) -> BufClass {
+        match self.kind {
+            ValKind::F32 => BufClass::F32,
+            ValKind::Words => BufClass::U32,
+            ValKind::Counts => BufClass::I32,
+        }
+    }
+    pub fn describe(&self) -> String {
+        let k = match self.kind {
+            ValKind::F32 => "f32",
+            ValKind::Words => "words",
+            ValKind::Counts => "counts",
+        };
+        format!("{k}({},{},{})", self.h, self.w, self.c)
+    }
+}
+
+/// Dtype of a declared weight tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightDType {
+    F32,
+    U32,
+}
+
+/// One weight tensor the plan will bind from the container.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightReq {
+    pub name: String,
+    pub dtype: WeightDType,
+    pub shape: Vec<usize>,
+}
+
+impl WeightReq {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A lowered, placement-resolved step.  `kind` carries the resolved
+/// kernel parameters and weight names; weights themselves bind in
+/// [`super::exec::CompiledNetwork::from_tensor_file`].
+#[derive(Debug, Clone)]
+pub(crate) struct Step {
+    pub kind: StepKind,
+    pub input: Src,
+    pub output: BufId,
+    /// Per-step internal scratch (patch gathers, the LBP gray plane);
+    /// live only within the step, so liveness reuses it freely.
+    pub scratch: Option<BufId>,
+    pub in_ty: ValTy,
+    pub out_ty: ValTy,
+    /// Timing label(s): convs lap twice (`im2colN`, `gemmN`), everything
+    /// else once.
+    pub label_a: String,
+    pub label_b: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum StepKind {
+    Binarize { scheme: Scheme },
+    /// ±1 floats → counts: fused im2col+pack (Algorithm 1) + XNOR-GEMM.
+    ConvBinPacked { k: usize, c_out: usize, nw: usize, d: usize, w: String },
+    /// Packed words → counts: word gather + XNOR-GEMM over (c_out, k*k).
+    ConvBinWords { k: usize, c_out: usize, d: usize, w: String },
+    ConvFloat { k: usize, c_out: usize, relu: bool, w: String, b: Option<String> },
+    MaxPool,
+    OrPool,
+    /// Spatial counts/activations → channel-packed words.
+    ThresholdPack { f32_in: bool, theta: String, flip: String },
+    /// Flat FC counts → ±1 floats for the float tail.
+    ThresholdPm1 { theta: String, flip: String },
+    FcBin { kw: usize, c_out: usize, d: usize, w: String },
+    FcFloat { d: usize, c_out: usize, act: Activation, w: String, b: Option<String> },
+}
+
+/// The compiled plan: lowered steps, arena layout, declared weights.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub(crate) steps: Vec<Step>,
+    /// Planned arena slots per storage class, `[f32, u32, i32]`.
+    pub nbufs: [usize; 3],
+    /// Every weight tensor the plan binds, in graph order.
+    pub weights: Vec<WeightReq>,
+    /// Output logits per image (validated == `NUM_CLASSES`).
+    pub classes: usize,
+}
+
+impl Plan {
+    /// Total planned arena slots across all storage classes.
+    pub fn num_buffers(&self) -> usize {
+        self.nbufs.iter().sum()
+    }
+
+    /// Human-readable step labels, in execution order (docs + tests).
+    pub fn step_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for s in &self.steps {
+            names.push(s.label_a.clone());
+            if let Some(b) = &s.label_b {
+                names.push(b.clone());
+            }
+        }
+        names
+    }
+}
+
+/// Per-class free-list allocator for the liveness walk.
+struct Slots {
+    free: [Vec<usize>; 3],
+    next: [usize; 3],
+}
+
+impl Slots {
+    fn new() -> Self {
+        Self { free: [Vec::new(), Vec::new(), Vec::new()], next: [0; 3] }
+    }
+
+    fn alloc(&mut self, class: BufClass) -> BufId {
+        let c = class as usize;
+        let idx = self.free[c].pop().unwrap_or_else(|| {
+            let idx = self.next[c];
+            self.next[c] += 1;
+            idx
+        });
+        BufId { class, idx }
+    }
+
+    fn release(&mut self, buf: BufId) {
+        self.free[buf.class as usize].push(buf.idx);
+    }
+}
+
+pub(crate) fn compile(spec: &NetworkSpec) -> Result<Plan, GraphError> {
+    if spec.ops.is_empty() {
+        return Err(GraphError::Spec("graph has no ops".to_string()));
+    }
+    let mut steps: Vec<Step> = Vec::with_capacity(spec.ops.len());
+    let mut weights: Vec<WeightReq> = Vec::new();
+    let mut slots = Slots::new();
+
+    let mut cur = ValTy::f32(IMG_H, IMG_W, IMG_C);
+    let mut cur_src = Src::External;
+    // positional ordinals — these generate the legacy tensor names
+    let (mut conv_ord, mut thr_ord, mut pool_ord, mut fc_ord) = (0usize, 0usize, 0usize, 0usize);
+
+    fn require(name: &str, dtype: WeightDType, shape: Vec<usize>, ws: &mut Vec<WeightReq>) {
+        ws.push(WeightReq { name: name.to_string(), dtype, shape });
+    }
+
+    for (i, op) in spec.ops.iter().enumerate() {
+        let opname = op_name(op);
+        let bad = |why: String| GraphError::Validate { step: i, op: opname.to_string(), why };
+        // (kind, out_ty, scratch class, labels)
+        let (kind, out_ty, scratch_class, label_a, label_b) = match op {
+            LayerOp::Binarize { scheme } => {
+                if cur.kind != ValKind::F32 || cur.c != 3 {
+                    return Err(bad(format!(
+                        "binarize expects 3-channel float pixels, got {}",
+                        cur.describe()
+                    )));
+                }
+                match scheme {
+                    Scheme::None => {
+                        return Err(bad("scheme \"none\" has no binarize op".to_string()))
+                    }
+                    Scheme::Rgb => require("input_t", WeightDType::F32, vec![3], &mut weights),
+                    Scheme::Gray => require("input_t", WeightDType::F32, vec![1], &mut weights),
+                    Scheme::Lbp => {}
+                }
+                (
+                    StepKind::Binarize { scheme: *scheme },
+                    ValTy::f32(cur.h, cur.w, scheme.input_channels()),
+                    // LBP reads a per-image grayscale plane
+                    (*scheme == Scheme::Lbp).then_some(BufClass::F32),
+                    "input_binarize".to_string(),
+                    None,
+                )
+            }
+            LayerOp::ConvBin { k, c_out } => {
+                check_conv(*k, *c_out, &bad)?;
+                conv_ord += 1;
+                let wname = format!("w{conv_ord}_packed");
+                match cur.kind {
+                    ValKind::F32 => {
+                        // first packed layer: pixels are ±1 floats
+                        let d = k * k * cur.c;
+                        let nw = packed_width(d, 32);
+                        require(&wname, WeightDType::U32, vec![*c_out, nw], &mut weights);
+                        (
+                            StepKind::ConvBinPacked { k: *k, c_out: *c_out, nw, d, w: wname },
+                            ValTy::counts(cur.h, cur.w, *c_out),
+                            Some(BufClass::U32),
+                            format!("im2col{conv_ord}"),
+                            Some(format!("gemm{conv_ord}")),
+                        )
+                    }
+                    ValKind::Words => {
+                        // deeper packed layer: activations already packed
+                        let d = k * k * cur.c;
+                        require(&wname, WeightDType::U32, vec![*c_out, k * k], &mut weights);
+                        (
+                            StepKind::ConvBinWords { k: *k, c_out: *c_out, d, w: wname },
+                            ValTy::counts(cur.h, cur.w, *c_out),
+                            Some(BufClass::U32),
+                            format!("im2col{conv_ord}"),
+                            Some(format!("gemm{conv_ord}")),
+                        )
+                    }
+                    ValKind::Counts => {
+                        return Err(bad(format!(
+                            "conv_bin cannot consume raw counts ({}); threshold first",
+                            cur.describe()
+                        )))
+                    }
+                }
+            }
+            LayerOp::ConvFloat { k, c_out, bias, relu, w } => {
+                check_conv(*k, *c_out, &bad)?;
+                if cur.kind != ValKind::F32 {
+                    return Err(bad(format!(
+                        "conv_float expects float input, got {}",
+                        cur.describe()
+                    )));
+                }
+                conv_ord += 1;
+                let wname = w.clone().unwrap_or_else(|| format!("w{conv_ord}"));
+                let bname = bias.then(|| format!("b{conv_ord}"));
+                require(&wname, WeightDType::F32, vec![*c_out, k * k * cur.c], &mut weights);
+                if let Some(b) = &bname {
+                    require(b, WeightDType::F32, vec![*c_out], &mut weights);
+                }
+                (
+                    StepKind::ConvFloat { k: *k, c_out: *c_out, relu: *relu, w: wname, b: bname },
+                    ValTy::f32(cur.h, cur.w, *c_out),
+                    Some(BufClass::F32),
+                    format!("im2col{conv_ord}"),
+                    Some(format!("gemm{conv_ord}")),
+                )
+            }
+            LayerOp::MaxPool => {
+                check_pool(&cur, ValKind::F32, "maxpool", &bad)?;
+                pool_ord += 1;
+                (
+                    StepKind::MaxPool,
+                    ValTy::f32(cur.h / 2, cur.w / 2, cur.c),
+                    None,
+                    format!("pool{pool_ord}"),
+                    None,
+                )
+            }
+            LayerOp::OrPool => {
+                check_pool(&cur, ValKind::Words, "orpool", &bad)?;
+                pool_ord += 1;
+                (
+                    StepKind::OrPool,
+                    ValTy::words(cur.h / 2, cur.w / 2, cur.c),
+                    None,
+                    format!("pool{pool_ord}"),
+                    None,
+                )
+            }
+            LayerOp::Threshold => {
+                thr_ord += 1;
+                let theta = format!("theta{thr_ord}");
+                let flip = format!("flip{thr_ord}");
+                require(&theta, WeightDType::F32, vec![cur.c], &mut weights);
+                require(&flip, WeightDType::U32, vec![cur.c], &mut weights);
+                let spatial = cur.h * cur.w > 1;
+                match (cur.kind, spatial) {
+                    (ValKind::Counts, true) | (ValKind::F32, true) => {
+                        if cur.c > 32 {
+                            return Err(bad(format!(
+                                "threshold packs into one word per pixel; {} channels > 32",
+                                cur.c
+                            )));
+                        }
+                        (
+                            StepKind::ThresholdPack {
+                                f32_in: cur.kind == ValKind::F32,
+                                theta,
+                                flip,
+                            },
+                            ValTy::words(cur.h, cur.w, cur.c),
+                            None,
+                            format!("threshold_pack{thr_ord}"),
+                            None,
+                        )
+                    }
+                    (ValKind::Counts, false) => (
+                        StepKind::ThresholdPm1 { theta, flip },
+                        ValTy::f32(1, 1, cur.c),
+                        None,
+                        format!("threshold{thr_ord}"),
+                        None,
+                    ),
+                    _ => {
+                        return Err(bad(format!(
+                            "threshold expects conv/fc counts or conv activations, got {}",
+                            cur.describe()
+                        )))
+                    }
+                }
+            }
+            LayerOp::FcBin { c_out } => {
+                if cur.kind != ValKind::Words {
+                    return Err(bad(format!(
+                        "fc_bin expects packed words, got {}",
+                        cur.describe()
+                    )));
+                }
+                if *c_out == 0 {
+                    return Err(bad("output width must be >= 1".to_string()));
+                }
+                fc_ord += 1;
+                let wname = format!("wfc{fc_ord}_packed");
+                let kw = cur.h * cur.w;
+                let d = kw * cur.c;
+                require(&wname, WeightDType::U32, vec![*c_out, kw], &mut weights);
+                (
+                    StepKind::FcBin { kw, c_out: *c_out, d, w: wname },
+                    ValTy::counts(1, 1, *c_out),
+                    None,
+                    format!("fc{fc_ord}"),
+                    None,
+                )
+            }
+            LayerOp::FcFloat { c_out, bias, act } => {
+                if cur.kind != ValKind::F32 {
+                    return Err(bad(format!(
+                        "fc_float expects float features, got {}",
+                        cur.describe()
+                    )));
+                }
+                if *c_out == 0 {
+                    return Err(bad("output width must be >= 1".to_string()));
+                }
+                fc_ord += 1;
+                let wname = format!("wfc{fc_ord}");
+                let bname = bias.then(|| format!("bfc{fc_ord}"));
+                let d = cur.h * cur.w * cur.c;
+                require(&wname, WeightDType::F32, vec![*c_out, d], &mut weights);
+                if let Some(b) = &bname {
+                    require(b, WeightDType::F32, vec![*c_out], &mut weights);
+                }
+                (
+                    StepKind::FcFloat { d, c_out: *c_out, act: *act, w: wname, b: bname },
+                    ValTy::f32(1, 1, *c_out),
+                    None,
+                    format!("fc{fc_ord}"),
+                    None,
+                )
+            }
+        };
+
+        // --- liveness: place this step's buffers, retire dead ones ----
+        let scratch = scratch_class.map(|c| slots.alloc(c));
+        let output = slots.alloc(out_ty.class());
+        // the input edge and the step scratch die here; the output is
+        // live into the next step.  (Releasing AFTER the output alloc
+        // guarantees input/scratch/output are pairwise distinct slots —
+        // every kernel requires disjoint in/out.)
+        if let Src::Buf(b) = cur_src {
+            slots.release(b);
+        }
+        if let Some(s) = scratch {
+            slots.release(s);
+        }
+        steps.push(Step {
+            kind,
+            input: cur_src,
+            output,
+            scratch,
+            in_ty: cur,
+            out_ty,
+            label_a,
+            label_b,
+        });
+        cur = out_ty;
+        cur_src = Src::Buf(output);
+    }
+
+    // the serving contract: the graph ends in one float logit row per
+    // image, sized for the class set
+    if cur.kind != ValKind::F32 || (cur.h, cur.w, cur.c) != (1, 1, NUM_CLASSES) {
+        return Err(GraphError::Validate {
+            step: spec.ops.len() - 1,
+            op: op_name(spec.ops.last().unwrap()).to_string(),
+            why: format!(
+                "graph must end in f32(1,1,{NUM_CLASSES}) logits, got {}",
+                cur.describe()
+            ),
+        });
+    }
+
+    // weight names must be unique — a positional name colliding with an
+    // explicit override would silently bind one tensor twice
+    for (a, req) in weights.iter().enumerate() {
+        if weights[..a].iter().any(|r| r.name == req.name) {
+            return Err(GraphError::Spec(format!(
+                "weight name {:?} is declared twice (override collides with a positional name?)",
+                req.name
+            )));
+        }
+    }
+
+    Ok(Plan { steps, nbufs: slots.next, weights, classes: NUM_CLASSES })
+}
+
+fn op_name(op: &LayerOp) -> &'static str {
+    match op {
+        LayerOp::Binarize { .. } => "binarize",
+        LayerOp::ConvBin { .. } => "conv_bin",
+        LayerOp::ConvFloat { .. } => "conv_float",
+        LayerOp::MaxPool => "maxpool",
+        LayerOp::OrPool => "orpool",
+        LayerOp::Threshold => "threshold",
+        LayerOp::FcBin { .. } => "fc_bin",
+        LayerOp::FcFloat { .. } => "fc_float",
+    }
+}
+
+fn check_conv(
+    k: usize,
+    c_out: usize,
+    bad: &impl Fn(String) -> GraphError,
+) -> Result<(), GraphError> {
+    if k == 0 || k % 2 == 0 {
+        return Err(bad(format!("kernel size {k} must be odd ('same' convolution)")));
+    }
+    if c_out == 0 {
+        return Err(bad("output channels must be >= 1".to_string()));
+    }
+    Ok(())
+}
+
+fn check_pool(
+    cur: &ValTy,
+    want: ValKind,
+    name: &str,
+    bad: &impl Fn(String) -> GraphError,
+) -> Result<(), GraphError> {
+    if cur.kind != want {
+        return Err(bad(format!("{name} expects {want:?} input, got {}", cur.describe())));
+    }
+    if cur.h < 2 || cur.w < 2 || cur.h % 2 != 0 || cur.w % 2 != 0 {
+        return Err(bad(format!("2x2 pool needs even extents >= 2, got {}", cur.describe())));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_bcnn_plan_names_match_the_legacy_container() {
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        let names: Vec<&str> = plan.weights.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "input_t",
+                "w1_packed",
+                "theta1",
+                "flip1",
+                "w2_packed",
+                "theta2",
+                "flip2",
+                "wfc1_packed",
+                "theta3",
+                "flip3",
+                "wfc2",
+                "bfc2",
+                "wfc3",
+                "bfc3",
+            ]
+        );
+        // the legacy shapes, byte for byte
+        let by_name = |n: &str| plan.weights.iter().find(|w| w.name == n).unwrap();
+        assert_eq!(by_name("w1_packed").shape, vec![32, packed_width(5 * 5 * 3, 32)]);
+        assert_eq!(by_name("w2_packed").shape, vec![32, 25]);
+        assert_eq!(by_name("wfc1_packed").shape, vec![100, 576]);
+        assert_eq!(by_name("wfc2").shape, vec![100, 100]);
+        assert_eq!(by_name("wfc3").shape, vec![NUM_CLASSES, 100]);
+    }
+
+    #[test]
+    fn legacy_none_plan_uses_the_pm1_override() {
+        let plan = NetworkSpec::legacy_bcnn(Scheme::None).plan().unwrap();
+        assert_eq!(plan.weights[0].name, "w1_pm1");
+        assert_eq!(plan.weights[0].shape, vec![32, 75]);
+        assert!(plan.weights.iter().all(|w| w.name != "b1"), "pm1 conv has no bias");
+    }
+
+    #[test]
+    fn legacy_float_plan_names_match_the_legacy_container() {
+        let plan = NetworkSpec::legacy_float().plan().unwrap();
+        let names: Vec<&str> = plan.weights.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["w1", "b1", "w2", "b2", "wfc1", "bfc1", "wfc2", "bfc2", "wfc3", "bfc3"]
+        );
+    }
+
+    #[test]
+    fn liveness_plans_far_fewer_buffers_than_the_11_hand_named_roles() {
+        // rgb: binarize(f32) + 2 packed convs + fc tail
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        assert_eq!(plan.nbufs, [2, 2, 1], "f32/u32/i32 slots");
+        assert!(plan.num_buffers() <= 5);
+        // lbp adds one f32 slot for the per-image gray plane
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Lbp).plan().unwrap();
+        assert_eq!(plan.nbufs[0], 2, "gray scratch reuses a dead f32 slot or adds one");
+        // float: everything in the f32 class
+        let plan = NetworkSpec::legacy_float().plan().unwrap();
+        assert_eq!(plan.nbufs, [3, 0, 0]);
+    }
+
+    #[test]
+    fn step_in_scratch_out_slots_are_pairwise_distinct() {
+        for spec in [
+            NetworkSpec::legacy_bcnn(Scheme::Rgb),
+            NetworkSpec::legacy_bcnn(Scheme::None),
+            NetworkSpec::legacy_bcnn(Scheme::Lbp),
+            NetworkSpec::legacy_float(),
+        ] {
+            let plan = spec.plan().unwrap();
+            // every edge type-checks: step i+1 consumes exactly what
+            // step i produced
+            for pair in plan.steps.windows(2) {
+                assert_eq!(pair[0].out_ty, pair[1].in_ty, "edge type mismatch");
+                assert_eq!(Src::Buf(pair[0].output), pair[1].input, "edge slot mismatch");
+            }
+            for s in &plan.steps {
+                if let Src::Buf(b) = s.input {
+                    assert_ne!(b, s.output, "input aliases output");
+                    if let Some(sc) = s.scratch {
+                        assert_ne!(b, sc, "input aliases scratch");
+                    }
+                }
+                if let Some(sc) = s.scratch {
+                    assert_ne!(sc, s.output, "scratch aliases output");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_names_cover_the_legacy_timing_labels() {
+        let names = NetworkSpec::legacy_bcnn(Scheme::Gray).plan().unwrap().step_names();
+        for want in
+            ["input_binarize", "im2col1", "gemm1", "threshold_pack1", "pool1", "gemm2", "fc1"]
+        {
+            assert!(names.iter().any(|n| n == want), "missing {want} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn shape_violations_are_structured_errors() {
+        use LayerOp::*;
+        let cases: Vec<(&str, Vec<LayerOp>)> = vec![
+            ("empty", vec![]),
+            ("orpool-on-floats", vec![OrPool]),
+            ("maxpool-on-words", vec![
+                Binarize { scheme: Scheme::Rgb },
+                ConvBin { k: 5, c_out: 32 },
+                Threshold,
+                MaxPool,
+            ]),
+            ("conv-on-counts", vec![
+                Binarize { scheme: Scheme::Rgb },
+                ConvBin { k: 5, c_out: 32 },
+                ConvBin { k: 5, c_out: 32 },
+            ]),
+            ("threshold-over-32ch", vec![
+                Binarize { scheme: Scheme::Rgb },
+                ConvBin { k: 5, c_out: 64 },
+                Threshold,
+            ]),
+            ("even-kernel", vec![
+                Binarize { scheme: Scheme::Rgb },
+                ConvBin { k: 4, c_out: 32 },
+            ]),
+            ("fcbin-on-floats", vec![FcBin { c_out: 10 }]),
+            ("wrong-logit-width", vec![FcFloat {
+                c_out: 7,
+                bias: true,
+                act: Activation::None,
+            }]),
+            ("ends-in-counts", vec![
+                Binarize { scheme: Scheme::Rgb },
+                ConvBin { k: 5, c_out: 32 },
+            ]),
+        ];
+        for (tag, ops) in cases {
+            let err = NetworkSpec { ops }.plan().unwrap_err();
+            assert!(
+                matches!(err, GraphError::Validate { .. } | GraphError::Spec(_)),
+                "{tag}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicate_weight_names_are_refused() {
+        // an override colliding with conv2's positional name
+        let spec = NetworkSpec {
+            ops: vec![
+                LayerOp::ConvFloat {
+                    k: 5,
+                    c_out: 32,
+                    bias: false,
+                    relu: false,
+                    w: Some("w2".to_string()),
+                },
+                LayerOp::MaxPool,
+                LayerOp::ConvFloat { k: 5, c_out: 32, bias: false, relu: false, w: None },
+                LayerOp::MaxPool,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: false, act: Activation::None },
+            ],
+        };
+        let err = spec.plan().unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn a_three_conv_graph_plans_cleanly() {
+        // the acceptance-criteria topology: 96 -> 48 -> 24 -> 12 spatial
+        let spec = NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 5, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 64 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        };
+        let plan = spec.plan().unwrap();
+        // conv3 weights follow the positional convention; fc names restart
+        let names: Vec<&str> = plan.weights.iter().map(|w| w.name.as_str()).collect();
+        assert!(names.contains(&"w3_packed"));
+        assert!(names.contains(&"theta4"), "fc threshold is ordinal 4: {names:?}");
+        assert!(names.contains(&"wfc1_packed") && names.contains(&"wfc2"));
+        // fc_bin consumes (12,12,32) words
+        let wfc1 = plan.weights.iter().find(|w| w.name == "wfc1_packed").unwrap();
+        assert_eq!(wfc1.shape, vec![64, 144]);
+        // deeper graph, same planned arena shape as the 2-conv one —
+        // liveness reuses the retired slots instead of adding roles
+        assert_eq!(plan.nbufs, [2, 2, 1]);
+    }
+}

@@ -1,17 +1,23 @@
-//! Full inference networks assembled from the layer kernels, with
-//! per-layer timers (the Nvidia-Visual-Profiler role in Table 2).
+//! The legacy network types, now thin wrappers over the layer-graph
+//! compiler.
 //!
-//! Loads the weight containers written by `python/compile/aot.py`:
-//! `weights_float.bcnt` and `weights_bcnn_<scheme>.bcnt`.  The BCNN
-//! forward is bit-identical to `model.bcnn_infer_ref` / `_pallas` in
-//! Python (cross-checked against `expected_logits.bcnt` in the
-//! integration tests).
+//! Up to PR 4 this file hard-wired ONE topology twice: `BcnnNetwork`
+//! and `FloatNetwork` each carried their own 2-conv/2-fc forward AND a
+//! near-duplicate batched loop over the hand-named scratch arena.  Both
+//! now delegate to a [`CompiledNetwork`](crate::bnn::graph::CompiledNetwork)
+//! built from the synthesized legacy [`NetworkSpec`] — the weight
+//! containers written by `python/compile/aot.py` (`weights_float.bcnt`,
+//! `weights_bcnn_<scheme>.bcnt`) keep loading unchanged because the
+//! plan compiler's positional weight names reproduce the legacy tensor
+//! names exactly, and the logits stay bit-identical to the pre-refactor
+//! pipelines (property-tested in `bnn::graph::exec` against independent
+//! reference compositions, and against `forward` below).
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::bnn::scratch::ForwardScratch;
-use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
-use crate::input::binarize::{self, Scheme};
+use crate::bnn::graph::{CompiledNetwork, GraphError, NetworkSpec};
+use crate::bnn::scratch::PlanScratch;
+use crate::input::binarize::Scheme;
 use crate::util::tensorio::{TensorFile, TensorIoError};
 
 pub const IMG_H: usize = 96;
@@ -25,13 +31,16 @@ pub const FC2_OUT: usize = 100;
 pub const NUM_CLASSES: usize = 4;
 pub const CLASSES: [&str; 4] = ["bus", "normal", "truck", "van"];
 
-/// Named per-layer wall times for one forward pass.
-pub type LayerTimings = Vec<(&'static str, Duration)>;
+/// Named per-layer wall times for one forward pass (labels come from
+/// the compiled plan's steps, e.g. `im2col1`, `gemm1`, `pool2`).
+pub type LayerTimings = Vec<(String, Duration)>;
 
 #[derive(Debug)]
 pub enum NetworkError {
     Tensor(TensorIoError),
-    Shape { name: &'static str, got: usize, want: usize },
+    /// Plan compilation or weight binding failed (bad spec, missing or
+    /// mis-shaped tensor).
+    Graph(GraphError),
     /// Recoverable bad-input error on the inference path (batched entry
     /// points return this instead of asserting).
     BadInput(String),
@@ -39,18 +48,23 @@ pub enum NetworkError {
 
 crate::error_enum_impls!(NetworkError {
     NetworkError::Tensor(e) => ("{e}"),
-    NetworkError::Shape { name, got, want } =>
-        ("network: tensor {name} has {got} elements, expected {want}"),
+    NetworkError::Graph(e) => ("network: {e}"),
     NetworkError::BadInput(msg) => ("network: {msg}"),
 }
-source { NetworkError::Tensor(e) => e }
+source {
+    NetworkError::Tensor(e) => e,
+    NetworkError::Graph(e) => e,
+}
 from { TensorIoError => NetworkError::Tensor });
 
-fn expect_len(name: &'static str, v: &[impl Sized], want: usize) -> Result<(), NetworkError> {
-    if v.len() == want {
-        Ok(())
-    } else {
-        Err(NetworkError::Shape { name, got: v.len(), want })
+impl From<GraphError> for NetworkError {
+    fn from(e: GraphError) -> Self {
+        match e {
+            // runtime bad input keeps its public identity; everything
+            // else is a build-time graph failure
+            GraphError::BadInput(msg) => NetworkError::BadInput(msg),
+            other => NetworkError::Graph(other),
+        }
     }
 }
 
@@ -58,398 +72,64 @@ fn expect_len(name: &'static str, v: &[impl Sized], want: usize) -> Result<(), N
 // BCNN
 // ---------------------------------------------------------------------------
 
-/// Packed + folded BCNN weights (see `model.export_inference_weights`).
+/// Packed + folded BCNN weights (see `model.export_inference_weights`),
+/// compiled from the synthesized legacy 2-conv/2-fc graph.  The BCNN
+/// forward is bit-identical to `model.bcnn_infer_ref` / `_pallas` in
+/// Python (cross-checked against `expected_logits.bcnt` in the
+/// integration tests).
 pub struct BcnnNetwork {
     pub scheme: Scheme,
-    w1_pm1: Vec<f32>,    // (32, K*K*Cin) — used by Scheme::None
-    w1_packed: Vec<u32>, // (32, NW1)
-    w1_64: Vec<u64>,     // w1_packed pre-widened to u64 lanes (load-time)
-    nw1: usize,
-    d1: usize,
-    theta1: Vec<f32>,
-    flip1: Vec<u32>,
-    w2_packed: Vec<u32>, // (32, K*K) channel-packed
-    w2_64: Vec<u64>,     // w2_packed pre-widened to u64 lanes (load-time)
-    theta2: Vec<f32>,
-    flip2: Vec<u32>,
-    wfc1_packed: Vec<u32>, // (100, 576)
-    theta3: Vec<f32>,
-    flip3: Vec<u32>,
-    wfc2: Vec<f32>,
-    bfc2: Vec<f32>,
-    wfc3: Vec<f32>,
-    bfc3: Vec<f32>,
-    input_t: Vec<f32>, // (3,) rgb / (1,) gray / empty otherwise
+    compiled: CompiledNetwork,
 }
 
 impl BcnnNetwork {
     pub fn from_tensor_file(tf: &TensorFile, scheme: Scheme) -> Result<Self, NetworkError> {
-        let c_in = scheme.input_channels();
-        let d1 = K * K * c_in;
-        let nw1 = packing::packed_width(d1, 32);
-        let mut net = Self {
-            scheme,
-            w1_pm1: tf.f32("w1_pm1")?,
-            w1_packed: tf.u32("w1_packed")?,
-            w1_64: Vec::new(),
-            nw1,
-            d1,
-            theta1: tf.f32("theta1")?,
-            flip1: tf.u32("flip1")?,
-            w2_packed: tf.u32("w2_packed")?,
-            w2_64: Vec::new(),
-            theta2: tf.f32("theta2")?,
-            flip2: tf.u32("flip2")?,
-            wfc1_packed: tf.u32("wfc1_packed")?,
-            theta3: tf.f32("theta3")?,
-            flip3: tf.u32("flip3")?,
-            wfc2: tf.f32("wfc2")?,
-            bfc2: tf.f32("bfc2")?,
-            wfc3: tf.f32("wfc3")?,
-            bfc3: tf.f32("bfc3")?,
-            input_t: if tf.contains("input_t") { tf.f32("input_t")? } else { Vec::new() },
-        };
-        expect_len("w1_pm1", &net.w1_pm1, CONV1_OUT * d1)?;
-        expect_len("w1_packed", &net.w1_packed, CONV1_OUT * nw1)?;
-        expect_len("theta1", &net.theta1, CONV1_OUT)?;
-        expect_len("w2_packed", &net.w2_packed, CONV2_OUT * K * K)?;
-        expect_len("wfc1_packed", &net.wfc1_packed, FC1_OUT * 24 * 24)?;
-        expect_len("wfc2", &net.wfc2, FC2_OUT * FC1_OUT)?;
-        expect_len("wfc3", &net.wfc3, NUM_CLASSES * FC2_OUT)?;
-        // Pre-widen the packed conv weights once (after the length checks)
-        // so the scratch-arena forward path never widens per call.
-        net.w1_64 = bgemm::widen_weights(&net.w1_packed, CONV1_OUT, nw1);
-        net.w2_64 = bgemm::widen_weights(&net.w2_packed, CONV2_OUT, K * K);
-        Ok(net)
+        let compiled = CompiledNetwork::from_tensor_file(tf, &NetworkSpec::legacy_bcnn(scheme))?;
+        Ok(Self { scheme, compiled })
     }
 
     pub fn load(path: impl AsRef<std::path::Path>, scheme: Scheme) -> Result<Self, NetworkError> {
         Self::from_tensor_file(&TensorFile::load(path)?, scheme)
     }
 
-    /// Apply the input-binarization scheme (Section 2.3).
-    pub fn binarize_input(&self, x: &[f32]) -> Vec<f32> {
-        let mut out = vec![0f32; x.len() / IMG_C * self.scheme.input_channels()];
-        // only the LBP scheme reads the grayscale scratch
-        let mut gray =
-            if self.scheme == Scheme::Lbp { vec![0f32; IMG_H * IMG_W] } else { Vec::new() };
-        self.binarize_input_into(x, &mut gray, &mut out);
-        out
+    /// The compiled plan executing this network.
+    pub fn compiled(&self) -> &CompiledNetwork {
+        &self.compiled
     }
 
-    /// `binarize_input` into caller-provided buffers: `gray` is the LBP
-    /// grayscale scratch (len `IMG_H * IMG_W`), `out` is sized for the
-    /// scheme's channel count.  Both are fully overwritten.
-    pub fn binarize_input_into(&self, x: &[f32], gray: &mut [f32], out: &mut [f32]) {
-        match self.scheme {
-            Scheme::None => out.copy_from_slice(x),
-            Scheme::Rgb => {
-                let t = [self.input_t[0], self.input_t[1], self.input_t[2]];
-                binarize::threshold_rgb_into(x, &t, out)
-            }
-            Scheme::Gray => binarize::threshold_gray_into(x, self.input_t[0], out),
-            Scheme::Lbp => binarize::lbp_into(x, IMG_H, IMG_W, gray, out),
-        }
+    /// Unwrap into the compiled plan (backends keep only this).
+    pub fn into_compiled(self) -> CompiledNetwork {
+        self.compiled
     }
 
-    /// Threshold integer counts and channel-pack 32 channels per word.
-    fn threshold_pack(counts: &[i32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
-        let mut out = Vec::new();
-        Self::threshold_pack_into(counts, theta, flip, pixels, &mut out);
-        out
-    }
-
-    /// `threshold_pack` into a caller-owned buffer (resized + fully
-    /// re-initialized every call; capacity grows monotonically).
-    fn threshold_pack_into(
-        counts: &[i32],
-        theta: &[f32],
-        flip: &[u32],
-        pixels: usize,
-        out: &mut Vec<u32>,
-    ) {
-        let c = theta.len();
-        debug_assert!(c <= 32);
-        // resize without clear: every element of 0..pixels is assigned
-        // below, so no pre-zeroing pass (or stale state) is possible
-        out.resize(pixels, 0);
-        for px in 0..pixels {
-            let row = &counts[px * c..(px + 1) * c];
-            let mut word = 0u32;
-            for ch in 0..c {
-                word |= packing::threshold_bit(row[ch] as f32, theta[ch], flip[ch]) << (31 - ch);
-            }
-            out[px] = word;
-        }
-    }
-
-    /// Same for float counts (Scheme::None conv1 output).
-    fn threshold_pack_f32(counts: &[f32], theta: &[f32], flip: &[u32], pixels: usize) -> Vec<u32> {
-        let mut out = Vec::new();
-        Self::threshold_pack_f32_into(counts, theta, flip, pixels, &mut out);
-        out
-    }
-
-    /// `threshold_pack_f32` into a caller-owned buffer.
-    fn threshold_pack_f32_into(
-        counts: &[f32],
-        theta: &[f32],
-        flip: &[u32],
-        pixels: usize,
-        out: &mut Vec<u32>,
-    ) {
-        let c = theta.len();
-        // resize without clear: fully overwritten below
-        out.resize(pixels, 0);
-        for px in 0..pixels {
-            let row = &counts[px * c..(px + 1) * c];
-            let mut word = 0u32;
-            for ch in 0..c {
-                word |= packing::threshold_bit(row[ch], theta[ch], flip[ch]) << (31 - ch);
-            }
-            out[px] = word;
-        }
-    }
-
-    /// Forward pass on one (96,96,3) image; returns logits + layer times.
+    /// Forward pass on one (96,96,3) image; returns logits + per-step
+    /// layer times (the Nvidia-Visual-Profiler role in Table 2).
     pub fn forward(&self, x: &[f32]) -> ([f32; NUM_CLASSES], LayerTimings) {
         assert_eq!(x.len(), IMG_H * IMG_W * IMG_C);
-        let mut times: LayerTimings = Vec::with_capacity(12);
-        let mut mark = Instant::now();
-        let lap = |name: &'static str, t: &mut Instant, times: &mut LayerTimings| {
-            let now = Instant::now();
-            times.push((name, now - *t));
-            *t = now;
-        };
-
-        // --- input binarization -----------------------------------------
-        let xb = self.binarize_input(x);
-        lap("input_binarize", &mut mark, &mut times);
-
-        // --- conv1 -------------------------------------------------------
-        let words1: Vec<u32>;
-        if self.scheme == Scheme::None {
-            let cols = im2col::im2col_float(&xb, IMG_H, IMG_W, IMG_C, K);
-            lap("im2col1", &mut mark, &mut times);
-            let counts =
-                float_ops::gemm_blocked(&cols, &self.w1_pm1, IMG_H * IMG_W, CONV1_OUT, self.d1);
-            lap("gemm1", &mut mark, &mut times);
-            words1 =
-                Self::threshold_pack_f32(&counts, &self.theta1, &self.flip1, IMG_H * IMG_W);
-        } else {
-            let c_in = self.scheme.input_channels();
-            let cols = im2col::im2col_pack(&xb, IMG_H, IMG_W, c_in, K, 32);
-            lap("im2col1", &mut mark, &mut times);
-            let counts = bgemm::bgemm(
-                &cols,
-                &self.w1_packed,
-                IMG_H * IMG_W,
-                CONV1_OUT,
-                self.nw1,
-                self.d1,
-            );
-            lap("gemm1", &mut mark, &mut times);
-            words1 = Self::threshold_pack(&counts, &self.theta1, &self.flip1, IMG_H * IMG_W);
-        }
-        lap("threshold_pack1", &mut mark, &mut times);
-        let pooled1 = maxpool::orpool2x2(&words1, IMG_H, IMG_W, 1); // (48,48,1)
-        lap("pool1", &mut mark, &mut times);
-
-        // --- conv2 (channel-packed domain) --------------------------------
-        let cols2 = im2col::im2col_words(&pooled1, 48, 48, 1, K); // (2304, 25)
-        lap("im2col2", &mut mark, &mut times);
-        let counts2 = bgemm::bgemm(
-            &cols2,
-            &self.w2_packed,
-            48 * 48,
-            CONV2_OUT,
-            K * K,
-            K * K * CONV1_OUT,
-        );
-        lap("gemm2", &mut mark, &mut times);
-        let words2 = Self::threshold_pack(&counts2, &self.theta2, &self.flip2, 48 * 48);
-        lap("threshold_pack2", &mut mark, &mut times);
-        let pooled2 = maxpool::orpool2x2(&words2, 48, 48, 1); // (24,24,1) = 576 words
-        lap("pool2", &mut mark, &mut times);
-
-        // --- fc1 (packed) --------------------------------------------------
-        let counts3 = fc::fc_packed(
-            &pooled2,
-            &self.wfc1_packed,
-            FC1_OUT,
-            24 * 24,
-            24 * 24 * CONV2_OUT,
-        );
-        lap("fc1", &mut mark, &mut times);
-
-        // --- float CPU tail -------------------------------------------------
-        let logits = self.float_tail(&counts3);
-        lap("fc_tail", &mut mark, &mut times);
-        (logits, times)
-    }
-
-    /// The float CPU tail after fc1: threshold to ±1, fc2 + sign, fc3.
-    /// Shared verbatim by the single-image and batched paths so they are
-    /// bit-identical.
-    fn float_tail(&self, counts3: &[i32]) -> [f32; NUM_CLASSES] {
-        self.float_tail_into(counts3, &mut Vec::new(), &mut Vec::new())
-    }
-
-    /// `float_tail` with caller-owned hidden-layer buffers (the scratch
-    /// arena's `h_a`/`h_b`); every buffer is cleared + rewritten, and the
-    /// accumulation order matches the allocating path exactly.
-    fn float_tail_into(
-        &self,
-        counts3: &[i32],
-        h3: &mut Vec<f32>,
-        h4: &mut Vec<f32>,
-    ) -> [f32; NUM_CLASSES] {
-        h3.clear();
-        h3.resize(FC1_OUT, 0.0);
-        for i in 0..FC1_OUT {
-            h3[i] = if packing::threshold_bit(counts3[i] as f32, self.theta3[i], self.flip3[i])
-                == 1
-            {
-                1.0
-            } else {
-                -1.0
-            };
-        }
-        h4.clear();
-        h4.resize(FC2_OUT, 0.0);
-        fc::fc_float_bias_into(h3, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT, h4);
-        for v in h4.iter_mut() {
-            *v = packing::sign_pm1(*v);
-        }
-        let mut logits = [0f32; NUM_CLASSES];
-        fc::fc_float_bias_into(h4, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT, &mut logits);
-        logits
+        self.compiled.forward_timed(x).expect("payload length asserted above")
     }
 
     /// Batched forward over `n` contiguous (96,96,3) images.
     ///
-    /// Allocates a fresh [`ForwardScratch`] per call; serving hot paths
-    /// should hold a per-worker scratch and call
-    /// [`BcnnNetwork::infer_batch_with`] instead (bit-identical results —
-    /// property-tested in `bnn::scratch`).
+    /// Allocates a fresh [`PlanScratch`] per call; serving hot paths
+    /// should hold a per-worker arena and call
+    /// [`BcnnNetwork::infer_batch_with`] instead (bit-identical results).
     pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
-        self.infer_batch_with(images, &mut ForwardScratch::new())
+        self.infer_batch_with(images, &mut PlanScratch::new())
     }
 
-    /// Batched forward through a reusable scratch arena.
-    ///
-    /// This is the tentpole batching path: one fused im2col+pack over the
-    /// whole batch, one `bgemm` call per conv layer with
-    /// M = batch × spatial positions (the packed weight matrix is widened
-    /// once at load time and its rows stay L1-hot across every image),
-    /// batched OR-pools, and a batched packed fc1.  Per image the
-    /// arithmetic is exactly the single-image pipeline, so logits are
-    /// bit-identical to `forward`.
-    ///
-    /// Every intermediate tensor lives in `scratch`; after the arena has
-    /// grown to the largest batch seen, steady-state calls perform no
-    /// intermediate-tensor allocation.  Stages with disjoint lifetimes
-    /// share buffers (noted inline); every `_into` kernel assigns every
-    /// element of its output range or pre-fills it with its identity
-    /// first, so reuse cannot leak state.
-    ///
-    /// Malformed input is a recoverable `NetworkError::BadInput`, never a
-    /// panic — this is the serving-reachable entry point.
+    /// Batched forward through a reusable planned arena: one fused
+    /// im2col+pack over the whole batch, one XNOR-GEMM per conv layer
+    /// with M = batch × spatial positions, batched OR-pools, a batched
+    /// packed fc1, and the per-image float tail — exactly the legacy
+    /// pipeline, now driven by the compiled plan.  Malformed input is a
+    /// recoverable `NetworkError::BadInput`, never a panic.
     pub fn infer_batch_with(
         &self,
         images: &[f32],
-        scratch: &mut ForwardScratch,
+        scratch: &mut PlanScratch,
     ) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
-        const IMG: usize = IMG_H * IMG_W * IMG_C;
-        if images.len() % IMG != 0 {
-            return Err(NetworkError::BadInput(format!(
-                "batch payload {} is not a multiple of {IMG}",
-                images.len()
-            )));
-        }
-        let n = images.len() / IMG;
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        let px = IMG_H * IMG_W;
-        let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
-        let ForwardScratch { xb, gray, cols_p, counts, words, pooled, cols_f, act_f, .. } =
-            &mut *scratch;
-
-        // --- conv1 over the whole batch ----------------------------------
-        // (`words` carries conv1's threshold-packed activations)
-        if self.scheme == Scheme::None {
-            // Scheme::None consumes the raw input directly — no binarize
-            // pass, no intermediate copy of the batch.
-            im2col::im2col_float_batch_into(images, n, IMG_H, IMG_W, IMG_C, K, cols_f);
-            // resize without clear: the GEMM assigns every element
-            act_f.resize(n * px * CONV1_OUT, 0.0);
-            float_ops::gemm_blocked_into(cols_f, &self.w1_pm1, n * px, CONV1_OUT, self.d1, act_f);
-            Self::threshold_pack_f32_into(act_f, &self.theta1, &self.flip1, n * px, words);
-        } else {
-            // binarize per image, concatenated (±1 domain); each per-image
-            // binarize fully overwrites its xb slice
-            let c_in = self.scheme.input_channels();
-            xb.resize(n * px * c_in, 0.0);
-            if self.scheme == Scheme::Lbp {
-                gray.resize(px, 0.0); // only LBP reads the gray scratch
-            }
-            for i in 0..n {
-                self.binarize_input_into(
-                    &images[i * IMG..(i + 1) * IMG],
-                    gray,
-                    &mut xb[i * px * c_in..(i + 1) * px * c_in],
-                );
-            }
-            im2col::im2col_pack_batch_into(xb, n, IMG_H, IMG_W, c_in, K, 32, cols_p);
-            counts.resize(n * px * CONV1_OUT, 0); // bgemm assigns every element
-            bgemm::bgemm_prewidened(cols_p, &self.w1_64, n * px, CONV1_OUT, self.nw1, self.d1, counts);
-            Self::threshold_pack_into(counts, &self.theta1, &self.flip1, n * px, words);
-        }
-        maxpool::orpool2x2_batch_into(words, n, IMG_H, IMG_W, 1, pooled).map_err(bad)?;
-
-        // counts/words/pooled peak at conv1/pool1 and shrink from here on;
-        // sample for the decay window before conv2 resizes them (cols_p
-        // peaks at conv2's gather and is caught by end_batch's sample)
-        scratch.note_batch_peaks();
-        let ForwardScratch { cols_p, counts, words, pooled, h_a, h_b, .. } = &mut *scratch;
-
-        // --- conv2 over the whole batch ----------------------------------
-        // conv1's patch rows (`cols_p`) and counts are dead once `words`
-        // was packed, so both buffers are reused for conv2.
-        im2col::im2col_words_batch_into(pooled, n, 48, 48, 1, K, cols_p);
-        counts.resize(n * 48 * 48 * CONV2_OUT, 0); // bgemm assigns every element
-        bgemm::bgemm_prewidened(
-            cols_p,
-            &self.w2_64,
-            n * 48 * 48,
-            CONV2_OUT,
-            K * K,
-            K * K * CONV1_OUT,
-            counts,
-        );
-        Self::threshold_pack_into(counts, &self.theta2, &self.flip2, n * 48 * 48, words);
-        // pool1's output was consumed by the word gather above — reuse it
-        maxpool::orpool2x2_batch_into(words, n, 48, 48, 1, pooled).map_err(bad)?;
-
-        // --- fc1 (batched packed) + per-image float tail ------------------
-        // conv2's counts are dead once `words` was packed; fc1's counts
-        // land in the same buffer.
-        fc::fc_packed_batch_into(
-            pooled,
-            &self.wfc1_packed,
-            n,
-            FC1_OUT,
-            24 * 24,
-            24 * 24 * CONV2_OUT,
-            counts,
-        );
-        let mut out = Vec::with_capacity(n);
-        for i in 0..n {
-            out.push(self.float_tail_into(&counts[i * FC1_OUT..(i + 1) * FC1_OUT], h_a, h_b));
-        }
-        scratch.end_batch(); // decay bookkeeping (no-op unless enabled)
-        Ok(out)
+        self.compiled.infer_batch_with(images, scratch).map_err(NetworkError::from)
     }
 
     /// argmax class index for one image.
@@ -463,171 +143,52 @@ impl BcnnNetwork {
 // Full-precision network
 // ---------------------------------------------------------------------------
 
-/// Full-precision baseline network (ReLU, biases).
+/// Full-precision baseline network (ReLU, biases), compiled from the
+/// synthesized legacy conv-pool ×2 / fc ×3 graph.
 pub struct FloatNetwork {
-    w1: Vec<f32>, // (32, K*K*3)
-    b1: Vec<f32>,
-    w2: Vec<f32>, // (32, K*K*32)
-    b2: Vec<f32>,
-    wfc1: Vec<f32>, // (100, 18432)
-    bfc1: Vec<f32>,
-    wfc2: Vec<f32>,
-    bfc2: Vec<f32>,
-    wfc3: Vec<f32>,
-    bfc3: Vec<f32>,
+    compiled: CompiledNetwork,
 }
 
 impl FloatNetwork {
     pub fn from_tensor_file(tf: &TensorFile) -> Result<Self, NetworkError> {
-        let net = Self {
-            w1: tf.f32("w1")?,
-            b1: tf.f32("b1")?,
-            w2: tf.f32("w2")?,
-            b2: tf.f32("b2")?,
-            wfc1: tf.f32("wfc1")?,
-            bfc1: tf.f32("bfc1")?,
-            wfc2: tf.f32("wfc2")?,
-            bfc2: tf.f32("bfc2")?,
-            wfc3: tf.f32("wfc3")?,
-            bfc3: tf.f32("bfc3")?,
-        };
-        expect_len("w1", &net.w1, CONV1_OUT * K * K * IMG_C)?;
-        expect_len("w2", &net.w2, CONV2_OUT * K * K * CONV1_OUT)?;
-        expect_len("wfc1", &net.wfc1, FC1_OUT * 24 * 24 * CONV2_OUT)?;
-        Ok(net)
+        Ok(Self { compiled: CompiledNetwork::from_tensor_file(tf, &NetworkSpec::legacy_float())? })
     }
 
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self, NetworkError> {
         Self::from_tensor_file(&TensorFile::load(path)?)
     }
 
+    /// The compiled plan executing this network.
+    pub fn compiled(&self) -> &CompiledNetwork {
+        &self.compiled
+    }
+
+    /// Unwrap into the compiled plan (backends keep only this).
+    pub fn into_compiled(self) -> CompiledNetwork {
+        self.compiled
+    }
+
     /// Forward pass on one (96,96,3) image; returns logits + layer times.
     pub fn forward(&self, x: &[f32]) -> ([f32; NUM_CLASSES], LayerTimings) {
         assert_eq!(x.len(), IMG_H * IMG_W * IMG_C);
-        let mut times: LayerTimings = Vec::with_capacity(12);
-        let mut mark = Instant::now();
-        let lap = |name: &'static str, t: &mut Instant, times: &mut LayerTimings| {
-            let now = Instant::now();
-            times.push((name, now - *t));
-            *t = now;
-        };
-
-        let cols1 = im2col::im2col_float(x, IMG_H, IMG_W, IMG_C, K);
-        lap("im2col1", &mut mark, &mut times);
-        let mut a1 =
-            float_ops::gemm_blocked(&cols1, &self.w1, IMG_H * IMG_W, CONV1_OUT, K * K * IMG_C);
-        lap("gemm1", &mut mark, &mut times);
-        float_ops::add_bias(&mut a1, &self.b1);
-        float_ops::relu(&mut a1);
-        lap("relu1", &mut mark, &mut times);
-        let p1 = maxpool::maxpool2x2(&a1, IMG_H, IMG_W, CONV1_OUT); // (48,48,32)
-        lap("pool1", &mut mark, &mut times);
-
-        let cols2 = im2col::im2col_float(&p1, 48, 48, CONV1_OUT, K);
-        lap("im2col2", &mut mark, &mut times);
-        let mut a2 =
-            float_ops::gemm_blocked(&cols2, &self.w2, 48 * 48, CONV2_OUT, K * K * CONV1_OUT);
-        lap("gemm2", &mut mark, &mut times);
-        float_ops::add_bias(&mut a2, &self.b2);
-        float_ops::relu(&mut a2);
-        lap("relu2", &mut mark, &mut times);
-        let p2 = maxpool::maxpool2x2(&a2, 48, 48, CONV2_OUT); // (24,24,32)
-        lap("pool2", &mut mark, &mut times);
-
-        let mut h1 = fc::fc_float_bias(&p2, &self.wfc1, &self.bfc1, FC1_OUT, 24 * 24 * CONV2_OUT);
-        float_ops::relu(&mut h1);
-        lap("fc1", &mut mark, &mut times);
-        let mut h2 = fc::fc_float_bias(&h1, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT);
-        float_ops::relu(&mut h2);
-        let logits_v = fc::fc_float_bias(&h2, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT);
-        lap("fc_tail", &mut mark, &mut times);
-
-        let mut logits = [0f32; NUM_CLASSES];
-        logits.copy_from_slice(&logits_v);
-        (logits, times)
+        self.compiled.forward_timed(x).expect("payload length asserted above")
     }
 
-    /// Batched forward over `n` contiguous (96,96,3) images.  Allocates a
-    /// fresh [`ForwardScratch`] per call; hot paths should reuse one via
+    /// Batched forward over `n` contiguous (96,96,3) images.  Allocates
+    /// a fresh [`PlanScratch`] per call; hot paths should reuse one via
     /// [`FloatNetwork::infer_batch_with`].
     pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
-        self.infer_batch_with(images, &mut ForwardScratch::new())
+        self.infer_batch_with(images, &mut PlanScratch::new())
     }
 
-    /// Batched forward through a reusable scratch arena: batched
-    /// im2col + GEMM (M = batch × spatial) and batched max-pools, with a
-    /// per-image FC tail.  Bit-identical per image to `forward` (every
-    /// row of every GEMM is accumulated in the same order), and
-    /// allocation-free once the arena has grown to the largest batch
-    /// seen.  Malformed input is a recoverable error, never a panic.
+    /// Batched forward through a reusable planned arena (bit-identical
+    /// per image to `forward`; malformed input is a recoverable error).
     pub fn infer_batch_with(
         &self,
         images: &[f32],
-        scratch: &mut ForwardScratch,
+        scratch: &mut PlanScratch,
     ) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
-        const IMG: usize = IMG_H * IMG_W * IMG_C;
-        if images.len() % IMG != 0 {
-            return Err(NetworkError::BadInput(format!(
-                "batch payload {} is not a multiple of {IMG}",
-                images.len()
-            )));
-        }
-        let n = images.len() / IMG;
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        let px = IMG_H * IMG_W;
-        let bad = |e: maxpool::PoolError| NetworkError::BadInput(e.to_string());
-        let ForwardScratch { cols_f, act_f, pool_f, .. } = &mut *scratch;
-
-        im2col::im2col_float_batch_into(images, n, IMG_H, IMG_W, IMG_C, K, cols_f);
-        act_f.resize(n * px * CONV1_OUT, 0.0); // the GEMM assigns every element
-        float_ops::gemm_blocked_into(cols_f, &self.w1, n * px, CONV1_OUT, K * K * IMG_C, act_f);
-        float_ops::add_bias(act_f, &self.b1);
-        float_ops::relu(act_f);
-        maxpool::maxpool2x2_batch_into(act_f, n, IMG_H, IMG_W, CONV1_OUT, pool_f).map_err(bad)?;
-
-        // act_f/pool_f peak at conv1/pool1 and shrink from here on; sample
-        // for the decay window before conv2 resizes them (cols_f peaks at
-        // conv2's gather and is caught by end_batch's sample)
-        scratch.note_batch_peaks();
-        let ForwardScratch { cols_f, act_f, pool_f, h_a, h_b, .. } = &mut *scratch;
-
-        // conv1's patch rows and activations are dead once pool1 is
-        // written, so `cols_f` and `act_f` are reused for conv2
-        im2col::im2col_float_batch_into(pool_f, n, 48, 48, CONV1_OUT, K, cols_f);
-        act_f.resize(n * 48 * 48 * CONV2_OUT, 0.0); // the GEMM assigns every element
-        float_ops::gemm_blocked_into(
-            cols_f,
-            &self.w2,
-            n * 48 * 48,
-            CONV2_OUT,
-            K * K * CONV1_OUT,
-            act_f,
-        );
-        float_ops::add_bias(act_f, &self.b2);
-        float_ops::relu(act_f);
-        // pool1 was consumed by conv2's im2col above — reuse its buffer
-        maxpool::maxpool2x2_batch_into(act_f, n, 48, 48, CONV2_OUT, pool_f).map_err(bad)?;
-
-        let feat = 24 * 24 * CONV2_OUT;
-        let mut out = Vec::with_capacity(n);
-        for i in 0..n {
-            let f = &pool_f[i * feat..(i + 1) * feat];
-            h_a.clear();
-            h_a.resize(FC1_OUT, 0.0);
-            fc::fc_float_bias_into(f, &self.wfc1, &self.bfc1, FC1_OUT, feat, h_a);
-            float_ops::relu(h_a);
-            h_b.clear();
-            h_b.resize(FC2_OUT, 0.0);
-            fc::fc_float_bias_into(h_a, &self.wfc2, &self.bfc2, FC2_OUT, FC1_OUT, h_b);
-            float_ops::relu(h_b);
-            let mut logits = [0f32; NUM_CLASSES];
-            fc::fc_float_bias_into(h_b, &self.wfc3, &self.bfc3, NUM_CLASSES, FC2_OUT, &mut logits);
-            out.push(logits);
-        }
-        scratch.end_batch(); // decay bookkeeping (no-op unless enabled)
-        Ok(out)
+        self.compiled.infer_batch_with(images, scratch).map_err(NetworkError::from)
     }
 
     pub fn classify(&self, x: &[f32]) -> usize {
@@ -647,7 +208,7 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
-/// Sum per-layer timings into a map-like vec (helper for benches).
+/// Sum per-layer timings into a total (helper for benches).
 pub fn total_time(times: &LayerTimings) -> Duration {
     times.iter().map(|(_, d)| *d).sum()
 }
@@ -659,10 +220,13 @@ pub fn total_time(times: &LayerTimings) -> Duration {
 #[doc(hidden)]
 pub mod tests_support {
     use super::*;
+    use crate::bnn::graph::plan::WeightDType;
+    use crate::bnn::packing;
     use crate::util::rng::Xoshiro256;
     use crate::util::tensorio::Tensor;
 
-    /// Build a random-but-valid BCNN weight file for a scheme.
+    /// Build a random-but-valid BCNN weight file for a scheme (the
+    /// legacy container layout, byte-compatible with `aot.py` exports).
     pub fn synth_bcnn_tf(scheme: Scheme, seed: u64) -> TensorFile {
         let mut rng = Xoshiro256::new(seed);
         let c_in = scheme.input_channels();
@@ -731,6 +295,43 @@ pub mod tests_support {
         let mut rng = Xoshiro256::new(seed);
         (0..IMG_H * IMG_W * IMG_C).map(|_| rng.next_f32()).collect()
     }
+
+    /// Build a random-but-consistent weight container for an ARBITRARY
+    /// graph spec: the plan declares every tensor it will bind (name,
+    /// dtype, shape), so the generator just walks that list.  This is
+    /// how tests and manifests exercise non-legacy topologies (e.g. the
+    /// 3-conv acceptance network) without a Python export.
+    pub fn synth_tf_for_spec(spec: &NetworkSpec, seed: u64) -> TensorFile {
+        let plan = spec.plan().expect("spec must compile");
+        let mut rng = Xoshiro256::new(seed);
+        let mut tf = TensorFile::new();
+        for req in &plan.weights {
+            let n = req.elements();
+            match req.dtype {
+                WeightDType::F32 => {
+                    let values: Vec<f32> = if req.name == "input_t" {
+                        vec![-0.5; n]
+                    } else if req.name.starts_with('b') {
+                        vec![0.0; n] // biases start at zero, like aot.py
+                    } else if req.name.starts_with("theta") {
+                        (0..n).map(|_| rng.next_normal_f32() * 10.0).collect()
+                    } else {
+                        (0..n).map(|_| rng.next_normal_f32() * 0.1).collect()
+                    };
+                    tf.insert(&req.name, Tensor::from_f32(req.shape.clone(), &values));
+                }
+                WeightDType::U32 => {
+                    let values: Vec<u32> = if req.name.starts_with("flip") {
+                        (0..n).map(|_| (rng.next_u64() & 1) as u32).collect()
+                    } else {
+                        (0..n).map(|_| rng.next_u32()).collect()
+                    };
+                    tf.insert(&req.name, Tensor::from_u32(req.shape.clone(), &values));
+                }
+            }
+        }
+        tf
+    }
 }
 
 #[cfg(test)]
@@ -764,13 +365,14 @@ mod tests {
         let net = synth_float_network(3);
         let (logits, times) = net.forward(&synth_image(4));
         assert!(logits.iter().all(|v| v.is_finite()));
-        assert!(times.iter().any(|(n, _)| *n == "gemm2"));
+        assert!(times.iter().any(|(n, _)| n == "gemm2"));
     }
 
     #[test]
     fn missing_tensor_is_reported() {
         let tf = TensorFile::new();
-        assert!(BcnnNetwork::from_tensor_file(&tf, Scheme::Rgb).is_err());
+        let err = BcnnNetwork::from_tensor_file(&tf, Scheme::Rgb).unwrap_err();
+        assert!(matches!(err, NetworkError::Graph(_)), "{err}");
     }
 
     #[test]
@@ -843,5 +445,18 @@ mod tests {
         assert!(net.infer_batch(&[]).unwrap().is_empty());
         let fnet = synth_float_network(8);
         assert!(matches!(fnet.infer_batch(&[0.0; 7]), Err(NetworkError::BadInput(_))));
+    }
+
+    #[test]
+    fn synth_tf_for_spec_binds_any_compiling_spec() {
+        // the generic generator must satisfy the legacy plans too
+        for scheme in Scheme::ALL {
+            let spec = NetworkSpec::legacy_bcnn(scheme);
+            let tf = synth_tf_for_spec(&spec, 60);
+            assert!(CompiledNetwork::from_tensor_file(&tf, &spec).is_ok(), "{scheme:?}");
+        }
+        let spec = NetworkSpec::legacy_float();
+        let tf = synth_tf_for_spec(&spec, 61);
+        assert!(CompiledNetwork::from_tensor_file(&tf, &spec).is_ok());
     }
 }

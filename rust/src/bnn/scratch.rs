@@ -1,124 +1,68 @@
-//! `ForwardScratch` — the per-worker forward arena.
+//! `PlanScratch` — the planned per-worker forward arena.
 //!
 //! The paper's pitch is that binarization "decreases both the
 //! computational load and the memory footprint"; the serving translation
 //! of that discipline (FINN's reused on-chip buffers, the XNOR-conv GPU
 //! work's once-per-stream workspace) is to allocate every intermediate
-//! tensor of `infer_batch` exactly once per worker and reuse it across
-//! calls.  `BcnnNetwork::infer_batch_with` / `FloatNetwork::infer_batch_with`
-//! thread one of these through the whole pipeline; `EngineBackend` keeps
-//! a pool of them (one per concurrent worker) so steady-state inference
-//! performs **no intermediate-tensor allocation at all**.
+//! tensor exactly once per worker and reuse it across calls.
 //!
-//! Correctness contract: every `_into` kernel either assigns every
-//! element of its exact-resized output range (GEMMs, packers, OR-pool,
-//! FC) or pre-fills the range with its required identity before
-//! accumulating (zero for float/word im2col padding, `NEG_INFINITY` for
-//! max-pool) — so a scratch reused across batches of different sizes, or
-//! even across different networks and schemes, can never leak state
-//! between calls (property-tested below).  By default buffer capacity
-//! only grows (monotone high-water mark sized by the largest batch
-//! seen); long-lived serving workers opt into a **decay policy**
-//! ([`ForwardScratch::with_decay`]) that shrinks the arena back to the
-//! high-water mark of the last N batches every N batches, so a worker
-//! that once saw B=64 doesn't pin that memory forever once traffic
-//! settles back to B=1 (decay never changes outputs — property-tested).
+//! Up to PR 4 this arena was `ForwardScratch`: **11 hand-named buffer
+//! roles** (`xb`, `cols_p`, `counts`, …) sized for exactly the fixed
+//! 2-conv/2-fc topology, with the lifetime-disjoint reuse plan audited
+//! by hand at every call site.  The layer-graph compiler
+//! ([`crate::bnn::graph::plan`]) replaced that: buffer **count** and
+//! **assignment** now come from per-edge liveness analysis over the
+//! network's own graph, and this type degenerates to what it always
+//! really was — three pools of role-less slots, one per storage class
+//! (f32 / u32 / i32), indexed by the plan.
+//!
+//! Correctness contract (unchanged from the hand-named arena, now
+//! enforced per planned slot): every kernel either assigns every
+//! element of its exact-resized output range or pre-fills the range
+//! with its identity before accumulating, so a slot reused across
+//! steps, batches of different sizes, or even different *plans* (the
+//! backend pool hands arenas to whatever runs next) can never leak
+//! state — property-tested in [`crate::bnn::graph::exec`] and below.
+//!
+//! By default slot capacity only grows (monotone high-water mark sized
+//! by the largest batch seen).  Long-lived serving workers opt into a
+//! **decay policy** ([`PlanScratch::with_decay`]): the arena tracks each
+//! slot's per-window high-water mark (sampled on every step write, so
+//! a slot that peaks at conv1 and shrinks through the tail is never
+//! under-read) and every N batches releases capacity the window never
+//! touched — a worker that once served a B=64 burst stops pinning that
+//! memory once traffic settles back to B=1.  Decay never changes
+//! outputs (property-tested).
 
-/// Reusable buffers for one in-flight `infer_batch_with` call.
+/// Role-less planned buffers for one in-flight compiled forward.
 ///
-/// Buffers are named by role; stages with disjoint lifetimes share one
-/// buffer (e.g. `cols_p` carries conv1's packed patch rows, then is
-/// overwritten with conv2's word gather once conv1's GEMM has consumed
-/// it).  The reuse plan is documented at each use site in `network.rs`.
+/// Slots are created lazily ([`PlanScratch::ensure`]) so one arena can
+/// serve plans of different depths; a plan only ever touches the slot
+/// indices its own liveness analysis assigned.
 #[derive(Default)]
-pub struct ForwardScratch {
-    /// Binarized batch input (packed-conv1 schemes).
-    pub(crate) xb: Vec<f32>,
-    /// Per-image grayscale scratch (LBP binarization).
-    pub(crate) gray: Vec<f32>,
-    /// Packed patch rows: conv1 fused im2col+pack, then conv2 word gather.
-    pub(crate) cols_p: Vec<u32>,
-    /// XNOR-popcount counts: conv1, then conv2, then fc1.
-    pub(crate) counts: Vec<i32>,
-    /// Threshold-packed activation words: conv1, then conv2.
-    pub(crate) words: Vec<u32>,
-    /// OR-pooled words: pool1, then pool2.
-    pub(crate) pooled: Vec<u32>,
-    /// Float patch rows (`Scheme::None` conv1; `FloatNetwork` conv1/conv2).
-    pub(crate) cols_f: Vec<f32>,
-    /// Float GEMM activations (`Scheme::None` conv1; `FloatNetwork` conv1/conv2).
-    pub(crate) act_f: Vec<f32>,
-    /// Max-pooled float activations (`FloatNetwork` pool1, then pool2).
-    pub(crate) pool_f: Vec<f32>,
-    /// FC-tail hidden activations (per image).
-    pub(crate) h_a: Vec<f32>,
-    pub(crate) h_b: Vec<f32>,
+pub struct PlanScratch {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+    i32s: Vec<Vec<i32>>,
     /// Decay policy: shrink every `decay_after` batches back to the
-    /// window's per-buffer high-water marks.  `0` disables decay (the
-    /// default — ad-hoc arenas and benches keep the pure monotone
-    /// high-water behavior).
+    /// window's per-slot high-water marks.  `0` disables decay (the
+    /// default — ad-hoc arenas and benches keep pure monotone growth).
     decay_after: usize,
-    /// Per-buffer peak `len()` observed in the current decay window,
-    /// in field-declaration order.
-    window_peaks: [usize; NUM_BUFFERS],
+    /// Per-slot peak `len()` observed in the current decay window,
+    /// indexed like the slot pools.
+    peaks: [Vec<usize>; 3],
     /// Batches completed since the last decay check.
     batches_since_decay: usize,
 }
 
-/// Number of role-named buffers in the arena (the `Vec` fields of
-/// [`ForwardScratch`], in declaration order).
-const NUM_BUFFERS: usize = 11;
-
-/// The decay bookkeeping views every buffer through one vtable so the
-/// field list lives in exactly one place ([`ForwardScratch::buffers_mut`])
-/// instead of being hand-synced across peak sampling and shrinking.
-trait DecayBuf {
-    fn len(&self) -> usize;
-    fn shrink_to_peak(&mut self, peak: usize);
-}
-
-impl<T> DecayBuf for Vec<T> {
-    fn len(&self) -> usize {
-        Vec::len(self)
-    }
-    fn shrink_to_peak(&mut self, peak: usize) {
-        // `shrink_to` keeps capacity ≥ max(len, peak): the buffer ends
-        // the window able to hold exactly its window high-water mark, so
-        // under steady traffic the next batches fit without reallocating
-        if self.capacity() > peak {
-            self.shrink_to(peak);
-        }
-    }
-}
-
-impl ForwardScratch {
-    /// Every role-named buffer, in `window_peaks` index order — THE
-    /// single field list the decay machinery iterates.  The
-    /// `NUM_BUFFERS` array length makes the compiler reject a buffer
-    /// added to the struct and counted, but missing here (and a
-    /// too-short `window_peaks` can't silently truncate a `zip`).
-    fn buffers_mut(&mut self) -> [&mut dyn DecayBuf; NUM_BUFFERS] {
-        [
-            &mut self.xb,
-            &mut self.gray,
-            &mut self.cols_p,
-            &mut self.counts,
-            &mut self.words,
-            &mut self.pooled,
-            &mut self.cols_f,
-            &mut self.act_f,
-            &mut self.pool_f,
-            &mut self.h_a,
-            &mut self.h_b,
-        ]
-    }
-
-    /// Decay window used by serving workers ([`crate::coordinator::backend::EngineBackend`]'s
-    /// arena pool): after this many batches, capacity not touched within
-    /// the window is released.  Large enough that a transient dip in
-    /// batch size doesn't thrash the allocator; small enough that a
-    /// one-off B=64 burst stops pinning ~megabytes within a second of
-    /// steady B=1 traffic.
+impl PlanScratch {
+    /// Decay window used by serving workers
+    /// ([`crate::coordinator::backend::EngineBackend`]'s arena pool):
+    /// after this many batches, capacity not touched within the window
+    /// is released.  Large enough that a transient dip in batch size
+    /// doesn't thrash the allocator; small enough that a one-off B=64
+    /// burst stops pinning ~megabytes within a second of steady B=1
+    /// traffic.
     pub const SERVING_DECAY_BATCHES: usize = 64;
 
     pub fn new() -> Self {
@@ -126,78 +70,133 @@ impl ForwardScratch {
     }
 
     /// An arena with the decay policy enabled: every `decay_after`
-    /// batches, each buffer's capacity shrinks to the largest size that
-    /// buffer actually reached within the window.  `0` disables decay.
+    /// batches, each slot's capacity shrinks to the largest size that
+    /// slot actually reached within the window.  `0` disables decay.
     pub fn with_decay(decay_after: usize) -> Self {
         Self { decay_after, ..Self::default() }
     }
 
-    /// Fold the buffers' current `len()`s into the window's per-buffer
-    /// peaks.  A single end-of-batch sample would under-read: the
-    /// forward resizes several buffers *down* as it proceeds (conv1's
-    /// spatial extent is 4× conv2's, and the FC tail is smaller still).
-    /// So the networks sample twice — once **after pool1** (where the
-    /// conv1-peaking buffers — counts, words, pooled, act_f — hold their
-    /// largest extent) and once from [`ForwardScratch::end_batch`]
-    /// (which catches the buffers whose *last* resize is their largest:
-    /// the conv2 patch-row gathers `cols_p`/`cols_f`, and the constant
-    /// FC tails).  The max of both samples is the true per-batch
-    /// high-water mark for every buffer.
-    pub(crate) fn note_batch_peaks(&mut self) {
+    /// Grow the slot pools to a plan's `[f32, u32, i32]` counts.  Called
+    /// by the executor before every run; a no-op once the arena has seen
+    /// the deepest plan it serves.
+    pub(crate) fn ensure(&mut self, nbufs: [usize; 3]) {
+        if self.f32s.len() < nbufs[0] {
+            self.f32s.resize_with(nbufs[0], Vec::new);
+        }
+        if self.u32s.len() < nbufs[1] {
+            self.u32s.resize_with(nbufs[1], Vec::new);
+        }
+        if self.i32s.len() < nbufs[2] {
+            self.i32s.resize_with(nbufs[2], Vec::new);
+        }
+    }
+
+    // --- slot checkout (the executor's take/put discipline) ------------
+    // A step takes its output (and scratch) slot out of the arena, reads
+    // its input slot by shared reference, then puts the written slots
+    // back.  `put_*` doubles as the decay window's peak sampler: a
+    // slot's `len` only changes when a step writes it, so sampling every
+    // put observes the true per-batch high-water mark of every slot —
+    // including the ones that peak mid-forward and shrink afterwards.
+
+    pub(crate) fn take_f32(&mut self, idx: usize) -> Vec<f32> {
+        std::mem::take(&mut self.f32s[idx])
+    }
+
+    pub(crate) fn take_u32(&mut self, idx: usize) -> Vec<u32> {
+        std::mem::take(&mut self.u32s[idx])
+    }
+
+    pub(crate) fn take_i32(&mut self, idx: usize) -> Vec<i32> {
+        std::mem::take(&mut self.i32s[idx])
+    }
+
+    pub(crate) fn put_f32(&mut self, idx: usize, buf: Vec<f32>) {
+        self.note_peak(0, idx, buf.len());
+        self.f32s[idx] = buf;
+    }
+
+    pub(crate) fn put_u32(&mut self, idx: usize, buf: Vec<u32>) {
+        self.note_peak(1, idx, buf.len());
+        self.u32s[idx] = buf;
+    }
+
+    pub(crate) fn put_i32(&mut self, idx: usize, buf: Vec<i32>) {
+        self.note_peak(2, idx, buf.len());
+        self.i32s[idx] = buf;
+    }
+
+    pub(crate) fn f32_slot(&self, idx: usize) -> &[f32] {
+        &self.f32s[idx]
+    }
+
+    pub(crate) fn u32_slot(&self, idx: usize) -> &[u32] {
+        &self.u32s[idx]
+    }
+
+    pub(crate) fn i32_slot(&self, idx: usize) -> &[i32] {
+        &self.i32s[idx]
+    }
+
+    fn note_peak(&mut self, class: usize, idx: usize, len: usize) {
         if self.decay_after == 0 {
             return;
         }
-        let mut peaks = self.window_peaks;
-        for (peak, buf) in peaks.iter_mut().zip(self.buffers_mut()) {
-            *peak = (*peak).max(buf.len());
+        let peaks = &mut self.peaks[class];
+        if peaks.len() <= idx {
+            peaks.resize(idx + 1, 0);
         }
-        self.window_peaks = peaks;
+        peaks[idx] = peaks[idx].max(len);
     }
 
-    /// Mark the end of one `infer_batch_with` call and run the decay
-    /// policy.  Called by the networks after every batched forward; a
-    /// no-op unless decay is enabled.
+    /// Mark the end of one compiled forward and run the decay policy —
+    /// a no-op unless decay is enabled.
     ///
     /// Correctness: decay only ever *releases capacity* — it truncates a
-    /// buffer to a length every `_into` kernel will overwrite (each
-    /// kernel resizes its output to the exact size it needs and assigns
-    /// or identity-fills the whole range before reading), so shrinking
-    /// can never change results (property-tested below).  Under steady
-    /// traffic the window peak equals the shrunk capacity, so the decay
-    /// check is a no-op and the zero-allocation steady state is
-    /// preserved; only after the load genuinely drops does a shrink (and
-    /// the one regrow on the next larger batch) happen.
+    /// slot to a length every kernel will re-resize and overwrite before
+    /// reading, so shrinking can never change results (property-tested
+    /// below).  Under steady traffic the window peak equals the held
+    /// capacity, so the decay pass is a no-op and the zero-allocation
+    /// steady state is preserved; only after load genuinely drops does a
+    /// shrink (and one regrow on the next larger batch) happen.
     pub(crate) fn end_batch(&mut self) {
         if self.decay_after == 0 {
             return;
         }
-        self.note_batch_peaks();
         self.batches_since_decay += 1;
         if self.batches_since_decay < self.decay_after {
             return;
         }
-        let peaks = self.window_peaks;
-        for (peak, buf) in peaks.into_iter().zip(self.buffers_mut()) {
-            buf.shrink_to_peak(peak);
+        fn shrink<T>(bufs: &mut [Vec<T>], peaks: &[usize]) {
+            for (i, buf) in bufs.iter_mut().enumerate() {
+                let peak = peaks.get(i).copied().unwrap_or(0);
+                if buf.capacity() > peak {
+                    buf.truncate(peak);
+                    buf.shrink_to(peak);
+                }
+            }
         }
-        self.window_peaks = [0; NUM_BUFFERS];
+        shrink(&mut self.f32s, &self.peaks[0]);
+        shrink(&mut self.u32s, &self.peaks[1]);
+        shrink(&mut self.i32s, &self.peaks[2]);
+        for p in &mut self.peaks {
+            p.fill(0);
+        }
         self.batches_since_decay = 0;
     }
 
-    /// Total elements currently reserved across all buffers — the arena's
-    /// high-water mark, for diagnostics and the allocation bench.
+    /// Total elements currently reserved across all slots — the arena's
+    /// high-water mark, for diagnostics and the allocation benches.
     pub fn capacity_elems(&self) -> usize {
-        self.xb.capacity()
-            + self.gray.capacity()
-            + self.cols_p.capacity()
-            + self.counts.capacity()
-            + self.words.capacity()
-            + self.pooled.capacity()
-            + self.cols_f.capacity()
-            + self.act_f.capacity()
-            + self.pool_f.capacity()
-            + self.h_a.capacity()
-            + self.h_b.capacity()
+        self.f32s.iter().map(Vec::capacity).sum::<usize>()
+            + self.u32s.iter().map(Vec::capacity).sum::<usize>()
+            + self.i32s.iter().map(Vec::capacity).sum::<usize>()
+    }
+
+    /// Slots currently materialized per class, `[f32, u32, i32]`
+    /// (diagnostics; grows to the deepest plan served).
+    pub fn slot_counts(&self) -> [usize; 3] {
+        [self.f32s.len(), self.u32s.len(), self.i32s.len()]
     }
 }
 
@@ -222,41 +221,41 @@ mod tests {
     }
 
     #[test]
-    fn bcnn_scratch_path_bit_identical_and_leak_free() {
-        // ONE scratch reused across every case: random scheme, random
-        // batch size (so consecutive calls shrink and grow the buffers),
-        // compared against (a) a fresh scratch and (b) the single-image
+    fn reused_arena_is_bit_identical_and_leak_free() {
+        // ONE arena reused across every case: random scheme, random
+        // batch size (so consecutive calls shrink and grow the slots),
+        // compared against (a) a fresh arena and (b) the single-image
         // forward — both must be bit-identical every time.
         let nets: Vec<_> = Scheme::ALL.iter().map(|&s| synth_bcnn_network(s, 77)).collect();
-        let mut reused = ForwardScratch::new();
+        let mut reused = PlanScratch::new();
         prop::check(12, |g| {
             let net = g.pick(&nets);
             let n = g.usize_in(1, 5);
             let xs = images(n, g.u64());
             let with_reused = net.infer_batch_with(&xs, &mut reused).unwrap();
-            let with_fresh = net.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap();
-            ensure_eq(with_reused.clone(), with_fresh, "reused scratch == fresh scratch")?;
+            let with_fresh = net.infer_batch_with(&xs, &mut PlanScratch::new()).unwrap();
+            ensure_eq(with_reused.clone(), with_fresh, "reused arena == fresh arena")?;
             for i in 0..n {
                 let (single, _) = net.forward(&xs[i * IMG..(i + 1) * IMG]);
-                ensure_eq(with_reused[i], single, "scratch batched == single forward")?;
+                ensure_eq(with_reused[i], single, "arena batched == single forward")?;
             }
             Ok(())
         });
     }
 
     #[test]
-    fn float_scratch_path_bit_identical_and_leak_free() {
+    fn float_arena_path_bit_identical_and_leak_free() {
         let net = synth_float_network(78);
-        let mut reused = ForwardScratch::new();
+        let mut reused = PlanScratch::new();
         prop::check(6, |g| {
             let n = g.usize_in(1, 4);
             let xs = images(n, g.u64());
             let with_reused = net.infer_batch_with(&xs, &mut reused).unwrap();
-            let with_fresh = net.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap();
+            let with_fresh = net.infer_batch_with(&xs, &mut PlanScratch::new()).unwrap();
             ensure_eq(with_reused.clone(), with_fresh, "float reused == fresh")?;
             for i in 0..n {
                 let (single, _) = net.forward(&xs[i * IMG..(i + 1) * IMG]);
-                ensure_eq(with_reused[i], single, "float scratch batched == single")?;
+                ensure_eq(with_reused[i], single, "float arena batched == single")?;
             }
             Ok(())
         });
@@ -265,9 +264,9 @@ mod tests {
     #[test]
     fn shrinking_then_growing_batches_do_not_leak() {
         // explicit worst case for stale-state bugs: big batch warms the
-        // high-water mark, then smaller batches run inside dirty buffers
+        // high-water mark, then smaller batches run inside dirty slots
         let net = synth_bcnn_network(Scheme::Rgb, 5);
-        let mut scratch = ForwardScratch::new();
+        let mut scratch = PlanScratch::new();
         let mut high_water = 0;
         for (round, &n) in [4usize, 1, 3, 2, 5, 1].iter().enumerate() {
             let xs = images(n, 1000 + round as u64);
@@ -284,12 +283,12 @@ mod tests {
     }
 
     #[test]
-    fn one_scratch_serves_bcnn_and_float_interleaved() {
-        // a worker's arena may alternate between model kinds; nothing may
-        // bleed across (different buffer roles, but shared h_a/h_b etc.)
+    fn one_arena_serves_bcnn_and_float_interleaved() {
+        // a worker's arena may alternate between plans; nothing may
+        // bleed across (different slot assignments, shared pools)
         let bnet = synth_bcnn_network(Scheme::Gray, 9);
         let fnet = synth_float_network(9);
-        let mut scratch = ForwardScratch::new();
+        let mut scratch = PlanScratch::new();
         for round in 0..3u64 {
             let xs = images(2, 2000 + round);
             let b = bnet.infer_batch_with(&xs, &mut scratch).unwrap();
@@ -299,30 +298,33 @@ mod tests {
                 assert_eq!(f[i], fnet.forward(&xs[i * IMG..(i + 1) * IMG]).0);
             }
         }
+        // the pools grew to the deeper plan's needs, not the union of
+        // hand-named roles
+        let [nf, nu, ni] = scratch.slot_counts();
+        assert!(nf <= 3 && nu <= 2 && ni <= 1, "{:?}", scratch.slot_counts());
     }
 
     #[test]
     fn decay_never_changes_outputs() {
-        // the satellite property: an aggressively-decaying arena (window
-        // of 2, so it shrinks constantly while batch sizes jump around)
-        // stays bit-identical to a fresh arena and to the single-image
-        // forward, across schemes and the float network
+        // an aggressively-decaying arena (window of 2, so it shrinks
+        // constantly while batch sizes jump around) stays bit-identical
+        // to a fresh arena, across schemes and the float network
         let nets: Vec<_> = Scheme::ALL.iter().map(|&s| synth_bcnn_network(s, 91)).collect();
         let fnet = synth_float_network(92);
-        let mut decaying = ForwardScratch::with_decay(2);
+        let mut decaying = PlanScratch::with_decay(2);
         prop::check(16, |g| {
             let n = g.usize_in(1, 6);
             let xs = images(n, g.u64());
             let (with_decay, with_fresh) = if g.usize_in(0, 3) == 0 {
                 (
                     fnet.infer_batch_with(&xs, &mut decaying).unwrap(),
-                    fnet.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap(),
+                    fnet.infer_batch_with(&xs, &mut PlanScratch::new()).unwrap(),
                 )
             } else {
                 let net = g.pick(&nets);
                 (
                     net.infer_batch_with(&xs, &mut decaying).unwrap(),
-                    net.infer_batch_with(&xs, &mut ForwardScratch::new()).unwrap(),
+                    net.infer_batch_with(&xs, &mut PlanScratch::new()).unwrap(),
                 )
             };
             ensure_eq(with_decay, with_fresh, "decaying arena == fresh arena")
@@ -334,7 +336,7 @@ mod tests {
         // a B=8 burst grows the arena; once a full decay window passes
         // with only B=1 traffic, the burst capacity must be released
         let net = synth_bcnn_network(Scheme::Rgb, 93);
-        let mut scratch = ForwardScratch::with_decay(4);
+        let mut scratch = PlanScratch::with_decay(4);
         net.infer_batch_with(&images(8, 1), &mut scratch).unwrap();
         let burst_cap = scratch.capacity_elems();
         for round in 0..8u64 {
@@ -355,14 +357,13 @@ mod tests {
 
     #[test]
     fn decay_is_noop_under_steady_traffic() {
-        // regression (code review): sampling only end-of-batch len() under-
-        // read the buffers the forward resizes downward (counts, words,
-        // pooled peak at conv1), so decay shrank them below their working
-        // size and every window reallocated them.  With two-point peak
-        // sampling + shrink_to, capacity must settle and then hold exactly
-        // steady across further decay windows under constant load.
+        // regression (PR 3 code review, re-proved for the planned arena):
+        // an end-of-batch-only sample under-reads slots that peak
+        // mid-forward (conv1's counts shrink through the tail), making
+        // every window reallocate.  Peaks sampled on every slot write
+        // must hold capacity exactly steady under constant load.
         let net = synth_bcnn_network(Scheme::Rgb, 95);
-        let mut scratch = ForwardScratch::with_decay(3);
+        let mut scratch = PlanScratch::with_decay(3);
         for round in 0..7u64 {
             net.infer_batch_with(&images(2, 300 + round), &mut scratch).unwrap();
         }
@@ -379,10 +380,10 @@ mod tests {
 
     #[test]
     fn decay_disabled_keeps_monotone_high_water() {
-        // ForwardScratch::new() must keep the PR 2 contract: capacity
-        // never shrinks, no realloc churn for ad-hoc arenas
+        // PlanScratch::new() keeps the PR 2 contract: capacity never
+        // shrinks, no realloc churn for ad-hoc arenas
         let net = synth_bcnn_network(Scheme::Gray, 94);
-        let mut scratch = ForwardScratch::new();
+        let mut scratch = PlanScratch::new();
         net.infer_batch_with(&images(6, 1), &mut scratch).unwrap();
         let high = scratch.capacity_elems();
         for round in 0..6u64 {
@@ -392,9 +393,9 @@ mod tests {
     }
 
     #[test]
-    fn scratch_rejects_ragged_and_accepts_empty() {
+    fn arena_rejects_ragged_and_accepts_empty() {
         let net = synth_bcnn_network(Scheme::Rgb, 8);
-        let mut scratch = ForwardScratch::new();
+        let mut scratch = PlanScratch::new();
         assert!(net.infer_batch_with(&[0.0; 100], &mut scratch).is_err());
         assert!(net.infer_batch_with(&[], &mut scratch).unwrap().is_empty());
         let fnet = synth_float_network(8);

@@ -7,8 +7,9 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
+use crate::bnn::graph::CompiledNetwork;
 use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
-use crate::bnn::scratch::ForwardScratch;
+use crate::bnn::scratch::PlanScratch;
 use crate::runtime::{Artifacts, ModelRuntime, RuntimeError};
 use crate::util::threadpool::scoped_map;
 
@@ -61,31 +62,34 @@ pub fn gather_padded(images: &[&[f32]], exec: usize, out: &mut Vec<f32>) {
 // pure-Rust engine backend
 // ---------------------------------------------------------------------------
 
-/// Which network the engine runs.
-pub enum EngineModel {
-    Bcnn(BcnnNetwork),
-    Float(FloatNetwork),
-}
-
 /// CPU engine backend; data-parallel across a scoped thread pool.
+///
+/// The engine runs a [`CompiledNetwork`] — a layer-graph plan with
+/// weights bound — so ANY topology the plan compiler accepts serves
+/// through the same backend; the legacy `BcnnNetwork`/`FloatNetwork`
+/// constructors below just unwrap their compiled plan.
 pub struct EngineBackend {
-    model: EngineModel,
+    model: CompiledNetwork,
     threads: usize,
     label: String,
-    /// Checked-out-and-returned forward arenas, one per concurrent
+    /// Checked-out-and-returned planned arenas, one per concurrent
     /// worker: a worker pops one for the duration of its chunk and pushes
     /// it back, so steady-state inference allocates no intermediate
     /// tensors (the pool grows to at most `threads × executors` arenas,
-    /// each sized by the largest per-worker chunk seen).  Arenas carry
-    /// the serving decay policy: every
-    /// [`ForwardScratch::SERVING_DECAY_BATCHES`] batches an arena shrinks
+    /// each sized by this backend's plan — the pool is keyed by the
+    /// backend, hence by its plan; slots are role-less, so even an arena
+    /// that once served a deeper plan stays valid).  Arenas carry the
+    /// serving decay policy: every
+    /// [`PlanScratch::SERVING_DECAY_BATCHES`] batches an arena shrinks
     /// back to the window's high-water mark, so a worker that once served
     /// a B=64 burst stops pinning that memory under steady B=1 traffic.
-    scratch_pool: Mutex<Vec<ForwardScratch>>,
+    scratch_pool: Mutex<Vec<PlanScratch>>,
 }
 
 impl EngineBackend {
-    pub fn new(model: EngineModel, threads: usize, label: impl Into<String>) -> Self {
+    /// A backend around an arbitrary compiled plan (the registry loader
+    /// uses this for manifest-declared `arch` graphs).
+    pub fn compiled(model: CompiledNetwork, threads: usize, label: impl Into<String>) -> Self {
         Self {
             model,
             threads: threads.max(1),
@@ -96,11 +100,11 @@ impl EngineBackend {
 
     pub fn bcnn(net: BcnnNetwork, threads: usize) -> Self {
         let label = format!("engine/bcnn_{}", net.scheme.name());
-        Self::new(EngineModel::Bcnn(net), threads, label)
+        Self::compiled(net.into_compiled(), threads, label)
     }
 
     pub fn float(net: FloatNetwork, threads: usize) -> Self {
-        Self::new(EngineModel::Float(net), threads, "engine/float")
+        Self::compiled(net.into_compiled(), threads, "engine/float")
     }
 }
 
@@ -135,11 +139,9 @@ impl InferBackend for EngineBackend {
                 .lock()
                 .unwrap()
                 .pop()
-                .unwrap_or_else(|| ForwardScratch::with_decay(ForwardScratch::SERVING_DECAY_BATCHES));
-            let result = match &self.model {
-                EngineModel::Bcnn(m) => m.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string()),
-                EngineModel::Float(m) => m.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string()),
-            };
+                .unwrap_or_else(|| PlanScratch::with_decay(PlanScratch::SERVING_DECAY_BATCHES));
+            let result =
+                self.model.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string());
             self.scratch_pool.lock().unwrap().push(scratch);
             result
         };

@@ -10,7 +10,7 @@
 //!                       │            │      size + deadline policy each)
 //!                       │ batches    │ batches  — concurrently in flight
 //!                  backend: pure-Rust engine (parallel workers,
-//!                           pooled ForwardScratch arenas w/ decay)
+//!                           pooled PlanScratch arenas w/ decay)
 //!                           or PJRT executor thread (HLO artifacts)
 //!                       │ logits
 //!                  response channels + metrics (latency histograms)

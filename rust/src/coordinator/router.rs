@@ -157,13 +157,26 @@ impl Router {
         name: impl Into<String>,
         backend: Arc<dyn InferBackend>,
     ) -> Result<(), RouteError> {
+        self.add_lane_with_policy(name, backend, self.policy)
+    }
+
+    /// `add_lane` with a per-lane batch policy override — the registry's
+    /// per-model `"batch"` manifest knob: one entry can run a deeper
+    /// batcher or a wider executor pool than its neighbours without
+    /// changing the router default every other lane inherits.
+    pub fn add_lane_with_policy(
+        &self,
+        name: impl Into<String>,
+        backend: Arc<dyn InferBackend>,
+        policy: BatchPolicy,
+    ) -> Result<(), RouteError> {
         let name = name.into();
         {
             let mut lanes = self.lanes.write().unwrap();
             if lanes.contains_key(&name) {
                 return Err(RouteError::LaneExists(name));
             }
-            let lane = Lane::spawn(self.queue_capacity, self.policy, backend);
+            let lane = Lane::spawn(self.queue_capacity, policy, backend);
             lanes.insert(name.clone(), Arc::new(lane));
         }
         let mut def = self.default_variant.write().unwrap();
@@ -171,6 +184,19 @@ impl Router {
             *def = name;
         }
         Ok(())
+    }
+
+    /// The batch policy lanes inherit when spawned without an override.
+    pub fn default_policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Executor-pool width of a lane (for the admin plane's effective
+    /// policy report).
+    pub fn lane_executors(&self, name: &str) -> Result<usize, RouteError> {
+        let lane = self.lane(name)?;
+        let executors = lane.batcher.lock().unwrap().as_ref().map(|b| b.executors());
+        Ok(executors.unwrap_or(0))
     }
 
     /// Retire a lane: unregister it (new submissions fail with

@@ -26,6 +26,7 @@ pub mod bnn {
     pub mod conv_direct;
     pub mod fc;
     pub mod float_ops;
+    pub mod graph;
     pub mod im2col;
     pub mod maxpool;
     pub mod network;

@@ -104,6 +104,12 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
         .opt("threads", "0", "engine worker threads (0 = all cores)")
         .opt("executors", "0", "batched workers per lane (0 = auto from host profile)")
         .opt("write-timeout-ms", "10000", "per-session write deadline in ms (0 = disabled)")
+        .opt(
+            "admin-token",
+            "",
+            "require this token on load_model/unload_model/set_default (empty = ops stay \
+             open; the startup banner names the posture — check it when passing a shell var)",
+        )
         .parse(raw)?;
     let threads = match a.get_usize("threads")? {
         0 => default_threads(),
@@ -215,9 +221,12 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms)),
     };
+    let admin_token = a.get_nonempty("admin-token");
+    let admin_gated = admin_token.is_some();
     let server = Arc::new(
         Server::new(Arc::clone(&registry), CLASSES.iter().map(|s| s.to_string()).collect())
-            .with_write_timeout(write_timeout),
+            .with_write_timeout(write_timeout)
+            .with_admin_token(admin_token),
     );
     let stop = Arc::new(AtomicBool::new(false));
     let addr = server.serve(&a.get("addr"), threads.max(2), stop)?;
@@ -229,7 +238,10 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
         write_timeout,
     );
     println!("protocol: line JSON, e.g. {{\"op\":\"classify_synth\",\"index\":0}}");
-    println!("admin ops: load_model / unload_model / set_default / list_models");
+    println!(
+        "admin ops: load_model / unload_model / set_default ({}) / list_models",
+        if admin_gated { "token-gated" } else { "open — pass --admin-token to gate" },
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

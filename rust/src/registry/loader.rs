@@ -8,9 +8,11 @@
 //!    dropped into the directory while the server runs are visible);
 //! 2. FNV-1a 64 checksum over the raw weight-file bytes against the
 //!    manifest's `fnv1a64:<hex>` declaration;
-//! 3. tensor-container parse + network construction (shape-checked);
+//! 3. graph-plan compilation (the manifest's `arch` or the synthesized
+//!    legacy topology) + tensor-container parse + weight binding, all
+//!    shape-checked by the plan;
 //! 4. smoke inference: one deterministic synthetic image must produce
-//!    `NUM_CLASSES` finite logits.
+//!    the plan's declared logit count, all finite.
 //!
 //! A failure at any stage is a structured [`RegistryError::Load`]; the
 //! registry never publishes a backend that did not pass all four.
@@ -18,11 +20,11 @@
 use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc};
 
-use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
+use crate::bnn::graph::{CompiledNetwork, NetworkSpec};
 use crate::coordinator::{EngineBackend, InferBackend};
 use crate::dataset::synth;
 use crate::input::binarize::Scheme;
-use crate::runtime::RegistryManifest;
+use crate::runtime::{RegistryBatchSpec, RegistryManifest};
 use crate::util::tensorio::TensorFile;
 
 use super::RegistryError;
@@ -60,6 +62,8 @@ pub(crate) struct Loaded {
     pub scheme: String,
     pub checksum: u64,
     pub backend: Arc<dyn InferBackend>,
+    /// Per-model batch-policy overrides from the manifest entry.
+    pub batch: Option<RegistryBatchSpec>,
 }
 
 struct Job {
@@ -141,42 +145,60 @@ fn load_entry(
         )));
     }
     let tf = TensorFile::load(&path).map_err(load_err)?;
-    let backend: Arc<dyn InferBackend> = match spec.kind.as_str() {
-        "float" => {
-            Arc::new(EngineBackend::float(FloatNetwork::from_tensor_file(&tf).map_err(load_err)?, threads))
-        }
-        "bcnn" => {
-            let scheme = Scheme::parse(&spec.scheme).ok_or_else(|| {
-                RegistryError::Load(format!(
-                    "unknown scheme {:?} (none|rgb|gray|lbp)",
-                    spec.scheme
-                ))
-            })?;
-            Arc::new(EngineBackend::bcnn(
-                BcnnNetwork::from_tensor_file(&tf, scheme).map_err(load_err)?,
-                threads,
-            ))
-        }
-        other => {
-            return Err(RegistryError::Load(format!("unknown kind {other:?} (bcnn|float)")))
-        }
+    // the graph spec: manifest-declared `arch`, or the synthesized
+    // legacy topology for the entry's kind/scheme.  Compilation (shape
+    // inference + liveness planning) and weight binding both happen
+    // here, on the loader thread — serving threads only ever see the
+    // finished CompiledNetwork.
+    let graph_spec = match &spec.arch {
+        Some(arch) => NetworkSpec::from_json(arch).map_err(load_err)?,
+        None => match spec.kind.as_str() {
+            "float" => NetworkSpec::legacy_float(),
+            "bcnn" => {
+                let scheme = Scheme::parse(&spec.scheme).ok_or_else(|| {
+                    RegistryError::Load(format!(
+                        "unknown scheme {:?} (none|rgb|gray|lbp)",
+                        spec.scheme
+                    ))
+                })?;
+                NetworkSpec::legacy_bcnn(scheme)
+            }
+            other => {
+                return Err(RegistryError::Load(format!(
+                    "unknown kind {other:?} (bcnn|float; or declare an \"arch\")"
+                )))
+            }
+        },
     };
-    smoke_test(&*backend)?;
-    Ok(Loaded { kind: spec.kind, scheme: spec.scheme, checksum: got, backend })
+    let compiled = CompiledNetwork::from_tensor_file(&tf, &graph_spec).map_err(load_err)?;
+    let classes = compiled.num_classes();
+    let label = match spec.kind.as_str() {
+        "float" => "engine/float".to_string(),
+        kind => format!("engine/{kind}_{}", spec.scheme),
+    };
+    let backend: Arc<dyn InferBackend> =
+        Arc::new(EngineBackend::compiled(compiled, threads, label));
+    smoke_test(&*backend, classes)?;
+    Ok(Loaded { kind: spec.kind, scheme: spec.scheme, checksum: got, backend, batch: spec.batch })
 }
 
 /// One deterministic synthetic image through a freshly-built backend:
-/// publication is refused unless it answers `NUM_CLASSES` finite
-/// logits.  Catches weight/scheme mismatches and poisoned containers
-/// before any client request can reach them.
-pub(crate) fn smoke_test(backend: &dyn InferBackend) -> Result<(), RegistryError> {
+/// publication is refused unless it answers the PLAN's declared logit
+/// count, all finite (for file loads `classes` comes from the compiled
+/// plan).  Note the plan validator currently pins every graph to
+/// `NUM_CLASSES` — the protocol's fixed class set — so plan-declared
+/// and hard-coded coincide today; the parameter keeps this gate
+/// plan-driven for when that restriction is relaxed.  Catches
+/// weight/scheme mismatches and poisoned containers before any client
+/// request can reach them.
+pub(crate) fn smoke_test(backend: &dyn InferBackend, classes: usize) -> Result<(), RegistryError> {
     let img = synth::render_vehicle(0, synth::DEFAULT_SEED).image;
     let logits = backend
         .infer_batch(&img)
         .map_err(|e| RegistryError::Load(format!("smoke inference failed: {e}")))?;
-    if logits.len() != NUM_CLASSES || logits.iter().any(|v| !v.is_finite()) {
+    if logits.len() != classes || logits.iter().any(|v| !v.is_finite()) {
         return Err(RegistryError::Load(format!(
-            "smoke inference produced {} logits (want {NUM_CLASSES}, all finite)",
+            "smoke inference produced {} logits (want {classes}, all finite)",
             logits.len()
         )));
     }

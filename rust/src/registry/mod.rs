@@ -43,7 +43,9 @@ use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::bnn::network::NUM_CLASSES;
 use crate::coordinator::{BatchPolicy, InferBackend, Router};
+use crate::runtime::RegistryBatchSpec;
 use crate::util::json::{Json, JsonObj};
 use crate::util::threadpool::default_threads;
 
@@ -127,6 +129,10 @@ pub struct EntryMeta {
     /// FNV-1a 64 of the weight container; `None` for programmatic
     /// (non-file) publications.
     pub checksum: Option<u64>,
+    /// The EFFECTIVE batch policy this entry's lane was spawned with:
+    /// the registry default merged with the entry's `"batch"` manifest
+    /// overrides.  Reported per model by `list_models`.
+    pub policy: BatchPolicy,
 }
 
 /// Mutable registry state, guarded by one mutex and only ever touched
@@ -236,13 +242,15 @@ impl ModelRegistry {
         backend: Arc<dyn InferBackend>,
     ) -> Result<String, RegistryError> {
         validate_name(name)?;
-        loader::smoke_test(&*backend)?;
+        loader::smoke_test(&*backend, NUM_CLASSES)?;
+        let policy = self.router.default_policy();
         self.publish_validated(
             EntryMeta {
                 key: ModelKey { name: name.to_string(), version },
                 kind: kind.to_string(),
                 scheme: scheme.to_string(),
                 checksum,
+                policy,
             },
             backend,
         )
@@ -268,6 +276,7 @@ impl ModelRegistry {
                         kind: loaded.kind,
                         scheme: loaded.scheme,
                         checksum: Some(loaded.checksum),
+                        policy: effective_policy(self.router.default_policy(), loaded.batch),
                     },
                     loaded.backend,
                 )?;
@@ -296,7 +305,7 @@ impl ModelRegistry {
             return Err(RegistryError::Exists(lane_key));
         }
         self.router
-            .add_lane(lane_key.clone(), backend)
+            .add_lane_with_policy(lane_key.clone(), backend, meta.policy)
             .map_err(|e| RegistryError::Load(e.to_string()))?;
         let name = meta.key.name.clone();
         let version = meta.key.version;
@@ -446,6 +455,12 @@ impl ModelRegistry {
                 let serving = st.serving.get(name) == Some(version);
                 row.insert("serving", Json::Bool(serving));
                 row.insert("default", Json::Bool(st.default_name == *name && serving));
+                // the EFFECTIVE batch policy this entry's lane runs with
+                // (registry default merged with its manifest overrides)
+                let mut batch = JsonObj::new();
+                batch.insert("max_images", Json::from(meta.policy.max_batch));
+                batch.insert("executors", Json::from(meta.policy.executors));
+                row.insert("batch", Json::Obj(batch));
                 if let Ok(m) = self.router.metrics(&lane_key) {
                     row.insert("submitted", Json::from(m.submitted() as usize));
                     row.insert("completed", Json::from(m.completed() as usize));
@@ -474,6 +489,22 @@ impl ModelRegistry {
     pub fn shutdown(&self) {
         self.router.shutdown();
     }
+}
+
+/// Merge a manifest entry's `"batch"` overrides into the registry's
+/// shared policy (absent fields inherit; `max_wait` is never
+/// per-model).
+fn effective_policy(base: BatchPolicy, over: Option<RegistryBatchSpec>) -> BatchPolicy {
+    let mut policy = base;
+    if let Some(over) = over {
+        if let Some(max_images) = over.max_images {
+            policy.max_batch = max_images;
+        }
+        if let Some(executors) = over.executors {
+            policy.executors = executors;
+        }
+    }
+    policy
 }
 
 /// Builder for [`ModelRegistry`].
@@ -780,5 +811,52 @@ mod tests {
     fn load_model_without_dir_is_a_structured_error() {
         let r = registry();
         assert!(matches!(r.load_model("m", 1), Err(RegistryError::NoModelsDir)));
+    }
+
+    #[test]
+    fn per_model_batch_overrides_reach_the_lane_and_list_models() {
+        // one entry overrides the batcher depth + executor pool; its
+        // sibling inherits the registry default — both visible in
+        // list_models and in the actually-spawned executor count
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-batch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tf = synth_bcnn_tf(Scheme::Rgb, 400);
+        tf.save(dir.join("m.bcnt")).unwrap();
+        let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("m.bcnt")).unwrap()));
+        let manifest = format!(
+            r#"{{"models": [
+  {{"name": "hot", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "m.bcnt", "checksum": "{sum}",
+    "batch": {{"max_images": 8, "executors": 3}}}},
+  {{"name": "plain", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "m.bcnt", "checksum": "{sum}"}}
+]}}"#
+        );
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        let r = ModelRegistry::builder()
+            .policy(BatchPolicy { max_batch: 2, executors: 1, ..BatchPolicy::default() })
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        r.load_model("hot", 1).unwrap();
+        r.load_model("plain", 1).unwrap();
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        let batch_of = |i: usize| rows[i].get("batch").unwrap().clone();
+        // rows are name-sorted: hot@1 then plain@1
+        assert_eq!(rows[0].get("model").unwrap().as_str().unwrap(), "hot@1");
+        assert_eq!(batch_of(0).get("max_images").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(batch_of(0).get("executors").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(batch_of(1).get("max_images").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(batch_of(1).get("executors").unwrap().as_usize().unwrap(), 1);
+        // the override actually spawned that many executors
+        assert_eq!(r.router().lane_executors("hot@1").unwrap(), 3);
+        assert_eq!(r.router().lane_executors("plain@1").unwrap(), 1);
+        // and the overridden lane still serves correctly
+        let lane = r.resolve("hot").unwrap();
+        assert!(r.router().infer_blocking(&lane, synth_image(9)).unwrap().error.is_none());
+        r.shutdown();
     }
 }

@@ -225,6 +225,19 @@ impl Artifacts {
 // registry manifest (`registry.json`)
 // ---------------------------------------------------------------------------
 
+/// Per-model batch-policy overrides declared in `registry.json`
+/// (`"batch": {"max_images": N, "executors": N}`).  Absent fields fall
+/// back to the registry's shared [`crate::coordinator::BatchPolicy`],
+/// so one hot entry can run a deeper batcher or a wider executor pool
+/// without touching its neighbours.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RegistryBatchSpec {
+    /// Lane `max_batch` override (≥ 1).
+    pub max_images: Option<usize>,
+    /// Lane executor-pool width override (1..=64, the CLI's cap).
+    pub executors: Option<usize>,
+}
+
 /// One versioned, servable model in a registry directory.
 ///
 /// Unlike [`ModelSpec`] (which indexes AOT HLO artifacts for the PJRT
@@ -237,14 +250,25 @@ pub struct RegistryEntrySpec {
     pub name: String,
     pub version: u32,
     /// `"bcnn"` (packed engine) or `"float"` (full-precision baseline).
+    /// With an `arch` present the graph defines execution and `kind`
+    /// becomes descriptive metadata (any label is accepted).
     pub kind: String,
     /// Input-binarization scheme for `bcnn` entries
-    /// (`none|rgb|gray|lbp`); `"float"` for float entries.
+    /// (`none|rgb|gray|lbp`); `"float"` for float entries.  Metadata
+    /// only when `arch` is present (the graph carries its own scheme).
     pub scheme: String,
     pub weights_file: String,
     /// `fnv1a64:<16 hex digits>` over the raw bytes of `weights_file`
     /// (see `registry::fnv1a64`).  Verified on every load.
     pub checksum: String,
+    /// Optional layer-graph declaration (`"arch": [{"op": ...}, ...]`).
+    /// Absent → the loader synthesizes the legacy 2-conv/2-fc spec from
+    /// `kind`/`scheme`.  Stored as raw JSON here (structurally checked:
+    /// non-empty array of `{"op": ...}` objects); full shape inference
+    /// happens in `bnn::graph` at load time.
+    pub arch: Option<Json>,
+    /// Optional per-model batch-policy overrides.
+    pub batch: Option<RegistryBatchSpec>,
 }
 
 impl RegistryEntrySpec {
@@ -264,7 +288,9 @@ impl RegistryEntrySpec {
 ///  "models": [
 ///    {"name": "bcnn", "version": 1, "kind": "bcnn", "scheme": "rgb",
 ///     "weights_file": "weights_bcnn_rgb.bcnt",
-///     "checksum": "fnv1a64:89abcdef01234567"},
+///     "checksum": "fnv1a64:89abcdef01234567",
+///     "batch": {"max_images": 16, "executors": 2},         // optional
+///     "arch": [{"op": "binarize", "scheme": "rgb"}, ...]}, // optional
 ///    ...]}
 /// ```
 pub struct RegistryManifest {
@@ -301,6 +327,51 @@ impl RegistryManifest {
                     "version of {name:?} must be >= 1"
                 )));
             }
+            let arch = match m.get_opt("arch")? {
+                Some(a) => {
+                    let arr = a.as_arr()?;
+                    if arr.is_empty() {
+                        return Err(ArtifactError::BadManifest(format!(
+                            "arch of {name:?} is an empty array"
+                        )));
+                    }
+                    // structural check only; the graph compiler does full
+                    // shape inference when the entry actually loads
+                    for (oi, op) in arr.iter().enumerate() {
+                        op.get("op").and_then(|o| o.as_str()).map_err(|e| {
+                            ArtifactError::BadManifest(format!(
+                                "arch[{oi}] of {name:?} needs an \"op\" string: {e}"
+                            ))
+                        })?;
+                    }
+                    Some(a.clone())
+                }
+                None => None,
+            };
+            let batch = match m.get_opt("batch")? {
+                Some(b) => {
+                    let field = |key: &str| -> Result<Option<usize>, ArtifactError> {
+                        Ok(match b.get_opt(key)? {
+                            Some(v) => Some(v.as_usize()?),
+                            None => None,
+                        })
+                    };
+                    let max_images = field("max_images")?;
+                    let executors = field("executors")?;
+                    if max_images == Some(0) {
+                        return Err(ArtifactError::BadManifest(format!(
+                            "batch.max_images of {name:?} must be >= 1"
+                        )));
+                    }
+                    if matches!(executors, Some(e) if e == 0 || e > 64) {
+                        return Err(ArtifactError::BadManifest(format!(
+                            "batch.executors of {name:?} must be in 1..=64"
+                        )));
+                    }
+                    Some(RegistryBatchSpec { max_images, executors })
+                }
+                None => None,
+            };
             entries.push(RegistryEntrySpec {
                 name,
                 version,
@@ -308,6 +379,8 @@ impl RegistryManifest {
                 scheme: m.get("scheme")?.as_str()?.to_string(),
                 weights_file: m.get("weights_file")?.as_str()?.to_string(),
                 checksum: m.get("checksum")?.as_str()?.to_string(),
+                arch,
+                batch,
             });
         }
         Ok(Self { dir, default_model, entries })
@@ -431,6 +504,57 @@ mod tests {
         assert!(r.path_of(&e.weights_file).ends_with("weights_bcnn_rgb.bcnt"));
         let err = r.entry("bcnn", 9).unwrap_err();
         assert!(err.to_string().contains("bcnn@1"), "{err}");
+    }
+
+    #[test]
+    fn registry_manifest_parses_arch_and_batch_extensions() {
+        let body = r#"{"models":[
+          {"name": "deep", "version": 1, "kind": "bcnn", "scheme": "gray",
+           "weights_file": "deep.bcnt", "checksum": "fnv1a64:0000000000000001",
+           "batch": {"max_images": 16, "executors": 2},
+           "arch": [{"op": "binarize", "scheme": "gray"},
+                    {"op": "conv_bin", "k": 5, "out": 32}]},
+          {"name": "plain", "version": 1, "kind": "bcnn", "scheme": "rgb",
+           "weights_file": "plain.bcnt", "checksum": "fnv1a64:0000000000000002"}
+        ]}"#;
+        let dir = write_registry(body, "arch-batch");
+        let r = RegistryManifest::load(&dir).unwrap();
+        let deep = r.entry("deep", 1).unwrap();
+        assert_eq!(
+            deep.batch,
+            Some(RegistryBatchSpec { max_images: Some(16), executors: Some(2) })
+        );
+        let arch = deep.arch.as_ref().unwrap().as_arr().unwrap();
+        assert_eq!(arch.len(), 2);
+        assert_eq!(arch[1].get("op").unwrap().as_str().unwrap(), "conv_bin");
+        // absent extensions stay absent (legacy entries untouched)
+        let plain = r.entry("plain", 1).unwrap();
+        assert!(plain.arch.is_none() && plain.batch.is_none());
+    }
+
+    #[test]
+    fn registry_manifest_rejects_bad_arch_and_batch() {
+        let entry = |extra: &str| {
+            format!(
+                r#"{{"models":[{{"name": "m", "version": 1, "kind": "bcnn",
+                 "scheme": "rgb", "weights_file": "w", "checksum": "c"{extra}}}]}}"#
+            )
+        };
+        for (tag, extra) in [
+            ("empty-arch", r#", "arch": []"#),
+            ("opless-arch", r#", "arch": [{"k": 5}]"#),
+            ("arch-not-array", r#", "arch": {"op": "orpool"}"#),
+            ("zero-batch", r#", "batch": {"max_images": 0}"#),
+            ("zero-executors", r#", "batch": {"executors": 0}"#),
+            ("huge-executors", r#", "batch": {"executors": 65}"#),
+        ] {
+            let dir = write_registry(&entry(extra), tag);
+            let err = RegistryManifest::load(&dir).unwrap_err();
+            assert!(
+                matches!(err, ArtifactError::BadManifest(_) | ArtifactError::Json(_)),
+                "{tag}: {err}"
+            );
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod client;
 pub mod xla_stub;
 
 pub use artifact::{
-    ArtifactError, Artifacts, LayerSpec, ModelSpec, RegistryEntrySpec, RegistryManifest,
+    ArtifactError, Artifacts, LayerSpec, ModelSpec, RegistryBatchSpec, RegistryEntrySpec,
+    RegistryManifest,
 };
 pub use client::{ModelRuntime, RuntimeError};

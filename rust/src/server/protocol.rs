@@ -12,9 +12,9 @@
 //!     {"op": "stats"}
 //!     {"op": "variants"}
 //!     {"op": "ping"}
-//!     {"op": "load_model", "name": "bcnn", "version": 2}
-//!     {"op": "unload_model", "name": "bcnn", "version": 1}
-//!     {"op": "set_default", "name": "bcnn", "version": 2}
+//!     {"op": "load_model", "name": "bcnn", "version": 2, "token": "s3cret"}
+//!     {"op": "unload_model", "name": "bcnn", "version": 1, "token": "s3cret"}
+//!     {"op": "set_default", "name": "bcnn", "version": 2, "token": "s3cret"}
 //!     {"op": "list_models"}
 //! ```
 //!
@@ -23,7 +23,11 @@
 //! version, `name@version` pins an exact entry.  Every successful
 //! classification reports the `name@version` that served it.  The four
 //! admin ops drive the hot-swap lifecycle (load → validate → publish →
-//! retire) in [`crate::registry`].
+//! retire) in [`crate::registry`].  When the server was started with
+//! `--admin-token`, the three STATE-CHANGING admin ops (`load_model`,
+//! `unload_model`, `set_default`) must carry a matching `"token"`
+//! field; mismatches are refused and counted in `server.admin_denied`
+//! (`list_models` stays read-only-open).
 //!
 //! Responses (one line each; a stream request produces several lines):
 //!
@@ -33,8 +37,9 @@
 //!     {"ok": true, "results": [<classify responses, one per image>]}
 //!     {"ok": true, "stream": true, "seq": 3, "id": 41, ...classify fields}
 //!     {"ok": false, "stream": true, "seq": 1, "id": 39, "error": "..."}
-//!     {"ok": true, "stream_end": true, "count": 4, "completed": 3,
-//!      "failed": 1, "results": [{"seq": 0, "id": 38, "ok": true}, ...]}
+//!     {"ok": true, "stream_end": true, "model": "bcnn@2", "count": 4,
+//!      "completed": 3, "failed": 1,
+//!      "results": [{"seq": 0, "id": 38, "ok": true}, ...]}
 //!     {"ok": true, "stats": {...}} / {"ok": true, "variants": [...]}
 //!     {"ok": false, "error": "..."}
 //! ```
@@ -77,13 +82,14 @@ pub enum Request {
     Variants,
     Ping,
     /// Admin: load + validate + publish `name@version` from the models
-    /// directory (background loader; serving never blocks).
-    LoadModel { name: String, version: u32 },
+    /// directory (background loader; serving never blocks).  `token`
+    /// must match the server's `--admin-token` when one is configured.
+    LoadModel { name: String, version: u32, token: Option<String> },
     /// Admin: retire `name@version` (graceful drain).
-    UnloadModel { name: String, version: u32 },
+    UnloadModel { name: String, version: u32, token: Option<String> },
     /// Admin: make `name` (at `version`, default its highest loaded
     /// one) the serving target for bare-`name` and default routing.
-    SetDefault { name: String, version: Option<u32> },
+    SetDefault { name: String, version: Option<u32>, token: Option<String> },
     /// Admin: list resident entries with identity + per-model counters.
     ListModels,
 }
@@ -110,8 +116,17 @@ pub enum Response {
     /// index (`seq`) and request id, tagged `"stream": true` on the wire.
     StreamItem { seq: usize, id: u64, body: Box<Response> },
     /// Terminal frame of a stream session: per-image status in
-    /// submission order, tagged `"stream_end": true` on the wire.
-    StreamEnd { count: usize, completed: usize, failed: usize, results: Vec<StreamStatus> },
+    /// submission order, tagged `"stream_end": true` on the wire, and —
+    /// like every per-image frame — naming the serving `name@version`
+    /// (`model` is empty when the stream's model reference never
+    /// resolved).
+    StreamEnd {
+        model: String,
+        count: usize,
+        completed: usize,
+        failed: usize,
+        results: Vec<StreamStatus>,
+    },
     Stats(Json),
     Variants(Vec<String>),
     Pong,
@@ -153,6 +168,15 @@ fn finite_pixel(v: &Json) -> Result<f32, String> {
 /// Required `name` field of an admin op.
 fn name_field(j: &Json) -> Result<String, String> {
     Ok(j.get("name").and_then(|n| n.as_str()).map_err(|e| e.to_string())?.to_string())
+}
+
+/// Optional `token` field of a state-changing admin op (checked against
+/// the server's `--admin-token` when one is configured).
+fn token_field(j: &Json) -> Result<Option<String>, String> {
+    match j.get_opt("token").map_err(|e| e.to_string())? {
+        Some(t) => Ok(Some(t.as_str().map_err(|e| e.to_string())?.to_string())),
+        None => Ok(None),
+    }
 }
 
 /// Required `version` field of an admin op (u32, >= 1).
@@ -236,18 +260,22 @@ impl Request {
             "stats" => Ok(Request::Stats),
             "variants" => Ok(Request::Variants),
             "ping" => Ok(Request::Ping),
-            "load_model" => {
-                Ok(Request::LoadModel { name: name_field(&j)?, version: version_field(&j)? })
-            }
-            "unload_model" => {
-                Ok(Request::UnloadModel { name: name_field(&j)?, version: version_field(&j)? })
-            }
+            "load_model" => Ok(Request::LoadModel {
+                name: name_field(&j)?,
+                version: version_field(&j)?,
+                token: token_field(&j)?,
+            }),
+            "unload_model" => Ok(Request::UnloadModel {
+                name: name_field(&j)?,
+                version: version_field(&j)?,
+                token: token_field(&j)?,
+            }),
             "set_default" => {
                 let version = match j.get_opt("version").map_err(|e| e.to_string())? {
                     None => None,
                     Some(_) => Some(version_field(&j)?),
                 };
-                Ok(Request::SetDefault { name: name_field(&j)?, version })
+                Ok(Request::SetDefault { name: name_field(&j)?, version, token: token_field(&j)? })
             }
             "list_models" => Ok(Request::ListModels),
             other => Err(format!("unknown op {other:?}")),
@@ -286,9 +314,10 @@ impl Response {
                 obj.insert("seq", Json::from(*seq));
                 obj.insert("id", Json::from(*id as usize));
             }
-            Response::StreamEnd { count, completed, failed, results } => {
+            Response::StreamEnd { model, count, completed, failed, results } => {
                 obj.insert("ok", Json::Bool(true));
                 obj.insert("stream_end", Json::Bool(true));
+                obj.insert("model", Json::from(model.as_str()));
                 obj.insert("count", Json::from(*count));
                 obj.insert("completed", Json::from(*completed));
                 obj.insert("failed", Json::from(*failed));
@@ -379,21 +408,37 @@ mod tests {
     fn parse_admin_ops() {
         assert_eq!(
             Request::parse(r#"{"op":"load_model","name":"bcnn","version":2}"#).unwrap(),
-            Request::LoadModel { name: "bcnn".into(), version: 2 }
+            Request::LoadModel { name: "bcnn".into(), version: 2, token: None }
         );
         assert_eq!(
             Request::parse(r#"{"op":"unload_model","name":"bcnn","version":1}"#).unwrap(),
-            Request::UnloadModel { name: "bcnn".into(), version: 1 }
+            Request::UnloadModel { name: "bcnn".into(), version: 1, token: None }
         );
         assert_eq!(
             Request::parse(r#"{"op":"set_default","name":"bcnn","version":2}"#).unwrap(),
-            Request::SetDefault { name: "bcnn".into(), version: Some(2) }
+            Request::SetDefault { name: "bcnn".into(), version: Some(2), token: None }
         );
         assert_eq!(
             Request::parse(r#"{"op":"set_default","name":"bcnn"}"#).unwrap(),
-            Request::SetDefault { name: "bcnn".into(), version: None }
+            Request::SetDefault { name: "bcnn".into(), version: None, token: None }
         );
         assert_eq!(Request::parse(r#"{"op":"list_models"}"#).unwrap(), Request::ListModels);
+    }
+
+    #[test]
+    fn parse_admin_token_field() {
+        assert_eq!(
+            Request::parse(r#"{"op":"load_model","name":"b","version":2,"token":"s3cret"}"#)
+                .unwrap(),
+            Request::LoadModel { name: "b".into(), version: 2, token: Some("s3cret".into()) }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"set_default","name":"b","token":"t"}"#).unwrap(),
+            Request::SetDefault { name: "b".into(), version: None, token: Some("t".into()) }
+        );
+        // a non-string token is malformed, not silently ignored
+        assert!(Request::parse(r#"{"op":"load_model","name":"b","version":2,"token":7}"#)
+            .is_err());
     }
 
     #[test]
@@ -535,6 +580,7 @@ mod tests {
     #[test]
     fn stream_end_frame_summarizes_in_submission_order() {
         let end = Response::StreamEnd {
+            model: "bcnn@2".into(),
             count: 2,
             completed: 1,
             failed: 1,
@@ -546,6 +592,9 @@ mod tests {
         let j = Json::parse(&end.to_json_line()).unwrap();
         assert!(j.get("ok").unwrap().as_bool().unwrap());
         assert!(j.get("stream_end").unwrap().as_bool().unwrap());
+        // regression (PR 4 added `model` to Classified only): the
+        // terminal summary names the serving entry like per-image frames
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "bcnn@2");
         assert_eq!(j.get("count").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 1);

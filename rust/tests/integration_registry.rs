@@ -10,7 +10,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use bcnn::bnn::network::tests_support::{synth_bcnn_tf, synth_float_tf};
+use bcnn::bnn::graph::{CompiledNetwork, NetworkSpec};
+use bcnn::bnn::network::tests_support::{synth_bcnn_tf, synth_float_tf, synth_tf_for_spec};
 use bcnn::coordinator::BatchPolicy;
 use bcnn::input::binarize::Scheme;
 use bcnn::registry::{fnv1a64, format_checksum, ModelRegistry};
@@ -46,6 +47,13 @@ fn write_models_dir(tag: &str) -> PathBuf {
 /// Start a server with bcnn@1 + float@1 resident (bcnn default);
 /// bcnn@2 stays on disk for the hot load.
 fn start_server(dir: &Path) -> (std::net::SocketAddr, Arc<AtomicBool>) {
+    start_server_with(dir, None)
+}
+
+fn start_server_with(
+    dir: &Path,
+    admin_token: Option<&str>,
+) -> (std::net::SocketAddr, Arc<AtomicBool>) {
     let registry = ModelRegistry::builder()
         .policy(BatchPolicy {
             max_batch: 4,
@@ -59,10 +67,13 @@ fn start_server(dir: &Path) -> (std::net::SocketAddr, Arc<AtomicBool>) {
     registry.load_model("bcnn", 1).unwrap();
     registry.load_model("float", 1).unwrap();
     registry.set_default("bcnn", Some(1)).unwrap();
-    let server = Arc::new(Server::new(
-        registry,
-        vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
-    ));
+    let server = Arc::new(
+        Server::new(
+            registry,
+            vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+        )
+        .with_admin_token(admin_token.map(str::to_string)),
+    );
     let stop = Arc::new(AtomicBool::new(false));
     let addr = Arc::clone(&server).serve("127.0.0.1:0", 4, Arc::clone(&stop)).unwrap();
     (addr, stop)
@@ -257,5 +268,151 @@ fn repeated_swaps_under_continuous_streams_never_fail_a_request() {
 
     flipping.store(false, Ordering::Relaxed);
     admin.join().unwrap();
+    stop.store(true, Ordering::Relaxed);
+}
+
+/// A topology the legacy fixed pipeline could never run: three packed
+/// conv/pool stages (96 → 48 → 24 → 12 spatial) before the FC tail.
+const DEEP_ARCH: &str = r#"[
+    {"op": "binarize", "scheme": "gray"},
+    {"op": "conv_bin", "k": 5, "out": 32},
+    {"op": "threshold"},
+    {"op": "orpool"},
+    {"op": "conv_bin", "k": 3, "out": 32},
+    {"op": "threshold"},
+    {"op": "orpool"},
+    {"op": "conv_bin", "k": 3, "out": 32},
+    {"op": "threshold"},
+    {"op": "orpool"},
+    {"op": "fc_bin", "out": 64},
+    {"op": "threshold"},
+    {"op": "fc_float", "out": 4}
+]"#;
+
+#[test]
+fn manifest_declared_arch_loads_smoke_infers_and_serves_end_to_end() {
+    // THE acceptance test for the layer-graph tentpole: a registry
+    // manifest carrying a non-default `arch` (3 convs) loads through the
+    // background loader (checksum + plan compile + weight bind + smoke
+    // inference), serves `classify_batch` over TCP, and answers logits
+    // bit-identical to the compiled plan run in-process.
+    let dir = std::env::temp_dir()
+        .join(format!("bcnn-reg-arch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = NetworkSpec::from_json(&Json::parse(DEEP_ARCH).unwrap()).unwrap();
+    let tf = synth_tf_for_spec(&spec, 9001);
+    tf.save(dir.join("deep.bcnt")).unwrap();
+    // the wire servers also need the legacy entries start_server loads
+    synth_bcnn_tf(Scheme::Rgb, 9002).save(dir.join("bcnn_v1.bcnt")).unwrap();
+    synth_float_tf(9003).save(dir.join("float_v1.bcnt")).unwrap();
+    let sum = |f: &str| format_checksum(fnv1a64(&std::fs::read(dir.join(f)).unwrap()));
+    let manifest = format!(
+        r#"{{"version": 1, "default": "bcnn", "models": [
+  {{"name": "bcnn", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "bcnn_v1.bcnt", "checksum": "{}"}},
+  {{"name": "float", "version": 1, "kind": "float", "scheme": "float",
+    "weights_file": "float_v1.bcnt", "checksum": "{}"}},
+  {{"name": "deep", "version": 1, "kind": "bcnn", "scheme": "gray",
+    "weights_file": "deep.bcnt", "checksum": "{}",
+    "batch": {{"max_images": 8, "executors": 2}},
+    "arch": {DEEP_ARCH}}}
+]}}"#,
+        sum("bcnn_v1.bcnt"),
+        sum("float_v1.bcnt"),
+        sum("deep.bcnt"),
+    );
+    std::fs::write(dir.join("registry.json"), manifest).unwrap();
+
+    let (addr, stop) = start_server(&dir);
+    let mut c = Client::connect(addr);
+    // hot-load the arch entry through the admin plane
+    let r = c.roundtrip(r#"{"op":"load_model","name":"deep","version":1}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "deep@1");
+
+    // classify_batch through the deep entry's own lane
+    let img_a = vec!["0.5"; 96 * 96 * 3].join(",");
+    let img_b = vec!["0.25"; 96 * 96 * 3].join(",");
+    let r = c.roundtrip(&format!(
+        r#"{{"op":"classify_batch","model":"deep","images":[[{img_a}],[{img_b}]]}}"#
+    ));
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    let results = r.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2);
+
+    // the wire logits match the compiled plan bit-for-bit (f32 → JSON
+    // shortest-roundtrip f64 → f32 is lossless)
+    let compiled = CompiledNetwork::from_tensor_file(&tf, &spec).unwrap();
+    let mut payload = vec![0.5f32; 96 * 96 * 3];
+    payload.extend(vec![0.25f32; 96 * 96 * 3]);
+    let want = compiled.infer_batch(&payload).unwrap();
+    for (i, row) in results.iter().enumerate() {
+        assert!(row.get("ok").unwrap().as_bool().unwrap(), "{row}");
+        assert_eq!(row.get("model").unwrap().as_str().unwrap(), "deep@1");
+        let logits: Vec<f32> = row
+            .get("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(logits, want[i].to_vec(), "image {i} drifted from the compiled plan");
+    }
+
+    // list_models reports the entry with its effective batch overrides
+    let r = c.roundtrip(r#"{"op":"list_models"}"#);
+    let rows = r.get("models").unwrap().as_arr().unwrap();
+    let deep = rows
+        .iter()
+        .find(|row| row.get("model").unwrap().as_str().unwrap() == "deep@1")
+        .expect("deep@1 listed");
+    assert_eq!(deep.get("scheme").unwrap().as_str().unwrap(), "gray");
+    let batch = deep.get("batch").unwrap();
+    assert_eq!(batch.get("max_images").unwrap().as_usize().unwrap(), 8);
+    assert_eq!(batch.get("executors").unwrap().as_usize().unwrap(), 2);
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn admin_token_gates_the_wire_admin_plane() {
+    let dir = write_models_dir("token");
+    let (addr, stop) = start_server_with(&dir, Some("hunter2"));
+    let mut c = Client::connect(addr);
+
+    // no token / wrong token: refused, default untouched
+    let r = c.roundtrip(r#"{"op":"load_model","name":"bcnn","version":2}"#);
+    assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("token"), "{r}");
+    let r = c.roundtrip(r#"{"op":"set_default","name":"float","token":"wrong"}"#);
+    assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+
+    // classification and the read-only admin ops stay open
+    let img = one_image_json();
+    let r = c.roundtrip(&format!(r#"{{"op":"classify","pixels":{img}}}"#));
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@1", "{r}");
+    let r = c.roundtrip(r#"{"op":"list_models"}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+
+    // the right token drives the full lifecycle
+    let r = c.roundtrip(r#"{"op":"load_model","name":"bcnn","version":2,"token":"hunter2"}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    let r = c.roundtrip(r#"{"op":"set_default","name":"bcnn","version":2,"token":"hunter2"}"#);
+    assert_eq!(r.get("model").unwrap().as_str().unwrap(), "bcnn@2", "{r}");
+    let r = c.roundtrip(r#"{"op":"unload_model","name":"bcnn","version":1,"token":"hunter2"}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+
+    // rejections were counted for the operator
+    let r = c.roundtrip(r#"{"op":"stats"}"#);
+    let denied = r
+        .get("stats")
+        .unwrap()
+        .get("server")
+        .unwrap()
+        .get("admin_denied")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(denied, 2, "{r}");
     stop.store(true, Ordering::Relaxed);
 }

@@ -189,3 +189,30 @@ fn engine_accuracy_on_testset_is_sane() {
         assert!(correct * 2 > n, "trained rgb accuracy {}/{n} below 50%", correct);
     }
 }
+
+#[test]
+fn legacy_containers_compile_through_the_layer_graph_planner() {
+    // artifacts-independent: the synthesized legacy specs must plan the
+    // exact legacy weight names (so every aot.py container keeps
+    // loading) with a liveness-sized arena far below the 11 hand-named
+    // roles the pre-graph ForwardScratch carried.
+    use bcnn::bnn::graph::NetworkSpec;
+    for scheme in Scheme::ALL {
+        let plan = NetworkSpec::legacy_bcnn(scheme).plan().unwrap();
+        assert!(
+            plan.num_buffers() <= 5,
+            "{scheme:?}: planned {} slots, expected <= 5",
+            plan.num_buffers()
+        );
+        assert!(plan.weights.iter().any(|w| w.name == "wfc1_packed"));
+    }
+    let plan = NetworkSpec::legacy_float().plan().unwrap();
+    assert_eq!(plan.nbufs, [3, 0, 0]);
+    // when real artifacts exist, the compiled plan must bind them
+    let Some(a) = artifacts() else { return };
+    for scheme in Scheme::ALL {
+        let tf_path = a.path_of(&format!("weights_bcnn_{}.bcnt", scheme.name()));
+        let net = BcnnNetwork::load(&tf_path, scheme).unwrap();
+        assert_eq!(net.compiled().plan().classes, 4);
+    }
+}

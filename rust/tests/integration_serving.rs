@@ -649,6 +649,58 @@ fn stalled_client_is_disconnected_by_the_write_deadline() {
 }
 
 #[test]
+fn stream_end_summary_names_the_serving_model() {
+    // regression (ISSUE 5 satellite): PR 4 added the serving
+    // `name@version` to per-image `Classified` frames only — the
+    // terminal `stream_end` summary must carry it too
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let server = Arc::new(Server::new(engine_registry(4), classes()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let img = vec!["0.5"; 96 * 96 * 3].join(",");
+    let req =
+        format!("{{\"op\":\"classify_batch_stream\",\"model\":\"lbp\",\"images\":[[{img}],[{img}]]}}\n");
+    conn.write_all(req.as_bytes()).unwrap();
+    let mut line = String::new();
+    for _ in 0..2 {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let frame = bcnn::util::json::Json::parse(&line).unwrap();
+        assert_eq!(frame.get("model").unwrap().as_str().unwrap(), "lbp@1", "{line}");
+    }
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let end = bcnn::util::json::Json::parse(&line).unwrap();
+    assert!(end.get("stream_end").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(
+        end.get("model").unwrap().as_str().unwrap(),
+        "lbp@1",
+        "stream_end must name the serving entry like per-image frames: {line}"
+    );
+
+    // an unresolvable reference streams per-image failures and an EMPTY
+    // model in the summary (nothing served the group)
+    let req = format!(
+        "{{\"op\":\"classify_batch_stream\",\"model\":\"ghost\",\"images\":[[{img}]]}}\n"
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap(); // the per-image failure frame
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let end = bcnn::util::json::Json::parse(&line).unwrap();
+    assert!(end.get("stream_end").unwrap().as_bool().unwrap(), "{line}");
+    assert_eq!(end.get("model").unwrap().as_str().unwrap(), "", "{line}");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
 fn pjrt_backend_serves_through_router() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
