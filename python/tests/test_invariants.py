@@ -1,0 +1,163 @@
+"""The Rust tree's source invariants hold — and the checker can fail.
+
+Thin pytest wrapper around scripts/check_invariants.py (so the lint
+suite runs with the regular suite as well as in its dedicated CI jobs),
+plus negative tests: each rule is pointed at a deliberately-broken tmp
+tree and must report the violation — a guard that cannot fail proves
+nothing.
+"""
+
+import importlib.util
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+CHECKER = REPO / "scripts" / "check_invariants.py"
+
+
+def load_checker():
+    spec = importlib.util.spec_from_file_location("check_invariants", CHECKER)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def write_rs(root: Path, rel: str, text: str) -> None:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+
+
+def test_repo_passes_all_invariants():
+    proc = subprocess.run(
+        [sys.executable, str(CHECKER)], capture_output=True, text=True, check=False
+    )
+    assert proc.returncode == 0, f"invariant violations:\n{proc.stdout}{proc.stderr}"
+    assert "ok:" in proc.stdout
+
+
+def test_missing_write_coverage_doc_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/kern.rs",
+        "/// Some doc without the contract line.\n"
+        "pub fn frob_into(out: &mut [u32]) { out[0] = 1; }\n"
+        "#[cfg(test)]\n"
+        "mod tests { fn t() { super::frob_into(&mut [0]); } }\n",
+    )
+    errors = mod.check_write_coverage(tmp_path)
+    assert len(errors) == 1
+    assert "frob_into" in errors[0] and "Write coverage" in errors[0]
+
+
+def test_untested_into_kernel_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/kern.rs",
+        "/// Write coverage: assigns every element of `out`.\n"
+        "pub fn frob_into(out: &mut [u32]) { out[0] = 1; }\n",
+    )
+    errors = mod.check_write_coverage(tmp_path)
+    assert len(errors) == 1
+    assert "never referenced" in errors[0]
+
+
+def test_compliant_into_kernel_passes(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/kern.rs",
+        "/// Write coverage: assigns every element of `out`.\n"
+        "#[inline]\n"
+        "pub fn frob_into(out: &mut [u32]) { out[0] = 1; }\n"
+        "#[cfg(test)]\n"
+        "mod tests { fn t() { super::frob_into(&mut [0]); } }\n",
+    )
+    assert mod.check_write_coverage(tmp_path) == []
+
+
+def test_bare_unwrap_in_serving_plane_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/coordinator/w.rs",
+        "pub fn f(v: Vec<u32>) -> u32 { *v.first().unwrap() }\n",
+    )
+    errors = mod.check_panic_policy(tmp_path)
+    assert len(errors) == 1
+    assert "bare .unwrap()" in errors[0]
+
+
+def test_lock_poisoning_unwrap_is_allowed(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/registry/w.rs",
+        "pub fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n",
+    )
+    assert mod.check_panic_policy(tmp_path) == []
+
+
+def test_unwrap_in_cfg_test_region_is_exempt(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/w.rs",
+        "pub fn f() {}\n"
+        "#[cfg(test)]\n"
+        "mod tests { fn t() { Some(1).unwrap(); } }\n",
+    )
+    assert mod.check_panic_policy(tmp_path) == []
+
+
+def test_empty_expect_message_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/w.rs",
+        'pub fn f() { Some(1).expect(""); }\n',
+    )
+    errors = mod.check_panic_policy(tmp_path)
+    assert len(errors) == 1
+    assert "non-empty" in errors[0]
+
+
+def test_hand_rolled_error_enum_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/util/e.rs",
+        "pub enum FrobError { Bad }\n"
+        "impl std::fmt::Display for FrobError { /* hand-rolled */ }\n",
+    )
+    errors = mod.check_error_enums(tmp_path)
+    assert len(errors) == 1
+    assert "FrobError" in errors[0]
+
+
+def test_macro_backed_error_enum_passes(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/util/e.rs",
+        "pub enum FrobError { Bad }\n"
+        'crate::error_enum_impls!(FrobError { FrobError::Bad => ("bad") });\n',
+    )
+    assert mod.check_error_enums(tmp_path) == []
+
+
+def test_main_reports_nonzero_on_broken_tree(tmp_path, monkeypatch):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/kern.rs",
+        "pub fn frob_into(out: &mut [u32]) { out[0] = 1; }\n",
+    )
+    write_rs(tmp_path, "rust/src/server/w.rs", "pub fn f() { Some(1).unwrap(); }\n")
+    write_rs(tmp_path, "rust/src/coordinator/lib.rs", "pub fn g() {}\n")
+    write_rs(tmp_path, "rust/src/registry/lib.rs", "pub fn h() {}\n")
+    monkeypatch.setattr(mod, "REPO", tmp_path)
+    assert mod.main() == 1

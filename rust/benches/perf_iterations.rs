@@ -1,8 +1,10 @@
 //! §Perf iteration log (EXPERIMENTS.md): each optimization step kept in
 //! benchable form so before/after is reproducible.
 //!
-//!   bgemm v0 — per-(m,n) slicing with alignment checks (the first
-//!              implementation; `as_u64_chunks` per weight row per patch)
+//!   bgemm v0 — per-(m,n) slicing, u64 pairing per weight row per patch
+//!              (the first implementation; its original pointer-cast
+//!              widening was replaced by the same safe shift+or fuse the
+//!              library now uses — identical loop structure and counts)
 //!   bgemm v1 — operands widened to padded u64 rows once, fixed-lane
 //!              inner kernels (shipped in bnn::bgemm)
 //!   pack  v0 — patch scratch buffer + div/mod packing (two-pass; kept
@@ -11,7 +13,6 @@
 //!
 //!     cargo bench --bench perf_iterations
 
-use bcnn::bnn::packing::as_u64_chunks;
 use bcnn::bnn::{bgemm, im2col};
 use bcnn::util::rng::Xoshiro256;
 use bcnn::util::timer::{bench_for, fmt_ns};
@@ -19,29 +20,25 @@ use std::time::Duration;
 
 const MIN_TIME: Duration = Duration::from_millis(400);
 
-/// The original bgemm inner loop (v0), verbatim.
+/// The original bgemm inner loop (v0): per-(m,n) row slicing with u64
+/// pairing done afresh for every row pair.
 fn bgemm_v0(a: &[u32], wt: &[u32], m: usize, n: usize, kw: usize, d_real: usize) -> Vec<i32> {
+    let fuse = |hi: u32, lo: u32| (u64::from(hi) << 32) | u64::from(lo);
     let mut out = vec![0i32; m * n];
     let d = d_real as i32;
     for mi in 0..m {
         let arow = &a[mi * kw..(mi + 1) * kw];
         let orow = &mut out[mi * n..(mi + 1) * n];
-        let (a64, a_tail) = as_u64_chunks(arow);
         for ni in 0..n {
             let wrow = &wt[ni * kw..(ni + 1) * kw];
-            let (w64, w_tail) = as_u64_chunks(wrow);
-            let mut pc: u32 = 0;
-            if a64.len() == w64.len() {
-                for (&x, &y) in a64.iter().zip(w64) {
-                    pc += (x ^ y).count_ones();
-                }
-                for (&x, &y) in a_tail.iter().zip(w_tail) {
-                    pc += (x ^ y).count_ones();
-                }
-            } else {
-                for (&x, &y) in arow.iter().zip(wrow) {
-                    pc += (x ^ y).count_ones();
-                }
+            let a2 = arow.chunks_exact(2);
+            let w2 = wrow.chunks_exact(2);
+            let mut pc: u32 = match (a2.remainder(), w2.remainder()) {
+                (&[x], &[y]) => (x ^ y).count_ones(),
+                _ => 0,
+            };
+            for (p, q) in a2.zip(w2) {
+                pc += (fuse(p[0], p[1]) ^ fuse(q[0], q[1])).count_ones();
             }
             orow[ni] = d - 2 * pc as i32;
         }

@@ -65,6 +65,10 @@ fn widen_row(src: &[u32], dst: &mut [u64]) {
 /// is widened once (n·L u64s — L1-resident for this network); each A row
 /// is widened into a reused scratch row.  Fixed-lane kernels let the
 /// compiler fully unroll conv1 (L=1/2) and conv2 (L=13).
+///
+/// Write coverage: assigns every element of `out` (len M·N) exactly
+/// once; prior contents are never read, so a dirty scratch buffer is
+/// safe to pass.
 pub fn bgemm_into(
     a: &[u32],
     wt: &[u32],

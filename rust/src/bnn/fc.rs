@@ -7,7 +7,7 @@
 //! chunked accumulation below (which also helps ILP: four independent
 //! accumulators).
 
-use super::packing::as_u64_chunks;
+use super::packing::fuse64;
 
 /// Packed FC: `x` (KW,) u32, `wt` (L, KW) u32 -> (L,) i32 counts.
 pub fn fc_packed(x: &[u32], wt: &[u32], l: usize, kw: usize, d_real: usize) -> Vec<i32> {
@@ -17,6 +17,9 @@ pub fn fc_packed(x: &[u32], wt: &[u32], l: usize, kw: usize, d_real: usize) -> V
 }
 
 /// Allocation-free packed FC for the serving hot path.
+///
+/// Write coverage: assigns every element of `out` (len L) exactly once;
+/// prior contents are never read.
 pub fn fc_packed_into(
     x: &[u32],
     wt: &[u32],
@@ -29,33 +32,25 @@ pub fn fc_packed_into(
     assert_eq!(wt.len(), l * kw);
     assert_eq!(out.len(), l);
     let d = d_real as i32;
-    let (x64, x_tail) = as_u64_chunks(x);
     for li in 0..l {
         let wrow = &wt[li * kw..(li + 1) * kw];
-        let (w64, w_tail) = as_u64_chunks(wrow);
-        let mut pc: u32 = 0;
-        if x64.len() == w64.len() {
-            // 4-way unrolled accumulation (the "segments" of Section 3.2)
-            let mut acc = [0u32; 4];
-            let chunks = x64.len() / 4 * 4;
-            for i in (0..chunks).step_by(4) {
-                acc[0] += (x64[i] ^ w64[i]).count_ones();
-                acc[1] += (x64[i + 1] ^ w64[i + 1]).count_ones();
-                acc[2] += (x64[i + 2] ^ w64[i + 2]).count_ones();
-                acc[3] += (x64[i + 3] ^ w64[i + 3]).count_ones();
-            }
-            for i in chunks..x64.len() {
-                acc[0] += (x64[i] ^ w64[i]).count_ones();
-            }
-            for (&a, &b) in x_tail.iter().zip(w_tail) {
-                acc[0] += (a ^ b).count_ones();
-            }
-            pc = acc.iter().sum();
-        } else {
-            for (&a, &b) in x.iter().zip(wrow) {
-                pc += (a ^ b).count_ones();
-            }
+        // 4-way unrolled u64 accumulation (the "segments" of Section
+        // 3.2): eight u32 words — four fused u64 pairs — per iteration,
+        // on four independent accumulators for ILP
+        let x8 = x.chunks_exact(8);
+        let w8 = wrow.chunks_exact(8);
+        let (xr, wr) = (x8.remainder(), w8.remainder());
+        let mut acc = [0u32; 4];
+        for (p, q) in x8.zip(w8) {
+            acc[0] += (fuse64(p[0], p[1]) ^ fuse64(q[0], q[1])).count_ones();
+            acc[1] += (fuse64(p[2], p[3]) ^ fuse64(q[2], q[3])).count_ones();
+            acc[2] += (fuse64(p[4], p[5]) ^ fuse64(q[4], q[5])).count_ones();
+            acc[3] += (fuse64(p[6], p[7]) ^ fuse64(q[6], q[7])).count_ones();
         }
+        for (&a, &b) in xr.iter().zip(wr) {
+            acc[0] += (a ^ b).count_ones();
+        }
+        let pc: u32 = acc.iter().sum();
         out[li] = d - 2 * pc as i32;
     }
 }
@@ -79,6 +74,9 @@ pub fn fc_packed_batch(
 
 /// `fc_packed_batch` into a caller-owned buffer (capacity grows
 /// monotonically; no pre-zeroing — every output count is assigned).
+///
+/// Write coverage: resizes `out` to exactly N·L and assigns every
+/// element via per-row `fc_packed_into`; prior contents are never read.
 pub fn fc_packed_batch_into(
     xs: &[u32],
     wt: &[u32],
@@ -102,7 +100,10 @@ pub fn fc_float(x: &[f32], wt: &[f32], l: usize, d: usize) -> Vec<f32> {
     out
 }
 
-/// Allocation-free float FC: overwrites `out` (len L) entirely.
+/// Allocation-free float FC.
+///
+/// Write coverage: overwrites `out` (len L) entirely; prior contents
+/// are never read (a NaN-poisoned buffer comes out clean).
 pub fn fc_float_into(x: &[f32], wt: &[f32], l: usize, d: usize, out: &mut [f32]) {
     assert_eq!(x.len(), d);
     assert_eq!(wt.len(), l * d);
@@ -129,6 +130,10 @@ pub fn fc_float_bias(x: &[f32], wt: &[f32], bias: &[f32], l: usize, d: usize) ->
 
 /// Allocation-free `fc_float_bias` (same accumulation order, so the
 /// results are bit-identical to the allocating variant).
+///
+/// Write coverage: assigns every element of `out` (len L) through
+/// `fc_float_into`, then adds bias in place; prior contents are never
+/// read.
 pub fn fc_float_bias_into(
     x: &[f32],
     wt: &[f32],

@@ -32,6 +32,10 @@ pub fn gemm_blocked(a: &[f32], bt: &[f32], m: usize, n: usize, d: usize) -> Vec<
 }
 
 /// Allocation-free blocked GEMM.
+///
+/// Write coverage: assigns every element of `out` (len M·N) exactly
+/// once; prior contents are never read, so a dirty scratch buffer
+/// produces the same result as a fresh allocation.
 pub fn gemm_blocked_into(
     a: &[f32],
     bt: &[f32],
@@ -133,6 +137,26 @@ mod tests {
                 if (u - v).abs() > 1e-3 * (1.0 + u.abs()) {
                     return Err(format!("blocked {v} != naive {u}"));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn into_matches_alloc_on_dirty_buffer() {
+        // gemm_blocked_into's write-coverage contract: a NaN-poisoned
+        // reused buffer must come out identical to a fresh allocation
+        prop::check(24, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 9);
+            let d = g.usize_in(1, 32);
+            let a = g.normals(m * d);
+            let b = g.normals(n * d);
+            let mut out = vec![f32::NAN; m * n];
+            gemm_blocked_into(&a, &b, m, n, d, &mut out);
+            let want = gemm_blocked(&a, &b, m, n, d);
+            for (i, (u, v)) in want.iter().zip(&out).enumerate() {
+                ensure(u == v, format!("into != alloc at {i}: {v} vs {u}"))?;
             }
             Ok(())
         });

@@ -29,39 +29,36 @@ use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
 use crate::input::binarize::{self, Scheme};
 use crate::util::tensorio::TensorFile;
 
-use super::plan::{BufClass, BufId, Plan, Src, StepKind};
+use super::plan::{BufClass, Plan, Src, StepKind};
 use super::{Activation, GraphError, NetworkSpec};
 
-/// One lowered step with its weights resident (see [`StepKind`] for the
-/// unbound form).
-struct BoundStep {
-    kind: BoundKind,
-    input: Src,
-    output: BufId,
-    scratch: Option<BufId>,
-    h: usize,
-    w: usize,
-    c_in: usize,
-    label_a: String,
-    label_b: Option<String>,
-}
-
-enum BoundKind {
-    Binarize { scheme: Scheme, t: Vec<f32> },
-    ConvBinPacked { k: usize, c_out: usize, nw: usize, d: usize, w64: Vec<u64> },
-    ConvBinWords { k: usize, c_out: usize, d: usize, w64: Vec<u64> },
-    ConvFloat { k: usize, c_out: usize, relu: bool, w: Vec<f32>, b: Option<Vec<f32>> },
-    MaxPool,
-    OrPool,
-    ThresholdPack { f32_in: bool, theta: Vec<f32>, flip: Vec<u32> },
-    ThresholdPm1 { theta: Vec<f32>, flip: Vec<u32> },
-    FcBin { kw: usize, c_out: usize, d: usize, w: Vec<u32> },
-    FcFloat { d: usize, c_out: usize, act: Activation, w: Vec<f32>, b: Option<Vec<f32>> },
+/// The weights one step binds — and nothing else.  Placement, extents,
+/// kernel parameters, and timing labels all live on [`Plan::steps`];
+/// execution reads them from the plan directly, so the verifier and the
+/// executor see the SAME step data (there is no second bound copy that
+/// could drift from what was verified).  One variant per weight
+/// *layout*, not per step kind: both packed convs pre-widen to u64
+/// lanes, both thresholds carry `theta`+`flip`, and the float conv/FC
+/// share the `w`+`b` pair.
+enum StepWeights {
+    /// Pools, and the weight-less binarize schemes (LBP).
+    None,
+    /// Binarize thresholds (`input_t`: 3 for rgb, 1 for gray).
+    Binarize { t: Vec<f32> },
+    /// Packed conv weights, pre-widened to u64 lanes at bind time.
+    Packed { w64: Vec<u64> },
+    /// Float conv / float FC weights (+ optional bias).
+    Float { w: Vec<f32>, b: Option<Vec<f32>> },
+    /// Per-channel threshold parameters (both packing and ±1 forms).
+    Threshold { theta: Vec<f32>, flip: Vec<u32> },
+    /// Packed FC rows (u32 words; the FC kernel widens on the fly).
+    FcBin { w: Vec<u32> },
 }
 
 /// A plan with weights bound — the executable form of a network.
 pub struct CompiledNetwork {
-    steps: Vec<BoundStep>,
+    /// Parallel to [`Plan::steps`]: `weights[j]` belongs to step `j`.
+    weights: Vec<StepWeights>,
     plan: Plan,
 }
 
@@ -93,8 +90,18 @@ impl CompiledNetwork {
     }
 
     /// Bind an already-compiled plan (the registry loader compiles once,
-    /// then binds).
+    /// verifies, then binds).
+    ///
+    /// Debug builds re-run [`super::verify::verify_plan`] here: the
+    /// loader already verified manifest plans, but plans can also reach
+    /// binding from tests, tools, or future rewrite passes — in debug,
+    /// nothing unverified executes.  Release builds trust the loader's
+    /// gate (verification is load-time-only work either way, never on
+    /// the request path).
     pub fn from_plan(plan: Plan, tf: &TensorFile) -> Result<Self, GraphError> {
+        #[cfg(debug_assertions)]
+        super::verify::verify_plan(&plan)
+            .map_err(|e| GraphError::Internal(format!("plan failed verification: {e}")))?;
         let fetch_f32 = |name: &str, want: usize| -> Result<Vec<f32>, GraphError> {
             let v = tf.f32(name).map_err(|e| GraphError::Weight(e.to_string()))?;
             if v.len() != want {
@@ -116,19 +123,16 @@ impl CompiledNetwork {
             Ok(v)
         };
 
-        let mut steps = Vec::with_capacity(plan.steps.len());
+        let mut weights = Vec::with_capacity(plan.steps.len());
         for step in &plan.steps {
-            let (h, w, c_in) = (step.in_ty.h, step.in_ty.w, step.in_ty.c);
-            let kind = match &step.kind {
-                StepKind::Binarize { scheme } => BoundKind::Binarize {
-                    scheme: *scheme,
-                    t: match scheme {
-                        Scheme::Rgb => fetch_f32("input_t", 3)?,
-                        Scheme::Gray => fetch_f32("input_t", 1)?,
-                        _ => Vec::new(),
-                    },
+            let c_in = step.in_ty.c;
+            weights.push(match &step.kind {
+                StepKind::Binarize { scheme } => match scheme {
+                    Scheme::Rgb => StepWeights::Binarize { t: fetch_f32("input_t", 3)? },
+                    Scheme::Gray => StepWeights::Binarize { t: fetch_f32("input_t", 1)? },
+                    _ => StepWeights::None,
                 },
-                StepKind::ConvBinPacked { k, c_out, nw, d, w } => {
+                StepKind::ConvBinPacked { c_out, nw, d, w, .. } => {
                     let mut packed = fetch_u32(w, c_out * nw)?;
                     // zero each row's tail-word pad bits: activations pack
                     // with zero pads (BitWriter), so nonzero weight pads
@@ -140,74 +144,41 @@ impl CompiledNetwork {
                             packed[row * nw + (nw - 1)] &= mask;
                         }
                     }
-                    BoundKind::ConvBinPacked {
-                        k: *k,
-                        c_out: *c_out,
-                        nw: *nw,
-                        d: *d,
-                        w64: bgemm::widen_weights(&packed, *c_out, *nw),
-                    }
+                    StepWeights::Packed { w64: bgemm::widen_weights(&packed, *c_out, *nw) }
                 }
-                StepKind::ConvBinWords { k, c_out, d, w } => {
+                StepKind::ConvBinWords { k, c_out, w, .. } => {
                     let mut packed = fetch_u32(w, c_out * k * k)?;
                     mask_channel_pads(&mut packed, c_in);
-                    BoundKind::ConvBinWords {
-                        k: *k,
-                        c_out: *c_out,
-                        d: *d,
-                        w64: bgemm::widen_weights(&packed, *c_out, k * k),
-                    }
+                    StepWeights::Packed { w64: bgemm::widen_weights(&packed, *c_out, k * k) }
                 }
-                StepKind::ConvFloat { k, c_out, relu, w, b } => BoundKind::ConvFloat {
-                    k: *k,
-                    c_out: *c_out,
-                    relu: *relu,
+                StepKind::ConvFloat { k, c_out, w, b, .. } => StepWeights::Float {
                     w: fetch_f32(w, c_out * k * k * c_in)?,
                     b: match b {
                         Some(b) => Some(fetch_f32(b, *c_out)?),
                         None => None,
                     },
                 },
-                StepKind::MaxPool => BoundKind::MaxPool,
-                StepKind::OrPool => BoundKind::OrPool,
-                StepKind::ThresholdPack { f32_in, theta, flip } => BoundKind::ThresholdPack {
-                    f32_in: *f32_in,
+                StepKind::MaxPool | StepKind::OrPool => StepWeights::None,
+                StepKind::ThresholdPack { theta, flip, .. }
+                | StepKind::ThresholdPm1 { theta, flip } => StepWeights::Threshold {
                     theta: fetch_f32(theta, c_in)?,
                     flip: fetch_u32(flip, c_in)?,
                 },
-                StepKind::ThresholdPm1 { theta, flip } => BoundKind::ThresholdPm1 {
-                    theta: fetch_f32(theta, c_in)?,
-                    flip: fetch_u32(flip, c_in)?,
-                },
-                StepKind::FcBin { kw, c_out, d, w } => {
+                StepKind::FcBin { kw, c_out, w, .. } => {
                     let mut packed = fetch_u32(w, c_out * kw)?;
                     mask_channel_pads(&mut packed, c_in);
-                    BoundKind::FcBin { kw: *kw, c_out: *c_out, d: *d, w: packed }
+                    StepWeights::FcBin { w: packed }
                 }
-                StepKind::FcFloat { d, c_out, act, w, b } => BoundKind::FcFloat {
-                    d: *d,
-                    c_out: *c_out,
-                    act: *act,
+                StepKind::FcFloat { d, c_out, w, b, .. } => StepWeights::Float {
                     w: fetch_f32(w, c_out * d)?,
                     b: match b {
                         Some(b) => Some(fetch_f32(b, *c_out)?),
                         None => None,
                     },
                 },
-            };
-            steps.push(BoundStep {
-                kind,
-                input: step.input,
-                output: step.output,
-                scratch: step.scratch,
-                h,
-                w,
-                c_in,
-                label_a: step.label_a.clone(),
-                label_b: step.label_b.clone(),
             });
         }
-        Ok(Self { steps, plan })
+        Ok(Self { weights, plan })
     }
 
     /// The compiled plan (arena layout, weight declarations, labels).
@@ -280,7 +251,7 @@ impl CompiledNetwork {
     /// return type (and the protocol's logit shape) must generalize
     /// with it, or the slice copy below panics.
     fn read_logits(&self, n: usize, scratch: &PlanScratch) -> Vec<[f32; NUM_CLASSES]> {
-        let last = self.steps.last().expect("plan has >= 1 step");
+        let last = self.plan.steps.last().expect("plan has >= 1 step");
         let out = scratch.f32_slot(last.output.idx);
         let c = self.plan.classes;
         debug_assert_eq!(c, NUM_CLASSES, "validated at plan time");
@@ -306,11 +277,21 @@ impl CompiledNetwork {
         // PoolError can only mean a compiler bug — surface it as such,
         // never as a client-attributed bad payload
         let bad = |e: maxpool::PoolError| GraphError::Internal(e.to_string());
-        for step in &self.steps {
-            let (h, w) = (step.h, step.w);
+        // a weight variant that doesn't fit its step kind can only mean
+        // bind and plan fell out of sync — a compiler bug, never input
+        let desync =
+            || GraphError::Internal("bound weights out of sync with the plan steps".into());
+        for (step, wts) in self.plan.steps.iter().zip(&self.weights) {
+            let (h, w) = (step.in_ty.h, step.in_ty.w);
+            let c_in = step.in_ty.c;
             let px = h * w;
-            match &step.kind {
-                BoundKind::Binarize { scheme, t } => {
+            match (&step.kind, wts) {
+                (StepKind::Binarize { scheme }, wts) => {
+                    let t: &[f32] = match wts {
+                        StepWeights::Binarize { t } => t,
+                        StepWeights::None => &[],
+                        _ => return Err(desync()),
+                    };
                     let c_out = scheme.input_channels();
                     let mut gray = match step.scratch {
                         Some(s) => scratch.take_f32(s.idx),
@@ -344,13 +325,13 @@ impl CompiledNetwork {
                     scratch.put_f32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
-                BoundKind::ConvBinPacked { k, c_out, nw, d, w64 } => {
+                (StepKind::ConvBinPacked { k, c_out, nw, d, .. }, StepWeights::Packed { w64 }) => {
                     let sc = step.scratch.expect("conv has a patch-gather slot");
                     let mut cols = scratch.take_u32(sc.idx);
                     let mut counts = scratch.take_i32(step.output.idx);
                     {
                         let x = input_f32(scratch, images, step.input);
-                        im2col::im2col_pack_batch_into(x, n, h, w, step.c_in, *k, 32, &mut cols);
+                        im2col::im2col_pack_batch_into(x, n, h, w, c_in, *k, 32, &mut cols);
                         lap(rec, &step.label_a);
                         counts.resize(n * px * c_out, 0); // the GEMM assigns every element
                         bgemm::bgemm_prewidened(&cols, w64, n * px, *c_out, *nw, *d, &mut counts);
@@ -359,7 +340,7 @@ impl CompiledNetwork {
                     scratch.put_u32(sc.idx, cols);
                     scratch.put_i32(step.output.idx, counts);
                 }
-                BoundKind::ConvBinWords { k, c_out, d, w64 } => {
+                (StepKind::ConvBinWords { k, c_out, d, .. }, StepWeights::Packed { w64 }) => {
                     let sc = step.scratch.expect("conv has a patch-gather slot");
                     let mut cols = scratch.take_u32(sc.idx);
                     let mut counts = scratch.take_i32(step.output.idx);
@@ -374,21 +355,21 @@ impl CompiledNetwork {
                     scratch.put_u32(sc.idx, cols);
                     scratch.put_i32(step.output.idx, counts);
                 }
-                BoundKind::ConvFloat { k, c_out, relu, w, b } => {
+                (StepKind::ConvFloat { k, c_out, relu, .. }, StepWeights::Float { w: cw, b }) => {
                     let sc = step.scratch.expect("conv has a patch-gather slot");
                     let mut cols = scratch.take_f32(sc.idx);
                     let mut act = scratch.take_f32(step.output.idx);
                     {
                         let x = input_f32(scratch, images, step.input);
-                        im2col::im2col_float_batch_into(x, n, h, w, step.c_in, *k, &mut cols);
+                        im2col::im2col_float_batch_into(x, n, h, w, c_in, *k, &mut cols);
                         lap(rec, &step.label_a);
                         act.resize(n * px * c_out, 0.0); // the GEMM assigns every element
                         float_ops::gemm_blocked_into(
                             &cols,
-                            w,
+                            cw,
                             n * px,
                             *c_out,
-                            k * k * step.c_in,
+                            k * k * c_in,
                             &mut act,
                         );
                         if let Some(b) = b {
@@ -402,17 +383,16 @@ impl CompiledNetwork {
                     scratch.put_f32(sc.idx, cols);
                     scratch.put_f32(step.output.idx, act);
                 }
-                BoundKind::MaxPool => {
+                (StepKind::MaxPool, StepWeights::None) => {
                     let mut out = scratch.take_f32(step.output.idx);
                     {
                         let x = input_f32(scratch, images, step.input);
-                        maxpool::maxpool2x2_batch_into(x, n, h, w, step.c_in, &mut out)
-                            .map_err(bad)?;
+                        maxpool::maxpool2x2_batch_into(x, n, h, w, c_in, &mut out).map_err(bad)?;
                     }
                     scratch.put_f32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
-                BoundKind::OrPool => {
+                (StepKind::OrPool, StepWeights::None) => {
                     let mut out = scratch.take_u32(step.output.idx);
                     {
                         let x = input_u32(scratch, step.input)?;
@@ -421,7 +401,10 @@ impl CompiledNetwork {
                     scratch.put_u32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
-                BoundKind::ThresholdPack { f32_in, theta, flip } => {
+                (
+                    StepKind::ThresholdPack { f32_in, .. },
+                    StepWeights::Threshold { theta, flip },
+                ) => {
                     let mut out = scratch.take_u32(step.output.idx);
                     if *f32_in {
                         let x = input_f32(scratch, images, step.input);
@@ -433,8 +416,8 @@ impl CompiledNetwork {
                     scratch.put_u32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
-                BoundKind::ThresholdPm1 { theta, flip } => {
-                    let c = step.c_in;
+                (StepKind::ThresholdPm1 { .. }, StepWeights::Threshold { theta, flip }) => {
+                    let c = c_in;
                     let mut out = scratch.take_f32(step.output.idx);
                     {
                         let x = input_i32(scratch, step.input)?;
@@ -454,16 +437,16 @@ impl CompiledNetwork {
                     scratch.put_f32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
-                BoundKind::FcBin { kw, c_out, d, w } => {
+                (StepKind::FcBin { kw, c_out, d, .. }, StepWeights::FcBin { w: fw }) => {
                     let mut out = scratch.take_i32(step.output.idx);
                     {
                         let x = input_u32(scratch, step.input)?;
-                        fc::fc_packed_batch_into(x, w, n, *c_out, *kw, *d, &mut out);
+                        fc::fc_packed_batch_into(x, fw, n, *c_out, *kw, *d, &mut out);
                     }
                     scratch.put_i32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
-                BoundKind::FcFloat { d, c_out, act, w, b } => {
+                (StepKind::FcFloat { d, c_out, act, .. }, StepWeights::Float { w: fw, b }) => {
                     let mut out = scratch.take_f32(step.output.idx);
                     {
                         let x = input_f32(scratch, images, step.input);
@@ -474,8 +457,8 @@ impl CompiledNetwork {
                             let xi = &x[i * d..(i + 1) * d];
                             let oi = &mut out[i * c_out..(i + 1) * c_out];
                             match b {
-                                Some(b) => fc::fc_float_bias_into(xi, w, b, *c_out, *d, oi),
-                                None => fc::fc_float_into(xi, w, *c_out, *d, oi),
+                                Some(b) => fc::fc_float_bias_into(xi, fw, b, *c_out, *d, oi),
+                                None => fc::fc_float_into(xi, fw, *c_out, *d, oi),
                             }
                             match act {
                                 Activation::None => {}
@@ -491,6 +474,7 @@ impl CompiledNetwork {
                     scratch.put_f32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
+                _ => return Err(desync()),
             }
         }
         Ok(())
@@ -838,6 +822,22 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn binding_reverifies_the_plan_in_debug_builds() {
+        // the debug gate: a corrupted plan must never bind, even when it
+        // arrives via from_plan directly (bypassing the loader's check)
+        use crate::bnn::graph::plan::Corruption;
+        let tf = synth_bcnn_tf(Scheme::Rgb, 360);
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb)
+            .plan()
+            .unwrap()
+            .corrupt_for_test(Corruption::LogitShapeLie);
+        let err = CompiledNetwork::from_plan(plan, &tf).unwrap_err();
+        assert!(matches!(err, GraphError::Internal(_)), "{err}");
+        assert!(err.to_string().contains("verification"), "{err}");
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //!   with weights bound (pre-widened at build time), executing batches
 //!   over the planned arena.  `BcnnNetwork`/`FloatNetwork` are thin
 //!   wrappers over it.
+//! * [`verify`] — the independent static checker: every op declares an
+//!   [`EffectSig`] and [`verify_plan`] re-proves aliasing, dataflow,
+//!   shape, and weight-binding soundness from those effects alone,
+//!   without trusting the compiler's liveness walk.  The registry
+//!   loader refuses to publish a plan that fails it.
 //!
 //! Mixed precision per layer (XNOR-Net's motivation) falls out of the
 //! vocabulary: a spec may open with a float conv and binarize later, or
@@ -33,9 +38,75 @@
 
 pub mod exec;
 pub mod plan;
+pub mod verify;
 
 pub use exec::CompiledNetwork;
 pub use plan::{Plan, WeightReq};
+pub use verify::{verify_plan, VerifyError, VerifyReport};
+
+#[doc(hidden)]
+pub use plan::Corruption;
+
+/// The static effect signature of one op: what the verifier may assume
+/// about its execution without running it.  Every op in the vocabulary
+/// reads exactly one input edge and fully covers its output extent
+/// (no partial writers exist in this IR — a property
+/// [`verify::verify_plan`]'s single-writer dataflow rule depends on);
+/// the per-op difference is whether a per-step scratch slot is
+/// clobbered (patch gathers, the LBP gray plane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EffectSig {
+    /// The step consumes its input edge (all current ops do).
+    pub reads_input: bool,
+    /// The write covers the full declared output extent — the edge's
+    /// previous contents are dead the moment this step runs.
+    pub covers_output: bool,
+    /// The step clobbers a scratch slot whose contents are garbage
+    /// after the step (never a valid read source).
+    pub clobbers_scratch: bool,
+}
+
+impl EffectSig {
+    const fn new(clobbers_scratch: bool) -> Self {
+        Self { reads_input: true, covers_output: true, clobbers_scratch }
+    }
+}
+
+impl LayerOp {
+    /// This op's declared effect signature.
+    pub fn effect(&self) -> EffectSig {
+        EffectSig::new(match self {
+            // the LBP binarizer gathers a per-image grayscale plane
+            LayerOp::Binarize { scheme } => *scheme == Scheme::Lbp,
+            // convs gather patches (im2col / word gather) into scratch
+            LayerOp::ConvBin { .. } | LayerOp::ConvFloat { .. } => true,
+            LayerOp::MaxPool
+            | LayerOp::OrPool
+            | LayerOp::Threshold
+            | LayerOp::FcBin { .. }
+            | LayerOp::FcFloat { .. } => false,
+        })
+    }
+}
+
+/// Effect signature of a lowered step — must agree with the declaring
+/// [`LayerOp::effect`] (the `effects_agree_between_ops_and_steps` test
+/// pins this).
+pub(crate) fn step_effect(kind: &plan::StepKind) -> EffectSig {
+    use plan::StepKind;
+    EffectSig::new(match kind {
+        StepKind::Binarize { scheme } => *scheme == Scheme::Lbp,
+        StepKind::ConvBinPacked { .. }
+        | StepKind::ConvBinWords { .. }
+        | StepKind::ConvFloat { .. } => true,
+        StepKind::MaxPool
+        | StepKind::OrPool
+        | StepKind::ThresholdPack { .. }
+        | StepKind::ThresholdPm1 { .. }
+        | StepKind::FcBin { .. }
+        | StepKind::FcFloat { .. } => false,
+    })
+}
 
 use crate::input::binarize::Scheme;
 use crate::util::json::Json;
@@ -324,6 +395,30 @@ mod tests {
         .unwrap();
         let spec = NetworkSpec::from_json(&arch).unwrap();
         assert_eq!(spec, NetworkSpec::legacy_bcnn(Scheme::Rgb));
+    }
+
+    #[test]
+    fn effects_agree_between_ops_and_steps() {
+        // ops lower 1:1 to steps, and both layers of the effect
+        // declaration must tell the verifier the same story
+        for spec in [
+            NetworkSpec::legacy_bcnn(Scheme::Rgb),
+            NetworkSpec::legacy_bcnn(Scheme::Lbp),
+            NetworkSpec::legacy_bcnn(Scheme::None),
+            NetworkSpec::legacy_float(),
+        ] {
+            let plan = spec.plan().unwrap();
+            assert_eq!(spec.ops.len(), plan.steps.len());
+            for (op, step) in spec.ops.iter().zip(&plan.steps) {
+                assert_eq!(op.effect(), step_effect(&step.kind), "{op:?}");
+                // the plan's scratch placement must match the signature
+                assert_eq!(
+                    step.scratch.is_some(),
+                    step_effect(&step.kind).clobbers_scratch,
+                    "{op:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -90,7 +90,7 @@ impl ValTy {
         Self { kind: ValKind::Counts, h, w, c }
     }
     /// Storage class of a value of this type.
-    fn class(&self) -> BufClass {
+    pub(crate) fn class(&self) -> BufClass {
         match self.kind {
             ValKind::F32 => BufClass::F32,
             ValKind::Words => BufClass::U32,
@@ -193,6 +193,175 @@ impl Plan {
             }
         }
         names
+    }
+}
+
+/// A corruption class the mutation-testing suite injects via
+/// [`Plan::corrupt_for_test`].  `compile` never emits an unsound plan,
+/// so the verifier's rejection paths can only be exercised by breaking
+/// a sound plan on purpose — each class models one way a hand-written
+/// or future-rewritten plan could go wrong.
+#[doc(hidden)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corruption {
+    /// Collapse two consecutive same-class outputs into one slot
+    /// (models a broken coalescing rewrite) → aliased live intervals.
+    SlotMerge,
+    /// Point a step's scratch at its own input slot (models a liveness
+    /// pass under-counting an interval) → the clobber overlaps the
+    /// still-live input edge.
+    IntervalTruncation,
+    /// Halve a conv's declared output channels (models an undersized
+    /// slot extent) → kind/edge shape disagreement.
+    ExtentShrink,
+    /// Move a words output into the f32 pool (models a storage-class
+    /// mixup) → slot dtype violation.
+    DtypeSwap,
+    /// Delete a pool step outright (models a dropped writer) → a later
+    /// step reads an edge nothing wrote.
+    WriterDeletion,
+    /// Widen a packed conv's weight row past `ceil(d/32)` (models
+    /// unmasked tail pad bits — the popcount soundness precondition).
+    PadBitPollution,
+    /// Declare one weight tensor twice → it would bind two roles.
+    DuplicateWeightBind,
+    /// Lie about the logit width → breaks the serving contract.
+    LogitShapeLie,
+}
+
+impl Corruption {
+    pub const ALL: [Corruption; 8] = [
+        Corruption::SlotMerge,
+        Corruption::IntervalTruncation,
+        Corruption::ExtentShrink,
+        Corruption::DtypeSwap,
+        Corruption::WriterDeletion,
+        Corruption::PadBitPollution,
+        Corruption::DuplicateWeightBind,
+        Corruption::LogitShapeLie,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Corruption::SlotMerge => "slot-merge",
+            Corruption::IntervalTruncation => "interval-truncation",
+            Corruption::ExtentShrink => "extent-shrink",
+            Corruption::DtypeSwap => "dtype-swap",
+            Corruption::WriterDeletion => "writer-deletion",
+            Corruption::PadBitPollution => "pad-bit-pollution",
+            Corruption::DuplicateWeightBind => "duplicate-weight-bind",
+            Corruption::LogitShapeLie => "logit-shape-lie",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|c| c.name() == s)
+    }
+}
+
+impl Plan {
+    /// Break this plan on purpose (mutation testing + the loader's
+    /// fault-injection hook).  Each class finds its first applicable
+    /// site and panics if the plan has none — a corruption that
+    /// silently no-ops would turn the mutation suite into a lie.
+    #[doc(hidden)]
+    pub fn corrupt_for_test(mut self, c: Corruption) -> Plan {
+        match c {
+            Corruption::SlotMerge => {
+                let i = (0..self.steps.len() - 1)
+                    .find(|&i| self.steps[i].output.class == self.steps[i + 1].output.class)
+                    .expect("plan has two consecutive same-class outputs");
+                let dead = self.steps[i + 1].output;
+                let merged = self.steps[i].output;
+                self.steps[i + 1].output = merged;
+                for s in &mut self.steps[i + 2..] {
+                    if s.input == Src::Buf(dead) {
+                        s.input = Src::Buf(merged);
+                    }
+                }
+            }
+            Corruption::IntervalTruncation => {
+                let step = self
+                    .steps
+                    .iter_mut()
+                    .find(|s| {
+                        matches!((s.scratch, s.input),
+                            (Some(sc), Src::Buf(b)) if sc.class == b.class)
+                    })
+                    .expect("plan has a step whose scratch shares a class with its input");
+                if let Src::Buf(b) = step.input {
+                    step.scratch = Some(b);
+                }
+            }
+            Corruption::ExtentShrink => {
+                let step = self
+                    .steps
+                    .iter_mut()
+                    .find(|s| {
+                        matches!(
+                            s.kind,
+                            StepKind::ConvBinPacked { .. }
+                                | StepKind::ConvBinWords { .. }
+                                | StepKind::ConvFloat { .. }
+                        ) && s.out_ty.c > 1
+                    })
+                    .expect("plan has a conv with more than one output channel");
+                step.out_ty.c /= 2;
+            }
+            Corruption::DtypeSwap => {
+                let i = (0..self.steps.len())
+                    .find(|&i| self.steps[i].output.class == BufClass::U32)
+                    .expect("plan has a u32-class output");
+                let old = self.steps[i].output;
+                let swapped = BufId { class: BufClass::F32, idx: old.idx };
+                self.steps[i].output = swapped;
+                for s in &mut self.steps[i + 1..] {
+                    if s.input == Src::Buf(old) {
+                        s.input = Src::Buf(swapped);
+                    }
+                }
+            }
+            Corruption::WriterDeletion => {
+                let i = self
+                    .steps
+                    .iter()
+                    .position(|s| matches!(s.kind, StepKind::MaxPool | StepKind::OrPool))
+                    .expect("plan has a pool step to delete");
+                self.steps.remove(i);
+            }
+            Corruption::PadBitPollution => {
+                let (wname, bad_shape) = {
+                    let step = self
+                        .steps
+                        .iter_mut()
+                        .find(|s| matches!(s.kind, StepKind::ConvBinPacked { .. }))
+                        .expect("plan has a packed conv");
+                    match &mut step.kind {
+                        StepKind::ConvBinPacked { c_out, nw, w, .. } => {
+                            *nw += 1;
+                            (w.clone(), vec![*c_out, *nw])
+                        }
+                        _ => unreachable!(),
+                    }
+                };
+                // keep the declared weight consistent with the widened
+                // row so only the pad-bit rule is violated
+                let req = self
+                    .weights
+                    .iter_mut()
+                    .find(|r| r.name == wname)
+                    .expect("packed conv declares its weight");
+                req.shape = bad_shape;
+            }
+            Corruption::DuplicateWeightBind => {
+                let dup = self.weights.first().expect("plan declares weights").clone();
+                self.weights.push(dup);
+            }
+            Corruption::LogitShapeLie => {
+                self.classes += 3;
+            }
+        }
+        self
     }
 }
 
@@ -713,6 +882,71 @@ mod tests {
         };
         let err = spec.plan().unwrap_err();
         assert!(err.to_string().contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn every_corruption_class_is_rejected_with_its_variant() {
+        // the mutation suite: break a sound plan eight different ways
+        // and prove the verifier catches each with the *intended*
+        // structured error, not just any error
+        use crate::bnn::graph::verify::{verify_plan, VerifyError};
+        for c in Corruption::ALL {
+            let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb)
+                .plan()
+                .unwrap()
+                .corrupt_for_test(c);
+            let err = verify_plan(&plan)
+                .err()
+                .unwrap_or_else(|| panic!("{} verified clean", c.name()));
+            let ok = match c {
+                Corruption::SlotMerge | Corruption::IntervalTruncation => {
+                    matches!(err, VerifyError::SlotAliased { .. })
+                }
+                Corruption::ExtentShrink => matches!(err, VerifyError::KindShape { .. }),
+                Corruption::DtypeSwap => matches!(err, VerifyError::SlotDtype { .. }),
+                Corruption::WriterDeletion => {
+                    matches!(err, VerifyError::ReadWithoutWriter { .. })
+                }
+                Corruption::PadBitPollution => matches!(err, VerifyError::PadBits { .. }),
+                Corruption::DuplicateWeightBind => matches!(err, VerifyError::WeightDup { .. }),
+                Corruption::LogitShapeLie => matches!(err, VerifyError::BadLogits { .. }),
+            };
+            assert!(ok, "{}: wrong variant: {err}", c.name());
+        }
+    }
+
+    #[test]
+    fn corruption_names_roundtrip_through_parse() {
+        for c in Corruption::ALL {
+            assert_eq!(Corruption::parse(c.name()), Some(c));
+        }
+        assert_eq!(Corruption::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn corruptions_also_break_a_deeper_arch_plan() {
+        // the hooks find their sites structurally, not by legacy step
+        // indices — they must bite on manifest-compiled archs too
+        use crate::bnn::graph::verify::verify_plan;
+        let spec = || NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 5, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 64 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        };
+        assert!(verify_plan(&spec().plan().unwrap()).is_ok());
+        for c in Corruption::ALL {
+            let plan = spec().plan().unwrap().corrupt_for_test(c);
+            assert!(verify_plan(&plan).is_err(), "{} verified clean on the arch plan", c.name());
+        }
     }
 
     #[test]

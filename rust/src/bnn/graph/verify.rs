@@ -1,0 +1,889 @@
+//! Static plan verifier: prove a compiled [`Plan`] sound before it
+//! binds, publishes, or serves.
+//!
+//! Since networks became *data* (registry manifests compile `"arch"`
+//! arrays into plans), an unsound plan — aliased arena slots, a step
+//! reading an edge another step already clobbered, a mis-shaped weight
+//! binding — is a data bug that would silently corrupt logits instead
+//! of a code bug caught in review.  The binarized pipeline is maximally
+//! sensitive to exactly this class of error: one polluted pad bit
+//! offsets every popcount (paper §III).  So the loader refuses to
+//! publish any plan this module cannot prove sound.
+//!
+//! The proof is independent of the compiler: every step kind declares a
+//! static effect signature ([`super::EffectSig`] — reads its input
+//! edge, fully covers its output extent, clobbers per-step scratch) and
+//! [`verify_plan`] recomputes per-edge live intervals from those
+//! effects alone, then checks them *against* the free-list coloring the
+//! compiler produced rather than assuming it.  Four passes, in order:
+//!
+//! 1. **Kinds & slots.**  Each step's kind parameters are consistent
+//!    with its declared edge types (patch depth `d = k·k·c`, halved
+//!    pool extents, odd kernels, the packed-width pad-bit rules), and
+//!    each slot's storage class matches the value mapped to it.
+//! 2. **Dataflow.**  Every read edge has exactly one prior
+//!    full-coverage writer of the exact value type, no step's output is
+//!    dead, and the final edge is the declared logit shape.
+//! 3. **Liveness & aliasing.**  No two edges with overlapping live
+//!    intervals share a slot, every referenced slot is inside the
+//!    declared arena, and every declared slot is actually used.
+//! 4. **Weights.**  Bindings are total (every tensor a step needs is
+//!    declared), length-exact per the step's own shape arithmetic, and
+//!    unique — with pad-bit cleanliness for packed weights proven in
+//!    pass 1's width checks.
+//!
+//! On success, [`VerifyReport`] carries the proven resource envelope
+//! (slots, live-interval count, peak bytes per pool), surfaced per
+//! model in the admin plane's `list_models`.  Failure is a structured
+//! [`VerifyError`] naming the step, edge, slot, and — for aliasing —
+//! the two conflicting live intervals.  The mutation-testing suite in
+//! [`super::plan`] injects eight corruption classes and asserts each is
+//! rejected with its intended variant.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::bnn::network::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::bnn::packing::packed_width;
+use crate::input::binarize::Scheme;
+use crate::util::json::{Json, JsonObj};
+
+use super::plan::{BufClass, BufId, Plan, Src, Step, StepKind, ValKind, ValTy, WeightDType};
+use super::step_effect;
+
+/// Role an edge plays within its defining step (for error reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeRole {
+    /// A step's covering output write.
+    Output,
+    /// A per-step scratch clobber (patch gathers, the LBP gray plane);
+    /// garbage after the step, so never a valid read source.
+    Scratch,
+}
+
+/// One live edge the interval analysis tracked: defined (written) at
+/// step `step`, live through `live.1` inclusive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeRef {
+    pub step: usize,
+    pub role: EdgeRole,
+    /// Live interval `[def, last_use]` in step indices, inclusive.  The
+    /// logits edge extends one past the last step (read after
+    /// execution).
+    pub live: (usize, usize),
+}
+
+impl fmt::Display for EdgeRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let role = match self.role {
+            EdgeRole::Output => "output",
+            EdgeRole::Scratch => "scratch",
+        };
+        write!(f, "the {role} of step {} (live [{}, {}])", self.step, self.live.0, self.live.1)
+    }
+}
+
+/// A structured verification failure.  Every variant names the step,
+/// slot, edge, or weight at fault so a refused manifest entry is
+/// diagnosable from the error string alone.
+#[derive(Debug)]
+pub enum VerifyError {
+    /// Two edges with overlapping live intervals share one arena slot.
+    SlotAliased { class: BufClass, slot: usize, a: EdgeRef, b: EdgeRef },
+    /// A slot's storage class cannot hold the value mapped to it.
+    SlotDtype { step: usize, slot: BufId, want: String },
+    /// A step references a slot outside the declared arena.
+    SlotOutOfRange { step: usize, slot: BufId, nbufs: usize },
+    /// The declared arena has a slot no edge ever maps to — the
+    /// coloring summary overstates the free-list walk.
+    UnusedSlot { class: BufClass, slot: usize },
+    /// A step reads an edge with no prior full-coverage writer.
+    ReadWithoutWriter { step: usize, slot: BufId, why: String },
+    /// A reader expects a different value type than the edge's writer
+    /// produced.
+    EdgeType { step: usize, src: String, want: String, got: String },
+    /// A step's output is never consumed and is not the logits.
+    DeadStep { step: usize, label: String },
+    /// The final edge is not the declared logit shape.
+    BadLogits { step: usize, got: String, want: String },
+    /// A step's kind parameters are inconsistent with its edge types.
+    KindShape { step: usize, op: String, why: String },
+    /// A packed-bit width rule is violated — pad masking (the popcount
+    /// soundness precondition) would be undefined.
+    PadBits { step: usize, op: String, why: String },
+    /// A step binds a weight the plan never declares.
+    WeightMissing { step: usize, name: String },
+    /// A declared weight's dtype/shape differs from what its step's own
+    /// shape arithmetic requires.
+    WeightShape { step: usize, name: String, want: String, got: String },
+    /// One tensor name declared twice — it would bind two roles.
+    WeightDup { name: String },
+    /// A declared weight no step binds.
+    WeightUnused { name: String },
+}
+
+crate::error_enum_impls!(VerifyError {
+    VerifyError::SlotAliased { class, slot, a, b } =>
+        ("slot {}[{slot}] aliased: {a} overlaps {b}", class_name(*class)),
+    VerifyError::SlotDtype { step, slot, want } =>
+        ("step {step}: slot {} cannot hold {want}", slot_name(*slot)),
+    VerifyError::SlotOutOfRange { step, slot, nbufs } =>
+        ("step {step}: slot {} is outside the declared arena ({nbufs} slots in its class)",
+         slot_name(*slot)),
+    VerifyError::UnusedSlot { class, slot } =>
+        ("declared slot {}[{slot}] is never written by any step", class_name(*class)),
+    VerifyError::ReadWithoutWriter { step, slot, why } =>
+        ("step {step} reads slot {} with no prior full-coverage writer: {why}", slot_name(*slot)),
+    VerifyError::EdgeType { step, src, want, got } =>
+        ("step {step} expects {want} but {src} carries {got}"),
+    VerifyError::DeadStep { step, label } =>
+        ("step {step} ({label}): output is never consumed and is not the logits"),
+    VerifyError::BadLogits { step, got, want } =>
+        ("step {step}: final edge is {got}; the serving contract wants {want}"),
+    VerifyError::KindShape { step, op, why } => ("step {step} ({op}): {why}"),
+    VerifyError::PadBits { step, op, why } => ("step {step} ({op}): pad-bit soundness: {why}"),
+    VerifyError::WeightMissing { step, name } =>
+        ("step {step} binds weight {name:?}, which the plan never declares"),
+    VerifyError::WeightShape { step, name, want, got } =>
+        ("weight {name:?} (step {step}): declared {got}, the step requires {want}"),
+    VerifyError::WeightDup { name } =>
+        ("weight {name:?} is declared twice — one tensor would bind two roles"),
+    VerifyError::WeightUnused { name } => ("declared weight {name:?} is bound by no step"),
+});
+
+/// The proven resource envelope of a verified plan, surfaced per model
+/// in the admin plane's `list_models`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyReport {
+    /// Lowered steps proven sound.
+    pub steps: usize,
+    /// Weight tensors with total, length-exact bindings.
+    pub weights: usize,
+    /// Arena slots per storage class, `[f32, u32, i32]`.
+    pub slots: [usize; 3],
+    /// Live edges (covering outputs + per-step scratch clobbers) the
+    /// interval analysis tracked.
+    pub intervals: usize,
+    /// Per-image peak bytes per pool `[f32, u32, i32]`: each slot costs
+    /// its largest resident edge (all three classes are 4-byte).
+    pub peak_bytes: [usize; 3],
+}
+
+impl VerifyReport {
+    /// Peak elements per pool (`peak_bytes / 4` — all classes 4-byte).
+    pub fn peak_elems(&self) -> [usize; 3] {
+        [self.peak_bytes[0] / 4, self.peak_bytes[1] / 4, self.peak_bytes[2] / 4]
+    }
+
+    /// The `list_models` wire form.
+    pub fn to_json(&self) -> Json {
+        let arr = |xs: &[usize; 3]| Json::Arr(xs.iter().map(|&n| Json::from(n)).collect());
+        let mut o = JsonObj::new();
+        o.insert("steps", Json::from(self.steps));
+        o.insert("weights", Json::from(self.weights));
+        o.insert("slots", arr(&self.slots));
+        o.insert("intervals", Json::from(self.intervals));
+        o.insert("peak_bytes", arr(&self.peak_bytes));
+        Json::Obj(o)
+    }
+}
+
+/// One tracked edge: a covering output write or a scratch clobber.
+#[derive(Clone, Copy)]
+struct Edge {
+    slot: BufId,
+    role: EdgeRole,
+    def: usize,
+    last_use: usize,
+    /// The value type written — `None` for scratch clobbers, whose
+    /// contents are garbage after the step.
+    ty: Option<ValTy>,
+    /// Per-image element footprint while resident in the slot.
+    elems: usize,
+}
+
+fn edge_ref(e: &Edge) -> EdgeRef {
+    EdgeRef { step: e.def, role: e.role, live: (e.def, e.last_use) }
+}
+
+fn class_name(c: BufClass) -> &'static str {
+    match c {
+        BufClass::F32 => "f32",
+        BufClass::U32 => "u32",
+        BufClass::I32 => "i32",
+    }
+}
+
+fn class_of(c: usize) -> BufClass {
+    match c {
+        0 => BufClass::F32,
+        1 => BufClass::U32,
+        _ => BufClass::I32,
+    }
+}
+
+fn slot_name(b: BufId) -> String {
+    format!("{}[{}]", class_name(b.class), b.idx)
+}
+
+fn slot_key(b: BufId) -> (usize, usize) {
+    (b.class as usize, b.idx)
+}
+
+fn kind_name(kind: &StepKind) -> &'static str {
+    match kind {
+        StepKind::Binarize { .. } => "binarize",
+        StepKind::ConvBinPacked { .. } => "conv_bin_packed",
+        StepKind::ConvBinWords { .. } => "conv_bin_words",
+        StepKind::ConvFloat { .. } => "conv_float",
+        StepKind::MaxPool => "maxpool",
+        StepKind::OrPool => "orpool",
+        StepKind::ThresholdPack { .. } => "threshold_pack",
+        StepKind::ThresholdPm1 { .. } => "threshold_pm1",
+        StepKind::FcBin { .. } => "fc_bin",
+        StepKind::FcFloat { .. } => "fc_float",
+    }
+}
+
+/// Storage class of a step's scratch clobber, per its effect signature.
+fn scratch_class(kind: &StepKind) -> Option<BufClass> {
+    match kind {
+        StepKind::Binarize { scheme } => (*scheme == Scheme::Lbp).then_some(BufClass::F32),
+        StepKind::ConvBinPacked { .. } | StepKind::ConvBinWords { .. } => Some(BufClass::U32),
+        StepKind::ConvFloat { .. } => Some(BufClass::F32),
+        _ => None,
+    }
+}
+
+/// Per-image element footprint of a step's scratch clobber (the
+/// executor's patch-gather / gray-plane sizing, recomputed here).
+fn scratch_elems(step: &Step) -> usize {
+    let px = step.in_ty.h * step.in_ty.w;
+    match &step.kind {
+        StepKind::Binarize { .. } => px, // the LBP grayscale plane
+        StepKind::ConvBinPacked { nw, .. } => px * nw,
+        StepKind::ConvBinWords { k, .. } => px * k * k,
+        StepKind::ConvFloat { k, .. } => px * k * k * step.in_ty.c,
+        _ => 0,
+    }
+}
+
+/// Per-image element footprint of a value while resident in its slot
+/// (channel-packed words hold one `u32` per pixel regardless of `c`).
+fn ty_elems(ty: &ValTy) -> usize {
+    match ty.kind {
+        ValKind::Words => ty.h * ty.w,
+        _ => ty.h * ty.w * ty.c,
+    }
+}
+
+fn logits_want(classes: usize) -> String {
+    format!("f32(1,1,{classes})")
+}
+
+/// Prove `plan` sound without executing it.  See the module docs for
+/// the pass order; the first violation found is returned.
+pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
+    let last_step = match plan.steps.len().checked_sub(1) {
+        Some(l) => l,
+        None => {
+            return Err(VerifyError::BadLogits {
+                step: 0,
+                got: "an empty plan".to_string(),
+                want: logits_want(NUM_CLASSES),
+            })
+        }
+    };
+
+    // ---- pass 1: kinds & slots --------------------------------------
+    for (j, step) in plan.steps.iter().enumerate() {
+        check_step_kind(j, step)?;
+        check_step_slots(j, step)?;
+    }
+
+    // ---- pass 2: dataflow -------------------------------------------
+    // Walk the steps replaying each one's effect signature, tracking the
+    // last writer of every slot.  Reads must hit a live covering write
+    // of the exact value type; scratch clobbers invalidate their slot.
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut last_writer: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for (j, step) in plan.steps.iter().enumerate() {
+        let eff = step_effect(&step.kind);
+        if eff.reads_input {
+            match step.input {
+                Src::External => {
+                    let ext = ValTy { kind: ValKind::F32, h: IMG_H, w: IMG_W, c: IMG_C };
+                    if step.in_ty != ext {
+                        return Err(VerifyError::EdgeType {
+                            step: j,
+                            src: "the external image payload".to_string(),
+                            want: step.in_ty.describe(),
+                            got: ext.describe(),
+                        });
+                    }
+                }
+                Src::Buf(b) => {
+                    let ei = match last_writer.get(&slot_key(b)).copied() {
+                        Some(ei) => ei,
+                        None => {
+                            return Err(VerifyError::ReadWithoutWriter {
+                                step: j,
+                                slot: b,
+                                why: "no prior step writes it".to_string(),
+                            })
+                        }
+                    };
+                    let (wty, wdef) = (edges[ei].ty, edges[ei].def);
+                    match wty {
+                        None => {
+                            return Err(VerifyError::ReadWithoutWriter {
+                                step: j,
+                                slot: b,
+                                why: format!(
+                                    "its last write is the scratch clobber of step {wdef}"
+                                ),
+                            })
+                        }
+                        Some(ty) if ty != step.in_ty => {
+                            return Err(VerifyError::EdgeType {
+                                step: j,
+                                src: format!("the output of step {wdef}"),
+                                want: step.in_ty.describe(),
+                                got: ty.describe(),
+                            })
+                        }
+                        Some(_) => edges[ei].last_use = j,
+                    }
+                }
+            }
+        }
+        if let Some(s) = step.scratch {
+            // presence/class consistency with the effect signature was
+            // proven in pass 1; here it only occupies its interval
+            let ei = edges.len();
+            edges.push(Edge {
+                slot: s,
+                role: EdgeRole::Scratch,
+                def: j,
+                last_use: j,
+                ty: None,
+                elems: scratch_elems(step),
+            });
+            last_writer.insert(slot_key(s), ei);
+        }
+        if eff.covers_output {
+            let ei = edges.len();
+            edges.push(Edge {
+                slot: step.output,
+                role: EdgeRole::Output,
+                def: j,
+                last_use: j,
+                ty: Some(step.out_ty),
+                elems: ty_elems(&step.out_ty),
+            });
+            last_writer.insert(slot_key(step.output), ei);
+        }
+    }
+
+    // the serving contract: the final edge is one float logit row per
+    // image, sized for the class set
+    let logits_ty = plan.steps[last_step].out_ty;
+    let want_ty = ValTy { kind: ValKind::F32, h: 1, w: 1, c: plan.classes };
+    if plan.classes != NUM_CLASSES || logits_ty != want_ty {
+        return Err(VerifyError::BadLogits {
+            step: last_step,
+            got: format!("{} with {} declared classes", logits_ty.describe(), plan.classes),
+            want: logits_want(NUM_CLASSES),
+        });
+    }
+    // the logits edge is read after execution (`read_logits`): extend it
+    // one step past the end so no in-plan write may overlap it
+    if let Some(&ei) = last_writer.get(&slot_key(plan.steps[last_step].output)) {
+        if edges[ei].def == last_step {
+            edges[ei].last_use = plan.steps.len();
+        }
+    }
+    for e in &edges {
+        if e.role == EdgeRole::Output && e.last_use == e.def {
+            return Err(VerifyError::DeadStep {
+                step: e.def,
+                label: plan.steps[e.def].label_a.clone(),
+            });
+        }
+    }
+
+    // ---- pass 3: liveness & aliasing --------------------------------
+    let mut by_slot: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (ei, e) in edges.iter().enumerate() {
+        by_slot.entry(slot_key(e.slot)).or_default().push(ei);
+    }
+    for group in by_slot.values() {
+        for (i, &a) in group.iter().enumerate() {
+            for &b in &group[i + 1..] {
+                let (ea, eb) = (&edges[a], &edges[b]);
+                if ea.def <= eb.last_use && eb.def <= ea.last_use {
+                    return Err(VerifyError::SlotAliased {
+                        class: ea.slot.class,
+                        slot: ea.slot.idx,
+                        a: edge_ref(ea),
+                        b: edge_ref(eb),
+                    });
+                }
+            }
+        }
+    }
+    for e in &edges {
+        let n = plan.nbufs[e.slot.class as usize];
+        if e.slot.idx >= n {
+            return Err(VerifyError::SlotOutOfRange { step: e.def, slot: e.slot, nbufs: n });
+        }
+    }
+    for (c, &n) in plan.nbufs.iter().enumerate() {
+        for idx in 0..n {
+            if !by_slot.contains_key(&(c, idx)) {
+                return Err(VerifyError::UnusedSlot { class: class_of(c), slot: idx });
+            }
+        }
+    }
+
+    // ---- pass 4: weights --------------------------------------------
+    for (i, req) in plan.weights.iter().enumerate() {
+        if plan.weights[..i].iter().any(|r| r.name == req.name) {
+            return Err(VerifyError::WeightDup { name: req.name.clone() });
+        }
+    }
+    let mut used = vec![false; plan.weights.len()];
+    {
+        let mut need = |step: usize,
+                        name: &str,
+                        dtype: WeightDType,
+                        shape: Vec<usize>|
+         -> Result<(), VerifyError> {
+            match plan.weights.iter().position(|r| r.name == name) {
+                None => Err(VerifyError::WeightMissing { step, name: name.to_string() }),
+                Some(i) => {
+                    let req = &plan.weights[i];
+                    if req.dtype != dtype || req.shape != shape {
+                        return Err(VerifyError::WeightShape {
+                            step,
+                            name: name.to_string(),
+                            want: weight_desc(dtype, &shape),
+                            got: weight_desc(req.dtype, &req.shape),
+                        });
+                    }
+                    used[i] = true;
+                    Ok(())
+                }
+            }
+        };
+        for (j, step) in plan.steps.iter().enumerate() {
+            let t = &step.in_ty;
+            match &step.kind {
+                StepKind::Binarize { scheme } => match scheme {
+                    Scheme::Rgb => need(j, "input_t", WeightDType::F32, vec![3])?,
+                    Scheme::Gray => need(j, "input_t", WeightDType::F32, vec![1])?,
+                    Scheme::Lbp | Scheme::None => {}
+                },
+                StepKind::ConvBinPacked { c_out, nw, w, .. } => {
+                    need(j, w, WeightDType::U32, vec![*c_out, *nw])?;
+                }
+                StepKind::ConvBinWords { k, c_out, w, .. } => {
+                    need(j, w, WeightDType::U32, vec![*c_out, k * k])?;
+                }
+                StepKind::ConvFloat { k, c_out, w, b, .. } => {
+                    need(j, w, WeightDType::F32, vec![*c_out, k * k * t.c])?;
+                    if let Some(b) = b {
+                        need(j, b, WeightDType::F32, vec![*c_out])?;
+                    }
+                }
+                StepKind::ThresholdPack { theta, flip, .. }
+                | StepKind::ThresholdPm1 { theta, flip } => {
+                    need(j, theta, WeightDType::F32, vec![t.c])?;
+                    need(j, flip, WeightDType::U32, vec![t.c])?;
+                }
+                StepKind::FcBin { kw, c_out, w, .. } => {
+                    need(j, w, WeightDType::U32, vec![*c_out, *kw])?;
+                }
+                StepKind::FcFloat { d, c_out, w, b, .. } => {
+                    need(j, w, WeightDType::F32, vec![*c_out, *d])?;
+                    if let Some(b) = b {
+                        need(j, b, WeightDType::F32, vec![*c_out])?;
+                    }
+                }
+                StepKind::MaxPool | StepKind::OrPool => {}
+            }
+        }
+    }
+    if let Some(i) = used.iter().position(|&u| !u) {
+        return Err(VerifyError::WeightUnused { name: plan.weights[i].name.clone() });
+    }
+
+    // ---- the proven envelope ----------------------------------------
+    let mut peak: [Vec<usize>; 3] = [
+        vec![0; plan.nbufs[0]],
+        vec![0; plan.nbufs[1]],
+        vec![0; plan.nbufs[2]],
+    ];
+    for e in &edges {
+        let p = &mut peak[e.slot.class as usize][e.slot.idx];
+        *p = (*p).max(e.elems);
+    }
+    let peak_bytes = [
+        peak[0].iter().sum::<usize>() * 4,
+        peak[1].iter().sum::<usize>() * 4,
+        peak[2].iter().sum::<usize>() * 4,
+    ];
+    Ok(VerifyReport {
+        steps: plan.steps.len(),
+        weights: plan.weights.len(),
+        slots: plan.nbufs,
+        intervals: edges.len(),
+        peak_bytes,
+    })
+}
+
+fn weight_desc(dtype: WeightDType, shape: &[usize]) -> String {
+    let d = match dtype {
+        WeightDType::F32 => "f32",
+        WeightDType::U32 => "u32",
+    };
+    format!("{d} {shape:?}")
+}
+
+/// Pass 1, per step: kind parameters vs edge types.  Pad-bit rules are
+/// checked before plain shape arithmetic so a packed-width violation is
+/// always reported as [`VerifyError::PadBits`].
+fn check_step_kind(j: usize, step: &Step) -> Result<(), VerifyError> {
+    let t = step.in_ty;
+    let o = step.out_ty;
+    let op = kind_name(&step.kind);
+    let ks = |why: String| VerifyError::KindShape { step: j, op: op.to_string(), why };
+    let pad = |why: String| VerifyError::PadBits { step: j, op: op.to_string(), why };
+    let want_out = |want: ValTy| -> Result<(), VerifyError> {
+        if o != want {
+            return Err(VerifyError::KindShape {
+                step: j,
+                op: op.to_string(),
+                why: format!(
+                    "output edge is {}, the effect signature covers {}",
+                    o.describe(),
+                    want.describe()
+                ),
+            });
+        }
+        Ok(())
+    };
+    let conv_params = |k: usize, c_out: usize| -> Result<(), VerifyError> {
+        if k == 0 || k % 2 == 0 {
+            return Err(VerifyError::KindShape {
+                step: j,
+                op: op.to_string(),
+                why: format!("kernel size {k} must be odd ('same' convolution)"),
+            });
+        }
+        if c_out == 0 {
+            return Err(VerifyError::KindShape {
+                step: j,
+                op: op.to_string(),
+                why: "output channels must be >= 1".to_string(),
+            });
+        }
+        Ok(())
+    };
+    let pool_extents = || -> Result<(), VerifyError> {
+        if t.h < 2 || t.w < 2 || t.h % 2 != 0 || t.w % 2 != 0 {
+            return Err(VerifyError::KindShape {
+                step: j,
+                op: op.to_string(),
+                why: format!("2x2 pool needs even extents >= 2, got {}", t.describe()),
+            });
+        }
+        Ok(())
+    };
+    match &step.kind {
+        StepKind::Binarize { scheme } => {
+            if *scheme == Scheme::None {
+                return Err(ks("scheme \"none\" has no binarize step".to_string()));
+            }
+            if t.kind != ValKind::F32 || t.c != IMG_C {
+                return Err(ks(format!("expects 3-channel float pixels, got {}", t.describe())));
+            }
+            want_out(ValTy { kind: ValKind::F32, h: t.h, w: t.w, c: scheme.input_channels() })?;
+        }
+        StepKind::ConvBinPacked { k, c_out, nw, d, .. } => {
+            if *nw != packed_width(*d, 32) {
+                return Err(pad(format!(
+                    "{nw} weight words per row cannot hold exactly d={d} packed bits \
+                     (want {}) — tail-pad masking would be unsound",
+                    packed_width(*d, 32)
+                )));
+            }
+            conv_params(*k, *c_out)?;
+            if t.kind != ValKind::F32 {
+                return Err(ks(format!("expects ±1 float input, got {}", t.describe())));
+            }
+            if *d != k * k * t.c {
+                return Err(ks(format!("patch depth d={d} != k*k*c = {}", k * k * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::Counts, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::ConvBinWords { k, c_out, d, .. } => {
+            if t.kind != ValKind::Words {
+                return Err(ks(format!("expects channel-packed words, got {}", t.describe())));
+            }
+            if t.c > 32 {
+                return Err(pad(format!(
+                    "channel-packed words carry at most 32 live channels, got {}",
+                    t.c
+                )));
+            }
+            conv_params(*k, *c_out)?;
+            if *d != k * k * t.c {
+                return Err(ks(format!("patch depth d={d} != k*k*c = {}", k * k * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::Counts, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::ConvFloat { k, c_out, .. } => {
+            conv_params(*k, *c_out)?;
+            if t.kind != ValKind::F32 {
+                return Err(ks(format!("expects float input, got {}", t.describe())));
+            }
+            want_out(ValTy { kind: ValKind::F32, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::MaxPool => {
+            if t.kind != ValKind::F32 {
+                return Err(ks(format!("expects float input, got {}", t.describe())));
+            }
+            pool_extents()?;
+            want_out(ValTy { kind: ValKind::F32, h: t.h / 2, w: t.w / 2, c: t.c })?;
+        }
+        StepKind::OrPool => {
+            if t.kind != ValKind::Words {
+                return Err(ks(format!("expects channel-packed words, got {}", t.describe())));
+            }
+            if t.c > 32 {
+                return Err(pad(format!(
+                    "channel-packed words carry at most 32 live channels, got {}",
+                    t.c
+                )));
+            }
+            pool_extents()?;
+            want_out(ValTy { kind: ValKind::Words, h: t.h / 2, w: t.w / 2, c: t.c })?;
+        }
+        StepKind::ThresholdPack { f32_in, .. } => {
+            if t.kind != ValKind::F32 && t.kind != ValKind::Counts {
+                return Err(ks(format!(
+                    "expects conv counts or float activations, got {}",
+                    t.describe()
+                )));
+            }
+            if *f32_in != (t.kind == ValKind::F32) {
+                return Err(ks(format!(
+                    "f32_in={f32_in} disagrees with the input edge kind ({})",
+                    t.describe()
+                )));
+            }
+            if t.c > 32 {
+                return Err(pad(format!(
+                    "threshold packs into one word per pixel; {} channels > 32",
+                    t.c
+                )));
+            }
+            want_out(ValTy { kind: ValKind::Words, h: t.h, w: t.w, c: t.c })?;
+        }
+        StepKind::ThresholdPm1 { .. } => {
+            if t.kind != ValKind::Counts || (t.h, t.w) != (1, 1) {
+                return Err(ks(format!("expects flat FC counts, got {}", t.describe())));
+            }
+            want_out(ValTy { kind: ValKind::F32, h: 1, w: 1, c: t.c })?;
+        }
+        StepKind::FcBin { kw, c_out, d, .. } => {
+            if t.kind != ValKind::Words {
+                return Err(ks(format!("expects channel-packed words, got {}", t.describe())));
+            }
+            if t.c > 32 {
+                return Err(pad(format!(
+                    "channel-packed words carry at most 32 live channels, got {}",
+                    t.c
+                )));
+            }
+            if *c_out == 0 {
+                return Err(ks("output width must be >= 1".to_string()));
+            }
+            if *kw != t.h * t.w {
+                return Err(ks(format!("row width kw={kw} != h*w = {}", t.h * t.w)));
+            }
+            if *d != kw * t.c {
+                return Err(ks(format!("real bit depth d={d} != kw*c = {}", kw * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::Counts, h: 1, w: 1, c: *c_out })?;
+        }
+        StepKind::FcFloat { d, c_out, .. } => {
+            if t.kind != ValKind::F32 {
+                return Err(ks(format!("expects float features, got {}", t.describe())));
+            }
+            if *c_out == 0 {
+                return Err(ks("output width must be >= 1".to_string()));
+            }
+            if *d != t.h * t.w * t.c {
+                return Err(ks(format!("input depth d={d} != h*w*c = {}", t.h * t.w * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::F32, h: 1, w: 1, c: *c_out })?;
+        }
+    }
+    Ok(())
+}
+
+/// Pass 1, per step: every slot's storage class matches the value
+/// mapped to it, and scratch presence matches the effect signature.
+fn check_step_slots(j: usize, step: &Step) -> Result<(), VerifyError> {
+    if step.output.class != step.out_ty.class() {
+        return Err(VerifyError::SlotDtype {
+            step: j,
+            slot: step.output,
+            want: format!("the {} output value", step.out_ty.describe()),
+        });
+    }
+    if let Src::Buf(b) = step.input {
+        if b.class != step.in_ty.class() {
+            return Err(VerifyError::SlotDtype {
+                step: j,
+                slot: b,
+                want: format!("the {} input value", step.in_ty.describe()),
+            });
+        }
+    }
+    let eff = step_effect(&step.kind);
+    match (step.scratch, scratch_class(&step.kind)) {
+        (None, None) => {}
+        (Some(s), Some(c)) => {
+            if s.class != c {
+                return Err(VerifyError::SlotDtype {
+                    step: j,
+                    slot: s,
+                    want: format!("the step's {} scratch", class_name(c)),
+                });
+            }
+        }
+        (Some(_), None) => {
+            return Err(VerifyError::KindShape {
+                step: j,
+                op: kind_name(&step.kind).to_string(),
+                why: "binds a scratch slot but its effect signature clobbers none".to_string(),
+            })
+        }
+        (None, Some(_)) => {
+            return Err(VerifyError::KindShape {
+                step: j,
+                op: kind_name(&step.kind).to_string(),
+                why: "effect signature clobbers scratch but no slot is bound".to_string(),
+            })
+        }
+    }
+    debug_assert_eq!(eff.clobbers_scratch, scratch_class(&step.kind).is_some());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::graph::{Activation, LayerOp, NetworkSpec};
+
+    fn all_specs() -> Vec<NetworkSpec> {
+        vec![
+            NetworkSpec::legacy_bcnn(Scheme::Rgb),
+            NetworkSpec::legacy_bcnn(Scheme::Gray),
+            NetworkSpec::legacy_bcnn(Scheme::Lbp),
+            NetworkSpec::legacy_bcnn(Scheme::None),
+            NetworkSpec::legacy_float(),
+        ]
+    }
+
+    fn three_conv_spec() -> NetworkSpec {
+        NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 5, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 64 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        }
+    }
+
+    #[test]
+    fn every_legacy_plan_verifies_clean() {
+        for spec in all_specs() {
+            let plan = spec.plan().unwrap();
+            let report = verify_plan(&plan).unwrap_or_else(|e| panic!("clean plan refused: {e}"));
+            assert_eq!(report.steps, plan.steps.len());
+            assert_eq!(report.slots, plan.nbufs);
+            assert_eq!(report.weights, plan.weights.len());
+            // every step contributes at least its output edge, and the
+            // interval count never exceeds outputs + one scratch each
+            assert!(report.intervals >= plan.steps.len());
+            assert!(report.intervals <= 2 * plan.steps.len());
+            assert!(report.peak_bytes[0] > 0, "every plan holds float logits");
+        }
+    }
+
+    #[test]
+    fn the_three_conv_arch_plan_verifies_clean() {
+        let plan = three_conv_spec().plan().unwrap();
+        let report = verify_plan(&plan).unwrap();
+        assert_eq!(report.slots, [2, 2, 1]);
+        assert_eq!(report.weights, plan.weights.len());
+    }
+
+    #[test]
+    fn the_report_prices_the_legacy_rgb_arena_exactly() {
+        // hand-computed envelope for the legacy rgb plan: each slot
+        // costs its largest resident edge (per image, 4-byte elements)
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        let report = verify_plan(&plan).unwrap();
+        // f32: slot 0 peaks at the binarized image (96*96*3), slot 1 at
+        // the 100-wide fc tail; u32: slot 0 at conv1's packed patch
+        // gather (96*96*3 words), slot 1 at the pooled words (48*48);
+        // i32: slot 0 at conv1's counts (96*96*32)
+        assert_eq!(report.peak_elems(), [96 * 96 * 3 + 100, 96 * 96 * 3 + 48 * 48, 96 * 96 * 32]);
+    }
+
+    #[test]
+    fn report_json_carries_the_envelope_fields() {
+        let plan = NetworkSpec::legacy_float().plan().unwrap();
+        let j = verify_plan(&plan).unwrap().to_json();
+        for key in ["steps", "weights", "slots", "intervals", "peak_bytes"] {
+            assert!(j.get(key).is_ok(), "missing {key}");
+        }
+        assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), plan.steps.len());
+    }
+
+    #[test]
+    fn verify_errors_name_the_site() {
+        // structured errors: the aliasing report names the slot and both
+        // conflicting intervals (the loader's refusal message relies on
+        // this being diagnosable without a debugger)
+        use crate::bnn::graph::plan::Corruption;
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb)
+            .plan()
+            .unwrap()
+            .corrupt_for_test(Corruption::SlotMerge);
+        let err = verify_plan(&plan).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("aliased") && msg.contains("live ["), "{msg}");
+        match err {
+            VerifyError::SlotAliased { a, b, .. } => {
+                assert!(a.live.1 >= b.live.0 && b.live.1 >= a.live.0, "intervals overlap");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+}

@@ -61,6 +61,10 @@ pub fn im2col_float_batch(
 /// resized and fully re-initialized (capacity grows monotonically across
 /// calls), so reusing one buffer across differently-sized batches can
 /// never leak state between calls.
+///
+/// Write coverage: resizes `out` to exactly N·H·W·K·K·C and assigns
+/// every element (zeroed, then patch rows copied in); prior contents are
+/// never read.
 pub fn im2col_float_batch_into(
     xs: &[f32],
     n: usize,
@@ -220,6 +224,10 @@ pub fn im2col_pack_batch(
 /// `im2col_pack_batch` into a caller-owned buffer (capacity grows
 /// monotonically; no pre-zeroing — the `BitWriter` flushes exactly
 /// `ceil(K*K*C/b)` words per patch row, covering every element).
+///
+/// Write coverage: resizes `out` to exactly N·H·W·NW and assigns every
+/// word via the per-row `BitWriter` flush; a dirty buffer comes out
+/// identical to a fresh allocation.
 pub fn im2col_pack_batch_into(
     xs: &[f32],
     n: usize,
@@ -334,6 +342,10 @@ pub fn im2col_words_batch(
 
 /// `im2col_words_batch` into a caller-owned buffer (resized + fully
 /// re-initialized every call; capacity grows monotonically).
+///
+/// Write coverage: resizes `out` to exactly N·H·W·K·K·NW and assigns
+/// every element (zeroed, then in-bounds words copied in); prior
+/// contents are never read.
 pub fn im2col_words_batch_into(
     words: &[u32],
     n: usize,

@@ -98,6 +98,10 @@ pub fn maxpool2x2_batch(
 /// `maxpool2x2_batch` into a caller-owned buffer (resized + fully
 /// re-initialized every call, so cross-batch reuse cannot leak state;
 /// capacity grows monotonically).
+///
+/// Write coverage: resizes `out` to exactly N·(H/2)·(W/2)·C and
+/// re-initializes every element (`NEG_INFINITY` fill, then max-reduced);
+/// prior contents are never read.
 pub fn maxpool2x2_batch_into(
     x: &[f32],
     n: usize,
@@ -175,6 +179,10 @@ pub fn orpool2x2_batch(
 /// `orpool2x2_batch` into a caller-owned buffer (capacity grows
 /// monotonically; no pre-zeroing — `orpool2x2_image_into` assigns every
 /// output word, it never ORs into existing contents).
+///
+/// Write coverage: resizes `out` to exactly N·(H/2)·(W/2)·NW and assigns
+/// every word exactly once; a dirty buffer comes out identical to a
+/// fresh allocation.
 pub fn orpool2x2_batch_into(
     words: &[u32],
     n: usize,

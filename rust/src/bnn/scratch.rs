@@ -23,6 +23,11 @@
 //! steps, batches of different sizes, or even different *plans* (the
 //! backend pool hands arenas to whatever runs next) can never leak
 //! state — property-tested in [`crate::bnn::graph::exec`] and below.
+//! The slot *assignment* this arena trusts — that no two live edges
+//! share a slot and every slot's class matches its edges — is not
+//! assumed either: [`crate::bnn::graph::verify_plan`] independently
+//! re-proves it from per-step effect signatures before a plan may be
+//! published or (in debug builds) bound.
 //!
 //! By default slot capacity only grows (monotone high-water mark sized
 //! by the largest batch seen).  Long-lived serving workers opt into a

@@ -11,6 +11,7 @@ use crate::bnn::graph::CompiledNetwork;
 use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
 use crate::bnn::scratch::PlanScratch;
 use crate::runtime::{Artifacts, ModelRuntime, RuntimeError};
+use crate::util::lockorder;
 use crate::util::threadpool::scoped_map;
 
 pub const IMG_ELEMS: usize = 96 * 96 * 3;
@@ -134,15 +135,21 @@ impl InferBackend for EngineBackend {
         // tensors.
         let run = |lo: usize, hi: usize| -> Result<Vec<[f32; NUM_CLASSES]>, String> {
             let xs = &images[lo * IMG_ELEMS..hi * IMG_ELEMS];
-            let mut scratch = self
-                .scratch_pool
-                .lock()
-                .unwrap()
-                .pop()
-                .unwrap_or_else(|| PlanScratch::with_decay(PlanScratch::SERVING_DECAY_BATCHES));
+            // the pool mutex is the highest-ranked lock in the stack
+            // (held only around a pop/push, never across the forward)
+            let mut scratch = {
+                let mut pool = self.scratch_pool.lock().unwrap();
+                let _ord = lockorder::acquired(lockorder::SCRATCH_POOL, "backend.scratch_pool");
+                pool.pop()
+            }
+            .unwrap_or_else(|| PlanScratch::with_decay(PlanScratch::SERVING_DECAY_BATCHES));
             let result =
                 self.model.infer_batch_with(xs, &mut scratch).map_err(|e| e.to_string());
-            self.scratch_pool.lock().unwrap().push(scratch);
+            {
+                let mut pool = self.scratch_pool.lock().unwrap();
+                let _ord = lockorder::acquired(lockorder::SCRATCH_POOL, "backend.scratch_pool");
+                pool.push(scratch);
+            }
             result
         };
         let per = n.div_ceil(self.threads.min(n));

@@ -62,7 +62,7 @@ pub fn plan_batches(n: usize, supported: &[usize]) -> Vec<(usize, usize)> {
         // largest supported <= left, else smallest supported >= left
         let exec = match supported.iter().rev().find(|&&b| b <= left) {
             Some(&b) => b,
-            None => *supported.first().unwrap(),
+            None => *supported.first().expect("plan_batches: asserted non-empty above"),
         };
         let real = exec.min(left);
         plan.push((real, exec));

@@ -55,6 +55,29 @@
 //! mix two versions' weights.  The full request lifecycle is
 //! diagrammed in `docs/ARCHITECTURE.md`, the wire format in
 //! `docs/PROTOCOL.md`.
+//!
+//! # Lock order
+//!
+//! The serving plane holds locks from three owners, and two paths
+//! genuinely nest them: publication holds registry state while adding a
+//! router lane and swapping the route snapshot, and `list_models` reads
+//! lane metrics under registry state.  Deadlock freedom rests on one
+//! rule — **locks are acquired in ascending rank only** — asserted in
+//! debug builds by [`crate::util::lockorder`] witnesses at every
+//! instrumented site:
+//!
+//! | rank | lock | owner | held where |
+//! |------|------|-------|------------|
+//! | 10 | `state` (Mutex) | `ModelRegistry` | admin ops; outermost |
+//! | 20 | `lanes` (RwLock) | `Router` | resolution reads; publish/retire writes (nested under 10) |
+//! | 30 | `routes` (RwLock) | `ModelRegistry` | snapshot swap (nested under 10); resolve reads |
+//! | 40 | `counters` (Mutex) | `ModelRegistry` | leaf, admin side |
+//! | 50 | `scratch_pool` (Mutex) | `EngineBackend` | leaf, serving side; only around a pop/push, never across a forward |
+//!
+//! Locks outside the table (`Router::default_variant`, each `Lane`'s
+//! `batcher` mutex, queue/metrics internals) are never held together
+//! with another lock — enforced by expression-scoping at their only
+//! call sites rather than by rank.
 
 pub mod backend;
 pub mod batcher;

@@ -23,6 +23,7 @@ use super::metrics::Metrics;
 use super::queue::{BoundedQueue, PushError};
 use super::request::{InferRequest, InferResponse, RequestId};
 use crate::util::json::{Json, JsonObj};
+use crate::util::lockorder;
 
 #[derive(Debug)]
 pub enum RouteError {
@@ -141,6 +142,7 @@ impl Router {
             variant.to_string()
         };
         let lanes = self.lanes.read().unwrap();
+        let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
         lanes.get(&key).cloned().ok_or_else(|| {
             RouteError::UnknownVariant(
                 key.clone(),
@@ -173,6 +175,7 @@ impl Router {
         let name = name.into();
         {
             let mut lanes = self.lanes.write().unwrap();
+            let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
             if lanes.contains_key(&name) {
                 return Err(RouteError::LaneExists(name));
             }
@@ -210,6 +213,7 @@ impl Router {
     pub fn remove_lane(&self, name: &str) -> Result<(), RouteError> {
         let lane = {
             let mut lanes = self.lanes.write().unwrap();
+            let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
             match lanes.remove(name) {
                 Some(lane) => lane,
                 None => {
@@ -236,6 +240,7 @@ impl Router {
     pub fn set_default(&self, name: &str) -> Result<(), RouteError> {
         {
             let lanes = self.lanes.read().unwrap();
+            let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
             if !lanes.contains_key(name) {
                 return Err(RouteError::UnknownVariant(
                     name.to_string(),
@@ -401,6 +406,7 @@ impl Router {
     /// Aggregate stats across all lanes.
     pub fn stats(&self) -> Json {
         let lanes = self.lanes.read().unwrap();
+        let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
         let mut obj = JsonObj::new();
         let mut names: Vec<&String> = lanes.keys().collect();
         names.sort();
@@ -412,7 +418,9 @@ impl Router {
 
     /// Close all queues (drains in-flight work; batchers exit).
     pub fn shutdown(&self) {
-        for lane in self.lanes.read().unwrap().values() {
+        let lanes = self.lanes.read().unwrap();
+        let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
+        for lane in lanes.values() {
             lane.queue.close();
         }
     }

@@ -19,6 +19,12 @@
 //! `artifacts/*.hlo.txt` + weight/test containers once, and the `repro`
 //! binary serves from them.
 
+// The engine needs no unsafe: the one pointer-reinterpret the popcount
+// path used to carry was replaced by a safe shift+or fuse (bnn::packing
+// ::fuse64).  Any future unsafe block must argue for a module-level
+// exemption here.
+#![deny(unsafe_code)]
+
 pub mod bnn {
     //! Pure-Rust binarized inference engine (the paper's CUDA kernels,
     //! re-expressed for CPU: u64 xnor+popcount, cache-blocked GEMM).
@@ -63,6 +69,7 @@ pub mod util {
     pub mod error;
     pub mod histogram;
     pub mod json;
+    pub mod lockorder;
     pub mod prop;
     pub mod rng;
     pub mod tensorio;

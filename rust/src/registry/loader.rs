@@ -9,18 +9,24 @@
 //! 2. FNV-1a 64 checksum over the raw weight-file bytes against the
 //!    manifest's `fnv1a64:<hex>` declaration;
 //! 3. graph-plan compilation (the manifest's `arch` or the synthesized
-//!    legacy topology) + tensor-container parse + weight binding, all
-//!    shape-checked by the plan;
-//! 4. smoke inference: one deterministic synthetic image must produce
-//!    the plan's declared logit count, all finite.
+//!    legacy topology) + tensor-container parse;
+//! 4. static plan verification ([`verify_plan`]): aliasing soundness of
+//!    the scratch coloring, dataflow well-formedness, slot dtype/extent
+//!    domination, and weight-binding totality are proven on the
+//!    compiled plan *before* any weight is bound — a refusal here is
+//!    [`RegistryError::Verify`], counted in `registry.verify_failures`;
+//! 5. weight binding (shape-checked by the plan) + smoke inference: one
+//!    deterministic synthetic image must produce the plan's declared
+//!    logit count, all finite.
 //!
-//! A failure at any stage is a structured [`RegistryError::Load`]; the
-//! registry never publishes a backend that did not pass all four.
+//! A failure at any other stage is a structured
+//! [`RegistryError::Load`]; the registry never publishes a backend that
+//! did not pass all five.
 
 use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc};
 
-use crate::bnn::graph::{CompiledNetwork, NetworkSpec};
+use crate::bnn::graph::{verify_plan, CompiledNetwork, NetworkSpec, Plan, VerifyReport};
 use crate::coordinator::{EngineBackend, InferBackend};
 use crate::dataset::synth;
 use crate::input::binarize::Scheme;
@@ -64,6 +70,9 @@ pub(crate) struct Loaded {
     pub backend: Arc<dyn InferBackend>,
     /// Per-model batch-policy overrides from the manifest entry.
     pub batch: Option<RegistryBatchSpec>,
+    /// Static-verification envelope for the compiled plan (surfaced
+    /// per-entry by `list_models`).
+    pub report: VerifyReport,
 }
 
 struct Job {
@@ -170,7 +179,15 @@ fn load_entry(
             }
         },
     };
-    let compiled = CompiledNetwork::from_tensor_file(&tf, &graph_spec).map_err(load_err)?;
+    let plan = graph_spec.plan().map_err(load_err)?;
+    let plan = corrupt_plan_from_env(name, plan);
+    // stage 4: the verifier independently re-proves what the compiler
+    // constructed — scratch aliasing, dataflow, extents, weight
+    // declarations — so a wrong plan is refused before it binds weights
+    // or serves a single request
+    let report =
+        verify_plan(&plan).map_err(|e| RegistryError::Verify(format!("{name}@{version}: {e}")))?;
+    let compiled = CompiledNetwork::from_plan(plan, &tf).map_err(load_err)?;
     let classes = compiled.num_classes();
     let label = match spec.kind.as_str() {
         "float" => "engine/float".to_string(),
@@ -179,7 +196,36 @@ fn load_entry(
     let backend: Arc<dyn InferBackend> =
         Arc::new(EngineBackend::compiled(compiled, threads, label));
     smoke_test(&*backend, classes)?;
-    Ok(Loaded { kind: spec.kind, scheme: spec.scheme, checksum: got, backend, batch: spec.batch })
+    Ok(Loaded {
+        kind: spec.kind,
+        scheme: spec.scheme,
+        checksum: got,
+        backend,
+        batch: spec.batch,
+        report,
+    })
+}
+
+/// Test-only fault injection: when `BCNN_TEST_CORRUPT_PLAN` is set to
+/// `"<model-name>:<corruption-name>"` and `name` matches, the named
+/// [`Corruption`](crate::bnn::graph::Corruption) is applied to the
+/// freshly-compiled plan.  This is how the e2e suite proves the
+/// verification stage actually gates publication — the compiler alone
+/// cannot emit an unsound plan, so the corruption has to be injected
+/// between compilation and verification, exactly where a future rewrite
+/// pass would sit.  Scoped by model name so concurrent tests (and every
+/// production load) are untouched.
+fn corrupt_plan_from_env(name: &str, plan: Plan) -> Plan {
+    if let Ok(spec) = std::env::var("BCNN_TEST_CORRUPT_PLAN") {
+        if let Some((model, corruption)) = spec.split_once(':') {
+            if model == name {
+                if let Some(c) = crate::bnn::graph::Corruption::parse(corruption) {
+                    return plan.corrupt_for_test(c);
+                }
+            }
+        }
+    }
+    plan
 }
 
 /// One deterministic synthetic image through a freshly-built backend:

@@ -22,9 +22,12 @@
 //!   version while new admissions see the new one.
 //! * **Validated loads off the hot path.**  A background loader thread
 //!   (`loader.rs`) re-reads `registry.json`, checksums the weight file
-//!   (FNV-1a 64), parses and shape-checks the container, and
-//!   smoke-infers one synthetic image — only then is the entry
-//!   published.  Serving threads never parse artifacts.
+//!   (FNV-1a 64), parses and shape-checks the container, statically
+//!   verifies the compiled plan ([`crate::bnn::graph::verify_plan`]:
+//!   aliasing, dataflow, extents, weight bindings), and smoke-infers
+//!   one synthetic image — only then is the entry published.  Serving
+//!   threads never parse artifacts, and a plan that fails verification
+//!   never serves (counted in `registry.verify_failures`).
 //! * **Graceful retirement.**  Unloading removes the entry from the
 //!   snapshot first, then retires its lane: the queue closes, the
 //!   executors drain every already-admitted request, and the threads
@@ -43,10 +46,12 @@ use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 
+use crate::bnn::graph::VerifyReport;
 use crate::bnn::network::NUM_CLASSES;
 use crate::coordinator::{BatchPolicy, InferBackend, Router};
 use crate::runtime::RegistryBatchSpec;
 use crate::util::json::{Json, JsonObj};
+use crate::util::lockorder;
 use crate::util::threadpool::default_threads;
 
 #[derive(Debug)]
@@ -58,6 +63,9 @@ pub enum RegistryError {
     NoModelsDir,
     LoaderGone,
     Load(String),
+    /// The compiled plan failed static verification
+    /// ([`crate::bnn::graph::verify_plan`]); the entry is never published.
+    Verify(String),
 }
 
 crate::error_enum_impls!(RegistryError {
@@ -70,6 +78,7 @@ crate::error_enum_impls!(RegistryError {
     RegistryError::NoModelsDir => ("server started without --models; load_model is unavailable"),
     RegistryError::LoaderGone => ("model loader thread is gone"),
     RegistryError::Load(msg) => ("model load failed: {msg}"),
+    RegistryError::Verify(msg) => ("plan verification failed: {msg}"),
 });
 
 /// Identity of one published model version.
@@ -133,6 +142,11 @@ pub struct EntryMeta {
     /// the registry default merged with the entry's `"batch"` manifest
     /// overrides.  Reported per model by `list_models`.
     pub policy: BatchPolicy,
+    /// Static-verification report for file loads (the loader runs
+    /// [`crate::bnn::graph::verify_plan`] on the compiled plan before
+    /// publication); `None` for programmatic publications, which hand
+    /// the registry an opaque backend rather than a plan.
+    pub verify: Option<VerifyReport>,
 }
 
 /// Mutable registry state, guarded by one mutex and only ever touched
@@ -182,6 +196,9 @@ impl RouteTable {
 struct Counters {
     loads: u64,
     load_failures: u64,
+    /// Loads refused because the compiled plan failed static
+    /// verification (a subset of `load_failures`).
+    verify_failures: u64,
     swaps: u64,
     evictions: u64,
 }
@@ -251,6 +268,7 @@ impl ModelRegistry {
                 scheme: scheme.to_string(),
                 checksum,
                 policy,
+                verify: None,
             },
             backend,
         )
@@ -264,6 +282,7 @@ impl ModelRegistry {
         let loader = self.loader.as_ref().ok_or(RegistryError::NoModelsDir)?;
         {
             let st = self.state.lock().unwrap();
+            let _ord = lockorder::acquired(lockorder::REGISTRY_STATE, "registry.state");
             if st.entries.get(name).is_some_and(|vs| vs.contains_key(&version)) {
                 return Err(RegistryError::Exists(format!("{name}@{version}")));
             }
@@ -277,6 +296,7 @@ impl ModelRegistry {
                         scheme: loaded.scheme,
                         checksum: Some(loaded.checksum),
                         policy: effective_policy(self.router.default_policy(), loaded.batch),
+                        verify: Some(loaded.report),
                     },
                     loaded.backend,
                 )?;
@@ -284,7 +304,12 @@ impl ModelRegistry {
                 Ok(key)
             }
             Err(e) => {
-                self.counters.lock().unwrap().load_failures += 1;
+                let mut c = self.counters.lock().unwrap();
+                let _ord = lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
+                c.load_failures += 1;
+                if matches!(e, RegistryError::Verify(_)) {
+                    c.verify_failures += 1;
+                }
                 Err(e)
             }
         }
@@ -297,6 +322,7 @@ impl ModelRegistry {
     ) -> Result<String, RegistryError> {
         let lane_key = meta.key.lane();
         let mut st = self.state.lock().unwrap();
+        let _ord = lockorder::acquired(lockorder::REGISTRY_STATE, "registry.state");
         if st
             .entries
             .get(&meta.key.name)
@@ -334,6 +360,7 @@ impl ModelRegistry {
     ///   highest loaded version).
     pub fn set_default(&self, name: &str, version: Option<u32>) -> Result<String, RegistryError> {
         let mut st = self.state.lock().unwrap();
+        let _ord = lockorder::acquired(lockorder::REGISTRY_STATE, "registry.state");
         let Some(versions) = st.entries.get(name) else {
             let avail = st.available();
             return Err(RegistryError::Unknown(name.to_string(), avail));
@@ -371,6 +398,7 @@ impl ModelRegistry {
     pub fn unload_model(&self, name: &str, version: u32) -> Result<String, RegistryError> {
         let lane_key = format!("{name}@{version}");
         let mut st = self.state.lock().unwrap();
+        let _ord = lockorder::acquired(lockorder::REGISTRY_STATE, "registry.state");
         if !st.entries.get(name).is_some_and(|vs| vs.contains_key(&version)) {
             let avail = st.available();
             return Err(RegistryError::Unknown(lane_key, avail));
@@ -406,6 +434,9 @@ impl ModelRegistry {
         Ok(lane_key)
     }
 
+    /// Swap the route snapshot.  Runs while `state` is held (rank 10 →
+    /// rank 30, ascending — the one admin-side nesting the lock-order
+    /// table in [`crate::coordinator`] pins down).
     fn rebuild_routes(&self, st: &State) {
         let mut aliases = HashMap::new();
         for (name, versions) in &st.entries {
@@ -422,7 +453,9 @@ impl ModelRegistry {
             .get(&st.default_name)
             .map(|v| format!("{}@{v}", st.default_name))
             .unwrap_or_default();
-        *self.routes.write().unwrap() = Arc::new(RouteTable { aliases, default_key });
+        let mut routes = self.routes.write().unwrap();
+        let _ord = lockorder::acquired(lockorder::REGISTRY_ROUTES, "registry.routes");
+        *routes = Arc::new(RouteTable { aliases, default_key });
     }
 
     /// The lane key currently serving the empty model reference
@@ -435,6 +468,7 @@ impl ModelRegistry {
     /// its lane's traffic counters (the `list_models` admin op body).
     pub fn list_models(&self) -> Json {
         let st = self.state.lock().unwrap();
+        let _ord = lockorder::acquired(lockorder::REGISTRY_STATE, "registry.state");
         let mut rows = Vec::new();
         for (name, versions) in &st.entries {
             for (version, meta) in versions {
@@ -461,6 +495,15 @@ impl ModelRegistry {
                 batch.insert("max_images", Json::from(meta.policy.max_batch));
                 batch.insert("executors", Json::from(meta.policy.executors));
                 row.insert("batch", Json::Obj(batch));
+                // static-verification envelope for file-loaded entries
+                // (slot counts, interval count, peak arena bytes)
+                row.insert(
+                    "verify",
+                    match &meta.verify {
+                        Some(report) => report.to_json(),
+                        None => Json::Null,
+                    },
+                );
                 if let Ok(m) = self.router.metrics(&lane_key) {
                     row.insert("submitted", Json::from(m.submitted() as usize));
                     row.insert("completed", Json::from(m.completed() as usize));
@@ -477,9 +520,11 @@ impl ModelRegistry {
     /// section and part of every `list_models` reply).
     pub fn counters_json(&self) -> Json {
         let c = self.counters.lock().unwrap();
+        let _ord = lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
         let mut obj = JsonObj::new();
         obj.insert("loads", Json::from(c.loads as usize));
         obj.insert("load_failures", Json::from(c.load_failures as usize));
+        obj.insert("verify_failures", Json::from(c.verify_failures as usize));
         obj.insert("swaps", Json::from(c.swaps as usize));
         obj.insert("evictions", Json::from(c.evictions as usize));
         Json::Obj(obj)
@@ -716,6 +761,9 @@ mod tests {
             "fnv1a64:000000000000abcd"
         );
         assert_eq!(v1.get("completed").unwrap().as_usize().unwrap(), 1);
+        // programmatic publications hand over an opaque backend — no
+        // plan, so no verification envelope
+        assert_eq!(v1.get("verify").unwrap(), &Json::Null);
         let v2 = &rows[1];
         assert!(!v2.get("serving").unwrap().as_bool().unwrap());
         assert_eq!(v2.get("checksum").unwrap(), &Json::Null);
@@ -804,6 +852,50 @@ mod tests {
             r.counters_json().get("load_failures").unwrap().as_usize().unwrap(),
             2
         );
+        r.shutdown();
+    }
+
+    #[test]
+    fn a_corrupted_plan_is_refused_before_publication() {
+        // the loader's test-only fault hook corrupts one named model's
+        // plan AFTER compilation — exactly the class of data bug a
+        // hand-edited or rewritten plan could carry — and the verifier
+        // must refuse it before it ever serves
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-verify-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tf = synth_bcnn_tf(Scheme::Rgb, 300);
+        tf.save(dir.join("mutant.bcnt")).unwrap();
+        let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("mutant.bcnt")).unwrap()));
+        let manifest = format!(
+            r#"{{"models": [
+  {{"name": "mutant", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "mutant.bcnt", "checksum": "{sum}"}}
+]}}"#
+        );
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        let r = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        std::env::set_var("BCNN_TEST_CORRUPT_PLAN", "mutant:slot-merge");
+        let err = r.load_model("mutant", 1).unwrap_err();
+        std::env::remove_var("BCNN_TEST_CORRUPT_PLAN");
+        assert!(matches!(err, RegistryError::Verify(_)), "{err}");
+        assert!(err.to_string().contains("aliased"), "{err}");
+        assert!(r.resolve("mutant").is_err(), "refused entries must never serve");
+        let c = r.counters_json();
+        assert_eq!(c.get("verify_failures").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(c.get("load_failures").unwrap().as_usize().unwrap(), 1);
+        // with the hook cleared the same artifact verifies clean and
+        // publishes, carrying its report into list_models
+        r.load_model("mutant", 1).unwrap();
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        let report = rows[0].get("verify").unwrap();
+        assert!(report.get("steps").unwrap().as_usize().unwrap() > 0);
+        assert!(report.get("intervals").unwrap().as_usize().unwrap() > 0);
         r.shutdown();
     }
 

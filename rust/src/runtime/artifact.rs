@@ -265,7 +265,9 @@ pub struct RegistryEntrySpec {
     /// Absent → the loader synthesizes the legacy 2-conv/2-fc spec from
     /// `kind`/`scheme`.  Stored as raw JSON here (structurally checked:
     /// non-empty array of `{"op": ...}` objects); full shape inference
-    /// happens in `bnn::graph` at load time.
+    /// happens in `bnn::graph` at load time, and the compiled plan must
+    /// then pass `bnn::graph::verify_plan` (aliasing/dataflow/extent/
+    /// weight proofs) before the loader will publish the entry.
     pub arch: Option<Json>,
     /// Optional per-model batch-policy overrides.
     pub batch: Option<RegistryBatchSpec>,

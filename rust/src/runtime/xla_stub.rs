@@ -16,16 +16,11 @@ pub enum Error {
     Unavailable,
 }
 
-impl std::fmt::Display for Error {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "PJRT/XLA runtime not available in this build (stubbed; link the `xla` crate to enable)"
-        )
-    }
-}
-
-impl std::error::Error for Error {}
+crate::error_enum_impls!(Error {
+    Error::Unavailable => (
+        "PJRT/XLA runtime not available in this build (stubbed; link the `xla` crate to enable)"
+    ),
+});
 
 /// Element types the runtime can transfer (mirrors `xla::ArrayElement`).
 pub trait ArrayElement: Copy {}

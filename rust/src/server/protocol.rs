@@ -131,7 +131,11 @@ pub enum Response {
     Variants(Vec<String>),
     Pong,
     /// `list_models` body: per-entry rows plus registry lifecycle
-    /// counters.
+    /// counters.  Each file-loaded row carries a `verify` object — the
+    /// plan's static-verification envelope (step/weight/interval
+    /// counts, slots and peak bytes per pool class) from
+    /// [`crate::bnn::graph::VerifyReport`]; the counters include
+    /// `verify_failures`, loads refused because verification failed.
     Models { models: Json, registry: Json },
     /// Acknowledgement of a state-changing admin op, naming the
     /// `name@version` it acted on.

@@ -1,0 +1,138 @@
+//! Debug-build lock-order witness for the serving plane.
+//!
+//! The coordinator stack holds locks from three owners — the registry's
+//! admin mutexes, the router's lane table, and each backend's scratch
+//! arena pool — and some admin paths genuinely nest them (publication
+//! adds a lane while holding registry state).  Deadlock freedom rests
+//! on one global rule: **locks are only ever acquired in ascending rank
+//! order** (see the rank constants below and the table in
+//! [`crate::coordinator`]).  This module makes that rule checkable: a
+//! thread-local stack of held ranks, asserted on every acquisition in
+//! debug builds and compiled to nothing in release.
+//!
+//! Usage — construct the witness immediately after taking the lock and
+//! bind it to a named `_`-prefixed variable so it lives as long as the
+//! guard (a bare `let _ = ...` would drop it on the same line):
+//!
+//! ```ignore
+//! let st = self.state.lock().unwrap();
+//! let _ord = lockorder::acquired(lockorder::REGISTRY_STATE, "registry.state");
+//! ```
+
+use std::cell::RefCell;
+
+/// `ModelRegistry::state` — admin-plane entry mutex; outermost because
+/// publication/eviction nest every other lock under it.
+pub const REGISTRY_STATE: u8 = 10;
+/// `Router`'s lane-table `RwLock` (read by every request resolution,
+/// written while registry state is held during publish/retire).
+pub const ROUTER_LANES: u8 = 20;
+/// `ModelRegistry::routes` — the route-snapshot `RwLock`, swapped while
+/// registry state is held.
+pub const REGISTRY_ROUTES: u8 = 30;
+/// `ModelRegistry::counters` — lifecycle counter mutex (leaf on the
+/// admin side).
+pub const REGISTRY_COUNTERS: u8 = 40;
+/// `EngineBackend`'s scratch-arena pool mutex (leaf on the serving
+/// side; held only around a pop/push, never across an inference).
+pub const SCRATCH_POOL: u8 = 50;
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Ranks (with names, for the panic message) of locks this thread
+    /// currently holds, in acquisition order.
+    static HELD: RefCell<Vec<(u8, &'static str)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII witness that this thread holds the lock ranked `rank`.  Panics
+/// (debug builds only) when `rank` does not exceed the rank of every
+/// lock the thread already holds.
+#[must_use = "bind as `let _ord = ...`; dropping immediately unregisters the lock"]
+pub struct OrderGuard {
+    #[cfg(debug_assertions)]
+    rank: u8,
+}
+
+/// Register an acquisition.  Call immediately after the lock call
+/// succeeds; drop the returned witness when the lock guard drops.
+pub fn acquired(rank: u8, name: &'static str) -> OrderGuard {
+    #[cfg(debug_assertions)]
+    {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(&(top, top_name)) = held.last() {
+                assert!(
+                    rank > top,
+                    "lock-order inversion: acquiring {name} (rank {rank}) while \
+                     holding {top_name} (rank {top})"
+                );
+            }
+            held.push((rank, name));
+        });
+        OrderGuard { rank }
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = (rank, name);
+        OrderGuard {}
+    }
+}
+
+impl Drop for OrderGuard {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            // rposition: same-rank reacquisition on sibling locks (two
+            // backends' pools) releases the most recent entry
+            if let Some(i) = held.iter().rposition(|&(r, _)| r == self.rank) {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascending_acquisition_is_clean() {
+        let _a = acquired(REGISTRY_STATE, "registry.state");
+        let _b = acquired(ROUTER_LANES, "router.lanes");
+        let _c = acquired(SCRATCH_POOL, "backend.scratch_pool");
+    }
+
+    #[test]
+    fn reacquisition_after_release_is_clean() {
+        // admin flows repeatedly take low-ranked locks after releasing
+        // higher-ranked ones; only SIMULTANEOUS holding is ordered
+        {
+            let _c = acquired(REGISTRY_COUNTERS, "registry.counters");
+        }
+        {
+            let _s = acquired(REGISTRY_STATE, "registry.state");
+            let _r = acquired(REGISTRY_ROUTES, "registry.routes");
+        }
+        let _c = acquired(REGISTRY_COUNTERS, "registry.counters");
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore)]
+    #[should_panic(expected = "lock-order inversion")]
+    fn descending_acquisition_panics() {
+        let _pool = acquired(SCRATCH_POOL, "backend.scratch_pool");
+        let _state = acquired(REGISTRY_STATE, "registry.state");
+    }
+
+    #[test]
+    fn threads_track_independently() {
+        let _a = acquired(SCRATCH_POOL, "backend.scratch_pool");
+        // another thread holding nothing may take a low rank freely
+        std::thread::spawn(|| {
+            let _b = acquired(REGISTRY_STATE, "registry.state");
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -375,6 +375,75 @@ fn manifest_declared_arch_loads_smoke_infers_and_serves_end_to_end() {
 }
 
 #[test]
+fn a_plan_failing_verification_is_refused_over_the_wire() {
+    // THE acceptance test for the verifier tentpole: a model whose
+    // compiled plan is corrupted (via the loader's name-scoped fault
+    // hook, standing in for a buggy future rewrite pass) must be
+    // refused at load_model, counted in registry.verify_failures, and
+    // never become resolvable — while healthy entries keep serving and
+    // report their verification envelope in list_models.
+    let dir = std::env::temp_dir()
+        .join(format!("bcnn-reg-verify-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    synth_bcnn_tf(Scheme::Rgb, 7001).save(dir.join("bcnn_v1.bcnt")).unwrap();
+    synth_float_tf(7002).save(dir.join("float_v1.bcnt")).unwrap();
+    let sum = |f: &str| format_checksum(fnv1a64(&std::fs::read(dir.join(f)).unwrap()));
+    let manifest = format!(
+        r#"{{"version": 1, "default": "bcnn", "models": [
+  {{"name": "bcnn", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "bcnn_v1.bcnt", "checksum": "{}"}},
+  {{"name": "float", "version": 1, "kind": "float", "scheme": "float",
+    "weights_file": "float_v1.bcnt", "checksum": "{}"}},
+  {{"name": "evil", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "bcnn_v1.bcnt", "checksum": "{}"}}
+]}}"#,
+        sum("bcnn_v1.bcnt"),
+        sum("float_v1.bcnt"),
+        sum("bcnn_v1.bcnt"),
+    );
+    std::fs::write(dir.join("registry.json"), manifest).unwrap();
+
+    let (addr, stop) = start_server(&dir);
+    let mut c = Client::connect(addr);
+
+    // corrupt "evil"'s plan between compilation and verification
+    std::env::set_var("BCNN_TEST_CORRUPT_PLAN", "evil:writer-deletion");
+    let r = c.roundtrip(r#"{"op":"load_model","name":"evil","version":1}"#);
+    std::env::remove_var("BCNN_TEST_CORRUPT_PLAN");
+    assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    let err = r.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("verification failed"), "{r}");
+    assert!(err.contains("evil@1"), "error must name the entry: {r}");
+
+    // the refused entry never serves; healthy traffic is unaffected
+    let img = one_image_json();
+    let r = c.roundtrip(&format!(r#"{{"op":"classify","model":"evil","pixels":{img}}}"#));
+    assert!(!r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    let r = c.roundtrip(&format!(r#"{{"op":"classify","pixels":{img}}}"#));
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+
+    // the refusal is counted in its own registry counter
+    let r = c.roundtrip(r#"{"op":"list_models"}"#);
+    let counters = r.get("registry").unwrap();
+    assert_eq!(counters.get("verify_failures").unwrap().as_usize().unwrap(), 1, "{r}");
+    assert_eq!(counters.get("load_failures").unwrap().as_usize().unwrap(), 1, "{r}");
+    // file-loaded entries carry their verification envelope
+    let rows = r.get("models").unwrap().as_arr().unwrap();
+    for row in rows {
+        let report = row.get("verify").unwrap();
+        assert!(report.get("steps").unwrap().as_usize().unwrap() > 0, "{row}");
+        assert!(report.get("intervals").unwrap().as_usize().unwrap() > 0, "{row}");
+    }
+
+    // with the fault hook gone the same artifact verifies and publishes
+    let r = c.roundtrip(r#"{"op":"load_model","name":"evil","version":1}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    let r = c.roundtrip(&format!(r#"{{"op":"classify","model":"evil","pixels":{img}}}"#));
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r}");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
 fn admin_token_gates_the_wire_admin_plane() {
     let dir = write_models_dir("token");
     let (addr, stop) = start_server_with(&dir, Some("hunter2"));

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Source-invariant lint suite for the Rust tree.
+
+Three invariants that rustc cannot enforce but the codebase relies on:
+
+A. Write-coverage contracts: every public `*_into` kernel under
+   `rust/src/bnn/` documents its output-buffer coverage (a doc line
+   containing "Write coverage:") AND is referenced from the file's
+   `#[cfg(test)]` region — the contract line must have a test backing
+   it, or it is a promise nobody checks.
+
+B. Panic policy in the serving plane (`rust/src/server/`,
+   `rust/src/coordinator/`, `rust/src/registry/`): a bare `.unwrap()`
+   outside `#[cfg(test)]` is allowed only for lock/condvar poisoning
+   (the preceding context contains `.lock()`, `.read()`, `.write()`,
+   `.wait(` or `.wait_timeout(` — poisoning means a worker already
+   panicked, so propagating is the correct response); everything else
+   must use `.expect("non-empty reason")` or a structured error.
+
+C. Error-enum uniformity: every `enum *Error` outside `#[cfg(test)]`
+   goes through `util::error::error_enum_impls!` in the same file, so
+   Display/Error/From stay mechanically consistent crate-wide.
+
+Exit status: 0 when every invariant holds, 1 otherwise (one line per
+violation).  Wired into CI next to `check_docs_links.py`; run locally
+with:
+
+    python3 scripts/check_invariants.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# context window (in comment-stripped chars) searched before a bare
+# .unwrap() for a lock/condvar acquisition that justifies it
+LOCK_CONTEXT_CHARS = 120
+LOCK_PATTERNS = (".lock()", ".read()", ".write()", ".wait(", ".wait_timeout(")
+
+PUB_INTO_RE = re.compile(r"^\s*pub fn (\w+_into)\b")
+CFG_TEST_RE = re.compile(r"^\s*#\[cfg\(test\)\]")
+UNWRAP_RE = re.compile(r"\.unwrap\(\)")
+EXPECT_RE = re.compile(r"\.expect\(")
+EXPECT_MSG_RE = re.compile(r'\.expect\(\s*"([^"]*)"')
+ERROR_ENUM_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?enum (\w*Error)\b")
+
+
+def rust_files(root: Path) -> list[Path]:
+    return sorted(root.rglob("*.rs"))
+
+
+def split_prod_test(lines: list[str]) -> tuple[list[str], list[str]]:
+    """Split a file's lines at the first `#[cfg(test)]` attribute —
+    everything from there to EOF counts as the test region."""
+    for i, line in enumerate(lines):
+        if CFG_TEST_RE.match(line):
+            return lines[:i], lines[i:]
+    return lines, []
+
+
+def strip_line_comments(lines: list[str]) -> list[str]:
+    """Drop `//`-to-EOL (incl. `///` and `//!`) so commented-out code
+    and doc examples never trip the scanners.  Naive about `//` inside
+    string literals, which this codebase does not use in scanned code."""
+    return [line.split("//", 1)[0] for line in lines]
+
+
+def doc_block_above(lines: list[str], fn_idx: int) -> list[str]:
+    """The contiguous `///` doc lines immediately above `lines[fn_idx]`
+    (attribute lines like `#[inline]` may sit between doc and fn)."""
+    docs: list[str] = []
+    i = fn_idx - 1
+    while i >= 0:
+        s = lines[i].strip()
+        if s.startswith("#["):
+            i -= 1
+            continue
+        if s.startswith("///"):
+            docs.append(s)
+            i -= 1
+            continue
+        break
+    return docs
+
+
+def check_write_coverage(repo: Path) -> list[str]:
+    errors = []
+    for path in rust_files(repo / "rust" / "src" / "bnn"):
+        lines = path.read_text(encoding="utf-8").splitlines()
+        prod, test = split_prod_test(lines)
+        test_text = "\n".join(test)
+        for idx, line in enumerate(prod):
+            m = PUB_INTO_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1)
+            rel = path.relative_to(repo)
+            docs = doc_block_above(prod, idx)
+            if not any("Write coverage:" in d for d in docs):
+                errors.append(
+                    f"{rel}:{idx + 1}: pub fn {name} lacks a "
+                    f'"Write coverage:" contract line in its doc comment'
+                )
+            if not re.search(rf"\b{name}\b", test_text):
+                errors.append(
+                    f"{rel}:{idx + 1}: pub fn {name} is never referenced "
+                    f"in this file's #[cfg(test)] region"
+                )
+    return errors
+
+
+def check_panic_policy(repo: Path) -> list[str]:
+    errors = []
+    for sub in ("server", "coordinator", "registry"):
+        for path in rust_files(repo / "rust" / "src" / sub):
+            lines = path.read_text(encoding="utf-8").splitlines()
+            prod, _ = split_prod_test(lines)
+            text = "\n".join(strip_line_comments(prod))
+            rel = path.relative_to(repo)
+            for m in UNWRAP_RE.finditer(text):
+                ctx = text[max(0, m.start() - LOCK_CONTEXT_CHARS) : m.start()]
+                if not any(p in ctx for p in LOCK_PATTERNS):
+                    lineno = text.count("\n", 0, m.start()) + 1
+                    errors.append(
+                        f"{rel}:{lineno}: bare .unwrap() outside a "
+                        f"lock/condvar acquisition — use .expect(reason) "
+                        f"or a structured error"
+                    )
+            for m in EXPECT_RE.finditer(text):
+                msg = EXPECT_MSG_RE.match(text, m.start())
+                if msg is None or not msg.group(1).strip():
+                    lineno = text.count("\n", 0, m.start()) + 1
+                    errors.append(
+                        f"{rel}:{lineno}: .expect() without a non-empty "
+                        f"string-literal reason"
+                    )
+    return errors
+
+
+def check_error_enums(repo: Path) -> list[str]:
+    errors = []
+    for path in rust_files(repo / "rust" / "src"):
+        lines = path.read_text(encoding="utf-8").splitlines()
+        prod, _ = split_prod_test(lines)
+        prod_text = "\n".join(prod)
+        for idx, line in enumerate(prod):
+            m = ERROR_ENUM_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1)
+            if f"error_enum_impls!({name}" not in prod_text:
+                errors.append(
+                    f"{path.relative_to(repo)}:{idx + 1}: enum {name} does "
+                    f"not go through error_enum_impls! in this file"
+                )
+    return errors
+
+
+def main() -> int:
+    errors = (
+        check_write_coverage(REPO) + check_panic_policy(REPO) + check_error_enums(REPO)
+    )
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"\n{len(errors)} invariant violation(s)")
+        return 1
+    print("ok: write-coverage, panic-policy, and error-enum invariants hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
