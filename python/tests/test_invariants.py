@@ -149,6 +149,78 @@ def test_macro_backed_error_enum_passes(tmp_path):
     assert mod.check_error_enums(tmp_path) == []
 
 
+GRAPH_ENUMS = (
+    "pub enum LayerOp {\n"
+    "    Frob { k: usize },\n"
+    "    Quux,\n"
+    "}\n"
+)
+
+
+def test_undocumented_ir_variant_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(tmp_path, "rust/src/bnn/graph/mod.rs", GRAPH_ENUMS)
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "| op | effect |\n|---|---|\n| `Frob` | frobs |\n"
+    )
+    errors = mod.check_variant_coverage(tmp_path)
+    assert len(errors) == 1
+    assert "`Quux`" in errors[0] and "ARCHITECTURE.md" in errors[0]
+
+
+def test_documented_ir_variants_pass(tmp_path):
+    mod = load_checker()
+    write_rs(tmp_path, "rust/src/bnn/graph/mod.rs", GRAPH_ENUMS)
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "| op | effect |\n|---|---|\n| `Frob` | frobs |\n| `Quux` | quuxes |\n"
+    )
+    assert mod.check_variant_coverage(tmp_path) == []
+
+
+def test_backtick_matching_is_exact_not_substring(tmp_path):
+    # a row documenting `FrobPacked` must not satisfy `Frob`
+    mod = load_checker()
+    write_rs(tmp_path, "rust/src/bnn/graph/mod.rs", "pub enum LayerOp {\n    Frob,\n}\n")
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "| op | effect |\n|---|---|\n| `FrobPacked` | frobs, packed |\n"
+    )
+    errors = mod.check_variant_coverage(tmp_path)
+    assert len(errors) == 1 and "`Frob`" in errors[0]
+
+
+def test_untested_corruption_variant_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/graph/plan.rs",
+        "pub enum Corruption {\n    SlotMerge,\n    PadSmash,\n}\n"
+        "#[cfg(test)]\n"
+        "mod tests { fn t() { let _ = Corruption::SlotMerge; } }\n",
+    )
+    errors = mod.check_variant_coverage(tmp_path)
+    assert len(errors) == 1
+    assert "Corruption::PadSmash" in errors[0] and "never named" in errors[0]
+
+
+def test_integration_test_reference_satisfies_rule_d(tmp_path):
+    # files under rust/tests/ are whole-file test regions
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/graph/plan.rs",
+        "pub enum Corruption {\n    SlotMerge,\n}\n",
+    )
+    write_rs(
+        tmp_path,
+        "rust/tests/integration_x.rs",
+        "fn t() { let _ = Corruption::SlotMerge; }\n",
+    )
+    assert mod.check_variant_coverage(tmp_path) == []
+
+
 def test_main_reports_nonzero_on_broken_tree(tmp_path, monkeypatch):
     mod = load_checker()
     write_rs(

@@ -1,23 +1,38 @@
-//! Ablation E7 — fused vs two-pass im2col+pack (paper Section 3.1).
+//! Ablation E7 — fusion, at both tiers.
 //!
-//! The paper fuses patch extraction and packing into one kernel,
-//! "reducing global memory stores by K*K", and reports a further 2x from
-//! replacing div/mod indexing with a counter.  On CPU the analogue is the
-//! materialized float-patch matrix (the two-pass version writes and
-//! re-reads 9216x75 floats).
+//! **Kernel tier** (paper Section 3.1): the paper fuses patch
+//! extraction and packing into one kernel, "reducing global memory
+//! stores by K*K", and reports a further 2x from replacing div/mod
+//! indexing with a counter.  On CPU the analogue is the materialized
+//! float-patch matrix (the two-pass version writes and re-reads
+//! 9216x75 floats).
+//!
+//! **Plan tier** (ISSUE 7): the proof-carrying rewriter fuses whole
+//! plan steps — threshold into the popcount epilogue, binarize into
+//! the im2col gather, counts buffer elided.  This ablation runs the
+//! legacy rgb plan unrewritten, under each pass individually, and
+//! under the full pipeline, at the batch sizes the serving plane uses,
+//! reporting images/sec and the *proven* peak arena bytes from each
+//! plan's `VerifyReport` (the same envelope `list_models` shows).
 //!
 //!     cargo bench --bench ablation_fusion
 
+use bcnn::bnn::graph::{
+    pass_names, rewrite_plan, verify_plan, CompiledNetwork, NetworkSpec, RewritePass,
+};
 use bcnn::bnn::im2col;
+use bcnn::bnn::network::tests_support::{synth_bcnn_tf, synth_image};
+use bcnn::bnn::scratch::PlanScratch;
+use bcnn::input::binarize::Scheme;
 use bcnn::util::rng::Xoshiro256;
 use bcnn::util::timer::{bench_for, fmt_ns};
 use std::time::Duration;
 
 const MIN_TIME: Duration = Duration::from_millis(400);
 
-fn main() {
+fn kernel_tier() {
     let mut rng = Xoshiro256::new(9);
-    println!("Ablation E7 — fused im2col+pack vs two-pass (float patches then pack)\n");
+    println!("Kernel tier — fused im2col+pack vs two-pass (float patches then pack)\n");
     println!(
         "{:<22}{:>14}{:>14}{:>10}",
         "layer shape", "fused", "two-pass", "fused-x"
@@ -36,4 +51,74 @@ fn main() {
     }
     println!("\npaper claim: fusion eliminates the K*K-fold patch-matrix store;");
     println!("our fused kernel keeps the patch in a register-resident scratch row.");
+}
+
+fn plan_tier() {
+    let variants: [(&str, &[RewritePass]); 5] = [
+        ("unrewritten", &[]),
+        ("fold-threshold", &[RewritePass::FoldThreshold]),
+        ("fuse-pack", &[RewritePass::FusePack]),
+        ("fold+elide", &[RewritePass::FoldThreshold, RewritePass::ElideCounts]),
+        ("all-passes", &RewritePass::ALL),
+    ];
+    let tf = synth_bcnn_tf(Scheme::Rgb, 700);
+    let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+
+    println!("\nPlan tier — proof-carrying rewrites on the legacy rgb plan");
+    println!("(every variant passes check_equiv + verify_plan before running)\n");
+    println!(
+        "{:<16}{:>7}{:>11}{:>22}",
+        "variant", "steps", "intervals", "peak bytes [f32/u32/i32]"
+    );
+    let mut nets = Vec::new();
+    for (label, passes) in variants {
+        let rw = rewrite_plan(&plan, passes);
+        let report = verify_plan(&rw).unwrap_or_else(|e| panic!("{label}: unsound: {e}"));
+        println!(
+            "{:<16}{:>7}{:>11}{:>10}/{}/{}",
+            label,
+            report.steps,
+            report.intervals,
+            report.peak_bytes[0],
+            report.peak_bytes[1],
+            report.peak_bytes[2],
+        );
+        nets.push((label, CompiledNetwork::from_plan(rw, &tf).unwrap()));
+    }
+
+    const IMG: usize = 96 * 96 * 3;
+    let batches = [1usize, 16, 64];
+    let max_n = *batches.iter().max().unwrap();
+    let pool: Vec<f32> = (0..max_n as u64).flat_map(synth_image).collect();
+
+    println!();
+    print!("{:<7}", "batch");
+    for (label, _) in &nets {
+        print!("{label:>16}");
+    }
+    println!("{:>9}", "all-x");
+    for &bs in &batches {
+        let payload = &pool[..bs * IMG];
+        let mut means = Vec::new();
+        print!("{bs:<7}");
+        for (_, net) in &nets {
+            let mut arena = PlanScratch::new();
+            net.infer_batch_with(payload, &mut arena).unwrap(); // warm the slots
+            let stats =
+                bench_for(MIN_TIME, 4, || net.infer_batch_with(payload, &mut arena).unwrap());
+            means.push(stats.mean_ns);
+            print!("{:>16.1}", bs as f64 / (stats.mean_ns * 1e-9));
+        }
+        println!("{:>8.2}x", means[0] / means[means.len() - 1]);
+    }
+    println!(
+        "\nfull pipeline = {} (what the loader serves when the gauntlet passes);",
+        pass_names(&RewritePass::ALL)
+    );
+    println!("img/s columns; peak bytes are the statically proven per-image envelope.");
+}
+
+fn main() {
+    kernel_tier();
+    plan_tier();
 }

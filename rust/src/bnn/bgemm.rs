@@ -173,6 +173,69 @@ fn bgemm_lanes_dyn(
     }
 }
 
+/// Fused XNOR-popcount GEMM + threshold epilogue: each output channel's
+/// count is compared against its per-channel threshold while still in a
+/// register, and the resulting bits are channel-packed MSB-first into
+/// ONE u32 word per patch row (channel `ni` at bit `31 - ni` — the
+/// threshold packer's layout, so `im2col_words` gathers the output
+/// directly).  `counts`, when present, also receives the raw (M, N) i32
+/// counts — the staging buffer the elide-counts rewrite removes; when
+/// `None` the counts never touch memory.
+///
+/// `cmp_bias` is added to each count before the compare.  The rewriter
+/// always emits 0 (a biased epilogue is NOT equivalent to threshold ∘
+/// popcount); the knob exists so the equivalence checker's refusal of
+/// biased epilogues is testable against a real kernel parameter.
+///
+/// Write coverage: resizes `out` to exactly M and assigns every word;
+/// resizes `counts` (when present) to exactly M·N and assigns every
+/// element; prior contents are never read.
+pub fn bgemm_threshold_into(
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d_real: usize,
+    theta: &[f32],
+    flip: &[u32],
+    cmp_bias: i32,
+    out: &mut Vec<u32>,
+    mut counts: Option<&mut Vec<i32>>,
+) {
+    use crate::bnn::packing::threshold_bit;
+    assert_eq!(a.len(), m * kw);
+    let l = lanes(kw);
+    assert_eq!(w64.len(), n * l);
+    assert!(n <= 32, "fused epilogue packs all channels into one word");
+    assert_eq!(theta.len(), n);
+    assert_eq!(flip.len(), n);
+    out.resize(m, 0);
+    if let Some(c) = counts.as_deref_mut() {
+        c.resize(m * n, 0);
+    }
+    let d = d_real as i32;
+    let mut arow = vec![0u64; l];
+    for mi in 0..m {
+        arow.fill(0);
+        widen_row(&a[mi * kw..(mi + 1) * kw], &mut arow);
+        let mut word = 0u32;
+        for ni in 0..n {
+            let wrow = &w64[ni * l..(ni + 1) * l];
+            let mut pc = 0u32;
+            for (x, y) in arow.iter().zip(wrow) {
+                pc += (x ^ y).count_ones();
+            }
+            let count = d - 2 * pc as i32;
+            if let Some(c) = counts.as_deref_mut() {
+                c[mi * n + ni] = count;
+            }
+            word |= threshold_bit((count + cmp_bias) as f32, theta[ni], flip[ni]) << (31 - ni);
+        }
+        out[mi] = word;
+    }
+}
+
 /// bgemm at an arbitrary packing bitwidth `b` (for the E5 ablation):
 /// words still arrive as u32s but only `b` bits per word are meaningful.
 /// Identical results for any `b` as long as both operands share a layout.
@@ -329,6 +392,46 @@ mod tests {
                 ensure_eq(got, bgemm(&a, &w, m, n, kw, d), "prewidened == bgemm")?;
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_threshold_epilogue_matches_bgemm_then_pack() {
+        // the fold-threshold axiom at the kernel level: fused epilogue ==
+        // bgemm counts, then per-channel threshold bits packed MSB-first;
+        // staged counts (when requested) are the raw bgemm output, and
+        // eliding them never changes the packed words
+        use crate::bnn::packing::threshold_bit;
+        prop::check(32, |g| {
+            let m = g.usize_in(1, 10);
+            let n = g.usize_in(1, 32);
+            let kw = g.usize_in(1, 8);
+            let d = kw * 32;
+            let a = g.words(m * kw);
+            let w = g.words(n * kw);
+            let theta = g.normals(n);
+            let flip = g.bits(n);
+            let bias = *g.pick(&[0i32, 1, -3]);
+            let w64 = widen_weights(&w, n, kw);
+            // dirty buffers: the kernel must fully overwrite both
+            let mut words = vec![9u32; 3];
+            let mut counts = vec![7i32; 1];
+            bgemm_threshold_into(
+                &a, &w64, m, n, kw, d, &theta, &flip, bias, &mut words, Some(&mut counts),
+            );
+            let want_counts = bgemm(&a, &w, m, n, kw, d);
+            ensure_eq(counts, want_counts.clone(), "staged counts == bgemm")?;
+            let mut want_words = vec![0u32; m];
+            for mi in 0..m {
+                for ni in 0..n {
+                    let v = (want_counts[mi * n + ni] + bias) as f32;
+                    want_words[mi] |= threshold_bit(v, theta[ni], flip[ni]) << (31 - ni);
+                }
+            }
+            ensure_eq(words.clone(), want_words, "fused epilogue == count-then-pack")?;
+            let mut elided = Vec::new();
+            bgemm_threshold_into(&a, &w64, m, n, kw, d, &theta, &flip, bias, &mut elided, None);
+            ensure_eq(elided, words, "elided counts == staged counts (words)")
         });
     }
 

@@ -33,25 +33,76 @@ pub fn fc_packed_into(
     assert_eq!(out.len(), l);
     let d = d_real as i32;
     for li in 0..l {
-        let wrow = &wt[li * kw..(li + 1) * kw];
-        // 4-way unrolled u64 accumulation (the "segments" of Section
-        // 3.2): eight u32 words — four fused u64 pairs — per iteration,
-        // on four independent accumulators for ILP
-        let x8 = x.chunks_exact(8);
-        let w8 = wrow.chunks_exact(8);
-        let (xr, wr) = (x8.remainder(), w8.remainder());
-        let mut acc = [0u32; 4];
-        for (p, q) in x8.zip(w8) {
-            acc[0] += (fuse64(p[0], p[1]) ^ fuse64(q[0], q[1])).count_ones();
-            acc[1] += (fuse64(p[2], p[3]) ^ fuse64(q[2], q[3])).count_ones();
-            acc[2] += (fuse64(p[4], p[5]) ^ fuse64(q[4], q[5])).count_ones();
-            acc[3] += (fuse64(p[6], p[7]) ^ fuse64(q[6], q[7])).count_ones();
+        out[li] = xnor_dot(x, &wt[li * kw..(li + 1) * kw], d);
+    }
+}
+
+/// One weight-row XNOR dot: 4-way unrolled u64 accumulation (the
+/// "segments" of Section 3.2) — eight u32 words, four fused u64 pairs,
+/// per iteration on four independent accumulators for ILP.  Shared by
+/// the plain and fused-threshold FC kernels so their counts are
+/// identical by construction.
+#[inline]
+fn xnor_dot(x: &[u32], wrow: &[u32], d: i32) -> i32 {
+    let x8 = x.chunks_exact(8);
+    let w8 = wrow.chunks_exact(8);
+    let (xr, wr) = (x8.remainder(), w8.remainder());
+    let mut acc = [0u32; 4];
+    for (p, q) in x8.zip(w8) {
+        acc[0] += (fuse64(p[0], p[1]) ^ fuse64(q[0], q[1])).count_ones();
+        acc[1] += (fuse64(p[2], p[3]) ^ fuse64(q[2], q[3])).count_ones();
+        acc[2] += (fuse64(p[4], p[5]) ^ fuse64(q[4], q[5])).count_ones();
+        acc[3] += (fuse64(p[6], p[7]) ^ fuse64(q[6], q[7])).count_ones();
+    }
+    for (&a, &b) in xr.iter().zip(wr) {
+        acc[0] += (a ^ b).count_ones();
+    }
+    let pc: u32 = acc.iter().sum();
+    d - 2 * pc as i32
+}
+
+/// Fused packed FC + ±1 threshold: each output's count stays in a
+/// register between the popcount accumulation and the per-channel
+/// compare, so the (L,) i32 counts row never exists in memory — the
+/// counts buffer is gone by construction, not by elision.  `cmp_bias`
+/// is added before the compare (the rewriter emits 0; the knob exists
+/// so the equivalence checker's bias refusal is testable against a real
+/// kernel parameter).  Bit-identical to `fc_packed_batch` followed by
+/// the ±1 threshold map.
+///
+/// Write coverage: resizes `out` to exactly N·L and assigns every
+/// element exactly once; prior contents are never read.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_packed_threshold_batch_into(
+    xs: &[u32],
+    wt: &[u32],
+    n: usize,
+    l: usize,
+    kw: usize,
+    d_real: usize,
+    theta: &[f32],
+    flip: &[u32],
+    cmp_bias: i32,
+    out: &mut Vec<f32>,
+) {
+    use super::packing::threshold_bit;
+    assert_eq!(xs.len(), n * kw);
+    assert_eq!(wt.len(), l * kw);
+    assert_eq!(theta.len(), l);
+    assert_eq!(flip.len(), l);
+    let d = d_real as i32;
+    out.resize(n * l, 0.0);
+    for i in 0..n {
+        let x = &xs[i * kw..(i + 1) * kw];
+        let orow = &mut out[i * l..(i + 1) * l];
+        for li in 0..l {
+            let count = xnor_dot(x, &wt[li * kw..(li + 1) * kw], d);
+            orow[li] = if threshold_bit((count + cmp_bias) as f32, theta[li], flip[li]) == 1 {
+                1.0
+            } else {
+                -1.0
+            };
         }
-        for (&a, &b) in xr.iter().zip(wr) {
-            acc[0] += (a ^ b).count_ones();
-        }
-        let pc: u32 = acc.iter().sum();
-        out[li] = d - 2 * pc as i32;
     }
 }
 
@@ -277,6 +328,42 @@ mod tests {
             let wt = g.words(l * kw);
             fc_packed_batch_into(&xs, &wt, n, l, kw, d, &mut buf);
             ensure_eq(buf.clone(), fc_packed_batch(&xs, &wt, n, l, kw, d), "fc batch reuse")
+        });
+    }
+
+    #[test]
+    fn fused_threshold_matches_fc_then_threshold() {
+        // the FC fold axiom at the kernel level: register-resident counts
+        // compared in place == materialized counts then the ±1 map
+        use crate::bnn::packing::threshold_bit;
+        prop::check(32, |g| {
+            let n = g.usize_in(1, 5);
+            let l = g.usize_in(1, 12);
+            let kw = g.usize_in(1, 30);
+            let d = kw * 32;
+            let xs = g.words(n * kw);
+            let wt = g.words(l * kw);
+            let theta = g.normals(l);
+            let flip = g.bits(l);
+            let bias = *g.pick(&[0i32, 2, -1]);
+            let mut got = vec![f32::NAN; 2]; // dirty
+            fc_packed_threshold_batch_into(
+                &xs, &wt, n, l, kw, d, &theta, &flip, bias, &mut got,
+            );
+            let counts = fc_packed_batch(&xs, &wt, n, l, kw, d);
+            let want: Vec<f32> = counts
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    let li = i % l;
+                    if threshold_bit((v + bias) as f32, theta[li], flip[li]) == 1 {
+                        1.0
+                    } else {
+                        -1.0
+                    }
+                })
+                .collect();
+            ensure_eq(got, want, "fused FC threshold == staged")
         });
     }
 

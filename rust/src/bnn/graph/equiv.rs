@@ -1,0 +1,491 @@
+//! Static equivalence checker: prove a rewritten [`Plan`] computes the
+//! *same function* as the original, without executing either.
+//!
+//! [`super::verify_plan`] proves a single plan resource-sound (aliasing,
+//! dataflow, shapes, weights) — but a fusion optimizer needs a stronger
+//! property: that the plan it produced is *semantically interchangeable*
+//! with the plan it started from.  XNOR-Net-style pipelines make this
+//! easy to get silently wrong (a pad bit in the wrong class, a compare
+//! moved across the popcount, a counts buffer privatized while a second
+//! reader still exists), and several of those bugs are invisible to the
+//! slot/shape verifier because the broken plan is still perfectly
+//! resource-sound.  This module closes that gap with symbolic value
+//! numbering over plan dataflow:
+//!
+//! * Every edge gets an **abstract value term** — built by interning
+//!   `(operand value-number, primitive descriptor)` pairs, where a
+//!   descriptor names the op, its resolved parameters (kernel, depth,
+//!   packed row width = the pad-bit class), its weight tensor names, and
+//!   its output extent/dtype.  Identical terms ⇔ identical computed
+//!   values, by construction.
+//! * Fused step kinds **unfold** through algebraic axioms into the
+//!   canonical primitive composition they claim to implement — exactly
+//!   the legal fusions, nothing else:
+//!   `threshold ∘ popcount ≡ fused-epilogue compare` (the conv/fc
+//!   `*Threshold` kinds), `binarize ∘ im2col ≡ pack-while-gather`
+//!   (the `BinarizeConvBin*` kinds), and counts-elision, which adds no
+//!   term at all but is legal **only** when the counts edge has a
+//!   single threshold reader (checked structurally below).
+//! * The two plans' term sequences are compared in emission order; both
+//!   must end in the identical final-logit term.  The first divergence
+//!   is reported as a structured [`EquivError::Diverged`] naming the
+//!   step and term *in both plans*.
+//!
+//! Three structural axiom preconditions are checked before value
+//! numbering, because they are semantic facts the term language
+//! deliberately leaves out of descriptors:
+//!
+//! | axiom | precondition | violation |
+//! |---|---|---|
+//! | fold threshold | epilogue compare is exactly `count > theta` (`cmp_bias == 0`) | [`EquivError::EpilogueBias`] |
+//! | any packed conv | weight row width is exactly `ceil(d/32)` (the pad-bit class) | [`EquivError::PadClass`] |
+//! | elide counts | the fused counts edge has no reader besides the epilogue | [`EquivError::CountsSecondReader`] |
+//!
+//! `cmp_bias` is the showcase: a rewrite that off-by-ones the folded
+//! compare produces a plan `verify_plan` happily accepts (every slot,
+//! shape, and weight is fine) but whose logits are wrong on every
+//! image.  Only this checker refuses it — which is why the loader's
+//! gauntlet runs rewrite → `check_equiv` → `verify_plan` and falls back
+//! to the unoptimized plan on any failure.
+
+use std::collections::BTreeMap;
+
+use crate::bnn::packing::packed_width;
+
+use super::plan::{BufId, Plan, Src, Step, StepKind, ValKind, ValTy};
+use super::verify::kind_name;
+
+/// A structured equivalence failure.  Every variant names the step(s)
+/// at fault so a refused rewrite is diagnosable from the error string.
+#[derive(Debug)]
+pub enum EquivError {
+    /// A fused threshold epilogue compares `count + bias > theta` with a
+    /// nonzero bias — semantically a different function, even though the
+    /// plan is resource-sound.
+    EpilogueBias { step: usize, bias: i32 },
+    /// A packed conv's weight row width is not `ceil(d/32)` — its
+    /// pad-bit class differs from the canonical primitive's, so the
+    /// popcount terms are not interchangeable.
+    PadClass { step: usize, op: String, why: String },
+    /// A step reads the counts edge a fused conv+threshold claims as
+    /// private — counts elision is legal only with a single threshold
+    /// reader.
+    CountsSecondReader { fused_step: usize, reader_step: usize },
+    /// The two plans emit different value terms: the first diverging
+    /// term, named in both plans (`<end of plan>` if one ran out).
+    Diverged { step_a: usize, step_b: usize, term_a: String, term_b: String },
+}
+
+crate::error_enum_impls!(EquivError {
+    EquivError::EpilogueBias { step, bias } =>
+        ("step {step}: fused threshold epilogue carries cmp_bias={bias}; \
+          a sound fold compares the raw popcount (bias 0)"),
+    EquivError::PadClass { step, op, why } => ("step {step} ({op}): pad-bit class: {why}"),
+    EquivError::CountsSecondReader { fused_step, reader_step } =>
+        ("step {reader_step} reads the counts edge step {fused_step} fused away — \
+          counts elision requires a single threshold reader"),
+    EquivError::Diverged { step_a, step_b, term_a, term_b } =>
+        ("plans diverge: original step {step_a} emits [{term_a}], \
+          rewritten step {step_b} emits [{term_b}]"),
+});
+
+/// Prove `rewritten` computes the same function as `original`.  Checks
+/// the structural axiom preconditions on both plans (the rewritten one
+/// first — that is where a broken optimizer shows up), then compares
+/// their symbolic value-number traces term by term.
+pub fn check_equiv(original: &Plan, rewritten: &Plan) -> Result<(), EquivError> {
+    for plan in [rewritten, original] {
+        epilogue_unbiased(plan)?;
+        pad_class_sound(plan)?;
+        counts_single_reader(plan)?;
+    }
+
+    // one shared interner: identical (operand, descriptor) chains get
+    // identical ids across both plans, so term equality is id equality
+    let mut vn = Vn::new();
+    let ta = symbolic_trace(original, &mut vn);
+    let tb = symbolic_trace(rewritten, &mut vn);
+    for i in 0..ta.len().max(tb.len()) {
+        let (a, b) = (ta.get(i), tb.get(i));
+        let same = matches!((a, b), (Some(x), Some(y)) if x.desc == y.desc && x.value == y.value);
+        if !same {
+            let end = "<end of plan>".to_string();
+            return Err(EquivError::Diverged {
+                step_a: a.map_or(original.steps.len(), |t| t.step),
+                step_b: b.map_or(rewritten.steps.len(), |t| t.step),
+                term_a: a.map_or(end.clone(), fmt_term),
+                term_b: b.map_or(end, fmt_term),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Axiom precondition: every fused epilogue compares the raw popcount.
+fn epilogue_unbiased(plan: &Plan) -> Result<(), EquivError> {
+    for (j, step) in plan.steps.iter().enumerate() {
+        let bias = match step.kind {
+            StepKind::ConvBinPackedThreshold { cmp_bias, .. }
+            | StepKind::ConvBinWordsThreshold { cmp_bias, .. }
+            | StepKind::BinarizeConvBinThreshold { cmp_bias, .. }
+            | StepKind::FcBinThreshold { cmp_bias, .. } => cmp_bias,
+            _ => 0,
+        };
+        if bias != 0 {
+            return Err(EquivError::EpilogueBias { step: j, bias });
+        }
+    }
+    Ok(())
+}
+
+/// Axiom precondition: every packed conv row is exactly `ceil(d/32)`
+/// words — the pad-bit class the canonical primitives assume.
+fn pad_class_sound(plan: &Plan) -> Result<(), EquivError> {
+    for (j, step) in plan.steps.iter().enumerate() {
+        let row = match step.kind {
+            StepKind::ConvBinPacked { nw, d, .. }
+            | StepKind::ConvBinPackedThreshold { nw, d, .. }
+            | StepKind::BinarizeConvBin { nw, d, .. }
+            | StepKind::BinarizeConvBinThreshold { nw, d, .. } => Some((nw, d)),
+            _ => None,
+        };
+        if let Some((nw, d)) = row {
+            if nw != packed_width(d, 32) {
+                return Err(EquivError::PadClass {
+                    step: j,
+                    op: kind_name(&step.kind).to_string(),
+                    why: format!(
+                        "{nw} weight words per row for d={d} packed bits (canonical class \
+                         is {}) — the popcount terms are not interchangeable",
+                        packed_width(d, 32)
+                    ),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Axiom precondition: a fused step's counts edge (`scratch2`) is
+/// private to its own epilogue.  The scan stops at the first later step
+/// that re-defines the slot (output or scratch) — past that point the
+/// slot holds a different edge entirely.
+fn counts_single_reader(plan: &Plan) -> Result<(), EquivError> {
+    for (j, step) in plan.steps.iter().enumerate() {
+        let Some(s) = step.scratch2 else { continue };
+        for (r, later) in plan.steps.iter().enumerate().skip(j + 1) {
+            if later.input == Src::Buf(s) {
+                return Err(EquivError::CountsSecondReader { fused_step: j, reader_step: r });
+            }
+            if later.output == s || later.scratch == Some(s) || later.scratch2 == Some(s) {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---- symbolic value numbering --------------------------------------
+
+/// The interner: a value number per distinct `(operand, descriptor)`
+/// application.  Shared across both plans so equal chains intern equal.
+struct Vn {
+    table: BTreeMap<(u64, String), u64>,
+    next: u64,
+}
+
+impl Vn {
+    fn new() -> Self {
+        Self { table: BTreeMap::new(), next: 1 }
+    }
+
+    /// Value number of applying `desc` to operand `v`.
+    fn id(&mut self, v: u64, desc: &str) -> u64 {
+        if let Some(&n) = self.table.get(&(v, desc.to_string())) {
+            return n;
+        }
+        let n = self.next;
+        self.next += 1;
+        self.table.insert((v, desc.to_string()), n);
+        n
+    }
+
+    /// A fresh opaque value no chain can reproduce — an undefined read
+    /// (e.g. of a clobbered slot) poisons everything downstream of it.
+    fn fresh(&mut self) -> u64 {
+        let n = self.next;
+        self.next += 1;
+        n
+    }
+}
+
+/// One emitted term: primitive `desc` applied at `step`, valued `value`.
+struct Term {
+    step: usize,
+    desc: String,
+    value: u64,
+}
+
+fn fmt_term(t: &Term) -> String {
+    format!("{} = v{}", t.desc, t.value)
+}
+
+fn slot_key(b: BufId) -> (usize, usize) {
+    (b.class as usize, b.idx)
+}
+
+/// Value-number every edge of `plan`, emitting one [`Term`] per
+/// unfolded primitive.  Scratch clobbers poison their slot; reads of a
+/// poisoned or never-written slot get a fresh opaque value (which can
+/// never equal the other plan's term — divergence by construction).
+fn symbolic_trace(plan: &Plan, vn: &mut Vn) -> Vec<Term> {
+    let mut slot_values: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+    let mut trace = Vec::new();
+    for (j, step) in plan.steps.iter().enumerate() {
+        let mut v = match step.input {
+            Src::External => vn.id(0, &format!("external#{}", step.in_ty.describe())),
+            Src::Buf(b) => match slot_values.get(&slot_key(b)) {
+                Some(&v) => v,
+                None => vn.fresh(),
+            },
+        };
+        for desc in unfold(step) {
+            v = vn.id(v, &desc);
+            trace.push(Term { step: j, desc, value: v });
+        }
+        if let Some(s) = step.scratch {
+            slot_values.remove(&slot_key(s));
+        }
+        if let Some(s) = step.scratch2 {
+            slot_values.remove(&slot_key(s));
+        }
+        slot_values.insert(slot_key(step.output), v);
+    }
+    trace
+}
+
+/// Unfold a step into its canonical primitive descriptors — one for a
+/// base kind, the axiom's composition for a fused kind.  Descriptors
+/// carry everything term equality must be sensitive to: op, resolved
+/// parameters (the packed row width `nw` *is* the pad-bit class),
+/// weight names, output extent/dtype.  They deliberately omit
+/// `cmp_bias` and `elide` (judged structurally above — bias 0 and a
+/// private counts edge make them semantically invisible) and timing
+/// labels (cosmetic).
+fn unfold(step: &Step) -> Vec<String> {
+    let t = step.in_ty;
+    let o = step.out_ty;
+    let counts_mid = |c: usize| ValTy { kind: ValKind::Counts, h: o.h, w: o.w, c };
+    match &step.kind {
+        StepKind::Binarize { scheme } => vec![binarize_desc(*scheme, &o)],
+        StepKind::ConvBinPacked { k, nw, d, w, .. } => {
+            vec![conv_packed_desc(*k, *d, *nw, w, &o)]
+        }
+        StepKind::ConvBinWords { k, d, w, .. } => vec![conv_words_desc(*k, *d, w, &o)],
+        StepKind::ConvFloat { k, relu, w, b, .. } => {
+            vec![format!("conv_float[k={k},relu={relu},w={w},b={b:?}]->{}", o.describe())]
+        }
+        StepKind::MaxPool => vec![format!("maxpool->{}", o.describe())],
+        StepKind::OrPool => vec![format!("orpool->{}", o.describe())],
+        StepKind::ThresholdPack { f32_in, theta, flip } => {
+            vec![threshold_pack_desc(*f32_in, theta, flip, &o)]
+        }
+        StepKind::ThresholdPm1 { theta, flip } => vec![threshold_pm1_desc(theta, flip, &o)],
+        StepKind::FcBin { kw, d, w, .. } => vec![fc_bin_desc(*kw, *d, w, &o)],
+        StepKind::FcFloat { d, act, w, b, .. } => {
+            vec![format!("fc_float[d={d},act={},w={w},b={b:?}]->{}", act.name(), o.describe())]
+        }
+        // --- the axioms: fused kinds unfold to what they claim --------
+        StepKind::ConvBinPackedThreshold { k, c_out, nw, d, w, theta, flip, .. } => vec![
+            conv_packed_desc(*k, *d, *nw, w, &counts_mid(*c_out)),
+            threshold_pack_desc(false, theta, flip, &o),
+        ],
+        StepKind::ConvBinWordsThreshold { k, c_out, d, w, theta, flip, .. } => vec![
+            conv_words_desc(*k, *d, w, &counts_mid(*c_out)),
+            threshold_pack_desc(false, theta, flip, &o),
+        ],
+        StepKind::BinarizeConvBin { scheme, k, nw, d, w, .. } => {
+            let mid = ValTy { kind: ValKind::F32, h: t.h, w: t.w, c: scheme.input_channels() };
+            vec![binarize_desc(*scheme, &mid), conv_packed_desc(*k, *d, *nw, w, &o)]
+        }
+        StepKind::BinarizeConvBinThreshold { scheme, k, c_out, nw, d, w, theta, flip, .. } => {
+            let mid = ValTy { kind: ValKind::F32, h: t.h, w: t.w, c: scheme.input_channels() };
+            vec![
+                binarize_desc(*scheme, &mid),
+                conv_packed_desc(*k, *d, *nw, w, &counts_mid(*c_out)),
+                threshold_pack_desc(false, theta, flip, &o),
+            ]
+        }
+        StepKind::FcBinThreshold { kw, c_out, d, w, theta, flip, .. } => vec![
+            fc_bin_desc(*kw, *d, w, &counts_mid(*c_out)),
+            threshold_pm1_desc(theta, flip, &o),
+        ],
+    }
+}
+
+fn binarize_desc(scheme: crate::input::binarize::Scheme, ty: &ValTy) -> String {
+    format!("binarize[{}]->{}", scheme.name(), ty.describe())
+}
+
+fn conv_packed_desc(k: usize, d: usize, nw: usize, w: &str, ty: &ValTy) -> String {
+    format!("conv_bin_packed[k={k},d={d},nw={nw},w={w}]->{}", ty.describe())
+}
+
+fn conv_words_desc(k: usize, d: usize, w: &str, ty: &ValTy) -> String {
+    format!("conv_bin_words[k={k},d={d},w={w}]->{}", ty.describe())
+}
+
+fn threshold_pack_desc(f32_in: bool, theta: &str, flip: &str, ty: &ValTy) -> String {
+    format!("threshold_pack[f32_in={f32_in},theta={theta},flip={flip}]->{}", ty.describe())
+}
+
+fn threshold_pm1_desc(theta: &str, flip: &str, ty: &ValTy) -> String {
+    format!("threshold_pm1[theta={theta},flip={flip}]->{}", ty.describe())
+}
+
+fn fc_bin_desc(kw: usize, d: usize, w: &str, ty: &ValTy) -> String {
+    format!("fc_bin[kw={kw},d={d},w={w}]->{}", ty.describe())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::graph::plan::Corruption;
+    use crate::bnn::graph::rewrite::{rewrite_plan, RewritePass};
+    use crate::bnn::graph::verify::verify_plan;
+    use crate::bnn::graph::NetworkSpec;
+    use crate::input::binarize::Scheme;
+
+    fn rgb_plan() -> Plan {
+        NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap()
+    }
+
+    #[test]
+    fn a_plan_is_equivalent_to_itself_and_to_its_rewrites() {
+        for scheme in Scheme::ALL {
+            let plan = NetworkSpec::legacy_bcnn(scheme).plan().unwrap();
+            check_equiv(&plan, &plan).unwrap();
+            let rw = rewrite_plan(&plan, &RewritePass::ALL);
+            check_equiv(&plan, &rw).unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        }
+        let float = NetworkSpec::legacy_float().plan().unwrap();
+        check_equiv(&float, &rewrite_plan(&float, &RewritePass::ALL)).unwrap();
+    }
+
+    // ---- the mutation suite: every rewrite-shaped corruption ---------
+    // (Corruption::REWRITE_SHAPED) is judged here, with the intended
+    // EquivError variant — not just any refusal
+
+    #[test]
+    fn a_biased_epilogue_is_refused_as_epilogue_bias() {
+        // the verifier-blind bug: resource-sound, semantically wrong
+        let plan = rgb_plan();
+        let bad = rewrite_plan(&plan, &RewritePass::ALL)
+            .corrupt_for_test(Corruption::EpilogueThresholdOffByOne);
+        verify_plan(&bad).expect("cmp_bias is invisible to the slot/shape verifier");
+        let err = check_equiv(&plan, &bad).unwrap_err();
+        assert!(
+            matches!(err, EquivError::EpilogueBias { bias: 1, .. }),
+            "wrong variant: {err}"
+        );
+    }
+
+    #[test]
+    fn a_pad_class_change_is_refused_as_pad_class() {
+        let plan = rgb_plan();
+        let bad = rewrite_plan(&plan, &RewritePass::ALL)
+            .corrupt_for_test(Corruption::EpilogueThresholdPadBitClassChange);
+        let err = check_equiv(&plan, &bad).unwrap_err();
+        assert!(matches!(err, EquivError::PadClass { .. }), "wrong variant: {err}");
+    }
+
+    #[test]
+    fn a_second_counts_reader_is_refused_as_counts_second_reader() {
+        // site needs a live scratch2: the staged fold, before elision
+        let plan = rgb_plan();
+        let bad = rewrite_plan(&plan, &[RewritePass::FoldThreshold])
+            .corrupt_for_test(Corruption::CountsElisionSecondReader);
+        let err = check_equiv(&plan, &bad).unwrap_err();
+        match err {
+            EquivError::CountsSecondReader { fused_step, reader_step } => {
+                assert_eq!(reader_step, fused_step + 1);
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn a_sound_commuting_reorder_is_still_accepted() {
+        // the false-positive guard: consistent slot renames + reordered
+        // weight declarations change no value term, so BOTH gates accept
+        let plan = rgb_plan();
+        let reordered = rewrite_plan(&plan, &RewritePass::ALL)
+            .corrupt_for_test(Corruption::ReorderedCommutingSteps);
+        check_equiv(&plan, &reordered).expect("dataflow is untouched");
+        verify_plan(&reordered).expect("renamed slots stay resource-sound");
+    }
+
+    #[test]
+    fn different_architectures_diverge_with_both_terms_named() {
+        let rgb = rgb_plan();
+        let gray = NetworkSpec::legacy_bcnn(Scheme::Gray).plan().unwrap();
+        let err = check_equiv(&rgb, &gray).unwrap_err();
+        match &err {
+            EquivError::Diverged { term_a, term_b, .. } => {
+                assert!(term_a.contains("rgb"), "{err}");
+                assert!(term_b.contains("gray"), "{err}");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn a_dropped_tail_step_diverges_at_end_of_plan() {
+        let plan = rgb_plan();
+        let mut truncated = plan.clone();
+        truncated.steps.pop();
+        let err = check_equiv(&plan, &truncated).unwrap_err();
+        match &err {
+            EquivError::Diverged { term_b, .. } => {
+                assert_eq!(term_b, "<end of plan>", "{err}");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_rewrites_on_the_arch_plan_are_refused_too() {
+        // sites are found structurally — the mutation suite must bite on
+        // manifest-compiled deeper archs, not just the legacy topology
+        use crate::bnn::graph::{Activation, LayerOp};
+        use crate::bnn::network::NUM_CLASSES;
+        let spec = NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 5, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 64 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        };
+        let plan = spec.plan().unwrap();
+        for c in [
+            Corruption::EpilogueThresholdOffByOne,
+            Corruption::EpilogueThresholdPadBitClassChange,
+        ] {
+            let bad = rewrite_plan(&plan, &RewritePass::ALL).corrupt_for_test(c);
+            assert!(check_equiv(&plan, &bad).is_err(), "{} accepted", c.name());
+        }
+        let bad = rewrite_plan(&plan, &[RewritePass::FoldThreshold])
+            .corrupt_for_test(Corruption::CountsElisionSecondReader);
+        assert!(check_equiv(&plan, &bad).is_err());
+    }
+}

@@ -53,6 +53,18 @@ enum StepWeights {
     Threshold { theta: Vec<f32>, flip: Vec<u32> },
     /// Packed FC rows (u32 words; the FC kernel widens on the fly).
     FcBin { w: Vec<u32> },
+    /// Fused conv + threshold epilogue: pre-widened conv weights plus the
+    /// epilogue's per-channel threshold parameters.
+    PackedThreshold { w64: Vec<u64>, theta: Vec<f32>, flip: Vec<u32> },
+    /// Fused binarize + gather conv: binarize thresholds (`input_t`) plus
+    /// pre-widened conv weights.
+    BinarizePacked { t: Vec<f32>, w64: Vec<u64> },
+    /// Both fusions at once: binarize thresholds, pre-widened conv
+    /// weights, and the epilogue threshold parameters.
+    BinarizePackedThreshold { t: Vec<f32>, w64: Vec<u64>, theta: Vec<f32>, flip: Vec<u32> },
+    /// Fused packed FC + threshold: FC rows plus the ±1 compare's
+    /// per-channel parameters.
+    FcBinThreshold { w: Vec<u32>, theta: Vec<f32>, flip: Vec<u32> },
 }
 
 /// A plan with weights bound — the executable form of a network.
@@ -134,16 +146,7 @@ impl CompiledNetwork {
                 },
                 StepKind::ConvBinPacked { c_out, nw, d, w, .. } => {
                     let mut packed = fetch_u32(w, c_out * nw)?;
-                    // zero each row's tail-word pad bits: activations pack
-                    // with zero pads (BitWriter), so nonzero weight pads
-                    // would pollute every popcount with a constant offset
-                    let tail = d % 32;
-                    if tail != 0 {
-                        let mask = !0u32 << (32 - tail);
-                        for row in 0..*c_out {
-                            packed[row * nw + (nw - 1)] &= mask;
-                        }
-                    }
+                    mask_row_tail_pads(&mut packed, *c_out, *nw, *d);
                     StepWeights::Packed { w64: bgemm::widen_weights(&packed, *c_out, *nw) }
                 }
                 StepKind::ConvBinWords { k, c_out, w, .. } => {
@@ -176,6 +179,53 @@ impl CompiledNetwork {
                         None => None,
                     },
                 },
+                StepKind::ConvBinPackedThreshold { c_out, nw, d, w, theta, flip, .. } => {
+                    let mut packed = fetch_u32(w, c_out * nw)?;
+                    mask_row_tail_pads(&mut packed, *c_out, *nw, *d);
+                    StepWeights::PackedThreshold {
+                        w64: bgemm::widen_weights(&packed, *c_out, *nw),
+                        theta: fetch_f32(theta, *c_out)?,
+                        flip: fetch_u32(flip, *c_out)?,
+                    }
+                }
+                StepKind::ConvBinWordsThreshold { k, c_out, w, theta, flip, .. } => {
+                    let mut packed = fetch_u32(w, c_out * k * k)?;
+                    mask_channel_pads(&mut packed, c_in);
+                    StepWeights::PackedThreshold {
+                        w64: bgemm::widen_weights(&packed, *c_out, k * k),
+                        theta: fetch_f32(theta, *c_out)?,
+                        flip: fetch_u32(flip, *c_out)?,
+                    }
+                }
+                StepKind::BinarizeConvBin { scheme, c_out, nw, d, w, .. } => {
+                    let mut packed = fetch_u32(w, c_out * nw)?;
+                    mask_row_tail_pads(&mut packed, *c_out, *nw, *d);
+                    StepWeights::BinarizePacked {
+                        t: fetch_binarize_t(&fetch_f32, *scheme)?,
+                        w64: bgemm::widen_weights(&packed, *c_out, *nw),
+                    }
+                }
+                StepKind::BinarizeConvBinThreshold {
+                    scheme, c_out, nw, d, w, theta, flip, ..
+                } => {
+                    let mut packed = fetch_u32(w, c_out * nw)?;
+                    mask_row_tail_pads(&mut packed, *c_out, *nw, *d);
+                    StepWeights::BinarizePackedThreshold {
+                        t: fetch_binarize_t(&fetch_f32, *scheme)?,
+                        w64: bgemm::widen_weights(&packed, *c_out, *nw),
+                        theta: fetch_f32(theta, *c_out)?,
+                        flip: fetch_u32(flip, *c_out)?,
+                    }
+                }
+                StepKind::FcBinThreshold { kw, c_out, w, theta, flip, .. } => {
+                    let mut packed = fetch_u32(w, c_out * kw)?;
+                    mask_channel_pads(&mut packed, c_in);
+                    StepWeights::FcBinThreshold {
+                        w: packed,
+                        theta: fetch_f32(theta, *c_out)?,
+                        flip: fetch_u32(flip, *c_out)?,
+                    }
+                }
             });
         }
         Ok(Self { weights, plan })
@@ -474,10 +524,174 @@ impl CompiledNetwork {
                     scratch.put_f32(step.output.idx, out);
                     lap(rec, &step.label_a);
                 }
+                (
+                    StepKind::ConvBinPackedThreshold { k, c_out, nw, d, cmp_bias, .. },
+                    StepWeights::PackedThreshold { w64, theta, flip },
+                ) => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_u32(sc.idx);
+                    let mut out = scratch.take_u32(step.output.idx);
+                    let mut counts = step.scratch2.map(|s| scratch.take_i32(s.idx));
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        im2col::im2col_pack_batch_into(x, n, h, w, c_in, *k, 32, &mut cols);
+                        lap(rec, &step.label_a);
+                        bgemm::bgemm_threshold_into(
+                            &cols, w64, n * px, *c_out, *nw, *d, theta, flip, *cmp_bias,
+                            &mut out, counts.as_mut(),
+                        );
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_u32(sc.idx, cols);
+                    if let (Some(s), Some(c)) = (step.scratch2, counts) {
+                        scratch.put_i32(s.idx, c);
+                    }
+                    scratch.put_u32(step.output.idx, out);
+                }
+                (
+                    StepKind::ConvBinWordsThreshold { k, c_out, d, cmp_bias, .. },
+                    StepWeights::PackedThreshold { w64, theta, flip },
+                ) => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_u32(sc.idx);
+                    let mut out = scratch.take_u32(step.output.idx);
+                    let mut counts = step.scratch2.map(|s| scratch.take_i32(s.idx));
+                    {
+                        let x = input_u32(scratch, step.input)?;
+                        im2col::im2col_words_batch_into(x, n, h, w, 1, *k, &mut cols);
+                        lap(rec, &step.label_a);
+                        bgemm::bgemm_threshold_into(
+                            &cols, w64, n * px, *c_out, k * k, *d, theta, flip, *cmp_bias,
+                            &mut out, counts.as_mut(),
+                        );
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_u32(sc.idx, cols);
+                    if let (Some(s), Some(c)) = (step.scratch2, counts) {
+                        scratch.put_i32(s.idx, c);
+                    }
+                    scratch.put_u32(step.output.idx, out);
+                }
+                (
+                    StepKind::BinarizeConvBin { scheme, k, c_out, nw, d, .. },
+                    StepWeights::BinarizePacked { t, w64 },
+                ) => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_u32(sc.idx);
+                    let mut counts = scratch.take_i32(step.output.idx);
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        let c_bin = scheme.input_channels();
+                        im2col::im2col_binarize_pack_batch_into(
+                            x, n, h, w, c_in, c_bin, *k, 32,
+                            |pxl| fused_binarize_bits(*scheme, t, pxl),
+                            &mut cols,
+                        );
+                        lap(rec, &step.label_a);
+                        counts.resize(n * px * c_out, 0); // the GEMM assigns every element
+                        bgemm::bgemm_prewidened(&cols, w64, n * px, *c_out, *nw, *d, &mut counts);
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_u32(sc.idx, cols);
+                    scratch.put_i32(step.output.idx, counts);
+                }
+                (
+                    StepKind::BinarizeConvBinThreshold { scheme, k, c_out, nw, d, cmp_bias, .. },
+                    StepWeights::BinarizePackedThreshold { t, w64, theta, flip },
+                ) => {
+                    let sc = step.scratch.expect("conv has a patch-gather slot");
+                    let mut cols = scratch.take_u32(sc.idx);
+                    let mut out = scratch.take_u32(step.output.idx);
+                    let mut counts = step.scratch2.map(|s| scratch.take_i32(s.idx));
+                    {
+                        let x = input_f32(scratch, images, step.input);
+                        let c_bin = scheme.input_channels();
+                        im2col::im2col_binarize_pack_batch_into(
+                            x, n, h, w, c_in, c_bin, *k, 32,
+                            |pxl| fused_binarize_bits(*scheme, t, pxl),
+                            &mut cols,
+                        );
+                        lap(rec, &step.label_a);
+                        bgemm::bgemm_threshold_into(
+                            &cols, w64, n * px, *c_out, *nw, *d, theta, flip, *cmp_bias,
+                            &mut out, counts.as_mut(),
+                        );
+                        lap(rec, step.label_b.as_deref().unwrap_or(""));
+                    }
+                    scratch.put_u32(sc.idx, cols);
+                    if let (Some(s), Some(c)) = (step.scratch2, counts) {
+                        scratch.put_i32(s.idx, c);
+                    }
+                    scratch.put_u32(step.output.idx, out);
+                }
+                (
+                    StepKind::FcBinThreshold { kw, c_out, d, cmp_bias, .. },
+                    StepWeights::FcBinThreshold { w: fw, theta, flip },
+                ) => {
+                    let mut out = scratch.take_f32(step.output.idx);
+                    {
+                        let x = input_u32(scratch, step.input)?;
+                        fc::fc_packed_threshold_batch_into(
+                            x, fw, n, *c_out, *kw, *d, theta, flip, *cmp_bias, &mut out,
+                        );
+                    }
+                    scratch.put_f32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
                 _ => return Err(desync()),
             }
         }
         Ok(())
+    }
+}
+
+/// Zero each packed weight row's tail-word pad bits (`d` real bits over
+/// `nw` 32-bit words per row): activations pack with zero pads
+/// (`BitWriter`), so nonzero weight pads would pollute every popcount
+/// with a constant offset.
+fn mask_row_tail_pads(packed: &mut [u32], c_out: usize, nw: usize, d: usize) {
+    let tail = d % 32;
+    if tail != 0 {
+        let mask = !0u32 << (32 - tail);
+        for row in 0..c_out {
+            packed[row * nw + (nw - 1)] &= mask;
+        }
+    }
+}
+
+/// Fetch the binarize thresholds a fused binarize+gather step binds
+/// (`input_t`: 3 floats for rgb, 1 for gray; the plan verifier rejects
+/// every other scheme in fused form, so reaching the fallback arm is a
+/// compiler bug).
+fn fetch_binarize_t(
+    fetch_f32: &impl Fn(&str, usize) -> Result<Vec<f32>, GraphError>,
+    scheme: Scheme,
+) -> Result<Vec<f32>, GraphError> {
+    match scheme {
+        Scheme::Rgb => fetch_f32("input_t", 3),
+        Scheme::Gray => fetch_f32("input_t", 1),
+        _ => Err(GraphError::Internal("fused binarize bound a non-rgb/gray scheme".into())),
+    }
+}
+
+/// Per-pixel sign bits for the fused binarize+gather kernels — the SAME
+/// compare expressions as `binarize::threshold_rgb_into` /
+/// `threshold_gray_into` (identical operation order, so identical
+/// rounding), packed MSB-first into the low `c_bin` bits as
+/// `im2col_binarize_pack_batch_into` expects.
+#[inline]
+fn fused_binarize_bits(scheme: Scheme, t: &[f32], px: &[f32]) -> u32 {
+    match scheme {
+        Scheme::Rgb => {
+            (u32::from(px[0] + t[0] > 0.0) << 2)
+                | (u32::from(px[1] + t[1] > 0.0) << 1)
+                | u32::from(px[2] + t[2] > 0.0)
+        }
+        _ => u32::from(
+            px[0] * binarize::LUMA[0] + px[1] * binarize::LUMA[1] + px[2] * binarize::LUMA[2]
+                + t[0]
+                > 0.0,
+        ),
     }
 }
 
@@ -887,6 +1101,87 @@ mod tests {
             .infer_batch(&x)
             .unwrap();
         assert_eq!(base, polluted, "pad bits leaked into the popcount");
+    }
+
+    #[test]
+    fn rewritten_plans_are_bit_identical_to_unrewritten_execution() {
+        // THE rewrite acceptance property: for every architecture (all
+        // four legacy schemes, the float baseline, and a 3-conv manifest
+        // topology), every pass subset that the loader could enable must
+        // execute bit-identically to the unrewritten plan — random batch
+        // sizes, ONE arena reused across all plans so slot shapes shrink
+        // and grow between cases.
+        use crate::bnn::graph::{check_equiv, rewrite_plan, LayerOp, RewritePass};
+        let three_conv = NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 5, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 64 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        };
+        let mut specs: Vec<(NetworkSpec, TensorFile)> = Scheme::ALL
+            .iter()
+            .map(|&s| (NetworkSpec::legacy_bcnn(s), synth_bcnn_tf(s, 520)))
+            .collect();
+        specs.push((NetworkSpec::legacy_float(), synth_float_tf(521)));
+        let tf3 = synth_tf_for_spec(&three_conv, 522);
+        specs.push((three_conv, tf3));
+        let combos: Vec<Vec<RewritePass>> = vec![
+            vec![RewritePass::FoldThreshold],
+            vec![RewritePass::FusePack],
+            vec![RewritePass::ElideCounts],
+            vec![RewritePass::FoldThreshold, RewritePass::ElideCounts],
+            RewritePass::ALL.to_vec(),
+        ];
+        let mut cases: Vec<(usize, CompiledNetwork)> = Vec::new();
+        let mut bases: Vec<CompiledNetwork> = Vec::new();
+        for (i, (spec, tf)) in specs.iter().enumerate() {
+            let plan = spec.plan().unwrap();
+            bases.push(CompiledNetwork::from_plan(plan.clone(), tf).unwrap());
+            for passes in &combos {
+                let rw = rewrite_plan(&plan, passes);
+                check_equiv(&plan, &rw).unwrap();
+                cases.push((i, CompiledNetwork::from_plan(rw, tf).unwrap()));
+            }
+        }
+        let mut arena = PlanScratch::new();
+        prop::check(20, |g| {
+            let (i, opt) = g.pick(&cases);
+            let n = g.usize_in(1, 4);
+            let xs = images(n, g.u64());
+            let want = bases[*i].infer_batch_with(&xs, &mut arena).unwrap();
+            let got = opt.infer_batch_with(&xs, &mut arena).unwrap();
+            ensure_eq(got, want, "rewritten == unrewritten (bitwise)")
+        });
+    }
+
+    #[test]
+    fn forward_timed_fused_labels_match_the_rewritten_plan() {
+        // Table 2 attribution must survive fusion: the timed label list
+        // is exactly the rewritten plan's step label list, and every
+        // fused step names BOTH constituent ops
+        use crate::bnn::graph::{rewrite_plan, RewritePass};
+        let tf = synth_bcnn_tf(Scheme::Rgb, 530);
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        let rw = rewrite_plan(&plan, &RewritePass::ALL);
+        let net = CompiledNetwork::from_plan(rw, &tf).unwrap();
+        let (logits, times) = net.forward_timed(&synth_image(7)).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let labels: Vec<String> = times.iter().map(|(l, _)| l.clone()).collect();
+        assert_eq!(labels, net.plan().step_names(), "one timing lap per plan label");
+        for want in ["binarize+im2col1", "gemm1+threshold_pack1", "fc1+threshold3"] {
+            assert!(labels.iter().any(|l| l == want), "missing {want} in {labels:?}");
+        }
     }
 
     #[test]

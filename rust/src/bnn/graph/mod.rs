@@ -36,12 +36,16 @@
 //! vocabulary: a spec may open with a float conv and binarize later, or
 //! stack three packed convs — no new forward function required.
 
+pub mod equiv;
 pub mod exec;
 pub mod plan;
+pub mod rewrite;
 pub mod verify;
 
+pub use equiv::{check_equiv, EquivError};
 pub use exec::CompiledNetwork;
 pub use plan::{Plan, WeightReq};
+pub use rewrite::{pass_names, rewrite_plan, RewritePass};
 pub use verify::{verify_plan, VerifyError, VerifyReport};
 
 #[doc(hidden)]
@@ -99,12 +103,20 @@ pub(crate) fn step_effect(kind: &plan::StepKind) -> EffectSig {
         StepKind::ConvBinPacked { .. }
         | StepKind::ConvBinWords { .. }
         | StepKind::ConvFloat { .. } => true,
+        // fused convs still gather patches into scratch (and, until the
+        // elision pass runs, counts into scratch2)
+        StepKind::ConvBinPackedThreshold { .. }
+        | StepKind::ConvBinWordsThreshold { .. }
+        | StepKind::BinarizeConvBin { .. }
+        | StepKind::BinarizeConvBinThreshold { .. } => true,
         StepKind::MaxPool
         | StepKind::OrPool
         | StepKind::ThresholdPack { .. }
         | StepKind::ThresholdPm1 { .. }
         | StepKind::FcBin { .. }
-        | StepKind::FcFloat { .. } => false,
+        | StepKind::FcFloat { .. }
+        // the fused FC keeps each count in a register — no scratch
+        | StepKind::FcBinThreshold { .. } => false,
     })
 }
 

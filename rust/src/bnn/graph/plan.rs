@@ -139,6 +139,12 @@ pub(crate) struct Step {
     /// Per-step internal scratch (patch gathers, the LBP gray plane);
     /// live only within the step, so liveness reuses it freely.
     pub scratch: Option<BufId>,
+    /// Second internal scratch, used only by fused conv+threshold steps
+    /// that have not (yet) elided the i32 counts buffer: `scratch` holds
+    /// the patch gather, `scratch2` the popcount counts the epilogue
+    /// thresholds from.  `compile` never emits it — only
+    /// [`super::rewrite`] does.
+    pub scratch2: Option<BufId>,
     pub in_ty: ValTy,
     pub out_ty: ValTy,
     /// Timing label(s): convs lap twice (`im2colN`, `gemmN`), everything
@@ -163,6 +169,74 @@ pub(crate) enum StepKind {
     ThresholdPm1 { theta: String, flip: String },
     FcBin { kw: usize, c_out: usize, d: usize, w: String },
     FcFloat { d: usize, c_out: usize, act: Activation, w: String, b: Option<String> },
+
+    // --- fused kinds: emitted only by `super::rewrite`, never by -------
+    // `compile`.  Every fused kind carries `cmp_bias`, an offset the
+    // epilogue adds to each popcount before comparing against theta.  A
+    // sound rewrite always sets it to 0; it exists so an off-by-one
+    // epilogue is *expressible* in plan structure — `verify_plan` cannot
+    // know its semantics, but `super::equiv::check_equiv` refuses any
+    // nonzero bias, which is exactly the class of bug the equivalence
+    // gauntlet catches and the slot/shape verifier cannot.
+    /// ±1 floats → words: packed conv with the following threshold
+    /// folded into the popcount epilogue.  `elide: false` still writes
+    /// the raw counts to `scratch2` (the staged rewrite before counts
+    /// elision); `elide: true` keeps each count in a register.
+    ConvBinPackedThreshold {
+        k: usize,
+        c_out: usize,
+        nw: usize,
+        d: usize,
+        w: String,
+        theta: String,
+        flip: String,
+        cmp_bias: i32,
+        elide: bool,
+    },
+    /// Packed words → words: word-gather conv with the fused threshold
+    /// epilogue.  Same `scratch2`/`elide` contract as the packed form.
+    ConvBinWordsThreshold {
+        k: usize,
+        c_out: usize,
+        d: usize,
+        w: String,
+        theta: String,
+        flip: String,
+        cmp_bias: i32,
+        elide: bool,
+    },
+    /// External f32 image → counts: input binarization fused into the
+    /// im2col pack (each gathered pixel's sign bit is computed on the
+    /// fly — the ±1 float image is never materialized).  LBP is never
+    /// fused (it needs the whole grayscale plane before any patch).
+    BinarizeConvBin { scheme: Scheme, k: usize, c_out: usize, nw: usize, d: usize, w: String },
+    /// External f32 image → words: both fusions at once
+    /// (binarize-while-gather + threshold epilogue).
+    BinarizeConvBinThreshold {
+        scheme: Scheme,
+        k: usize,
+        c_out: usize,
+        nw: usize,
+        d: usize,
+        w: String,
+        theta: String,
+        flip: String,
+        cmp_bias: i32,
+        elide: bool,
+    },
+    /// Packed words → ±1 floats: FC with the threshold folded in.  Each
+    /// output's count lives in a register between the popcount and the
+    /// compare, so the counts buffer is gone by construction (no `elide`
+    /// flag needed).
+    FcBinThreshold {
+        kw: usize,
+        c_out: usize,
+        d: usize,
+        w: String,
+        theta: String,
+        flip: String,
+        cmp_bias: i32,
+    },
 }
 
 /// The compiled plan: lowered steps, arena layout, declared weights.
@@ -227,10 +301,30 @@ pub enum Corruption {
     DuplicateWeightBind,
     /// Lie about the logit width → breaks the serving contract.
     LogitShapeLie,
+    /// Rewrite-shaped: bump a fused threshold epilogue's `cmp_bias`
+    /// (models an off-by-one in the folded compare — bit-plausible,
+    /// invisible to the slot/shape verifier, semantically wrong).
+    /// Caught only by `check_equiv`.
+    EpilogueThresholdOffByOne,
+    /// Rewrite-shaped: widen a fused packed conv's row past
+    /// `ceil(d/32)` with a consistently-widened weight declaration
+    /// (models a fusion that changes the pad-bit class).
+    EpilogueThresholdPadBitClassChange,
+    /// Rewrite-shaped: point a later step's input at a fused step's
+    /// internal counts buffer (models eliding / privatizing the counts
+    /// edge while a second reader still exists — the single-reader
+    /// precondition of the elision axiom).
+    CountsElisionSecondReader,
+    /// Rewrite-shaped but *sound*: rename arena slots within a storage
+    /// class and reorder the weight declarations.  Dataflow, value
+    /// terms, and extents are untouched, so both `verify_plan` and
+    /// `check_equiv` must still ACCEPT the plan — the mutation suite's
+    /// false-positive guard.
+    ReorderedCommutingSteps,
 }
 
 impl Corruption {
-    pub const ALL: [Corruption; 8] = [
+    pub const ALL: [Corruption; 12] = [
         Corruption::SlotMerge,
         Corruption::IntervalTruncation,
         Corruption::ExtentShrink,
@@ -239,6 +333,34 @@ impl Corruption {
         Corruption::PadBitPollution,
         Corruption::DuplicateWeightBind,
         Corruption::LogitShapeLie,
+        Corruption::EpilogueThresholdOffByOne,
+        Corruption::EpilogueThresholdPadBitClassChange,
+        Corruption::CountsElisionSecondReader,
+        Corruption::ReorderedCommutingSteps,
+    ];
+
+    /// The classes `verify_plan` alone must reject on an *unrewritten*
+    /// plan (the PR 6 suite).  The rewrite-shaped classes need fused
+    /// steps to find a site and are judged by `check_equiv` instead —
+    /// see the mutation tests in [`super::equiv`].
+    pub const VERIFY_REJECTED: [Corruption; 8] = [
+        Corruption::SlotMerge,
+        Corruption::IntervalTruncation,
+        Corruption::ExtentShrink,
+        Corruption::DtypeSwap,
+        Corruption::WriterDeletion,
+        Corruption::PadBitPollution,
+        Corruption::DuplicateWeightBind,
+        Corruption::LogitShapeLie,
+    ];
+
+    /// The rewrite-shaped classes: applied to a *rewritten* plan and
+    /// judged by `check_equiv` against the original.
+    pub const REWRITE_SHAPED: [Corruption; 4] = [
+        Corruption::EpilogueThresholdOffByOne,
+        Corruption::EpilogueThresholdPadBitClassChange,
+        Corruption::CountsElisionSecondReader,
+        Corruption::ReorderedCommutingSteps,
     ];
 
     pub fn name(self) -> &'static str {
@@ -251,6 +373,10 @@ impl Corruption {
             Corruption::PadBitPollution => "pad-bit-pollution",
             Corruption::DuplicateWeightBind => "duplicate-weight-bind",
             Corruption::LogitShapeLie => "logit-shape-lie",
+            Corruption::EpilogueThresholdOffByOne => "epilogue-threshold-off-by-one",
+            Corruption::EpilogueThresholdPadBitClassChange => "pad-bit-class-change",
+            Corruption::CountsElisionSecondReader => "counts-elision-second-reader",
+            Corruption::ReorderedCommutingSteps => "reordered-commuting-steps",
         }
     }
 
@@ -360,23 +486,118 @@ impl Plan {
             Corruption::LogitShapeLie => {
                 self.classes += 3;
             }
+            Corruption::EpilogueThresholdOffByOne => {
+                let step = self
+                    .steps
+                    .iter_mut()
+                    .find(|s| {
+                        matches!(
+                            s.kind,
+                            StepKind::ConvBinPackedThreshold { .. }
+                                | StepKind::ConvBinWordsThreshold { .. }
+                                | StepKind::BinarizeConvBinThreshold { .. }
+                                | StepKind::FcBinThreshold { .. }
+                        )
+                    })
+                    .expect("plan has a fused threshold epilogue");
+                match &mut step.kind {
+                    StepKind::ConvBinPackedThreshold { cmp_bias, .. }
+                    | StepKind::ConvBinWordsThreshold { cmp_bias, .. }
+                    | StepKind::BinarizeConvBinThreshold { cmp_bias, .. }
+                    | StepKind::FcBinThreshold { cmp_bias, .. } => *cmp_bias += 1,
+                    _ => unreachable!(),
+                }
+            }
+            Corruption::EpilogueThresholdPadBitClassChange => {
+                let (wname, bad_shape) = {
+                    let step = self
+                        .steps
+                        .iter_mut()
+                        .find(|s| {
+                            matches!(
+                                s.kind,
+                                StepKind::ConvBinPackedThreshold { .. }
+                                    | StepKind::BinarizeConvBin { .. }
+                                    | StepKind::BinarizeConvBinThreshold { .. }
+                            )
+                        })
+                        .expect("plan has a fused packed conv");
+                    match &mut step.kind {
+                        StepKind::ConvBinPackedThreshold { c_out, nw, w, .. }
+                        | StepKind::BinarizeConvBin { c_out, nw, w, .. }
+                        | StepKind::BinarizeConvBinThreshold { c_out, nw, w, .. } => {
+                            *nw += 1;
+                            (w.clone(), vec![*c_out, *nw])
+                        }
+                        _ => unreachable!(),
+                    }
+                };
+                let req = self
+                    .weights
+                    .iter_mut()
+                    .find(|r| r.name == wname)
+                    .expect("fused packed conv declares its weight");
+                req.shape = bad_shape;
+            }
+            Corruption::CountsElisionSecondReader => {
+                let (i, counts) = self
+                    .steps
+                    .iter()
+                    .enumerate()
+                    .find_map(|(i, s)| s.scratch2.map(|sc| (i, sc)))
+                    .expect("plan has a non-elided fused conv (scratch2 counts)");
+                let reader = self
+                    .steps
+                    .get_mut(i + 1)
+                    .expect("fused conv has a successor step");
+                reader.input = Src::Buf(counts);
+            }
+            Corruption::ReorderedCommutingSteps => {
+                assert!(self.weights.len() >= 2, "plan declares at least two weights");
+                self.weights.reverse();
+                if let Some(class) = [BufClass::F32, BufClass::U32, BufClass::I32]
+                    .into_iter()
+                    .find(|&c| self.nbufs[c as usize] >= 2)
+                {
+                    let rename = |b: &mut BufId| {
+                        if b.class == class && b.idx < 2 {
+                            b.idx ^= 1;
+                        }
+                    };
+                    for s in &mut self.steps {
+                        if let Src::Buf(b) = &mut s.input {
+                            rename(b);
+                        }
+                        rename(&mut s.output);
+                        if let Some(b) = &mut s.scratch {
+                            rename(b);
+                        }
+                        if let Some(b) = &mut s.scratch2 {
+                            rename(b);
+                        }
+                    }
+                }
+            }
         }
         self
     }
 }
 
-/// Per-class free-list allocator for the liveness walk.
-struct Slots {
+/// Per-class free-list allocator for the liveness walk.  Shared with
+/// [`super::rewrite`], whose recoloring pass re-runs the same walk over
+/// a fused step list.
+pub(crate) struct Slots {
     free: [Vec<usize>; 3],
-    next: [usize; 3],
+    /// High-water slot count per class — the plan's `nbufs`.
+    pub(crate) next: [usize; 3],
 }
 
 impl Slots {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self { free: [Vec::new(), Vec::new(), Vec::new()], next: [0; 3] }
     }
 
-    fn alloc(&mut self, class: BufClass) -> BufId {
+    pub(crate) fn alloc(&mut self, class: BufClass) -> BufId {
         let c = class as usize;
         let idx = self.free[c].pop().unwrap_or_else(|| {
             let idx = self.next[c];
@@ -386,7 +607,7 @@ impl Slots {
         BufId { class, idx }
     }
 
-    fn release(&mut self, buf: BufId) {
+    pub(crate) fn release(&mut self, buf: BufId) {
         self.free[buf.class as usize].push(buf.idx);
     }
 }
@@ -631,6 +852,7 @@ pub(crate) fn compile(spec: &NetworkSpec) -> Result<Plan, GraphError> {
             input: cur_src,
             output,
             scratch,
+            scratch2: None,
             in_ty: cur,
             out_ty,
             label_a,
@@ -890,7 +1112,7 @@ mod tests {
         // and prove the verifier catches each with the *intended*
         // structured error, not just any error
         use crate::bnn::graph::verify::{verify_plan, VerifyError};
-        for c in Corruption::ALL {
+        for c in Corruption::VERIFY_REJECTED {
             let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb)
                 .plan()
                 .unwrap()
@@ -910,6 +1132,9 @@ mod tests {
                 Corruption::PadBitPollution => matches!(err, VerifyError::PadBits { .. }),
                 Corruption::DuplicateWeightBind => matches!(err, VerifyError::WeightDup { .. }),
                 Corruption::LogitShapeLie => matches!(err, VerifyError::BadLogits { .. }),
+                // rewrite-shaped classes need fused steps; judged by
+                // check_equiv in the equiv mutation suite instead
+                _ => unreachable!("not a verify-rejected corruption"),
             };
             assert!(ok, "{}: wrong variant: {err}", c.name());
         }
@@ -943,10 +1168,25 @@ mod tests {
             ],
         };
         assert!(verify_plan(&spec().plan().unwrap()).is_ok());
-        for c in Corruption::ALL {
+        for c in Corruption::VERIFY_REJECTED {
             let plan = spec().plan().unwrap().corrupt_for_test(c);
             assert!(verify_plan(&plan).is_err(), "{} verified clean on the arch plan", c.name());
         }
+    }
+
+    #[test]
+    fn corruption_subsets_partition_all() {
+        // every class is judged somewhere: by verify_plan on unrewritten
+        // plans or by check_equiv on rewritten ones — and nowhere twice
+        let mut seen: Vec<&str> = Corruption::VERIFY_REJECTED
+            .iter()
+            .chain(Corruption::REWRITE_SHAPED.iter())
+            .map(|c| c.name())
+            .collect();
+        seen.sort_unstable();
+        let mut all: Vec<&str> = Corruption::ALL.iter().map(|c| c.name()).collect();
+        all.sort_unstable();
+        assert_eq!(seen, all);
     }
 
     #[test]

@@ -1,0 +1,480 @@
+//! The fusion optimizer: pure `Plan → Plan` rewrites, proof-carrying.
+//!
+//! The paper wins its 7.4× at kernel level; SBNN-style intra-layer
+//! fusion is the next tier (ROADMAP item 1): fold the learned threshold
+//! into the popcount epilogue so counts never round-trip through
+//! memory, compute the input binarization inside the im2col gather so
+//! the ±1 float image is never materialized, and finally drop the i32
+//! counts buffer entirely.  Every fusion so far in this codebase was
+//! hand-argued; these are *checked*.  A pass here only ever produces a
+//! candidate — the loader refuses to serve it unless
+//! [`super::equiv::check_equiv`] proves it computes the same function
+//! as the original plan AND [`super::verify_plan`] re-proves the fused
+//! plan's resource soundness.  Three passes, applied in
+//! [`RewritePass::ALL`] order:
+//!
+//! 1. **[`RewritePass::FoldThreshold`]** — `threshold ∘ popcount ≡
+//!    fused-epilogue compare`: a `ConvBinPacked`/`ConvBinWords` step
+//!    followed by the `ThresholdPack` that consumes its counts becomes
+//!    one `*Threshold` step (likewise `FcBin` + `ThresholdPm1` →
+//!    `FcBinThreshold`).  The conv's counts output edge disappears; in
+//!    this staged form the raw counts are still written to the step's
+//!    `scratch2` so the fusion is observable and separately priced.
+//! 2. **[`RewritePass::FusePack`]** — `binarize ∘ im2col ≡
+//!    pack-while-gather`: an rgb/gray `Binarize` step followed by the
+//!    packed conv that consumes it becomes one `BinarizeConvBin*` step;
+//!    each gathered pixel's sign bit is computed on the fly.  LBP never
+//!    fuses (every patch needs the whole grayscale plane first), and
+//!    `Scheme::None` plans have no binarize step to fuse.
+//! 3. **[`RewritePass::ElideCounts`]** — drop `scratch2`: legal only
+//!    when the counts edge has a single (fused) threshold reader, which
+//!    the pass re-checks and [`super::equiv`] independently enforces.
+//!
+//! After any step-list surgery the per-edge live intervals change, so
+//! every pass ends with [`recolor`]: the same free-list interval
+//! coloring `plan::compile` runs, re-assigning arena slots from
+//! scratch.  The weight list is untouched — a fused step binds the
+//! union of its constituents' tensors, so the rewritten plan loads the
+//! exact same container bytes.
+
+use super::plan::{BufClass, BufId, Plan, Slots, Src, Step, StepKind};
+use crate::input::binarize::Scheme;
+
+/// One rewrite pass of the fusion optimizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RewritePass {
+    /// Fold a threshold step into the preceding popcount epilogue.
+    FoldThreshold,
+    /// Fuse rgb/gray input binarization into the im2col pack.
+    FusePack,
+    /// Elide the i32 counts buffer of fused conv+threshold steps.
+    ElideCounts,
+}
+
+impl RewritePass {
+    /// Every pass, in canonical application order (elision only has
+    /// sites once folding has run).
+    pub const ALL: [RewritePass; 3] =
+        [RewritePass::FoldThreshold, RewritePass::FusePack, RewritePass::ElideCounts];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RewritePass::FoldThreshold => "fold-threshold",
+            RewritePass::FusePack => "fuse-pack",
+            RewritePass::ElideCounts => "elide-counts",
+        }
+    }
+}
+
+/// `"fold-threshold+fuse-pack+elide-counts"`-style tag for a pass list
+/// (the loader's `list_models` rewrite status).
+pub fn pass_names(passes: &[RewritePass]) -> String {
+    let names: Vec<&str> = passes.iter().map(|p| p.name()).collect();
+    names.join("+")
+}
+
+/// Apply `passes` in order.  Pure: the input plan is untouched, and a
+/// pass with no applicable site is the identity (a float plan sails
+/// through unchanged).  The result is a *candidate* — callers must
+/// gauntlet it through `check_equiv` + `verify_plan` before serving.
+pub fn rewrite_plan(plan: &Plan, passes: &[RewritePass]) -> Plan {
+    let mut out = plan.clone();
+    for pass in passes {
+        out = match pass {
+            RewritePass::FoldThreshold => fold_threshold(&out),
+            RewritePass::FusePack => fuse_pack(&out),
+            RewritePass::ElideCounts => elide_counts(&out),
+        };
+    }
+    out
+}
+
+/// Placeholder slot for a freshly-introduced scratch; [`recolor`]
+/// assigns the real index (and `verify_plan` would refuse a leak).
+fn placeholder(class: BufClass) -> BufId {
+    BufId { class, idx: usize::MAX }
+}
+
+/// Pass 1: `threshold ∘ popcount` → fused epilogue compare.
+fn fold_threshold(plan: &Plan) -> Plan {
+    let mut out = plan.clone();
+    out.steps = merge_pairs(&out.steps, try_fold);
+    recolor(out)
+}
+
+fn try_fold(conv: &Step, thr: &Step) -> Option<Step> {
+    // the threshold must consume exactly the conv's output edge
+    if thr.input != Src::Buf(conv.output) {
+        return None;
+    }
+    match (&conv.kind, &thr.kind) {
+        (
+            StepKind::ConvBinPacked { k, c_out, nw, d, w },
+            StepKind::ThresholdPack { f32_in: false, theta, flip },
+        ) => Some(Step {
+            kind: StepKind::ConvBinPackedThreshold {
+                k: *k,
+                c_out: *c_out,
+                nw: *nw,
+                d: *d,
+                w: w.clone(),
+                theta: theta.clone(),
+                flip: flip.clone(),
+                cmp_bias: 0,
+                elide: false,
+            },
+            input: conv.input,
+            output: thr.output,
+            scratch: conv.scratch,
+            scratch2: Some(placeholder(BufClass::I32)),
+            in_ty: conv.in_ty,
+            out_ty: thr.out_ty,
+            label_a: conv.label_a.clone(),
+            label_b: Some(fused_label(conv.label_b.as_deref(), &conv.label_a, &thr.label_a)),
+        }),
+        (
+            StepKind::ConvBinWords { k, c_out, d, w },
+            StepKind::ThresholdPack { f32_in: false, theta, flip },
+        ) => Some(Step {
+            kind: StepKind::ConvBinWordsThreshold {
+                k: *k,
+                c_out: *c_out,
+                d: *d,
+                w: w.clone(),
+                theta: theta.clone(),
+                flip: flip.clone(),
+                cmp_bias: 0,
+                elide: false,
+            },
+            input: conv.input,
+            output: thr.output,
+            scratch: conv.scratch,
+            scratch2: Some(placeholder(BufClass::I32)),
+            in_ty: conv.in_ty,
+            out_ty: thr.out_ty,
+            label_a: conv.label_a.clone(),
+            label_b: Some(fused_label(conv.label_b.as_deref(), &conv.label_a, &thr.label_a)),
+        }),
+        (StepKind::FcBin { kw, c_out, d, w }, StepKind::ThresholdPm1 { theta, flip }) => {
+            Some(Step {
+                // the FC's counts are scalars consumed one compare at a
+                // time — the register-resident form needs no staging
+                // buffer, so there is no `elide` step for it
+                kind: StepKind::FcBinThreshold {
+                    kw: *kw,
+                    c_out: *c_out,
+                    d: *d,
+                    w: w.clone(),
+                    theta: theta.clone(),
+                    flip: flip.clone(),
+                    cmp_bias: 0,
+                },
+                input: conv.input,
+                output: thr.output,
+                scratch: None,
+                scratch2: None,
+                in_ty: conv.in_ty,
+                out_ty: thr.out_ty,
+                label_a: format!("{}+{}", conv.label_a, thr.label_a),
+                label_b: None,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Pass 2: `binarize ∘ im2col` → pack-while-gather.
+fn fuse_pack(plan: &Plan) -> Plan {
+    let mut out = plan.clone();
+    out.steps = merge_pairs(&out.steps, try_fuse);
+    recolor(out)
+}
+
+fn try_fuse(bin: &Step, conv: &Step) -> Option<Step> {
+    if conv.input != Src::Buf(bin.output) {
+        return None;
+    }
+    // LBP needs the whole grayscale plane before any patch can be
+    // gathered; Scheme::None plans have no binarize step at all
+    let scheme = match bin.kind {
+        StepKind::Binarize { scheme: s @ (Scheme::Rgb | Scheme::Gray) } => s,
+        _ => return None,
+    };
+    let (kind, label_b) = match &conv.kind {
+        StepKind::ConvBinPacked { k, c_out, nw, d, w } => (
+            StepKind::BinarizeConvBin {
+                scheme,
+                k: *k,
+                c_out: *c_out,
+                nw: *nw,
+                d: *d,
+                w: w.clone(),
+            },
+            conv.label_b.clone(),
+        ),
+        StepKind::ConvBinPackedThreshold { k, c_out, nw, d, w, theta, flip, cmp_bias, elide } => {
+            (
+                StepKind::BinarizeConvBinThreshold {
+                    scheme,
+                    k: *k,
+                    c_out: *c_out,
+                    nw: *nw,
+                    d: *d,
+                    w: w.clone(),
+                    theta: theta.clone(),
+                    flip: flip.clone(),
+                    cmp_bias: *cmp_bias,
+                    elide: *elide,
+                },
+                conv.label_b.clone(),
+            )
+        }
+        _ => return None,
+    };
+    Some(Step {
+        kind,
+        input: bin.input,
+        output: conv.output,
+        scratch: conv.scratch,
+        scratch2: conv.scratch2,
+        in_ty: bin.in_ty,
+        out_ty: conv.out_ty,
+        label_a: format!("binarize+{}", conv.label_a),
+        label_b,
+    })
+}
+
+/// Pass 3: drop the staged counts buffer (`scratch2`) of every fused
+/// conv+threshold step whose counts have no reader besides the fused
+/// epilogue itself — the single-reader precondition of the elision
+/// axiom, re-checked here and independently by [`super::equiv`].
+fn elide_counts(plan: &Plan) -> Plan {
+    let mut out = plan.clone();
+    for i in 0..out.steps.len() {
+        let Some(counts) = out.steps[i].scratch2 else { continue };
+        let second_reader = out.steps[i + 1..].iter().any(|s| s.input == Src::Buf(counts));
+        if second_reader {
+            continue;
+        }
+        match &mut out.steps[i].kind {
+            StepKind::ConvBinPackedThreshold { elide, .. }
+            | StepKind::ConvBinWordsThreshold { elide, .. }
+            | StepKind::BinarizeConvBinThreshold { elide, .. } => {
+                *elide = true;
+                out.steps[i].scratch2 = None;
+            }
+            _ => {}
+        }
+    }
+    recolor(out)
+}
+
+/// Walk the step list merging adjacent pairs `merge` accepts (a merged
+/// step is not re-considered as the left half of another pair — the
+/// passes compose across `rewrite_plan` calls instead).
+fn merge_pairs(steps: &[Step], merge: impl Fn(&Step, &Step) -> Option<Step>) -> Vec<Step> {
+    let mut out: Vec<Step> = Vec::with_capacity(steps.len());
+    let mut i = 0;
+    while i < steps.len() {
+        if i + 1 < steps.len() {
+            if let Some(fused) = merge(&steps[i], &steps[i + 1]) {
+                out.push(fused);
+                i += 2;
+                continue;
+            }
+        }
+        out.push(steps[i].clone());
+        i += 1;
+    }
+    out
+}
+
+fn fused_label(b: Option<&str>, a: &str, thr: &str) -> String {
+    format!("{}+{thr}", b.unwrap_or(a))
+}
+
+/// Re-run the free-list interval coloring over a rewritten step list:
+/// the same walk as `plan::compile` (allocate scratch/scratch2/output,
+/// then retire the input edge and the per-step scratches — releasing
+/// after the output allocation keeps in/scratch/out pairwise distinct).
+/// Rewrites only ever operate on linear chains, so step `j+1`'s input
+/// is step `j`'s (re-assigned) output.
+fn recolor(mut plan: Plan) -> Plan {
+    let mut slots = Slots::new();
+    let mut prev: Option<BufId> = None;
+    for step in &mut plan.steps {
+        if let (Src::Buf(_), Some(p)) = (step.input, prev) {
+            step.input = Src::Buf(p);
+        }
+        let scratch = step.scratch.map(|s| slots.alloc(s.class));
+        let scratch2 = step.scratch2.map(|s| slots.alloc(s.class));
+        let output = slots.alloc(step.out_ty.class());
+        if let Src::Buf(b) = step.input {
+            slots.release(b);
+        }
+        if let Some(s) = scratch {
+            slots.release(s);
+        }
+        if let Some(s) = scratch2 {
+            slots.release(s);
+        }
+        step.scratch = scratch;
+        step.scratch2 = scratch2;
+        step.output = output;
+        prev = Some(output);
+    }
+    plan.nbufs = slots.next;
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::graph::verify::verify_plan;
+    use crate::bnn::graph::{check_equiv, Activation, LayerOp, NetworkSpec};
+    use crate::bnn::network::NUM_CLASSES;
+
+    fn three_conv_spec() -> NetworkSpec {
+        NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Gray },
+                LayerOp::ConvBin { k: 5, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::ConvBin { k: 3, c_out: 32 },
+                LayerOp::Threshold,
+                LayerOp::OrPool,
+                LayerOp::FcBin { c_out: 64 },
+                LayerOp::Threshold,
+                LayerOp::FcFloat { c_out: NUM_CLASSES, bias: true, act: Activation::None },
+            ],
+        }
+    }
+
+    fn all_specs() -> Vec<NetworkSpec> {
+        let mut v: Vec<NetworkSpec> =
+            Scheme::ALL.iter().map(|&s| NetworkSpec::legacy_bcnn(s)).collect();
+        v.push(NetworkSpec::legacy_float());
+        v.push(three_conv_spec());
+        v
+    }
+
+    #[test]
+    fn every_pass_combination_verifies_and_proves_equivalent() {
+        // the whole point: no rewrite output is trusted — each one must
+        // survive the same gauntlet the loader runs
+        let combos: Vec<Vec<RewritePass>> = vec![
+            vec![RewritePass::FoldThreshold],
+            vec![RewritePass::FusePack],
+            vec![RewritePass::ElideCounts], // identity without fold
+            vec![RewritePass::FoldThreshold, RewritePass::ElideCounts],
+            RewritePass::ALL.to_vec(),
+        ];
+        for spec in all_specs() {
+            let plan = spec.plan().unwrap();
+            for passes in &combos {
+                let rewritten = rewrite_plan(&plan, passes);
+                check_equiv(&plan, &rewritten).unwrap_or_else(|e| {
+                    panic!("{}: not equivalent: {e}", pass_names(passes))
+                });
+                verify_plan(&rewritten)
+                    .unwrap_or_else(|e| panic!("{}: unsound: {e}", pass_names(passes)));
+            }
+        }
+    }
+
+    #[test]
+    fn the_full_rewrite_fuses_the_legacy_rgb_plan_to_seven_steps() {
+        // 11 steps -> 7: binarize+conv1+threshold1 fuse, conv2+threshold2
+        // fuse, fc1+threshold3 fuse; pools and the float tail remain
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        let rw = rewrite_plan(&plan, &RewritePass::ALL);
+        assert_eq!(plan.steps.len(), 11);
+        assert_eq!(rw.steps.len(), 7);
+        assert!(matches!(
+            rw.steps[0].kind,
+            StepKind::BinarizeConvBinThreshold { elide: true, cmp_bias: 0, .. }
+        ));
+        assert!(matches!(rw.steps[1].kind, StepKind::OrPool));
+        assert!(matches!(
+            rw.steps[2].kind,
+            StepKind::ConvBinWordsThreshold { elide: true, .. }
+        ));
+        assert!(matches!(rw.steps[4].kind, StepKind::FcBinThreshold { .. }));
+        // all counts buffers elided: the i32 pool is gone entirely
+        assert_eq!(rw.nbufs[2], 0, "i32 slots survived elision: {:?}", rw.nbufs);
+        // the weight list is untouched — same container bytes bind
+        assert_eq!(plan.weights, rw.weights);
+    }
+
+    #[test]
+    fn staged_fold_keeps_the_counts_buffer_until_elision() {
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Gray).plan().unwrap();
+        let folded = rewrite_plan(&plan, &[RewritePass::FoldThreshold]);
+        let fused_conv = folded
+            .steps
+            .iter()
+            .find(|s| matches!(s.kind, StepKind::ConvBinPackedThreshold { .. }))
+            .unwrap();
+        assert!(
+            matches!(fused_conv.kind, StepKind::ConvBinPackedThreshold { elide: false, .. }),
+            "fold alone must not elide"
+        );
+        assert_eq!(fused_conv.scratch2.map(|s| s.class), Some(BufClass::I32));
+        let elided = rewrite_plan(&folded, &[RewritePass::ElideCounts]);
+        assert!(elided.steps.iter().all(|s| s.scratch2.is_none()));
+        assert_eq!(elided.nbufs[2], 0);
+    }
+
+    #[test]
+    fn lbp_and_none_schemes_never_fuse_the_gather() {
+        // LBP needs the whole gray plane; None has no binarize step
+        for scheme in [Scheme::Lbp, Scheme::None] {
+            let plan = NetworkSpec::legacy_bcnn(scheme).plan().unwrap();
+            let rw = rewrite_plan(&plan, &RewritePass::ALL);
+            assert!(
+                !rw.steps.iter().any(|s| matches!(
+                    s.kind,
+                    StepKind::BinarizeConvBin { .. } | StepKind::BinarizeConvBinThreshold { .. }
+                )),
+                "{scheme:?} fused its gather"
+            );
+        }
+    }
+
+    #[test]
+    fn rewriting_shrinks_the_proven_arena_envelope() {
+        // the optimizer's whole pitch in one number: peak bytes drop
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        let before = verify_plan(&plan).unwrap();
+        let after = verify_plan(&rewrite_plan(&plan, &RewritePass::ALL)).unwrap();
+        let total = |p: [usize; 3]| p.iter().sum::<usize>();
+        assert!(
+            total(after.peak_bytes) < total(before.peak_bytes),
+            "no envelope win: {:?} -> {:?}",
+            before.peak_bytes,
+            after.peak_bytes
+        );
+        // the i32 counts pool specifically is gone
+        assert_eq!(after.peak_bytes[2], 0);
+    }
+
+    #[test]
+    fn fused_labels_name_both_ops() {
+        let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb).plan().unwrap();
+        let rw = rewrite_plan(&plan, &RewritePass::ALL);
+        let names = rw.step_names();
+        for want in ["binarize+im2col1", "gemm1+threshold_pack1", "fc1+threshold3"] {
+            assert!(names.iter().any(|n| n == want), "missing {want} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn pass_names_tag_is_stable() {
+        assert_eq!(pass_names(&RewritePass::ALL), "fold-threshold+fuse-pack+elide-counts");
+        assert_eq!(pass_names(&[]), "");
+    }
+}

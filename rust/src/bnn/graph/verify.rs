@@ -37,8 +37,9 @@
 //! model in the admin plane's `list_models`.  Failure is a structured
 //! [`VerifyError`] naming the step, edge, slot, and — for aliasing —
 //! the two conflicting live intervals.  The mutation-testing suite in
-//! [`super::plan`] injects eight corruption classes and asserts each is
-//! rejected with its intended variant.
+//! [`super::plan`] injects twelve corruption classes: eight are judged
+//! here ([`super::plan::Corruption::VERIFY_REJECTED`]), four
+//! rewrite-shaped ones by [`super::equiv::check_equiv`].
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -230,7 +231,7 @@ fn slot_key(b: BufId) -> (usize, usize) {
     (b.class as usize, b.idx)
 }
 
-fn kind_name(kind: &StepKind) -> &'static str {
+pub(crate) fn kind_name(kind: &StepKind) -> &'static str {
     match kind {
         StepKind::Binarize { .. } => "binarize",
         StepKind::ConvBinPacked { .. } => "conv_bin_packed",
@@ -242,6 +243,11 @@ fn kind_name(kind: &StepKind) -> &'static str {
         StepKind::ThresholdPm1 { .. } => "threshold_pm1",
         StepKind::FcBin { .. } => "fc_bin",
         StepKind::FcFloat { .. } => "fc_float",
+        StepKind::ConvBinPackedThreshold { .. } => "conv_bin_packed+threshold",
+        StepKind::ConvBinWordsThreshold { .. } => "conv_bin_words+threshold",
+        StepKind::BinarizeConvBin { .. } => "binarize+conv_bin_packed",
+        StepKind::BinarizeConvBinThreshold { .. } => "binarize+conv_bin_packed+threshold",
+        StepKind::FcBinThreshold { .. } => "fc_bin+threshold",
     }
 }
 
@@ -251,6 +257,25 @@ fn scratch_class(kind: &StepKind) -> Option<BufClass> {
         StepKind::Binarize { scheme } => (*scheme == Scheme::Lbp).then_some(BufClass::F32),
         StepKind::ConvBinPacked { .. } | StepKind::ConvBinWords { .. } => Some(BufClass::U32),
         StepKind::ConvFloat { .. } => Some(BufClass::F32),
+        // fused convs still gather patches into a u32 scratch
+        StepKind::ConvBinPackedThreshold { .. }
+        | StepKind::ConvBinWordsThreshold { .. }
+        | StepKind::BinarizeConvBin { .. }
+        | StepKind::BinarizeConvBinThreshold { .. } => Some(BufClass::U32),
+        _ => None,
+    }
+}
+
+/// Storage class of a step's *second* scratch clobber: the i32 counts
+/// buffer a fused conv+threshold step still writes until the elision
+/// pass drops it.  `None` everywhere else.
+fn scratch2_class(kind: &StepKind) -> Option<BufClass> {
+    match kind {
+        StepKind::ConvBinPackedThreshold { elide, .. }
+        | StepKind::ConvBinWordsThreshold { elide, .. }
+        | StepKind::BinarizeConvBinThreshold { elide, .. } => {
+            (!elide).then_some(BufClass::I32)
+        }
         _ => None,
     }
 }
@@ -261,11 +286,22 @@ fn scratch_elems(step: &Step) -> usize {
     let px = step.in_ty.h * step.in_ty.w;
     match &step.kind {
         StepKind::Binarize { .. } => px, // the LBP grayscale plane
-        StepKind::ConvBinPacked { nw, .. } => px * nw,
-        StepKind::ConvBinWords { k, .. } => px * k * k,
+        StepKind::ConvBinPacked { nw, .. }
+        | StepKind::ConvBinPackedThreshold { nw, .. }
+        | StepKind::BinarizeConvBin { nw, .. }
+        | StepKind::BinarizeConvBinThreshold { nw, .. } => px * nw,
+        StepKind::ConvBinWords { k, .. } | StepKind::ConvBinWordsThreshold { k, .. } => {
+            px * k * k
+        }
         StepKind::ConvFloat { k, .. } => px * k * k * step.in_ty.c,
         _ => 0,
     }
+}
+
+/// Per-image element footprint of the i32 counts scratch of a
+/// non-elided fused conv+threshold step.
+fn scratch2_elems(step: &Step) -> usize {
+    step.out_ty.h * step.out_ty.w * step.out_ty.c
 }
 
 /// Per-image element footprint of a value while resident in its slot
@@ -368,6 +404,19 @@ pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
                 last_use: j,
                 ty: None,
                 elems: scratch_elems(step),
+            });
+            last_writer.insert(slot_key(s), ei);
+        }
+        if let Some(s) = step.scratch2 {
+            // the fused counts buffer: a second per-step clobber
+            let ei = edges.len();
+            edges.push(Edge {
+                slot: s,
+                role: EdgeRole::Scratch,
+                def: j,
+                last_use: j,
+                ty: None,
+                elems: scratch2_elems(step),
             });
             last_writer.insert(slot_key(s), ei);
         }
@@ -509,6 +558,41 @@ pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
                     if let Some(b) = b {
                         need(j, b, WeightDType::F32, vec![*c_out])?;
                     }
+                }
+                StepKind::ConvBinPackedThreshold { c_out, nw, w, theta, flip, .. } => {
+                    need(j, w, WeightDType::U32, vec![*c_out, *nw])?;
+                    need(j, theta, WeightDType::F32, vec![*c_out])?;
+                    need(j, flip, WeightDType::U32, vec![*c_out])?;
+                }
+                StepKind::ConvBinWordsThreshold { k, c_out, w, theta, flip, .. } => {
+                    need(j, w, WeightDType::U32, vec![*c_out, k * k])?;
+                    need(j, theta, WeightDType::F32, vec![*c_out])?;
+                    need(j, flip, WeightDType::U32, vec![*c_out])?;
+                }
+                StepKind::BinarizeConvBin { scheme, c_out, nw, w, .. } => {
+                    match scheme {
+                        Scheme::Rgb => need(j, "input_t", WeightDType::F32, vec![3])?,
+                        Scheme::Gray => need(j, "input_t", WeightDType::F32, vec![1])?,
+                        Scheme::Lbp | Scheme::None => {}
+                    }
+                    need(j, w, WeightDType::U32, vec![*c_out, *nw])?;
+                }
+                StepKind::BinarizeConvBinThreshold {
+                    scheme, c_out, nw, w, theta, flip, ..
+                } => {
+                    match scheme {
+                        Scheme::Rgb => need(j, "input_t", WeightDType::F32, vec![3])?,
+                        Scheme::Gray => need(j, "input_t", WeightDType::F32, vec![1])?,
+                        Scheme::Lbp | Scheme::None => {}
+                    }
+                    need(j, w, WeightDType::U32, vec![*c_out, *nw])?;
+                    need(j, theta, WeightDType::F32, vec![*c_out])?;
+                    need(j, flip, WeightDType::U32, vec![*c_out])?;
+                }
+                StepKind::FcBinThreshold { kw, c_out, w, theta, flip, .. } => {
+                    need(j, w, WeightDType::U32, vec![*c_out, *kw])?;
+                    need(j, theta, WeightDType::F32, vec![*c_out])?;
+                    need(j, flip, WeightDType::U32, vec![*c_out])?;
                 }
                 StepKind::MaxPool | StepKind::OrPool => {}
             }
@@ -730,6 +814,127 @@ fn check_step_kind(j: usize, step: &Step) -> Result<(), VerifyError> {
             }
             want_out(ValTy { kind: ValKind::F32, h: 1, w: 1, c: *c_out })?;
         }
+        StepKind::ConvBinPackedThreshold { k, c_out, nw, d, .. } => {
+            if *nw != packed_width(*d, 32) {
+                return Err(pad(format!(
+                    "{nw} weight words per row cannot hold exactly d={d} packed bits \
+                     (want {}) — tail-pad masking would be unsound",
+                    packed_width(*d, 32)
+                )));
+            }
+            if *c_out > 32 {
+                return Err(pad(format!(
+                    "the fused epilogue packs into one word per pixel; {c_out} channels > 32"
+                )));
+            }
+            conv_params(*k, *c_out)?;
+            if t.kind != ValKind::F32 {
+                return Err(ks(format!("expects ±1 float input, got {}", t.describe())));
+            }
+            if *d != k * k * t.c {
+                return Err(ks(format!("patch depth d={d} != k*k*c = {}", k * k * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::Words, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::ConvBinWordsThreshold { k, c_out, d, .. } => {
+            if t.kind != ValKind::Words {
+                return Err(ks(format!("expects channel-packed words, got {}", t.describe())));
+            }
+            if t.c > 32 {
+                return Err(pad(format!(
+                    "channel-packed words carry at most 32 live channels, got {}",
+                    t.c
+                )));
+            }
+            if *c_out > 32 {
+                return Err(pad(format!(
+                    "the fused epilogue packs into one word per pixel; {c_out} channels > 32"
+                )));
+            }
+            conv_params(*k, *c_out)?;
+            if *d != k * k * t.c {
+                return Err(ks(format!("patch depth d={d} != k*k*c = {}", k * k * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::Words, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::BinarizeConvBin { scheme, k, c_out, nw, d, .. } => {
+            if !matches!(scheme, Scheme::Rgb | Scheme::Gray) {
+                return Err(ks(format!(
+                    "only rgb/gray binarization fuses into the gather, got {:?}",
+                    scheme
+                )));
+            }
+            if t.kind != ValKind::F32 || t.c != IMG_C {
+                return Err(ks(format!("expects 3-channel float pixels, got {}", t.describe())));
+            }
+            if *nw != packed_width(*d, 32) {
+                return Err(pad(format!(
+                    "{nw} weight words per row cannot hold exactly d={d} packed bits \
+                     (want {}) — tail-pad masking would be unsound",
+                    packed_width(*d, 32)
+                )));
+            }
+            conv_params(*k, *c_out)?;
+            if *d != k * k * scheme.input_channels() {
+                return Err(ks(format!(
+                    "patch depth d={d} != k*k*{} binarized channels",
+                    scheme.input_channels()
+                )));
+            }
+            want_out(ValTy { kind: ValKind::Counts, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::BinarizeConvBinThreshold { scheme, k, c_out, nw, d, .. } => {
+            if !matches!(scheme, Scheme::Rgb | Scheme::Gray) {
+                return Err(ks(format!(
+                    "only rgb/gray binarization fuses into the gather, got {:?}",
+                    scheme
+                )));
+            }
+            if t.kind != ValKind::F32 || t.c != IMG_C {
+                return Err(ks(format!("expects 3-channel float pixels, got {}", t.describe())));
+            }
+            if *nw != packed_width(*d, 32) {
+                return Err(pad(format!(
+                    "{nw} weight words per row cannot hold exactly d={d} packed bits \
+                     (want {}) — tail-pad masking would be unsound",
+                    packed_width(*d, 32)
+                )));
+            }
+            if *c_out > 32 {
+                return Err(pad(format!(
+                    "the fused epilogue packs into one word per pixel; {c_out} channels > 32"
+                )));
+            }
+            conv_params(*k, *c_out)?;
+            if *d != k * k * scheme.input_channels() {
+                return Err(ks(format!(
+                    "patch depth d={d} != k*k*{} binarized channels",
+                    scheme.input_channels()
+                )));
+            }
+            want_out(ValTy { kind: ValKind::Words, h: t.h, w: t.w, c: *c_out })?;
+        }
+        StepKind::FcBinThreshold { kw, c_out, d, .. } => {
+            if t.kind != ValKind::Words {
+                return Err(ks(format!("expects channel-packed words, got {}", t.describe())));
+            }
+            if t.c > 32 {
+                return Err(pad(format!(
+                    "channel-packed words carry at most 32 live channels, got {}",
+                    t.c
+                )));
+            }
+            if *c_out == 0 {
+                return Err(ks("output width must be >= 1".to_string()));
+            }
+            if *kw != t.h * t.w {
+                return Err(ks(format!("row width kw={kw} != h*w = {}", t.h * t.w)));
+            }
+            if *d != kw * t.c {
+                return Err(ks(format!("real bit depth d={d} != kw*c = {}", kw * t.c)));
+            }
+            want_out(ValTy { kind: ValKind::F32, h: 1, w: 1, c: *c_out })?;
+        }
     }
     Ok(())
 }
@@ -754,30 +959,37 @@ fn check_step_slots(j: usize, step: &Step) -> Result<(), VerifyError> {
         }
     }
     let eff = step_effect(&step.kind);
-    match (step.scratch, scratch_class(&step.kind)) {
-        (None, None) => {}
-        (Some(s), Some(c)) => {
-            if s.class != c {
-                return Err(VerifyError::SlotDtype {
-                    step: j,
-                    slot: s,
-                    want: format!("the step's {} scratch", class_name(c)),
-                });
+    for (slot, class, what) in [
+        (step.scratch, scratch_class(&step.kind), "scratch"),
+        (step.scratch2, scratch2_class(&step.kind), "counts scratch"),
+    ] {
+        match (slot, class) {
+            (None, None) => {}
+            (Some(s), Some(c)) => {
+                if s.class != c {
+                    return Err(VerifyError::SlotDtype {
+                        step: j,
+                        slot: s,
+                        want: format!("the step's {} {what}", class_name(c)),
+                    });
+                }
             }
-        }
-        (Some(_), None) => {
-            return Err(VerifyError::KindShape {
-                step: j,
-                op: kind_name(&step.kind).to_string(),
-                why: "binds a scratch slot but its effect signature clobbers none".to_string(),
-            })
-        }
-        (None, Some(_)) => {
-            return Err(VerifyError::KindShape {
-                step: j,
-                op: kind_name(&step.kind).to_string(),
-                why: "effect signature clobbers scratch but no slot is bound".to_string(),
-            })
+            (Some(_), None) => {
+                return Err(VerifyError::KindShape {
+                    step: j,
+                    op: kind_name(&step.kind).to_string(),
+                    why: format!(
+                        "binds a {what} slot but its effect signature clobbers none"
+                    ),
+                })
+            }
+            (None, Some(_)) => {
+                return Err(VerifyError::KindShape {
+                    step: j,
+                    op: kind_name(&step.kind).to_string(),
+                    why: format!("effect signature clobbers a {what} but no slot is bound"),
+                })
+            }
         }
     }
     debug_assert_eq!(eff.clobbers_scratch, scratch_class(&step.kind).is_some());

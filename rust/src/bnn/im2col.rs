@@ -255,6 +255,70 @@ pub fn im2col_pack_batch_into(
     }
 }
 
+/// Fused binarize + im2col + pack over `n` contiguous RAW (H, W, C_RAW)
+/// float images: each gathered pixel's binarized channel bits are
+/// computed on the fly by `bin`, so the intermediate ±1 image is never
+/// materialized.  `bin` maps one raw pixel (C_RAW floats) to its C_BIN
+/// sign bits, channel 0 in the HIGHEST of the low C_BIN bits — the
+/// MSB-first channel order of `im2col_pack`.  Padding packs as bit 0
+/// and the halo never reads across image boundaries, so the output is
+/// bit-identical to binarizing each image and running
+/// `im2col_pack_batch` on the result.
+///
+/// Write coverage: resizes `out` to exactly N·H·W·NW and assigns every
+/// word via the per-row `BitWriter` flush; a dirty buffer comes out
+/// identical to a fresh allocation.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_binarize_pack_batch_into(
+    xs: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c_raw: usize,
+    c_bin: usize,
+    k: usize,
+    b: usize,
+    bin: impl Fn(&[f32]) -> u32,
+    out: &mut Vec<u32>,
+) {
+    assert_eq!(xs.len(), n * h * w * c_raw);
+    let r = (k - 1) / 2;
+    let nw = packed_width(k * k * c_bin, b);
+    let (img_in, img_out) = (h * w * c_raw, h * w * nw);
+    out.resize(n * img_out, 0);
+    for i in 0..n {
+        let x = &xs[i * img_in..(i + 1) * img_in];
+        let o = &mut out[i * img_out..(i + 1) * img_out];
+        for oy in 0..h {
+            for ox in 0..w {
+                let row = &mut o[(oy * w + ox) * nw..(oy * w + ox + 1) * nw];
+                let mut bw = BitWriter::new(row, b);
+                for dy in 0..k {
+                    let iy = oy as isize + dy as isize - r as isize;
+                    if iy < 0 || iy as usize >= h {
+                        bw.push_zeros((k * c_bin) as u32);
+                        continue;
+                    }
+                    let base = (iy as usize) * w;
+                    for dx in 0..k {
+                        let ix = ox as isize + dx as isize - r as isize;
+                        if ix < 0 || ix as usize >= w {
+                            bw.push_zeros(c_bin as u32);
+                        } else {
+                            let src = (base + ix as usize) * c_raw;
+                            let bits = bin(&x[src..src + c_raw]);
+                            for j in (0..c_bin).rev() {
+                                bw.push((bits >> j) & 1);
+                            }
+                        }
+                    }
+                }
+                bw.finish();
+            }
+        }
+    }
+}
+
 /// Two-pass (unfused) variant for the fusion ablation (E7): materialize
 /// float patches, then pack them — the extra K*K*C global traffic the
 /// paper's fusion eliminates.
@@ -456,6 +520,83 @@ mod tests {
         let words = vec![7u32; 4 * 4 * 2];
         let out = im2col_words(&words, 4, 4, 2, 5);
         assert_eq!(out.len(), 16 * 25 * 2);
+    }
+
+    #[test]
+    fn binarize_while_gather_matches_materialize_then_pack() {
+        // the fuse-pack axiom at the kernel level: computing sign bits
+        // inside the gather == materializing the ±1 image and packing it
+        prop::check(24, |g| {
+            let n = g.usize_in(1, 3);
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 6);
+            let c = g.usize_in(1, 3);
+            let k = *g.pick(&[1usize, 3, 5]);
+            let xs = g.normals(n * h * w * c);
+            let t = g.normals(c);
+            // per-channel sign(x + t), materialized
+            let pm1: Vec<f32> = xs
+                .chunks_exact(c)
+                .flat_map(|px| {
+                    px.iter()
+                        .zip(&t)
+                        .map(|(&v, &tv)| if v + tv > 0.0 { 1.0 } else { -1.0 })
+                        .collect::<Vec<f32>>()
+                })
+                .collect();
+            let want = im2col_pack_batch(&pm1, n, h, w, c, k, 32);
+            let mut got = vec![123u32; 7]; // dirty
+            im2col_binarize_pack_batch_into(
+                &xs,
+                n,
+                h,
+                w,
+                c,
+                c,
+                k,
+                32,
+                |px| {
+                    let mut bits = 0u32;
+                    for (j, (&v, &tv)) in px.iter().zip(&t).enumerate() {
+                        bits |= u32::from(v + tv > 0.0) << (c - 1 - j);
+                    }
+                    bits
+                },
+                &mut got,
+            );
+            ensure_eq(got, want, "binarize-while-gather == materialize-then-pack")
+        });
+    }
+
+    #[test]
+    fn binarize_while_gather_reduces_channels() {
+        // c_raw != c_bin: a luma-style reduction (3 raw channels -> 1 sign
+        // bit) must equal materializing the reduced ±1 plane first
+        prop::check(16, |g| {
+            let h = g.usize_in(1, 6);
+            let w = g.usize_in(1, 6);
+            let xs = g.normals(h * w * 3);
+            let luma = [0.299f32, 0.587, 0.114];
+            let t = g.normals(1)[0];
+            let red = |px: &[f32]| px[0] * luma[0] + px[1] * luma[1] + px[2] * luma[2] + t;
+            let pm1: Vec<f32> =
+                xs.chunks_exact(3).map(|px| if red(px) > 0.0 { 1.0 } else { -1.0 }).collect();
+            let want = im2col_pack_batch(&pm1, 1, h, w, 1, 3, 32);
+            let mut got = Vec::new();
+            im2col_binarize_pack_batch_into(
+                &xs,
+                1,
+                h,
+                w,
+                3,
+                1,
+                3,
+                32,
+                |px| u32::from(red(px) > 0.0),
+                &mut got,
+            );
+            ensure_eq(got, want, "channel-reducing binarize-gather")
+        });
     }
 
     #[test]

@@ -15,18 +15,31 @@
 //!    domination, and weight-binding totality are proven on the
 //!    compiled plan *before* any weight is bound — a refusal here is
 //!    [`RegistryError::Verify`], counted in `registry.verify_failures`;
-//! 5. weight binding (shape-checked by the plan) + smoke inference: one
+//! 5. proof-carrying fusion rewrite: the optimizer
+//!    ([`rewrite_plan`]) fuses thresholds into conv/FC epilogues,
+//!    binarization into the patch gather, and elides the i32 counts
+//!    buffer — then its output must survive
+//!    [`check_equiv`](crate::bnn::graph::check_equiv) (the rewritten
+//!    plan provably computes the same logit terms) and a fresh
+//!    [`verify_plan`].  A refusal here is NOT fatal: the entry falls
+//!    back to the unoptimized (already-verified) plan, the fallback is
+//!    counted in `registry.rewrite_fallbacks`, and `list_models`
+//!    reports `fallback:<err>` for the entry;
+//! 6. weight binding (shape-checked by the plan) + smoke inference: one
 //!    deterministic synthetic image must produce the plan's declared
 //!    logit count, all finite.
 //!
 //! A failure at any other stage is a structured
 //! [`RegistryError::Load`]; the registry never publishes a backend that
-//! did not pass all five.
+//! did not pass the gauntlet.
 
 use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Arc};
 
-use crate::bnn::graph::{verify_plan, CompiledNetwork, NetworkSpec, Plan, VerifyReport};
+use crate::bnn::graph::{
+    check_equiv, pass_names, rewrite_plan, verify_plan, CompiledNetwork, NetworkSpec, Plan,
+    RewritePass, VerifyReport,
+};
 use crate::coordinator::{EngineBackend, InferBackend};
 use crate::dataset::synth;
 use crate::input::binarize::Scheme;
@@ -70,9 +83,17 @@ pub(crate) struct Loaded {
     pub backend: Arc<dyn InferBackend>,
     /// Per-model batch-policy overrides from the manifest entry.
     pub batch: Option<RegistryBatchSpec>,
-    /// Static-verification envelope for the compiled plan (surfaced
-    /// per-entry by `list_models`).
+    /// Static-verification envelope for the plan actually bound (the
+    /// rewritten plan when the proof gauntlet accepted it, otherwise
+    /// the original), surfaced per-entry by `list_models`.
     pub report: VerifyReport,
+    /// Rewrite status for `list_models`: the enabled pass list
+    /// (`"fold-threshold+fuse-pack+elide-counts"`) or `fallback:<err>`
+    /// when the proof gauntlet refused the rewrite.
+    pub rewrite: String,
+    /// True when the rewrite was refused and the unoptimized plan
+    /// serves (counted in `registry.rewrite_fallbacks`).
+    pub rewrite_fallback: bool,
 }
 
 struct Job {
@@ -187,6 +208,20 @@ fn load_entry(
     // or serves a single request
     let report =
         verify_plan(&plan).map_err(|e| RegistryError::Verify(format!("{name}@{version}: {e}")))?;
+    // stage 5: the fusion optimizer's output is never trusted.  The
+    // equivalence checker must prove the rewritten plan emits the same
+    // logit terms as the verified original, and the verifier must
+    // re-prove the rewritten plan's soundness on its own.  Either
+    // refusal falls back to the unoptimized plan — slower, but proven —
+    // and is surfaced via `rewrite_fallbacks` / `list_models`.
+    let rewritten = corrupt_rewrite_from_env(name, rewrite_plan(&plan, &RewritePass::ALL));
+    let (plan, report, rewrite, rewrite_fallback) = match check_equiv(&plan, &rewritten)
+        .map_err(|e| format!("equiv: {e}"))
+        .and_then(|_| verify_plan(&rewritten).map_err(|e| format!("verify: {e}")))
+    {
+        Ok(rw_report) => (rewritten, rw_report, pass_names(&RewritePass::ALL), false),
+        Err(e) => (plan, report, format!("fallback:{e}"), true),
+    };
     let compiled = CompiledNetwork::from_plan(plan, &tf).map_err(load_err)?;
     let classes = compiled.num_classes();
     let label = match spec.kind.as_str() {
@@ -203,6 +238,8 @@ fn load_entry(
         backend,
         batch: spec.batch,
         report,
+        rewrite,
+        rewrite_fallback,
     })
 }
 
@@ -217,6 +254,38 @@ fn load_entry(
 /// production load) are untouched.
 fn corrupt_plan_from_env(name: &str, plan: Plan) -> Plan {
     if let Ok(spec) = std::env::var("BCNN_TEST_CORRUPT_PLAN") {
+        if let Some((model, corruption)) = spec.split_once(':') {
+            if model == name {
+                if let Some(c) = crate::bnn::graph::Corruption::parse(corruption) {
+                    return plan.corrupt_for_test(c);
+                }
+            }
+        }
+    }
+    plan
+}
+
+/// Test-only fault injection for the REWRITE stage: when
+/// `BCNN_TEST_CORRUPT_REWRITE` is set to `"<model-name>:<corruption>"`
+/// and `name` matches, the named corruption is applied to the
+/// freshly-REWRITTEN plan — simulating an unsound optimizer pass.  The
+/// e2e suite uses this to prove the equivalence gauntlet actually gates
+/// fused plans: the sound rewriter cannot emit the unsound shapes the
+/// checker exists to refuse, so they have to be injected between
+/// rewrite and `check_equiv`.  Scoped by model name, like
+/// `corrupt_plan_from_env`.
+/// Serializes tests that arm the env-var fault hooks above: env vars
+/// are process-global, so two parallel tests setting
+/// `BCNN_TEST_CORRUPT_REWRITE` would clobber each other's spec mid-load.
+/// Hold the guard across set_var..remove_var.
+#[cfg(test)]
+pub(crate) fn corrupt_env_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn corrupt_rewrite_from_env(name: &str, plan: Plan) -> Plan {
+    if let Ok(spec) = std::env::var("BCNN_TEST_CORRUPT_REWRITE") {
         if let Some((model, corruption)) = spec.split_once(':') {
             if model == name {
                 if let Some(c) = crate::bnn::graph::Corruption::parse(corruption) {

@@ -24,8 +24,12 @@
 //!   (`loader.rs`) re-reads `registry.json`, checksums the weight file
 //!   (FNV-1a 64), parses and shape-checks the container, statically
 //!   verifies the compiled plan ([`crate::bnn::graph::verify_plan`]:
-//!   aliasing, dataflow, extents, weight bindings), and smoke-infers
-//!   one synthetic image — only then is the entry published.  Serving
+//!   aliasing, dataflow, extents, weight bindings), runs the
+//!   proof-carrying fusion rewriter (a rewrite refused by
+//!   [`crate::bnn::graph::check_equiv`] or re-verification falls back
+//!   to the unoptimized plan, counted in `registry.rewrite_fallbacks`
+//!   and reported per entry by `list_models`), and smoke-infers one
+//!   synthetic image — only then is the entry published.  Serving
 //!   threads never parse artifacts, and a plan that fails verification
 //!   never serves (counted in `registry.verify_failures`).
 //! * **Graceful retirement.**  Unloading removes the entry from the
@@ -41,6 +45,8 @@
 mod loader;
 
 pub use loader::{fnv1a64, format_checksum, parse_checksum};
+#[cfg(test)]
+pub(crate) use loader::corrupt_env_guard;
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -147,6 +153,11 @@ pub struct EntryMeta {
     /// publication); `None` for programmatic publications, which hand
     /// the registry an opaque backend rather than a plan.
     pub verify: Option<VerifyReport>,
+    /// Rewrite status for file loads: the fusion pass list the entry
+    /// serves with, or `fallback:<err>` when the equivalence gauntlet
+    /// refused the rewrite and the unoptimized plan serves.  `None` for
+    /// programmatic publications (no plan, nothing to rewrite).
+    pub rewrite: Option<String>,
 }
 
 /// Mutable registry state, guarded by one mutex and only ever touched
@@ -199,6 +210,11 @@ struct Counters {
     /// Loads refused because the compiled plan failed static
     /// verification (a subset of `load_failures`).
     verify_failures: u64,
+    /// Successful loads whose fusion rewrite was refused by the
+    /// equivalence/verification gauntlet — the entry serves the
+    /// unoptimized plan instead (NOT a load failure; the model is up,
+    /// just unfused).
+    rewrite_fallbacks: u64,
     swaps: u64,
     evictions: u64,
 }
@@ -269,6 +285,7 @@ impl ModelRegistry {
                 checksum,
                 policy,
                 verify: None,
+                rewrite: None,
             },
             backend,
         )
@@ -297,10 +314,16 @@ impl ModelRegistry {
                         checksum: Some(loaded.checksum),
                         policy: effective_policy(self.router.default_policy(), loaded.batch),
                         verify: Some(loaded.report),
+                        rewrite: Some(loaded.rewrite),
                     },
                     loaded.backend,
                 )?;
-                self.counters.lock().unwrap().loads += 1;
+                let mut c = self.counters.lock().unwrap();
+                let _ord = lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
+                c.loads += 1;
+                if loaded.rewrite_fallback {
+                    c.rewrite_fallbacks += 1;
+                }
                 Ok(key)
             }
             Err(e) => {
@@ -504,6 +527,16 @@ impl ModelRegistry {
                         None => Json::Null,
                     },
                 );
+                // fusion-rewrite status: the pass list the entry serves
+                // with, or `fallback:<err>` when the proof gauntlet
+                // refused the rewrite (file loads only)
+                row.insert(
+                    "rewrite",
+                    match &meta.rewrite {
+                        Some(status) => Json::from(status.as_str()),
+                        None => Json::Null,
+                    },
+                );
                 if let Ok(m) = self.router.metrics(&lane_key) {
                     row.insert("submitted", Json::from(m.submitted() as usize));
                     row.insert("completed", Json::from(m.completed() as usize));
@@ -525,6 +558,7 @@ impl ModelRegistry {
         obj.insert("loads", Json::from(c.loads as usize));
         obj.insert("load_failures", Json::from(c.load_failures as usize));
         obj.insert("verify_failures", Json::from(c.verify_failures as usize));
+        obj.insert("rewrite_fallbacks", Json::from(c.rewrite_fallbacks as usize));
         obj.insert("swaps", Json::from(c.swaps as usize));
         obj.insert("evictions", Json::from(c.evictions as usize));
         Json::Obj(obj)
@@ -879,9 +913,11 @@ mod tests {
             .engine_threads(1)
             .models_dir(&dir)
             .build();
+        let env = corrupt_env_guard();
         std::env::set_var("BCNN_TEST_CORRUPT_PLAN", "mutant:slot-merge");
         let err = r.load_model("mutant", 1).unwrap_err();
         std::env::remove_var("BCNN_TEST_CORRUPT_PLAN");
+        drop(env);
         assert!(matches!(err, RegistryError::Verify(_)), "{err}");
         assert!(err.to_string().contains("aliased"), "{err}");
         assert!(r.resolve("mutant").is_err(), "refused entries must never serve");
@@ -896,6 +932,76 @@ mod tests {
         let report = rows[0].get("verify").unwrap();
         assert!(report.get("steps").unwrap().as_usize().unwrap() > 0);
         assert!(report.get("intervals").unwrap().as_usize().unwrap() > 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn a_refused_rewrite_falls_back_to_the_unoptimized_plan() {
+        // seed an unsound "optimizer" output via the loader's rewrite
+        // fault hook: the equivalence checker must refuse it, but unlike
+        // a corrupted plan this is NOT a load failure — the entry
+        // publishes with the already-verified unoptimized plan, the
+        // fallback is counted, and the lane serves requests end to end
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-rwfall-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tf = synth_bcnn_tf(Scheme::Rgb, 500);
+        tf.save(dir.join("optim.bcnt")).unwrap();
+        let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("optim.bcnt")).unwrap()));
+        let manifest = format!(
+            r#"{{"models": [
+  {{"name": "optim", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "optim.bcnt", "checksum": "{sum}"}},
+  {{"name": "optim", "version": 2, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "optim.bcnt", "checksum": "{sum}"}}
+]}}"#
+        );
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        let r = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        let env = corrupt_env_guard();
+        std::env::set_var(
+            "BCNN_TEST_CORRUPT_REWRITE",
+            "optim:epilogue-threshold-off-by-one",
+        );
+        let key = r.load_model("optim", 1).unwrap();
+        std::env::remove_var("BCNN_TEST_CORRUPT_REWRITE");
+        drop(env);
+        assert_eq!(key, "optim@1");
+        let c = r.counters_json();
+        assert_eq!(c.get("rewrite_fallbacks").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(c.get("load_failures").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(c.get("verify_failures").unwrap().as_usize().unwrap(), 0);
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        let status = rows[0].get("rewrite").unwrap().as_str().unwrap();
+        assert!(status.starts_with("fallback:equiv:"), "{status}");
+        assert!(status.contains("cmp_bias"), "{status}");
+        // the fallback entry serves the unoptimized (but verified) plan
+        let lane = r.resolve("optim").unwrap();
+        for _ in 0..4 {
+            assert!(r.router().infer_blocking(&lane, synth_image(5)).unwrap().error.is_none());
+        }
+        // with the hook cleared the same artifact rewrites clean: the
+        // full pass list is reported, the envelope prices the rewritten
+        // (shorter) plan, and the fallback counter does not move
+        r.load_model("optim", 2).unwrap();
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        let clean = rows[1].get("rewrite").unwrap().as_str().unwrap();
+        assert_eq!(clean, "fold-threshold+fuse-pack+elide-counts");
+        let fb = rows[0].get("verify").unwrap().get("steps").unwrap().as_usize().unwrap();
+        let rw = rows[1].get("verify").unwrap().get("steps").unwrap().as_usize().unwrap();
+        assert!(rw < fb, "rewritten plan must have fewer steps ({rw} vs {fb})");
+        let lane = r.resolve("optim@2").unwrap();
+        assert!(r.router().infer_blocking(&lane, synth_image(6)).unwrap().error.is_none());
+        assert_eq!(
+            r.counters_json().get("rewrite_fallbacks").unwrap().as_usize().unwrap(),
+            1
+        );
         r.shutdown();
     }
 

@@ -913,4 +913,70 @@ mod tests {
         assert!(line.contains("stats"));
         stop.store(true, Ordering::Relaxed);
     }
+
+    #[test]
+    fn tcp_load_with_refused_rewrite_serves_the_fallback_plan() {
+        // end-to-end over a real socket: an admin load whose fusion
+        // rewrite is refused by the equivalence checker must still
+        // publish (serving the verified unoptimized plan), answer
+        // classify requests without dropping any, and surface the
+        // fallback in list_models and stats
+        use crate::bnn::network::tests_support::synth_bcnn_tf;
+        use crate::registry::{corrupt_env_guard, fnv1a64, format_checksum};
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-tcp-rwfall-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tf = synth_bcnn_tf(Scheme::Rgb, 700);
+        tf.save(dir.join("fb.bcnt")).unwrap();
+        let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("fb.bcnt")).unwrap()));
+        let manifest = format!(
+            r#"{{"models": [
+  {{"name": "fb", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "fb.bcnt", "checksum": "{sum}"}}
+]}}"#
+        );
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        let registry = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        let s = Arc::new(Server::new(
+            registry,
+            vec!["bus".into(), "normal".into(), "truck".into(), "van".into()],
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = Arc::clone(&s).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        // arm the rewrite fault hook for the duration of the load (the
+        // read_line blocks until the server finished handling it)
+        let env = corrupt_env_guard();
+        std::env::set_var("BCNN_TEST_CORRUPT_REWRITE", "fb:pad-bit-class-change");
+        conn.write_all(b"{\"op\":\"load_model\",\"name\":\"fb\",\"version\":1}\n")
+            .unwrap();
+        reader.read_line(&mut line).unwrap();
+        std::env::remove_var("BCNN_TEST_CORRUPT_REWRITE");
+        drop(env);
+        assert!(line.contains("load_model") && line.contains("fb@1"), "{line}");
+        // the fallback entry answers every classify request
+        for i in 0..3 {
+            line.clear();
+            let req = format!("{{\"op\":\"classify_synth\",\"model\":\"fb@1\",\"index\":{i}}}\n");
+            conn.write_all(req.as_bytes()).unwrap();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("label"), "{line}");
+        }
+        // the refusal is operator-visible end to end
+        line.clear();
+        conn.write_all(b"{\"op\":\"list_models\"}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("fallback:equiv:"), "{line}");
+        line.clear();
+        conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"rewrite_fallbacks\": 1"), "{line}");
+        stop.store(true, Ordering::Relaxed);
+    }
 }

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Source-invariant lint suite for the Rust tree.
 
-Three invariants that rustc cannot enforce but the codebase relies on:
+Four invariants that rustc cannot enforce but the codebase relies on:
 
 A. Write-coverage contracts: every public `*_into` kernel under
    `rust/src/bnn/` documents its output-buffer coverage (a doc line
@@ -20,6 +20,15 @@ B. Panic policy in the serving plane (`rust/src/server/`,
 C. Error-enum uniformity: every `enum *Error` outside `#[cfg(test)]`
    goes through `util::error::error_enum_impls!` in the same file, so
    Display/Error/From stay mechanically consistent crate-wide.
+
+D. Variant coverage for the plan IR and its proof machinery: every
+   `LayerOp` and `StepKind` variant must appear (backticked) in a table
+   row of docs/ARCHITECTURE.md — the op/step effect inventory is the
+   verifier's public contract, and an undocumented kind is a contract
+   hole; and every `Corruption` and `EquivError` variant must be named
+   by at least one `#[cfg(test)]` region (`Enum::Variant`) — a
+   corruption class nobody injects, or a refusal variant nobody
+   asserts, is dead proof surface.
 
 Exit status: 0 when every invariant holds, 1 otherwise (one line per
 violation).  Wired into CI next to `check_docs_links.py`; run locally
@@ -158,16 +167,99 @@ def check_error_enums(repo: Path) -> list[str]:
     return errors
 
 
+# rule D: enums whose variants must appear in ARCHITECTURE.md's tables
+DOC_TABLE_ENUMS = (
+    ("LayerOp", "rust/src/bnn/graph/mod.rs"),
+    ("StepKind", "rust/src/bnn/graph/plan.rs"),
+)
+# rule D: enums whose variants must each be named by >= 1 test
+TEST_NAMED_ENUMS = (
+    ("Corruption", "rust/src/bnn/graph/plan.rs"),
+    ("EquivError", "rust/src/bnn/graph/equiv.rs"),
+)
+
+ENUM_OPEN_RE_TMPL = r"^\s*(?:pub(?:\([^)]*\))?\s+)?enum {name}\b"
+VARIANT_RE = re.compile(r"^\s*([A-Z]\w*)\s*(?:\{|\(|,|=|$)")
+
+
+def enum_variants(path: Path, name: str) -> list[str]:
+    """Variant identifiers of `enum name` in `path`, by brace-depth walk
+    (variants sit at depth 1; struct-variant fields at depth 2+)."""
+    if not path.is_file():
+        return []
+    open_re = re.compile(ENUM_OPEN_RE_TMPL.format(name=re.escape(name)))
+    lines = strip_line_comments(path.read_text(encoding="utf-8").splitlines())
+    variants: list[str] = []
+    depth = 0
+    inside = False
+    for line in lines:
+        if not inside:
+            if open_re.match(line):
+                inside = True
+                depth = line.count("{") - line.count("}")
+            continue
+        if depth == 1:
+            m = VARIANT_RE.match(line)
+            if m:
+                variants.append(m.group(1))
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            break
+    return variants
+
+
+def check_variant_coverage(repo: Path) -> list[str]:
+    errors = []
+    arch = repo / "docs" / "ARCHITECTURE.md"
+    table_rows = (
+        [l for l in arch.read_text(encoding="utf-8").splitlines() if l.lstrip().startswith("|")]
+        if arch.is_file()
+        else []
+    )
+    for enum_name, rel in DOC_TABLE_ENUMS:
+        for v in enum_variants(repo / rel, enum_name):
+            if not any(f"`{v}`" in row for row in table_rows):
+                errors.append(
+                    f"docs/ARCHITECTURE.md: {enum_name} variant `{v}` missing "
+                    f"from the op/step effect tables"
+                )
+    # test-region text across the whole Rust tree; files under
+    # rust/tests/ are integration tests — the entire file counts
+    test_chunks = []
+    for path in rust_files(repo / "rust"):
+        lines = path.read_text(encoding="utf-8").splitlines()
+        if "tests" in path.parts:
+            test_chunks.append("\n".join(lines))
+        else:
+            _, test = split_prod_test(lines)
+            test_chunks.append("\n".join(test))
+    test_text = "\n".join(test_chunks)
+    for enum_name, rel in TEST_NAMED_ENUMS:
+        for v in enum_variants(repo / rel, enum_name):
+            if not re.search(rf"\b{enum_name}::{v}\b", test_text):
+                errors.append(
+                    f"{rel}: {enum_name}::{v} is never named by any "
+                    f"#[cfg(test)] region or integration test"
+                )
+    return errors
+
+
 def main() -> int:
     errors = (
-        check_write_coverage(REPO) + check_panic_policy(REPO) + check_error_enums(REPO)
+        check_write_coverage(REPO)
+        + check_panic_policy(REPO)
+        + check_error_enums(REPO)
+        + check_variant_coverage(REPO)
     )
     for e in errors:
         print(e)
     if errors:
         print(f"\n{len(errors)} invariant violation(s)")
         return 1
-    print("ok: write-coverage, panic-policy, and error-enum invariants hold")
+    print(
+        "ok: write-coverage, panic-policy, error-enum, and "
+        "variant-coverage invariants hold"
+    )
     return 0
 
 
