@@ -31,15 +31,19 @@
 //!   is reported as a structured [`EquivError::Diverged`] naming the
 //!   step and term *in both plans*.
 //!
-//! Three structural axiom preconditions are checked before value
+//! Four structural axiom preconditions are checked before value
 //! numbering, because they are semantic facts the term language
-//! deliberately leaves out of descriptors:
+//! deliberately leaves out of descriptors.  The first three are
+//! per-plan; the fourth compares the two plans pairwise — a fusion is
+//! only meaning-preserving when the edge it hides had no other reader,
+//! and that is a fact about the *original* plan's fan-out:
 //!
 //! | axiom | precondition | violation |
 //! |---|---|---|
 //! | fold threshold | epilogue compare is exactly `count > theta` (`cmp_bias == 0`) | [`EquivError::EpilogueBias`] |
 //! | any packed conv | weight row width is exactly `ceil(d/32)` (the pad-bit class) | [`EquivError::PadClass`] |
 //! | elide counts | the fused counts edge has no reader besides the epilogue | [`EquivError::CountsSecondReader`] |
+//! | any fusion | a multi-consumer edge's producer keeps its labels — fusion never crosses it | [`EquivError::MultiConsumerFusion`] |
 //!
 //! `cmp_bias` is the showcase: a rewrite that off-by-ones the folded
 //! compare produces a plan `verify_plan` happily accepts (every slot,
@@ -71,6 +75,11 @@ pub enum EquivError {
     /// private — counts elision is legal only with a single threshold
     /// reader.
     CountsSecondReader { fused_step: usize, reader_step: usize },
+    /// An original step whose output edge has two or more readers was
+    /// fused away by the rewrite — the fused kind computes the edge for
+    /// its own epilogue only, so every *other* reader now consumes a
+    /// value that no longer exists.
+    MultiConsumerFusion { step: usize, label: String },
     /// The two plans emit different value terms: the first diverging
     /// term, named in both plans (`<end of plan>` if one ran out).
     Diverged { step_a: usize, step_b: usize, term_a: String, term_b: String },
@@ -84,6 +93,9 @@ crate::error_enum_impls!(EquivError {
     EquivError::CountsSecondReader { fused_step, reader_step } =>
         ("step {reader_step} reads the counts edge step {fused_step} fused away — \
           counts elision requires a single threshold reader"),
+    EquivError::MultiConsumerFusion { step, label } =>
+        ("step {step} ({label}) produces a multi-consumer edge but was fused away — \
+          fusion may not cross an edge with more than one reader"),
     EquivError::Diverged { step_a, step_b, term_a, term_b } =>
         ("plans diverge: original step {step_a} emits [{term_a}], \
           rewritten step {step_b} emits [{term_b}]"),
@@ -99,6 +111,7 @@ pub fn check_equiv(original: &Plan, rewritten: &Plan) -> Result<(), EquivError> 
         pad_class_sound(plan)?;
         counts_single_reader(plan)?;
     }
+    fusion_single_consumer(original, rewritten)?;
 
     // one shared interner: identical (operand, descriptor) chains get
     // identical ids across both plans, so term equality is id equality
@@ -185,6 +198,46 @@ fn counts_single_reader(plan: &Plan) -> Result<(), EquivError> {
     Ok(())
 }
 
+/// Pairwise axiom precondition: for every original step whose output
+/// edge has two or more readers (counting both operand slots of every
+/// later step, up to the slot's redefinition), the rewritten plan must
+/// still contain a step with the identical `(label_a, label_b)` pair.
+/// Honest passes never relabel a step they did not fuse, and the fusion
+/// guards refuse multi-consumer sites — so a missing label pair means a
+/// fusion crossed an edge somebody else still reads.
+fn fusion_single_consumer(original: &Plan, rewritten: &Plan) -> Result<(), EquivError> {
+    for (j, step) in original.steps.iter().enumerate() {
+        let out = Src::Buf(step.output);
+        let mut readers = 0usize;
+        for later in &original.steps[j + 1..] {
+            if later.input == out || later.input2 == Some(out) {
+                readers += 1;
+            }
+            if later.output == step.output
+                || later.scratch == Some(step.output)
+                || later.scratch2 == Some(step.output)
+            {
+                break;
+            }
+        }
+        if readers < 2 {
+            continue;
+        }
+        let survives = rewritten
+            .steps
+            .iter()
+            .any(|s| s.label_a == step.label_a && s.label_b == step.label_b);
+        if !survives {
+            let label = match &step.label_b {
+                Some(b) => format!("{}/{b}", step.label_a),
+                None => step.label_a.clone(),
+            };
+            return Err(EquivError::MultiConsumerFusion { step: j, label });
+        }
+    }
+    Ok(())
+}
+
 // ---- symbolic value numbering --------------------------------------
 
 /// The interner: a value number per distinct `(operand, descriptor)`
@@ -249,7 +302,17 @@ fn symbolic_trace(plan: &Plan, vn: &mut Vn) -> Vec<Term> {
                 None => vn.fresh(),
             },
         };
-        for desc in unfold(step) {
+        // the second operand's value number is embedded in the binary
+        // op's descriptor, so add/concat terms are sensitive to WHICH
+        // edge the skip/branch carried, not just its shape
+        let v2 = step.input2.map(|src| match src {
+            Src::External => vn.id(0, &format!("external#{}", step.in_ty.describe())),
+            Src::Buf(b) => match slot_values.get(&slot_key(b)) {
+                Some(&v) => v,
+                None => vn.fresh(),
+            },
+        });
+        for desc in unfold(step, v2) {
             v = vn.id(v, &desc);
             trace.push(Term { step: j, desc, value: v });
         }
@@ -268,11 +331,12 @@ fn symbolic_trace(plan: &Plan, vn: &mut Vn) -> Vec<Term> {
 /// base kind, the axiom's composition for a fused kind.  Descriptors
 /// carry everything term equality must be sensitive to: op, resolved
 /// parameters (the packed row width `nw` *is* the pad-bit class),
-/// weight names, output extent/dtype.  They deliberately omit
+/// weight names, output extent/dtype, and — for binary ops — the value
+/// number `v2` of the second operand edge.  They deliberately omit
 /// `cmp_bias` and `elide` (judged structurally above — bias 0 and a
 /// private counts edge make them semantically invisible) and timing
 /// labels (cosmetic).
-fn unfold(step: &Step) -> Vec<String> {
+fn unfold(step: &Step, v2: Option<u64>) -> Vec<String> {
     let t = step.in_ty;
     let o = step.out_ty;
     let counts_mid = |c: usize| ValTy { kind: ValKind::Counts, h: o.h, w: o.w, c };
@@ -320,6 +384,23 @@ fn unfold(step: &Step) -> Vec<String> {
             fc_bin_desc(*kw, *d, w, &counts_mid(*c_out)),
             threshold_pm1_desc(theta, flip, &o),
         ],
+        // --- branch primitives: never fused, never reordered ----------
+        // (a missing second operand renders as "undef", which can never
+        // match a well-formed plan's term — divergence, not a panic)
+        StepKind::Add => {
+            let rhs = v2.map_or("undef".to_string(), |v| format!("v{v}"));
+            vec![format!("add[rhs={rhs}]->{}", o.describe())]
+        }
+        StepKind::Concat => {
+            let rhs = v2.map_or("undef".to_string(), |v| format!("v{v}"));
+            vec![format!("concat[rhs={rhs}]->{}", o.describe())]
+        }
+        StepKind::SplitPart { lo } => {
+            vec![format!("split[lo={lo}]->{}", o.describe())]
+        }
+        StepKind::Scale { alpha } => {
+            vec![format!("scale[alpha={alpha}]->{}", o.describe())]
+        }
     }
 }
 
@@ -411,6 +492,38 @@ mod tests {
                 assert_eq!(reader_step, fused_step + 1);
             }
             other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn fusing_across_a_multi_consumer_edge_is_refused_by_the_named_axiom() {
+        // the branch-shaped rewrite lie: fold conv+threshold even though
+        // a skip edge still reads the conv's counts.  The corrupted plan
+        // is slot- and shape-clean (the orphaned reader is rewired onto
+        // a same-typed edge, the dead slot compacted), so ONLY the
+        // multi-consumer fusion axiom can refuse it.
+        use crate::bnn::graph::test_specs;
+        let plan = test_specs::residual_binary().plan().unwrap();
+        let bad = plan.clone().corrupt_for_test(Corruption::MultiConsumerFusedAcross);
+        verify_plan(&bad).expect("the illegal fold is invisible to the slot/shape verifier");
+        let err = check_equiv(&plan, &bad).unwrap_err();
+        assert!(
+            matches!(err, EquivError::MultiConsumerFusion { .. }),
+            "wrong variant: {err}"
+        );
+    }
+
+    #[test]
+    fn honest_rewrites_of_branch_fixtures_are_accepted() {
+        // the false-positive guard for the new axiom: the rewriter's
+        // multi-consumer guards skip the protected sites, so the
+        // rewritten DAGs still prove equivalent and resource-sound
+        use crate::bnn::graph::test_specs;
+        for (name, spec) in test_specs::all() {
+            let plan = spec.plan().unwrap();
+            let rw = rewrite_plan(&plan, &RewritePass::ALL);
+            check_equiv(&plan, &rw).unwrap_or_else(|e| panic!("{name}: refused: {e}"));
+            verify_plan(&rw).unwrap_or_else(|e| panic!("{name}: unsound rewrite: {e}"));
         }
     }
 

@@ -6,9 +6,10 @@
 //! and packed conv weights are pre-widened to u64 lanes
 //! ([`crate::bnn::bgemm::widen_weights`]) so the hot path never touches
 //! them again.  Execution walks the lowered steps in order; each step
-//! reads its input slot (or the caller's image payload), writes its
-//! planned output slot, and uses at most one planned per-step scratch
-//! slot (patch gathers, the LBP gray plane).  Every kernel either
+//! reads its input slot (or the caller's image payload), the join
+//! steps (Add/Concat) additionally read a second planned input slot,
+//! each writes its planned output slot, and uses at most one planned
+//! per-step scratch slot (patch gathers, the LBP gray plane).  Every kernel either
 //! assigns its entire exact-resized output range or identity-fills it
 //! first, so arena slots reused across steps, batches, and even
 //! different plans can never leak state — the same contract the
@@ -23,13 +24,13 @@
 
 use std::time::Instant;
 
-use crate::bnn::network::{LayerTimings, IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::bnn::network::{LayerTimings, IMG_C, IMG_H, IMG_W};
 use crate::bnn::scratch::PlanScratch;
 use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
 use crate::input::binarize::{self, Scheme};
 use crate::util::tensorio::TensorFile;
 
-use super::plan::{BufClass, Plan, Src, StepKind};
+use super::plan::{BufClass, Plan, Src, StepKind, ValKind};
 use super::{Activation, GraphError, NetworkSpec};
 
 /// The weights one step binds — and nothing else.  Placement, extents,
@@ -65,6 +66,9 @@ enum StepWeights {
     /// Fused packed FC + threshold: FC rows plus the ±1 compare's
     /// per-channel parameters.
     FcBinThreshold { w: Vec<u32>, theta: Vec<f32>, flip: Vec<u32> },
+    /// XNOR-Net per-output-channel rescale factors (the paper's
+    /// `x_mean` vector), length-checked against the edge's channels.
+    Scale { alpha: Vec<f32> },
 }
 
 /// A plan with weights bound — the executable form of a network.
@@ -161,7 +165,14 @@ impl CompiledNetwork {
                         None => None,
                     },
                 },
-                StepKind::MaxPool | StepKind::OrPool => StepWeights::None,
+                StepKind::MaxPool
+                | StepKind::OrPool
+                | StepKind::Add
+                | StepKind::Concat
+                | StepKind::SplitPart { .. } => StepWeights::None,
+                StepKind::Scale { alpha } => {
+                    StepWeights::Scale { alpha: fetch_f32(alpha, c_in)? }
+                }
                 StepKind::ThresholdPack { theta, flip, .. }
                 | StepKind::ThresholdPm1 { theta, flip } => StepWeights::Threshold {
                     theta: fetch_f32(theta, c_in)?,
@@ -244,19 +255,21 @@ impl CompiledNetwork {
     /// Batched forward through a fresh arena (convenience; hot paths
     /// hold a pooled arena and call
     /// [`CompiledNetwork::infer_batch_with`]).
-    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<[f32; NUM_CLASSES]>, GraphError> {
+    pub fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, GraphError> {
         self.infer_batch_with(images, &mut PlanScratch::new())
     }
 
     /// Batched forward over `n` contiguous (96,96,3) images through a
-    /// reusable planned arena.  Malformed input is a recoverable
-    /// [`GraphError::BadInput`], never a panic — this is the
-    /// serving-reachable entry point.
+    /// reusable planned arena.  Returns `n * num_classes()` logits,
+    /// row-major — the row width is whatever the plan's final edge
+    /// declares, so non-four-class heads round-trip unharmed.
+    /// Malformed input is a recoverable [`GraphError::BadInput`],
+    /// never a panic — this is the serving-reachable entry point.
     pub fn infer_batch_with(
         &self,
         images: &[f32],
         scratch: &mut PlanScratch,
-    ) -> Result<Vec<[f32; NUM_CLASSES]>, GraphError> {
+    ) -> Result<Vec<f32>, GraphError> {
         const IMG: usize = IMG_H * IMG_W * IMG_C;
         if images.len() % IMG != 0 {
             return Err(GraphError::BadInput(format!(
@@ -278,7 +291,7 @@ impl CompiledNetwork {
     /// Single-image forward with per-step wall times (the Table 2 /
     /// Nvidia-Visual-Profiler instrument).  Allocates a fresh arena —
     /// this is a diagnostic path, not the serving path.
-    pub fn forward_timed(&self, x: &[f32]) -> Result<([f32; NUM_CLASSES], LayerTimings), GraphError> {
+    pub fn forward_timed(&self, x: &[f32]) -> Result<(Vec<f32>, LayerTimings), GraphError> {
         const IMG: usize = IMG_H * IMG_W * IMG_C;
         if x.len() != IMG {
             return Err(GraphError::BadInput(format!(
@@ -289,29 +302,19 @@ impl CompiledNetwork {
         let mut scratch = PlanScratch::new();
         let mut rec = Some(TimingRec { times: Vec::new(), mark: Instant::now() });
         self.execute(x, 1, &mut scratch, &mut rec)?;
-        let logits = self.read_logits(1, &scratch)[0];
+        let logits = self.read_logits(1, &scratch);
         Ok((logits, rec.take().expect("timing rec").times))
     }
 
-    /// Copy the final step's output slot into per-image logit rows.
-    ///
-    /// The fixed `[f32; NUM_CLASSES]` row type is coupled to the plan
-    /// validator, which rejects any graph not ending in exactly
-    /// `NUM_CLASSES` logits — if that check is ever relaxed, this
-    /// return type (and the protocol's logit shape) must generalize
-    /// with it, or the slice copy below panics.
-    fn read_logits(&self, n: usize, scratch: &PlanScratch) -> Vec<[f32; NUM_CLASSES]> {
+    /// Copy the final step's output slot into a flat row-major logit
+    /// buffer: `n * classes` floats, where `classes` is the plan's
+    /// declared head width (whatever the graph's final edge carries —
+    /// the verifier pins `plan.classes` to it, so the slice below can
+    /// never be short).
+    fn read_logits(&self, n: usize, scratch: &PlanScratch) -> Vec<f32> {
         let last = self.plan.steps.last().expect("plan has >= 1 step");
         let out = scratch.f32_slot(last.output.idx);
-        let c = self.plan.classes;
-        debug_assert_eq!(c, NUM_CLASSES, "validated at plan time");
-        let mut rows = Vec::with_capacity(n);
-        for i in 0..n {
-            let mut row = [0f32; NUM_CLASSES];
-            row.copy_from_slice(&out[i * c..(i + 1) * c]);
-            rows.push(row);
-        }
-        rows
+        out[..n * self.plan.classes].to_vec()
     }
 
     /// Run every step for a batch of `n` images.
@@ -624,6 +627,112 @@ impl CompiledNetwork {
                     }
                     scratch.put_u32(step.output.idx, out);
                 }
+                (StepKind::Add, StepWeights::None) => {
+                    let in2 = step.input2.ok_or_else(desync)?;
+                    let elems = n * px * c_in;
+                    match step.out_ty.kind {
+                        ValKind::F32 => {
+                            let mut out = scratch.take_f32(step.output.idx);
+                            {
+                                let x = input_f32(scratch, images, step.input);
+                                let y = input_f32(scratch, images, in2);
+                                add_rows(x, y, elems, &mut out);
+                            }
+                            scratch.put_f32(step.output.idx, out);
+                        }
+                        ValKind::Counts => {
+                            let mut out = scratch.take_i32(step.output.idx);
+                            {
+                                let x = input_i32(scratch, step.input)?;
+                                let y = input_i32(scratch, in2)?;
+                                add_rows(x, y, elems, &mut out);
+                            }
+                            scratch.put_i32(step.output.idx, out);
+                        }
+                        ValKind::Words => return Err(desync()),
+                    }
+                    lap(rec, &step.label_a);
+                }
+                (StepKind::Concat, StepWeights::None) => {
+                    let in2 = step.input2.ok_or_else(desync)?;
+                    let c2 = step.out_ty.c - c_in;
+                    match step.out_ty.kind {
+                        ValKind::F32 => {
+                            let mut out = scratch.take_f32(step.output.idx);
+                            {
+                                let x = input_f32(scratch, images, step.input);
+                                let y = input_f32(scratch, images, in2);
+                                concat_rows(x, y, c_in, c2, n * px, &mut out);
+                            }
+                            scratch.put_f32(step.output.idx, out);
+                        }
+                        ValKind::Counts => {
+                            let mut out = scratch.take_i32(step.output.idx);
+                            {
+                                let x = input_i32(scratch, step.input)?;
+                                let y = input_i32(scratch, in2)?;
+                                concat_rows(x, y, c_in, c2, n * px, &mut out);
+                            }
+                            scratch.put_i32(step.output.idx, out);
+                        }
+                        ValKind::Words => return Err(desync()),
+                    }
+                    lap(rec, &step.label_a);
+                }
+                (StepKind::SplitPart { lo }, StepWeights::None) => {
+                    let c_out = step.out_ty.c;
+                    match step.out_ty.kind {
+                        ValKind::F32 => {
+                            let mut out = scratch.take_f32(step.output.idx);
+                            {
+                                let x = input_f32(scratch, images, step.input);
+                                split_rows(x, c_in, *lo, c_out, n * px, &mut out);
+                            }
+                            scratch.put_f32(step.output.idx, out);
+                        }
+                        ValKind::Counts => {
+                            let mut out = scratch.take_i32(step.output.idx);
+                            {
+                                let x = input_i32(scratch, step.input)?;
+                                split_rows(x, c_in, *lo, c_out, n * px, &mut out);
+                            }
+                            scratch.put_i32(step.output.idx, out);
+                        }
+                        ValKind::Words => return Err(desync()),
+                    }
+                    lap(rec, &step.label_a);
+                }
+                (StepKind::Scale { .. }, StepWeights::Scale { alpha }) => {
+                    let mut out = scratch.take_f32(step.output.idx);
+                    {
+                        let elems = n * px * c_in;
+                        // resize without clear: every element is assigned
+                        out.resize(elems, 0.0);
+                        match step.in_ty.kind {
+                            ValKind::F32 => {
+                                let x = input_f32(scratch, images, step.input);
+                                for (o, (&v, j)) in out
+                                    .iter_mut()
+                                    .zip(x[..elems].iter().zip((0..c_in).cycle()))
+                                {
+                                    *o = v * alpha[j];
+                                }
+                            }
+                            ValKind::Counts => {
+                                let x = input_i32(scratch, step.input)?;
+                                for (o, (&v, j)) in out
+                                    .iter_mut()
+                                    .zip(x[..elems].iter().zip((0..c_in).cycle()))
+                                {
+                                    *o = v as f32 * alpha[j];
+                                }
+                            }
+                            ValKind::Words => return Err(desync()),
+                        }
+                    }
+                    scratch.put_f32(step.output.idx, out);
+                    lap(rec, &step.label_a);
+                }
                 (
                     StepKind::FcBinThreshold { kw, c_out, d, cmp_bias, .. },
                     StepWeights::FcBinThreshold { w: fw, theta, flip },
@@ -740,6 +849,57 @@ fn input_i32(scratch: &PlanScratch, src: Src) -> Result<&[i32], GraphError> {
     }
 }
 
+/// Elementwise residual sum (floats or popcount counts — f32 addition
+/// is bitwise commutative, so operand order can never skew logits).
+/// Resized without clear: every element of `0..elems` is assigned.
+fn add_rows<T: Copy + Default + std::ops::Add<Output = T>>(
+    x: &[T],
+    y: &[T],
+    elems: usize,
+    out: &mut Vec<T>,
+) {
+    out.resize(elems, T::default());
+    for (o, (&a, &b)) in out.iter_mut().zip(x[..elems].iter().zip(&y[..elems])) {
+        *o = a + b;
+    }
+}
+
+/// Per-pixel channel concatenation in HWC layout: `c1` channels from
+/// `x` then `c2` from `y`.  Resized without clear: every element is
+/// assigned.
+fn concat_rows<T: Copy + Default>(
+    x: &[T],
+    y: &[T],
+    c1: usize,
+    c2: usize,
+    pixels: usize,
+    out: &mut Vec<T>,
+) {
+    let co = c1 + c2;
+    out.resize(pixels * co, T::default());
+    for p in 0..pixels {
+        out[p * co..p * co + c1].copy_from_slice(&x[p * c1..(p + 1) * c1]);
+        out[p * co + c1..(p + 1) * co].copy_from_slice(&y[p * c2..(p + 1) * c2]);
+    }
+}
+
+/// Per-pixel channel slice `[lo, lo + c_out)` of an HWC edge.  Resized
+/// without clear: every element is assigned.
+fn split_rows<T: Copy + Default>(
+    x: &[T],
+    c_in: usize,
+    lo: usize,
+    c_out: usize,
+    pixels: usize,
+    out: &mut Vec<T>,
+) {
+    out.resize(pixels * c_out, T::default());
+    for p in 0..pixels {
+        out[p * c_out..(p + 1) * c_out]
+            .copy_from_slice(&x[p * c_in + lo..p * c_in + lo + c_out]);
+    }
+}
+
 /// Threshold per-channel values and channel-pack ≤ 32 channels into one
 /// word per pixel, MSB-first — the ONE definition of the layout that
 /// `im2col_words` gathers and `mask_channel_pads` assumes (integer and
@@ -773,6 +933,7 @@ mod tests {
     use crate::bnn::network::tests_support::{
         synth_bcnn_tf, synth_float_tf, synth_image, synth_tf_for_spec,
     };
+    use crate::bnn::network::NUM_CLASSES;
     use crate::bnn::packing::packed_width;
     use crate::util::prop::{self, ensure_eq};
 
@@ -951,7 +1112,11 @@ mod tests {
             ensure_eq(with_reused.clone(), with_fresh, "reused arena == fresh arena")?;
             for i in 0..n {
                 let want = ref_bcnn_forward(tf, *scheme, &xs[i * IMG..(i + 1) * IMG]);
-                ensure_eq(with_reused[i], want, "compiled == legacy reference")?;
+                ensure_eq(
+                    with_reused[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec(),
+                    want.to_vec(),
+                    "compiled == legacy reference",
+                )?;
             }
             Ok(())
         });
@@ -969,7 +1134,11 @@ mod tests {
             ensure_eq(got.clone(), net.infer_batch(&xs).unwrap(), "reused == fresh")?;
             for i in 0..n {
                 let want = ref_float_forward(&tf, &xs[i * IMG..(i + 1) * IMG]);
-                ensure_eq(got[i], want, "compiled float == legacy reference")?;
+                ensure_eq(
+                    got[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec(),
+                    want.to_vec(),
+                    "compiled float == legacy reference",
+                )?;
             }
             Ok(())
         });
@@ -991,8 +1160,14 @@ mod tests {
             let b = bnet.infer_batch_with(&xs, &mut arena).unwrap();
             let f = fnet.infer_batch_with(&xs, &mut arena).unwrap();
             for i in 0..2 {
-                assert_eq!(b[i], ref_bcnn_forward(&btf, Scheme::Gray, &xs[i * IMG..(i + 1) * IMG]));
-                assert_eq!(f[i], ref_float_forward(&ftf, &xs[i * IMG..(i + 1) * IMG]));
+                assert_eq!(
+                    b[i * NUM_CLASSES..(i + 1) * NUM_CLASSES],
+                    ref_bcnn_forward(&btf, Scheme::Gray, &xs[i * IMG..(i + 1) * IMG])
+                );
+                assert_eq!(
+                    f[i * NUM_CLASSES..(i + 1) * NUM_CLASSES],
+                    ref_float_forward(&ftf, &xs[i * IMG..(i + 1) * IMG])
+                );
             }
         }
     }
@@ -1029,10 +1204,14 @@ mod tests {
             let n = g.usize_in(1, 4);
             let xs = images(n, g.u64());
             let batched = net.infer_batch_with(&xs, &mut arena).unwrap();
-            ensure_eq(batched.len(), n, "one row per image")?;
+            ensure_eq(batched.len(), n * NUM_CLASSES, "NUM_CLASSES floats per image")?;
             for i in 0..n {
                 let single = net.infer_batch(&xs[i * IMG..(i + 1) * IMG]).unwrap();
-                ensure_eq(batched[i], single[0], "batched == single (bitwise)")?;
+                ensure_eq(
+                    batched[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec(),
+                    single,
+                    "batched == single (bitwise)",
+                )?;
             }
             Ok(())
         });
@@ -1136,6 +1315,13 @@ mod tests {
         specs.push((NetworkSpec::legacy_float(), synth_float_tf(521)));
         let tf3 = synth_tf_for_spec(&three_conv, 522);
         specs.push((three_conv, tf3));
+        // the branch fixtures: rewrites must stay bit-identical on DAGs
+        // too (the fusion guard skips the protected pairs, recolor
+        // re-runs interval liveness over the skip edges)
+        for (_, spec) in crate::bnn::graph::test_specs::all() {
+            let tf = synth_tf_for_spec(&spec, 523);
+            specs.push((spec, tf));
+        }
         let combos: Vec<Vec<RewritePass>> = vec![
             vec![RewritePass::FoldThreshold],
             vec![RewritePass::FusePack],
@@ -1221,5 +1407,176 @@ mod tests {
             CompiledNetwork::from_tensor_file(&rgb_tf, &NetworkSpec::legacy_bcnn(Scheme::Gray))
                 .unwrap_err();
         assert!(matches!(err, GraphError::Weight(_)), "{err}");
+    }
+
+    // --- branch-shaped differential references --------------------------
+    // Hand-composed from the simple allocating kernels, one per fixture
+    // in `test_specs` — independent of the planned executor's slot
+    // arithmetic, its interval liveness, and its second-operand fetch.
+
+    fn ref_residual_float(tf: &TensorFile, x: &[f32]) -> Vec<f32> {
+        let conv = |x: &[f32], c_in: usize, k: usize, relu: bool, w: &str, b: &str| {
+            let cols = im2col::im2col_float(x, 96, 96, c_in, k);
+            let mut a =
+                float_ops::gemm_blocked(&cols, &tf.f32(w).unwrap(), 96 * 96, 8, k * k * c_in);
+            float_ops::add_bias(&mut a, &tf.f32(b).unwrap());
+            if relu {
+                float_ops::relu(&mut a);
+            }
+            a
+        };
+        let a1 = conv(x, 3, 5, true, "w1", "b1");
+        let skip = conv(&a1, 8, 1, true, "w2", "b2");
+        let trunk = conv(&skip, 8, 1, false, "w3", "b3");
+        let sum: Vec<f32> = trunk.iter().zip(&skip).map(|(a, b)| a + b).collect();
+        let p = maxpool::maxpool2x2(&sum, 96, 96, 8);
+        fc::fc_float_bias(&p, &tf.f32("wfc1").unwrap(), &tf.f32("bfc1").unwrap(), 4, 48 * 48 * 8)
+    }
+
+    fn ref_residual_binary(tf: &TensorFile, x: &[f32]) -> Vec<f32> {
+        let t = tf.f32("input_t").unwrap();
+        let xb = binarize::threshold_rgb(x, &[t[0], t[1], t[2]]);
+        let cols1 = im2col::im2col_pack(&xb, 96, 96, 3, 5, 32);
+        let nw1 = packed_width(75, 32);
+        let skip = bgemm::bgemm(&cols1, &tf.u32("w1_packed").unwrap(), 96 * 96, 32, nw1, 75);
+        let f1: Vec<f32> = skip.iter().map(|&v| v as f32).collect();
+        let words =
+            ref_thr_pack(&f1, &tf.f32("theta1").unwrap(), &tf.u32("flip1").unwrap(), 96 * 96);
+        let cols2 = im2col::im2col_words(&words, 96, 96, 1, 1);
+        let trunk = bgemm::bgemm(&cols2, &tf.u32("w2_packed").unwrap(), 96 * 96, 32, 1, 32);
+        let alpha = tf.f32("alpha1").unwrap();
+        let scaled: Vec<f32> = trunk
+            .iter()
+            .zip(&skip)
+            .enumerate()
+            .map(|(i, (a, b))| (a + b) as f32 * alpha[i % 32])
+            .collect();
+        let p = maxpool::maxpool2x2(&scaled, 96, 96, 32);
+        fc::fc_float_bias(&p, &tf.f32("wfc1").unwrap(), &tf.f32("bfc1").unwrap(), 4, 48 * 48 * 32)
+    }
+
+    fn ref_split_concat(tf: &TensorFile, x: &[f32]) -> Vec<f32> {
+        let cols = im2col::im2col_float(x, 96, 96, 3, 5);
+        let mut a = float_ops::gemm_blocked(&cols, &tf.f32("w1").unwrap(), 96 * 96, 8, 75);
+        float_ops::add_bias(&mut a, &tf.f32("b1").unwrap());
+        float_ops::relu(&mut a);
+        // split [3, 5] → scale part 0 → concat back, all in HWC
+        let alpha = tf.f32("alpha1").unwrap();
+        let mut merged = vec![0f32; 96 * 96 * 8];
+        for p in 0..96 * 96 {
+            for j in 0..3 {
+                merged[p * 8 + j] = a[p * 8 + j] * alpha[j];
+            }
+            merged[p * 8 + 3..p * 8 + 8].copy_from_slice(&a[p * 8 + 3..p * 8 + 8]);
+        }
+        let pl = maxpool::maxpool2x2(&merged, 96, 96, 8);
+        fc::fc_float_bias(&pl, &tf.f32("wfc1").unwrap(), &tf.f32("bfc1").unwrap(), 6, 48 * 48 * 8)
+    }
+
+    #[test]
+    fn branching_plans_match_hand_composed_references() {
+        // THE branch differential property: every fixture topology
+        // (Add skip, counts-domain residual + Scale, Split/Scale/Concat
+        // with a six-class head), random batch sizes, ONE arena reused
+        // across all fixtures so slot shapes shrink and grow — planned
+        // execution must equal the fresh arena AND the independent
+        // allocating reference, bitwise.
+        use crate::bnn::graph::test_specs;
+        let cases: Vec<(&str, TensorFile, CompiledNetwork)> = test_specs::all()
+            .into_iter()
+            .map(|(name, spec)| {
+                let tf = synth_tf_for_spec(&spec, 600);
+                let net = CompiledNetwork::from_tensor_file(&tf, &spec).unwrap();
+                (name, tf, net)
+            })
+            .collect();
+        let mut reused = PlanScratch::new();
+        prop::check(12, |g| {
+            let (name, tf, net) = g.pick(&cases);
+            let classes = net.num_classes();
+            let n = g.usize_in(1, 4);
+            let xs = images(n, g.u64());
+            let with_reused = net.infer_batch_with(&xs, &mut reused).unwrap();
+            let with_fresh = net.infer_batch(&xs).unwrap();
+            ensure_eq(with_reused.clone(), with_fresh, "reused arena == fresh arena")?;
+            for i in 0..n {
+                let x = &xs[i * IMG..(i + 1) * IMG];
+                let want = match *name {
+                    "residual_float" => ref_residual_float(tf, x),
+                    "residual_binary" => ref_residual_binary(tf, x),
+                    "split_concat" => ref_split_concat(tf, x),
+                    other => panic!("no reference for fixture {other}"),
+                };
+                ensure_eq(
+                    with_reused[i * classes..(i + 1) * classes].to_vec(),
+                    want,
+                    "compiled == hand-composed reference",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rewritten_branch_plans_match_the_same_references() {
+        // the fixtures again, but through the full rewrite gauntlet: the
+        // fusion guard + DAG recolor must leave logits bit-identical
+        use crate::bnn::graph::{rewrite_plan, test_specs, RewritePass};
+        let mut arena = PlanScratch::new();
+        for (name, spec) in test_specs::all() {
+            let tf = synth_tf_for_spec(&spec, 601);
+            let rw = rewrite_plan(&spec.plan().unwrap(), &RewritePass::ALL);
+            let net = CompiledNetwork::from_plan(rw, &tf).unwrap();
+            let classes = net.num_classes();
+            let xs = images(2, 9000);
+            let got = net.infer_batch_with(&xs, &mut arena).unwrap();
+            for i in 0..2 {
+                let x = &xs[i * IMG..(i + 1) * IMG];
+                let want = match name {
+                    "residual_float" => ref_residual_float(&tf, x),
+                    "residual_binary" => ref_residual_binary(&tf, x),
+                    _ => ref_split_concat(&tf, x),
+                };
+                assert_eq!(
+                    got[i * classes..(i + 1) * classes],
+                    want[..],
+                    "{name}: rewritten branch plan drifted from the reference"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forward_timed_labels_follow_the_dag_plan_order() {
+        // branch regression: the timed label list must equal the
+        // compiled step order exactly — topological and deterministic,
+        // one lap per label, including the split fan-out
+        use crate::bnn::graph::test_specs;
+        let spec = test_specs::split_concat();
+        let tf = synth_tf_for_spec(&spec, 610);
+        let net = CompiledNetwork::from_tensor_file(&tf, &spec).unwrap();
+        let (logits, times) = net.forward_timed(&synth_image(9)).unwrap();
+        assert_eq!(logits.len(), 6, "six-class head");
+        assert!(logits.iter().all(|v| v.is_finite()));
+        let labels: Vec<String> = times.iter().map(|(l, _)| l.clone()).collect();
+        assert_eq!(labels, net.plan().step_names(), "one timing lap per plan label, in order");
+        assert_eq!(
+            labels,
+            ["im2col1", "gemm1", "split1_part0", "split1_part1", "scale1", "concat1", "pool1",
+             "fc1"]
+        );
+    }
+
+    #[test]
+    fn a_wrong_length_scale_vector_is_refused_at_bind() {
+        use crate::bnn::graph::test_specs;
+        use crate::util::tensorio::Tensor;
+        let spec = test_specs::split_concat();
+        let mut tf = synth_tf_for_spec(&spec, 620);
+        // the plan declares alpha1 as [3] (split part 0); bind a [4]
+        tf.insert("alpha1", Tensor::from_f32(vec![4], &[1.0, 1.0, 1.0, 1.0]));
+        let err = CompiledNetwork::from_tensor_file(&tf, &spec).unwrap_err();
+        assert!(matches!(err, GraphError::Weight(_)), "{err}");
+        assert!(err.to_string().contains("alpha1"), "{err}");
     }
 }

@@ -89,7 +89,22 @@ impl LayerOp {
             | LayerOp::Threshold
             | LayerOp::FcBin { .. }
             | LayerOp::FcFloat { .. } => false,
+            // branch ops are pure elementwise/copy kernels — no scratch
+            LayerOp::Add { .. }
+            | LayerOp::Concat { .. }
+            | LayerOp::Split { .. }
+            | LayerOp::Scale => false,
         })
+    }
+
+    /// How many plan steps this op lowers to.  Every op is 1:1 except
+    /// [`LayerOp::Split`], which lowers to one copy step per part (so a
+    /// DAG plan has `sum(lowered_steps)` steps, not `ops.len()`).
+    pub fn lowered_steps(&self) -> usize {
+        match self {
+            LayerOp::Split { parts } => parts.len(),
+            _ => 1,
+        }
     }
 }
 
@@ -117,6 +132,11 @@ pub(crate) fn step_effect(kind: &plan::StepKind) -> EffectSig {
         | StepKind::FcFloat { .. }
         // the fused FC keeps each count in a register — no scratch
         | StepKind::FcBinThreshold { .. } => false,
+        // branch steps are pure elementwise/copy kernels — no scratch
+        StepKind::Add
+        | StepKind::Concat
+        | StepKind::SplitPart { .. }
+        | StepKind::Scale => false,
     })
 }
 
@@ -148,6 +168,25 @@ impl Activation {
             Activation::Relu => "relu",
             Activation::Sign => "sign",
         }
+    }
+}
+
+/// A reference to an earlier op's output inside a branching spec — the
+/// second operand of [`LayerOp::Add`] / [`LayerOp::Concat`].  `op` is
+/// the 0-based index of the producing op in [`NetworkSpec::ops`] and
+/// must be *strictly earlier* than the referencing op (a forward or
+/// self reference is a cyclic-reference [`GraphError::Validate`]).
+/// `part` selects a [`LayerOp::Split`] output (0 for every other op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tap {
+    pub op: usize,
+    pub part: usize,
+}
+
+impl Tap {
+    /// Tap the (sole) output of op `op` — `part` 0.
+    pub const fn op(op: usize) -> Self {
+        Self { op, part: 0 }
     }
 }
 
@@ -185,6 +224,24 @@ pub enum LayerOp {
     FcBin { c_out: usize },
     /// Float fully-connected layer (flattens any float input).
     FcFloat { c_out: usize, bias: bool, act: Activation },
+    /// Elementwise residual add: previous op's output + the tapped
+    /// edge.  Both operands must have identical extents and the same
+    /// value domain (floats or counts; packed words cannot be added).
+    Add { with: Tap },
+    /// Channel concatenation `[prev, tapped]`: same kind and spatial
+    /// extents, output channels are the sum.  Floats or counts only.
+    Concat { with: Tap },
+    /// Channel split of the previous op's output into `parts` (channel
+    /// widths summing to its channel count).  Part 0 feeds the next op
+    /// in the chain; every other part must be consumed by a later
+    /// [`Tap`] or the plan is refused (dangling split output).
+    Split { parts: Vec<usize> },
+    /// XNOR-Net-style per-output-channel rescale (Rastegari et al.'s
+    /// `α` / SNIPPETS' `x_mean` pattern): multiplies each channel by a
+    /// learned f32 factor.  Floats or counts in, floats out — the op
+    /// that bridges a popcount-counts edge back into the float domain
+    /// without a threshold.
+    Scale,
 }
 
 #[derive(Debug)]
@@ -210,9 +267,12 @@ crate::error_enum_impls!(GraphError {
     GraphError::Internal(msg) => ("graph internal error (plan/executor bug): {msg}"),
 });
 
-/// An ordered layer graph (a linear chain — the shape every network in
-/// this system has; branching would extend [`plan`]'s liveness analysis,
-/// not this type).
+/// An ordered layer graph.  By default each op consumes the previous
+/// op's output (a linear chain); [`LayerOp::Add`] / [`LayerOp::Concat`]
+/// additionally [`Tap`] an earlier op's output and [`LayerOp::Split`]
+/// fans one edge out to several consumers, so the op list encodes an
+/// arbitrary DAG — topologically ordered by construction, with edge
+/// lifetimes resolved by [`plan`]'s interval-graph liveness pass.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkSpec {
     pub ops: Vec<LayerOp>,
@@ -294,7 +354,15 @@ impl NetworkSpec {
     /// Optional fields: `conv_float` takes `"bias"` (default `true`),
     /// `"relu"` (default `false`) and `"w"` (weight-name override);
     /// `fc_float` takes `"bias"` and `"act"` (`none|relu|sign`).
-    /// Shape legality is checked by [`NetworkSpec::plan`], not here.
+    ///
+    /// Branch ops: `add` and `concat` take `"with"` — either a plain
+    /// 0-based op index (`{"op": "add", "with": 1}`) or an
+    /// `[op, part]` pair selecting a `split` output
+    /// (`{"op": "concat", "with": [2, 1]}`); `split` takes `"parts"`,
+    /// a non-empty array of channel widths; `scale` takes no fields
+    /// (its per-channel `alpha{n}` weight is named positionally).
+    /// Shape legality — including cyclic or dangling branch
+    /// references — is checked by [`NetworkSpec::plan`], not here.
     pub fn from_json(arch: &Json) -> Result<Self, GraphError> {
         let bad = GraphError::Spec; // variant constructor as error helper
         let arr = arch.as_arr().map_err(|e| bad(format!("arch must be an array: {e}")))?;
@@ -312,6 +380,24 @@ impl NetworkSpec {
                 match entry.get_opt(field).map_err(ctx)? {
                     Some(v) => v.as_bool().map_err(ctx),
                     None => Ok(default),
+                }
+            };
+            // "with": 2 (op index) or [2, 1] (op, split part)
+            let tap = |field: &str| -> Result<Tap, GraphError> {
+                let v = entry.get(field).map_err(ctx)?;
+                if let Ok(op) = v.as_usize() {
+                    return Ok(Tap::op(op));
+                }
+                match v.as_arr().map_err(ctx)? {
+                    [op, part] => Ok(Tap {
+                        op: op.as_usize().map_err(ctx)?,
+                        part: part.as_usize().map_err(ctx)?,
+                    }),
+                    other => Err(bad(format!(
+                        "arch[{i}]: {field:?} must be an op index or an [op, part] \
+                         pair, got an array of {}",
+                        other.len()
+                    ))),
                 }
             };
             ops.push(match op {
@@ -356,6 +442,20 @@ impl NetworkSpec {
                         None => Activation::None,
                     },
                 },
+                "add" => LayerOp::Add { with: tap("with")? },
+                "concat" => LayerOp::Concat { with: tap("with")? },
+                "split" => {
+                    let arr = entry.get("parts").and_then(|v| v.as_arr()).map_err(ctx)?;
+                    let parts = arr
+                        .iter()
+                        .map(|v| v.as_usize().map_err(ctx))
+                        .collect::<Result<Vec<usize>, GraphError>>()?;
+                    if parts.is_empty() {
+                        return Err(bad(format!("arch[{i}]: split needs non-empty \"parts\"")));
+                    }
+                    LayerOp::Split { parts }
+                }
+                "scale" => LayerOp::Scale,
                 other => return Err(bad(format!("arch[{i}]: unknown op {other:?}"))),
             });
         }
@@ -366,6 +466,80 @@ impl NetworkSpec {
     /// resolution, and liveness-driven buffer assignment.
     pub fn plan(&self) -> Result<Plan, GraphError> {
         plan::compile(self)
+    }
+}
+
+/// Shared branch-shaped spec fixtures for the graph test suites (plan /
+/// verify / equiv / rewrite / exec all exercise the same DAGs).
+#[cfg(test)]
+pub(crate) mod test_specs {
+    use super::{Activation, LayerOp, NetworkSpec, Tap};
+    use crate::input::binarize::Scheme;
+
+    /// The acceptance-criteria residual block: conv → conv → Add with
+    /// the skip edge (k=1 convs keep extents add-compatible), 4-class.
+    pub fn residual_float() -> NetworkSpec {
+        let conv = |k: usize, relu: bool| LayerOp::ConvFloat {
+            k,
+            c_out: 8,
+            bias: true,
+            relu,
+            w: None,
+        };
+        NetworkSpec {
+            ops: vec![
+                conv(5, true),                       // 0: f32(96,96,8)
+                conv(1, true),                       // 1: f32(96,96,8)  — skip source
+                conv(1, false),                      // 2: f32(96,96,8)
+                LayerOp::Add { with: Tap::op(1) },   // 3: 2 + skip(1)
+                LayerOp::MaxPool,                    // 4: f32(48,48,8)
+                LayerOp::FcFloat { c_out: 4, bias: true, act: Activation::None },
+            ],
+        }
+    }
+
+    /// Binary residual: the conv's popcount-counts edge has TWO readers
+    /// (the threshold chain and the Add skip), and the XNOR-Net `Scale`
+    /// bridges the summed counts back into the float domain.  The
+    /// multi-consumer conv→threshold pair here is exactly the shape the
+    /// fold pass must refuse to fuse across.
+    pub fn residual_binary() -> NetworkSpec {
+        NetworkSpec {
+            ops: vec![
+                LayerOp::Binarize { scheme: Scheme::Rgb },  // 0
+                LayerOp::ConvBin { k: 5, c_out: 32 },       // 1: counts(96,96,32), readers {2, 4}
+                LayerOp::Threshold,                         // 2: words(96,96,32)
+                LayerOp::ConvBin { k: 1, c_out: 32 },       // 3: counts(96,96,32)
+                LayerOp::Add { with: Tap::op(1) },          // 4: 3 + skip(1)
+                LayerOp::Scale,                             // 5: f32(96,96,32)
+                LayerOp::MaxPool,                           // 6: f32(48,48,32)
+                LayerOp::FcFloat { c_out: 4, bias: true, act: Activation::None },
+            ],
+        }
+    }
+
+    /// Split/Concat round trip with a scaled branch and a SIX-class
+    /// head — the non-`NUM_CLASSES` logit shape served end-to-end.
+    pub fn split_concat() -> NetworkSpec {
+        NetworkSpec {
+            ops: vec![
+                LayerOp::ConvFloat { k: 5, c_out: 8, bias: true, relu: true, w: None }, // 0
+                LayerOp::Split { parts: vec![3, 5] },            // 1: parts f32(96,96,{3,5})
+                LayerOp::Scale,                                  // 2: scales part 0
+                LayerOp::Concat { with: Tap { op: 1, part: 1 } }, // 3: f32(96,96,8)
+                LayerOp::MaxPool,                                // 4: f32(48,48,8)
+                LayerOp::FcFloat { c_out: 6, bias: true, act: Activation::None },
+            ],
+        }
+    }
+
+    /// All three branch fixtures (for suites that sweep architectures).
+    pub fn all() -> Vec<(&'static str, NetworkSpec)> {
+        vec![
+            ("residual_float", residual_float()),
+            ("residual_binary", residual_binary()),
+            ("split_concat", split_concat()),
+        ]
     }
 }
 
@@ -411,26 +585,62 @@ mod tests {
 
     #[test]
     fn effects_agree_between_ops_and_steps() {
-        // ops lower 1:1 to steps, and both layers of the effect
-        // declaration must tell the verifier the same story
-        for spec in [
+        // every op lowers to `lowered_steps` consecutive steps (1 for
+        // all but Split), and both layers of the effect declaration
+        // must tell the verifier the same story
+        let mut specs = vec![
             NetworkSpec::legacy_bcnn(Scheme::Rgb),
             NetworkSpec::legacy_bcnn(Scheme::Lbp),
             NetworkSpec::legacy_bcnn(Scheme::None),
             NetworkSpec::legacy_float(),
-        ] {
+        ];
+        specs.extend(test_specs::all().into_iter().map(|(_, s)| s));
+        for spec in specs {
             let plan = spec.plan().unwrap();
-            assert_eq!(spec.ops.len(), plan.steps.len());
-            for (op, step) in spec.ops.iter().zip(&plan.steps) {
-                assert_eq!(op.effect(), step_effect(&step.kind), "{op:?}");
-                // the plan's scratch placement must match the signature
-                assert_eq!(
-                    step.scratch.is_some(),
-                    step_effect(&step.kind).clobbers_scratch,
-                    "{op:?}"
-                );
+            let lowered: usize = spec.ops.iter().map(LayerOp::lowered_steps).sum();
+            assert_eq!(lowered, plan.steps.len());
+            let mut s = 0;
+            for op in &spec.ops {
+                for _ in 0..op.lowered_steps() {
+                    let step = &plan.steps[s];
+                    assert_eq!(op.effect(), step_effect(&step.kind), "{op:?}");
+                    // the plan's scratch placement must match the signature
+                    assert_eq!(
+                        step.scratch.is_some(),
+                        step_effect(&step.kind).clobbers_scratch,
+                        "{op:?}"
+                    );
+                    s += 1;
+                }
             }
         }
+    }
+
+    #[test]
+    fn arch_json_roundtrips_a_branching_topology() {
+        // the JSON surface of every branch op: plain-index and
+        // [op, part] taps, split parts, and the weightless scale tag
+        let arch = Json::parse(
+            r#"[{"op": "conv_float", "k": 5, "out": 8, "relu": true},
+                {"op": "split", "parts": [3, 5]},
+                {"op": "scale"},
+                {"op": "concat", "with": [1, 1]},
+                {"op": "maxpool"},
+                {"op": "fc_float", "out": 6}]"#,
+        )
+        .unwrap();
+        let spec = NetworkSpec::from_json(&arch).unwrap();
+        assert_eq!(spec, test_specs::split_concat());
+        let residual = Json::parse(
+            r#"[{"op": "conv_float", "k": 5, "out": 8, "relu": true},
+                {"op": "conv_float", "k": 1, "out": 8, "relu": true},
+                {"op": "conv_float", "k": 1, "out": 8},
+                {"op": "add", "with": 1},
+                {"op": "maxpool"},
+                {"op": "fc_float", "out": 4}]"#,
+        )
+        .unwrap();
+        assert_eq!(NetworkSpec::from_json(&residual).unwrap(), test_specs::residual_float());
     }
 
     #[test]
@@ -443,6 +653,10 @@ mod tests {
             ("none-binarize", r#"[{"op": "binarize", "scheme": "none"}]"#),
             ("bad-act", r#"[{"op": "fc_float", "out": 4, "act": "gelu"}]"#),
             ("not-an-array", r#"{"op": "fc_float"}"#),
+            ("add-missing-with", r#"[{"op": "add"}]"#),
+            ("concat-bad-with", r#"[{"op": "concat", "with": [1, 2, 3]}]"#),
+            ("split-missing-parts", r#"[{"op": "split"}]"#),
+            ("split-empty-parts", r#"[{"op": "split", "parts": []}]"#),
         ] {
             let j = Json::parse(arch).unwrap();
             let err = NetworkSpec::from_json(&j).unwrap_err();

@@ -8,29 +8,35 @@
 //!    or integer popcount counts — with a spatial extent.  Each op
 //!    declares what it accepts and what it produces; a mismatch (OR-pool
 //!    on floats, threshold on > 32 channels, odd extent into a 2×2
-//!    pool, a graph that doesn't end in `NUM_CLASSES` float logits) is a
-//!    structured [`GraphError::Validate`] naming the step.
+//!    pool, mismatched residual-add operands, a cyclic or dangling
+//!    branch reference, a graph that doesn't end in a flat float logit
+//!    row) is a structured [`GraphError::Validate`] naming the step.
 //! 2. **Weight-name resolution.**  Tensor names are positional —
 //!    conv `i` → `w{i}_packed` / `w{i}`+`b{i}`, threshold `t` →
-//!    `theta{t}`+`flip{t}`, fc `f` → `wfc{f}_packed` / `wfc{f}`+`bfc{f}`
+//!    `theta{t}`+`flip{t}`, fc `f` → `wfc{f}_packed` / `wfc{f}`+`bfc{f}`,
+//!    scale `s` → `alpha{s}`
 //!    — which reproduces the legacy container names exactly on the
 //!    synthesized legacy specs, so every existing artifact binds
 //!    unchanged.  The resolved list (with dtypes and shapes) is exposed
 //!    as [`Plan::weights`] for generators and docs.
-//! 3. **Liveness analysis + buffer assignment.**  In a linear chain
-//!    each op's output dies as soon as the next op has consumed it, and
-//!    an op's internal patch-gather scratch dies within the step.  The
-//!    compiler walks the chain with a free-list per storage class
-//!    (f32 / u32 / i32), allocating a slot for each output and scratch
-//!    and releasing slots the moment they die — interval coloring on
-//!    the edge live-ranges.  The result is the minimal planned arena
+//! 3. **Interval-graph liveness + buffer assignment.**  Each edge is
+//!    live from its producing step to its LAST reader — in a linear
+//!    chain that is the very next step, but a branch tap
+//!    ([`super::Tap`]) or split fan-out gives an edge arbitrarily many
+//!    readers, and its slot may not be clobbered between any of them.
+//!    The compiler first records every edge's last reader over the
+//!    whole lowered step list, then walks the steps with a free-list
+//!    per storage class (f32 / u32 / i32), allocating a slot for each
+//!    output and scratch and releasing a slot only once its edge's
+//!    last reader has run — interval coloring on the edge live-ranges.
+//!    The result is the minimal planned arena
 //!    ([`crate::bnn::scratch::PlanScratch`] slots): the legacy 2-conv
 //!    BCNN plans 2 f32 + 2 u32 + 1 i32 buffers (plus the LBP gray
 //!    scratch when used) where the hand-named `ForwardScratch` carried
-//!    11 fixed roles, and a deeper graph gets exactly what its own
-//!    liveness demands, not another hand-audited struct.
+//!    11 fixed roles, and a deeper or branching graph gets exactly what
+//!    its own liveness demands, not another hand-audited struct.
 
-use crate::bnn::network::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::bnn::network::{IMG_C, IMG_H, IMG_W};
 use crate::bnn::packing::packed_width;
 use crate::input::binarize::Scheme;
 
@@ -135,6 +141,9 @@ impl WeightReq {
 pub(crate) struct Step {
     pub kind: StepKind,
     pub input: Src,
+    /// Second input edge — only for two-operand kinds
+    /// ([`StepKind::Add`] / [`StepKind::Concat`]); `None` otherwise.
+    pub input2: Option<Src>,
     pub output: BufId,
     /// Per-step internal scratch (patch gathers, the LBP gray plane);
     /// live only within the step, so liveness reuses it freely.
@@ -153,6 +162,26 @@ pub(crate) struct Step {
     pub label_b: Option<String>,
 }
 
+impl Step {
+    /// The exact edge type `input2` must carry, for the two-operand
+    /// kinds (`None` for every single-input kind): an Add reads a twin
+    /// of its primary input, a Concat reads the channel remainder.
+    /// Both the executor's length checks and the verifier's dataflow
+    /// pass derive the expectation from here, so they cannot drift.
+    pub(crate) fn input2_ty(&self) -> Option<ValTy> {
+        match self.kind {
+            StepKind::Add => Some(self.in_ty),
+            StepKind::Concat => Some(ValTy {
+                kind: self.in_ty.kind,
+                h: self.in_ty.h,
+                w: self.in_ty.w,
+                c: self.out_ty.c.saturating_sub(self.in_ty.c),
+            }),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub(crate) enum StepKind {
     Binarize { scheme: Scheme },
@@ -169,6 +198,21 @@ pub(crate) enum StepKind {
     ThresholdPm1 { theta: String, flip: String },
     FcBin { kw: usize, c_out: usize, d: usize, w: String },
     FcFloat { d: usize, c_out: usize, act: Activation, w: String, b: Option<String> },
+
+    // --- branch kinds (the DAG vocabulary) -----------------------------
+    /// Elementwise residual add of `input` and `input2` (identical
+    /// extents, floats or counts — never packed words).
+    Add,
+    /// Channel concatenation `[input, input2]`: same kind and spatial
+    /// extents, output channels are the sum.
+    Concat,
+    /// Copy channels `[lo, lo + out.c)` of the input edge — one step
+    /// per declared split part, all reading the same (multi-reader)
+    /// input edge.
+    SplitPart { lo: usize },
+    /// XNOR-Net per-output-channel rescale by the f32 `alpha` vector
+    /// (floats or counts in, floats out).
+    Scale { alpha: String },
 
     // --- fused kinds: emitted only by `super::rewrite`, never by -------
     // `compile`.  Every fused kind carries `cmp_bias`, an offset the
@@ -247,7 +291,9 @@ pub struct Plan {
     pub nbufs: [usize; 3],
     /// Every weight tensor the plan binds, in graph order.
     pub weights: Vec<WeightReq>,
-    /// Output logits per image (validated == `NUM_CLASSES`).
+    /// Output logits per image — the channel width of the plan's final
+    /// edge (any `>= 1`; the serving protocol carries whatever the plan
+    /// declares, so non-legacy heads round-trip their own width).
     pub classes: usize,
 }
 
@@ -301,6 +347,18 @@ pub enum Corruption {
     DuplicateWeightBind,
     /// Lie about the logit width → breaks the serving contract.
     LogitShapeLie,
+    /// Point a multi-reader edge's first reader's output back at the
+    /// edge's own slot (models a liveness pass that releases a skip
+    /// edge after its FIRST reader instead of its last) → the skip
+    /// interval overlaps the clobbering write.
+    SkipEdgeClobberedBeforeSecondReader,
+    /// Bump a concat's declared output channels (models a branch
+    /// lowering that mis-sums its operand extents) → the second
+    /// operand's edge type no longer matches.
+    ConcatExtentMismatch,
+    /// Widen a scale's declared per-channel `alpha` vector (models a
+    /// rescale bound against the wrong layer's channel count).
+    ScaleChannelCountLie,
     /// Rewrite-shaped: bump a fused threshold epilogue's `cmp_bias`
     /// (models an off-by-one in the folded compare — bit-plausible,
     /// invisible to the slot/shape verifier, semantically wrong).
@@ -315,6 +373,12 @@ pub enum Corruption {
     /// edge while a second reader still exists — the single-reader
     /// precondition of the elision axiom).
     CountsElisionSecondReader,
+    /// Rewrite-shaped: fold a threshold into a conv whose output edge
+    /// has a SECOND reader (a skip tap), rewiring the orphaned reader
+    /// onto a same-typed surviving edge.  Slot- and shape-clean, but
+    /// the skip now reads the wrong value — only the multi-consumer
+    /// fusion axiom in `check_equiv` refuses it.
+    MultiConsumerFusedAcross,
     /// Rewrite-shaped but *sound*: rename arena slots within a storage
     /// class and reorder the weight declarations.  Dataflow, value
     /// terms, and extents are untouched, so both `verify_plan` and
@@ -324,7 +388,7 @@ pub enum Corruption {
 }
 
 impl Corruption {
-    pub const ALL: [Corruption; 12] = [
+    pub const ALL: [Corruption; 16] = [
         Corruption::SlotMerge,
         Corruption::IntervalTruncation,
         Corruption::ExtentShrink,
@@ -333,9 +397,13 @@ impl Corruption {
         Corruption::PadBitPollution,
         Corruption::DuplicateWeightBind,
         Corruption::LogitShapeLie,
+        Corruption::SkipEdgeClobberedBeforeSecondReader,
+        Corruption::ConcatExtentMismatch,
+        Corruption::ScaleChannelCountLie,
         Corruption::EpilogueThresholdOffByOne,
         Corruption::EpilogueThresholdPadBitClassChange,
         Corruption::CountsElisionSecondReader,
+        Corruption::MultiConsumerFusedAcross,
         Corruption::ReorderedCommutingSteps,
     ];
 
@@ -343,7 +411,7 @@ impl Corruption {
     /// plan (the PR 6 suite).  The rewrite-shaped classes need fused
     /// steps to find a site and are judged by `check_equiv` instead —
     /// see the mutation tests in [`super::equiv`].
-    pub const VERIFY_REJECTED: [Corruption; 8] = [
+    pub const VERIFY_REJECTED: [Corruption; 11] = [
         Corruption::SlotMerge,
         Corruption::IntervalTruncation,
         Corruption::ExtentShrink,
@@ -352,14 +420,28 @@ impl Corruption {
         Corruption::PadBitPollution,
         Corruption::DuplicateWeightBind,
         Corruption::LogitShapeLie,
+        Corruption::SkipEdgeClobberedBeforeSecondReader,
+        Corruption::ConcatExtentMismatch,
+        Corruption::ScaleChannelCountLie,
+    ];
+
+    /// The verify-rejected classes whose sites only exist on a
+    /// *branching* plan (a multi-reader skip edge, a concat, a scale) —
+    /// the branch mutation suite drives these against the branch
+    /// fixtures; the legacy linear plans have no such sites.
+    pub const BRANCH_SHAPED: [Corruption; 3] = [
+        Corruption::SkipEdgeClobberedBeforeSecondReader,
+        Corruption::ConcatExtentMismatch,
+        Corruption::ScaleChannelCountLie,
     ];
 
     /// The rewrite-shaped classes: applied to a *rewritten* plan and
     /// judged by `check_equiv` against the original.
-    pub const REWRITE_SHAPED: [Corruption; 4] = [
+    pub const REWRITE_SHAPED: [Corruption; 5] = [
         Corruption::EpilogueThresholdOffByOne,
         Corruption::EpilogueThresholdPadBitClassChange,
         Corruption::CountsElisionSecondReader,
+        Corruption::MultiConsumerFusedAcross,
         Corruption::ReorderedCommutingSteps,
     ];
 
@@ -373,9 +455,15 @@ impl Corruption {
             Corruption::PadBitPollution => "pad-bit-pollution",
             Corruption::DuplicateWeightBind => "duplicate-weight-bind",
             Corruption::LogitShapeLie => "logit-shape-lie",
+            Corruption::SkipEdgeClobberedBeforeSecondReader => {
+                "skip-edge-clobbered-before-second-reader"
+            }
+            Corruption::ConcatExtentMismatch => "concat-extent-mismatch",
+            Corruption::ScaleChannelCountLie => "scale-channel-count-lie",
             Corruption::EpilogueThresholdOffByOne => "epilogue-threshold-off-by-one",
             Corruption::EpilogueThresholdPadBitClassChange => "pad-bit-class-change",
             Corruption::CountsElisionSecondReader => "counts-elision-second-reader",
+            Corruption::MultiConsumerFusedAcross => "multi-consumer-fused-across",
             Corruption::ReorderedCommutingSteps => "reordered-commuting-steps",
         }
     }
@@ -403,6 +491,9 @@ impl Plan {
                 for s in &mut self.steps[i + 2..] {
                     if s.input == Src::Buf(dead) {
                         s.input = Src::Buf(merged);
+                    }
+                    if s.input2 == Some(Src::Buf(dead)) {
+                        s.input2 = Some(Src::Buf(merged));
                     }
                 }
             }
@@ -445,6 +536,9 @@ impl Plan {
                     if s.input == Src::Buf(old) {
                         s.input = Src::Buf(swapped);
                     }
+                    if s.input2 == Some(Src::Buf(old)) {
+                        s.input2 = Some(Src::Buf(swapped));
+                    }
                 }
             }
             Corruption::WriterDeletion => {
@@ -485,6 +579,70 @@ impl Plan {
             }
             Corruption::LogitShapeLie => {
                 self.classes += 3;
+            }
+            Corruption::SkipEdgeClobberedBeforeSecondReader => {
+                // find a multi-reader edge whose FIRST reader produces
+                // the same storage class, then point that reader's
+                // output back at the skip slot — a liveness pass that
+                // released the edge after reader one would plan exactly
+                // this clobber
+                let edge_of = |s: &Step| Src::Buf(s.output);
+                let site = (0..self.steps.len())
+                    .find_map(|i| {
+                        let edge = edge_of(&self.steps[i]);
+                        let readers: Vec<usize> = (i + 1..self.steps.len())
+                            .filter(|&j| {
+                                self.steps[j].input == edge
+                                    || self.steps[j].input2 == Some(edge)
+                            })
+                            .collect();
+                        match readers.as_slice() {
+                            [first, _, ..]
+                                if self.steps[*first].output.class
+                                    == self.steps[i].output.class =>
+                            {
+                                Some((i, *first))
+                            }
+                            _ => None,
+                        }
+                    })
+                    .expect("plan has a multi-reader edge with a same-class first reader");
+                let (i, first) = site;
+                let skip = self.steps[i].output;
+                let old = self.steps[first].output;
+                self.steps[first].output = skip;
+                for s in &mut self.steps[first + 1..] {
+                    if s.input == Src::Buf(old) {
+                        s.input = Src::Buf(skip);
+                    }
+                    if s.input2 == Some(Src::Buf(old)) {
+                        s.input2 = Some(Src::Buf(skip));
+                    }
+                }
+            }
+            Corruption::ConcatExtentMismatch => {
+                let step = self
+                    .steps
+                    .iter_mut()
+                    .find(|s| matches!(s.kind, StepKind::Concat))
+                    .expect("plan has a concat step");
+                step.out_ty.c += 1;
+            }
+            Corruption::ScaleChannelCountLie => {
+                let alpha = self
+                    .steps
+                    .iter()
+                    .find_map(|s| match &s.kind {
+                        StepKind::Scale { alpha } => Some(alpha.clone()),
+                        _ => None,
+                    })
+                    .expect("plan has a scale step");
+                let req = self
+                    .weights
+                    .iter_mut()
+                    .find(|r| r.name == alpha)
+                    .expect("scale declares its alpha vector");
+                req.shape = vec![req.shape[0] + 1];
             }
             Corruption::EpilogueThresholdOffByOne => {
                 let step = self
@@ -552,6 +710,134 @@ impl Plan {
                     .expect("fused conv has a successor step");
                 reader.input = Src::Buf(counts);
             }
+            Corruption::MultiConsumerFusedAcross => {
+                // find an unfused conv→threshold pair whose counts edge
+                // has a second reader (the fold pass's guard refused
+                // it), then perform the fold anyway: fuse the pair,
+                // rewire the orphaned skip reader onto the same-typed
+                // other operand of its own step, and compact the
+                // retired counts slot — the result is slot- and
+                // shape-clean, so only the multi-consumer fusion axiom
+                // in `check_equiv` can see the lie
+                let site = (0..self.steps.len().saturating_sub(1))
+                    .find(|&i| {
+                        let out = Src::Buf(self.steps[i].output);
+                        let fusable = matches!(
+                            self.steps[i].kind,
+                            StepKind::ConvBinPacked { .. }
+                                | StepKind::ConvBinWords { .. }
+                                | StepKind::BinarizeConvBin { .. }
+                        );
+                        let thr_next = self.steps[i + 1].input == out
+                            && matches!(
+                                self.steps[i + 1].kind,
+                                StepKind::ThresholdPack { f32_in: false, .. }
+                            );
+                        let second_reader = (i + 2..self.steps.len()).any(|j| {
+                            self.steps[j].input == out || self.steps[j].input2 == Some(out)
+                        });
+                        fusable && thr_next && second_reader
+                    })
+                    .expect("plan has an unfused multi-consumer conv+threshold pair");
+                let thr = self.steps.remove(site + 1);
+                let (theta, flip) = match thr.kind {
+                    StepKind::ThresholdPack { theta, flip, .. } => (theta, flip),
+                    _ => unreachable!(),
+                };
+                let dead = self.steps[site].output;
+                let conv = &mut self.steps[site];
+                conv.kind = match conv.kind.clone() {
+                    StepKind::ConvBinPacked { k, c_out, nw, d, w } => {
+                        StepKind::ConvBinPackedThreshold {
+                            k,
+                            c_out,
+                            nw,
+                            d,
+                            w,
+                            theta,
+                            flip,
+                            cmp_bias: 0,
+                            elide: true,
+                        }
+                    }
+                    StepKind::ConvBinWords { k, c_out, d, w } => {
+                        StepKind::ConvBinWordsThreshold {
+                            k,
+                            c_out,
+                            d,
+                            w,
+                            theta,
+                            flip,
+                            cmp_bias: 0,
+                            elide: true,
+                        }
+                    }
+                    StepKind::BinarizeConvBin { scheme, k, c_out, nw, d, w } => {
+                        StepKind::BinarizeConvBinThreshold {
+                            scheme,
+                            k,
+                            c_out,
+                            nw,
+                            d,
+                            w,
+                            theta,
+                            flip,
+                            cmp_bias: 0,
+                            elide: true,
+                        }
+                    }
+                    _ => unreachable!(),
+                };
+                conv.out_ty = thr.out_ty;
+                conv.output = thr.output;
+                let fused = match conv.label_b.take() {
+                    Some(b) => format!("{b}+{}", thr.label_a),
+                    None => format!("{}+{}", conv.label_a, thr.label_a),
+                };
+                conv.label_b = Some(fused);
+                // orphaned readers of the fused-away counts edge read
+                // their own other operand instead (same type, wrong
+                // value — that is the point)
+                for s in &mut self.steps[site + 1..] {
+                    if s.input2 == Some(Src::Buf(dead)) {
+                        s.input2 = Some(s.input);
+                    } else if s.input == Src::Buf(dead) {
+                        s.input = s.input2.expect("orphaned reader has a second operand");
+                    }
+                }
+                // compact the retired counts slot out of the arena so
+                // the verifier sees no unused slot
+                let still_used = self.steps.iter().any(|s| {
+                    s.input == Src::Buf(dead)
+                        || s.input2 == Some(Src::Buf(dead))
+                        || s.output == dead
+                        || s.scratch == Some(dead)
+                        || s.scratch2 == Some(dead)
+                });
+                if !still_used {
+                    let shift = |b: &mut BufId| {
+                        if b.class == dead.class && b.idx > dead.idx {
+                            b.idx -= 1;
+                        }
+                    };
+                    for s in &mut self.steps {
+                        if let Src::Buf(b) = &mut s.input {
+                            shift(b);
+                        }
+                        if let Some(Src::Buf(b)) = &mut s.input2 {
+                            shift(b);
+                        }
+                        shift(&mut s.output);
+                        if let Some(b) = &mut s.scratch {
+                            shift(b);
+                        }
+                        if let Some(b) = &mut s.scratch2 {
+                            shift(b);
+                        }
+                    }
+                    self.nbufs[dead.class as usize] -= 1;
+                }
+            }
             Corruption::ReorderedCommutingSteps => {
                 assert!(self.weights.len() >= 2, "plan declares at least two weights");
                 self.weights.reverse();
@@ -566,6 +852,9 @@ impl Plan {
                     };
                     for s in &mut self.steps {
                         if let Src::Buf(b) = &mut s.input {
+                            rename(b);
+                        }
+                        if let Some(Src::Buf(b)) = &mut s.input2 {
                             rename(b);
                         }
                         rename(&mut s.output);
@@ -612,18 +901,73 @@ impl Slots {
     }
 }
 
+/// An op's output edge during compilation, before buffer assignment:
+/// the index of the producing proto-step (`None` = the external image).
+type EdgeRef = Option<usize>;
+
+/// A lowered step whose inputs still reference producing proto-steps
+/// rather than arena slots — the intermediate form between shape
+/// inference and the interval-liveness buffer assignment.
+struct Proto {
+    kind: StepKind,
+    input: EdgeRef,
+    input2: EdgeRef,
+    in_ty: ValTy,
+    out_ty: ValTy,
+    scratch_class: Option<BufClass>,
+    label_a: String,
+    label_b: Option<String>,
+}
+
+/// Resolve a [`Tap`] at op `i` to its producing proto-step and type.
+/// Forward/self references are cyclic (the op list is the topological
+/// order); a part index only exceeds 0 on a split.
+fn resolve_tap(
+    i: usize,
+    opname: &'static str,
+    tap: Tap,
+    op_edges: &[Vec<usize>],
+    op_tys: &[Vec<ValTy>],
+    tapped: &mut std::collections::BTreeSet<(usize, usize)>,
+) -> Result<(usize, ValTy), GraphError> {
+    let bad = |why: String| GraphError::Validate { step: i, op: opname.to_string(), why };
+    if tap.op >= i {
+        return Err(bad(format!(
+            "cyclic reference: \"with\" points at op {}, but only ops before {} are upstream",
+            tap.op, i
+        )));
+    }
+    let parts = &op_tys[tap.op];
+    if tap.part >= parts.len() {
+        return Err(bad(format!(
+            "op {} has {} output part(s), no part {}",
+            tap.op,
+            parts.len(),
+            tap.part
+        )));
+    }
+    tapped.insert((tap.op, tap.part));
+    Ok((op_edges[tap.op][tap.part], parts[tap.part]))
+}
+
 pub(crate) fn compile(spec: &NetworkSpec) -> Result<Plan, GraphError> {
     if spec.ops.is_empty() {
         return Err(GraphError::Spec("graph has no ops".to_string()));
     }
-    let mut steps: Vec<Step> = Vec::with_capacity(spec.ops.len());
+    let mut protos: Vec<Proto> = Vec::with_capacity(spec.ops.len());
     let mut weights: Vec<WeightReq> = Vec::new();
-    let mut slots = Slots::new();
+    // per-op edge tables: producing proto index and type of each output
+    // part (every op has exactly one part except Split)
+    let mut op_edges: Vec<Vec<usize>> = Vec::with_capacity(spec.ops.len());
+    let mut op_tys: Vec<Vec<ValTy>> = Vec::with_capacity(spec.ops.len());
+    // (op, part) pairs some later tap consumes — the dangling-split check
+    let mut tapped: std::collections::BTreeSet<(usize, usize)> = Default::default();
 
     let mut cur = ValTy::f32(IMG_H, IMG_W, IMG_C);
-    let mut cur_src = Src::External;
+    let mut cur_edge: EdgeRef = None; // None = the external image
     // positional ordinals — these generate the legacy tensor names
     let (mut conv_ord, mut thr_ord, mut pool_ord, mut fc_ord) = (0usize, 0usize, 0usize, 0usize);
+    let (mut add_ord, mut cat_ord, mut split_ord, mut scale_ord) = (0usize, 0usize, 0usize, 0usize);
 
     fn require(name: &str, dtype: WeightDType, shape: Vec<usize>, ws: &mut Vec<WeightReq>) {
         ws.push(WeightReq { name: name.to_string(), dtype, shape });
@@ -632,6 +976,56 @@ pub(crate) fn compile(spec: &NetworkSpec) -> Result<Plan, GraphError> {
     for (i, op) in spec.ops.iter().enumerate() {
         let opname = op_name(op);
         let bad = |why: String| GraphError::Validate { step: i, op: opname.to_string(), why };
+
+        // Split lowers to one copy step per part (all reading the same
+        // multi-reader input edge), so it bypasses the one-proto tail
+        if let LayerOp::Split { parts } = op {
+            if cur.kind == ValKind::Words {
+                return Err(bad(format!(
+                    "split cannot slice packed words, got {}",
+                    cur.describe()
+                )));
+            }
+            if parts.iter().any(|&p| p == 0) || parts.iter().sum::<usize>() != cur.c {
+                return Err(bad(format!(
+                    "split parts {:?} must be non-zero and sum to the {} input channels",
+                    parts, cur.c
+                )));
+            }
+            split_ord += 1;
+            let (mut edges, mut tys) = (Vec::new(), Vec::new());
+            let mut lo = 0usize;
+            for (p, &width) in parts.iter().enumerate() {
+                let out_ty = ValTy { kind: cur.kind, h: cur.h, w: cur.w, c: width };
+                edges.push(protos.len());
+                tys.push(out_ty);
+                protos.push(Proto {
+                    kind: StepKind::SplitPart { lo },
+                    input: cur_edge,
+                    input2: None,
+                    in_ty: cur,
+                    out_ty,
+                    scratch_class: None,
+                    label_a: format!("split{split_ord}_part{p}"),
+                    label_b: None,
+                });
+                lo += width;
+            }
+            cur = tys[0];
+            cur_edge = Some(edges[0]);
+            op_edges.push(edges);
+            op_tys.push(tys);
+            continue;
+        }
+
+        // resolve the second operand (Add/Concat) before the shape match
+        let tap2 = match op {
+            LayerOp::Add { with } | LayerOp::Concat { with } => {
+                Some(resolve_tap(i, opname, *with, &op_edges, &op_tys, &mut tapped)?)
+            }
+            _ => None,
+        };
+
         // (kind, out_ty, scratch class, labels)
         let (kind, out_ty, scratch_class, label_a, label_b) = match op {
             LayerOp::Binarize { scheme } => {
@@ -832,48 +1226,120 @@ pub(crate) fn compile(spec: &NetworkSpec) -> Result<Plan, GraphError> {
                     None,
                 )
             }
+            LayerOp::Add { .. } => {
+                let (_, t2) = tap2.expect("tap resolved above");
+                if cur.kind == ValKind::Words {
+                    return Err(bad(format!(
+                        "add cannot operate on packed words ({} + {})",
+                        cur.describe(),
+                        t2.describe()
+                    )));
+                }
+                if t2 != cur {
+                    return Err(bad(format!(
+                        "add operands must match exactly: {} + {}",
+                        cur.describe(),
+                        t2.describe()
+                    )));
+                }
+                add_ord += 1;
+                (StepKind::Add, cur, None, format!("add{add_ord}"), None)
+            }
+            LayerOp::Concat { .. } => {
+                let (_, t2) = tap2.expect("tap resolved above");
+                if cur.kind == ValKind::Words {
+                    return Err(bad(format!(
+                        "concat cannot operate on packed words ({} ++ {})",
+                        cur.describe(),
+                        t2.describe()
+                    )));
+                }
+                if t2.kind != cur.kind {
+                    return Err(bad(format!(
+                        "concat operands must share a value domain: {} vs {}",
+                        cur.describe(),
+                        t2.describe()
+                    )));
+                }
+                if (t2.h, t2.w) != (cur.h, cur.w) {
+                    return Err(bad(format!(
+                        "concat operands must share spatial extents: {} vs {}",
+                        cur.describe(),
+                        t2.describe()
+                    )));
+                }
+                cat_ord += 1;
+                let out = ValTy { kind: cur.kind, h: cur.h, w: cur.w, c: cur.c + t2.c };
+                (StepKind::Concat, out, None, format!("concat{cat_ord}"), None)
+            }
+            LayerOp::Scale => {
+                if cur.kind == ValKind::Words {
+                    return Err(bad(format!(
+                        "scale cannot rescale packed words, got {}",
+                        cur.describe()
+                    )));
+                }
+                scale_ord += 1;
+                let alpha = format!("alpha{scale_ord}");
+                require(&alpha, WeightDType::F32, vec![cur.c], &mut weights);
+                (
+                    StepKind::Scale { alpha },
+                    ValTy::f32(cur.h, cur.w, cur.c),
+                    None,
+                    format!("scale{scale_ord}"),
+                    None,
+                )
+            }
+            LayerOp::Split { .. } => unreachable!("split lowered before the match"),
         };
 
-        // --- liveness: place this step's buffers, retire dead ones ----
-        let scratch = scratch_class.map(|c| slots.alloc(c));
-        let output = slots.alloc(out_ty.class());
-        // the input edge and the step scratch die here; the output is
-        // live into the next step.  (Releasing AFTER the output alloc
-        // guarantees input/scratch/output are pairwise distinct slots —
-        // every kernel requires disjoint in/out.)
-        if let Src::Buf(b) = cur_src {
-            slots.release(b);
-        }
-        if let Some(s) = scratch {
-            slots.release(s);
-        }
-        steps.push(Step {
+        let edge = protos.len();
+        protos.push(Proto {
             kind,
-            input: cur_src,
-            output,
-            scratch,
-            scratch2: None,
+            input: cur_edge,
+            input2: tap2.map(|(e, _)| e),
             in_ty: cur,
             out_ty,
+            scratch_class,
             label_a,
             label_b,
         });
+        op_edges.push(vec![edge]);
+        op_tys.push(vec![out_ty]);
         cur = out_ty;
-        cur_src = Src::Buf(output);
+        cur_edge = Some(edge);
+    }
+
+    // every split part must reach a consumer: parts other than part 0
+    // (which continues the chain) are only reachable through taps, so an
+    // untapped one is a buffer the executor would fill and nobody reads
+    for (i, op) in spec.ops.iter().enumerate() {
+        if let LayerOp::Split { parts } = op {
+            for p in 1..parts.len() {
+                if !tapped.contains(&(i, p)) {
+                    return Err(GraphError::Validate {
+                        step: i,
+                        op: "split".to_string(),
+                        why: format!("dangling split output: part {p} is never consumed"),
+                    });
+                }
+            }
+        }
     }
 
     // the serving contract: the graph ends in one float logit row per
-    // image, sized for the class set
-    if cur.kind != ValKind::F32 || (cur.h, cur.w, cur.c) != (1, 1, NUM_CLASSES) {
+    // image; its channel width IS the class count the plan declares
+    if cur.kind != ValKind::F32 || (cur.h, cur.w) != (1, 1) || cur.c == 0 {
         return Err(GraphError::Validate {
             step: spec.ops.len() - 1,
             op: op_name(spec.ops.last().unwrap()).to_string(),
             why: format!(
-                "graph must end in f32(1,1,{NUM_CLASSES}) logits, got {}",
+                "graph must end in a flat f32(1,1,classes) logit row, got {}",
                 cur.describe()
             ),
         });
     }
+    let classes = cur.c;
 
     // weight names must be unique — a positional name colliding with an
     // explicit override would silently bind one tensor twice
@@ -886,7 +1352,60 @@ pub(crate) fn compile(spec: &NetworkSpec) -> Result<Plan, GraphError> {
         }
     }
 
-    Ok(Plan { steps, nbufs: slots.next, weights, classes: NUM_CLASSES })
+    // --- interval-graph liveness + buffer assignment -----------------
+    // An edge is live from its producing step until its LAST reader; the
+    // final edge (the logits) stays live past the end.  Allocating a
+    // step's scratch+output before releasing its dying inputs keeps
+    // in/scratch/out pairwise distinct (every kernel requires disjoint
+    // in/out), and releasing dying inputs before scratch preserves the
+    // free-list ordering linear chains have always had, so legacy plans
+    // keep their exact historical slot assignment.
+    let mut last_use: Vec<usize> = (0..protos.len()).collect();
+    for (j, p) in protos.iter().enumerate() {
+        if let Some(e) = p.input {
+            last_use[e] = j;
+        }
+        if let Some(e) = p.input2 {
+            last_use[e] = j;
+        }
+    }
+    let final_edge = protos.len() - 1;
+
+    let mut slots = Slots::new();
+    let mut steps: Vec<Step> = Vec::with_capacity(protos.len());
+    let mut buf_of: Vec<BufId> = Vec::with_capacity(protos.len());
+    for (j, p) in protos.iter().enumerate() {
+        let scratch = p.scratch_class.map(|c| slots.alloc(c));
+        let output = slots.alloc(p.out_ty.class());
+        buf_of.push(output);
+        let mut dying: Vec<usize> = Vec::new();
+        for e in [p.input, p.input2].into_iter().flatten() {
+            if last_use[e] == j && e != final_edge && !dying.contains(&e) {
+                dying.push(e);
+            }
+        }
+        for e in dying {
+            slots.release(buf_of[e]);
+        }
+        if let Some(s) = scratch {
+            slots.release(s);
+        }
+        let to_src = |e: EdgeRef| e.map_or(Src::External, |e| Src::Buf(buf_of[e]));
+        steps.push(Step {
+            kind: p.kind.clone(),
+            input: to_src(p.input),
+            input2: p.input2.map(|e| Src::Buf(buf_of[e])),
+            output,
+            scratch,
+            scratch2: None,
+            in_ty: p.in_ty,
+            out_ty: p.out_ty,
+            label_a: p.label_a.clone(),
+            label_b: p.label_b.clone(),
+        });
+    }
+
+    Ok(Plan { steps, nbufs: slots.next, weights, classes })
 }
 
 fn op_name(op: &LayerOp) -> &'static str {
@@ -899,6 +1418,10 @@ fn op_name(op: &LayerOp) -> &'static str {
         LayerOp::Threshold => "threshold",
         LayerOp::FcBin { .. } => "fc_bin",
         LayerOp::FcFloat { .. } => "fc_float",
+        LayerOp::Add { .. } => "add",
+        LayerOp::Concat { .. } => "concat",
+        LayerOp::Split { .. } => "split",
+        LayerOp::Scale => "scale",
     }
 }
 
@@ -934,6 +1457,8 @@ fn check_pool(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bnn::graph::test_specs;
+    use crate::bnn::network::NUM_CLASSES;
 
     #[test]
     fn legacy_bcnn_plan_names_match_the_legacy_container() {
@@ -1065,14 +1590,44 @@ mod tests {
                 ConvBin { k: 4, c_out: 32 },
             ]),
             ("fcbin-on-floats", vec![FcBin { c_out: 10 }]),
-            ("wrong-logit-width", vec![FcFloat {
-                c_out: 7,
-                bias: true,
-                act: Activation::None,
-            }]),
             ("ends-in-counts", vec![
                 Binarize { scheme: Scheme::Rgb },
                 ConvBin { k: 5, c_out: 32 },
+            ]),
+            // --- malformed branches ------------------------------------
+            ("dangling-split-output", vec![
+                ConvFloat { k: 5, c_out: 8, bias: false, relu: true, w: None },
+                Split { parts: vec![4, 4] },
+                MaxPool,
+                FcFloat { c_out: 4, bias: false, act: Activation::None },
+            ]),
+            ("add-extent-mismatch", vec![
+                ConvFloat { k: 5, c_out: 8, bias: false, relu: true, w: None },
+                ConvFloat { k: 1, c_out: 4, bias: false, relu: true, w: None },
+                Add { with: Tap::op(0) },
+            ]),
+            ("concat-dtype-mix", vec![
+                Binarize { scheme: Scheme::Rgb },
+                ConvBin { k: 5, c_out: 32 },
+                Scale,
+                Concat { with: Tap::op(1) },
+            ]),
+            ("cyclic-reference", vec![
+                ConvFloat { k: 5, c_out: 8, bias: false, relu: true, w: None },
+                Add { with: Tap::op(1) },
+            ]),
+            ("split-parts-dont-sum", vec![
+                ConvFloat { k: 5, c_out: 8, bias: false, relu: true, w: None },
+                Split { parts: vec![3, 3] },
+            ]),
+            ("tap-part-out-of-range", vec![
+                ConvFloat { k: 5, c_out: 8, bias: false, relu: true, w: None },
+                Split { parts: vec![4, 4] },
+                Concat { with: Tap { op: 1, part: 2 } },
+            ]),
+            ("add-on-words", vec![
+                Binarize { scheme: Scheme::Rgb },
+                Add { with: Tap::op(0) },
             ]),
         ];
         for (tag, ops) in cases {
@@ -1113,10 +1668,14 @@ mod tests {
         // structured error, not just any error
         use crate::bnn::graph::verify::{verify_plan, VerifyError};
         for c in Corruption::VERIFY_REJECTED {
-            let plan = NetworkSpec::legacy_bcnn(Scheme::Rgb)
-                .plan()
-                .unwrap()
-                .corrupt_for_test(c);
+            // branch-shaped classes need a DAG to bite on; the rest
+            // corrupt the legacy linear plan
+            let base = if Corruption::BRANCH_SHAPED.contains(&c) {
+                test_specs::split_concat()
+            } else {
+                NetworkSpec::legacy_bcnn(Scheme::Rgb)
+            };
+            let plan = base.plan().unwrap().corrupt_for_test(c);
             let err = verify_plan(&plan)
                 .err()
                 .unwrap_or_else(|| panic!("{} verified clean", c.name()));
@@ -1132,12 +1691,37 @@ mod tests {
                 Corruption::PadBitPollution => matches!(err, VerifyError::PadBits { .. }),
                 Corruption::DuplicateWeightBind => matches!(err, VerifyError::WeightDup { .. }),
                 Corruption::LogitShapeLie => matches!(err, VerifyError::BadLogits { .. }),
+                // a clobbered skip edge is exactly an interval overlap
+                Corruption::SkipEdgeClobberedBeforeSecondReader => {
+                    matches!(err, VerifyError::SlotAliased { .. })
+                }
+                // a widened concat output no longer matches its operands
+                Corruption::ConcatExtentMismatch => matches!(err, VerifyError::EdgeType { .. }),
+                // the declared alpha vector disagrees with the channels
+                Corruption::ScaleChannelCountLie => {
+                    matches!(err, VerifyError::WeightShape { .. })
+                }
                 // rewrite-shaped classes need fused steps; judged by
                 // check_equiv in the equiv mutation suite instead
                 _ => unreachable!("not a verify-rejected corruption"),
             };
             assert!(ok, "{}: wrong variant: {err}", c.name());
         }
+    }
+
+    #[test]
+    fn branch_corruptions_also_bite_on_the_residual_fixture() {
+        // the branch hooks find their sites structurally; prove they
+        // bite on a second, differently-shaped DAG (skip-add residual)
+        // as well as the split/concat fixture used above.  residual
+        // has no concat or scale, so only the skip-edge class applies.
+        use crate::bnn::graph::verify::{verify_plan, VerifyError};
+        let plan = test_specs::residual_float()
+            .plan()
+            .unwrap()
+            .corrupt_for_test(Corruption::SkipEdgeClobberedBeforeSecondReader);
+        let err = verify_plan(&plan).unwrap_err();
+        assert!(matches!(err, VerifyError::SlotAliased { .. }), "wrong variant: {err}");
     }
 
     #[test]
@@ -1169,6 +1753,11 @@ mod tests {
         };
         assert!(verify_plan(&spec().plan().unwrap()).is_ok());
         for c in Corruption::VERIFY_REJECTED {
+            if Corruption::BRANCH_SHAPED.contains(&c) {
+                // needs a DAG site; exercised on both branch fixtures in
+                // the mutation tests above
+                continue;
+            }
             let plan = spec().plan().unwrap().corrupt_for_test(c);
             assert!(verify_plan(&plan).is_err(), "{} verified clean on the arch plan", c.name());
         }
@@ -1221,5 +1810,67 @@ mod tests {
         // deeper graph, same planned arena shape as the 2-conv one —
         // liveness reuses the retired slots instead of adding roles
         assert_eq!(plan.nbufs, [2, 2, 1]);
+    }
+
+    #[test]
+    fn branching_fixtures_plan_cleanly_and_hold_skip_edges_live() {
+        // residual: conv → conv → conv → add(skip) — the skip slot must
+        // not be written between its producer and the add
+        let plan = test_specs::residual_float().plan().unwrap();
+        assert_eq!(plan.classes, NUM_CLASSES);
+        let add_at =
+            plan.steps.iter().position(|s| matches!(s.kind, StepKind::Add)).unwrap();
+        let skip = match plan.steps[add_at].input2 {
+            Some(Src::Buf(b)) => b,
+            other => panic!("add has no buffer second operand: {other:?}"),
+        };
+        let producer = plan.steps.iter().position(|s| s.output == skip).unwrap();
+        for (j, s) in plan.steps.iter().enumerate() {
+            if j > producer && j < add_at {
+                assert_ne!(s.output, skip, "step {j} clobbers the live skip edge");
+                assert_ne!(s.scratch, Some(skip), "step {j} scratches over the skip edge");
+            }
+        }
+        // the whole residual still fits the legacy three-slot f32 arena
+        assert_eq!(plan.nbufs, [3, 0, 0]);
+
+        // split/concat: a six-class head — classes come from the plan's
+        // final edge, not a hard-wired constant
+        let plan = test_specs::split_concat().plan().unwrap();
+        assert_eq!(plan.classes, 6);
+        assert!(
+            plan.steps.iter().any(|s| matches!(s.kind, StepKind::SplitPart { lo: 3 })),
+            "second split part starts at channel 3"
+        );
+
+        // binary residual: the scale op declares its per-channel alpha
+        let plan = test_specs::residual_binary().plan().unwrap();
+        assert_eq!(plan.classes, NUM_CLASSES);
+        let alpha = plan.weights.iter().find(|w| w.name == "alpha1").unwrap();
+        assert_eq!(alpha.dtype, WeightDType::F32);
+        assert_eq!(alpha.shape, vec![32]);
+    }
+
+    #[test]
+    fn branch_plan_step_order_is_topological_and_deterministic() {
+        // forward_timed attributes per-step laps by label; a DAG plan's
+        // compiled order must be the op order with split fan-out
+        // expanded in part order, every time
+        let names = test_specs::split_concat().plan().unwrap().step_names();
+        assert_eq!(
+            names,
+            vec![
+                "im2col1",
+                "gemm1",
+                "split1_part0",
+                "split1_part1",
+                "scale1",
+                "concat1",
+                "pool1",
+                "fc1",
+            ]
+        );
+        let again = test_specs::split_concat().plan().unwrap().step_names();
+        assert_eq!(names, again, "plan compilation is deterministic");
     }
 }

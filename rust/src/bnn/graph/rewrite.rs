@@ -30,12 +30,23 @@
 //!    when the counts edge has a single (fused) threshold reader, which
 //!    the pass re-checks and [`super::equiv`] independently enforces.
 //!
+//! Every fusion erases the edge between its two steps, so it is legal
+//! only when that edge has exactly ONE reader — the fusion partner.
+//! Plans are DAGs (`Add`/`Concat` carry second operands, `Split` fans
+//! out), so [`merge_pairs`] guards every candidate pair with a
+//! fan-out scan and skips multi-consumer sites; the equivalence
+//! checker's `MultiConsumerFusion` axiom independently refuses any
+//! rewrite that crossed one anyway.
+//!
 //! After any step-list surgery the per-edge live intervals change, so
-//! every pass ends with [`recolor`]: the same free-list interval
-//! coloring `plan::compile` runs, re-assigning arena slots from
+//! every pass ends with [`recolor`]: the same interval-graph liveness
+//! coloring `plan::compile` runs — an edge stays allocated until its
+//! LAST reader over both operand slots — re-assigning arena slots from
 //! scratch.  The weight list is untouched — a fused step binds the
 //! union of its constituents' tensors, so the rewritten plan loads the
 //! exact same container bytes.
+
+use std::collections::BTreeMap;
 
 use super::plan::{BufClass, BufId, Plan, Slots, Src, Step, StepKind};
 use crate::input::binarize::Scheme;
@@ -124,6 +135,7 @@ fn try_fold(conv: &Step, thr: &Step) -> Option<Step> {
                 elide: false,
             },
             input: conv.input,
+            input2: None,
             output: thr.output,
             scratch: conv.scratch,
             scratch2: Some(placeholder(BufClass::I32)),
@@ -147,6 +159,7 @@ fn try_fold(conv: &Step, thr: &Step) -> Option<Step> {
                 elide: false,
             },
             input: conv.input,
+            input2: None,
             output: thr.output,
             scratch: conv.scratch,
             scratch2: Some(placeholder(BufClass::I32)),
@@ -170,6 +183,7 @@ fn try_fold(conv: &Step, thr: &Step) -> Option<Step> {
                     cmp_bias: 0,
                 },
                 input: conv.input,
+                input2: None,
                 output: thr.output,
                 scratch: None,
                 scratch2: None,
@@ -234,6 +248,7 @@ fn try_fuse(bin: &Step, conv: &Step) -> Option<Step> {
     Some(Step {
         kind,
         input: bin.input,
+        input2: None,
         output: conv.output,
         scratch: conv.scratch,
         scratch2: conv.scratch2,
@@ -252,7 +267,9 @@ fn elide_counts(plan: &Plan) -> Plan {
     let mut out = plan.clone();
     for i in 0..out.steps.len() {
         let Some(counts) = out.steps[i].scratch2 else { continue };
-        let second_reader = out.steps[i + 1..].iter().any(|s| s.input == Src::Buf(counts));
+        let second_reader = out.steps[i + 1..]
+            .iter()
+            .any(|s| s.input == Src::Buf(counts) || s.input2 == Some(Src::Buf(counts)));
         if second_reader {
             continue;
         }
@@ -271,12 +288,15 @@ fn elide_counts(plan: &Plan) -> Plan {
 
 /// Walk the step list merging adjacent pairs `merge` accepts (a merged
 /// step is not re-considered as the left half of another pair — the
-/// passes compose across `rewrite_plan` calls instead).
+/// passes compose across `rewrite_plan` calls instead).  A pair is
+/// never offered to `merge` when the left step's output edge has a
+/// reader besides its fusion partner: fusing would erase an edge some
+/// other step still consumes (the multi-consumer fusion axiom).
 fn merge_pairs(steps: &[Step], merge: impl Fn(&Step, &Step) -> Option<Step>) -> Vec<Step> {
     let mut out: Vec<Step> = Vec::with_capacity(steps.len());
     let mut i = 0;
     while i < steps.len() {
-        if i + 1 < steps.len() {
+        if i + 1 < steps.len() && single_consumer(steps, i) {
             if let Some(fused) = merge(&steps[i], &steps[i + 1]) {
                 out.push(fused);
                 i += 2;
@@ -289,28 +309,83 @@ fn merge_pairs(steps: &[Step], merge: impl Fn(&Step, &Step) -> Option<Step>) -> 
     out
 }
 
+/// The fusion guard: does step `i`'s output edge have exactly one
+/// reader (step `i + 1`)?  Reads through either operand slot count;
+/// the scan stops once the slot is redefined, because past that point
+/// the slot carries a different edge.
+fn single_consumer(steps: &[Step], i: usize) -> bool {
+    let out = Src::Buf(steps[i].output);
+    for later in &steps[i + 2..] {
+        if later.input == out || later.input2 == Some(out) {
+            return false;
+        }
+        if later.output == steps[i].output
+            || later.scratch == Some(steps[i].output)
+            || later.scratch2 == Some(steps[i].output)
+        {
+            break;
+        }
+    }
+    true
+}
+
 fn fused_label(b: Option<&str>, a: &str, thr: &str) -> String {
     format!("{}+{thr}", b.unwrap_or(a))
 }
 
-/// Re-run the free-list interval coloring over a rewritten step list:
-/// the same walk as `plan::compile` (allocate scratch/scratch2/output,
-/// then retire the input edge and the per-step scratches — releasing
-/// after the output allocation keeps in/scratch/out pairwise distinct).
-/// Rewrites only ever operate on linear chains, so step `j+1`'s input
-/// is step `j`'s (re-assigned) output.
+/// Re-run the interval-graph liveness coloring over a rewritten step
+/// list: the same walk as `plan::compile`.  Operand slots are first
+/// resolved back to producing-step edges (a pass's step surgery leaves
+/// old slot ids behind), then every edge is held until its LAST reader
+/// over both operand slots — allocating scratch/scratch2/output before
+/// retiring dying edges keeps in/scratch/out pairwise distinct, and a
+/// skip edge stays allocated across the whole trunk between its
+/// producer and its second reader.
 fn recolor(mut plan: Plan) -> Plan {
-    let mut slots = Slots::new();
-    let mut prev: Option<BufId> = None;
-    for step in &mut plan.steps {
-        if let (Src::Buf(_), Some(p)) = (step.input, prev) {
-            step.input = Src::Buf(p);
+    let n = plan.steps.len();
+    // resolve operand slots to the step that last (re-)defined them —
+    // in the incoming (sound) plan a read always hits the most recent
+    // covering write of its slot
+    let mut last_def: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    let key = |b: BufId| (b.class as usize, b.idx);
+    let mut in_edge: Vec<Option<usize>> = vec![None; n];
+    let mut in2_edge: Vec<Option<usize>> = vec![None; n];
+    for j in 0..n {
+        if let Src::Buf(b) = plan.steps[j].input {
+            in_edge[j] = last_def.get(&key(b)).copied();
         }
-        let scratch = step.scratch.map(|s| slots.alloc(s.class));
-        let scratch2 = step.scratch2.map(|s| slots.alloc(s.class));
-        let output = slots.alloc(step.out_ty.class());
-        if let Src::Buf(b) = step.input {
-            slots.release(b);
+        if let Some(Src::Buf(b)) = plan.steps[j].input2 {
+            in2_edge[j] = last_def.get(&key(b)).copied();
+        }
+        last_def.insert(key(plan.steps[j].output), j);
+    }
+    // interval liveness: an edge dies at its last reader; the final
+    // edge (the logits) survives past the end
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for j in 0..n {
+        if let Some(e) = in_edge[j] {
+            last_use[e] = j;
+        }
+        if let Some(e) = in2_edge[j] {
+            last_use[e] = j;
+        }
+    }
+    let final_edge = n.saturating_sub(1);
+    let mut slots = Slots::new();
+    let mut buf_of: Vec<BufId> = Vec::with_capacity(n);
+    for j in 0..n {
+        let scratch = plan.steps[j].scratch.map(|s| slots.alloc(s.class));
+        let scratch2 = plan.steps[j].scratch2.map(|s| slots.alloc(s.class));
+        let output = slots.alloc(plan.steps[j].out_ty.class());
+        buf_of.push(output);
+        let mut dying: Vec<usize> = Vec::new();
+        for e in [in_edge[j], in2_edge[j]].into_iter().flatten() {
+            if last_use[e] == j && e != final_edge && !dying.contains(&e) {
+                dying.push(e);
+            }
+        }
+        for e in dying {
+            slots.release(buf_of[e]);
         }
         if let Some(s) = scratch {
             slots.release(s);
@@ -318,10 +393,16 @@ fn recolor(mut plan: Plan) -> Plan {
         if let Some(s) = scratch2 {
             slots.release(s);
         }
+        let step = &mut plan.steps[j];
+        if let Some(e) = in_edge[j] {
+            step.input = Src::Buf(buf_of[e]);
+        }
+        if let Some(e) = in2_edge[j] {
+            step.input2 = Some(Src::Buf(buf_of[e]));
+        }
         step.scratch = scratch;
         step.scratch2 = scratch2;
         step.output = output;
-        prev = Some(output);
     }
     plan.nbufs = slots.next;
     plan
@@ -331,7 +412,7 @@ fn recolor(mut plan: Plan) -> Plan {
 mod tests {
     use super::*;
     use crate::bnn::graph::verify::verify_plan;
-    use crate::bnn::graph::{check_equiv, Activation, LayerOp, NetworkSpec};
+    use crate::bnn::graph::{check_equiv, test_specs, Activation, LayerOp, NetworkSpec};
     use crate::bnn::network::NUM_CLASSES;
 
     fn three_conv_spec() -> NetworkSpec {
@@ -359,6 +440,7 @@ mod tests {
             Scheme::ALL.iter().map(|&s| NetworkSpec::legacy_bcnn(s)).collect();
         v.push(NetworkSpec::legacy_float());
         v.push(three_conv_spec());
+        v.extend(test_specs::all().into_iter().map(|(_, s)| s));
         v
     }
 
@@ -469,6 +551,52 @@ mod tests {
         let names = rw.step_names();
         for want in ["binarize+im2col1", "gemm1+threshold_pack1", "fc1+threshold3"] {
             assert!(names.iter().any(|n| n == want), "missing {want} in {names:?}");
+        }
+    }
+
+    #[test]
+    fn fusion_stops_at_a_multi_consumer_edge() {
+        // residual_binary's first counts edge feeds BOTH its threshold
+        // and the later Add — folding conv+threshold there would orphan
+        // the skip reader, so the rewriter must leave the pair split
+        let plan = test_specs::residual_binary().plan().unwrap();
+        let rw = rewrite_plan(&plan, &RewritePass::ALL);
+        let names = rw.step_names();
+        assert!(
+            names.iter().any(|n| n == "threshold_pack1"),
+            "the protected threshold was fused away: {names:?}"
+        );
+        assert!(
+            !names.iter().any(|n| n == "gemm1+threshold_pack1"),
+            "fusion crossed a multi-consumer edge: {names:?}"
+        );
+        // and the proof agrees: the honest rewrite passes the axiom
+        check_equiv(&plan, &rw).unwrap();
+        verify_plan(&rw).unwrap();
+    }
+
+    #[test]
+    fn recolor_keeps_a_skip_edge_alive_across_the_trunk() {
+        // after rewriting, the residual_float Add must still read a
+        // buffer nobody clobbered between its def and the join
+        let plan = test_specs::residual_float().plan().unwrap();
+        let rw = rewrite_plan(&plan, &RewritePass::ALL);
+        verify_plan(&rw).unwrap();
+        let add = rw
+            .steps
+            .iter()
+            .position(|s| matches!(s.kind, StepKind::Add))
+            .expect("residual plan lost its Add");
+        let skip = match rw.steps[add].input2 {
+            Some(Src::Buf(b)) => b,
+            other => panic!("Add second operand is not a buffer: {other:?}"),
+        };
+        let def = rw.steps[..add]
+            .iter()
+            .rposition(|s| s.output == skip)
+            .expect("no writer for the skip edge");
+        for (j, s) in rw.steps.iter().enumerate().take(add).skip(def + 1) {
+            assert_ne!(s.output, skip, "step {j} clobbered the live skip edge");
         }
     }
 

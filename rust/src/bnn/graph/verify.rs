@@ -37,14 +37,24 @@
 //! model in the admin plane's `list_models`.  Failure is a structured
 //! [`VerifyError`] naming the step, edge, slot, and — for aliasing —
 //! the two conflicting live intervals.  The mutation-testing suite in
-//! [`super::plan`] injects twelve corruption classes: eight are judged
-//! here ([`super::plan::Corruption::VERIFY_REJECTED`]), four
-//! rewrite-shaped ones by [`super::equiv::check_equiv`].
+//! [`super::plan`] injects sixteen corruption classes: eleven are
+//! judged here ([`super::plan::Corruption::VERIFY_REJECTED`], three of
+//! them branch-shaped — a clobbered skip edge, a concat extent lie, a
+//! scale channel-count lie), five rewrite-shaped ones by
+//! [`super::equiv::check_equiv`].
+//!
+//! Plans are DAGs, not chains: `Add`/`Concat` steps carry a second
+//! operand edge and a `Split` fans one edge out to several readers.
+//! The dataflow and interval passes treat the second operand exactly
+//! like the first (it extends the producing edge's live interval), so
+//! a liveness bug that releases a multi-reader edge after its first
+//! reader surfaces as [`VerifyError::SlotAliased`] — the clobberer's
+//! definition overlaps the edge's extended interval.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
-use crate::bnn::network::{IMG_C, IMG_H, IMG_W, NUM_CLASSES};
+use crate::bnn::network::{IMG_C, IMG_H, IMG_W};
 use crate::bnn::packing::packed_width;
 use crate::input::binarize::Scheme;
 use crate::util::json::{Json, JsonObj};
@@ -248,6 +258,10 @@ pub(crate) fn kind_name(kind: &StepKind) -> &'static str {
         StepKind::BinarizeConvBin { .. } => "binarize+conv_bin_packed",
         StepKind::BinarizeConvBinThreshold { .. } => "binarize+conv_bin_packed+threshold",
         StepKind::FcBinThreshold { .. } => "fc_bin+threshold",
+        StepKind::Add => "add",
+        StepKind::Concat => "concat",
+        StepKind::SplitPart { .. } => "split_part",
+        StepKind::Scale { .. } => "scale",
     }
 }
 
@@ -326,7 +340,7 @@ pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
             return Err(VerifyError::BadLogits {
                 step: 0,
                 got: "an empty plan".to_string(),
-                want: logits_want(NUM_CLASSES),
+                want: logits_want(plan.classes.max(1)),
             })
         }
     };
@@ -393,6 +407,64 @@ pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
                 }
             }
         }
+        // the second operand (Add/Concat) reads like the first: it must
+        // hit a live covering write of the expected type, and it extends
+        // that edge's interval — THIS is what keeps a skip edge alive
+        // past intermediate steps on the trunk
+        if let Some(src) = step.input2 {
+            let want = match step.input2_ty() {
+                Some(t) => t,
+                // pass 1 already refused a second operand on a unary
+                // kind; nothing to type-check here
+                None => step.in_ty,
+            };
+            match src {
+                Src::External => {
+                    let ext = ValTy { kind: ValKind::F32, h: IMG_H, w: IMG_W, c: IMG_C };
+                    if want != ext {
+                        return Err(VerifyError::EdgeType {
+                            step: j,
+                            src: "the external image payload (second operand)".to_string(),
+                            want: want.describe(),
+                            got: ext.describe(),
+                        });
+                    }
+                }
+                Src::Buf(b) => {
+                    let ei = match last_writer.get(&slot_key(b)).copied() {
+                        Some(ei) => ei,
+                        None => {
+                            return Err(VerifyError::ReadWithoutWriter {
+                                step: j,
+                                slot: b,
+                                why: "no prior step writes its second operand".to_string(),
+                            })
+                        }
+                    };
+                    let (wty, wdef) = (edges[ei].ty, edges[ei].def);
+                    match wty {
+                        None => {
+                            return Err(VerifyError::ReadWithoutWriter {
+                                step: j,
+                                slot: b,
+                                why: format!(
+                                    "its last write is the scratch clobber of step {wdef}"
+                                ),
+                            })
+                        }
+                        Some(ty) if ty != want => {
+                            return Err(VerifyError::EdgeType {
+                                step: j,
+                                src: format!("the output of step {wdef} (second operand)"),
+                                want: want.describe(),
+                                got: ty.describe(),
+                            })
+                        }
+                        Some(_) => edges[ei].last_use = j,
+                    }
+                }
+            }
+        }
         if let Some(s) = step.scratch {
             // presence/class consistency with the effect signature was
             // proven in pass 1; here it only occupies its interval
@@ -435,14 +507,15 @@ pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
     }
 
     // the serving contract: the final edge is one float logit row per
-    // image, sized for the class set
+    // image, and the class count the plan declares IS that edge's
+    // channel width — no hard-wired head size
     let logits_ty = plan.steps[last_step].out_ty;
     let want_ty = ValTy { kind: ValKind::F32, h: 1, w: 1, c: plan.classes };
-    if plan.classes != NUM_CLASSES || logits_ty != want_ty {
+    if plan.classes == 0 || logits_ty != want_ty {
         return Err(VerifyError::BadLogits {
             step: last_step,
             got: format!("{} with {} declared classes", logits_ty.describe(), plan.classes),
-            want: logits_want(NUM_CLASSES),
+            want: logits_want(plan.classes.max(1)),
         });
     }
     // the logits edge is read after execution (`read_logits`): extend it
@@ -594,7 +667,15 @@ pub fn verify_plan(plan: &Plan) -> Result<VerifyReport, VerifyError> {
                     need(j, theta, WeightDType::F32, vec![*c_out])?;
                     need(j, flip, WeightDType::U32, vec![*c_out])?;
                 }
-                StepKind::MaxPool | StepKind::OrPool => {}
+                StepKind::Scale { alpha } => {
+                    // the per-output-channel XNOR-Net rescale vector
+                    need(j, alpha, WeightDType::F32, vec![t.c])?;
+                }
+                StepKind::MaxPool
+                | StepKind::OrPool
+                | StepKind::Add
+                | StepKind::Concat
+                | StepKind::SplitPart { .. } => {}
             }
         }
     }
@@ -657,6 +738,11 @@ fn check_step_kind(j: usize, step: &Step) -> Result<(), VerifyError> {
         }
         Ok(())
     };
+    // only Add/Concat are binary; a second operand anywhere else means
+    // the plan was assembled by something other than the compiler
+    if step.input2.is_some() && !matches!(step.kind, StepKind::Add | StepKind::Concat) {
+        return Err(ks("binds a second operand but the kind is unary".to_string()));
+    }
     let conv_params = |k: usize, c_out: usize| -> Result<(), VerifyError> {
         if k == 0 || k % 2 == 0 {
             return Err(VerifyError::KindShape {
@@ -935,6 +1021,51 @@ fn check_step_kind(j: usize, step: &Step) -> Result<(), VerifyError> {
             }
             want_out(ValTy { kind: ValKind::F32, h: 1, w: 1, c: *c_out })?;
         }
+        StepKind::Add => {
+            if step.input2.is_none() {
+                return Err(ks("add has no second operand edge".to_string()));
+            }
+            if t.kind == ValKind::Words {
+                return Err(ks(format!("cannot add packed words, got {}", t.describe())));
+            }
+            want_out(t)?;
+        }
+        StepKind::Concat => {
+            if step.input2.is_none() {
+                return Err(ks("concat has no second operand edge".to_string()));
+            }
+            if t.kind == ValKind::Words {
+                return Err(ks(format!("cannot concat packed words, got {}", t.describe())));
+            }
+            if o.kind != t.kind || (o.h, o.w) != (t.h, t.w) || o.c <= t.c {
+                return Err(ks(format!(
+                    "output {} must extend input {} along channels only",
+                    o.describe(),
+                    t.describe()
+                )));
+            }
+        }
+        StepKind::SplitPart { lo } => {
+            if t.kind == ValKind::Words {
+                return Err(ks(format!("cannot slice packed words, got {}", t.describe())));
+            }
+            if o.kind != t.kind || (o.h, o.w) != (t.h, t.w) || o.c == 0 || lo + o.c > t.c {
+                return Err(ks(format!(
+                    "part [{lo}, {}) is not a channel slice of {}",
+                    lo + o.c,
+                    t.describe()
+                )));
+            }
+        }
+        StepKind::Scale { .. } => {
+            if t.kind != ValKind::F32 && t.kind != ValKind::Counts {
+                return Err(ks(format!(
+                    "expects float activations or conv counts, got {}",
+                    t.describe()
+                )));
+            }
+            want_out(ValTy { kind: ValKind::F32, h: t.h, w: t.w, c: t.c })?;
+        }
     }
     Ok(())
 }
@@ -955,6 +1086,15 @@ fn check_step_slots(j: usize, step: &Step) -> Result<(), VerifyError> {
                 step: j,
                 slot: b,
                 want: format!("the {} input value", step.in_ty.describe()),
+            });
+        }
+    }
+    if let (Some(Src::Buf(b)), Some(t2)) = (step.input2, step.input2_ty()) {
+        if b.class != t2.class() {
+            return Err(VerifyError::SlotDtype {
+                step: j,
+                slot: b,
+                want: format!("the {} second operand", t2.describe()),
             });
         }
     }
@@ -999,7 +1139,8 @@ fn check_step_slots(j: usize, step: &Step) -> Result<(), VerifyError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bnn::graph::{Activation, LayerOp, NetworkSpec};
+    use crate::bnn::graph::{test_specs, Activation, LayerOp, NetworkSpec};
+    use crate::bnn::network::NUM_CLASSES;
 
     fn all_specs() -> Vec<NetworkSpec> {
         vec![
@@ -1076,6 +1217,51 @@ mod tests {
             assert!(j.get(key).is_ok(), "missing {key}");
         }
         assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), plan.steps.len());
+    }
+
+    #[test]
+    fn every_branch_fixture_verifies_clean() {
+        // the DAG fixtures: skip-add residuals and a split/scale/concat
+        // diamond — the interval pass must prove the multi-reader edges
+        // held live to their last reader, not refuse them
+        for (name, spec) in test_specs::all() {
+            let plan = spec.plan().unwrap();
+            let report =
+                verify_plan(&plan).unwrap_or_else(|e| panic!("{name}: clean DAG refused: {e}"));
+            assert_eq!(report.steps, plan.steps.len(), "{name}");
+            assert_eq!(report.slots, plan.nbufs, "{name}");
+        }
+    }
+
+    #[test]
+    fn a_clobbered_skip_edge_reports_the_overlapping_intervals() {
+        // the branch-shaped liveness lie: the skip edge's interval now
+        // extends to its second reader, so the clobbering write overlaps
+        use crate::bnn::graph::plan::Corruption;
+        let plan = test_specs::residual_float()
+            .plan()
+            .unwrap()
+            .corrupt_for_test(Corruption::SkipEdgeClobberedBeforeSecondReader);
+        match verify_plan(&plan).unwrap_err() {
+            VerifyError::SlotAliased { a, b, .. } => {
+                assert!(a.live.1 >= b.live.0 && b.live.1 >= a.live.0, "intervals overlap");
+            }
+            other => panic!("wrong variant: {other}"),
+        }
+    }
+
+    #[test]
+    fn a_six_class_head_verifies_with_its_declared_width() {
+        // the NUM_CLASSES relaxation: classes come from the plan's final
+        // edge; a lying declaration is still BadLogits
+        let mut plan = test_specs::split_concat().plan().unwrap();
+        assert_eq!(plan.classes, 6);
+        assert!(verify_plan(&plan).is_ok());
+        plan.classes = NUM_CLASSES;
+        assert!(
+            matches!(verify_plan(&plan).unwrap_err(), VerifyError::BadLogits { .. }),
+            "declared classes must match the final edge"
+        );
     }
 
     #[test]

@@ -106,7 +106,9 @@ impl BcnnNetwork {
     /// layer times (the Nvidia-Visual-Profiler role in Table 2).
     pub fn forward(&self, x: &[f32]) -> ([f32; NUM_CLASSES], LayerTimings) {
         assert_eq!(x.len(), IMG_H * IMG_W * IMG_C);
-        self.compiled.forward_timed(x).expect("payload length asserted above")
+        let (logits, times) =
+            self.compiled.forward_timed(x).expect("payload length asserted above");
+        (fixed_row(&logits), times)
     }
 
     /// Batched forward over `n` contiguous (96,96,3) images.
@@ -129,7 +131,10 @@ impl BcnnNetwork {
         images: &[f32],
         scratch: &mut PlanScratch,
     ) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
-        self.compiled.infer_batch_with(images, scratch).map_err(NetworkError::from)
+        self.compiled
+            .infer_batch_with(images, scratch)
+            .map(fixed_rows)
+            .map_err(NetworkError::from)
     }
 
     /// argmax class index for one image.
@@ -171,7 +176,9 @@ impl FloatNetwork {
     /// Forward pass on one (96,96,3) image; returns logits + layer times.
     pub fn forward(&self, x: &[f32]) -> ([f32; NUM_CLASSES], LayerTimings) {
         assert_eq!(x.len(), IMG_H * IMG_W * IMG_C);
-        self.compiled.forward_timed(x).expect("payload length asserted above")
+        let (logits, times) =
+            self.compiled.forward_timed(x).expect("payload length asserted above");
+        (fixed_row(&logits), times)
     }
 
     /// Batched forward over `n` contiguous (96,96,3) images.  Allocates
@@ -188,13 +195,30 @@ impl FloatNetwork {
         images: &[f32],
         scratch: &mut PlanScratch,
     ) -> Result<Vec<[f32; NUM_CLASSES]>, NetworkError> {
-        self.compiled.infer_batch_with(images, scratch).map_err(NetworkError::from)
+        self.compiled
+            .infer_batch_with(images, scratch)
+            .map(fixed_rows)
+            .map_err(NetworkError::from)
     }
 
     pub fn classify(&self, x: &[f32]) -> usize {
         let (logits, _) = self.forward(x);
         argmax(&logits)
     }
+}
+
+/// One legacy fixed-width logit row from the executor's flat output.
+/// The legacy specs always compile to `NUM_CLASSES`-wide heads, so the
+/// copy is exact.
+fn fixed_row(flat: &[f32]) -> [f32; NUM_CLASSES] {
+    let mut row = [0f32; NUM_CLASSES];
+    row.copy_from_slice(flat);
+    row
+}
+
+/// Chunk the executor's flat batch logits into legacy fixed rows.
+fn fixed_rows(flat: Vec<f32>) -> Vec<[f32; NUM_CLASSES]> {
+    flat.chunks_exact(NUM_CLASSES).map(fixed_row).collect()
 }
 
 /// Index of the maximum element (first wins ties, like jnp.argmax).

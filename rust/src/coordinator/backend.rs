@@ -8,7 +8,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use crate::bnn::graph::CompiledNetwork;
-use crate::bnn::network::{BcnnNetwork, FloatNetwork, NUM_CLASSES};
+use crate::bnn::network::{BcnnNetwork, FloatNetwork};
 use crate::bnn::scratch::PlanScratch;
 use crate::runtime::{Artifacts, ModelRuntime, RuntimeError};
 use crate::util::lockorder;
@@ -26,7 +26,8 @@ pub trait InferBackend: Send + Sync {
     fn supported_batches(&self) -> Vec<usize>;
 
     /// Run `n` images (flattened, `n * IMG_ELEMS` floats); returns
-    /// `n * NUM_CLASSES` logits.
+    /// `n * classes` logits, where `classes` is the served model's
+    /// declared head width (4 for the legacy networks).
     fn infer_batch(&self, images: &[f32]) -> Result<Vec<f32>, String>;
 
     /// Gather-free batch entry: one slice per request (each `IMG_ELEMS`
@@ -133,7 +134,7 @@ impl InferBackend for EngineBackend {
         // per image either way.  Each worker checks a forward arena out of
         // the pool, so steady-state serving allocates no intermediate
         // tensors.
-        let run = |lo: usize, hi: usize| -> Result<Vec<[f32; NUM_CLASSES]>, String> {
+        let run = |lo: usize, hi: usize| -> Result<Vec<f32>, String> {
             let xs = &images[lo * IMG_ELEMS..hi * IMG_ELEMS];
             // the pool mutex is the highest-ranked lock in the stack
             // (held only around a pop/push, never across the forward)
@@ -154,16 +155,14 @@ impl InferBackend for EngineBackend {
         };
         let per = n.div_ceil(self.threads.min(n));
         let chunks = n.div_ceil(per);
-        let results: Vec<Result<Vec<[f32; NUM_CLASSES]>, String>> = if chunks == 1 {
+        let results: Vec<Result<Vec<f32>, String>> = if chunks == 1 {
             vec![run(0, n)]
         } else {
             scoped_map(chunks, chunks, |i| run(i * per, ((i + 1) * per).min(n)))
         };
-        let mut out = Vec::with_capacity(n * NUM_CLASSES);
+        let mut out = Vec::with_capacity(n * self.model.num_classes());
         for chunk in results {
-            for l in chunk? {
-                out.extend_from_slice(&l);
-            }
+            out.extend_from_slice(&chunk?);
         }
         Ok(out)
     }

@@ -21,7 +21,7 @@ use super::backend::InferBackend;
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
 use super::request::{InferRequest, InferResponse};
-use crate::bnn::network::{argmax, NUM_CLASSES};
+use crate::bnn::network::argmax;
 
 /// Batch formation policy.
 #[derive(Debug, Clone, Copy)]
@@ -145,8 +145,12 @@ impl Batcher {
             match result {
                 Ok(logits) => {
                     metrics.record_batch(real, exec_time);
+                    // the row width comes from the batch itself: the
+                    // backend executed `exec` rows of whatever head the
+                    // served plan declares (4 for the legacy networks)
+                    let classes = logits.len() / exec.max(1);
                     for (i, r) in chunk.into_iter().enumerate() {
-                        let l = logits[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec();
+                        let l = logits[i * classes..(i + 1) * classes].to_vec();
                         let queue_time = started.duration_since(r.enqueued);
                         // Non-finite logits mean the image poisoned the
                         // forward pass (inf/NaN pixels); argmax over NaNs
@@ -240,6 +244,7 @@ impl Drop for Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bnn::network::NUM_CLASSES;
     use crate::coordinator::backend::IMG_ELEMS;
     use crate::util::prop::{self, ensure};
 

@@ -300,10 +300,8 @@ fn corrupt_rewrite_from_env(name: &str, plan: Plan) -> Plan {
 /// One deterministic synthetic image through a freshly-built backend:
 /// publication is refused unless it answers the PLAN's declared logit
 /// count, all finite (for file loads `classes` comes from the compiled
-/// plan).  Note the plan validator currently pins every graph to
-/// `NUM_CLASSES` — the protocol's fixed class set — so plan-declared
-/// and hard-coded coincide today; the parameter keeps this gate
-/// plan-driven for when that restriction is relaxed.  Catches
+/// plan — graphs declare their own head width, so a six-class manifest
+/// must answer six logits here, not the legacy four).  Catches
 /// weight/scheme mismatches and poisoned containers before any client
 /// request can reach them.
 pub(crate) fn smoke_test(backend: &dyn InferBackend, classes: usize) -> Result<(), RegistryError> {
@@ -314,6 +312,26 @@ pub(crate) fn smoke_test(backend: &dyn InferBackend, classes: usize) -> Result<(
     if logits.len() != classes || logits.iter().any(|v| !v.is_finite()) {
         return Err(RegistryError::Load(format!(
             "smoke inference produced {} logits (want {classes}, all finite)",
+            logits.len()
+        )));
+    }
+    Ok(())
+}
+
+/// Smoke gate for programmatic publishes ([`publish_backend`] hands us
+/// an opaque backend with no plan in hand): the backend must answer one
+/// image with a non-empty, all-finite logit row of ANY width — the
+/// served head width is whatever the backend's model declares.
+///
+/// [`publish_backend`]: crate::registry::ModelRegistry::publish_backend
+pub(crate) fn smoke_test_any_width(backend: &dyn InferBackend) -> Result<(), RegistryError> {
+    let img = synth::render_vehicle(0, synth::DEFAULT_SEED).image;
+    let logits = backend
+        .infer_batch(&img)
+        .map_err(|e| RegistryError::Load(format!("smoke inference failed: {e}")))?;
+    if logits.is_empty() || logits.iter().any(|v| !v.is_finite()) {
+        return Err(RegistryError::Load(format!(
+            "smoke inference produced {} logits (want a non-empty, all-finite row)",
             logits.len()
         )));
     }

@@ -53,7 +53,6 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::bnn::graph::VerifyReport;
-use crate::bnn::network::NUM_CLASSES;
 use crate::coordinator::{BatchPolicy, InferBackend, Router};
 use crate::runtime::RegistryBatchSpec;
 use crate::util::json::{Json, JsonObj};
@@ -275,7 +274,7 @@ impl ModelRegistry {
         backend: Arc<dyn InferBackend>,
     ) -> Result<String, RegistryError> {
         validate_name(name)?;
-        loader::smoke_test(&*backend, NUM_CLASSES)?;
+        loader::smoke_test_any_width(&*backend)?;
         let policy = self.router.default_policy();
         self.publish_validated(
             EntryMeta {
@@ -1055,6 +1054,174 @@ mod tests {
         // and the overridden lane still serves correctly
         let lane = r.resolve("hot").unwrap();
         assert!(r.router().infer_blocking(&lane, synth_image(9)).unwrap().error.is_none());
+        r.shutdown();
+    }
+
+    #[test]
+    fn malformed_branch_archs_refuse_at_manifest_load() {
+        // the third negative layer (after from_json parse and plan
+        // compile unit tests): each malformed branch topology declared
+        // in a registry.json `arch` must surface as a structured
+        // RegistryError::Load from the loader thread — never a publish,
+        // never a panic.  The shared weight file is a valid container;
+        // every refusal here is the GRAPH's.
+        use crate::bnn::network::tests_support::synth_tf_for_spec;
+        use crate::bnn::graph::NetworkSpec;
+        use crate::util::tensorio::Tensor;
+
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-badarch-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a compiling six-class split/scale/concat spec donates the
+        // container all entries share (the bad archs never reach binding)
+        let good_arch = r#"[
+            {"op": "conv_float", "k": 5, "out": 8, "relu": true},
+            {"op": "split", "parts": [3, 5]},
+            {"op": "scale"},
+            {"op": "concat", "with": [1, 1]},
+            {"op": "maxpool"},
+            {"op": "fc_float", "out": 6}
+        ]"#;
+        let spec = NetworkSpec::from_json(&Json::parse(good_arch).unwrap()).unwrap();
+        synth_tf_for_spec(&spec, 710).save(dir.join("w.bcnt")).unwrap();
+        let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("w.bcnt")).unwrap()));
+        // the same container with alpha1 truncated to 4 channels (the
+        // scale op's input has 3): shape-checked binding must refuse it
+        let mut lying = synth_tf_for_spec(&spec, 710);
+        lying.insert("alpha1", Tensor::from_f32(vec![4], &[1.0, 1.0, 1.0, 1.0]));
+        lying.save(dir.join("lying.bcnt")).unwrap();
+        let lying_sum =
+            format_checksum(fnv1a64(&std::fs::read(dir.join("lying.bcnt")).unwrap()));
+        let cases: Vec<(&str, &str, &str, &str)> = vec![
+            (
+                "dangling",
+                r#"[{"op": "conv_float", "k": 5, "out": 8},
+                    {"op": "split", "parts": [4, 4]},
+                    {"op": "maxpool"},
+                    {"op": "fc_float", "out": 4}]"#,
+                "w.bcnt",
+                "dangling split output",
+            ),
+            (
+                "addmismatch",
+                r#"[{"op": "conv_float", "k": 5, "out": 8},
+                    {"op": "conv_float", "k": 1, "out": 4},
+                    {"op": "add", "with": 0},
+                    {"op": "maxpool"},
+                    {"op": "fc_float", "out": 4}]"#,
+                "w.bcnt",
+                "add operands must match",
+            ),
+            (
+                "dtypemix",
+                r#"[{"op": "binarize", "scheme": "rgb"},
+                    {"op": "conv_bin", "k": 5, "out": 32},
+                    {"op": "scale"},
+                    {"op": "concat", "with": 1},
+                    {"op": "maxpool"},
+                    {"op": "fc_float", "out": 4}]"#,
+                "w.bcnt",
+                "share a value domain",
+            ),
+            (
+                "cyclic",
+                r#"[{"op": "conv_float", "k": 5, "out": 8},
+                    {"op": "add", "with": 1},
+                    {"op": "maxpool"},
+                    {"op": "fc_float", "out": 4}]"#,
+                "w.bcnt",
+                "cyclic reference",
+            ),
+            ("badalpha", good_arch, "lying.bcnt", "alpha1"),
+        ];
+        let mut manifest = String::from(r#"{"models": ["#);
+        for (i, (name, arch, file, _)) in cases.iter().enumerate() {
+            let sum = if *file == "lying.bcnt" { &lying_sum } else { &sum };
+            if i > 0 {
+                manifest.push(',');
+            }
+            manifest.push_str(&format!(
+                r#"{{"name": "{name}", "version": 1, "kind": "float", "scheme": "none",
+                    "weights_file": "{file}", "checksum": "{sum}", "arch": {arch}}}"#
+            ));
+        }
+        manifest.push_str("]}");
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        let r = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        for (name, _, _, needle) in &cases {
+            let err = r.load_model(name, 1).unwrap_err();
+            assert!(matches!(err, RegistryError::Load(_)), "{name}: {err}");
+            assert!(err.to_string().contains(needle), "{name}: {err}");
+            assert!(r.resolve(name).is_err(), "{name} must never publish");
+        }
+        assert_eq!(
+            r.counters_json().get("load_failures").unwrap().as_usize().unwrap(),
+            cases.len()
+        );
+        r.shutdown();
+    }
+
+    #[test]
+    fn a_branch_corruption_is_refused_through_the_loader_hook() {
+        // the branch-shaped mutation classes bite end to end: a
+        // manifest-declared residual arch whose compiled plan is
+        // corrupted by the loader's fault hook (the skip edge's slot
+        // reused before its second reader) must be refused by the
+        // verifier as a RegistryError::Verify, and load clean once the
+        // hook is cleared.
+        use crate::bnn::network::tests_support::synth_tf_for_spec;
+        use crate::bnn::graph::NetworkSpec;
+
+        let arch = r#"[
+            {"op": "binarize", "scheme": "rgb"},
+            {"op": "conv_bin", "k": 5, "out": 32},
+            {"op": "threshold"},
+            {"op": "conv_bin", "k": 1, "out": 32},
+            {"op": "add", "with": 1},
+            {"op": "scale"},
+            {"op": "maxpool"},
+            {"op": "fc_float", "out": 4}
+        ]"#;
+        let spec = NetworkSpec::from_json(&Json::parse(arch).unwrap()).unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("bcnn-registry-branchmut-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        synth_tf_for_spec(&spec, 720).save(dir.join("resid.bcnt")).unwrap();
+        let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("resid.bcnt")).unwrap()));
+        let manifest = format!(
+            r#"{{"models": [
+  {{"name": "resid", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "resid.bcnt", "checksum": "{sum}", "arch": {arch}}}
+]}}"#
+        );
+        std::fs::write(dir.join("registry.json"), manifest).unwrap();
+        let r = ModelRegistry::builder()
+            .queue_capacity(64)
+            .engine_threads(1)
+            .models_dir(&dir)
+            .build();
+        let env = corrupt_env_guard();
+        std::env::set_var(
+            "BCNN_TEST_CORRUPT_PLAN",
+            "resid:skip-edge-clobbered-before-second-reader",
+        );
+        let err = r.load_model("resid", 1).unwrap_err();
+        std::env::remove_var("BCNN_TEST_CORRUPT_PLAN");
+        drop(env);
+        assert!(matches!(err, RegistryError::Verify(_)), "{err}");
+        assert!(r.resolve("resid").is_err(), "refused entries must never serve");
+        assert_eq!(
+            r.counters_json().get("verify_failures").unwrap().as_usize().unwrap(),
+            1
+        );
+        // hook cleared: the same artifact verifies and serves
+        r.load_model("resid", 1).unwrap();
+        let lane = r.resolve("resid").unwrap();
+        assert!(r.router().infer_blocking(&lane, synth_image(11)).unwrap().error.is_none());
         r.shutdown();
     }
 }

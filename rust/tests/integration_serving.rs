@@ -700,6 +700,215 @@ fn stream_end_summary_names_the_serving_model() {
     stop.store(true, Ordering::Relaxed);
 }
 
+/// Render an image as a JSON pixel array.  `f32` Display emits the
+/// shortest decimal that round-trips, so the server's parse (f64, then
+/// cast) recovers the exact same f32 bits — the wire adds no error.
+fn json_image(img: &[f32]) -> String {
+    let px: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", px.join(","))
+}
+
+#[test]
+fn manifest_declared_residual_arch_serves_bit_equal_over_tcp() {
+    // acceptance (ISSUE 8 tentpole): a registry.json entry declaring a
+    // binary-residual block — the conv's popcount-counts edge read by
+    // BOTH the threshold chain and the Add skip, with an XNOR-Net
+    // `scale` bridging the sum back into floats — must load through the
+    // full gauntlet (checksum, verify, equiv-checked rewrite, smoke)
+    // and serve classify_batch over a real socket bit-identical to the
+    // same graph executed in process.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use bcnn::bnn::graph::{CompiledNetwork, NetworkSpec};
+    use bcnn::bnn::network::tests_support::synth_tf_for_spec;
+    use bcnn::registry::{fnv1a64, format_checksum};
+    use bcnn::util::json::Json;
+
+    const ARCH: &str = r#"[
+        {"op": "binarize", "scheme": "rgb"},
+        {"op": "conv_bin", "k": 5, "out": 32},
+        {"op": "threshold"},
+        {"op": "conv_bin", "k": 1, "out": 32},
+        {"op": "add", "with": 1},
+        {"op": "scale"},
+        {"op": "maxpool"},
+        {"op": "fc_float", "out": 4}
+    ]"#;
+    let spec = NetworkSpec::from_json(&Json::parse(ARCH).unwrap()).unwrap();
+    let tf = synth_tf_for_spec(&spec, 808);
+    let dir = std::env::temp_dir().join(format!("bcnn-resid-tcp-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    tf.save(dir.join("resid.bcnt")).unwrap();
+    let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("resid.bcnt")).unwrap()));
+    let manifest = format!(
+        r#"{{"models": [
+  {{"name": "resid", "version": 1, "kind": "bcnn", "scheme": "rgb",
+    "weights_file": "resid.bcnt", "checksum": "{sum}",
+    "arch": {ARCH}}}
+]}}"#
+    );
+    std::fs::write(dir.join("registry.json"), manifest).unwrap();
+
+    let registry = ModelRegistry::builder()
+        .queue_capacity(64)
+        .engine_threads(1)
+        .models_dir(&dir)
+        .build();
+    let server = Arc::new(Server::new(registry, classes()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    conn.write_all(b"{\"op\":\"load_model\",\"name\":\"resid\",\"version\":1}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("load_model") && line.contains("resid@1"), "{line}");
+
+    // the in-process reference: the same spec + weights, compiled and
+    // run directly (the served rewritten plan must agree bit-for-bit)
+    let reference = CompiledNetwork::from_plan(spec.plan().unwrap(), &tf).unwrap();
+    let images: Vec<Vec<f32>> = (0..3u64).map(synth_image).collect();
+    let flat: Vec<f32> = images.iter().flatten().copied().collect();
+    let want = reference.infer_batch(&flat).unwrap();
+    assert_eq!(want.len(), 3 * 4);
+
+    let body: Vec<String> = images.iter().map(|img| json_image(img)).collect();
+    let req = format!(
+        "{{\"op\":\"classify_batch\",\"model\":\"resid@1\",\"images\":[{}]}}\n",
+        body.join(",")
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let results = j.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 3);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.get("model").unwrap().as_str().unwrap(), "resid@1", "{line}");
+        let logits: Vec<f32> = r
+            .get("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let want_row = &want[i * 4..(i + 1) * 4];
+        assert_eq!(
+            logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want_row.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "image {i}: TCP logits drifted from the in-process plan"
+        );
+    }
+    // the proof envelope for the served (branch) plan is operator-visible
+    line.clear();
+    conn.write_all(b"{\"op\":\"list_models\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let rows = j.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    let verify = rows[0].get("verify").unwrap();
+    assert!(verify.get("steps").unwrap().as_usize().unwrap() > 0, "{line}");
+    assert!(verify.get("intervals").unwrap().as_usize().unwrap() > 0, "{line}");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn six_class_head_round_trips_its_logit_count_over_tcp() {
+    // acceptance (ISSUE 8): logit width is the PLAN's declaration, not
+    // the legacy NUM_CLASSES pin — a six-class split/scale/concat head
+    // must answer exactly six logits end to end over the wire, bit-equal
+    // to the in-process graph, with argmax/labels degrading gracefully
+    // for classes beyond the server's four label strings.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use bcnn::bnn::graph::{CompiledNetwork, NetworkSpec};
+    use bcnn::bnn::network::tests_support::synth_tf_for_spec;
+    use bcnn::registry::{fnv1a64, format_checksum};
+    use bcnn::util::json::Json;
+
+    const ARCH: &str = r#"[
+        {"op": "conv_float", "k": 5, "out": 8, "relu": true},
+        {"op": "split", "parts": [3, 5]},
+        {"op": "scale"},
+        {"op": "concat", "with": [1, 1]},
+        {"op": "maxpool"},
+        {"op": "fc_float", "out": 6}
+    ]"#;
+    let spec = NetworkSpec::from_json(&Json::parse(ARCH).unwrap()).unwrap();
+    let tf = synth_tf_for_spec(&spec, 606);
+    let dir = std::env::temp_dir().join(format!("bcnn-wide-tcp-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    tf.save(dir.join("wide.bcnt")).unwrap();
+    let sum = format_checksum(fnv1a64(&std::fs::read(dir.join("wide.bcnt")).unwrap()));
+    let manifest = format!(
+        r#"{{"models": [
+  {{"name": "wide", "version": 1, "kind": "float", "scheme": "none",
+    "weights_file": "wide.bcnt", "checksum": "{sum}",
+    "arch": {ARCH}}}
+]}}"#
+    );
+    std::fs::write(dir.join("registry.json"), manifest).unwrap();
+
+    let registry = ModelRegistry::builder()
+        .queue_capacity(64)
+        .engine_threads(1)
+        .models_dir(&dir)
+        .build();
+    let server = Arc::new(Server::new(registry, classes()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    conn.write_all(b"{\"op\":\"load_model\",\"name\":\"wide\",\"version\":1}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("wide@1"), "{line}");
+
+    let reference = CompiledNetwork::from_plan(spec.plan().unwrap(), &tf).unwrap();
+    assert_eq!(reference.num_classes(), 6, "the plan declares the head width");
+    let img = synth_image(7);
+    let want = reference.infer_batch(&img).unwrap();
+    assert_eq!(want.len(), 6);
+
+    let req = format!(
+        "{{\"op\":\"classify\",\"model\":\"wide\",\"pixels\":{}}}\n",
+        json_image(&img)
+    );
+    conn.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    let logits: Vec<f32> = j
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(logits.len(), 6, "six declared classes, six logits on the wire: {line}");
+    assert_eq!(
+        logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    // argmax may land beyond the server's four label strings; the
+    // response still carries the honest class index (label degrades
+    // to "?", never panics and never mislabels)
+    let class = j.get("class").unwrap().as_usize().unwrap();
+    assert!(class < 6, "{line}");
+    let label = j.get("label").unwrap().as_str().unwrap();
+    if class >= 4 {
+        assert_eq!(label, "?", "{line}");
+    }
+    stop.store(true, Ordering::Relaxed);
+}
+
 #[test]
 fn pjrt_backend_serves_through_router() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
