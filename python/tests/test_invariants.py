@@ -221,6 +221,80 @@ def test_integration_test_reference_satisfies_rule_d(tmp_path):
     assert mod.check_variant_coverage(tmp_path) == []
 
 
+def _write_arch_table(tmp_path: Path, rows: str) -> None:
+    (tmp_path / "docs").mkdir(exist_ok=True)
+    (tmp_path / "docs" / "ARCHITECTURE.md").write_text(
+        "| metric | meaning |\n|---|---|\n" + rows
+    )
+
+
+def test_undocumented_metric_family_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/tcp.rs",
+        'pub const M: &str = "bcnn_frobs_total";\n',
+    )
+    _write_arch_table(tmp_path, "| `bcnn_other_total` | other |\n")
+    errors = mod.check_metric_docs(tmp_path)
+    assert len(errors) == 1
+    assert "`bcnn_frobs_total`" in errors[0] and "metric inventory" in errors[0]
+
+
+def test_documented_metric_family_passes(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/tcp.rs",
+        'pub const M: &str = "bcnn_frobs_total";\n',
+    )
+    _write_arch_table(tmp_path, "| `bcnn_frobs_total` | frob count |\n")
+    assert mod.check_metric_docs(tmp_path) == []
+
+
+def test_metric_doc_match_is_exact_token_not_substring(tmp_path):
+    # a row documenting `bcnn_frobs_total_v2` must not satisfy
+    # `bcnn_frobs_total` (rule E matches like rule D: exact backticks)
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/tcp.rs",
+        'pub const M: &str = "bcnn_frobs_total";\n',
+    )
+    _write_arch_table(tmp_path, "| `bcnn_frobs_total_v2` | not the same family |\n")
+    errors = mod.check_metric_docs(tmp_path)
+    assert len(errors) == 1 and "`bcnn_frobs_total`" in errors[0]
+
+
+def test_metric_literal_in_test_region_is_exempt(tmp_path):
+    # only PROD emission sites bind the inventory; tests may name
+    # whatever families they like (e.g. golden-test scaffolding)
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/tcp.rs",
+        "pub fn f() {}\n"
+        "#[cfg(test)]\n"
+        'mod tests { const M: &str = "bcnn_test_only_total"; }\n',
+    )
+    _write_arch_table(tmp_path, "")
+    assert mod.check_metric_docs(tmp_path) == []
+
+
+def test_non_family_literals_never_match(tmp_path):
+    # lane keys ("bcnn_rgb@1") and embedded prefixes are not families:
+    # both quotes must be adjacent to the name
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/server/tcp.rs",
+        'pub const A: &str = "bcnn_rgb@1";\n'
+        'pub const B: &str = "engine/bcnn_rgb";\n',
+    )
+    _write_arch_table(tmp_path, "")
+    assert mod.check_metric_docs(tmp_path) == []
+
+
 def test_main_reports_nonzero_on_broken_tree(tmp_path, monkeypatch):
     mod = load_checker()
     write_rs(

@@ -22,12 +22,15 @@
 //! `BcnnNetwork`/`FloatNetwork` paths — property-tested below against
 //! independent reference compositions of the allocating kernels.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::bnn::network::{LayerTimings, IMG_C, IMG_H, IMG_W};
 use crate::bnn::scratch::PlanScratch;
 use crate::bnn::{bgemm, fc, float_ops, im2col, maxpool, packing};
 use crate::input::binarize::{self, Scheme};
+use crate::util::histogram::Histogram;
+use crate::util::json::{Json, JsonObj};
 use crate::util::tensorio::TensorFile;
 
 use super::plan::{BufClass, Plan, Src, StepKind, ValKind};
@@ -76,6 +79,28 @@ pub struct CompiledNetwork {
     /// Parallel to [`Plan::steps`]: `weights[j]` belongs to step `j`.
     weights: Vec<StepWeights>,
     plan: Plan,
+    /// Per-step latency histograms, updated on every batch (see
+    /// [`StepProfile`]) — the live-traffic per-layer breakdown.
+    profile: StepProfile,
+}
+
+/// Per-step serving profile: one [`Histogram`] per plan step, recorded
+/// on EVERY executed batch (traced or not).  Recording is an
+/// `Instant::now()` pair plus one uncontended short-held mutex per step
+/// — no allocation, so the zero-allocation steady-state contract holds.
+/// Each mutex is a leaf: nothing else is locked while it is held.
+pub struct StepProfile {
+    hists: Vec<Mutex<Histogram>>,
+}
+
+impl StepProfile {
+    fn new(steps: usize) -> Self {
+        Self { hists: (0..steps).map(|_| Mutex::new(Histogram::new())).collect() }
+    }
+
+    fn record(&self, step: usize, ns: u64) {
+        self.hists[step].lock().unwrap().record(ns);
+    }
 }
 
 /// Wall-clock recorder for the timed single-image path (`None` on the
@@ -239,7 +264,8 @@ impl CompiledNetwork {
                 }
             });
         }
-        Ok(Self { weights, plan })
+        let profile = StepProfile::new(plan.steps.len());
+        Ok(Self { weights, plan, profile })
     }
 
     /// The compiled plan (arena layout, weight declarations, labels).
@@ -288,6 +314,67 @@ impl CompiledNetwork {
         Ok(out)
     }
 
+    /// [`CompiledNetwork::infer_batch_with`] plus per-step wall times —
+    /// the traced serving path.  Identical validation, identical
+    /// arithmetic; only the timing recorder differs (it allocates, which
+    /// is fine: this path only runs for sampled/forced-trace batches).
+    pub fn infer_batch_timed(
+        &self,
+        images: &[f32],
+        scratch: &mut PlanScratch,
+    ) -> Result<(Vec<f32>, LayerTimings), GraphError> {
+        const IMG: usize = IMG_H * IMG_W * IMG_C;
+        if images.len() % IMG != 0 {
+            return Err(GraphError::BadInput(format!(
+                "batch payload {} is not a multiple of {IMG}",
+                images.len()
+            )));
+        }
+        let n = images.len() / IMG;
+        if n == 0 {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let mut rec = Some(TimingRec { times: Vec::new(), mark: Instant::now() });
+        self.execute(images, n, scratch, &mut rec)?;
+        let out = self.read_logits(n, scratch);
+        scratch.end_batch();
+        Ok((out, rec.take().expect("timing rec").times))
+    }
+
+    /// The per-step serving profile as a JSON array: one row per plan
+    /// step with the step's (possibly fused) label, observed batch
+    /// count, p50/p95 in µs, and share of the summed step time.
+    pub fn profile_json(&self) -> Json {
+        let snaps: Vec<(String, Histogram)> = self
+            .plan
+            .steps
+            .iter()
+            .zip(&self.profile.hists)
+            .map(|(step, h)| {
+                let label = match &step.label_b {
+                    Some(b) => format!("{}+{}", step.label_a, b),
+                    None => step.label_a.clone(),
+                };
+                (label, h.lock().unwrap().clone())
+            })
+            .collect();
+        let total: f64 = snaps.iter().map(|(_, h)| h.sum_ns()).sum();
+        let rows = snaps
+            .into_iter()
+            .map(|(label, h)| {
+                let mut row = JsonObj::new();
+                row.insert("step", Json::from(label));
+                row.insert("count", Json::Num(h.count() as f64));
+                row.insert("p50_us", Json::Num(h.quantile_ns(0.50) / 1_000.0));
+                row.insert("p95_us", Json::Num(h.quantile_ns(0.95) / 1_000.0));
+                let share = if total > 0.0 { h.sum_ns() / total } else { 0.0 };
+                row.insert("share", Json::Num(share));
+                Json::Obj(row)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
     /// Single-image forward with per-step wall times (the Table 2 /
     /// Nvidia-Visual-Profiler instrument).  Allocates a fresh arena —
     /// this is a diagnostic path, not the serving path.
@@ -334,7 +421,8 @@ impl CompiledNetwork {
         // bind and plan fell out of sync — a compiler bug, never input
         let desync =
             || GraphError::Internal("bound weights out of sync with the plan steps".into());
-        for (step, wts) in self.plan.steps.iter().zip(&self.weights) {
+        for (j, (step, wts)) in self.plan.steps.iter().zip(&self.weights).enumerate() {
+            let step_started = Instant::now();
             let (h, w) = (step.in_ty.h, step.in_ty.w);
             let c_in = step.in_ty.c;
             let px = h * w;
@@ -749,6 +837,7 @@ impl CompiledNetwork {
                 }
                 _ => return Err(desync()),
             }
+            self.profile.record(j, step_started.elapsed().as_nanos() as u64);
         }
         Ok(())
     }
@@ -1389,6 +1478,55 @@ mod tests {
             CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_bcnn(Scheme::Rgb)).unwrap();
         assert!(matches!(net.infer_batch(&[0.0; 100]), Err(GraphError::BadInput(_))));
         assert!(net.infer_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn timed_batch_is_bit_identical_and_labels_cover_the_plan() {
+        let tf = synth_bcnn_tf(Scheme::Rgb, 353);
+        let net =
+            CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_bcnn(Scheme::Rgb)).unwrap();
+        let xs = images(2, 77);
+        let plain = net.infer_batch(&xs).unwrap();
+        let mut scratch = PlanScratch::new();
+        let (timed, times) = net.infer_batch_timed(&xs, &mut scratch).unwrap();
+        assert_eq!(timed, plain, "timed batch must not change logits");
+        let labels: Vec<String> = times.iter().map(|(l, _)| l.clone()).collect();
+        assert_eq!(labels, net.plan().step_names());
+        // validation parity with the untimed entry point
+        assert!(matches!(
+            net.infer_batch_timed(&[0.0; 100], &mut scratch),
+            Err(GraphError::BadInput(_))
+        ));
+        let (empty, no_times) = net.infer_batch_timed(&[], &mut scratch).unwrap();
+        assert!(empty.is_empty() && no_times.is_empty());
+    }
+
+    #[test]
+    fn step_profile_records_every_batch_and_shares_sum_to_one() {
+        let tf = synth_bcnn_tf(Scheme::Gray, 354);
+        let net = CompiledNetwork::from_tensor_file(&tf, &NetworkSpec::legacy_bcnn(Scheme::Gray))
+            .unwrap();
+        // fresh network: profile exists but is empty
+        let rows = net.profile_json();
+        let rows = rows.as_arr().unwrap();
+        assert_eq!(rows.len(), net.plan().steps.len());
+        assert!(rows.iter().all(|r| r.get("count").unwrap().as_f64().unwrap() == 0.0));
+        // three batches (one untimed, one pooled-arena, one timed) all land
+        let xs = images(1, 78);
+        net.infer_batch(&xs).unwrap();
+        let mut scratch = PlanScratch::new();
+        net.infer_batch_with(&xs, &mut scratch).unwrap();
+        net.infer_batch_timed(&xs, &mut scratch).unwrap();
+        let rows = net.profile_json();
+        let rows = rows.as_arr().unwrap();
+        let mut share_sum = 0.0;
+        for r in rows {
+            assert_eq!(r.get("count").unwrap().as_f64().unwrap(), 3.0);
+            assert!(r.get("p50_us").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(r.get("p95_us").unwrap().as_f64().unwrap() >= 0.0);
+            share_sum += r.get("share").unwrap().as_f64().unwrap();
+        }
+        assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to 1, got {share_sum}");
     }
 
     #[test]

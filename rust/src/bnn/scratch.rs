@@ -203,6 +203,17 @@ impl PlanScratch {
     pub fn slot_counts(&self) -> [usize; 3] {
         [self.f32s.len(), self.u32s.len(), self.i32s.len()]
     }
+
+    /// Reserved bytes per slot class, `[f32, u32, i32]` — all three
+    /// classes hold 4-byte elements.  Feeds the scratch-pool gauges in
+    /// the metrics exposition.
+    pub fn class_capacity_bytes(&self) -> [usize; 3] {
+        [
+            self.f32s.iter().map(Vec::capacity).sum::<usize>() * 4,
+            self.u32s.iter().map(Vec::capacity).sum::<usize>() * 4,
+            self.i32s.iter().map(Vec::capacity).sum::<usize>() * 4,
+        ]
+    }
 }
 
 #[cfg(test)]

@@ -11,10 +11,22 @@ use crate::bnn::graph::CompiledNetwork;
 use crate::bnn::network::{BcnnNetwork, FloatNetwork};
 use crate::bnn::scratch::PlanScratch;
 use crate::runtime::{Artifacts, ModelRuntime, RuntimeError};
+use crate::util::json::Json;
 use crate::util::lockorder;
 use crate::util::threadpool::scoped_map;
 
 pub const IMG_ELEMS: usize = 96 * 96 * 3;
+
+/// Scratch-arena pool observability snapshot (`None` for backends
+/// without a pool, e.g. the PJRT runtime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Idle arenas currently parked in the pool.
+    pub arenas: usize,
+    /// Peak capacity in bytes across pooled arenas, per slot class
+    /// (`[f32, u32, i32]` — all 4-byte elements).
+    pub peak_bytes: [usize; 3],
+}
 
 /// A model backend the batcher can drive.
 pub trait InferBackend: Send + Sync {
@@ -24,6 +36,18 @@ pub trait InferBackend: Send + Sync {
     /// Batch sizes the backend can execute natively, ascending.
     /// The engine accepts anything (`vec![usize::MAX]` sentinel).
     fn supported_batches(&self) -> Vec<usize>;
+
+    /// Per-step serving profile (`list_models` `"profile"` field);
+    /// `None` when the backend has no per-step instrumentation.
+    fn profile_json(&self) -> Option<Json> {
+        None
+    }
+
+    /// Scratch-pool gauges for the metrics exposition; `None` when the
+    /// backend owns no arena pool.
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
 
     /// Run `n` images (flattened, `n * IMG_ELEMS` floats); returns
     /// `n * classes` logits, where `classes` is the served model's
@@ -46,6 +70,21 @@ pub trait InferBackend: Send + Sync {
     ) -> Result<Vec<f32>, String> {
         gather_padded(images, exec, gather);
         self.infer_batch(gather)
+    }
+
+    /// [`InferBackend::infer_slices`] plus per-plan-step wall times
+    /// appended to `steps` as `(label, ns)` pairs — the traced-batch
+    /// path.  The default cannot time steps and leaves `steps` empty;
+    /// results must be identical to the untimed path either way.
+    fn infer_slices_timed(
+        &self,
+        images: &[&[f32]],
+        exec: usize,
+        gather: &mut Vec<f32>,
+        steps: &mut Vec<(String, u64)>,
+    ) -> Result<Vec<f32>, String> {
+        let _ = steps;
+        self.infer_slices(images, exec, gather)
     }
 }
 
@@ -184,6 +223,61 @@ impl InferBackend for EngineBackend {
         }
         gather_padded(images, exec, gather);
         self.infer_batch(gather)
+    }
+
+    /// Traced batches run single-chunk through the plan's timed forward
+    /// (no worker split — per-step times for a split batch would
+    /// interleave).  Bit-identical to the untimed path: chunking never
+    /// changes per-image results (property-tested in this module).
+    fn infer_slices_timed(
+        &self,
+        images: &[&[f32]],
+        exec: usize,
+        gather: &mut Vec<f32>,
+        steps: &mut Vec<(String, u64)>,
+    ) -> Result<Vec<f32>, String> {
+        let mut scratch = {
+            let mut pool = self.scratch_pool.lock().unwrap();
+            let _ord = lockorder::acquired(lockorder::SCRATCH_POOL, "backend.scratch_pool");
+            pool.pop()
+        }
+        .unwrap_or_else(|| PlanScratch::with_decay(PlanScratch::SERVING_DECAY_BATCHES));
+        let single = matches!(images, [_] if exec == 1);
+        let result = if single {
+            self.model.infer_batch_timed(images[0], &mut scratch)
+        } else {
+            gather_padded(images, exec, gather);
+            self.model.infer_batch_timed(gather, &mut scratch)
+        };
+        {
+            let mut pool = self.scratch_pool.lock().unwrap();
+            let _ord = lockorder::acquired(lockorder::SCRATCH_POOL, "backend.scratch_pool");
+            pool.push(scratch);
+        }
+        match result {
+            Ok((logits, times)) => {
+                steps.extend(times.into_iter().map(|(label, d)| (label, d.as_nanos() as u64)));
+                Ok(logits)
+            }
+            Err(e) => Err(e.to_string()),
+        }
+    }
+
+    fn profile_json(&self) -> Option<Json> {
+        Some(self.model.profile_json())
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        let pool = self.scratch_pool.lock().unwrap();
+        let _ord = lockorder::acquired(lockorder::SCRATCH_POOL, "backend.scratch_pool");
+        let mut peak = [0usize; 3];
+        for arena in pool.iter() {
+            let caps = arena.class_capacity_bytes();
+            for (p, c) in peak.iter_mut().zip(caps) {
+                *p = (*p).max(c);
+            }
+        }
+        Some(PoolStats { arenas: pool.len(), peak_bytes: peak })
     }
 }
 
@@ -384,5 +478,47 @@ mod tests {
             let direct = be.infer_batch(&contiguous).unwrap();
             ensure_eq(via_slices, direct, "slices == gathered (bitwise)")
         });
+    }
+
+    #[test]
+    fn infer_slices_timed_is_bit_identical_and_reports_plan_steps() {
+        let net = synth_bcnn_network(Scheme::Rgb, 31);
+        let be = EngineBackend::bcnn(net, 2);
+        let mut rng = crate::util::rng::Xoshiro256::new(8);
+        let imgs: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..IMG_ELEMS).map(|_| rng.next_f32()).collect()).collect();
+        let slices: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let (mut gather, mut gather2) = (Vec::new(), Vec::new());
+        let mut steps = Vec::new();
+        let timed = be.infer_slices_timed(&slices, 2, &mut gather, &mut steps).unwrap();
+        let plain = be.infer_slices(&slices, 2, &mut gather2).unwrap();
+        assert_eq!(timed, plain, "timed path must not change logits");
+        let labels: Vec<String> = steps.iter().map(|(l, _)| l.clone()).collect();
+        assert_eq!(labels, be.model.plan().step_names(), "one span per plan step label");
+        // B=1 timed path skips the gather too
+        let mut g3 = Vec::new();
+        let mut s3 = Vec::new();
+        let one = be.infer_slices_timed(&slices[..1], 1, &mut g3, &mut s3).unwrap();
+        assert!(g3.is_empty(), "B=1 timed must not gather");
+        assert_eq!(one, be.infer_batch(&imgs[0]).unwrap());
+    }
+
+    #[test]
+    fn pool_stats_report_parked_arenas_and_peak_bytes() {
+        let net = synth_bcnn_network(Scheme::Gray, 21);
+        let be = EngineBackend::bcnn(net, 2);
+        let empty = be.pool_stats().unwrap();
+        assert_eq!(empty, PoolStats { arenas: 0, peak_bytes: [0; 3] });
+        let mut rng = crate::util::rng::Xoshiro256::new(4);
+        let imgs: Vec<f32> = (0..2 * IMG_ELEMS).map(|_| rng.next_f32()).collect();
+        be.infer_batch(&imgs).unwrap();
+        let stats = be.pool_stats().unwrap();
+        assert!(stats.arenas >= 1);
+        assert!(stats.peak_bytes[0] > 0, "f32 class carried the activations");
+        // profile surfaced through the trait: one row per plan step
+        let profile = be.profile_json().unwrap();
+        let rows = profile.as_arr().unwrap();
+        assert_eq!(rows.len(), be.model.plan().steps.len());
+        assert!(rows.iter().all(|r| r.get("count").unwrap().as_f64().unwrap() >= 1.0));
     }
 }

@@ -132,7 +132,19 @@ impl Batcher {
     ) {
         let plan = plan_batches(reqs.len(), supported);
         for (real, exec) in plan {
-            let chunk: Vec<InferRequest> = reqs.drain(..real).collect();
+            let mut chunk: Vec<InferRequest> = reqs.drain(..real).collect();
+            // traced requests close their queue-wait span here; a chunk
+            // with ANY traced request runs the timed backend path so its
+            // per-plan-step spans can be synthesized (logits stay
+            // bit-identical either way — property-tested in `backend`)
+            let any_trace = chunk.iter().any(|r| r.trace.is_some());
+            if any_trace {
+                for r in chunk.iter_mut() {
+                    if let Some(t) = r.trace.as_deref_mut() {
+                        t.mark("batch_formed");
+                    }
+                }
+            }
             // hand the backend each request's own pixel buffer: padding
             // and gathering (when needed at all) happen behind
             // `InferBackend::infer_slices`, which reuses this executor's
@@ -140,7 +152,12 @@ impl Batcher {
             // copy at all
             let slices: Vec<&[f32]> = chunk.iter().map(|r| r.image.as_slice()).collect();
             let started = Instant::now();
-            let result = backend.infer_slices(&slices, exec, payload);
+            let mut step_times: Vec<(String, u64)> = Vec::new();
+            let result = if any_trace {
+                backend.infer_slices_timed(&slices, exec, payload, &mut step_times)
+            } else {
+                backend.infer_slices(&slices, exec, payload)
+            };
             let exec_time = started.elapsed();
             match result {
                 Ok(logits) => {
@@ -149,7 +166,7 @@ impl Batcher {
                     // backend executed `exec` rows of whatever head the
                     // served plan declares (4 for the legacy networks)
                     let classes = logits.len() / exec.max(1);
-                    for (i, r) in chunk.into_iter().enumerate() {
+                    for (i, mut r) in chunk.into_iter().enumerate() {
                         let l = logits[i * classes..(i + 1) * classes].to_vec();
                         let queue_time = started.duration_since(r.enqueued);
                         // Non-finite logits mean the image poisoned the
@@ -167,6 +184,18 @@ impl Batcher {
                             continue;
                         }
                         metrics.record_request(queue_time, exec_time);
+                        let trace = r.trace.take().map(|mut t| {
+                            // per-step exec spans, laid end-to-end from
+                            // the instant the backend call began (the
+                            // whole batch shares one backend run)
+                            let mut acc = t.offset_ns(started);
+                            for (label, ns) in &step_times {
+                                acc += ns;
+                                t.push(format!("exec:{label}"), acc);
+                            }
+                            t.mark("logits");
+                            t
+                        });
                         let resp = InferResponse {
                             id: r.id,
                             class: argmax(&l),
@@ -175,6 +204,7 @@ impl Batcher {
                             exec_time,
                             batch_size: real,
                             error: None,
+                            trace,
                         };
                         let _ = r.resp.send(resp);
                     }
@@ -292,7 +322,13 @@ mod tests {
             let mut image = vec![0.0f32; IMG_ELEMS];
             image[0] = i as f32;
             queue
-                .try_push(InferRequest { id: i, image, enqueued: Instant::now(), resp: tx })
+                .try_push(InferRequest {
+                    id: i,
+                    image,
+                    enqueued: Instant::now(),
+                    resp: tx,
+                    trace: None,
+                })
                 .unwrap();
             rxs.push((i, rx));
         }
@@ -325,7 +361,13 @@ mod tests {
             let mut image = vec![0.0f32; IMG_ELEMS];
             image[0] = i as f32;
             queue
-                .try_push(InferRequest { id: i, image, enqueued: Instant::now(), resp: tx })
+                .try_push(InferRequest {
+                    id: i,
+                    image,
+                    enqueued: Instant::now(),
+                    resp: tx,
+                    trace: None,
+                })
                 .unwrap();
             rxs.push((i, rx));
         }
@@ -337,6 +379,7 @@ mod tests {
                 image: vec![0.0; IMG_ELEMS],
                 enqueued: Instant::now(),
                 resp: std::sync::mpsc::channel().0,
+                trace: None,
             })
             .is_err());
         // ...but every admitted request is still answered

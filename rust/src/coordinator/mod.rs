@@ -75,9 +75,10 @@
 //! | 50 | `scratch_pool` (Mutex) | `EngineBackend` | leaf, serving side; only around a pop/push, never across a forward |
 //!
 //! Locks outside the table (`Router::default_variant`, each `Lane`'s
-//! `batcher` mutex, queue/metrics internals) are never held together
-//! with another lock — enforced by expression-scoping at their only
-//! call sites rather than by rank.
+//! `batcher` mutex, queue/metrics internals, the per-step profile
+//! histograms, and the trace-store/journal rings) are strict leaves:
+//! no other lock is ever acquired while one of them is held, so they
+//! need no rank — enforced by expression-scoping at their call sites.
 
 pub mod backend;
 pub mod batcher;
@@ -86,7 +87,7 @@ pub mod queue;
 pub mod request;
 pub mod router;
 
-pub use backend::{EngineBackend, InferBackend, RuntimeBackend};
+pub use backend::{EngineBackend, InferBackend, PoolStats, RuntimeBackend};
 pub use batcher::{plan_batches, BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use queue::BoundedQueue;

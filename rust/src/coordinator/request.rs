@@ -3,6 +3,8 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use crate::util::trace::Trace;
+
 pub type RequestId = u64;
 
 /// A single inference request: one (96,96,3) image.
@@ -12,6 +14,10 @@ pub struct InferRequest {
     pub enqueued: Instant,
     /// Response channel (one-shot).
     pub resp: mpsc::Sender<InferResponse>,
+    /// Span timeline, only for sampled/forced-trace requests — `None`
+    /// on the steady-state path so untraced requests allocate nothing
+    /// for tracing.
+    pub trace: Option<Box<Trace>>,
 }
 
 /// The served result.
@@ -29,6 +35,9 @@ pub struct InferResponse {
     pub batch_size: usize,
     /// Set when the backend failed; logits empty in that case.
     pub error: Option<String>,
+    /// The request's span timeline, carried back only when it was
+    /// traced (the batcher moves it from the [`InferRequest`]).
+    pub trace: Option<Box<Trace>>,
 }
 
 impl InferResponse {
@@ -41,6 +50,7 @@ impl InferResponse {
             exec_time: Duration::ZERO,
             batch_size: 0,
             error: Some(msg),
+            trace: None,
         }
     }
 }

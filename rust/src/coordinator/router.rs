@@ -24,6 +24,7 @@ use super::queue::{BoundedQueue, PushError};
 use super::request::{InferRequest, InferResponse, RequestId};
 use crate::util::json::{Json, JsonObj};
 use crate::util::lockorder;
+use crate::util::trace::Trace;
 
 #[derive(Debug)]
 pub enum RouteError {
@@ -50,6 +51,10 @@ from { PushError => RouteError::Rejected });
 struct Lane {
     queue: Arc<BoundedQueue<InferRequest>>,
     metrics: Arc<Metrics>,
+    /// The backend serving this lane, kept alongside the batcher so the
+    /// observability plane (per-model `"profile"`, scratch-pool gauges)
+    /// can reach it without going through the queue.
+    backend: Arc<dyn InferBackend>,
     /// Taken (and retired) by `remove_lane`; dropped with the router
     /// otherwise.  Behind a mutex because lanes are shared as `Arc`s
     /// with in-flight submitters while an admin thread retires them.
@@ -61,8 +66,8 @@ impl Lane {
         let queue = Arc::new(BoundedQueue::new(queue_capacity));
         let metrics = Arc::new(Metrics::new());
         let batcher =
-            Batcher::spawn(Arc::clone(&queue), backend, policy, Arc::clone(&metrics));
-        Self { queue, metrics, batcher: Mutex::new(Some(batcher)) }
+            Batcher::spawn(Arc::clone(&queue), Arc::clone(&backend), policy, Arc::clone(&metrics));
+        Self { queue, metrics, backend, batcher: Mutex::new(Some(batcher)) }
     }
 }
 
@@ -134,6 +139,13 @@ impl Router {
     }
 
     fn lane(&self, variant: &str) -> Result<Arc<Lane>, RouteError> {
+        Ok(self.lane_resolved(variant)?.1)
+    }
+
+    /// Resolve `variant` (empty means the default route) to its lane
+    /// key and lane — callers that stamp traces need the resolved
+    /// `name@version`, not the possibly-empty alias they were given.
+    fn lane_resolved(&self, variant: &str) -> Result<(String, Arc<Lane>), RouteError> {
         // never hold the default-variant and lane-map locks together
         // (add_lane takes them in sequence; nesting could deadlock)
         let key = if variant.is_empty() {
@@ -143,12 +155,13 @@ impl Router {
         };
         let lanes = self.lanes.read().unwrap();
         let _ord = lockorder::acquired(lockorder::ROUTER_LANES, "router.lanes");
-        lanes.get(&key).cloned().ok_or_else(|| {
-            RouteError::UnknownVariant(
-                key.clone(),
+        match lanes.get(&key).cloned() {
+            Some(lane) => Ok((key, lane)),
+            None => Err(RouteError::UnknownVariant(
+                key,
                 lanes.keys().cloned().collect::<Vec<_>>().join(", "),
-            )
-        })
+            )),
+        }
     }
 
     /// Spawn a new lane for `backend` under `name`, using the router's
@@ -278,7 +291,7 @@ impl Router {
         image: Vec<f32>,
     ) -> Result<(RequestId, mpsc::Receiver<InferResponse>), RouteError> {
         let (tx, rx) = mpsc::channel();
-        self.submit_with_sender(id, variant, image, tx)?;
+        self.submit_with_sender(id, variant, image, tx, None)?;
         Ok((id, rx))
     }
 
@@ -292,13 +305,22 @@ impl Router {
         variant: &str,
         image: Vec<f32>,
         resp: mpsc::Sender<InferResponse>,
+        mut trace: Option<Box<Trace>>,
     ) -> Result<(), RouteError> {
         if image.len() != IMG_ELEMS {
             return Err(RouteError::BadPayload(image.len()));
         }
-        let lane = self.lane(variant)?;
+        let (key, lane) = self.lane_resolved(variant)?;
+        if let Some(t) = trace.as_deref_mut() {
+            t.id = id;
+            t.model = key;
+            t.mark("admitted");
+        }
         lane.metrics.record_submit();
-        let req = InferRequest { id, image, enqueued: Instant::now(), resp };
+        if let Some(t) = trace.as_deref_mut() {
+            t.mark("enqueued");
+        }
+        let req = InferRequest { id, image, enqueued: Instant::now(), resp, trace };
         lane.queue.try_push(req).map_err(|e| {
             lane.metrics.record_reject();
             RouteError::Rejected(e)
@@ -313,7 +335,23 @@ impl Router {
         variant: &str,
         image: Vec<f32>,
     ) -> Result<InferResponse, RouteError> {
-        let (_, rx) = self.submit(variant, image)?;
+        self.infer_blocking_traced(variant, image, None)
+    }
+
+    /// [`Router::infer_blocking`] carrying an optional span trace: the
+    /// trace rides the [`InferRequest`] through the lane (admission and
+    /// queue stages stamped here, batch/exec stages in the batcher) and
+    /// comes back on the [`InferResponse`].  `None` is the steady-state
+    /// path and behaves exactly like `infer_blocking`.
+    pub fn infer_blocking_traced(
+        &self,
+        variant: &str,
+        image: Vec<f32>,
+        trace: Option<Box<Trace>>,
+    ) -> Result<InferResponse, RouteError> {
+        let id = self.alloc_id();
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_sender(id, variant, image, tx, trace)?;
         rx.recv().map_err(|_| RouteError::BackendGone)
     }
 
@@ -347,7 +385,7 @@ impl Router {
                 let error = match img {
                     Err(reason) => Some(reason),
                     Ok(image) => self
-                        .submit_with_sender(id, variant, image, tx.clone())
+                        .submit_with_sender(id, variant, image, tx.clone(), None)
                         .err()
                         .map(|e| e.to_string()),
                 };
@@ -401,6 +439,19 @@ impl Router {
 
     pub fn metrics(&self, variant: &str) -> Result<Arc<Metrics>, RouteError> {
         Ok(Arc::clone(&self.lane(variant)?.metrics))
+    }
+
+    /// Queue occupancy of a lane: `(depth, capacity)` — the
+    /// backpressure gauges in the metrics exposition.
+    pub fn queue_depth(&self, variant: &str) -> Result<(usize, usize), RouteError> {
+        let lane = self.lane(variant)?;
+        Ok((lane.queue.len(), lane.queue.capacity()))
+    }
+
+    /// The backend serving a lane, for per-model observability
+    /// (`"profile"` in `list_models`, scratch-pool gauges).
+    pub fn lane_backend(&self, variant: &str) -> Result<Arc<dyn InferBackend>, RouteError> {
+        Ok(Arc::clone(&self.lane(variant)?.backend))
     }
 
     /// Aggregate stats across all lanes.
@@ -638,6 +689,32 @@ mod tests {
         let a = r.infer_blocking("bcnn_rgb", img.clone()).unwrap();
         let b = r.infer_blocking("bcnn_rgb", img).unwrap();
         assert_eq!(a.logits, b.logits);
+        r.shutdown();
+    }
+
+    #[test]
+    fn traced_requests_carry_a_monotone_stage_timeline() {
+        let r = test_router(BatchPolicy::default(), 64);
+        let mut trace = Box::new(crate::util::trace::Trace::begin());
+        trace.mark("parsed");
+        // default-route submission: the trace must name the RESOLVED lane
+        let resp = r.infer_blocking_traced("", image(21), Some(trace)).unwrap();
+        assert!(resp.error.is_none());
+        let t = resp.trace.expect("traced request returns its trace");
+        assert_eq!(t.model, "bcnn_rgb");
+        assert_eq!(t.id, resp.id);
+        let labels: Vec<&str> = t.spans().iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(&labels[..4], &["parsed", "admitted", "enqueued", "batch_formed"]);
+        assert_eq!(labels[labels.len() - 1], "logits");
+        let exec_spans = labels.iter().filter(|l| l.starts_with("exec:")).count();
+        assert!(exec_spans >= 1, "per-step exec spans present: {labels:?}");
+        for w in t.spans().windows(2) {
+            assert!(w[0].1 <= w[1].1, "offsets monotone: {:?}", t.spans());
+        }
+        // traced and untraced logits are bit-identical
+        let plain = r.infer_blocking("bcnn_rgb", image(21)).unwrap();
+        assert_eq!(plain.logits, resp.logits);
+        assert!(plain.trace.is_none(), "untraced requests carry no trace");
         r.shutdown();
     }
 }

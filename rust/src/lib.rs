@@ -64,7 +64,7 @@ pub mod server;
 
 pub mod util {
     //! Substrates the offline vendor set lacks: JSON, CLI, RNG, thread
-    //! pool, histogram, property testing, timing, tensor IO.
+    //! pool, histogram, property testing, timing, tracing, tensor IO.
     pub mod cli;
     pub mod error;
     pub mod histogram;
@@ -75,4 +75,5 @@ pub mod util {
     pub mod tensorio;
     pub mod threadpool;
     pub mod timer;
+    pub mod trace;
 }

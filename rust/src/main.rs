@@ -105,6 +105,12 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
         .opt("executors", "0", "batched workers per lane (0 = auto from host profile)")
         .opt("write-timeout-ms", "10000", "per-session write deadline in ms (0 = disabled)")
         .opt(
+            "trace-sample",
+            "0",
+            "trace 1 in N classify requests into the trace_dump ring (0 = off; \
+             per-request \"trace\": true always captures)",
+        )
+        .opt(
             "admin-token",
             "",
             "require this token on load_model/unload_model/set_default (empty = ops stay \
@@ -223,10 +229,12 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
     };
     let admin_token = a.get_nonempty("admin-token");
     let admin_gated = admin_token.is_some();
+    let trace_sample = a.get_u64("trace-sample")?;
     let server = Arc::new(
         Server::new(Arc::clone(&registry), CLASSES.iter().map(|s| s.to_string()).collect())
             .with_write_timeout(write_timeout)
-            .with_admin_token(admin_token),
+            .with_admin_token(admin_token)
+            .with_trace_sample(trace_sample),
     );
     let stop = Arc::new(AtomicBool::new(false));
     let addr = server.serve(&a.get("addr"), threads.max(2), stop)?;
@@ -241,6 +249,14 @@ fn cmd_serve(raw: &[String]) -> AppResult<()> {
     println!(
         "admin ops: load_model / unload_model / set_default ({}) / list_models",
         if admin_gated { "token-gated" } else { "open — pass --admin-token to gate" },
+    );
+    println!(
+        "observability: metrics / trace_dump (sampling {})",
+        if trace_sample == 0 {
+            "off — pass --trace-sample N for 1-in-N".to_string()
+        } else {
+            format!("1-in-{trace_sample}")
+        },
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -50,6 +50,7 @@ pub(crate) use loader::corrupt_env_guard;
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::bnn::graph::VerifyReport;
@@ -58,6 +59,7 @@ use crate::runtime::RegistryBatchSpec;
 use crate::util::json::{Json, JsonObj};
 use crate::util::lockorder;
 use crate::util::threadpool::default_threads;
+use crate::util::trace::{event, Journal};
 
 #[derive(Debug)]
 pub enum RegistryError {
@@ -225,6 +227,16 @@ pub struct ModelRegistry {
     routes: RwLock<Arc<RouteTable>>,
     counters: Mutex<Counters>,
     loader: Option<loader::Loader>,
+    /// Monotonic route-snapshot version: bumped on every
+    /// [`ModelRegistry::rebuild_routes`] swap.  A metrics scraper that
+    /// sees the gauge move knows the serving topology changed between
+    /// two scrapes even if the model list looks identical.
+    route_version: AtomicU64,
+    /// Bounded structured event journal (model lifecycle, verify/rewrite
+    /// fallbacks; the server appends write-timeout events too).  A strict
+    /// leaf lock — every `log` call sits after the admin-state mutex is
+    /// released.
+    journal: Arc<Journal>,
 }
 
 impl ModelRegistry {
@@ -242,6 +254,18 @@ impl ModelRegistry {
     /// the returned lane key.
     pub fn router(&self) -> &Arc<Router> {
         &self.router
+    }
+
+    /// The registry's structured event journal (shared with the server,
+    /// which appends wire-side events like write timeouts).
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
+    }
+
+    /// Current route-snapshot version (0 before the first publication;
+    /// bumped on every snapshot swap).
+    pub fn route_version(&self) -> u64 {
+        self.route_version.load(Ordering::Relaxed)
     }
 
     /// Resolve a client-facing model reference (`""` = default, bare
@@ -317,20 +341,34 @@ impl ModelRegistry {
                     },
                     loaded.backend,
                 )?;
-                let mut c = self.counters.lock().unwrap();
-                let _ord = lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
-                c.loads += 1;
+                {
+                    let mut c = self.counters.lock().unwrap();
+                    let _ord =
+                        lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
+                    c.loads += 1;
+                    if loaded.rewrite_fallback {
+                        c.rewrite_fallbacks += 1;
+                    }
+                }
                 if loaded.rewrite_fallback {
-                    c.rewrite_fallbacks += 1;
+                    self.journal.log(event::REWRITE_FALLBACK, &key);
                 }
                 Ok(key)
             }
             Err(e) => {
-                let mut c = self.counters.lock().unwrap();
-                let _ord = lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
-                c.load_failures += 1;
+                {
+                    let mut c = self.counters.lock().unwrap();
+                    let _ord =
+                        lockorder::acquired(lockorder::REGISTRY_COUNTERS, "registry.counters");
+                    c.load_failures += 1;
+                    if matches!(e, RegistryError::Verify(_)) {
+                        c.verify_failures += 1;
+                    }
+                }
+                let detail = format!("{name}@{version}: {e}");
+                self.journal.log(event::MODEL_LOAD_FAILED, &detail);
                 if matches!(e, RegistryError::Verify(_)) {
-                    c.verify_failures += 1;
+                    self.journal.log(event::VERIFY_FAILED, &detail);
                 }
                 Err(e)
             }
@@ -366,6 +404,10 @@ impl ModelRegistry {
             st.default_name = name;
         }
         self.rebuild_routes(&st);
+        drop(st);
+        // journal AFTER the state mutex is released: its ring mutex is a
+        // strict leaf, never nested under an admin lock
+        self.journal.log(event::MODEL_LOAD, &lane_key);
         Ok(lane_key)
     }
 
@@ -409,6 +451,7 @@ impl ModelRegistry {
         drop(st);
         if serving_changed || default_changed {
             self.counters.lock().unwrap().swaps += 1;
+            self.journal.log(event::ROUTE_SWAP, &format!("{name}@{version}"));
         }
         Ok(format!("{name}@{version}"))
     }
@@ -453,6 +496,7 @@ impl ModelRegistry {
             .remove_lane(&lane_key)
             .map_err(|e| RegistryError::Load(e.to_string()))?;
         self.counters.lock().unwrap().evictions += 1;
+        self.journal.log(event::MODEL_RETIRE, &lane_key);
         Ok(lane_key)
     }
 
@@ -478,6 +522,7 @@ impl ModelRegistry {
         let mut routes = self.routes.write().unwrap();
         let _ord = lockorder::acquired(lockorder::REGISTRY_ROUTES, "registry.routes");
         *routes = Arc::new(RouteTable { aliases, default_key });
+        self.route_version.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The lane key currently serving the empty model reference
@@ -542,6 +587,16 @@ impl ModelRegistry {
                     row.insert("failed", Json::from(m.failed() as usize));
                     row.insert("rejected", Json::from(m.rejected() as usize));
                 }
+                // per-plan-step execution profile (p50/p95/share per
+                // step, accumulated over every batch the lane has run);
+                // Null for backends that don't expose one
+                row.insert(
+                    "profile",
+                    match self.router.lane_backend(&lane_key) {
+                        Ok(backend) => backend.profile_json().unwrap_or(Json::Null),
+                        Err(_) => Json::Null,
+                    },
+                );
                 rows.push(Json::Obj(row));
             }
         }
@@ -639,6 +694,8 @@ impl RegistryBuilder {
             })),
             counters: Mutex::new(Counters::default()),
             loader,
+            route_version: AtomicU64::new(0),
+            journal: Arc::new(Journal::new(Journal::DEFAULT_CAPACITY)),
         })
     }
 }
@@ -771,6 +828,64 @@ mod tests {
         assert_eq!(c.get("evictions").unwrap().as_usize().unwrap(), 1);
         // programmatic publications aren't "loads"
         assert_eq!(c.get("loads").unwrap().as_usize().unwrap(), 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn lifecycle_events_reach_the_journal_and_bump_the_route_version() {
+        use crate::util::trace::event;
+        let r = registry();
+        assert_eq!(r.route_version(), 0);
+        r.publish_backend("m", 1, "bcnn", "rgb", None, backend(30)).unwrap();
+        r.publish_backend("m", 2, "bcnn", "rgb", None, backend(31)).unwrap();
+        let after_publish = r.route_version();
+        assert_eq!(after_publish, 2, "one snapshot swap per publication");
+        r.set_default("m", Some(2)).unwrap();
+        r.unload_model("m", 1).unwrap();
+        assert!(r.route_version() > after_publish);
+        let j = r.journal().to_json();
+        let kinds: Vec<String> = j
+            .get("events")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("kind").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                event::MODEL_LOAD,
+                event::MODEL_LOAD,
+                event::ROUTE_SWAP,
+                event::MODEL_RETIRE
+            ]
+        );
+        // sequence numbers are monotonic from zero and nothing was evicted
+        assert_eq!(j.get("next_seq").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn list_models_carries_a_per_step_profile_after_traffic() {
+        let r = registry();
+        r.publish_backend("m", 1, "bcnn", "rgb", None, backend(32)).unwrap();
+        let lane = r.resolve("m").unwrap();
+        // the publish-time smoke inference already primed the profile;
+        // a served request adds another sample per step
+        assert!(r.router().infer_blocking(&lane, synth_image(13)).unwrap().error.is_none());
+        let rows = r.list_models();
+        let rows = rows.as_arr().unwrap();
+        let profile = rows[0].get("profile").unwrap().as_arr().unwrap();
+        assert!(!profile.is_empty(), "engine backends expose a per-step profile");
+        let mut share = 0.0;
+        for step in profile {
+            assert!(step.get("count").unwrap().as_usize().unwrap() >= 1);
+            assert!(step.get("p50_us").unwrap().as_f64().unwrap() >= 0.0);
+            share += step.get("share").unwrap().as_f64().unwrap();
+        }
+        assert!((share - 1.0).abs() < 1e-9, "step shares sum to 1, got {share}");
         r.shutdown();
     }
 

@@ -3,7 +3,8 @@
 //! Requests (one JSON object per line):
 //!
 //! ```text
-//!     {"op": "classify", "model": "bcnn", "pixels": [27648 floats]}
+//!     {"op": "classify", "model": "bcnn", "pixels": [27648 floats],
+//!      "trace": true}
 //!     {"op": "classify_batch", "model": "bcnn@2",
 //!      "images": [[27648 floats], [27648 floats], ...]}
 //!     {"op": "classify_batch_stream", "model": "bcnn",
@@ -16,6 +17,8 @@
 //!     {"op": "unload_model", "name": "bcnn", "version": 1, "token": "s3cret"}
 //!     {"op": "set_default", "name": "bcnn", "version": 2, "token": "s3cret"}
 //!     {"op": "list_models"}
+//!     {"op": "metrics"}
+//!     {"op": "trace_dump", "model": "bcnn@2"}
 //! ```
 //!
 //! `model` on the classify ops is optional: empty/absent routes to the
@@ -60,6 +63,7 @@
 //! full wire reference and worked sessions.
 
 use crate::util::json::{Json, JsonObj};
+use crate::util::trace::Trace;
 
 /// Cap on images per `classify_batch` request (admission control at the
 /// protocol layer; the batcher's `max_batch` governs execution grouping).
@@ -71,7 +75,10 @@ pub const MAX_BATCH_IMAGES: usize = 64;
 /// Parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Classify { model: String, pixels: Vec<f32> },
+    /// `trace: true` forces span capture for this request regardless of
+    /// the server's sampling rate; the response then echoes the span
+    /// timeline inline and the trace also lands in the trace store.
+    Classify { model: String, pixels: Vec<f32>, trace: bool },
     ClassifyBatch { model: String, images: Vec<Vec<f32>> },
     /// Streaming variant: per-image parse failures ride along as `Err`
     /// entries (each will get a real request id and a failure frame)
@@ -92,6 +99,12 @@ pub enum Request {
     SetDefault { name: String, version: Option<u32>, token: Option<String> },
     /// Admin: list resident entries with identity + per-model counters.
     ListModels,
+    /// Flat Prometheus-style text exposition of every server, registry,
+    /// and per-lane counter/gauge/histogram.
+    Metrics,
+    /// Drain the sampled-trace ring buffer (all traces, or only those
+    /// served by `model` = an exact `name@version` lane key).
+    TraceDump { model: Option<String> },
 }
 
 /// Server response payload.
@@ -107,6 +120,9 @@ pub enum Response {
         queue_us: f64,
         exec_us: f64,
         batch: usize,
+        /// Span timeline, present only when the request forced tracing
+        /// (`"trace": true`); rendered inline as a `"trace"` object.
+        trace: Option<Box<Trace>>,
     },
     /// One entry per image of a `classify_batch` request (each entry is a
     /// `Classified` or a per-image `Error`).
@@ -140,6 +156,12 @@ pub enum Response {
     /// Acknowledgement of a state-changing admin op, naming the
     /// `name@version` it acted on.
     AdminAck { action: &'static str, model: String },
+    /// `metrics` body: the full text exposition (one `name{labels} value`
+    /// line per sample), shipped as a single JSON string field.
+    Metrics(String),
+    /// `trace_dump` body: the drained traces plus the store's cumulative
+    /// ring-eviction count.
+    Traces { traces: Json, dropped: u64 },
     Error(String),
 }
 
@@ -212,7 +234,11 @@ impl Request {
                     .iter()
                     .map(finite_pixel)
                     .collect::<Result<Vec<_>, String>>()?;
-                Ok(Request::Classify { model, pixels })
+                let trace = match j.get_opt("trace").map_err(|e| e.to_string())? {
+                    Some(t) => t.as_bool().map_err(|e| e.to_string())?,
+                    None => false,
+                };
+                Ok(Request::Classify { model, pixels, trace })
             }
             "classify_batch" => {
                 let arr = j.get("images").and_then(|p| p.as_arr()).map_err(|e| e.to_string())?;
@@ -282,6 +308,10 @@ impl Request {
                 Ok(Request::SetDefault { name: name_field(&j)?, version, token: token_field(&j)? })
             }
             "list_models" => Ok(Request::ListModels),
+            "metrics" => Ok(Request::Metrics),
+            "trace_dump" => {
+                Ok(Request::TraceDump { model: (!model.is_empty()).then(|| model.clone()) })
+            }
             other => Err(format!("unknown op {other:?}")),
         }
     }
@@ -291,7 +321,16 @@ impl Response {
     fn to_json_obj(&self) -> JsonObj {
         let mut obj = JsonObj::new();
         match self {
-            Response::Classified { model, class, label, logits, queue_us, exec_us, batch } => {
+            Response::Classified {
+                model,
+                class,
+                label,
+                logits,
+                queue_us,
+                exec_us,
+                batch,
+                trace,
+            } => {
                 obj.insert("ok", Json::Bool(true));
                 obj.insert("model", Json::from(model.as_str()));
                 obj.insert("class", Json::from(*class));
@@ -303,6 +342,9 @@ impl Response {
                 obj.insert("queue_us", Json::from(*queue_us));
                 obj.insert("exec_us", Json::from(*exec_us));
                 obj.insert("batch", Json::from(*batch));
+                if let Some(t) = trace {
+                    obj.insert("trace", t.to_json());
+                }
             }
             Response::Batch(items) => {
                 obj.insert("ok", Json::Bool(true));
@@ -366,6 +408,15 @@ impl Response {
                 obj.insert("action", Json::from(*action));
                 obj.insert("model", Json::from(model.as_str()));
             }
+            Response::Metrics(text) => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("metrics", Json::from(text.as_str()));
+            }
+            Response::Traces { traces, dropped } => {
+                obj.insert("ok", Json::Bool(true));
+                obj.insert("traces", traces.clone());
+                obj.insert("dropped", Json::from(*dropped as usize));
+            }
             Response::Error(msg) => {
                 obj.insert("ok", Json::Bool(false));
                 obj.insert("error", Json::from(msg.as_str()));
@@ -393,12 +444,36 @@ mod tests {
     fn parse_classify_pixels() {
         let r = Request::parse(r#"{"op":"classify","pixels":[0.5, 1.0]}"#).unwrap();
         match r {
-            Request::Classify { model, pixels } => {
+            Request::Classify { model, pixels, trace } => {
                 assert_eq!(model, "");
                 assert_eq!(pixels, vec![0.5, 1.0]);
+                assert!(!trace, "tracing is opt-in per request");
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parse_classify_trace_flag() {
+        let r = Request::parse(r#"{"op":"classify","pixels":[0.5],"trace":true}"#).unwrap();
+        assert!(matches!(r, Request::Classify { trace: true, .. }));
+        let r = Request::parse(r#"{"op":"classify","pixels":[0.5],"trace":false}"#).unwrap();
+        assert!(matches!(r, Request::Classify { trace: false, .. }));
+        // a non-boolean trace flag is malformed, not silently ignored
+        assert!(Request::parse(r#"{"op":"classify","pixels":[0.5],"trace":1}"#).is_err());
+    }
+
+    #[test]
+    fn parse_metrics_and_trace_dump_ops() {
+        assert_eq!(Request::parse(r#"{"op":"metrics"}"#).unwrap(), Request::Metrics);
+        assert_eq!(
+            Request::parse(r#"{"op":"trace_dump"}"#).unwrap(),
+            Request::TraceDump { model: None }
+        );
+        assert_eq!(
+            Request::parse(r#"{"op":"trace_dump","model":"bcnn@2"}"#).unwrap(),
+            Request::TraceDump { model: Some("bcnn@2".into()) }
+        );
     }
 
     #[test]
@@ -560,6 +635,7 @@ mod tests {
                 queue_us: 1.0,
                 exec_us: 2.0,
                 batch: 4,
+                trace: None,
             }),
         };
         let j = Json::parse(&ok.to_json_line()).unwrap();
@@ -620,6 +696,7 @@ mod tests {
                 queue_us: 1.0,
                 exec_us: 2.0,
                 batch: 2,
+                trace: None,
             },
             Response::Error("bad image".into()),
         ]);
@@ -642,6 +719,7 @@ mod tests {
             queue_us: 11.5,
             exec_us: 820.0,
             batch: 1,
+            trace: None,
         };
         let line = r.to_json_line();
         let j = Json::parse(&line).unwrap();
@@ -650,6 +728,49 @@ mod tests {
         assert_eq!(j.get("class").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("label").unwrap().as_str().unwrap(), "truck");
         assert_eq!(j.get("logits").unwrap().as_arr().unwrap().len(), 4);
+        // no trace → no "trace" key on the wire
+        assert!(j.get_opt("trace").unwrap().is_none());
+    }
+
+    #[test]
+    fn classified_renders_an_inline_trace_when_forced() {
+        let mut t = Trace::begin();
+        t.id = 7;
+        t.model = "bcnn@1".into();
+        t.push("parsed", 1_000);
+        t.push("logits", 5_000);
+        let r = Response::Classified {
+            model: "bcnn@1".into(),
+            class: 0,
+            label: "bus".into(),
+            logits: vec![1.0],
+            queue_us: 1.0,
+            exec_us: 2.0,
+            batch: 1,
+            trace: Some(Box::new(t)),
+        };
+        let j = Json::parse(&r.to_json_line()).unwrap();
+        let trace = j.get("trace").unwrap();
+        assert_eq!(trace.get("id").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(trace.get("model").unwrap().as_str().unwrap(), "bcnn@1");
+        let spans = trace.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].get("label").unwrap().as_str().unwrap(), "parsed");
+        assert_eq!(spans[1].get("us").unwrap().as_f64().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn metrics_and_traces_response_shapes() {
+        let m = Response::Metrics("bcnn_uptime_seconds 1\nbcnn_live_sessions 0\n".into());
+        let j = Json::parse(&m.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("metrics").unwrap().as_str().unwrap().contains("bcnn_uptime_seconds"));
+
+        let t = Response::Traces { traces: Json::Arr(vec![]), dropped: 3 };
+        let j = Json::parse(&t.to_json_line()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(j.get("traces").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

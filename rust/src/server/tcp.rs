@@ -6,13 +6,15 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::protocol::{Request, Response, StreamStatus};
+use crate::coordinator::InferBackend;
 use crate::dataset::synth;
 use crate::registry::ModelRegistry;
 use crate::util::json::{Json, JsonObj};
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace::{event, Trace, TraceSampler, TraceStore};
 
 /// Hard cap on one protocol line.  The largest legitimate request is a
 /// `classify_batch` of `protocol::MAX_BATCH_IMAGES` (= 64) images; at a
@@ -73,6 +75,9 @@ pub const DEFAULT_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 struct ServerCounters {
     /// Sessions accepted over the server's lifetime.
     sessions: AtomicU64,
+    /// Sessions currently open (a gauge: incremented at accept,
+    /// decremented when the session thread returns).
+    live_sessions: AtomicU64,
     /// Sessions disconnected because a response write sat blocked past
     /// the write deadline (stalled client).
     write_timeouts: AtomicU64,
@@ -85,6 +90,10 @@ impl ServerCounters {
     fn snapshot(&self) -> Json {
         let mut obj = JsonObj::new();
         obj.insert("sessions", Json::from(self.sessions.load(Ordering::Relaxed) as usize));
+        obj.insert(
+            "live_sessions",
+            Json::from(self.live_sessions.load(Ordering::Relaxed) as usize),
+        );
         obj.insert(
             "write_timeouts",
             Json::from(self.write_timeouts.load(Ordering::Relaxed) as usize),
@@ -104,6 +113,54 @@ fn is_write_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
 }
 
+/// Every metric family the `metrics` op's exposition can emit.  The
+/// golden test pins the exposition to exactly this set, and
+/// `scripts/check_invariants.py` (rule E) requires every name here to
+/// appear in the ARCHITECTURE.md metric inventory table.
+pub const METRIC_NAMES: &[&str] = &[
+    "bcnn_uptime_seconds",
+    "bcnn_sessions_total",
+    "bcnn_live_sessions",
+    "bcnn_write_timeouts_total",
+    "bcnn_admin_denied_total",
+    "bcnn_stats_seq",
+    "bcnn_trace_buffer_len",
+    "bcnn_traces_dropped_total",
+    "bcnn_journal_events_total",
+    "bcnn_journal_dropped_total",
+    "bcnn_model_loads_total",
+    "bcnn_model_load_failures_total",
+    "bcnn_verify_failures_total",
+    "bcnn_rewrite_fallbacks_total",
+    "bcnn_default_swaps_total",
+    "bcnn_model_evictions_total",
+    "bcnn_route_version",
+    "bcnn_requests_submitted_total",
+    "bcnn_requests_rejected_total",
+    "bcnn_requests_completed_total",
+    "bcnn_requests_failed_total",
+    "bcnn_batches_total",
+    "bcnn_mean_batch_size",
+    "bcnn_streams_total",
+    "bcnn_stream_frames_total",
+    "bcnn_queue_depth",
+    "bcnn_queue_capacity",
+    "bcnn_latency_count",
+    "bcnn_latency_us",
+    "bcnn_scratch_arenas",
+    "bcnn_scratch_peak_bytes",
+];
+
+/// Append one `name{labels} value` exposition line.
+fn push_sample(out: &mut String, name: &str, labels: &str, value: f64) {
+    use std::fmt::Write as _;
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {value}");
+    } else {
+        let _ = writeln!(out, "{name}{{{labels}}} {value}");
+    }
+}
+
 /// The serving front end.
 pub struct Server {
     registry: Arc<ModelRegistry>,
@@ -115,6 +172,17 @@ pub struct Server {
     /// `"token"`; read-only ops stay open.
     admin_token: Option<String>,
     counters: ServerCounters,
+    /// Server start instant (`uptime_s` in `stats`, `bcnn_uptime_seconds`
+    /// in the metrics exposition).
+    started: Instant,
+    /// Monotonic snapshot sequence: every `stats` reply carries the next
+    /// number, so a scraper can order snapshots it collected out of band.
+    stats_seq: AtomicU64,
+    /// Deterministic 1-in-N sampler for classify-family requests
+    /// (`serve --trace-sample N`; 0 = off, the zero-allocation default).
+    sampler: TraceSampler,
+    /// Ring buffer of captured traces, drained by the `trace_dump` op.
+    traces: TraceStore,
 }
 
 impl Server {
@@ -126,7 +194,19 @@ impl Server {
             write_timeout: Some(DEFAULT_WRITE_TIMEOUT),
             admin_token: None,
             counters: ServerCounters::default(),
+            started: Instant::now(),
+            stats_seq: AtomicU64::new(0),
+            sampler: TraceSampler::new(0),
+            traces: TraceStore::new(TraceStore::DEFAULT_CAPACITY),
         }
+    }
+
+    /// Trace one in `every` classify-family requests (`0` disables
+    /// sampling — the default; forced `"trace": true` requests are
+    /// always captured regardless).
+    pub fn with_trace_sample(mut self, every: u64) -> Self {
+        self.sampler = TraceSampler::new(every);
+        self
     }
 
     /// Override the per-session write deadline (`None` disables it —
@@ -188,12 +268,18 @@ impl Server {
             Request::Variants => Response::Variants(self.registry.router().variants()),
             Request::Stats => {
                 let mut obj = JsonObj::new();
+                obj.insert("uptime_s", Json::from(self.started.elapsed().as_secs_f64()));
+                obj.insert(
+                    "seq",
+                    Json::from(self.stats_seq.fetch_add(1, Ordering::Relaxed) as usize),
+                );
                 obj.insert("lanes", self.registry.router().stats());
                 obj.insert("registry", self.registry.counters_json());
                 obj.insert("server", self.counters.snapshot());
+                obj.insert("journal", self.registry.journal().to_json());
                 Response::Stats(Json::Obj(obj))
             }
-            Request::Classify { model, pixels } => self.classify(&model, pixels),
+            Request::Classify { model, pixels, .. } => self.classify(&model, pixels, None),
             Request::ClassifyBatch { model, images } => self.classify_batch(&model, images),
             Request::ClassifyBatchStream { .. } => Response::Error(
                 "classify_batch_stream emits multiple frames; use a streaming transport \
@@ -202,7 +288,7 @@ impl Server {
             ),
             Request::ClassifySynth { model, index } => {
                 let sample = synth::render_vehicle(index, self.synth_seed);
-                self.classify(&model, sample.image)
+                self.classify(&model, sample.image, None)
             }
             Request::LoadModel { name, version, token } => {
                 if let Some(denied) = self.check_admin_token(&token) {
@@ -235,6 +321,29 @@ impl Server {
                 models: self.registry.list_models(),
                 registry: self.registry.counters_json(),
             },
+            Request::Metrics => Response::Metrics(self.render_metrics()),
+            Request::TraceDump { model } => {
+                let drained = self.traces.drain(model.as_deref());
+                Response::Traces {
+                    traces: Json::Arr(drained.iter().map(Trace::to_json).collect()),
+                    dropped: self.traces.dropped(),
+                }
+            }
+        }
+    }
+
+    /// [`Server::handle`] with a pre-started trace attached to the
+    /// classify-family ops; other ops ignore the trace.  The returned
+    /// `Classified` carries the completed trace back (the session layer
+    /// decides whether it is echoed inline, stored, or both).
+    fn handle_traced(&self, req: Request, trace: Option<Box<Trace>>) -> Response {
+        match req {
+            Request::Classify { model, pixels, .. } => self.classify(&model, pixels, trace),
+            Request::ClassifySynth { model, index } => {
+                let sample = synth::render_vehicle(index, self.synth_seed);
+                self.classify(&model, sample.image, trace)
+            }
+            other => self.handle(other),
         }
     }
 
@@ -258,15 +367,16 @@ impl Server {
             queue_us: resp.queue_time.as_nanos() as f64 / 1_000.0,
             exec_us: resp.exec_time.as_nanos() as f64 / 1_000.0,
             batch: resp.batch_size,
+            trace: resp.trace,
         }
     }
 
-    fn classify(&self, model: &str, pixels: Vec<f32>) -> Response {
+    fn classify(&self, model: &str, pixels: Vec<f32>, trace: Option<Box<Trace>>) -> Response {
         let lane = match self.registry.resolve(model) {
             Ok(lane) => lane,
             Err(e) => return Response::Error(e.to_string()),
         };
-        match self.registry.router().infer_blocking(&lane, pixels) {
+        match self.registry.router().infer_blocking_traced(&lane, pixels, trace) {
             Ok(resp) => self.render(&lane, resp),
             Err(e) => Response::Error(e.to_string()),
         }
@@ -296,6 +406,110 @@ impl Server {
             .map(|resp| self.render(&lane, resp))
             .collect();
         Response::Batch(items)
+    }
+
+    /// Build the `metrics` op's flat text exposition: one
+    /// `name{labels} value` line per sample, families exactly
+    /// [`METRIC_NAMES`].  Reading is lock-light — every source is an
+    /// atomic, a leaf mutex, or an existing snapshot call.
+    fn render_metrics(&self) -> String {
+        let mut out = String::new();
+        // server-wide gauges and counters
+        push_sample(&mut out, "bcnn_uptime_seconds", "", self.started.elapsed().as_secs_f64());
+        let c = &self.counters;
+        push_sample(&mut out, "bcnn_sessions_total", "", c.sessions.load(Ordering::Relaxed) as f64);
+        push_sample(
+            &mut out,
+            "bcnn_live_sessions",
+            "",
+            c.live_sessions.load(Ordering::Relaxed) as f64,
+        );
+        push_sample(
+            &mut out,
+            "bcnn_write_timeouts_total",
+            "",
+            c.write_timeouts.load(Ordering::Relaxed) as f64,
+        );
+        push_sample(
+            &mut out,
+            "bcnn_admin_denied_total",
+            "",
+            c.admin_denied.load(Ordering::Relaxed) as f64,
+        );
+        push_sample(&mut out, "bcnn_stats_seq", "", self.stats_seq.load(Ordering::Relaxed) as f64);
+        push_sample(&mut out, "bcnn_trace_buffer_len", "", self.traces.len() as f64);
+        push_sample(&mut out, "bcnn_traces_dropped_total", "", self.traces.dropped() as f64);
+        let journal = self.registry.journal();
+        push_sample(&mut out, "bcnn_journal_events_total", "", journal.total() as f64);
+        push_sample(&mut out, "bcnn_journal_dropped_total", "", journal.dropped() as f64);
+        // registry lifecycle counters + the route-snapshot version gauge
+        let reg = self.registry.counters_json();
+        let reg_counter = |key: &str| reg.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        push_sample(&mut out, "bcnn_model_loads_total", "", reg_counter("loads"));
+        push_sample(&mut out, "bcnn_model_load_failures_total", "", reg_counter("load_failures"));
+        push_sample(&mut out, "bcnn_verify_failures_total", "", reg_counter("verify_failures"));
+        push_sample(
+            &mut out,
+            "bcnn_rewrite_fallbacks_total",
+            "",
+            reg_counter("rewrite_fallbacks"),
+        );
+        push_sample(&mut out, "bcnn_default_swaps_total", "", reg_counter("swaps"));
+        push_sample(&mut out, "bcnn_model_evictions_total", "", reg_counter("evictions"));
+        push_sample(&mut out, "bcnn_route_version", "", self.registry.route_version() as f64);
+        // per-lane traffic, latency quantiles, queue depth, scratch pool
+        let router = self.registry.router();
+        for lane in router.variants() {
+            let label = format!("lane=\"{lane}\"");
+            if let Ok(m) = router.metrics(&lane) {
+                let snap = m.snapshot();
+                let field = |key: &str| snap.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                push_sample(&mut out, "bcnn_requests_submitted_total", &label, field("submitted"));
+                push_sample(&mut out, "bcnn_requests_rejected_total", &label, field("rejected"));
+                push_sample(&mut out, "bcnn_requests_completed_total", &label, field("completed"));
+                push_sample(&mut out, "bcnn_requests_failed_total", &label, field("failed"));
+                push_sample(&mut out, "bcnn_batches_total", &label, field("batches"));
+                push_sample(&mut out, "bcnn_mean_batch_size", &label, field("mean_batch_size"));
+                push_sample(&mut out, "bcnn_streams_total", &label, field("streams"));
+                push_sample(&mut out, "bcnn_stream_frames_total", &label, field("stream_frames"));
+                for stage in ["queue", "exec", "e2e"] {
+                    let Ok(h) = snap.get(&format!("{stage}_us")) else { continue };
+                    let hf = |key: &str| h.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    push_sample(
+                        &mut out,
+                        "bcnn_latency_count",
+                        &format!("{label},stage=\"{stage}\""),
+                        hf("count"),
+                    );
+                    for q in ["p50", "p95", "p99"] {
+                        push_sample(
+                            &mut out,
+                            "bcnn_latency_us",
+                            &format!("{label},stage=\"{stage}\",quantile=\"{q}\""),
+                            hf(q),
+                        );
+                    }
+                }
+            }
+            if let Ok((depth, cap)) = router.queue_depth(&lane) {
+                push_sample(&mut out, "bcnn_queue_depth", &label, depth as f64);
+                push_sample(&mut out, "bcnn_queue_capacity", &label, cap as f64);
+            }
+            if let Ok(backend) = router.lane_backend(&lane) {
+                if let Some(pool) = backend.pool_stats() {
+                    push_sample(&mut out, "bcnn_scratch_arenas", &label, pool.arenas as f64);
+                    for (class, bytes) in ["f32", "u32", "i32"].iter().zip(pool.peak_bytes) {
+                        push_sample(
+                            &mut out,
+                            "bcnn_scratch_peak_bytes",
+                            &format!("{label},class=\"{class}\""),
+                            bytes as f64,
+                        );
+                    }
+                }
+            }
+        }
+        out
     }
 
     /// The `classify_batch_stream` engine: submit the whole group onto
@@ -446,6 +660,10 @@ impl Server {
             Err(e) => {
                 if is_write_timeout(&e) {
                     self.counters.write_timeouts.fetch_add(1, Ordering::Relaxed);
+                    self.registry.journal().log(
+                        event::WRITE_TIMEOUT,
+                        "session disconnected: response write exceeded the deadline",
+                    );
                 }
                 false
             }
@@ -454,6 +672,12 @@ impl Server {
 
     fn session(&self, stream: TcpStream) {
         self.counters.sessions.fetch_add(1, Ordering::Relaxed);
+        self.counters.live_sessions.fetch_add(1, Ordering::Relaxed);
+        self.session_loop(stream);
+        self.counters.live_sessions.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn session_loop(&self, stream: TcpStream) {
         // the write deadline bounds how long a stalled client can pin
         // this session thread (docs/PROTOCOL.md "Backpressure"); reads
         // stay deadline-free — an idle-but-healthy session is fine
@@ -465,12 +689,18 @@ impl Server {
         let mut reader = BufReader::new(stream);
         let mut buf = Vec::new();
         loop {
+            // completed trace awaiting its terminal "written" span; pushed
+            // to the store only after the response actually went out
+            let mut stored_trace: Option<Box<Trace>> = None;
             let resp = match read_line_bounded(&mut reader, &mut buf) {
                 Ok(None) | Err(_) => break, // EOF or dead socket
                 Ok(Some(Err(()))) => {
                     Response::Error(format!("request line exceeds {MAX_LINE_BYTES} bytes"))
                 }
                 Ok(Some(Ok(()))) => {
+                    // trace zero point sits BEFORE parsing, so the
+                    // "parsed" span prices the parse itself
+                    let received = Instant::now();
                     // invalid UTF-8 (e.g. binary garbage) must produce a
                     // protocol error, not kill the session
                     let parsed = {
@@ -498,13 +728,42 @@ impl Server {
                             buf.shrink_to(64 * 1024);
                             continue;
                         }
-                        Ok(req) => self.handle(req),
+                        Ok(req) => {
+                            let forced = matches!(req, Request::Classify { trace: true, .. });
+                            let eligible = matches!(
+                                req,
+                                Request::Classify { .. } | Request::ClassifySynth { .. }
+                            );
+                            if forced
+                                || (eligible && self.sampler.enabled() && self.sampler.sample())
+                            {
+                                let mut t = Box::new(Trace::begin_at(received));
+                                t.mark("parsed");
+                                let mut resp = self.handle_traced(req, Some(t));
+                                if let Response::Classified { trace, .. } = &mut resp {
+                                    // sampled-only traces go to the store
+                                    // without bloating the response; forced
+                                    // ones are echoed inline AND stored
+                                    stored_trace =
+                                        if forced { trace.clone() } else { trace.take() };
+                                }
+                                resp
+                            } else {
+                                self.handle(req)
+                            }
+                        }
                         Err(e) => Response::Error(e),
                     }
                 }
             };
             if !self.write_frame(&mut writer, &resp) {
                 break;
+            }
+            if let Some(mut t) = stored_trace.take() {
+                // the stored copy alone carries the "written" span — the
+                // inline echo was serialized before the write finished
+                t.mark("written");
+                self.traces.push(*t);
             }
             // a maximal request mustn't pin tens of MB for an idle session
             buf.shrink_to(64 * 1024);
@@ -737,6 +996,104 @@ mod tests {
                 assert!(stats.get("registry").unwrap().get("loads").is_ok());
                 let server = stats.get("server").unwrap();
                 assert_eq!(server.get("write_timeouts").unwrap().as_usize().unwrap(), 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_carry_uptime_seq_and_journal() {
+        let s = test_server();
+        match s.handle(Request::Stats) {
+            Response::Stats(stats) => {
+                assert!(stats.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+                assert_eq!(stats.get("seq").unwrap().as_usize().unwrap(), 0);
+                let journal = stats.get("journal").unwrap();
+                // the publication of bcnn_rgb@1 is already journaled
+                assert!(journal.get("next_seq").unwrap().as_f64().unwrap() >= 1.0);
+                let events = journal.get("events").unwrap().as_arr().unwrap();
+                assert!(events
+                    .iter()
+                    .any(|e| e.get("kind").unwrap().as_str().unwrap() == "model_load"));
+            }
+            other => panic!("{other:?}"),
+        }
+        // the snapshot sequence is monotonic across stats calls
+        match s.handle(Request::Stats) {
+            Response::Stats(stats) => {
+                assert_eq!(stats.get("seq").unwrap().as_usize().unwrap(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_exposition_is_golden_against_metric_names() {
+        let s = test_server();
+        s.handle(Request::ClassifySynth { model: "".into(), index: 1 });
+        let text = match s.handle(Request::Metrics) {
+            Response::Metrics(text) => text,
+            other => panic!("{other:?}"),
+        };
+        // every emitted family is declared...
+        let mut seen = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            let name = line.split(|c: char| c == '{' || c == ' ').next().unwrap();
+            assert!(METRIC_NAMES.contains(&name), "undeclared metric family {name:?}");
+            seen.insert(name.to_string());
+        }
+        // ...and every declared family is emitted
+        for name in METRIC_NAMES {
+            assert!(seen.contains(*name), "declared family {name} missing from exposition");
+        }
+        // spot-check shapes: an exact counter line and a labelled quantile
+        assert!(
+            text.contains("bcnn_requests_completed_total{lane=\"bcnn_rgb@1\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("bcnn_latency_us{lane=\"bcnn_rgb@1\",stage=\"e2e\",quantile=\"p95\"}"),
+            "{text}"
+        );
+        assert!(text.contains("bcnn_scratch_peak_bytes{lane=\"bcnn_rgb@1\",class=\"u32\"}"));
+    }
+
+    #[test]
+    fn handle_traced_returns_a_full_monotone_span_timeline() {
+        let s = test_server();
+        let mut t = Box::new(crate::util::trace::Trace::begin());
+        t.mark("parsed");
+        let pixels = vec![0.5f32; 96 * 96 * 3];
+        let resp =
+            s.handle_traced(Request::Classify { model: "".into(), pixels, trace: true }, Some(t));
+        match resp {
+            Response::Classified { trace: Some(t), .. } => {
+                assert_eq!(t.model, "bcnn_rgb@1");
+                assert!(t.id > 0, "router assigned a real request id");
+                let labels: Vec<&str> = t.spans().iter().map(|(l, _)| l.as_str()).collect();
+                assert_eq!(&labels[..4], &["parsed", "admitted", "enqueued", "batch_formed"]);
+                assert_eq!(*labels.last().unwrap(), "logits");
+                assert!(labels.iter().any(|l| l.starts_with("exec:")), "{labels:?}");
+                let offs: Vec<u64> = t.spans().iter().map(|(_, o)| *o).collect();
+                assert!(offs.windows(2).all(|w| w[0] <= w[1]), "{offs:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // the untraced path answers with no trace attached
+        let pixels = vec![0.5f32; 96 * 96 * 3];
+        match s.handle(Request::Classify { model: "".into(), pixels, trace: false }) {
+            Response::Classified { trace, .. } => assert!(trace.is_none()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn trace_dump_on_an_idle_server_is_empty() {
+        let s = test_server();
+        match s.handle(Request::TraceDump { model: None }) {
+            Response::Traces { traces, dropped } => {
+                assert_eq!(traces.as_arr().unwrap().len(), 0);
+                assert_eq!(dropped, 0);
             }
             other => panic!("{other:?}"),
         }

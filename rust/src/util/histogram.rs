@@ -67,6 +67,11 @@ impl Histogram {
         self.total
     }
 
+    /// Sum of all recorded values in ns (exact, not bucketed).
+    pub fn sum_ns(&self) -> f64 {
+        self.sum_ns
+    }
+
     pub fn mean_ns(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -101,10 +106,35 @@ impl Histogram {
         self.max_ns as f64
     }
 
+    /// Fold `other` into `self`.  Histograms with identical bucket
+    /// parameters merge bucket-by-bucket; anything else is rebucketed
+    /// through `self`'s geometry (each foreign bucket lands at its
+    /// geometric midpoint, saturating into `self`'s edge buckets when it
+    /// falls outside the covered range).  Merging an empty histogram is
+    /// always a no-op — never a panic, whatever the parameters.
     pub fn merge(&mut self, other: &Histogram) {
-        assert_eq!(self.counts.len(), other.counts.len());
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
+        if other.total == 0 {
+            return;
+        }
+        let same_shape = self.counts.len() == other.counts.len()
+            && self.base == other.base
+            && self.growth == other.growth;
+        if same_shape {
+            for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += b;
+            }
+        } else {
+            for (i, &c) in other.counts.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                let mid = other.bucket_edge(i) * other.growth.sqrt();
+                let ns = if mid.is_finite() && mid >= 0.0 { mid as u64 } else { u64::MAX };
+                // bucket_for clamps, so out-of-range mass saturates into
+                // self's first/last bucket instead of being dropped
+                let b = self.bucket_for(ns);
+                self.counts[b] += c;
+            }
         }
         self.total += other.total;
         self.sum_ns += other.sum_ns;
@@ -167,6 +197,55 @@ mod tests {
         assert_eq!(a.count(), 2);
         assert_eq!(a.min_ns(), 1_000);
         assert_eq!(a.max_ns(), 9_000);
+    }
+
+    #[test]
+    fn merging_an_empty_histogram_is_a_noop_even_across_params() {
+        let mut a = Histogram::new();
+        a.record(5_000);
+        let empty = Histogram::with_params(1.0, 2.0, 8);
+        a.merge(&empty); // must not panic, must not disturb a
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min_ns(), 5_000);
+        assert_eq!(a.max_ns(), 5_000);
+
+        let mut b = Histogram::with_params(1.0, 2.0, 8);
+        let mut filled = Histogram::new();
+        filled.record(40);
+        b.merge(&filled); // empty self absorbing a foreign-shaped other
+        assert_eq!(b.count(), 1);
+    }
+
+    #[test]
+    fn merging_differently_parameterized_histograms_rebuckets() {
+        let mut a = Histogram::new();
+        a.record(1_000);
+        let mut b = Histogram::with_params(10.0, 1.5, 40);
+        for v in [2_000u64, 4_000, 8_000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.min_ns(), 1_000);
+        assert_eq!(a.max_ns(), 8_000);
+        // quantiles stay plausible after rebucketing: the median of
+        // {1k, 2k, 4k, 8k} under ~50% bucket error is well inside 1k..8k
+        let p50 = a.quantile_ns(0.5);
+        assert!((1_000.0..=8_000.0).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn merge_saturates_foreign_mass_into_edge_buckets() {
+        // a covers 100ns..~215ns in 10 buckets; b's values land far
+        // outside on both sides and must saturate, never panic or drop
+        let mut a = Histogram::with_params(100.0, 1.08, 10);
+        let mut b = Histogram::new();
+        b.record(1);
+        b.record(10_000_000_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min_ns(), 1);
+        assert_eq!(a.max_ns(), 10_000_000_000);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Per-request span tracing, the sampled-trace ring buffer, and the
+//! bounded structured event journal.
+//!
+//! A [`Trace`] is a monotone timeline of named stage spans for one
+//! request (`parsed → admitted → enqueued → batch_formed →
+//! exec:<step> → logits → written`).  Each span records the offset in
+//! nanoseconds from the trace's start at which that stage *ended*, so
+//! the gap between consecutive offsets is the stage's duration and the
+//! timeline is gap-accounted by construction.
+//!
+//! Tracing is opt-in per request: the server carries traces as
+//! `Option<Box<Trace>>` through the coordinator, so the unsampled
+//! steady-state path stays `None` end to end and allocates nothing.
+//! Sampling is deterministic 1-in-N ([`TraceSampler`]); captured traces
+//! land in a fixed-capacity ring ([`TraceStore`]) drained by the
+//! `trace_dump` protocol op.
+//!
+//! All mutexes in this module are leaves: nothing else is ever locked
+//! while one is held, so they sit outside the `util::lockorder` ranks.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{Json, JsonObj};
+
+/// One request's stage timeline: `(label, end-offset-ns)` pairs,
+/// monotone in offset.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    start: Instant,
+    /// Coordinator request id (0 until the router assigns one).
+    pub id: u64,
+    /// Resolved lane key (`name@version`), set at admission.
+    pub model: String,
+    spans: Vec<(String, u64)>,
+}
+
+impl Trace {
+    /// Start a trace whose zero point is `start` (capture the instant
+    /// *before* parsing so the `parsed` span covers parse time).
+    pub fn begin_at(start: Instant) -> Self {
+        Self { start, id: 0, model: String::new(), spans: Vec::new() }
+    }
+
+    /// Start a trace at the current instant.
+    pub fn begin() -> Self {
+        Self::begin_at(Instant::now())
+    }
+
+    /// Nanoseconds from the trace start to `at` (saturating at 0).
+    pub fn offset_ns(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.start).as_nanos() as u64
+    }
+
+    /// Close the span `label` at offset `off_ns`, clamped so offsets
+    /// never run backwards.
+    pub fn push(&mut self, label: impl Into<String>, off_ns: u64) {
+        let floor = self.spans.last().map(|(_, o)| *o).unwrap_or(0);
+        self.spans.push((label.into(), off_ns.max(floor)));
+    }
+
+    /// Close the span `label` now.
+    pub fn mark(&mut self, label: impl Into<String>) {
+        let off = self.offset_ns(Instant::now());
+        self.push(label, off);
+    }
+
+    /// The recorded `(label, end-offset-ns)` spans, in order.
+    pub fn spans(&self) -> &[(String, u64)] {
+        &self.spans
+    }
+
+    /// End offset of the last span (the traced total), in ns.
+    pub fn total_ns(&self) -> u64 {
+        self.spans.last().map(|(_, o)| *o).unwrap_or(0)
+    }
+
+    /// Render as `{"id", "model", "total_us", "spans": [{"label",
+    /// "us"}...]}` — offsets in microseconds to match the wire's
+    /// `queue_us`/`exec_us` convention.
+    pub fn to_json(&self) -> Json {
+        let mut obj = JsonObj::new();
+        obj.insert("id", Json::Num(self.id as f64));
+        obj.insert("model", Json::from(self.model.as_str()));
+        obj.insert("total_us", Json::Num(self.total_ns() as f64 / 1_000.0));
+        let spans = self
+            .spans
+            .iter()
+            .map(|(label, off)| {
+                let mut s = JsonObj::new();
+                s.insert("label", Json::from(label.as_str()));
+                s.insert("us", Json::Num(*off as f64 / 1_000.0));
+                Json::Obj(s)
+            })
+            .collect();
+        obj.insert("spans", Json::Arr(spans));
+        Json::Obj(obj)
+    }
+}
+
+/// Deterministic 1-in-N request sampler.  `every == 0` disables
+/// sampling entirely (the steady-state default); `every == 1` traces
+/// every request.  The first request is always sampled when enabled,
+/// so `--trace-sample N` yields requests `0, N, 2N, ...`.
+#[derive(Debug)]
+pub struct TraceSampler {
+    every: u64,
+    counter: AtomicU64,
+}
+
+impl TraceSampler {
+    pub fn new(every: u64) -> Self {
+        Self { every, counter: AtomicU64::new(0) }
+    }
+
+    /// Whether sampling is enabled at all (cheap pre-check: when this
+    /// is false, callers skip even the counter increment).
+    pub fn enabled(&self) -> bool {
+        self.every != 0
+    }
+
+    /// Count one eligible request and decide whether to trace it.
+    pub fn sample(&self) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        self.counter.fetch_add(1, Ordering::Relaxed) % self.every == 0
+    }
+}
+
+/// Fixed-capacity ring buffer of completed traces.  Pushing beyond
+/// capacity evicts the oldest trace and counts it as dropped.
+#[derive(Debug)]
+pub struct TraceStore {
+    inner: Mutex<StoreInner>,
+    cap: usize,
+}
+
+#[derive(Debug)]
+struct StoreInner {
+    traces: VecDeque<Trace>,
+    dropped: u64,
+}
+
+impl TraceStore {
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(StoreInner { traces: VecDeque::new(), dropped: 0 }),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn push(&self, trace: Trace) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.traces.len() == self.cap {
+            inner.traces.pop_front();
+            inner.dropped += 1;
+        }
+        inner.traces.push_back(trace);
+    }
+
+    /// Number of traces currently buffered.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().traces.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Traces evicted by ring overflow since startup.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Drain buffered traces (all of them, or only those whose model
+    /// matches `filter`), oldest first.  Drained traces leave the ring.
+    pub fn drain(&self, filter: Option<&str>) -> Vec<Trace> {
+        let mut inner = self.inner.lock().unwrap();
+        match filter {
+            None => inner.traces.drain(..).collect(),
+            Some(model) => {
+                let mut kept = VecDeque::new();
+                let mut out = Vec::new();
+                for t in inner.traces.drain(..) {
+                    if t.model == model {
+                        out.push(t);
+                    } else {
+                        kept.push_back(t);
+                    }
+                }
+                inner.traces = kept;
+                out
+            }
+        }
+    }
+}
+
+/// Journal event kinds — a closed set so operators can filter on them.
+pub mod event {
+    pub const MODEL_LOAD: &str = "model_load";
+    pub const MODEL_LOAD_FAILED: &str = "model_load_failed";
+    pub const MODEL_RETIRE: &str = "model_retire";
+    pub const VERIFY_FAILED: &str = "verify_failed";
+    pub const REWRITE_FALLBACK: &str = "rewrite_fallback";
+    pub const ROUTE_SWAP: &str = "route_swap";
+    pub const WRITE_TIMEOUT: &str = "write_timeout";
+}
+
+/// Bounded structured event journal with monotonic sequence numbers.
+/// Old events are evicted (and counted) when the ring fills; `next_seq`
+/// never resets, so gaps in drained sequences are detectable.
+#[derive(Debug)]
+pub struct Journal {
+    inner: Mutex<JournalInner>,
+    cap: usize,
+}
+
+#[derive(Debug)]
+struct JournalInner {
+    events: VecDeque<(u64, String, String)>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl Journal {
+    pub const DEFAULT_CAPACITY: usize = 256;
+
+    pub fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(JournalInner {
+                events: VecDeque::new(),
+                next_seq: 0,
+                dropped: 0,
+            }),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Append an event, returning its sequence number.
+    pub fn log(&self, kind: &str, detail: impl Into<String>) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if inner.events.len() == self.cap {
+            inner.events.pop_front();
+            inner.dropped += 1;
+        }
+        inner.events.push_back((seq, kind.to_string(), detail.into()));
+        seq
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever logged (== the next sequence number).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Events evicted by ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Render as `{"next_seq", "dropped", "events": [{"seq", "kind",
+    /// "detail"}...]}`, oldest first.
+    pub fn to_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut obj = JsonObj::new();
+        obj.insert("next_seq", Json::Num(inner.next_seq as f64));
+        obj.insert("dropped", Json::Num(inner.dropped as f64));
+        let events = inner
+            .events
+            .iter()
+            .map(|(seq, kind, detail)| {
+                let mut e = JsonObj::new();
+                e.insert("seq", Json::Num(*seq as f64));
+                e.insert("kind", Json::from(kind.as_str()));
+                e.insert("detail", Json::from(detail.as_str()));
+                Json::Obj(e)
+            })
+            .collect();
+        obj.insert("events", Json::Arr(events));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn spans_are_monotone_even_with_stale_offsets() {
+        let mut t = Trace::begin();
+        t.push("a", 100);
+        t.push("b", 50); // clamped up to 100
+        t.push("c", 300);
+        let offs: Vec<u64> = t.spans().iter().map(|(_, o)| *o).collect();
+        assert_eq!(offs, vec![100, 100, 300]);
+        assert_eq!(t.total_ns(), 300);
+    }
+
+    #[test]
+    fn trace_json_carries_labels_and_microsecond_offsets() {
+        let mut t = Trace::begin();
+        t.id = 7;
+        t.model = "rgb@1".to_string();
+        t.push("parsed", 2_000);
+        t.push("logits", 10_000);
+        let j = t.to_json();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "rgb@1");
+        assert_eq!(j.get("total_us").unwrap().as_f64().unwrap(), 10.0);
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].get("label").unwrap().as_str().unwrap(), "parsed");
+        assert_eq!(spans[0].get("us").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_one_in_n() {
+        let s = TraceSampler::new(3);
+        let picks: Vec<bool> = (0..9).map(|_| s.sample()).collect();
+        assert_eq!(picks, vec![true, false, false, true, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn sampler_zero_never_samples() {
+        let off = TraceSampler::new(0);
+        assert!(!off.enabled());
+        prop::check(200, |_g| {
+            prop::ensure(!off.sample(), "sampler with N=0 must never sample")
+        });
+    }
+
+    #[test]
+    fn store_ring_evicts_oldest_and_counts_drops() {
+        let store = TraceStore::new(3);
+        for i in 0..5u64 {
+            let mut t = Trace::begin();
+            t.id = i;
+            store.push(t);
+        }
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.dropped(), 2);
+        let drained = store.drain(None);
+        let ids: Vec<u64> = drained.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]); // oldest two evicted
+        assert!(store.is_empty());
+        assert_eq!(store.dropped(), 2, "draining is not dropping");
+    }
+
+    #[test]
+    fn store_drain_filters_by_model_and_keeps_the_rest() {
+        let store = TraceStore::new(8);
+        for (i, model) in ["rgb@1", "lbp@1", "rgb@1"].iter().enumerate() {
+            let mut t = Trace::begin();
+            t.id = i as u64;
+            t.model = model.to_string();
+            store.push(t);
+        }
+        let rgb = store.drain(Some("rgb@1"));
+        assert_eq!(rgb.len(), 2);
+        assert!(rgb.iter().all(|t| t.model == "rgb@1"));
+        assert_eq!(store.len(), 1, "non-matching traces stay buffered");
+        let rest = store.drain(None);
+        assert_eq!(rest[0].model, "lbp@1");
+    }
+
+    #[test]
+    fn journal_sequences_are_monotonic_across_eviction() {
+        let j = Journal::new(2);
+        for i in 0..5 {
+            let seq = j.log(event::MODEL_LOAD, format!("m@{i}"));
+            assert_eq!(seq, i);
+        }
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.total(), 5);
+        assert_eq!(j.dropped(), 3);
+        let json = j.to_json();
+        let events = json.get("events").unwrap().as_arr().unwrap();
+        let seqs: Vec<f64> =
+            events.iter().map(|e| e.get("seq").unwrap().as_f64().unwrap()).collect();
+        assert_eq!(seqs, vec![3.0, 4.0]);
+        assert_eq!(json.get("next_seq").unwrap().as_f64().unwrap(), 5.0);
+    }
+}

@@ -959,3 +959,196 @@ fn pjrt_backend_serves_through_router() {
     }
     router.shutdown();
 }
+
+#[test]
+fn forced_trace_classify_reports_a_monotone_gap_accounted_timeline() {
+    // acceptance (ISSUE 9 tentpole): `"trace": true` on a classify over
+    // a real socket echoes a span timeline whose offsets are monotone,
+    // whose stage set runs parse → admit → queue → batch → per-step
+    // exec → logits, and whose total brackets the lane's own e2e
+    // measurement while fitting inside the client-observed wall time.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use bcnn::util::json::Json;
+
+    let server = Arc::new(Server::new(engine_registry(1), classes()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let img = json_image(&synth_image(3));
+    let req =
+        format!("{{\"op\":\"classify\",\"model\":\"rgb\",\"trace\":true,\"pixels\":{img}}}\n");
+    let started = std::time::Instant::now();
+    conn.write_all(req.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let elapsed_us = started.elapsed().as_micros() as f64;
+
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("ok").unwrap().as_bool().unwrap(), "{line}");
+    let trace = j.get("trace").unwrap();
+    assert_eq!(trace.get("model").unwrap().as_str().unwrap(), "rgb@1", "{line}");
+    assert!(trace.get("id").unwrap().as_usize().unwrap() > 0, "a real coordinator id: {line}");
+    let spans = trace.get("spans").unwrap().as_arr().unwrap();
+    let labels: Vec<&str> =
+        spans.iter().map(|s| s.get("label").unwrap().as_str().unwrap()).collect();
+    assert_eq!(&labels[..4], &["parsed", "admitted", "enqueued", "batch_formed"], "{line}");
+    assert!(labels.iter().any(|l| l.starts_with("exec:")), "per-step exec spans: {line}");
+    assert_eq!(*labels.last().unwrap(), "logits", "the inline echo ends at logits: {line}");
+    // monotone offsets; gap-accounted: the last offset IS the total
+    let offs: Vec<f64> = spans.iter().map(|s| s.get("us").unwrap().as_f64().unwrap()).collect();
+    assert!(offs.windows(2).all(|w| w[0] <= w[1]), "offsets ran backwards: {line}");
+    let total_us = trace.get("total_us").unwrap().as_f64().unwrap();
+    assert!(total_us > 0.0, "{line}");
+    assert_eq!(total_us, *offs.last().unwrap(), "{line}");
+
+    // the trace starts before admission and ends at logits, so its
+    // total must cover the lane's recorded e2e latency (within clock
+    // slack) and fit inside what the client saw on the wire
+    line.clear();
+    conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let stats = Json::parse(&line).unwrap();
+    let e2e_us = stats
+        .get("stats")
+        .unwrap()
+        .get("lanes")
+        .unwrap()
+        .get("rgb@1")
+        .unwrap()
+        .get("e2e_us")
+        .unwrap()
+        .get("mean")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(total_us + 500.0 >= e2e_us, "trace total {total_us}µs < lane e2e {e2e_us}µs");
+    assert!(total_us <= elapsed_us + 500.0, "trace total {total_us}µs > wall {elapsed_us}µs");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn trace_dump_drains_stored_traces_with_written_spans_and_model_filter() {
+    // forced traces are stored as well as echoed; the stored copy gains
+    // the terminal `written` span (stamped after the response hit the
+    // socket), trace_dump's model filter leaves other lanes' traces
+    // buffered, and draining empties the ring.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use bcnn::util::json::Json;
+
+    let server = Arc::new(Server::new(engine_registry(1), classes()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let img = json_image(&synth_image(5));
+    let mut line = String::new();
+    for model in ["rgb", "lbp"] {
+        line.clear();
+        let req = format!(
+            "{{\"op\":\"classify\",\"model\":\"{model}\",\"trace\":true,\"pixels\":{img}}}\n"
+        );
+        conn.write_all(req.as_bytes()).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("label"), "{line}");
+    }
+
+    // the session loop stores each trace after writing its response, so
+    // by the time THIS request is read both traces are buffered
+    line.clear();
+    conn.write_all(b"{\"op\":\"trace_dump\",\"model\":\"lbp@1\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 1, "filter matches exactly the lbp trace: {line}");
+    assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 0, "{line}");
+    assert_eq!(traces[0].get("model").unwrap().as_str().unwrap(), "lbp@1", "{line}");
+    let spans = traces[0].get("spans").unwrap().as_arr().unwrap();
+    let last = spans.last().unwrap().get("label").unwrap().as_str().unwrap();
+    assert_eq!(last, "written", "stored traces carry the write-back span: {line}");
+
+    // the rgb trace stayed buffered through the filtered drain
+    line.clear();
+    conn.write_all(b"{\"op\":\"trace_dump\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    let traces = j.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 1, "{line}");
+    assert_eq!(traces[0].get("model").unwrap().as_str().unwrap(), "rgb@1", "{line}");
+
+    // draining drained: the ring is now empty
+    line.clear();
+    conn.write_all(b"{\"op\":\"trace_dump\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("traces").unwrap().as_arr().unwrap().is_empty(), "{line}");
+    stop.store(true, Ordering::Relaxed);
+}
+
+#[test]
+fn sampling_off_steady_state_stores_no_traces_and_reuses_arenas() {
+    // acceptance (ISSUE 9): with `--trace-sample 0` (the default) the
+    // steady-state serving path allocates nothing for tracing — every
+    // response is trace-free, the trace ring stays empty, and the
+    // backend's scratch pool stops growing after warmup.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    use bcnn::util::json::Json;
+
+    let engine = Arc::new(EngineBackend::bcnn(synth_bcnn_network(Scheme::Rgb, 21), 2));
+    let registry = ModelRegistry::builder()
+        .policy(BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_millis(1),
+            ..BatchPolicy::default()
+        })
+        .queue_capacity(512)
+        .build();
+    let be: Arc<dyn InferBackend> = Arc::clone(&engine) as Arc<dyn InferBackend>;
+    registry.publish_backend("rgb", 1, "bcnn", "rgb", None, be).unwrap();
+    let server = Arc::new(Server::new(registry, classes())); // sampling off by default
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = Arc::clone(&server).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    let mut classify_synth = |index: u64| {
+        line.clear();
+        let req = format!("{{\"op\":\"classify_synth\",\"model\":\"rgb\",\"index\":{index}}}\n");
+        conn.write_all(req.as_bytes()).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("label"), "{line}");
+        assert!(!line.contains("\"trace\""), "untraced responses carry no trace key: {line}");
+    };
+    for i in 0..8 {
+        classify_synth(i); // warm the scratch pool to steady state
+    }
+    let warmed = engine.pool_stats().unwrap();
+    assert!(warmed.arenas >= 1, "warmup parked at least one arena");
+    for i in 8..72 {
+        classify_synth(i);
+    }
+    assert_eq!(
+        engine.pool_stats().unwrap(),
+        warmed,
+        "steady-state traffic with sampling off must not grow the arena pool"
+    );
+    line.clear();
+    conn.write_all(b"{\"op\":\"trace_dump\"}\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("traces").unwrap().as_arr().unwrap().is_empty(), "{line}");
+    assert_eq!(j.get("dropped").unwrap().as_usize().unwrap(), 0, "{line}");
+    stop.store(true, Ordering::Relaxed);
+}

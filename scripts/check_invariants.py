@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Source-invariant lint suite for the Rust tree.
 
-Four invariants that rustc cannot enforce but the codebase relies on:
+Five invariants that rustc cannot enforce but the codebase relies on:
 
 A. Write-coverage contracts: every public `*_into` kernel under
    `rust/src/bnn/` documents its output-buffer coverage (a doc line
@@ -29,6 +29,14 @@ D. Variant coverage for the plan IR and its proof machinery: every
    by at least one `#[cfg(test)]` region (`Enum::Variant`) — a
    corruption class nobody injects, or a refusal variant nobody
    asserts, is dead proof surface.
+
+E. Metric inventory coverage: every Prometheus metric family the
+   server can emit — a production string literal wholly matching
+   `bcnn_[a-z0-9_]+` under `rust/src/server/`, where the exposition is
+   rendered — must appear backticked in a table row of
+   docs/ARCHITECTURE.md.  The metric inventory is the operator's
+   contract with dashboards and alerts; an undocumented family is a
+   silent interface.
 
 Exit status: 0 when every invariant holds, 1 otherwise (one line per
 violation).  Wired into CI next to `check_docs_links.py`; run locally
@@ -244,12 +252,50 @@ def check_variant_coverage(repo: Path) -> list[str]:
     return errors
 
 
+# rule E: a prod string literal that IS a metric family name (both
+# quotes adjacent, so lane keys like "bcnn_rgb@1" never match)
+METRIC_LIT_RE = re.compile(r'"(bcnn_[a-z0-9_]+)"')
+
+
+def check_metric_docs(repo: Path) -> list[str]:
+    arch = repo / "docs" / "ARCHITECTURE.md"
+    table_rows = (
+        [l for l in arch.read_text(encoding="utf-8").splitlines() if l.lstrip().startswith("|")]
+        if arch.is_file()
+        else []
+    )
+    # first emission site per family — one report per name, not per
+    # use.  Scoped to the server tree: that is where the exposition is
+    # rendered, and it keeps non-metric literals elsewhere (artifact
+    # kinds like "bcnn_ref") out of the inventory contract.
+    sites: dict[str, str] = {}
+    for path in rust_files(repo / "rust" / "src" / "server"):
+        lines = path.read_text(encoding="utf-8").splitlines()
+        prod, _ = split_prod_test(lines)
+        text = "\n".join(strip_line_comments(prod))
+        rel = path.relative_to(repo)
+        for m in METRIC_LIT_RE.finditer(text):
+            name = m.group(1)
+            if name not in sites:
+                lineno = text.count("\n", 0, m.start()) + 1
+                sites[name] = f"{rel}:{lineno}"
+    errors = []
+    for name in sorted(sites):
+        if not any(f"`{name}`" in row for row in table_rows):
+            errors.append(
+                f"{sites[name]}: metric `{name}` is emitted but missing from "
+                f"docs/ARCHITECTURE.md's metric inventory table"
+            )
+    return errors
+
+
 def main() -> int:
     errors = (
         check_write_coverage(REPO)
         + check_panic_policy(REPO)
         + check_error_enums(REPO)
         + check_variant_coverage(REPO)
+        + check_metric_docs(REPO)
     )
     for e in errors:
         print(e)
@@ -257,8 +303,8 @@ def main() -> int:
         print(f"\n{len(errors)} invariant violation(s)")
         return 1
     print(
-        "ok: write-coverage, panic-policy, error-enum, and "
-        "variant-coverage invariants hold"
+        "ok: write-coverage, panic-policy, error-enum, "
+        "variant-coverage, and metric-docs invariants hold"
     )
     return 0
 
