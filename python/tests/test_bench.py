@@ -60,8 +60,10 @@ FAIL_STUB = "import sys\nprint('boom')\nsys.exit(1)\n"
 
 def test_cargo_toml_declares_the_full_bench_suite():
     # the harness discovers targets from Cargo.toml; the suite the
-    # ISSUE names is twelve strong and growing — never shrinking
-    assert len(declared_targets()) >= 12
+    # ISSUE names is thirteen strong and growing — never shrinking
+    assert len(declared_targets()) >= 13
+    # the microkernel ablation registered itself for auto-discovery
+    assert "ablation_microkernel" in declared_targets()
 
 
 def test_skips_cleanly_when_cargo_is_absent(tmp_path):

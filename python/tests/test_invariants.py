@@ -295,6 +295,85 @@ def test_non_family_literals_never_match(tmp_path):
     assert mod.check_metric_docs(tmp_path) == []
 
 
+SIMD_FILE = "rust/src/bnn/microkernel/simd.rs"
+
+
+def test_unsafe_optout_outside_audited_module_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/fastpath.rs",
+        "#![allow(unsafe_code)]\npub fn f() {}\n",
+    )
+    errors = mod.check_unsafe_audit(tmp_path)
+    assert len(errors) == 1
+    assert "allow(unsafe_code)" in errors[0] and "fastpath.rs" in errors[0]
+
+
+def test_unsafe_optout_in_audited_module_passes(tmp_path):
+    mod = load_checker()
+    write_rs(tmp_path, SIMD_FILE, "#![allow(unsafe_code)]\npub fn f() {}\n")
+    assert mod.check_unsafe_audit(tmp_path) == []
+
+
+def test_commented_unsafe_optout_is_exempt(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        "rust/src/bnn/fastpath.rs",
+        "// #![allow(unsafe_code)] would re-open the deny\npub fn f() {}\n",
+    )
+    assert mod.check_unsafe_audit(tmp_path) == []
+
+
+def test_untested_target_feature_fn_is_reported(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        SIMD_FILE,
+        "#![allow(unsafe_code)]\n"
+        '#[target_feature(enable = "avx2")]\n'
+        "pub(super) unsafe fn pop_avx2_impl(a: &[u64]) -> u32 { 0 }\n",
+    )
+    errors = mod.check_unsafe_audit(tmp_path)
+    assert len(errors) == 1
+    assert "pop_avx2_impl" in errors[0] and "never named" in errors[0]
+
+
+def test_bit_identity_tested_target_feature_fn_passes(tmp_path):
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        SIMD_FILE,
+        "#![allow(unsafe_code)]\n"
+        '#[target_feature(enable = "avx2")]\n'
+        "pub(super) unsafe fn pop_avx2_impl(a: &[u64]) -> u32 { 0 }\n"
+        "#[cfg(test)]\n"
+        "mod tests { fn t() { let _ = unsafe { super::pop_avx2_impl(&[]) }; } }\n",
+    )
+    assert mod.check_unsafe_audit(tmp_path) == []
+
+
+def test_doc_comment_mention_does_not_satisfy_rule_f(tmp_path):
+    # the bit-identity reference must be code, not prose: a test-region
+    # comment naming the fn is stripped before the search
+    mod = load_checker()
+    write_rs(
+        tmp_path,
+        SIMD_FILE,
+        "#![allow(unsafe_code)]\n"
+        '#[target_feature(enable = "avx2")]\n'
+        "pub(super) unsafe fn pop_avx2_impl(a: &[u64]) -> u32 { 0 }\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    // bit-identity for pop_avx2_impl lives elsewhere (it must not)\n"
+        "    fn t() {}\n"
+        "}\n",
+    )
+    errors = mod.check_unsafe_audit(tmp_path)
+    assert len(errors) == 1 and "pop_avx2_impl" in errors[0]
+
+
 def test_main_reports_nonzero_on_broken_tree(tmp_path, monkeypatch):
     mod = load_checker()
     write_rs(

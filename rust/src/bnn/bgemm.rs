@@ -15,7 +15,7 @@
 
 /// u64 lanes per row for a KW-word operand.
 #[inline]
-fn lanes(kw: usize) -> usize {
+pub(crate) fn lanes(kw: usize) -> usize {
     kw.div_ceil(2)
 }
 
@@ -48,9 +48,18 @@ pub fn bgemm(a: &[u32], wt: &[u32], m: usize, n: usize, kw: usize, d_real: usize
 }
 
 /// Widen one row into a caller-provided lane buffer.
+///
+/// Write coverage: assigns every element of `dst` (len
+/// `lanes(src.len())`) — interior lanes from fused word pairs, the tail
+/// lane (odd KW) from the final word alone, high half zero.  Prior
+/// contents are never read and never survive, so callers may pass a
+/// dirty scratch buffer without pre-zeroing (the regression test below
+/// pins this; the per-row `fill(0)` the dyn kernels once carried was
+/// redundant).
 #[inline]
-fn widen_row(src: &[u32], dst: &mut [u64]) {
+pub(crate) fn widen_row(src: &[u32], dst: &mut [u64]) {
     let kw = src.len();
+    debug_assert_eq!(dst.len(), lanes(kw));
     let mut i = 0;
     while i + 1 < kw {
         dst[i / 2] = (src[i] as u64) | ((src[i + 1] as u64) << 32);
@@ -99,7 +108,12 @@ pub fn widen_weights(wt: &[u32], n: usize, kw: usize) -> Vec<u64> {
 /// This is the zero-allocation steady-state kernel: the only per-call
 /// work besides the popcount loop is widening each A row into a stack
 /// buffer — no heap traffic for this network's lane counts (1, 2, 13).
-/// Bit-identical to `bgemm` (widening is a pure re-layout).
+/// Bit-identical to `bgemm` (widening is a pure re-layout), on every
+/// dispatched kernel tier: this entry routes through the runtime
+/// microkernel dispatcher ([`crate::bnn::microkernel`]), selecting the
+/// tiled/SWAR/SIMD kernel `platform::dispatch` chose for this process
+/// (or the `BCNN_KERNEL` override) — all tiers are property-tested
+/// bit-identical to [`bgemm_scalar`], the seed kernel below.
 pub fn bgemm_prewidened(
     a: &[u32],
     w64: &[u64],
@@ -109,16 +123,36 @@ pub fn bgemm_prewidened(
     d_real: usize,
     out: &mut [i32],
 ) {
-    assert_eq!(a.len(), m * kw);
-    let l = lanes(kw);
-    assert_eq!(w64.len(), n * l);
-    assert_eq!(out.len(), m * n);
-    let d = d_real as i32;
-    match l {
+    crate::bnn::microkernel::bgemm_with(
+        crate::platform::dispatch::current(),
+        a,
+        w64,
+        m,
+        n,
+        kw,
+        d_real,
+        out,
+    );
+}
+
+/// The seed scalar GEMM: fixed-lane kernels for this network's widths
+/// (the compiler fully unrolls L=1/2/13), dyn-lane walk otherwise.
+/// This is the bit-identity reference for every microkernel tier.
+/// Shape invariants are the caller's (`bgemm_with` asserts them).
+pub(crate) fn bgemm_scalar(
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d: i32,
+    out: &mut [i32],
+) {
+    match lanes(kw) {
         1 => bgemm_lanes::<1>(a, w64, m, n, kw, d, out),
         2 => bgemm_lanes::<2>(a, w64, m, n, kw, d, out),
         13 => bgemm_lanes::<13>(a, w64, m, n, kw, d, out),
-        _ => bgemm_lanes_dyn(a, w64, m, n, kw, l, d, out),
+        l => bgemm_lanes_dyn(a, w64, m, n, kw, l, d, out),
     }
 }
 
@@ -157,9 +191,10 @@ fn bgemm_lanes_dyn(
     d: i32,
     out: &mut [i32],
 ) {
+    // no per-row re-zeroing: widen_row's write-coverage contract
+    // guarantees every lane (tail included) is overwritten
     let mut arow = vec![0u64; l];
     for mi in 0..m {
-        arow.fill(0);
         widen_row(&a[mi * kw..(mi + 1) * kw], &mut arow);
         let orow = &mut out[mi * n..(mi + 1) * n];
         for ni in 0..n {
@@ -190,6 +225,7 @@ fn bgemm_lanes_dyn(
 /// Write coverage: resizes `out` to exactly M and assigns every word;
 /// resizes `counts` (when present) to exactly M·N and assigns every
 /// element; prior contents are never read.
+#[allow(clippy::too_many_arguments)]
 pub fn bgemm_threshold_into(
     a: &[u32],
     w64: &[u64],
@@ -201,39 +237,24 @@ pub fn bgemm_threshold_into(
     flip: &[u32],
     cmp_bias: i32,
     out: &mut Vec<u32>,
-    mut counts: Option<&mut Vec<i32>>,
+    counts: Option<&mut Vec<i32>>,
 ) {
-    use crate::bnn::packing::threshold_bit;
-    assert_eq!(a.len(), m * kw);
-    let l = lanes(kw);
-    assert_eq!(w64.len(), n * l);
-    assert!(n <= 32, "fused epilogue packs all channels into one word");
-    assert_eq!(theta.len(), n);
-    assert_eq!(flip.len(), n);
-    out.resize(m, 0);
-    if let Some(c) = counts.as_deref_mut() {
-        c.resize(m * n, 0);
-    }
-    let d = d_real as i32;
-    let mut arow = vec![0u64; l];
-    for mi in 0..m {
-        arow.fill(0);
-        widen_row(&a[mi * kw..(mi + 1) * kw], &mut arow);
-        let mut word = 0u32;
-        for ni in 0..n {
-            let wrow = &w64[ni * l..(ni + 1) * l];
-            let mut pc = 0u32;
-            for (x, y) in arow.iter().zip(wrow) {
-                pc += (x ^ y).count_ones();
-            }
-            let count = d - 2 * pc as i32;
-            if let Some(c) = counts.as_deref_mut() {
-                c[mi * n + ni] = count;
-            }
-            word |= threshold_bit((count + cmp_bias) as f32, theta[ni], flip[ni]) << (31 - ni);
-        }
-        out[mi] = word;
-    }
+    // dispatched like bgemm_prewidened; the scalar tier's rowwise loop
+    // (the seed epilogue) lives in microkernel::bgemm_threshold_with
+    crate::bnn::microkernel::bgemm_threshold_with(
+        crate::platform::dispatch::current(),
+        a,
+        w64,
+        m,
+        n,
+        kw,
+        d_real,
+        theta,
+        flip,
+        cmp_bias,
+        out,
+        counts,
+    );
 }
 
 /// bgemm at an arbitrary packing bitwidth `b` (for the E5 ablation):
@@ -432,6 +453,24 @@ mod tests {
             let mut elided = Vec::new();
             bgemm_threshold_into(&a, &w64, m, n, kw, d, &theta, &flip, bias, &mut elided, None);
             ensure_eq(elided, words, "elided counts == staged counts (words)")
+        });
+    }
+
+    #[test]
+    fn widen_row_overwrites_every_lane_of_a_dirty_buffer() {
+        // the write-coverage contract that justified dropping the
+        // per-row fill(0) from the dyn kernels: widening into a
+        // poisoned buffer must equal widening into a zeroed one, for
+        // even and odd KW (the odd tail lane is the risky one)
+        prop::check(48, |g| {
+            let kw = g.usize_in(1, 33);
+            let src = g.words(kw);
+            let l = lanes(kw);
+            let mut clean = vec![0u64; l];
+            widen_row(&src, &mut clean);
+            let mut dirty = vec![u64::MAX; l];
+            widen_row(&src, &mut dirty);
+            ensure_eq(dirty, clean, "dirty-buffer widen_row")
         });
     }
 

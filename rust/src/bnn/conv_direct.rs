@@ -32,6 +32,10 @@ pub fn conv_packed_direct(
     assert_eq!(wt.len(), o * kkn);
     let r = (k - 1) / 2;
     let d = d_real as i32;
+    // interior rows ride the dispatched word-popcount microkernel
+    // (resolved once per call); the border path stays scalar — its
+    // per-tap runs are NW words long, below any SIMD break-even
+    let kind = crate::platform::dispatch::current();
     // per-tap weight popcounts: the padding contribution of tap j for
     // output channel oc (hoisted so border pixels stay cheap)
     let mut pad_pc = vec![0u32; o * k * k];
@@ -63,7 +67,8 @@ pub fn conv_packed_direct(
                     let mut pc = 0u32;
                     for dy in 0..k {
                         let base = ((y0 + dy) * w + x0) * nw;
-                        pc += crate::bnn::packing::xor_popcount(
+                        pc += crate::bnn::microkernel::xorpop_words(
+                            kind,
                             &words[base..base + k * nw],
                             &wrow[dy * k * nw..(dy + 1) * k * nw],
                         );

@@ -8,6 +8,7 @@
 //! accumulators).
 
 use super::packing::fuse64;
+use crate::platform::dispatch::{self, KernelKind};
 
 /// Packed FC: `x` (KW,) u32, `wt` (L, KW) u32 -> (L,) i32 counts.
 pub fn fc_packed(x: &[u32], wt: &[u32], l: usize, kw: usize, d_real: usize) -> Vec<i32> {
@@ -16,11 +17,27 @@ pub fn fc_packed(x: &[u32], wt: &[u32], l: usize, kw: usize, d_real: usize) -> V
     out
 }
 
-/// Allocation-free packed FC for the serving hot path.
+/// Allocation-free packed FC for the serving hot path.  Routed through
+/// the runtime microkernel dispatcher (the kernel is resolved once per
+/// call, not per weight row).
 ///
 /// Write coverage: assigns every element of `out` (len L) exactly once;
 /// prior contents are never read.
 pub fn fc_packed_into(
+    x: &[u32],
+    wt: &[u32],
+    l: usize,
+    kw: usize,
+    d_real: usize,
+    out: &mut [i32],
+) {
+    fc_packed_into_with(dispatch::current(), x, wt, l, kw, d_real, out);
+}
+
+/// `fc_packed_into` under an explicit kernel choice (shared by the
+/// batch drivers so the env override is read once per entry point).
+fn fc_packed_into_with(
+    kind: KernelKind,
     x: &[u32],
     wt: &[u32],
     l: usize,
@@ -33,17 +50,30 @@ pub fn fc_packed_into(
     assert_eq!(out.len(), l);
     let d = d_real as i32;
     for li in 0..l {
-        out[li] = xnor_dot(x, &wt[li * kw..(li + 1) * kw], d);
+        out[li] = xnor_dot(kind, x, &wt[li * kw..(li + 1) * kw], d);
     }
 }
 
-/// One weight-row XNOR dot: 4-way unrolled u64 accumulation (the
+/// One weight-row XNOR dot, dispatched.  The scalar/tiled tiers keep
+/// the seed 4-way unrolled accumulation (it IS the register-blocked
+/// form of this dot — tiling proper is a GEMM loop structure); the
+/// SWAR and SIMD tiers swap in their word-popcount primitives.  All
+/// tiers are exact integer popcount sums, hence bit-identical.
+#[inline]
+fn xnor_dot(kind: KernelKind, x: &[u32], wrow: &[u32], d: i32) -> i32 {
+    match kind {
+        KernelKind::Scalar | KernelKind::Tiled => xnor_dot_scalar(x, wrow, d),
+        _ => d - 2 * crate::bnn::microkernel::xorpop_words(kind, x, wrow) as i32,
+    }
+}
+
+/// The seed weight-row XNOR dot: 4-way unrolled u64 accumulation (the
 /// "segments" of Section 3.2) — eight u32 words, four fused u64 pairs,
 /// per iteration on four independent accumulators for ILP.  Shared by
 /// the plain and fused-threshold FC kernels so their counts are
 /// identical by construction.
 #[inline]
-fn xnor_dot(x: &[u32], wrow: &[u32], d: i32) -> i32 {
+fn xnor_dot_scalar(x: &[u32], wrow: &[u32], d: i32) -> i32 {
     let x8 = x.chunks_exact(8);
     let w8 = wrow.chunks_exact(8);
     let (xr, wr) = (x8.remainder(), w8.remainder());
@@ -92,11 +122,12 @@ pub fn fc_packed_threshold_batch_into(
     assert_eq!(flip.len(), l);
     let d = d_real as i32;
     out.resize(n * l, 0.0);
+    let kind = dispatch::current();
     for i in 0..n {
         let x = &xs[i * kw..(i + 1) * kw];
         let orow = &mut out[i * l..(i + 1) * l];
         for li in 0..l {
-            let count = xnor_dot(x, &wt[li * kw..(li + 1) * kw], d);
+            let count = xnor_dot(kind, x, &wt[li * kw..(li + 1) * kw], d);
             orow[li] = if threshold_bit((count + cmp_bias) as f32, theta[li], flip[li]) == 1 {
                 1.0
             } else {
@@ -139,8 +170,17 @@ pub fn fc_packed_batch_into(
 ) {
     assert_eq!(xs.len(), n * kw);
     out.resize(n * l, 0);
+    let kind = dispatch::current();
     for i in 0..n {
-        fc_packed_into(&xs[i * kw..(i + 1) * kw], wt, l, kw, d_real, &mut out[i * l..(i + 1) * l]);
+        fc_packed_into_with(
+            kind,
+            &xs[i * kw..(i + 1) * kw],
+            wt,
+            l,
+            kw,
+            d_real,
+            &mut out[i * l..(i + 1) * l],
+        );
     }
 }
 

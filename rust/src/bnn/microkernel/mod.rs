@@ -1,0 +1,418 @@
+//! Runtime-dispatched XNOR-popcount microkernels — the tier every
+//! popcount consumer (`bgemm_prewidened`, the fused
+//! `bgemm_threshold_into` epilogue, the packed FC dots, and
+//! `conv_direct`'s interior walk) routes through.
+//!
+//! Four tiers above the seed scalar kernels, selected per call by
+//! [`crate::platform::dispatch::current`]:
+//!
+//! * **scalar** — the seed rowwise kernels, unchanged (the reference
+//!   every other tier is property-tested bit-identical against);
+//! * **tiled** ([`tiled`]) — MR=4 register tiling: each weight row
+//!   streamed once per four patch rows;
+//! * **swar** ([`swar`]) — Harley–Seal carry-save popcount for long-K
+//!   rows (~1 `count_ones` retired per 8 u64 lanes);
+//! * **avx2 / neon** ([`simd`]) — `std::arch` vector popcounts, the one
+//!   audited `unsafe` module in the crate.
+//!
+//! Bit-identity is by construction, not by luck: every tier computes
+//! the same exact integer `popcount(a ^ w)` sums, only grouped
+//! differently, so no accumulation order can change an output.  That
+//! invariant is what lets a runtime kernel choice sit *under* the
+//! proof-carrying plan machinery without touching it — the verifier and
+//! equivalence checker reason about counts, and the counts are
+//! identical on every path.  The forced-dispatch suite below pins this
+//! for all kernels × lane widths (L=1/2/13/dyn) × all four consumers.
+
+pub mod simd;
+pub mod swar;
+pub mod tiled;
+
+use crate::bnn::bgemm::{lanes, widen_row};
+use crate::bnn::packing::threshold_bit;
+use crate::platform::dispatch::KernelKind;
+
+/// Lanes a rowwise driver holds on the stack before spilling to heap
+/// scratch (16 covers every layer of this network: L=1/2/13).
+pub(crate) const STACK_LANES: usize = 16;
+
+/// Scratch selection: the stack buffer when it fits, else the heap
+/// vector resized to `need` (zero-filled only on growth — callers
+/// overwrite every lane they read, see `widen_row`'s contract).
+#[inline]
+pub(crate) fn lane_scratch<'s>(
+    stack: &'s mut [u64],
+    heap: &'s mut Vec<u64>,
+    need: usize,
+) -> &'s mut [u64] {
+    if need <= stack.len() {
+        &mut stack[..need]
+    } else {
+        heap.resize(need, 0);
+        &mut heap[..need]
+    }
+}
+
+/// Dispatched `popcount(a ^ b)` over u64 lane rows.  SIMD kinds on the
+/// wrong architecture fall back to scalar (the dispatcher never routes
+/// them there; this keeps the match total without `unreachable!`).
+#[inline]
+pub fn xorpop_lanes(kind: KernelKind, a: &[u64], b: &[u64]) -> u32 {
+    match kind {
+        KernelKind::Swar => swar::xorpop_csa(a, b),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => simd::xorpop_u64_avx2(a, b),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => simd::xorpop_u64_neon(a, b),
+        _ => a.iter().zip(b).map(|(x, y)| (x ^ y).count_ones()).sum(),
+    }
+}
+
+/// Dispatched `popcount(a ^ b)` over u32 word rows (the FC dot and
+/// `conv_direct` operand shape).  Scalar/tiled take the seed
+/// `xor_popcount` fuse-pair walk.
+#[inline]
+pub fn xorpop_words(kind: KernelKind, a: &[u32], b: &[u32]) -> u32 {
+    match kind {
+        KernelKind::Swar => swar::xorpop_words_csa(a, b),
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => simd::xorpop_u32_avx2(a, b),
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => simd::xorpop_u32_neon(a, b),
+        _ => crate::bnn::packing::xor_popcount(a, b),
+    }
+}
+
+/// `bgemm_prewidened` under an explicit kernel choice: (M, KW) packed
+/// rows × pre-widened (N, L) weights → (M, N) i32 counts.
+///
+/// Write coverage: assigns every element of `out` (len M·N) exactly
+/// once on every kernel path; prior contents are never read.
+pub fn bgemm_with(
+    kind: KernelKind,
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d_real: usize,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), m * kw);
+    let l = lanes(kw);
+    assert_eq!(w64.len(), n * l);
+    assert_eq!(out.len(), m * n);
+    let d = d_real as i32;
+    match kind {
+        KernelKind::Scalar => crate::bnn::bgemm::bgemm_scalar(a, w64, m, n, kw, d, out),
+        KernelKind::Tiled => tiled::bgemm_fill(a, w64, m, n, kw, d, out),
+        _ => bgemm_rowwise(kind, a, w64, m, n, kw, d, out),
+    }
+}
+
+/// Rowwise GEMM driver over the dispatched lane popcount (the SWAR and
+/// SIMD tiers keep the seed loop structure and swap the reduction).
+fn bgemm_rowwise(
+    kind: KernelKind,
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d: i32,
+    out: &mut [i32],
+) {
+    let l = lanes(kw);
+    let mut stack = [0u64; STACK_LANES];
+    let mut heap = Vec::new();
+    let arow = lane_scratch(&mut stack, &mut heap, l);
+    for mi in 0..m {
+        widen_row(&a[mi * kw..(mi + 1) * kw], arow);
+        let orow = &mut out[mi * n..(mi + 1) * n];
+        for ni in 0..n {
+            let pc = xorpop_lanes(kind, arow, &w64[ni * l..(ni + 1) * l]);
+            orow[ni] = d - 2 * pc as i32;
+        }
+    }
+}
+
+/// `bgemm_threshold_into` under an explicit kernel choice: fused GEMM +
+/// per-channel threshold epilogue, channel bits packed MSB-first into
+/// one u32 word per patch row.
+///
+/// Write coverage: resizes `out` to exactly M and assigns every word;
+/// resizes `counts` (when present) to exactly M·N and assigns every
+/// element; prior contents are never read, on every kernel path.
+#[allow(clippy::too_many_arguments)]
+pub fn bgemm_threshold_with(
+    kind: KernelKind,
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d_real: usize,
+    theta: &[f32],
+    flip: &[u32],
+    cmp_bias: i32,
+    out: &mut Vec<u32>,
+    mut counts: Option<&mut Vec<i32>>,
+) {
+    assert_eq!(a.len(), m * kw);
+    let l = lanes(kw);
+    assert_eq!(w64.len(), n * l);
+    assert!(n <= 32, "fused epilogue packs all channels into one word");
+    assert_eq!(theta.len(), n);
+    assert_eq!(flip.len(), n);
+    out.resize(m, 0);
+    if let Some(c) = counts.as_deref_mut() {
+        c.resize(m * n, 0);
+    }
+    let d = d_real as i32;
+    let counts = counts.map(Vec::as_mut_slice);
+    match kind {
+        KernelKind::Tiled => {
+            tiled::threshold_fill(a, w64, m, n, kw, d, theta, flip, cmp_bias, out, counts);
+        }
+        _ => threshold_rowwise(kind, a, w64, m, n, kw, d, theta, flip, cmp_bias, out, counts),
+    }
+}
+
+/// Rowwise fused-threshold driver over the dispatched lane popcount
+/// (scalar kind reproduces the seed epilogue loop exactly).
+#[allow(clippy::too_many_arguments)]
+fn threshold_rowwise(
+    kind: KernelKind,
+    a: &[u32],
+    w64: &[u64],
+    m: usize,
+    n: usize,
+    kw: usize,
+    d: i32,
+    theta: &[f32],
+    flip: &[u32],
+    cmp_bias: i32,
+    out: &mut [u32],
+    mut counts: Option<&mut [i32]>,
+) {
+    let l = lanes(kw);
+    let mut stack = [0u64; STACK_LANES];
+    let mut heap = Vec::new();
+    let arow = lane_scratch(&mut stack, &mut heap, l);
+    for mi in 0..m {
+        widen_row(&a[mi * kw..(mi + 1) * kw], arow);
+        let mut word = 0u32;
+        for ni in 0..n {
+            let pc = xorpop_lanes(kind, arow, &w64[ni * l..(ni + 1) * l]);
+            let count = d - 2 * pc as i32;
+            if let Some(c) = counts.as_deref_mut() {
+                c[mi * n + ni] = count;
+            }
+            word |= threshold_bit((count + cmp_bias) as f32, theta[ni], flip[ni]) << (31 - ni);
+        }
+        out[mi] = word;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bnn::bgemm::{bgemm_prewidened, bgemm_threshold_into, widen_weights};
+    use crate::platform::dispatch::{self, kernel_env_guard, KERNEL_ENV};
+    use crate::util::prop::{self, ensure_eq};
+
+    /// Every kernel that can run on this machine (the others are pinned
+    /// on their own architectures; the dispatcher never selects them
+    /// here).
+    fn runnable() -> Vec<KernelKind> {
+        KernelKind::ALL.into_iter().filter(|k| k.available()).collect()
+    }
+
+    // KW word widths covering every lane class: L=1 (gray conv1), L=2
+    // (rgb conv1), L=13 (conv2), L=4 dyn, L=20 (> STACK_LANES: heap
+    // scratch + multi-block Harley-Seal)
+    const KWS: [usize; 5] = [1, 3, 25, 7, 40];
+
+    #[test]
+    fn every_kernel_matches_the_scalar_reference_gemm() {
+        prop::check(24, |g| {
+            for kw in KWS {
+                let d = kw * 32;
+                let m = g.usize_in(1, 9);
+                let n = g.usize_in(1, 8);
+                let a = g.words(m * kw);
+                let w = g.words(n * kw);
+                let w64 = widen_weights(&w, n, kw);
+                let mut want = vec![0i32; m * n];
+                bgemm_with(KernelKind::Scalar, &a, &w64, m, n, kw, d, &mut want);
+                for kind in runnable() {
+                    let mut got = vec![i32::MIN; m * n]; // dirty
+                    bgemm_with(kind, &a, &w64, m, n, kw, d, &mut got);
+                    ensure_eq(
+                        got,
+                        want.clone(),
+                        &format!("{} == scalar, kw={kw}", kind.name()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_kernel_matches_the_fused_threshold_epilogue() {
+        prop::check(16, |g| {
+            for kw in KWS {
+                let d = kw * 32;
+                let m = g.usize_in(1, 9);
+                let n = g.usize_in(1, 32);
+                let a = g.words(m * kw);
+                let w = g.words(n * kw);
+                let theta = g.normals(n);
+                let flip = g.bits(n);
+                let bias = *g.pick(&[0i32, 1, -3]);
+                let w64 = widen_weights(&w, n, kw);
+                let mut want_w = Vec::new();
+                let mut want_c = Vec::new();
+                bgemm_threshold_with(
+                    KernelKind::Scalar,
+                    &a,
+                    &w64,
+                    m,
+                    n,
+                    kw,
+                    d,
+                    &theta,
+                    &flip,
+                    bias,
+                    &mut want_w,
+                    Some(&mut want_c),
+                );
+                for kind in runnable() {
+                    // dirty + wrongly-sized buffers: the driver must
+                    // resize and fully overwrite on every path
+                    let mut got_w = vec![9u32; 3];
+                    let mut got_c = vec![7i32; 1];
+                    bgemm_threshold_with(
+                        kind,
+                        &a,
+                        &w64,
+                        m,
+                        n,
+                        kw,
+                        d,
+                        &theta,
+                        &flip,
+                        bias,
+                        &mut got_w,
+                        Some(&mut got_c),
+                    );
+                    ensure_eq(
+                        got_w.clone(),
+                        want_w.clone(),
+                        &format!("{} threshold words, kw={kw}", kind.name()),
+                    )?;
+                    ensure_eq(
+                        got_c,
+                        want_c.clone(),
+                        &format!("{} threshold counts, kw={kw}", kind.name()),
+                    )?;
+                    // elided counts never change the words
+                    let mut elided = Vec::new();
+                    bgemm_threshold_with(
+                        kind, &a, &w64, m, n, kw, d, &theta, &flip, bias, &mut elided, None,
+                    );
+                    ensure_eq(
+                        elided,
+                        got_w,
+                        &format!("{} elided == staged, kw={kw}", kind.name()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn popcount_primitives_match_scalar_for_every_length() {
+        prop::check(32, |g| {
+            let n = g.usize_in(0, 45);
+            let a64: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let b64: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let want64 = xorpop_lanes(KernelKind::Scalar, &a64, &b64);
+            let aw = g.words(n);
+            let bw = g.words(n);
+            let wantw = xorpop_words(KernelKind::Scalar, &aw, &bw);
+            for kind in runnable() {
+                ensure_eq(
+                    xorpop_lanes(kind, &a64, &b64),
+                    want64,
+                    &format!("{} lanes n={n}", kind.name()),
+                )?;
+                ensure_eq(
+                    xorpop_words(kind, &aw, &bw),
+                    wantw,
+                    &format!("{} words n={n}", kind.name()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The satellite forced-dispatch suite: `BCNN_KERNEL` steers all
+    /// four consumers — `bgemm_prewidened`, `bgemm_threshold_into`,
+    /// `fc_packed_batch`, `conv_packed_direct` — and every forced
+    /// kernel is bit-identical to the forced-scalar baseline.  Env
+    /// mutation is serialized through the shared kernel-env guard
+    /// (same pattern as the corrupt-plan loader hooks).
+    #[test]
+    fn forced_dispatch_is_bit_identical_across_all_consumers() {
+        use crate::bnn::{conv_direct, fc, im2col};
+        let env = kernel_env_guard();
+        let mut g = crate::util::rng::Xoshiro256::new(0xD15);
+        // conv-shaped problem reused across kernels: H=6, W=5, NW=2, K=3
+        let (h, w_, nw, o, k) = (6usize, 5usize, 2usize, 8usize, 3usize);
+        let d_conv = k * k * nw * 32;
+        let words: Vec<u32> = (0..h * w_ * nw).map(|_| g.next_u32()).collect();
+        let wt: Vec<u32> = (0..o * k * k * nw).map(|_| g.next_u32()).collect();
+        let cols = im2col::im2col_words(&words, h, w_, nw, k);
+        let kw = k * k * nw;
+        let w64 = widen_weights(&wt, o, kw);
+        let theta: Vec<f32> = (0..o).map(|i| i as f32 - 3.5).collect();
+        let flip: Vec<u32> = (0..o as u32).map(|i| i & 1).collect();
+        // FC-shaped problem: N=3 images, L=5 rows, KW=17 (odd tail)
+        let (fn_, fl, fkw) = (3usize, 5usize, 17usize);
+        let xs: Vec<u32> = (0..fn_ * fkw).map(|_| g.next_u32()).collect();
+        let fwt: Vec<u32> = (0..fl * fkw).map(|_| g.next_u32()).collect();
+
+        let run = |kernel: &str| {
+            std::env::set_var(KERNEL_ENV, kernel);
+            let mut gemm = vec![0i32; h * w_ * o];
+            bgemm_prewidened(&cols, &w64, h * w_, o, kw, d_conv, &mut gemm);
+            let mut thr = Vec::new();
+            let mut cnt = Vec::new();
+            bgemm_threshold_into(
+                &cols, &w64, h * w_, o, kw, d_conv, &theta, &flip, 0, &mut thr, Some(&mut cnt),
+            );
+            let fc_out = fc::fc_packed_batch(&xs, &fwt, fn_, fl, fkw, fkw * 32);
+            let direct = conv_direct::conv_packed_direct(&words, h, w_, nw, &wt, o, k, d_conv);
+            std::env::remove_var(KERNEL_ENV);
+            (gemm, thr, cnt, fc_out, direct)
+        };
+
+        let baseline = run("scalar");
+        for kind in KernelKind::ALL {
+            if !kind.available() {
+                continue;
+            }
+            let got = run(kind.name());
+            assert_eq!(got, baseline, "BCNN_KERNEL={} vs scalar", kind.name());
+        }
+        // an unavailable override must serve detection's choice, still
+        // bit-identical (never an error, never a wrong count)
+        let fallback = run("no-such-kernel");
+        assert_eq!(fallback, baseline, "unknown override falls back");
+        assert_eq!(dispatch::current(), dispatch::detect());
+        drop(env);
+    }
+}

@@ -1,0 +1,324 @@
+//! `std::arch` SIMD popcounts — the ONE audited `unsafe` module.
+//!
+//! The crate root carries `#![deny(unsafe_code)]`; this module is the
+//! single argued exemption (see `lib.rs`), and lint rule F in
+//! `scripts/check_invariants.py` mechanically rejects `allow(unsafe_code)`
+//! anywhere else in the tree.  The audit boundary is kept narrow on
+//! purpose: every `unsafe` here is one of exactly two shapes, each with
+//! a local `// SAFETY:` argument —
+//!
+//! 1. **Calling a `#[target_feature]` fn.**  Sound iff the CPU has the
+//!    feature.  Every such fn is private and reachable only through a
+//!    safe wrapper that proves the feature first via
+//!    `is_x86_feature_detected!` / `is_aarch64_feature_detected!` and
+//!    panics otherwise (the dispatcher never routes here without the
+//!    feature — the assert is defense in depth, not control flow).
+//! 2. **Unaligned vector loads from a slice.**  Sound iff the read
+//!    stays in bounds.  Every load pointer derives from a slice whose
+//!    length the loop bound has already checked; no pointer survives
+//!    the loop, no aliasing is created (loads only), and alignment is
+//!    irrelevant by construction (`loadu`/`vld1q` are unaligned ops).
+//!
+//! The kernels themselves: AVX2 has no vector popcount, so the x86
+//! path is the Muła lookup — split each byte into nibbles, table the
+//! per-nibble popcount with `_mm256_shuffle_epi8`, horizontal-sum with
+//! `_mm256_sad_epu8` into four u64 lanes that accumulate without
+//! overflow for any slice this crate can address.  NEON has `vcntq_u8`
+//! (per-byte popcount) natively; widening pairwise adds
+//! (`vpaddlq_u8/u16/u32`) fold it to u64 lanes.  Both paths finish
+//! short tails scalar, so results are bit-identical to the scalar tier
+//! for every length — each `#[target_feature]` fn is pinned to the
+//! scalar reference by name in the test region below (lint rule F
+//! refuses an untested kernel).
+#![allow(unsafe_code)]
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::{xorpop_u32_avx2, xorpop_u64_avx2};
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m256i, _mm256_add_epi64, _mm256_add_epi8, _mm256_and_si256, _mm256_loadu_si256,
+        _mm256_sad_epu8, _mm256_set1_epi8, _mm256_setr_epi8, _mm256_setzero_si256,
+        _mm256_shuffle_epi8, _mm256_srli_epi32, _mm256_storeu_si256, _mm256_xor_si256,
+    };
+
+    /// Muła nibble-popcount of one 256-bit xor'd vector, accumulated
+    /// into four per-lane u64 byte-sums.
+    ///
+    /// # Safety
+    /// Caller must have AVX2 enabled (inherited `#[target_feature]`
+    /// obligation from the callers below).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn accum_popcount_256(acc: __m256i, x: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, // per-nibble popcounts …
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, // … repeated per 128-bit half
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(x, low);
+        // srli crosses byte bounds within each 32-bit lane; the mask
+        // keeps exactly the original high nibble of every byte
+        let hi = _mm256_and_si256(_mm256_srli_epi32(x, 4), low);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()))
+    }
+
+    /// Horizontal sum of the four u64 accumulator lanes.
+    ///
+    /// # Safety
+    /// Caller must have AVX2 enabled (inherited obligation).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn hsum_u64x4(acc: __m256i) -> u32 {
+        let mut lanes = [0u64; 4];
+        // SAFETY: storeu writes exactly 32 bytes into the 32-byte array
+        unsafe { _mm256_storeu_si256(lanes.as_mut_ptr().cast(), acc) };
+        (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32
+    }
+
+    /// `popcount(a ^ b)` over u64 lanes, AVX2 lookup popcount.
+    ///
+    /// Safe wrapper: proves AVX2 before entering the
+    /// `#[target_feature]` kernel (shape 1 of the module contract).
+    pub fn xorpop_u64_avx2(a: &[u64], b: &[u64]) -> u32 {
+        assert!(
+            std::is_x86_feature_detected!("avx2"),
+            "avx2 kernel dispatched on a cpu without avx2"
+        );
+        // SAFETY: AVX2 presence proven on the line above; the kernel
+        // reads only within the slice bounds it checks.
+        unsafe { xorpop_u64_avx2_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xorpop_u64_avx2_impl(a: &[u64], b: &[u64]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: i+4 <= n <= len of both slices, so each load
+            // reads 32 in-bounds bytes; loadu has no alignment demand
+            let (va, vb) = unsafe {
+                (
+                    _mm256_loadu_si256(a.as_ptr().add(i).cast()),
+                    _mm256_loadu_si256(b.as_ptr().add(i).cast()),
+                )
+            };
+            acc = accum_popcount_256(acc, _mm256_xor_si256(va, vb));
+            i += 4;
+        }
+        let mut total = hsum_u64x4(acc);
+        while i < n {
+            total += (a[i] ^ b[i]).count_ones();
+            i += 1;
+        }
+        total
+    }
+
+    /// `popcount(a ^ b)` over u32 words, AVX2 lookup popcount (eight
+    /// words per vector).
+    ///
+    /// Safe wrapper: proves AVX2 before entering the
+    /// `#[target_feature]` kernel (shape 1 of the module contract).
+    pub fn xorpop_u32_avx2(a: &[u32], b: &[u32]) -> u32 {
+        assert!(
+            std::is_x86_feature_detected!("avx2"),
+            "avx2 kernel dispatched on a cpu without avx2"
+        );
+        // SAFETY: AVX2 presence proven on the line above; the kernel
+        // reads only within the slice bounds it checks.
+        unsafe { xorpop_u32_avx2_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xorpop_u32_avx2_impl(a: &[u32], b: &[u32]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i+8 <= n <= len of both slices, so each load
+            // reads 32 in-bounds bytes; loadu has no alignment demand
+            let (va, vb) = unsafe {
+                (
+                    _mm256_loadu_si256(a.as_ptr().add(i).cast()),
+                    _mm256_loadu_si256(b.as_ptr().add(i).cast()),
+                )
+            };
+            acc = accum_popcount_256(acc, _mm256_xor_si256(va, vb));
+            i += 8;
+        }
+        let mut total = hsum_u64x4(acc);
+        while i < n {
+            total += (a[i] ^ b[i]).count_ones();
+            i += 1;
+        }
+        total
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub use arm::{xorpop_u32_neon, xorpop_u64_neon};
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::{
+        vaddq_u64, vcntq_u8, vdupq_n_u64, veorq_u32, veorq_u64, vgetq_lane_u64, vld1q_u32,
+        vld1q_u64, vpaddlq_u16, vpaddlq_u32, vpaddlq_u8, vreinterpretq_u8_u32,
+        vreinterpretq_u8_u64,
+    };
+
+    /// `popcount(a ^ b)` over u64 lanes, NEON `vcntq_u8`.
+    ///
+    /// Safe wrapper: proves NEON before entering the
+    /// `#[target_feature]` kernel (shape 1 of the module contract;
+    /// NEON is baseline on aarch64 — the probe is defense in depth).
+    pub fn xorpop_u64_neon(a: &[u64], b: &[u64]) -> u32 {
+        assert!(
+            std::arch::is_aarch64_feature_detected!("neon"),
+            "neon kernel dispatched on a cpu without neon"
+        );
+        // SAFETY: NEON presence proven on the line above; the kernel
+        // reads only within the slice bounds it checks.
+        unsafe { xorpop_u64_neon_impl(a, b) }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn xorpop_u64_neon_impl(a: &[u64], b: &[u64]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0;
+        while i + 2 <= n {
+            // SAFETY: i+2 <= n <= len of both slices, so each load
+            // reads 16 in-bounds bytes; vld1q has no alignment demand
+            let (va, vb) = unsafe { (vld1q_u64(a.as_ptr().add(i)), vld1q_u64(b.as_ptr().add(i))) };
+            let bytes = vcntq_u8(vreinterpretq_u8_u64(veorq_u64(va, vb)));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(bytes))));
+            i += 2;
+        }
+        let mut total = (vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc)) as u32;
+        while i < n {
+            total += (a[i] ^ b[i]).count_ones();
+            i += 1;
+        }
+        total
+    }
+
+    /// `popcount(a ^ b)` over u32 words, NEON `vcntq_u8` (four words
+    /// per vector).
+    ///
+    /// Safe wrapper: proves NEON before entering the
+    /// `#[target_feature]` kernel (shape 1 of the module contract).
+    pub fn xorpop_u32_neon(a: &[u32], b: &[u32]) -> u32 {
+        assert!(
+            std::arch::is_aarch64_feature_detected!("neon"),
+            "neon kernel dispatched on a cpu without neon"
+        );
+        // SAFETY: NEON presence proven on the line above; the kernel
+        // reads only within the slice bounds it checks.
+        unsafe { xorpop_u32_neon_impl(a, b) }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn xorpop_u32_neon_impl(a: &[u32], b: &[u32]) -> u32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        let mut acc = vdupq_n_u64(0);
+        let mut i = 0;
+        while i + 4 <= n {
+            // SAFETY: i+4 <= n <= len of both slices, so each load
+            // reads 16 in-bounds bytes; vld1q has no alignment demand
+            let (va, vb) = unsafe { (vld1q_u32(a.as_ptr().add(i)), vld1q_u32(b.as_ptr().add(i))) };
+            let bytes = vcntq_u8(vreinterpretq_u8_u32(veorq_u32(va, vb)));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(bytes))));
+            i += 4;
+        }
+        let mut total = (vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc)) as u32;
+        while i < n {
+            total += (a[i] ^ b[i]).count_ones();
+            i += 1;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Bit-identity pins for every `#[target_feature]` kernel, by name
+    // (lint rule F keys on these): each `_impl` is driven directly in
+    // an unsafe block AND through its safe wrapper, against the scalar
+    // reference, across vector-width boundaries and scalar tails.
+    #[allow(unused_imports)]
+    use crate::util::prop::{self, ensure_eq};
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_are_bit_identical_to_scalar() {
+        use super::x86::{xorpop_u32_avx2, xorpop_u64_avx2};
+        if !std::is_x86_feature_detected!("avx2") {
+            return; // nothing to pin on this machine; CI hosts have AVX2
+        }
+        prop::check(48, |g| {
+            let n = g.usize_in(0, 37); // crosses 0/partial/multiple vectors
+            let a64: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let b64: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let want64: u32 = a64.iter().zip(&b64).map(|(x, y)| (x ^ y).count_ones()).sum();
+            ensure_eq(xorpop_u64_avx2(&a64, &b64), want64, "u64 wrapper")?;
+            // SAFETY: avx2 proven above; direct call pins xorpop_u64_avx2_impl
+            let direct = unsafe { super::x86::xorpop_u64_avx2_impl(&a64, &b64) };
+            ensure_eq(direct, want64, "xorpop_u64_avx2_impl")?;
+            // one full vector through the two `#[target_feature]`
+            // helpers: accum_popcount_256 then hsum_u64x4 must equal
+            // the scalar popcount of the four lanes
+            let v = [g.u64(), g.u64(), g.u64(), g.u64()];
+            let want_v: u32 = v.iter().map(|x| x.count_ones()).sum();
+            // SAFETY: avx2 proven above; loadu reads the 32-byte array
+            let got_v = unsafe {
+                use std::arch::x86_64::{_mm256_loadu_si256, _mm256_setzero_si256};
+                let x = _mm256_loadu_si256(v.as_ptr().cast());
+                super::x86::hsum_u64x4(super::x86::accum_popcount_256(
+                    _mm256_setzero_si256(),
+                    x,
+                ))
+            };
+            ensure_eq(got_v, want_v, "accum_popcount_256 + hsum_u64x4")?;
+            let aw = g.words(2 * n + 1);
+            let bw = g.words(2 * n + 1);
+            let wantw = crate::bnn::packing::xor_popcount(&aw, &bw);
+            ensure_eq(xorpop_u32_avx2(&aw, &bw), wantw, "u32 wrapper")?;
+            // SAFETY: avx2 proven above; direct call pins xorpop_u32_avx2_impl
+            let directw = unsafe { super::x86::xorpop_u32_avx2_impl(&aw, &bw) };
+            ensure_eq(directw, wantw, "xorpop_u32_avx2_impl")
+        });
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_kernels_are_bit_identical_to_scalar() {
+        use super::arm::{xorpop_u32_neon, xorpop_u64_neon};
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            return;
+        }
+        prop::check(48, |g| {
+            let n = g.usize_in(0, 37);
+            let a64: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let b64: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let want64: u32 = a64.iter().zip(&b64).map(|(x, y)| (x ^ y).count_ones()).sum();
+            ensure_eq(xorpop_u64_neon(&a64, &b64), want64, "u64 wrapper")?;
+            // SAFETY: neon proven above; direct call pins xorpop_u64_neon_impl
+            let direct = unsafe { super::arm::xorpop_u64_neon_impl(&a64, &b64) };
+            ensure_eq(direct, want64, "xorpop_u64_neon_impl")?;
+            let aw = g.words(2 * n + 1);
+            let bw = g.words(2 * n + 1);
+            let wantw = crate::bnn::packing::xor_popcount(&aw, &bw);
+            ensure_eq(xorpop_u32_neon(&aw, &bw), wantw, "u32 wrapper")?;
+            // SAFETY: neon proven above; direct call pins xorpop_u32_neon_impl
+            let directw = unsafe { super::arm::xorpop_u32_neon_impl(&aw, &bw) };
+            ensure_eq(directw, wantw, "xorpop_u32_neon_impl")
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! SWAR Harley–Seal carry-save popcount — the long-K tier.
+//!
+//! The rowwise kernels retire one `count_ones` per u64 lane; for long-K
+//! layers (conv2's L=13, the FC's 288 fused lanes) the popcount itself
+//! becomes the bottleneck.  A carry-save adder (CSA) tree defers it:
+//! three one-bit-per-position partial sums combine into a (sum, carry)
+//! pair with five logic ops, so eight xor'd words collapse into running
+//! `ones/twos/fours` accumulators plus one `eights` word whose popcount
+//! is taken per 8-word block — ~1 hardware popcount per 8 lanes instead
+//! of 8.  The final flush weights the accumulators by their bit value:
+//!
+//! ```text
+//!   x0 x1   x2 x3            (xor'd input words, 8 per block)
+//!    \ /     \ /
+//!    CSA     CSA    ones ─┐        total += 8·pop(eights)  per block
+//!      \     /            │
+//!       \   /             ▼
+//!        CSA ──── twos ─► CSA ─── fours ─► CSA ─► eights
+//! ...
+//!   flush: total += pop(ones) + 2·pop(twos) + 4·pop(fours)
+//! ```
+//!
+//! Exactness: every step is integer bit bookkeeping — the block form
+//! and the naive per-word form count the same multiset of set bits, so
+//! results are bit-identical to the scalar tier for every input (the
+//! property tests below drive lengths across block boundaries, carry
+//! flushes, and odd tails).
+
+use crate::bnn::packing::fuse64;
+
+/// One carry-save adder step: `(sum, carry)` of three 1-bit-per-lane
+/// partial sums, five ops, no popcount.
+#[inline]
+fn csa(a: u64, b: u64, c: u64) -> (u64, u64) {
+    let u = a ^ b;
+    (u ^ c, (a & b) | (u & c))
+}
+
+/// Harley–Seal popcount of `x(0) ^ ... ^ x(n-1)`-style streams: `x(i)`
+/// yields the i-th 64-bit word to count.  Blocks of 8; tail scalar.
+#[inline]
+fn harley_seal(n: usize, mut x: impl FnMut(usize) -> u64) -> u32 {
+    let (mut ones, mut twos, mut fours) = (0u64, 0u64, 0u64);
+    let mut total = 0u32;
+    let mut i = 0;
+    while i + 8 <= n {
+        let (o1, ta) = csa(ones, x(i), x(i + 1));
+        let (o2, tb) = csa(o1, x(i + 2), x(i + 3));
+        let (t1, fa) = csa(twos, ta, tb);
+        let (o3, tc) = csa(o2, x(i + 4), x(i + 5));
+        let (o4, td) = csa(o3, x(i + 6), x(i + 7));
+        let (t2, fb) = csa(t1, tc, td);
+        let (f1, eights) = csa(fours, fa, fb);
+        ones = o4;
+        twos = t2;
+        fours = f1;
+        total += 8 * eights.count_ones();
+        i += 8;
+    }
+    total += 4 * fours.count_ones() + 2 * twos.count_ones() + ones.count_ones();
+    while i < n {
+        total += x(i).count_ones();
+        i += 1;
+    }
+    total
+}
+
+/// `popcount(a ^ b)` over u64 lane rows via Harley–Seal.
+pub fn xorpop_csa(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    harley_seal(a.len(), |i| a[i] ^ b[i])
+}
+
+/// `popcount(a ^ b)` over u32 word rows: pairs fused to u64 on the fly
+/// (`fuse64` positional pairing, same as the scalar tier), odd final
+/// word counted scalar.
+pub fn xorpop_words_csa(a: &[u32], b: &[u32]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut total = harley_seal(n / 2, |i| {
+        fuse64(a[2 * i], a[2 * i + 1]) ^ fuse64(b[2 * i], b[2 * i + 1])
+    });
+    if n % 2 == 1 {
+        total += (a[n - 1] ^ b[n - 1]).count_ones();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure_eq};
+
+    #[test]
+    fn csa_counts_three_partial_sums_exactly() {
+        // per bit position: pop(sum) + 2*pop(carry) == pop(a)+pop(b)+pop(c)
+        prop::check(64, |g| {
+            let (a, b, c) = (g.u64(), g.u64(), g.u64());
+            let (s, cy) = csa(a, b, c);
+            ensure_eq(
+                s.count_ones() + 2 * cy.count_ones(),
+                a.count_ones() + b.count_ones() + c.count_ones(),
+                "csa bit bookkeeping",
+            )
+        });
+    }
+
+    #[test]
+    fn lane_csa_matches_naive_across_block_boundaries() {
+        // lengths 0..=40 cross 0, 1, and 5 full 8-word blocks plus every
+        // tail size; 17+ exercises a carry surviving into the flush
+        prop::check(48, |g| {
+            let n = g.usize_in(0, 40);
+            let a: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let b: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            let naive: u32 = a.iter().zip(&b).map(|(x, y)| (x ^ y).count_ones()).sum();
+            ensure_eq(xorpop_csa(&a, &b), naive, "harley-seal == naive")
+        });
+    }
+
+    #[test]
+    fn word_csa_matches_scalar_xor_popcount() {
+        prop::check(48, |g| {
+            let n = g.usize_in(0, 81); // odd cap: exercises the odd tail
+            let a = g.words(n);
+            let b = g.words(n);
+            ensure_eq(
+                xorpop_words_csa(&a, &b),
+                crate::bnn::packing::xor_popcount(&a, &b),
+                "word harley-seal == scalar",
+            )
+        });
+    }
+
+    #[test]
+    fn all_ones_saturates_every_accumulator() {
+        // 24 words of all-ones against zero: every csa carry path is
+        // exercised and the count is exactly 24*64
+        let a = vec![u64::MAX; 24];
+        let b = vec![0u64; 24];
+        assert_eq!(xorpop_csa(&a, &b), 24 * 64);
+    }
+}

@@ -1,0 +1,202 @@
+//! Runtime microkernel dispatch — which XNOR-popcount kernel serves
+//! this process.
+//!
+//! The paper wins its 7.4× inside the bit-GEMM kernel; on CPU the same
+//! headroom splits across three tiers above the seed scalar walk:
+//! register tiling (amortize weight-row streaming), SWAR Harley–Seal
+//! carry-save popcounts (retire ~1 `count_ones` per 8 lanes), and
+//! `std::arch` SIMD popcounts (AVX2 lookup / NEON `vcntq_u8`).  All
+//! tiers are bit-identical by construction — popcount sums are exact
+//! integers, so grouping and accumulation order cannot change a single
+//! output — which is what lets a *runtime* choice live safely under the
+//! proof-carrying plan machinery: the verifier/equiv stack never sees
+//! the kernel, only its (identical) results.
+//!
+//! Selection order: the `BCNN_KERNEL` env override when set to an
+//! available kernel, else the best detected kernel for this CPU
+//! (`avx2` on x86_64 with AVX2, `neon` on aarch64, else `tiled`).  An
+//! unknown or unavailable override falls back to detection rather than
+//! failing: the serving plane must come up, and the fallback is
+//! observable — `stats`, `list_models`, the `bcnn_kernel_dispatch`
+//! metric family, and the startup journal event all report the kernel
+//! actually chosen, not the one asked for.
+//!
+//! The override is read per call (like the `BCNN_TEST_CORRUPT_PLAN`
+//! loader hook) so the forced-dispatch test suites can steer every path
+//! without process restarts; feature detection itself is cached by
+//! `std`.
+
+/// Env var naming the kernel to force: `scalar|tiled|swar|avx2|neon`.
+pub const KERNEL_ENV: &str = "BCNN_KERNEL";
+
+/// The XNOR-popcount microkernel families ([`crate::bnn::microkernel`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Seed scalar kernel: one A-row × one W-row, `count_ones` per lane.
+    Scalar,
+    /// MR=4 register-tiled scalar: each weight row streamed once per
+    /// four patch rows.
+    Tiled,
+    /// Harley–Seal carry-save popcount (SWAR) over the tiled loop.
+    Swar,
+    /// AVX2 lookup popcount (`_mm256_shuffle_epi8` nibble LUT), x86_64.
+    Avx2,
+    /// NEON byte popcount (`vcntq_u8`), aarch64.
+    Neon,
+}
+
+impl KernelKind {
+    /// Every kind, in detection-preference order (best first).
+    pub const ALL: [KernelKind; 5] = [
+        KernelKind::Avx2,
+        KernelKind::Neon,
+        KernelKind::Swar,
+        KernelKind::Tiled,
+        KernelKind::Scalar,
+    ];
+
+    /// The wire/env name (`scalar|tiled|swar|avx2|neon`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Tiled => "tiled",
+            KernelKind::Swar => "swar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse an env/wire name; `None` for anything unrecognized.
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "scalar" => Some(KernelKind::Scalar),
+            "tiled" => Some(KernelKind::Tiled),
+            "swar" => Some(KernelKind::Swar),
+            "avx2" => Some(KernelKind::Avx2),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this kernel can run on the current CPU.  The portable
+    /// tiers are always available; the SIMD tiers require their arch
+    /// and (on x86_64) a positive `is_x86_feature_detected!` probe.
+    pub fn available(self) -> bool {
+        match self {
+            KernelKind::Scalar | KernelKind::Tiled | KernelKind::Swar => true,
+            KernelKind::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            KernelKind::Neon => {
+                #[cfg(target_arch = "aarch64")]
+                {
+                    std::arch::is_aarch64_feature_detected!("neon")
+                }
+                #[cfg(not(target_arch = "aarch64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+}
+
+/// Best available kernel for this CPU (no env override applied).
+pub fn detect() -> KernelKind {
+    if KernelKind::Avx2.available() {
+        KernelKind::Avx2
+    } else if KernelKind::Neon.available() {
+        KernelKind::Neon
+    } else {
+        // portable best: tiling pays on every CPU, and the SWAR tier
+        // only beats plain `count_ones` where hardware popcount is
+        // slow/emulated — benchmark before promoting it (see
+        // benches/ablation_microkernel.rs)
+        KernelKind::Tiled
+    }
+}
+
+/// Resolve an optional override string against availability: a known,
+/// available kernel wins; anything else falls back to [`detect`].
+pub fn resolve(over: Option<&str>) -> KernelKind {
+    match over.and_then(KernelKind::parse) {
+        Some(k) if k.available() => k,
+        _ => detect(),
+    }
+}
+
+/// The kernel serving this call: [`KERNEL_ENV`] override, else [`detect`].
+pub fn current() -> KernelKind {
+    resolve(std::env::var(KERNEL_ENV).ok().as_deref())
+}
+
+/// Serialize tests that set [`KERNEL_ENV`] (process-global state), in
+/// the same shape as the loader's corrupt-plan env guard.  Poisoning is
+/// ignored: a failed test already reported; later tests still need the
+/// exclusion.
+#[cfg(test)]
+pub(crate) fn kernel_env_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_unknowns_refuse() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        for bad in ["", "AVX2", "sse", "scalar "] {
+            assert_eq!(KernelKind::parse(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn portable_kernels_are_always_available() {
+        for k in [KernelKind::Scalar, KernelKind::Tiled, KernelKind::Swar] {
+            assert!(k.available(), "{} must be available everywhere", k.name());
+        }
+    }
+
+    #[test]
+    fn detect_returns_an_available_kernel() {
+        assert!(detect().available());
+    }
+
+    #[test]
+    fn resolve_prefers_an_available_override_and_falls_back_otherwise() {
+        // portable overrides always win
+        assert_eq!(resolve(Some("scalar")), KernelKind::Scalar);
+        assert_eq!(resolve(Some("swar")), KernelKind::Swar);
+        // unknown / empty overrides fall back to detection
+        assert_eq!(resolve(Some("turbo")), detect());
+        assert_eq!(resolve(None), detect());
+        // a SIMD override resolves to itself iff available, else detect()
+        for k in [KernelKind::Avx2, KernelKind::Neon] {
+            let want = if k.available() { k } else { detect() };
+            assert_eq!(resolve(Some(k.name())), want);
+        }
+    }
+
+    #[test]
+    fn current_honours_the_env_override() {
+        let env = kernel_env_guard();
+        std::env::set_var(KERNEL_ENV, "scalar");
+        assert_eq!(current(), KernelKind::Scalar);
+        std::env::set_var(KERNEL_ENV, "not-a-kernel");
+        assert_eq!(current(), detect());
+        std::env::remove_var(KERNEL_ENV);
+        assert_eq!(current(), detect());
+        drop(env);
+    }
+}

@@ -8,6 +8,7 @@
 //! (roofline) on a per-platform profile, with an on-chip-memory
 //! effectiveness factor that captures exactly the Mali caveat.
 
+pub mod dispatch;
 pub mod profiles;
 
 /// Static description of a GPU platform.

@@ -152,7 +152,9 @@ pub enum Response {
     /// counts, slots and peak bytes per pool class) from
     /// [`crate::bnn::graph::VerifyReport`]; the counters include
     /// `verify_failures`, loads refused because verification failed.
-    Models { models: Json, registry: Json },
+    /// `kernel` names the runtime-dispatched XNOR microkernel serving
+    /// this process (`scalar|tiled|swar|avx2|neon`).
+    Models { models: Json, registry: Json, kernel: String },
     /// Acknowledgement of a state-changing admin op, naming the
     /// `name@version` it acted on.
     AdminAck { action: &'static str, model: String },
@@ -398,10 +400,11 @@ impl Response {
                 obj.insert("ok", Json::Bool(true));
                 obj.insert("pong", Json::Bool(true));
             }
-            Response::Models { models, registry } => {
+            Response::Models { models, registry, kernel } => {
                 obj.insert("ok", Json::Bool(true));
                 obj.insert("models", models.clone());
                 obj.insert("registry", registry.clone());
+                obj.insert("kernel", Json::from(kernel.as_str()));
             }
             Response::AdminAck { action, model } => {
                 obj.insert("ok", Json::Bool(true));
@@ -544,11 +547,13 @@ mod tests {
         let models = Response::Models {
             models: Json::Arr(vec![]),
             registry: Json::Obj(JsonObj::new()),
+            kernel: "tiled".to_string(),
         };
         let j = Json::parse(&models.to_json_line()).unwrap();
         assert!(j.get("ok").unwrap().as_bool().unwrap());
         assert_eq!(j.get("models").unwrap().as_arr().unwrap().len(), 0);
         assert!(j.get("registry").is_ok());
+        assert_eq!(j.get("kernel").unwrap().as_str().unwrap(), "tiled");
     }
 
     #[test]

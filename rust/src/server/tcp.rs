@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 use super::protocol::{Request, Response, StreamStatus};
 use crate::coordinator::InferBackend;
 use crate::dataset::synth;
+use crate::platform::dispatch;
 use crate::registry::ModelRegistry;
 use crate::util::json::{Json, JsonObj};
 use crate::util::threadpool::ThreadPool;
@@ -149,6 +150,7 @@ pub const METRIC_NAMES: &[&str] = &[
     "bcnn_latency_us",
     "bcnn_scratch_arenas",
     "bcnn_scratch_peak_bytes",
+    "bcnn_kernel_dispatch",
 ];
 
 /// Append one `name{labels} value` exposition line.
@@ -187,6 +189,10 @@ pub struct Server {
 
 impl Server {
     pub fn new(registry: Arc<ModelRegistry>, classes: Vec<String>) -> Self {
+        // announce the XNOR microkernel serving this process — one
+        // startup journal event, so recorded perf envelopes correlate
+        // with the kernel that produced them
+        registry.journal().log(event::KERNEL_DISPATCH, dispatch::current().name());
         Self {
             registry,
             classes,
@@ -273,6 +279,7 @@ impl Server {
                     "seq",
                     Json::from(self.stats_seq.fetch_add(1, Ordering::Relaxed) as usize),
                 );
+                obj.insert("kernel", Json::from(dispatch::current().name()));
                 obj.insert("lanes", self.registry.router().stats());
                 obj.insert("registry", self.registry.counters_json());
                 obj.insert("server", self.counters.snapshot());
@@ -320,6 +327,7 @@ impl Server {
             Request::ListModels => Response::Models {
                 models: self.registry.list_models(),
                 registry: self.registry.counters_json(),
+                kernel: dispatch::current().name().to_string(),
             },
             Request::Metrics => Response::Metrics(self.render_metrics()),
             Request::TraceDump { model } => {
@@ -509,6 +517,14 @@ impl Server {
                 }
             }
         }
+        // the dispatched XNOR microkernel, as an info-style gauge: the
+        // kernel name rides the label, the value is a constant 1
+        push_sample(
+            &mut out,
+            "bcnn_kernel_dispatch",
+            &format!("kernel=\"{}\"", dispatch::current().name()),
+            1.0,
+        );
         out
     }
 
@@ -886,7 +902,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         match s.handle(Request::ListModels) {
-            Response::Models { models, registry } => {
+            Response::Models { models, registry, .. } => {
                 let rows = models.as_arr().unwrap();
                 assert_eq!(rows.len(), 1);
                 assert_eq!(rows[0].get("model").unwrap().as_str().unwrap(), "bcnn_rgb@2");
@@ -1056,6 +1072,60 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("bcnn_scratch_peak_bytes{lane=\"bcnn_rgb@1\",class=\"u32\"}"));
+    }
+
+    #[test]
+    fn dispatched_kernel_is_reported_on_every_surface() {
+        // with BCNN_KERNEL unset, the detected kernel must be visible
+        // in stats, list_models, the metrics exposition, and the
+        // startup journal event — and an override must flow through
+        // all four (env serialized like the corrupt-plan hooks)
+        let env = crate::platform::dispatch::kernel_env_guard();
+        std::env::remove_var(dispatch::KERNEL_ENV);
+        let detected = dispatch::detect().name();
+        let s = test_server();
+        match s.handle(Request::Stats) {
+            Response::Stats(stats) => {
+                assert_eq!(stats.get("kernel").unwrap().as_str().unwrap(), detected);
+                let journal = stats.get("journal").unwrap();
+                let events = journal.get("events").unwrap().as_arr().unwrap();
+                assert!(
+                    events.iter().any(|e| {
+                        e.get("kind").unwrap().as_str().unwrap() == event::KERNEL_DISPATCH
+                            && e.get("detail").unwrap().as_str().unwrap() == detected
+                    }),
+                    "kernel_dispatch journal event missing: {journal:?}"
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::ListModels) {
+            Response::Models { kernel, .. } => assert_eq!(kernel, detected),
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::Metrics) {
+            Response::Metrics(text) => assert!(
+                text.contains(&format!("bcnn_kernel_dispatch{{kernel=\"{detected}\"}} 1")),
+                "{text}"
+            ),
+            other => panic!("{other:?}"),
+        }
+        // a forced override reaches the same surfaces live
+        std::env::set_var(dispatch::KERNEL_ENV, "scalar");
+        match s.handle(Request::Stats) {
+            Response::Stats(stats) => {
+                assert_eq!(stats.get("kernel").unwrap().as_str().unwrap(), "scalar");
+            }
+            other => panic!("{other:?}"),
+        }
+        match s.handle(Request::Metrics) {
+            Response::Metrics(text) => {
+                assert!(text.contains("bcnn_kernel_dispatch{kernel=\"scalar\"} 1"), "{text}");
+            }
+            other => panic!("{other:?}"),
+        }
+        std::env::remove_var(dispatch::KERNEL_ENV);
+        drop(env);
     }
 
     #[test]

@@ -209,6 +209,11 @@ pub mod event {
     pub const REWRITE_FALLBACK: &str = "rewrite_fallback";
     pub const ROUTE_SWAP: &str = "route_swap";
     pub const WRITE_TIMEOUT: &str = "write_timeout";
+    /// Logged once at server construction with the XNOR microkernel
+    /// `platform::dispatch` selected for this process (detail = kernel
+    /// name), so perf envelopes in the journal correlate with the
+    /// kernel that produced them.
+    pub const KERNEL_DISPATCH: &str = "kernel_dispatch";
 }
 
 /// Bounded structured event journal with monotonic sequence numbers.

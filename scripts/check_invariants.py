@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Source-invariant lint suite for the Rust tree.
 
-Five invariants that rustc cannot enforce but the codebase relies on:
+Six invariants that rustc cannot enforce but the codebase relies on:
 
 A. Write-coverage contracts: every public `*_into` kernel under
    `rust/src/bnn/` documents its output-buffer coverage (a doc line
@@ -37,6 +37,15 @@ E. Metric inventory coverage: every Prometheus metric family the
    docs/ARCHITECTURE.md.  The metric inventory is the operator's
    contract with dashboards and alerts; an undocumented family is a
    silent interface.
+
+F. Unsafe audit boundary: the crate root carries `#![deny(unsafe_code)]`
+   and exactly one module — the audited SIMD microkernel
+   (`rust/src/bnn/microkernel/simd.rs`) — may opt back out with
+   `allow(unsafe_code)`; an opt-out anywhere else silently widens the
+   audited surface.  And every `#[target_feature]` function (the only
+   place `unsafe` appears) must be named by a `#[cfg(test)]` region or
+   an integration test — a vector kernel without a bit-identity test
+   pinning it to the scalar reference is an unaudited fast path.
 
 Exit status: 0 when every invariant holds, 1 otherwise (one line per
 violation).  Wired into CI next to `check_docs_links.py`; run locally
@@ -289,6 +298,62 @@ def check_metric_docs(repo: Path) -> list[str]:
     return errors
 
 
+# rule F: the one module where `unsafe` is audited; an
+# allow(unsafe_code) anywhere else re-opens the crate-wide deny
+AUDITED_UNSAFE_FILES = ("rust/src/bnn/microkernel/simd.rs",)
+ALLOW_UNSAFE_RE = re.compile(r"#!?\[\s*allow\s*\(\s*unsafe_code\s*\)\s*\]")
+TARGET_FEATURE_RE = re.compile(r"^\s*#\[target_feature\(")
+FN_NAME_RE = re.compile(r"\bfn\s+(\w+)")
+# attribute-to-fn distance searched for the annotated function's name
+TARGET_FEATURE_WINDOW = 6
+
+
+def check_unsafe_audit(repo: Path) -> list[str]:
+    errors = []
+    feature_fns: list[tuple[str, int, str]] = []
+    test_chunks: list[str] = []
+    for path in rust_files(repo / "rust"):
+        lines = path.read_text(encoding="utf-8").splitlines()
+        rel = path.relative_to(repo)
+        stripped_all = strip_line_comments(lines)
+        # (a) unsafe opt-outs only inside the audited module — scanned
+        # over the whole file: a test module is no safer a place to
+        # widen the unsafe surface than production code
+        if str(rel) not in AUDITED_UNSAFE_FILES:
+            for idx, line in enumerate(stripped_all):
+                if ALLOW_UNSAFE_RE.search(line):
+                    errors.append(
+                        f"{rel}:{idx + 1}: allow(unsafe_code) outside the "
+                        f"audited SIMD microkernel module — the crate-wide "
+                        f"deny stands everywhere else"
+                    )
+        # (b) #[target_feature] fns from production regions; test-region
+        # text collected like rule D (rust/tests files count whole)
+        if "tests" in path.parts:
+            prod, test = [], lines
+        else:
+            prod, test = split_prod_test(lines)
+        test_chunks.append("\n".join(strip_line_comments(test)))
+        stripped_prod = strip_line_comments(prod)
+        for idx, line in enumerate(stripped_prod):
+            if not TARGET_FEATURE_RE.match(line):
+                continue
+            for fwd in stripped_prod[idx + 1 : idx + 1 + TARGET_FEATURE_WINDOW]:
+                m = FN_NAME_RE.search(fwd)
+                if m:
+                    feature_fns.append((str(rel), idx + 1, m.group(1)))
+                    break
+    test_text = "\n".join(test_chunks)
+    for rel, lineno, name in feature_fns:
+        if not re.search(rf"\b{name}\b", test_text):
+            errors.append(
+                f"{rel}:{lineno}: #[target_feature] fn {name} is never named "
+                f"by any #[cfg(test)] region or integration test — vector "
+                f"kernels require a bit-identity test"
+            )
+    return errors
+
+
 def main() -> int:
     errors = (
         check_write_coverage(REPO)
@@ -296,6 +361,7 @@ def main() -> int:
         + check_error_enums(REPO)
         + check_variant_coverage(REPO)
         + check_metric_docs(REPO)
+        + check_unsafe_audit(REPO)
     )
     for e in errors:
         print(e)
@@ -303,8 +369,8 @@ def main() -> int:
         print(f"\n{len(errors)} invariant violation(s)")
         return 1
     print(
-        "ok: write-coverage, panic-policy, error-enum, "
-        "variant-coverage, and metric-docs invariants hold"
+        "ok: write-coverage, panic-policy, error-enum, variant-coverage, "
+        "metric-docs, and unsafe-audit invariants hold"
     )
     return 0
 
